@@ -1,0 +1,61 @@
+//! Quickstart: solve a LASSO instance with FLEXA and compare σ = 0
+//! (full Jacobi) against σ = 0.5 (selective) — the paper's headline knob.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use flexa::coordinator::{flexa as run_flexa, CommonOptions, FlexaOptions, SelectionRule, TermMetric};
+use flexa::datagen::nesterov_lasso;
+use flexa::metrics::{XAxis, YMetric};
+use flexa::problems::{LassoProblem, Problem};
+use flexa::util::{render_plot, PlotCfg};
+
+fn main() {
+    // a LASSO instance with known optimum: 1000 variables, 900 samples,
+    // 5% nonzeros in the solution (Nesterov's generator, §VI-A)
+    let (m, n, sparsity) = (900, 1000, 0.05);
+    println!("generating LASSO instance {n} vars x {m} rows, {:.0}% nonzeros ...", sparsity * 100.0);
+    let problem = LassoProblem::from_instance(nesterov_lasso(m, n, sparsity, 1.0, 42));
+    let x0 = vec![0.0; problem.n()];
+
+    let mut traces = Vec::new();
+    for sigma in [0.0, 0.5] {
+        let opts = FlexaOptions {
+            common: CommonOptions {
+                max_iters: 5000,
+                max_wall_s: 30.0,
+                tol: 1e-6,
+                term: TermMetric::RelErr,
+                cores: 8, // simulated cluster width for the time axis
+                name: format!("FLEXA sigma={sigma}"),
+                ..Default::default()
+            },
+            selection: SelectionRule::sigma(sigma),
+            inexact: None,
+        };
+        let report = run_flexa(&problem, &x0, &opts);
+        println!(
+            "sigma={sigma}: {:?} in {} iters (re = {:.2e}, {:.2} GFLOP, sim {:.3}s on 8 cores)",
+            report.stop,
+            report.iters,
+            report.final_rel_err,
+            report.flops / 1e9,
+            report.sim_s,
+        );
+        traces.push(report.trace);
+    }
+
+    let series: Vec<_> = traces
+        .iter()
+        .map(|t| t.series(XAxis::Iterations, YMetric::RelErr))
+        .collect();
+    let cfg = PlotCfg {
+        title: "LASSO: relative error vs iterations".into(),
+        x_label: "iteration".into(),
+        y_label: "re(x)".into(),
+        log_y: true,
+        ..Default::default()
+    };
+    println!("\n{}", render_plot(&cfg, &series));
+}

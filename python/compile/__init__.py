@@ -1,0 +1,3 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX step models, lowered
+once to HLO text by ``aot.py``. Never imported at runtime — the rust binary
+loads the generated ``artifacts/*.hlo.txt`` through PJRT."""

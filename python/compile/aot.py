@@ -1,0 +1,94 @@
+"""AOT lowering: L2 JAX models (with their L1 Pallas kernels) → HLO text.
+
+HLO **text** (not ``lowered.compile().serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser on the rust side reassigns ids and round-trips cleanly.
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile's
+``artifacts`` target). Emits one ``<name>.hlo.txt`` per (model, shape) and
+a ``manifest.json`` the rust runtime uses to locate and validate them.
+Python never runs after this step.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (model, [(m, n), ...]) — "t" shapes serve the integration tests, the
+# larger ones the e2e example and the runtime microbench.
+SHAPES = {
+    "lasso_step": [(64, 128), (512, 1024)],
+    "lasso_step_fused": [(64, 128), (512, 1024)],
+    "lasso_objective": [(64, 128), (512, 1024)],
+    "logistic_step": [(64, 128), (256, 512)],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fn_name: str, m: int, n: int, out_dir: str) -> dict:
+    fn = model.MODELS[fn_name]
+    specs = model.make_specs(fn_name, m, n)
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    name = f"{fn_name}_m{m}_n{n}"
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    n_outputs = {
+        "lasso_step": 3,
+        "lasso_step_fused": 3,
+        "logistic_step": 3,
+        "lasso_objective": 1,
+    }[fn_name]
+    return {
+        "name": name,
+        "fn": fn_name,
+        "m": m,
+        "n": n,
+        "file": fname,
+        "inputs": [list(s.shape) for s in specs],
+        "n_outputs": n_outputs,
+        "dtype": "f32",
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--only", default=None, help="lower a single model (name substring)"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for fn_name, shapes in SHAPES.items():
+        if args.only and args.only not in fn_name:
+            continue
+        for m, n in shapes:
+            entry = lower_one(fn_name, m, n, args.out)
+            entries.append(entry)
+            print(f"lowered {entry['name']} -> {entry['file']}")
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} artifacts to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

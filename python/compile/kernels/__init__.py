@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel is authored with ``interpret=True`` so the lowering is plain
+HLO that the CPU PJRT plugin can execute (real TPU lowering would emit a
+Mosaic custom-call the CPU client cannot run — see DESIGN.md
+§Hardware-Adaptation for the TPU tiling story).
+"""
+
+from .matvec import matvec, rmatvec
+from .soft_threshold import lasso_best_response, soft_threshold
+from .logistic import logistic_weights
+
+__all__ = [
+    "matvec",
+    "rmatvec",
+    "soft_threshold",
+    "lasso_best_response",
+    "logistic_weights",
+]

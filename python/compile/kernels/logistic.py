@@ -1,0 +1,58 @@
+"""Logistic weight Pallas kernel.
+
+Given the label-scaled margins ``u = Ỹx``, produces the per-sample weights
+shared by every block's damped-Newton best response (paper §IV Example #3):
+
+```
+w_j = σ(−u_j) = 1/(1 + e^{u_j})     (gradient weights)
+q_j = w_j (1 − w_j)                  (Hessian-diagonal weights)
+```
+
+Numerically stable on both tails (the exp argument is always ≤ 0).
+Elementwise VPU work on TPU; fused elementwise HLO under interpret=True.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _ceil_to(x: int, t: int) -> int:
+    return ((x + t - 1) // t) * t
+
+
+def _weights_kernel(u_ref, w_ref, q_ref):
+    u = u_ref[...]
+    # stable sigma(-u): exp(-|u|) based split
+    e = jnp.exp(-jnp.abs(u))
+    w = jnp.where(u >= 0.0, e / (1.0 + e), 1.0 / (1.0 + e))
+    w_ref[...] = w
+    q_ref[...] = w * (1.0 - w)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def logistic_weights(u: jax.Array, tile: int = TILE):
+    """(w, q) weights from margins ``u`` — both (m,) f32."""
+    m = u.shape[0]
+    bm = min(tile, _ceil_to(m, 8))
+    mp = _ceil_to(m, bm)
+    u_p = jnp.pad(u, (0, mp - m)) if mp != m else u
+    w, q = pl.pallas_call(
+        _weights_kernel,
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), u.dtype),
+            jax.ShapeDtypeStruct((mp,), u.dtype),
+        ],
+        interpret=True,
+    )(u_p)
+    return w[:m], q[:m]

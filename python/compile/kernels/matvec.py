@@ -1,0 +1,91 @@
+"""Tiled matrix-vector Pallas kernels.
+
+``matvec``  : ``A @ x``  — grid over row tiles, each program computes one
+              ``(bm, n) @ (n,)`` product in VMEM.
+``rmatvec`` : ``Aᵀ @ y`` — grid over column tiles.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the BlockSpec expresses the
+HBM→VMEM schedule; on a real TPU the ``(128, n)`` tiles stream through the
+MXU with bf16 inputs / f32 accumulation. Under ``interpret=True`` (this
+build) the same schedule lowers to a plain HLO while-loop, which is what
+the rust CPU runtime executes.
+
+Ragged shapes are handled by padding in the wrapper (zero rows/columns
+contribute zero to the products), so the kernels themselves only ever see
+full tiles — the same strategy a production TPU kernel uses to keep the
+MXU systolic array full.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# default row/column tile; 128 matches the MXU lane width
+TILE = 128
+
+
+def _pad_to(a: jax.Array, size: int, axis: int) -> jax.Array:
+    pad = size - a.shape[axis]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _ceil_to(x: int, t: int) -> int:
+    return ((x + t - 1) // t) * t
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    # one (bm, n) tile of A against the full x, accumulated in f32
+    o_ref[...] = a_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matvec(a: jax.Array, x: jax.Array, tile: int = TILE) -> jax.Array:
+    """``A @ x`` via a row-tiled Pallas kernel. a: (m, n) f32, x: (n,) f32."""
+    m, n = a.shape
+    bm = min(tile, _ceil_to(m, 8))
+    mp = _ceil_to(m, bm)
+    a_p = _pad_to(a, mp, 0)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), a.dtype),
+        interpret=True,
+    )(a_p, x)
+    return out[:m]
+
+
+def _rmatvec_kernel(a_ref, y_ref, o_ref):
+    # one (m, bn) tile of A: contribution yᵀ A[:, tile]
+    o_ref[...] = a_ref[...].T @ y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def rmatvec(a: jax.Array, y: jax.Array, tile: int = TILE) -> jax.Array:
+    """``Aᵀ @ y`` via a column-tiled Pallas kernel. a: (m, n), y: (m,)."""
+    m, n = a.shape
+    bn = min(tile, _ceil_to(n, 8))
+    np_ = _ceil_to(n, bn)
+    a_p = _pad_to(a, np_, 1)
+    out = pl.pallas_call(
+        _rmatvec_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), a.dtype),
+        interpret=True,
+    )(a_p, y)
+    return out[:n]

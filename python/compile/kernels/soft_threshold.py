@@ -1,0 +1,90 @@
+"""Fused LASSO best-response Pallas kernel — the L1 hot spot.
+
+Computes, elementwise over the variable tiles, the closed-form scalar
+best response of subproblem (4) with the exact quadratic approximant
+(paper §IV Example #2):
+
+```
+denom_i = 2·d_i + τ            d_i = ‖A_i‖²
+u_i     = x_i − g_i / denom_i   g_i = 2·A_iᵀ r   (input `corr` = A_iᵀ r)
+ẑ_i    = ST(u_i, c / denom_i)
+E_i     = |ẑ_i − x_i|
+```
+
+Fusing threshold + error bound into one pass halves the memory traffic of
+the selective step — on TPU this is pure VPU work on (8,128) vregs; under
+``interpret=True`` it lowers to fused elementwise HLO.
+
+The scalars τ and c arrive as shape-(1,) arrays mapped to every tile
+(they are *runtime* inputs: τ changes when the controller adapts it).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _ceil_to(x: int, t: int) -> int:
+    return ((x + t - 1) // t) * t
+
+
+def soft_threshold(v: jax.Array, t) -> jax.Array:
+    """Reference-style helper `ST(v, t)` used inside kernels."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def _br_kernel(x_ref, corr_ref, colsq_ref, tau_ref, c_ref, z_ref, e_ref):
+    tau = tau_ref[0]
+    c = c_ref[0]
+    x = x_ref[...]
+    denom = 2.0 * colsq_ref[...] + tau
+    u = x - 2.0 * corr_ref[...] / denom
+    t = c / denom
+    z = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+    z_ref[...] = z
+    e_ref[...] = jnp.abs(z - x)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def lasso_best_response(x, corr, colsq, tau, c, tile: int = TILE):
+    """Fused best response + error bound.
+
+    x, corr, colsq: (n,) f32; tau, c: (1,) f32.
+    Returns (zhat, e): two (n,) f32 arrays.
+    """
+    n = x.shape[0]
+    bn = min(tile, _ceil_to(n, 8))
+    np_ = _ceil_to(n, bn)
+
+    def pad(v):
+        return jnp.pad(v, (0, np_ - n)) if np_ != n else v
+
+    # pad colsq with ones to keep the padded denominators nonzero
+    colsq_p = (
+        jnp.pad(colsq, (0, np_ - n), constant_values=1.0) if np_ != n else colsq
+    )
+    z, e = pl.pallas_call(
+        _br_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), x.dtype),
+            jax.ShapeDtypeStruct((np_,), x.dtype),
+        ],
+        interpret=True,
+    )(pad(x), pad(corr), colsq_p, tau, c)
+    return z[:n], e[:n]

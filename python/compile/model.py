@@ -1,0 +1,99 @@
+"""Layer-2 JAX step models — the per-iteration compute of FLEXA, composed
+from the L1 Pallas kernels so everything lowers into a single fused HLO.
+
+Each ``*_step`` takes the problem data and the current iterate and returns
+the full-Jacobi best responses, the error bounds E_i, and the objective —
+exactly the quantities the rust coordinator needs for selection (S.2) and
+the memory step (S.4). The coordinator keeps the sequential control logic
+(selection, γ, τ controller) on the rust side; XLA executes the dense math.
+
+All models are f32 (the TPU-native width for this workload; rust holds f64
+masters and round-trips through f32 literals — tolerance accounted for in
+the integration tests).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+def lasso_step(a, b, x, tau, c):
+    """One full-Jacobi FLEXA step for LASSO.
+
+    a: (m, n) f32 — data matrix (row-major HLO layout)
+    b: (m,) f32   — observations
+    x: (n,) f32   — current iterate
+    tau: (1,) f32 — proximal weight (runtime input: the τ controller adapts it)
+    c: (1,) f32   — ℓ1 weight
+    returns (zhat (n,), e (n,), obj ()) — best responses, error bounds, V(x)
+    """
+    r = kernels.matvec(a, x) - b
+    corr = kernels.rmatvec(a, r)
+    colsq = jnp.sum(a * a, axis=0)
+    z, e = kernels.lasso_best_response(x, corr, colsq, tau, c)
+    obj = jnp.sum(r * r) + c[0] * jnp.sum(jnp.abs(x))
+    return z, e, obj
+
+
+def lasso_objective(a, b, x, c):
+    """V(x) alone (cheap convergence checks from the rust side)."""
+    r = kernels.matvec(a, x) - b
+    return jnp.sum(r * r) + c[0] * jnp.sum(jnp.abs(x))
+
+
+def logistic_step(y, x, tau, c):
+    """One full-Jacobi FLEXA step for ℓ1 logistic regression.
+
+    y: (m, n) f32 — label-scaled data Ỹ = diag(labels)·Y
+    x: (n,) f32; tau, c: (1,) f32
+    returns (zhat (n,), e (n,), obj ())
+    """
+    u = kernels.matvec(y, x)
+    w, q = kernels.logistic_weights(u)
+    g = -kernels.rmatvec(y, w)
+    h = kernels.rmatvec(y * y, q)
+    denom = h + tau[0]
+    z = kernels.soft_threshold(x - g / denom, c[0] / denom)
+    e = jnp.abs(z - x)
+    obj = jnp.sum(jnp.logaddexp(0.0, -u)) + c[0] * jnp.sum(jnp.abs(x))
+    return z, e, obj
+
+
+def lasso_step_fused(a, b, x, tau, c):
+    """Pure-jnp variant of `lasso_step` (no pallas_call): XLA fuses the
+    whole step into one kernel. On CPU the interpret-mode Pallas grid
+    lowers to an HLO while-loop, which the CPU backend cannot fuse across
+    — this variant measures that cost (EXPERIMENTS.md §Perf). On real TPU
+    the Pallas path is the one that controls VMEM placement."""
+    r = a @ x - b
+    corr = a.T @ r
+    colsq = jnp.sum(a * a, axis=0)
+    denom = 2.0 * colsq + tau[0]
+    u = x - 2.0 * corr / denom
+    t = c[0] / denom
+    z = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+    e = jnp.abs(z - x)
+    obj = jnp.sum(r * r) + c[0] * jnp.sum(jnp.abs(x))
+    return z, e, obj
+
+
+def make_specs(fn_name: str, m: int, n: int):
+    """Example-argument specs used by aot.py to lower each model."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    if fn_name in ("lasso_step", "lasso_step_fused"):
+        return (s((m, n), f32), s((m,), f32), s((n,), f32), s((1,), f32), s((1,), f32))
+    if fn_name == "lasso_objective":
+        return (s((m, n), f32), s((m,), f32), s((n,), f32), s((1,), f32))
+    if fn_name == "logistic_step":
+        return (s((m, n), f32), s((n,), f32), s((1,), f32), s((1,), f32))
+    raise KeyError(fn_name)
+
+
+MODELS = {
+    "lasso_step": lasso_step,
+    "lasso_step_fused": lasso_step_fused,
+    "lasso_objective": lasso_objective,
+    "logistic_step": logistic_step,
+}

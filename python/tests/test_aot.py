@@ -1,0 +1,55 @@
+"""AOT path: lowering emits parseable HLO text + a consistent manifest, and
+the HLO entry computation has the layouts/arity the rust runtime expects."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered_dir():
+    with tempfile.TemporaryDirectory() as d:
+        entry = aot.lower_one("lasso_step", 16, 24, d)
+        yield d, entry
+
+
+def test_hlo_text_structure(lowered_dir):
+    d, entry = lowered_dir
+    text = open(os.path.join(d, entry["file"])).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # 5 parameters: a, b, x, tau, c
+    assert "parameter(4)" in text
+    assert "f32[16,24]" in text
+    # tuple return (return_tuple=True)
+    assert "(f32[24]" in text
+
+
+def test_manifest_roundtrip(tmp_path):
+    entry = aot.lower_one("lasso_objective", 8, 12, str(tmp_path))
+    manifest = {"version": 1, "artifacts": [entry]}
+    p = tmp_path / "manifest.json"
+    p.write_text(json.dumps(manifest))
+    back = json.loads(p.read_text())
+    art = back["artifacts"][0]
+    assert art["fn"] == "lasso_objective"
+    assert art["m"] == 8 and art["n"] == 12
+    assert art["inputs"][0] == [8, 12]
+    assert art["n_outputs"] == 1
+
+
+def test_all_registered_models_lower(tmp_path):
+    # every (model, smallest shape) must lower without error
+    for fn_name, shapes in aot.SHAPES.items():
+        m, n = shapes[0]
+        entry = aot.lower_one(fn_name, min(m, 8), min(n, 8), str(tmp_path))
+        assert os.path.exists(tmp_path / entry["file"])
+
+
+def test_make_specs_rejects_unknown():
+    with pytest.raises(KeyError):
+        model.make_specs("nope", 4, 4)

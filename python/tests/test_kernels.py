@@ -1,0 +1,149 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including ragged, non-tile-multiple sizes),
+magnitudes, and edge cases; assert_allclose at f32 tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- matvec
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(m, n, seed):
+    a = rand((m, n), seed)
+    x = rand((n,), seed + 1)
+    np.testing.assert_allclose(kernels.matvec(a, x), ref.matvec(a, x), **TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmatvec_matches_ref(m, n, seed):
+    a = rand((m, n), seed)
+    y = rand((m,), seed + 2)
+    np.testing.assert_allclose(kernels.rmatvec(a, y), ref.rmatvec(a, y), **TOL)
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (8, 8), (128, 128), (129, 127), (7, 500)])
+def test_matvec_tile_edges(m, n):
+    a = rand((m, n), 11)
+    x = rand((n,), 12)
+    np.testing.assert_allclose(kernels.matvec(a, x), ref.matvec(a, x), **TOL)
+    y = rand((m,), 13)
+    np.testing.assert_allclose(kernels.rmatvec(a, y), ref.rmatvec(a, y), **TOL)
+
+
+def test_matvec_zero_matrix():
+    a = jnp.zeros((17, 33), jnp.float32)
+    x = rand((33,), 5)
+    np.testing.assert_allclose(kernels.matvec(a, x), jnp.zeros(17), **TOL)
+
+
+# ------------------------------------------------------- soft threshold
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 1000),
+    tau=st.floats(1e-3, 1e3),
+    c=st.floats(1e-3, 1e2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lasso_best_response_matches_ref(n, tau, c, seed):
+    x = rand((n,), seed)
+    corr = rand((n,), seed + 1, scale=3.0)
+    colsq = jnp.abs(rand((n,), seed + 2)) + 0.1
+    tau_a = jnp.asarray([tau], jnp.float32)
+    c_a = jnp.asarray([c], jnp.float32)
+    z, e = kernels.lasso_best_response(x, corr, colsq, tau_a, c_a)
+    z_r, e_r = ref.lasso_best_response(x, corr, colsq, tau_a[0], c_a[0])
+    np.testing.assert_allclose(z, z_r, **TOL)
+    np.testing.assert_allclose(e, e_r, **TOL)
+
+
+def test_best_response_threshold_zeroing():
+    # |u| below the threshold must map exactly to 0
+    n = 64
+    x = jnp.zeros((n,), jnp.float32)
+    corr = jnp.full((n,), 1e-4, jnp.float32)
+    colsq = jnp.ones((n,), jnp.float32)
+    z, e = kernels.lasso_best_response(
+        x, corr, colsq, jnp.asarray([1.0], jnp.float32), jnp.asarray([10.0], jnp.float32)
+    )
+    assert np.all(np.asarray(z) == 0.0)
+    assert np.all(np.asarray(e) == 0.0)
+
+
+def test_best_response_prox_optimality():
+    # z minimizes g·(z−x) + (denom/2)(z−x)² + c|z| per coordinate
+    n = 50
+    x = rand((n,), 3)
+    corr = rand((n,), 4, scale=2.0)
+    colsq = jnp.abs(rand((n,), 5)) + 0.2
+    tau, c = 0.7, 0.9
+    z, _ = kernels.lasso_best_response(
+        x, corr, colsq, jnp.asarray([tau], jnp.float32), jnp.asarray([c], jnp.float32)
+    )
+    denom = 2.0 * colsq + tau
+    g = 2.0 * corr
+
+    def q(u):
+        return g * (u - x) + 0.5 * denom * (u - x) ** 2 + c * jnp.abs(u)
+
+    qz = q(z)
+    for du in (-0.05, 0.05, -0.4, 0.4):
+        assert np.all(np.asarray(q(z + du) - qz) >= -1e-4)
+
+
+# ------------------------------------------------------------- logistic
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 1000), seed=st.integers(0, 2**31 - 1))
+def test_logistic_weights_match_ref(m, seed):
+    u = rand((m,), seed, scale=5.0)
+    w, q = kernels.logistic_weights(u)
+    w_r, q_r = ref.logistic_weights(u)
+    np.testing.assert_allclose(w, w_r, **TOL)
+    np.testing.assert_allclose(q, q_r, **TOL)
+
+
+def test_logistic_weights_extreme_margins():
+    u = jnp.asarray([-80.0, -30.0, 0.0, 30.0, 80.0], jnp.float32)
+    w, q = kernels.logistic_weights(u)
+    w = np.asarray(w)
+    q = np.asarray(q)
+    assert np.all(np.isfinite(w)) and np.all(np.isfinite(q))
+    assert abs(w[2] - 0.5) < 1e-6
+    assert w[0] > 1.0 - 1e-6 and w[4] < 1e-6
+    assert np.all(q >= 0.0) and np.all(q <= 0.25 + 1e-6)
+
+
+def test_logistic_weights_monotone_decreasing():
+    u = jnp.linspace(-10, 10, 101, dtype=jnp.float32)
+    w, _ = kernels.logistic_weights(u)
+    w = np.asarray(w)
+    assert np.all(np.diff(w) <= 1e-7)

@@ -1,0 +1,98 @@
+"""L2 model correctness: the jitted step functions vs numpy oracles, plus a
+numpy reference implementation of a full FLEXA iteration to pin down the
+semantics the rust coordinator relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+def data(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, n)) / np.sqrt(m), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(n) * 0.3, jnp.float32)
+    return a, b, x
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(4, 150), n=st.integers(4, 150), seed=st.integers(0, 10**6))
+def test_lasso_step_matches_oracle(m, n, seed):
+    a, b, x = data(m, n, seed)
+    tau = jnp.asarray([1.3], jnp.float32)
+    c = jnp.asarray([0.1], jnp.float32)
+    z, e, obj = model.lasso_step(a, b, x, tau, c)
+    z_r, e_r, obj_r = ref.lasso_step(a, b, x, tau, c)
+    np.testing.assert_allclose(z, z_r, **TOL)
+    np.testing.assert_allclose(e, e_r, **TOL)
+    np.testing.assert_allclose(obj, obj_r, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(4, 120), n=st.integers(4, 120), seed=st.integers(0, 10**6))
+def test_logistic_step_matches_oracle(m, n, seed):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.standard_normal((m, n)) / np.sqrt(n), jnp.float32)
+    labels = jnp.asarray(np.sign(rng.standard_normal(m)) + (rng.standard_normal(m) == 0), jnp.float32)
+    y_t = y * labels[:, None]
+    x = jnp.asarray(rng.standard_normal(n) * 0.2, jnp.float32)
+    tau = jnp.asarray([0.8], jnp.float32)
+    c = jnp.asarray([0.25], jnp.float32)
+    z, e, obj = model.logistic_step(y_t, x, tau, c)
+    z_r, e_r, obj_r = ref.logistic_step(y_t, x, tau, c)
+    np.testing.assert_allclose(z, z_r, **TOL)
+    np.testing.assert_allclose(e, e_r, **TOL)
+    np.testing.assert_allclose(obj, obj_r, rtol=1e-4)
+
+
+def test_lasso_objective_matches_step():
+    a, b, x = data(40, 60, 7)
+    c = jnp.asarray([0.5], jnp.float32)
+    tau = jnp.asarray([1.0], jnp.float32)
+    _, _, obj_step = model.lasso_step(a, b, x, tau, c)
+    obj = model.lasso_objective(a, b, x, c)
+    np.testing.assert_allclose(obj, obj_step, rtol=1e-6)
+
+
+def test_flexa_iteration_decreases_objective():
+    """Simulate the rust coordinator's loop on the L2 step: select the top
+    σ-fraction by E, take the memory step, objective must decrease."""
+    a, b, x = data(60, 90, 21)
+    tau = jnp.asarray([float(jnp.sum(a * a) / (2 * 90))], jnp.float32)
+    c = jnp.asarray([0.2], jnp.float32)
+    gamma = 0.9
+    x = jnp.zeros(90, jnp.float32)
+    objs = [float(model.lasso_objective(a, b, x, c))]
+    for _ in range(30):
+        z, e, _ = model.lasso_step(a, b, x, tau, c)
+        thr = 0.5 * float(jnp.max(e))
+        mask = (e >= thr).astype(jnp.float32)
+        x = x + gamma * mask * (z - x)
+        objs.append(float(model.lasso_objective(a, b, x, c)))
+    assert objs[-1] < objs[0] * 0.9
+    # monotone within float tolerance
+    for a0, a1 in zip(objs, objs[1:]):
+        assert a1 <= a0 + 1e-3 * abs(a0)
+
+
+def test_step_at_fixed_point_returns_zero_errors():
+    # if x is already the best response everywhere, E must be ~0: construct
+    # by iterating full Jacobi steps to near-convergence on a tiny instance
+    a, b, x = data(30, 20, 3)  # overdetermined => strongly convex F
+    tau = jnp.asarray([1.0], jnp.float32)
+    c = jnp.asarray([0.05], jnp.float32)
+    x = jnp.zeros(20, jnp.float32)
+    for _ in range(600):
+        z, e, _ = model.lasso_step(a, b, x, tau, c)
+        x = x + 0.9 * (z - x)
+    _, e, _ = model.lasso_step(a, b, x, tau, c)
+    assert float(jnp.max(e)) < 1e-5

@@ -1,0 +1,14 @@
+//! Bench: ablations beyond the paper's figures — σ sweep, step-size rules
+//! ((6)/(12)/constant/Armijo), τ controller on/off, inexact subproblem
+//! solves (the design choices DESIGN.md §5 calls out).
+
+fn main() {
+    let cfg = flexa::bench::BenchConfig::from_env();
+    eprintln!(
+        "[ablations] scale={} budget={}s/solver out={}",
+        cfg.scale, cfg.budget_s, cfg.out_dir
+    );
+    for out in flexa::bench::ablations(&cfg) {
+        println!("=== {} ===\n{}", out.id, out.text);
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate **Fig. 1** — LASSO 10000×9000 (scaled by
+//! FLEXA_BENCH_SCALE), solution sparsity {1, 10, 20, 30, 40}%, relative
+//! error vs simulated 40-core time for FLEXA σ∈{0, 0.5}, FISTA, SpaRSA,
+//! GRock, greedy-1BCD, ADMM; panel (a2) plots vs iterations.
+
+fn main() {
+    let cfg = flexa::bench::BenchConfig::from_env();
+    eprintln!(
+        "[fig1] scale={} budget={}s/solver out={}",
+        cfg.scale, cfg.budget_s, cfg.out_dir
+    );
+    for out in flexa::bench::fig1(&cfg) {
+        println!("=== {} ===\n{}", out.id, out.text);
+    }
+}

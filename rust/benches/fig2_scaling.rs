@@ -1,0 +1,13 @@
+//! Bench: regenerate **Fig. 2** — LASSO 10⁵×5000 (scaled), 1% nonzeros,
+//! 8 vs 20 simulated cores (the parallel-scaling panel; Remark 5).
+
+fn main() {
+    let cfg = flexa::bench::BenchConfig::from_env();
+    eprintln!(
+        "[fig2] scale={} budget={}s/solver out={}",
+        cfg.scale, cfg.budget_s, cfg.out_dir
+    );
+    for out in flexa::bench::fig2(&cfg) {
+        println!("=== {} ===\n{}", out.id, out.text);
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate **Fig. 3** — ℓ1 logistic regression on the three
+//! Table-I-shaped datasets (synthetic analogs, DESIGN.md §4): relative
+//! error vs time for GJ-FLEXA, FLEXA, FISTA, SpaRSA, GRock, CDM, plus the
+//! FLOPS tables.
+
+fn main() {
+    let cfg = flexa::bench::BenchConfig::from_env();
+    eprintln!(
+        "[fig3] scale={} budget={}s/solver out={}",
+        cfg.scale, cfg.budget_s, cfg.out_dir
+    );
+    for out in flexa::bench::fig3(&cfg) {
+        println!("=== {} ===\n{}", out.id, out.text);
+    }
+}

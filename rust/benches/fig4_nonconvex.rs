@@ -1,0 +1,14 @@
+//! Bench: regenerate **Fig. 4** — nonconvex problem (13), 1% sparsity,
+//! b=1, c=100, c̄=1000: relative error + merit vs simulated time for
+//! FLEXA, FISTA, SpaRSA.
+
+fn main() {
+    let cfg = flexa::bench::BenchConfig::from_env();
+    eprintln!(
+        "[fig4] scale={} budget={}s/solver out={}",
+        cfg.scale, cfg.budget_s, cfg.out_dir
+    );
+    for out in flexa::bench::fig4(&cfg) {
+        println!("=== {} ===\n{}", out.id, out.text);
+    }
+}

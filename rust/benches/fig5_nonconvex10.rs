@@ -1,0 +1,13 @@
+//! Bench: regenerate **Fig. 5** — nonconvex problem (13), 10% sparsity,
+//! b=0.1, c=100, c̄=2800: relative error + merit vs simulated time.
+
+fn main() {
+    let cfg = flexa::bench::BenchConfig::from_env();
+    eprintln!(
+        "[fig5] scale={} budget={}s/solver out={}",
+        cfg.scale, cfg.budget_s, cfg.out_dir
+    );
+    for out in flexa::bench::fig5(&cfg) {
+        println!("=== {} ===\n{}", out.id, out.text);
+    }
+}

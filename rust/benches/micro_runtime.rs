@@ -1,0 +1,72 @@
+//! Micro-benchmarks for the PJRT runtime path: artifact compile time and
+//! per-step execute latency of the XLA engine vs the native engine at both
+//! manifest shapes. The XLA-vs-native gap quantifies the PJRT
+//! upload/execute overhead on CPU (§Perf in EXPERIMENTS.md).
+
+use flexa::bench::bench;
+use flexa::datagen::nesterov_lasso;
+use flexa::problems::LassoProblem;
+use flexa::runtime::{BoundXlaEngine, Manifest, NativeEngine, RuntimeClient, StepEngine};
+use flexa::util::Timer;
+
+fn main() {
+    let Ok(manifest) = Manifest::load(Manifest::default_dir()) else {
+        eprintln!("[micro_runtime] artifacts missing — run `make artifacts`; skipping");
+        return;
+    };
+    let budget = 1.0;
+    println!("\n== micro_runtime ==");
+
+    for (m, n) in [(64usize, 128usize), (512, 1024)] {
+        if manifest.find("lasso_step", m, n).is_none() {
+            continue;
+        }
+        let inst = nesterov_lasso(m, n, 0.05, 1.0, 9);
+        let problem = LassoProblem::from_instance(inst);
+
+        // compile latency (cold)
+        let t = Timer::start();
+        let client = RuntimeClient::new(Manifest::load(Manifest::default_dir()).unwrap()).unwrap();
+        let mut xla = BoundXlaEngine::new(client, &problem).unwrap();
+        println!("lasso_step {m}x{n}: compile+bind {:.1} ms", t.elapsed_ms());
+
+        let x = vec![0.05; n];
+        let mut z = vec![0.0; n];
+        let mut e = vec![0.0; n];
+        let r = bench(&format!("xla step (pallas) {m}x{n}"), budget, || {
+            xla.step(&x, 1.0, &mut z, &mut e).unwrap();
+            std::hint::black_box(&z);
+        });
+        println!("{}", r.report());
+
+        // fused pure-jnp variant (no interpret-mode pallas while-loops):
+        // quantifies the CPU cost of the Pallas grid emulation (§Perf)
+        if manifest.find("lasso_step_fused", m, n).is_some() {
+            let client2 =
+                RuntimeClient::new(Manifest::load(Manifest::default_dir()).unwrap()).unwrap();
+            let mut fused = flexa::runtime::XlaEngine::for_lasso_named(
+                client2,
+                &problem,
+                "lasso_step_fused",
+            )
+            .unwrap();
+            let rf = bench(&format!("xla step (fused)  {m}x{n}"), budget, || {
+                fused.step_with_c(&x, 1.0, problem.c(), &mut z, &mut e).unwrap();
+                std::hint::black_box(&z);
+            });
+            println!("{}", rf.report());
+            println!("  pallas-interpret/fused ratio: {:.2}x", r.min_s / rf.min_s.max(1e-12));
+        }
+
+        let mut native = NativeEngine::new(&problem);
+        let rn = bench(&format!("native step {m}x{n}"), budget, || {
+            native.step(&x, 1.0, &mut z, &mut e).unwrap();
+            std::hint::black_box(&z);
+        });
+        println!("{}", rn.report());
+        println!(
+            "  xla/native latency ratio: {:.2}x",
+            r.min_s / rn.min_s.max(1e-12)
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate **Table I** — the logistic datasets (paper spec vs
+//! the generated scaled instances used by the Fig. 3 bench).
+
+fn main() {
+    let cfg = flexa::bench::BenchConfig::from_env();
+    let out = flexa::bench::table1(&cfg);
+    println!("{}", out.text);
+}

@@ -1,0 +1,94 @@
+//! Micro-benchmark harness (criterion is not available in the offline crate
+//! set, so this provides the minimal honest equivalent: warmup, repeated
+//! timed batches, min/mean/p50 statistics).
+
+use crate::util::{human_time, Timer};
+
+/// Result of one micro-benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10}/iter (min {:>10}, p50 {:>10}, {} iters)",
+            self.name,
+            human_time(self.mean_s),
+            human_time(self.min_s),
+            human_time(self.p50_s),
+            self.iters
+        )
+    }
+
+    /// Throughput given a per-iteration flop count.
+    pub fn gflops(&self, flops_per_iter: f64) -> f64 {
+        flops_per_iter / self.min_s / 1e9
+    }
+}
+
+/// Time `f` adaptively: ~`budget_s` of total measurement after warmup.
+pub fn bench(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration
+    let t = Timer::start();
+    let mut calib = 0usize;
+    while t.elapsed_s() < budget_s * 0.2 {
+        f();
+        calib += 1;
+        if calib > 1_000_000 {
+            break;
+        }
+    }
+    let per_call = (t.elapsed_s() / calib as f64).max(1e-9);
+    let batch = ((budget_s * 0.08 / per_call).ceil() as usize).clamp(1, 1_000_000);
+
+    let mut samples: Vec<f64> = Vec::new();
+    let total = Timer::start();
+    while total.elapsed_s() < budget_s * 0.8 && samples.len() < 200 {
+        let bt = Timer::start();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(bt.elapsed_s() / batch as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min_s = samples[0];
+    let p50_s = samples[samples.len() / 2];
+    let mean_s = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: calib + batch * samples.len(),
+        mean_s,
+        min_s,
+        p50_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", 0.05, || {
+            acc = acc.wrapping_add(1);
+            std::hint::black_box(acc);
+        });
+        assert!(r.min_s > 0.0);
+        assert!(r.mean_s >= r.min_s);
+        assert!(r.iters > 100);
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn gflops_computation() {
+        let r = BenchResult { name: "x".into(), iters: 1, mean_s: 1e-3, min_s: 1e-3, p50_s: 1e-3 };
+        assert!((r.gflops(2e6) - 2.0).abs() < 1e-9);
+    }
+}

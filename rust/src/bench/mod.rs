@@ -1,0 +1,9 @@
+//! Benchmark layer: the figure/table regeneration harness (one entry per
+//! experiment of the paper's §VI) and a micro-benchmark harness for the
+//! kernel/runtime hot paths.
+
+pub mod figures;
+pub mod harness;
+
+pub use figures::{ablations, build_problem, fig1, fig2, fig3, fig4, fig5, table1, BenchConfig, FigureOutput};
+pub use harness::{bench, BenchResult};

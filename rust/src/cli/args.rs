@@ -1,0 +1,108 @@
+//! Minimal argv parser: positionals, `--flag`, and `--key value` /
+//! `--key=value` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.iter().skip(1).peekable(); // skip program name
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positionals.push(arg.clone());
+            }
+        }
+        out
+    }
+
+    /// First positional = subcommand.
+    pub fn command(&self) -> Option<&str> {
+        self.positionals.first().map(|s| s.as_str())
+    }
+
+    /// n-th positional (0 = subcommand).
+    pub fn positional(&self, n: usize) -> Option<&str> {
+        self.positionals.get(n).map(|s| s.as_str())
+    }
+
+    pub fn value(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn value_f64(&self, key: &str) -> Option<f64> {
+        self.value(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn value_usize(&self, key: &str) -> Option<usize> {
+        self.value(key).and_then(|v| v.parse().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(line: &str) -> Args {
+        let argv: Vec<String> = std::iter::once("prog".to_string())
+            .chain(line.split_whitespace().map(String::from))
+            .collect();
+        Args::parse(&argv)
+    }
+
+    #[test]
+    fn positionals_and_command() {
+        let a = parse("bench fig1");
+        assert_eq!(a.command(), Some("bench"));
+        assert_eq!(a.positional(1), Some("fig1"));
+        assert_eq!(a.positional(2), None);
+    }
+
+    #[test]
+    fn options_space_and_equals() {
+        let a = parse("solve --config x.toml --scale=0.5");
+        assert_eq!(a.value("config"), Some("x.toml"));
+        assert_eq!(a.value_f64("scale"), Some(0.5));
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("solve --quiet --config cfg.toml --verbose");
+        assert!(a.flag("quiet"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.value("config"), Some("cfg.toml"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_nothing() {
+        let a = parse("info --verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.command(), Some("info"));
+    }
+
+    #[test]
+    fn usize_parsing() {
+        let a = parse("x --cores 8");
+        assert_eq!(a.value_usize("cores"), Some(8));
+    }
+}

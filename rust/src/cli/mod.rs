@@ -1,0 +1,272 @@
+//! Command-line interface (hand-rolled; clap is not in the offline crate
+//! set). Subcommands:
+//!
+//! * `flexa solve --config <file.toml>` — run an experiment config;
+//! * `flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|all>` —
+//!   regenerate the paper's figures/tables into `results/`;
+//! * `flexa runtime-check` — load + execute every artifact and compare
+//!   against the native engine (the L1↔L3 smoke test);
+//! * `flexa info` — platform, artifact, and cost-model report.
+
+pub mod args;
+
+use crate::bench::{self, BenchConfig};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{
+    flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionRule,
+    TermMetric,
+};
+use crate::metrics::{Trace, XAxis, YMetric};
+use crate::solvers;
+use crate::util::{CsvWriter, PlotCfg};
+use anyhow::{anyhow, bail, Context, Result};
+use args::Args;
+
+/// Entry point for the `flexa` binary.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv);
+    if args.flag("quiet") {
+        crate::util::set_log_level(crate::util::LogLevel::Quiet);
+    } else if args.flag("verbose") {
+        crate::util::set_log_level(crate::util::LogLevel::Debug);
+    }
+
+    match args.command() {
+        Some("solve") => cmd_solve(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("runtime-check") => cmd_runtime_check(),
+        Some("info") => cmd_info(),
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            Ok(2)
+        }
+        None => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+    }
+}
+
+const USAGE: &str = "\
+flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
+       (Facchinei, Scutari, Sagratella; IEEE TSP 2015)
+
+USAGE:
+  flexa solve --config <file.toml> [--quiet|--verbose]
+  flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|all>
+  flexa runtime-check
+  flexa info
+
+ENV:
+  FLEXA_BENCH_SCALE   instance scale vs the paper (default 0.2)
+  FLEXA_BENCH_BUDGET  seconds per solver run (default 15)
+  FLEXA_ARTIFACTS     artifact directory (default ./artifacts)";
+
+fn cmd_solve(args: &Args) -> Result<i32> {
+    let path = args
+        .value("config")
+        .ok_or_else(|| anyhow!("solve requires --config <file.toml>"))?;
+    let cfg = ExperimentConfig::from_file(path).map_err(|e| anyhow!(e))?;
+    let problem = bench::build_problem(&cfg.problem);
+    let x0 = vec![0.0; problem.n()];
+    let model = crate::simulator::CostModel::calibrated();
+
+    let mut traces: Vec<Trace> = Vec::new();
+    for spec in &cfg.solvers {
+        let term = if problem.v_star().is_some() { TermMetric::RelErr } else { TermMetric::Merit };
+        let common = CommonOptions {
+            max_iters: cfg.max_iters,
+            max_wall_s: cfg.max_wall_s,
+            tol: cfg.tol,
+            term,
+            cores: spec.cores,
+            threads: spec.threads,
+            trace_every: cfg.trace_every,
+            cost_model: model,
+            name: spec.name.clone(),
+            ..Default::default()
+        };
+        crate::log_info!("running {} ...", spec.name);
+        let report = match spec.name.as_str() {
+            "flexa" => flexa(
+                problem.as_ref(),
+                &x0,
+                &FlexaOptions {
+                    common,
+                    selection: SelectionRule::sigma(spec.sigma),
+                    inexact: None,
+                },
+            ),
+            "gj-flexa" => gauss_jacobi(
+                problem.as_ref(),
+                &x0,
+                &GaussJacobiOptions {
+                    common,
+                    selection: Some(SelectionRule::sigma(spec.sigma)),
+                    processors: spec.cores,
+                },
+            ),
+            "gauss-jacobi" => gauss_jacobi(
+                problem.as_ref(),
+                &x0,
+                &GaussJacobiOptions { common, selection: None, processors: spec.cores },
+            ),
+            "fista" => solvers::fista(problem.as_ref(), &x0, &common),
+            "sparsa" => {
+                solvers::sparsa(problem.as_ref(), &x0, &common, &Default::default())
+            }
+            "grock" => solvers::grock(problem.as_ref(), &x0, &common, spec.cores),
+            "greedy-1bcd" => solvers::greedy_1bcd(problem.as_ref(), &x0, &common),
+            "cdm" => solvers::cdm(problem.as_ref(), &x0, &common, true),
+            other => bail!("unknown solver {other:?} in config"),
+        };
+        println!(
+            "{:<14} stop={:?} iters={} V={:.6e} re={:.2e} merit={:.2e} wall={:.2}s sim={:.3}s GF={:.2}",
+            spec.name,
+            report.stop,
+            report.iters,
+            report.final_obj,
+            report.final_rel_err,
+            report.final_merit,
+            report.wall_s,
+            report.sim_s,
+            report.flops / 1e9
+        );
+        traces.push(report.trace);
+    }
+
+    // write combined CSV + plot
+    std::fs::create_dir_all(&cfg.out_dir).context("creating out dir")?;
+    let mut csv = CsvWriter::new(&Trace::csv_header());
+    for t in &traces {
+        t.append_csv(&mut csv);
+    }
+    let csv_path = format!("{}/{}.csv", cfg.out_dir, cfg.name);
+    csv.write_file(&csv_path)?;
+    let metric = if problem.v_star().is_some() { YMetric::RelErr } else { YMetric::Merit };
+    let series: Vec<_> = traces.iter().map(|t| t.series(XAxis::SimTime, metric)).collect();
+    let plot = crate::util::render_plot(
+        &PlotCfg { title: cfg.name.clone(), x_label: "sim time [s]".into(), ..Default::default() },
+        &series,
+    );
+    println!("{plot}");
+    println!("wrote {csv_path}");
+    Ok(0)
+}
+
+fn cmd_bench(args: &Args) -> Result<i32> {
+    let which = args.positional(1).unwrap_or("all");
+    let cfg = BenchConfig::from_env();
+    crate::log_info!(
+        "bench config: scale={} budget={}s cores-model={:.2} Gflop/s out={}",
+        cfg.scale,
+        cfg.budget_s,
+        cfg.model.core_gflops,
+        cfg.out_dir
+    );
+    let run = |outs: Vec<bench::FigureOutput>| {
+        for o in outs {
+            println!("=== {} ===\n{}", o.id, o.text);
+        }
+    };
+    match which {
+        "fig1" => run(bench::fig1(&cfg)),
+        "fig2" => run(bench::fig2(&cfg)),
+        "fig3" => run(bench::fig3(&cfg)),
+        "fig4" => run(bench::fig4(&cfg)),
+        "fig5" => run(bench::fig5(&cfg)),
+        "table1" => run(vec![bench::table1(&cfg)]),
+        "ablations" => run(bench::ablations(&cfg)),
+        "all" => {
+            run(vec![bench::table1(&cfg)]);
+            run(bench::fig1(&cfg));
+            run(bench::fig2(&cfg));
+            run(bench::fig3(&cfg));
+            run(bench::fig4(&cfg));
+            run(bench::fig5(&cfg));
+            run(bench::ablations(&cfg));
+        }
+        other => bail!("unknown bench target {other:?}"),
+    }
+    Ok(0)
+}
+
+fn cmd_runtime_check() -> Result<i32> {
+    use crate::problems::Problem;
+    let client = crate::runtime::RuntimeClient::from_default_dir()?;
+    println!("platform: {}", client.platform());
+    let metas: Vec<_> = client.manifest().artifacts.clone();
+    println!("{} artifacts in manifest", metas.len());
+
+    // execute the small lasso_step and compare against the native engine
+    let meta = client
+        .manifest()
+        .find("lasso_step", 64, 128)
+        .cloned()
+        .ok_or_else(|| anyhow!("lasso_step m=64 n=128 missing — run `make artifacts`"))?;
+    let inst = crate::datagen::nesterov_lasso(meta.m, meta.n, 0.1, 1.0, 99);
+    let problem = crate::problems::LassoProblem::from_instance(inst);
+    let mut xla_engine = crate::runtime::BoundXlaEngine::new(client, &problem)?;
+    let mut native = crate::runtime::NativeEngine::new(&problem);
+
+    let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(5);
+    let x: Vec<f64> = (0..problem.n()).map(|_| rng.next_normal() * 0.3).collect();
+    let (mut z1, mut e1) = (vec![0.0; problem.n()], vec![0.0; problem.n()]);
+    let (mut z2, mut e2) = (vec![0.0; problem.n()], vec![0.0; problem.n()]);
+    use crate::runtime::StepEngine;
+    let v1 = xla_engine.step(&x, 1.0, &mut z1, &mut e1)?;
+    let v2 = native.step(&x, 1.0, &mut z2, &mut e2)?;
+    let max_dz = z1
+        .iter()
+        .zip(&z2)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("lasso_step 64x128: |V_xla − V_native| = {:.2e}, max|Δz| = {max_dz:.2e}", (v1 - v2).abs());
+    if max_dz > 1e-3 || (v1 - v2).abs() / v2.abs().max(1.0) > 1e-3 {
+        bail!("XLA and native engines disagree beyond f32 tolerance");
+    }
+    println!("runtime-check OK");
+    Ok(0)
+}
+
+fn cmd_info() -> Result<i32> {
+    println!("flexa {} — three-layer FLEXA reproduction", env!("CARGO_PKG_VERSION"));
+    let model = crate::simulator::CostModel::calibrated();
+    println!(
+        "cost model: {:.2} Gflop/s per core, α={:.1e}s, β={:.1e}s/B, barrier={:.1e}s",
+        model.core_gflops, model.alpha_s, model.beta_s_per_byte, model.barrier_s
+    );
+    match crate::runtime::Manifest::load(crate::runtime::Manifest::default_dir()) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!("  {} ({}x{}, {} outputs)", a.name, a.m, a.n, a.n_outputs);
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_on_no_command() {
+        let code = run(&["flexa".to_string()]).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn unknown_command_is_error_code() {
+        let code = run(&["flexa".into(), "frobnicate".into()]).unwrap();
+        assert_eq!(code, 2);
+    }
+
+    #[test]
+    fn solve_requires_config() {
+        let err = cmd_solve(&Args::parse(&["flexa".into(), "solve".into()]));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Experiment configuration: typed specs parsed from `configs/*.toml`.
+//!
+//! The spec structs are plain data; the CLI and bench layers translate them
+//! into concrete problems (`datagen`) and solver options (`coordinator`,
+//! `solvers`). Keeping config free of solver types avoids cycles and makes
+//! the config surface a stable, documented contract.
+
+pub mod toml;
+
+use std::path::Path;
+
+pub use toml::{TomlDoc, TomlValue};
+
+/// Which problem family to instantiate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemSpec {
+    /// Nesterov-generator LASSO with known optimum (paper §VI-A).
+    Lasso { m: usize, n: usize, sparsity: f64, c: f64, seed: u64 },
+    /// Group LASSO on the same generator, blocks of `block_size`.
+    GroupLasso { m: usize, n: usize, sparsity: f64, c: f64, block_size: usize, seed: u64 },
+    /// Synthetic sparse logistic regression shaped like a named dataset
+    /// (paper §VI-B, Table I), at `scale` ∈ (0,1] of the original size.
+    Logistic { preset: String, scale: f64, seed: u64 },
+    /// Nonconvex quadratic (13) with box constraints (paper §VI-C).
+    NonconvexQp {
+        m: usize,
+        n: usize,
+        sparsity: f64,
+        c: f64,
+        cbar: f64,
+        box_bound: f64,
+        seed: u64,
+    },
+}
+
+/// Which solver to run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolverSpec {
+    /// "flexa" | "gj-flexa" | "fista" | "sparsa" | "grock" | "greedy-1bcd"
+    /// | "admm" | "cdm"
+    pub name: String,
+    /// FLEXA selection fraction σ (0 = full Jacobi).
+    pub sigma: f64,
+    /// simulated processor count P.
+    pub cores: usize,
+    /// physical worker threads (defaults to 1 on this container).
+    pub threads: usize,
+}
+
+impl Default for SolverSpec {
+    fn default() -> Self {
+        Self { name: "flexa".into(), sigma: 0.5, cores: 1, threads: 1 }
+    }
+}
+
+/// A full experiment: problem × solvers × run budget.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub problem: ProblemSpec,
+    pub solvers: Vec<SolverSpec>,
+    pub max_iters: usize,
+    pub max_wall_s: f64,
+    pub tol: f64,
+    pub trace_every: usize,
+    pub out_dir: String,
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text. See `configs/` for examples of the schema.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(text)?;
+        let name = doc.get_str("name").unwrap_or("experiment").to_string();
+        let kind = doc
+            .get_str("problem.kind")
+            .ok_or("missing problem.kind")?
+            .to_string();
+        let seed = doc.get_usize("problem.seed").unwrap_or(1) as u64;
+        let problem = match kind.as_str() {
+            "lasso" => ProblemSpec::Lasso {
+                m: doc.get_usize("problem.m").ok_or("missing problem.m")?,
+                n: doc.get_usize("problem.n").ok_or("missing problem.n")?,
+                sparsity: doc.get_f64("problem.sparsity").unwrap_or(0.01),
+                c: doc.get_f64("problem.c").unwrap_or(1.0),
+                seed,
+            },
+            "group-lasso" => ProblemSpec::GroupLasso {
+                m: doc.get_usize("problem.m").ok_or("missing problem.m")?,
+                n: doc.get_usize("problem.n").ok_or("missing problem.n")?,
+                sparsity: doc.get_f64("problem.sparsity").unwrap_or(0.01),
+                c: doc.get_f64("problem.c").unwrap_or(1.0),
+                block_size: doc.get_usize("problem.block_size").unwrap_or(4),
+                seed,
+            },
+            "logistic" => ProblemSpec::Logistic {
+                preset: doc.get_str("problem.preset").unwrap_or("gisette").to_string(),
+                scale: doc.get_f64("problem.scale").unwrap_or(0.2),
+                seed,
+            },
+            "nonconvex-qp" => ProblemSpec::NonconvexQp {
+                m: doc.get_usize("problem.m").ok_or("missing problem.m")?,
+                n: doc.get_usize("problem.n").ok_or("missing problem.n")?,
+                sparsity: doc.get_f64("problem.sparsity").unwrap_or(0.01),
+                c: doc.get_f64("problem.c").unwrap_or(100.0),
+                cbar: doc.get_f64("problem.cbar").unwrap_or(1000.0),
+                box_bound: doc.get_f64("problem.box").unwrap_or(1.0),
+                seed,
+            },
+            other => return Err(format!("unknown problem.kind {other:?}")),
+        };
+
+        // solvers: comma-separated list of names with shared knobs, or
+        // per-solver sections [solver.<name>].
+        let mut solvers = Vec::new();
+        let names = doc.get_str("solvers").unwrap_or("flexa");
+        for raw in names.split(',') {
+            let name = raw.trim().to_string();
+            if name.is_empty() {
+                continue;
+            }
+            let prefix = format!("solver.{name}");
+            solvers.push(SolverSpec {
+                sigma: doc
+                    .get_f64(&format!("{prefix}.sigma"))
+                    .or_else(|| doc.get_f64("sigma"))
+                    .unwrap_or(0.5),
+                cores: doc
+                    .get_usize(&format!("{prefix}.cores"))
+                    .or_else(|| doc.get_usize("cores"))
+                    .unwrap_or(1),
+                threads: doc
+                    .get_usize(&format!("{prefix}.threads"))
+                    .or_else(|| doc.get_usize("threads"))
+                    .unwrap_or(1),
+                name,
+            });
+        }
+        if solvers.is_empty() {
+            return Err("no solvers configured".to_string());
+        }
+
+        Ok(Self {
+            name,
+            problem,
+            solvers,
+            max_iters: doc.get_usize("run.max_iters").unwrap_or(2000),
+            max_wall_s: doc.get_f64("run.max_wall_s").unwrap_or(60.0),
+            tol: doc.get_f64("run.tol").unwrap_or(1e-6),
+            trace_every: doc.get_usize("run.trace_every").unwrap_or(1),
+            out_dir: doc.get_str("run.out_dir").unwrap_or("results").to_string(),
+        })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self, String> {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "fig1-smoke"
+solvers = "flexa, fista"
+cores = 4
+
+[problem]
+kind = "lasso"
+m = 90
+n = 100
+sparsity = 0.1
+c = 1.0
+seed = 7
+
+[solver.flexa]
+sigma = 0.5
+
+[run]
+max_iters = 500
+tol = 1e-6
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "fig1-smoke");
+        assert_eq!(
+            cfg.problem,
+            ProblemSpec::Lasso { m: 90, n: 100, sparsity: 0.1, c: 1.0, seed: 7 }
+        );
+        assert_eq!(cfg.solvers.len(), 2);
+        assert_eq!(cfg.solvers[0].name, "flexa");
+        assert_eq!(cfg.solvers[0].sigma, 0.5);
+        assert_eq!(cfg.solvers[0].cores, 4);
+        assert_eq!(cfg.solvers[1].name, "fista");
+        assert_eq!(cfg.max_iters, 500);
+        assert_eq!(cfg.tol, 1e-6);
+    }
+
+    #[test]
+    fn missing_kind_is_error() {
+        assert!(ExperimentConfig::from_toml("name = \"x\"").is_err());
+    }
+
+    #[test]
+    fn unknown_kind_is_error() {
+        let err = ExperimentConfig::from_toml("[problem]\nkind = \"svm\"").unwrap_err();
+        assert!(err.contains("unknown problem.kind"));
+    }
+
+    #[test]
+    fn logistic_defaults() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"cdm\"\n[problem]\nkind = \"logistic\"\npreset = \"rcv1\"\n",
+        )
+        .unwrap();
+        match cfg.problem {
+            ProblemSpec::Logistic { ref preset, scale, .. } => {
+                assert_eq!(preset, "rcv1");
+                assert!(scale > 0.0);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+}

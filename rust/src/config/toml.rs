@@ -1,0 +1,310 @@
+//! Hand-rolled parser for the TOML subset used by `configs/*.toml`.
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous-array values, `#` comments.
+//! Not supported (and not needed by our configs): inline tables, dates,
+//! multi-line strings, array-of-tables.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        self.as_array().map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+    }
+}
+
+/// Parsed document: dotted-path keys (`section.key`) → values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: malformed section header", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.entries.insert(path, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(|v| v.as_str())
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_usize(&self, path: &str) -> Option<usize> {
+        self.get(path).and_then(|v| v.as_usize())
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(|v| v.as_bool())
+    }
+
+    /// Keys under a section prefix (`prefix.`)
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let p = format!("{prefix}.");
+        self.entries.keys().filter(|k| k.starts_with(&p)).map(|k| k.as_str()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".to_string());
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(format!("unterminated string: {s}"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape: \\{other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(format!("unterminated array: {s}"));
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    // numbers: int if it parses as i64 and has no ./e
+    let clean = s.replace('_', "");
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value: {s}"))
+}
+
+/// Split an array body on top-level commas (arrays may nest).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment config
+name = "fig1"
+
+[problem]
+kind = "lasso"
+m = 9000
+n = 10_000
+sparsity = 0.01   # 1% nonzeros
+
+[solver]
+sigma = 0.5
+full_jacobi = false
+taus = [1.0, 2.0, 4.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("fig1"));
+        assert_eq!(doc.get_str("problem.kind"), Some("lasso"));
+        assert_eq!(doc.get_usize("problem.m"), Some(9000));
+        assert_eq!(doc.get_usize("problem.n"), Some(10000));
+        assert_eq!(doc.get_f64("problem.sparsity"), Some(0.01));
+        assert_eq!(doc.get_f64("solver.sigma"), Some(0.5));
+        assert_eq!(doc.get_bool("solver.full_jacobi"), Some(false));
+        assert_eq!(
+            doc.get("solver.taus").unwrap().as_f64_array(),
+            Some(vec![1.0, 2.0, 4.0])
+        );
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = TomlDoc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        let keys = doc.keys_under("a");
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+
+    #[test]
+    fn strings_with_escapes_and_hashes() {
+        let doc = TomlDoc::parse("s = \"a # not comment\\n\"").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a # not comment\n"));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(TomlDoc::parse("[unclosed").unwrap_err().contains("line 1"));
+        assert!(TomlDoc::parse("x 1").unwrap_err().contains("line 1"));
+        assert!(TomlDoc::parse("x = ").unwrap_err().contains("line 1"));
+        assert!(TomlDoc::parse("x = \"abc").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("a = [[1, 2], [3]]").unwrap();
+        let arr = doc.get("a").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn numbers_int_vs_float() {
+        let doc = TomlDoc::parse("i = 5\nf = 5.0\ne = 1e-3\nneg = -2").unwrap();
+        assert_eq!(doc.get("i"), Some(&TomlValue::Int(5)));
+        assert_eq!(doc.get("f"), Some(&TomlValue::Float(5.0)));
+        assert_eq!(doc.get_f64("e"), Some(1e-3));
+        assert_eq!(doc.get("neg"), Some(&TomlValue::Int(-2)));
+        // usize conversion refuses negatives
+        assert_eq!(doc.get_usize("neg"), None);
+    }
+}

@@ -1,0 +1,143 @@
+//! Shared run-state for the coordinator algorithms: tracing, termination,
+//! simulated clock and flop accounting.
+
+use super::{CommonOptions, SolveReport, StopReason, TermMetric};
+use crate::metrics::{IterCost, Trace, TracePoint};
+use crate::problems::{relative_error, Problem};
+use crate::simulator::SimClock;
+use crate::util::Timer;
+
+/// Bookkeeping shared by FLEXA and Gauss-Jacobi drivers.
+pub struct RunState<'a> {
+    pub problem: &'a dyn Problem,
+    pub opts: &'a CommonOptions,
+    pub timer: Timer,
+    pub clock: SimClock,
+    pub flops: f64,
+    pub trace: Trace,
+    pub last_merit: f64,
+    pub last_rel_err: f64,
+    pub last_ebound: f64,
+    pub discarded: usize,
+}
+
+impl<'a> RunState<'a> {
+    pub fn new(problem: &'a dyn Problem, opts: &'a CommonOptions) -> Self {
+        Self {
+            problem,
+            opts,
+            timer: Timer::start(),
+            clock: SimClock::new(opts.cost_model, opts.cores.max(1)),
+            flops: 0.0,
+            trace: Trace::new(opts.name.clone()),
+            last_merit: f64::NAN,
+            last_rel_err: f64::NAN,
+            last_ebound: f64::NAN,
+            discarded: 0,
+        }
+    }
+
+    /// Charge one iteration's cost to the simulated clock and flop counter.
+    pub fn charge(&mut self, cost: IterCost) {
+        self.flops += cost.flops_total;
+        self.clock.advance(&cost);
+    }
+
+    /// Record a trace point; computes rel. error (cheap) always, merit
+    /// (full gradient) on the `merit_every` cadence or when it drives
+    /// termination and a check is due.
+    pub fn record(&mut self, iter: usize, x: &[f64], aux: &[f64], v: f64, active: usize) {
+        self.last_rel_err = relative_error(v, self.problem.v_star());
+        let need_merit = self.opts.term == TermMetric::Merit
+            || iter % self.opts.merit_every.max(1) == 0;
+        if need_merit {
+            // instrumentation only — not charged to the simulated clock
+            self.last_merit = self.problem.merit(x, aux);
+        }
+        if iter % self.opts.trace_every.max(1) == 0 {
+            self.trace.push(TracePoint {
+                iter,
+                wall_s: self.timer.elapsed_s(),
+                sim_s: self.clock.now_s(),
+                obj: v,
+                rel_err: self.last_rel_err,
+                merit: self.last_merit,
+                active,
+                flops: self.flops,
+            });
+        }
+    }
+
+    /// Current value of the termination metric.
+    pub fn term_value(&self) -> f64 {
+        match self.opts.term {
+            TermMetric::RelErr => self.last_rel_err,
+            TermMetric::Merit => self.last_merit,
+            TermMetric::ErrorBound => self.last_ebound,
+        }
+    }
+
+    /// Metric used to damp the adaptive step-size rule (12): the paper uses
+    /// re(x) for LASSO and ‖Z‖∞ for logistic — i.e. whatever is available.
+    pub fn step_metric(&self) -> f64 {
+        if self.last_rel_err.is_finite() {
+            self.last_rel_err
+        } else if self.last_merit.is_finite() {
+            self.last_merit
+        } else {
+            self.last_ebound
+        }
+    }
+
+    /// Check the stop conditions; `None` = keep going.
+    pub fn stop_check(&self, iter: usize) -> Option<StopReason> {
+        let m = self.term_value();
+        if m.is_finite() && m <= self.opts.tol {
+            return Some(StopReason::Converged);
+        }
+        if iter + 1 >= self.opts.max_iters {
+            return Some(StopReason::MaxIters);
+        }
+        if self.timer.elapsed_s() > self.opts.max_wall_s {
+            return Some(StopReason::TimeBudget);
+        }
+        None
+    }
+
+    /// Finalize into a report.
+    pub fn finish(
+        mut self,
+        x: Vec<f64>,
+        aux: &[f64],
+        v: f64,
+        iters: usize,
+        stop: StopReason,
+    ) -> SolveReport {
+        // make sure the final point is recorded with a fresh merit
+        self.last_merit = self.problem.merit(&x, aux);
+        self.last_rel_err = relative_error(v, self.problem.v_star());
+        self.trace.push(TracePoint {
+            iter: iters,
+            wall_s: self.timer.elapsed_s(),
+            sim_s: self.clock.now_s(),
+            obj: v,
+            rel_err: self.last_rel_err,
+            merit: self.last_merit,
+            active: 0,
+            flops: self.flops,
+        });
+        SolveReport {
+            x,
+            iters,
+            stop,
+            final_obj: v,
+            final_rel_err: self.last_rel_err,
+            final_merit: self.last_merit,
+            wall_s: self.timer.elapsed_s(),
+            sim_s: self.clock.now_s(),
+            flops: self.flops,
+            discarded: self.discarded,
+            trace: self.trace,
+        }
+    }
+}

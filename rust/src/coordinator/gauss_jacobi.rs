@@ -1,0 +1,318 @@
+//! Algorithms 2 & 3 — Inexact **Gauss-Jacobi** (and GJ **with Selection**).
+//!
+//! P processors run in parallel (Jacobi across processors); inside each
+//! processor the owned blocks are swept *sequentially*, Gauss-Seidel style,
+//! each sweep step using the processor's own freshest iterates
+//! `(x_{pi<}^{k+1}, x_{pi≥}^k, x_{−p}^k)` — realized here by giving every
+//! worker a private copy of the auxiliary vector updated with its own
+//! γ-scaled deltas as it sweeps. After the sweeps the deltas are merged
+//! (the allreduce of a distributed run, charged to the cost model).
+//!
+//! Algorithm 3 restricts each sweep to `S_p^k = {i ∈ I_p : E_i ≥ σ M^k}`,
+//! with `E_i` from a Jacobi prepass (so the theoretical requirement that
+//! `∪_p S_p^k` contain an `E_i ≥ ρM^k` block holds by construction).
+//!
+//! Within-worker sweeps use the **fresh-state** best response (the paper's
+//! point that Gauss-Seidel "latest information" costs extra computation —
+//! e.g. re-evaluating the logistic weights per update — is preserved and
+//! charged via `flops_best_response_fresh`).
+
+use super::driver::RunState;
+use super::tau::{TauController, TauDecision, TauOptions};
+use super::workers::compute_best_responses;
+use super::{GaussJacobiOptions, SolveReport, StopReason};
+use crate::linalg::ProcessorAssignment;
+use crate::metrics::IterCost;
+use crate::problems::Problem;
+
+/// Run Gauss-Jacobi (Algorithm 2) or GJ-with-Selection (Algorithm 3,
+/// when `opts.selection` is set) from `x0`.
+pub fn gauss_jacobi(problem: &dyn Problem, x0: &[f64], opts: &GaussJacobiOptions) -> SolveReport {
+    let n = problem.n();
+    assert_eq!(x0.len(), n);
+    let blocks = problem.blocks();
+    let nb = blocks.n_blocks();
+    let common = &opts.common;
+    let p_procs = if opts.processors == 0 { common.cores.max(1) } else { opts.processors };
+    let assignment = ProcessorAssignment::contiguous(nb, p_procs);
+    let max_block = blocks.max_size();
+
+    let mut x = x0.to_vec();
+    let mut aux = vec![0.0; problem.aux_len()];
+    problem.init_aux(&x, &mut aux);
+
+    // workspaces
+    let mut scratch = vec![0.0; problem.prelude_len()];
+    let mut zhat = vec![0.0; n]; // prepass best responses (Algorithm 3)
+    let mut e = vec![0.0; nb];
+    let mut sel: Vec<usize> = Vec::with_capacity(nb);
+    let mut aux_save = vec![0.0; problem.aux_len()];
+    let mut x_old = vec![0.0; n];
+    // per-processor private aux copies (allocated once)
+    let mut aux_local: Vec<Vec<f64>> = (0..p_procs).map(|_| vec![0.0; problem.aux_len()]).collect();
+    let mut z_buf = vec![0.0; max_block];
+    let mut delta = vec![0.0; max_block];
+
+    let tau_opts = common
+        .tau
+        .unwrap_or_else(|| TauOptions::paper(problem.tau_init(), problem.tau_min()));
+    let mut tau_ctl = TauController::new(tau_opts);
+    let mut gamma = common.stepsize.initial();
+
+    let mut state = RunState::new(problem, common);
+    let mut v = problem.v_val(&x, &aux);
+    tau_ctl.baseline(v);
+    state.record(0, &x, &aux, v, 0);
+
+    let mut stop = StopReason::MaxIters;
+    let mut iters = 0usize;
+
+    for k in 0..common.max_iters {
+        iters = k + 1;
+        let tau = tau_ctl.tau();
+
+        // ---- Algorithm 3: selection prepass (Jacobi best responses) ----
+        let mut prepass_flops = 0.0;
+        if let Some(rule) = &opts.selection {
+            if !scratch.is_empty() {
+                problem.prelude(&x, &aux, &mut scratch);
+            }
+            compute_best_responses(
+                problem,
+                &x,
+                &aux,
+                &scratch,
+                tau,
+                &mut zhat,
+                &mut e,
+                common.threads,
+            );
+            let m_k = rule.select(&e, &mut sel);
+            state.last_ebound = m_k;
+            prepass_flops = problem.flops_prelude()
+                + (0..nb).map(|i| problem.flops_best_response(i)).sum::<f64>();
+        } else {
+            sel.clear();
+            sel.extend(0..nb);
+        }
+
+        // ---- Gauss-Seidel sweeps, one per processor ----
+        // Every processor starts from aux^k; its private copy accumulates
+        // only its own γ-scaled deltas (= x_{−p} held at x^k).
+        aux_save.copy_from_slice(&aux);
+        x_old.copy_from_slice(&x);
+        let mut active = 0usize;
+        let mut max_worker_flops: f64 = 0.0;
+        let mut total_flops = prepass_flops;
+        let mut ebound_gs = 0.0f64;
+
+        for p in 0..p_procs {
+            let group = assignment.group(p);
+            let local = &mut aux_local[p];
+            local.copy_from_slice(&aux);
+            let mut worker_flops = problem.aux_len() as f64; // aux copy cost
+            for &i in group {
+                // Algorithm 3: only the selected blocks in this group
+                if opts.selection.is_some() && !sel_contains(&sel, i) {
+                    continue;
+                }
+                let r = blocks.range(i);
+                let ei = problem.best_response(i, &x, local, tau, &mut z_buf[..r.len()]);
+                ebound_gs = ebound_gs.max(ei);
+                worker_flops += problem.flops_best_response_fresh(i);
+                let mut moved = false;
+                for (t, j) in r.clone().enumerate() {
+                    delta[t] = gamma * (z_buf[t] - x[j]);
+                    if delta[t] != 0.0 {
+                        moved = true;
+                    }
+                }
+                if moved {
+                    for (t, j) in r.clone().enumerate() {
+                        x[j] += delta[t];
+                    }
+                    problem.apply_block_delta(i, &delta[..r.len()], local);
+                    worker_flops += problem.flops_aux_update(i);
+                    active += 1;
+                }
+            }
+            max_worker_flops = max_worker_flops.max(worker_flops);
+            total_flops += worker_flops;
+        }
+        if opts.selection.is_none() {
+            state.last_ebound = ebound_gs;
+        }
+
+        // ---- merge: aux^{k+1} = aux^k + Σ_p (aux_p − aux^k) ----
+        for p in 0..p_procs {
+            let local = &aux_local[p];
+            for j in 0..aux.len() {
+                aux[j] += local[j] - aux_save[j];
+            }
+        }
+        total_flops += (2 * p_procs * aux.len()) as f64;
+
+        let v_new = problem.v_val(&x, &aux);
+
+        // ---- τ controller ----
+        match tau_ctl.observe(v_new, state.step_metric()) {
+            TauDecision::Accept => {
+                v = v_new;
+            }
+            TauDecision::RejectAndRetry => {
+                x.copy_from_slice(&x_old);
+                aux.copy_from_slice(&aux_save);
+                state.discarded += 1;
+                tau_ctl.baseline(v);
+                active = 0;
+            }
+        }
+        // γ^k is an iteration-indexed schedule — advances on discards too
+        gamma = common.stepsize.next(gamma, state.step_metric());
+
+        // ---- cost model: compute critical path = slowest processor ----
+        let cost = IterCost {
+            flops_total: total_flops + problem.flops_obj(),
+            flops_max_worker: prepass_flops / p_procs as f64
+                + max_worker_flops
+                + problem.flops_obj(),
+            reduce_words: problem.aux_len() as f64,
+            reduce_rounds: if opts.selection.is_some() { 2.0 } else { 1.0 },
+        };
+        state.charge(cost);
+
+        state.record(k + 1, &x, &aux, v, active);
+        if let Some(reason) = state.stop_check(k) {
+            stop = reason;
+            break;
+        }
+    }
+
+    state.finish(x, &aux, v, iters, stop)
+}
+
+/// Convenience: GJ-FLEXA — Algorithm 3 with the paper's σ-rule.
+pub fn gj_flexa(
+    problem: &dyn Problem,
+    x0: &[f64],
+    sigma: f64,
+    mut opts: GaussJacobiOptions,
+) -> SolveReport {
+    opts.selection = Some(super::SelectionRule::sigma(sigma));
+    gauss_jacobi(problem, x0, &opts)
+}
+
+#[inline]
+fn sel_contains(sel: &[usize], i: usize) -> bool {
+    sel.binary_search(&i).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CommonOptions, SelectionRule, TermMetric};
+    use crate::datagen::nesterov_lasso;
+    use crate::problems::LassoProblem;
+
+    fn opts(procs: usize) -> GaussJacobiOptions {
+        GaussJacobiOptions {
+            common: CommonOptions {
+                max_iters: 3000,
+                tol: 1e-6,
+                term: TermMetric::RelErr,
+                name: format!("GJ P{procs}"),
+                ..Default::default()
+            },
+            selection: None,
+            processors: procs,
+        }
+    }
+
+    #[test]
+    fn gauss_seidel_single_processor_converges() {
+        // P = 1 is the classical cyclic Gauss-Seidel special case
+        let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
+        let r = gauss_jacobi(&p, &vec![0.0; p.n()], &opts(1));
+        assert!(r.converged(), "stop={:?} relerr={}", r.stop, r.final_rel_err);
+    }
+
+    #[test]
+    fn multi_processor_converges() {
+        let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
+        for procs in [2, 4, 8] {
+            let r = gauss_jacobi(&p, &vec![0.0; p.n()], &opts(procs));
+            assert!(r.converged(), "P={procs}: stop={:?} re={}", r.stop, r.final_rel_err);
+        }
+    }
+
+    #[test]
+    fn gj_with_selection_converges() {
+        let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
+        let mut o = opts(4);
+        o.selection = Some(SelectionRule::sigma(0.5));
+        let r = gauss_jacobi(&p, &vec![0.0; p.n()], &o);
+        assert!(r.converged(), "stop={:?} re={}", r.stop, r.final_rel_err);
+        let any_partial = r.trace.points.iter().any(|t| t.active > 0 && t.active < 60);
+        assert!(any_partial, "selection never skipped a block");
+    }
+
+    #[test]
+    fn p1_equals_full_jacobi_direction_at_start() {
+        // With γ fixed and one sweep from the same x, P = N (every block its
+        // own processor) must equal the Jacobi step of Algorithm 1.
+        use crate::coordinator::flexa::flexa;
+        use crate::coordinator::FlexaOptions;
+        let p = LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 5));
+        let x0 = vec![0.0; p.n()];
+        let mk_common = |name: &str| CommonOptions {
+            max_iters: 1,
+            tol: 0.0,
+            stepsize: crate::coordinator::StepRule::Constant { gamma: 0.5 },
+            tau: Some(TauOptions::frozen(2.0)),
+            name: name.into(),
+            ..Default::default()
+        };
+        let rj = flexa(
+            &p,
+            &x0,
+            &FlexaOptions {
+                common: mk_common("jacobi"),
+                selection: SelectionRule::FullJacobi,
+                inexact: None,
+            },
+        );
+        let rgj = gauss_jacobi(
+            &p,
+            &x0,
+            &GaussJacobiOptions {
+                common: mk_common("gj"),
+                selection: None,
+                processors: p.n(), // one block per processor ⇒ pure Jacobi
+            },
+        );
+        for i in 0..p.n() {
+            assert!(
+                (rj.x[i] - rgj.x[i]).abs() < 1e-12,
+                "i={i}: {} vs {}",
+                rj.x[i],
+                rgj.x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fewer_processors_fresher_info_not_slower_in_iterations() {
+        // Gauss-Seidel (P=1) should need no more iterations than pure
+        // Jacobi (P=N) on the same instance.
+        let p = LassoProblem::from_instance(nesterov_lasso(30, 40, 0.2, 1.0, 9));
+        let r1 = gauss_jacobi(&p, &vec![0.0; p.n()], &opts(1));
+        let rn = gauss_jacobi(&p, &vec![0.0; p.n()], &opts(40));
+        assert!(r1.converged() && rn.converged());
+        assert!(
+            r1.iters <= rn.iters + 5,
+            "GS iters {} >> Jacobi iters {}",
+            r1.iters,
+            rn.iters
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! The paper's contribution, as the L3 coordinator: Algorithm 1 (FLEXA),
+//! Algorithm 2 (Gauss-Jacobi), Algorithm 3 (GJ with selection), and their
+//! shared machinery — greedy selection, diminishing/adaptive/Armijo step
+//! sizes, the adaptive τ controller, worker-parallel best responses, and
+//! inexact-subproblem budgets.
+
+pub mod driver;
+pub mod flexa;
+pub mod gauss_jacobi;
+pub mod selection;
+pub mod stepsize;
+pub mod tau;
+pub mod workers;
+
+pub use flexa::flexa;
+pub use gauss_jacobi::{gauss_jacobi, gj_flexa};
+pub use selection::SelectionRule;
+pub use stepsize::StepRule;
+pub use tau::{TauController, TauDecision, TauOptions};
+
+use crate::metrics::Trace;
+use crate::simulator::CostModel;
+
+/// Which metric drives termination.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TermMetric {
+    /// relative error (11) — needs a known `V*`
+    RelErr,
+    /// stationarity merit ‖Z(x)‖∞ (computed every `merit_every` iterations)
+    Merit,
+    /// error-bound level `M^k = max_i E_i(x^k)` — free byproduct of (S.2)
+    ErrorBound,
+}
+
+/// Options shared by all coordinator algorithms.
+#[derive(Clone, Debug)]
+pub struct CommonOptions {
+    pub stepsize: StepRule,
+    /// τ controller options; `None` = paper defaults from the problem
+    pub tau: Option<TauOptions>,
+    pub max_iters: usize,
+    /// physical wall-clock budget
+    pub max_wall_s: f64,
+    pub tol: f64,
+    pub term: TermMetric,
+    /// simulated processor count P (time axis of the figures)
+    pub cores: usize,
+    /// physical worker threads
+    pub threads: usize,
+    pub trace_every: usize,
+    /// merit cadence (full-gradient cost; NOT charged to the simulated
+    /// clock — it is instrumentation, not part of the algorithms)
+    pub merit_every: usize,
+    pub cost_model: CostModel,
+    pub name: String,
+}
+
+impl Default for CommonOptions {
+    fn default() -> Self {
+        Self {
+            stepsize: StepRule::paper_adaptive(),
+            tau: None,
+            max_iters: 1000,
+            max_wall_s: 60.0,
+            tol: 1e-6,
+            term: TermMetric::RelErr,
+            cores: 1,
+            threads: 1,
+            trace_every: 1,
+            merit_every: 10,
+            cost_model: CostModel::default(),
+            name: "solver".into(),
+        }
+    }
+}
+
+/// Inexact-subproblem schedule (Theorem 1(iv)): the injected error is
+/// `ε_i^k = eps0 · γ^k`, a summable-after-scaling sequence. Our closed-form
+/// best responses are exact, so this models (and stress-tests) inexact
+/// solves by bounded perturbation.
+#[derive(Clone, Copy, Debug)]
+pub struct InexactOptions {
+    pub eps0: f64,
+    pub seed: u64,
+}
+
+/// FLEXA (Algorithm 1) options.
+#[derive(Clone, Debug)]
+pub struct FlexaOptions {
+    pub common: CommonOptions,
+    pub selection: SelectionRule,
+    pub inexact: Option<InexactOptions>,
+}
+
+impl Default for FlexaOptions {
+    fn default() -> Self {
+        Self {
+            common: CommonOptions::default(),
+            selection: SelectionRule::sigma(0.5),
+            inexact: None,
+        }
+    }
+}
+
+/// Gauss-Jacobi (Algorithms 2 & 3) options.
+#[derive(Clone, Debug)]
+pub struct GaussJacobiOptions {
+    pub common: CommonOptions,
+    /// `Some(rule)` = Algorithm 3 (GJ with Selection); `None` = Algorithm 2
+    pub selection: Option<SelectionRule>,
+    /// number of processor groups P (defaults to `common.cores` when 0)
+    pub processors: usize,
+}
+
+impl Default for GaussJacobiOptions {
+    fn default() -> Self {
+        Self { common: CommonOptions::default(), selection: None, processors: 0 }
+    }
+}
+
+/// Why the solver stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    Converged,
+    MaxIters,
+    TimeBudget,
+    Stalled,
+}
+
+/// Result of a solver run.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    pub x: Vec<f64>,
+    pub trace: Trace,
+    pub iters: usize,
+    pub stop: StopReason,
+    pub final_obj: f64,
+    pub final_rel_err: f64,
+    pub final_merit: f64,
+    pub wall_s: f64,
+    pub sim_s: f64,
+    pub flops: f64,
+    /// number of iterations discarded by the τ controller
+    pub discarded: usize,
+}
+
+impl SolveReport {
+    pub fn converged(&self) -> bool {
+        self.stop == StopReason::Converged
+    }
+}

@@ -1,0 +1,142 @@
+//! Greedy block-selection rules — step (S.2) of Algorithm 1.
+//!
+//! The paper requires `S^k` to contain at least one block with
+//! `E_i(x^k) ≥ ρ M^k`, `M^k = max_i E_i(x^k)`, ρ ∈ (0,1]. The experimental
+//! rule is `S^k = {i : E_i ≥ σ M^k}` — σ = 0 gives the full Jacobi update,
+//! σ = 0.5 the paper's "selective" variant. `TopK` covers GRock-style
+//! fixed-cardinality greedy selection and Gauss-Southwell (k = 1).
+
+/// A block-selection rule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SelectionRule {
+    /// `S^k = N` (σ = 0): update every block.
+    FullJacobi,
+    /// `S^k = {i : E_i ≥ σ·max_j E_j}`, σ ∈ (0, 1].
+    GreedyFraction { sigma: f64 },
+    /// The `k` blocks with largest `E_i` (ties to lower index).
+    TopK { k: usize },
+}
+
+impl SelectionRule {
+    /// σ-parameterized constructor matching the paper's notation
+    /// (σ = 0 ⇒ full Jacobi).
+    pub fn sigma(sigma: f64) -> Self {
+        assert!((0.0..=1.0).contains(&sigma), "sigma must be in [0,1]");
+        if sigma == 0.0 {
+            SelectionRule::FullJacobi
+        } else {
+            SelectionRule::GreedyFraction { sigma }
+        }
+    }
+
+    /// Gauss-Southwell: single most-violating block.
+    pub fn gauss_southwell() -> Self {
+        SelectionRule::TopK { k: 1 }
+    }
+
+    /// Compute `S^k` (sorted ascending) from the error bounds `e`.
+    /// Returns `M^k`. `out` is reused across iterations (no allocation).
+    pub fn select(&self, e: &[f64], out: &mut Vec<usize>) -> f64 {
+        out.clear();
+        let m = e.iter().fold(0.0f64, |a, &b| a.max(b));
+        match self {
+            SelectionRule::FullJacobi => {
+                out.extend(0..e.len());
+            }
+            SelectionRule::GreedyFraction { sigma } => {
+                if m <= 0.0 {
+                    // already stationary to machine precision: keep argmax
+                    // so the invariant "S^k non-empty" holds
+                    if !e.is_empty() {
+                        out.push(0);
+                    }
+                } else {
+                    let thr = sigma * m;
+                    for (i, &ei) in e.iter().enumerate() {
+                        if ei >= thr {
+                            out.push(i);
+                        }
+                    }
+                }
+            }
+            SelectionRule::TopK { k } => {
+                let k = (*k).min(e.len()).max(1);
+                // partial selection: indices of the k largest E_i
+                let mut idx: Vec<usize> = (0..e.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    e[b].partial_cmp(&e[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                out.extend_from_slice(&idx[..k]);
+                out.sort_unstable();
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_jacobi_selects_all() {
+        let mut out = Vec::new();
+        let m = SelectionRule::FullJacobi.select(&[0.1, 0.0, 0.5], &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+        assert_eq!(m, 0.5);
+    }
+
+    #[test]
+    fn greedy_fraction_threshold() {
+        let mut out = Vec::new();
+        let rule = SelectionRule::sigma(0.5);
+        let m = rule.select(&[0.1, 0.9, 0.5, 0.44, 1.0], &mut out);
+        assert_eq!(m, 1.0);
+        assert_eq!(out, vec![1, 2, 4]); // ≥ 0.5
+    }
+
+    #[test]
+    fn selection_always_contains_argmax() {
+        // the theoretical requirement (S.2): argmax_i E_i ∈ S^k
+        let e = [0.3, 0.7, 0.2, 0.7001, 0.1];
+        for rule in [
+            SelectionRule::FullJacobi,
+            SelectionRule::sigma(0.5),
+            SelectionRule::sigma(1.0),
+            SelectionRule::TopK { k: 1 },
+            SelectionRule::TopK { k: 3 },
+        ] {
+            let mut out = Vec::new();
+            rule.select(&e, &mut out);
+            assert!(out.contains(&3), "{rule:?} missed argmax");
+            assert!(!out.is_empty());
+        }
+    }
+
+    #[test]
+    fn sigma_zero_is_full_jacobi() {
+        assert_eq!(SelectionRule::sigma(0.0), SelectionRule::FullJacobi);
+    }
+
+    #[test]
+    fn all_zero_errors_is_safe() {
+        let mut out = Vec::new();
+        SelectionRule::sigma(0.5).select(&[0.0, 0.0], &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn topk_sorted_and_capped() {
+        let mut out = Vec::new();
+        SelectionRule::TopK { k: 10 }.select(&[0.1, 0.2], &mut out);
+        assert_eq!(out, vec![0, 1]);
+        SelectionRule::TopK { k: 2 }.select(&[0.5, 0.1, 0.9, 0.7], &mut out);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sigma_out_of_range_panics() {
+        SelectionRule::sigma(1.5);
+    }
+}

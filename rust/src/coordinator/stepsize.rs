@@ -1,0 +1,138 @@
+//! Step-size rules γ^k for Algorithms 1–3.
+//!
+//! Theorem 1 needs γ^k ∈ (0,1], Σγ^k = ∞, Σ(γ^k)² < ∞. Rule (6) is
+//! `γ^k = γ^{k−1}(1 − θ γ^{k−1})`; the experiments use the customization
+//! (12), which damps the decrease while the optimality metric is still
+//! large so γ does not vanish before the iterates are near a solution.
+//! The Armijo variant (Remark 4) is driven by the solver (it needs trial
+//! objective evaluations) via [`armijo_accept`].
+
+/// A diminishing / constant step-size rule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepRule {
+    /// Rule (6): `γ^k = γ^{k−1}(1 − θ·γ^{k−1})`.
+    Diminishing { gamma0: f64, theta: f64 },
+    /// Rule (12): `γ^k = γ^{k−1}(1 − min{1, eps/metric}·θ·γ^{k−1})` with
+    /// `metric` the current optimality measure (re(x) or ‖Z‖∞).
+    Adaptive { gamma0: f64, theta: f64, eps: f64 },
+    /// Constant step (converges for small enough γ; slow — kept for tests
+    /// and ablations).
+    Constant { gamma: f64 },
+    /// Armijo line search on V (Remark 4): handled by the solver; this
+    /// carries the parameters. `gamma0` bounds the first trial.
+    Armijo { alpha: f64, beta: f64, max_backtracks: usize },
+}
+
+impl StepRule {
+    /// The paper's LASSO setting for rule (12): γ0=0.9, θ=1e−7, eps=1e−4.
+    pub fn paper_adaptive() -> Self {
+        StepRule::Adaptive { gamma0: 0.9, theta: 1e-7, eps: 1e-4 }
+    }
+
+    /// Generic rule (6) with the paper's γ0.
+    pub fn paper_diminishing(theta: f64) -> Self {
+        StepRule::Diminishing { gamma0: 0.9, theta }
+    }
+
+    pub fn initial(&self) -> f64 {
+        match self {
+            StepRule::Diminishing { gamma0, .. } | StepRule::Adaptive { gamma0, .. } => *gamma0,
+            StepRule::Constant { gamma } => *gamma,
+            StepRule::Armijo { .. } => 1.0,
+        }
+    }
+
+    /// Advance γ after an accepted iteration. `metric` is the current
+    /// optimality measure (used by `Adaptive`; pass NaN if unknown, which
+    /// falls back to undamped rule (6)).
+    pub fn next(&self, gamma: f64, metric: f64) -> f64 {
+        match self {
+            StepRule::Diminishing { theta, .. } => gamma * (1.0 - theta * gamma),
+            StepRule::Adaptive { theta, eps, .. } => {
+                let damp = if metric.is_finite() && metric > 0.0 {
+                    (eps / metric).min(1.0)
+                } else {
+                    1.0
+                };
+                gamma * (1.0 - damp * theta * gamma)
+            }
+            StepRule::Constant { gamma: g } => *g,
+            StepRule::Armijo { .. } => gamma, // solver-driven
+        }
+    }
+
+    pub fn is_armijo(&self) -> bool {
+        matches!(self, StepRule::Armijo { .. })
+    }
+}
+
+/// Armijo acceptance test (Remark 4):
+/// `V(x + γ·d_S) − V(x) ≤ −α·γ·‖d_S‖²`.
+pub fn armijo_accept(v_trial: f64, v_base: f64, alpha: f64, gamma: f64, dir_sq_norm: f64) -> bool {
+    v_trial - v_base <= -alpha * gamma * dir_sq_norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule6_is_decreasing_and_positive() {
+        let rule = StepRule::Diminishing { gamma0: 0.9, theta: 0.5 };
+        let mut g = rule.initial();
+        for _ in 0..10_000 {
+            let g1 = rule.next(g, f64::NAN);
+            assert!(g1 > 0.0 && g1 < g);
+            g = g1;
+        }
+    }
+
+    #[test]
+    fn rule6_sums_diverge_squares_converge() {
+        // numeric check of the Theorem 1 conditions on a long horizon
+        // (θ ∈ (0,1): θ = 1 with γ0 = 1 would zero out γ immediately)
+        let rule = StepRule::Diminishing { gamma0: 0.9, theta: 0.5 };
+        let mut g = rule.initial();
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..2_000_000 {
+            s += g;
+            s2 += g * g;
+            g = rule.next(g, f64::NAN);
+        }
+        // γ^k ~ 1/(θk): partial sums grow like log k; squares stay bounded
+        assert!(s > 20.0, "Σγ = {s} should keep growing");
+        assert!(s2 < 10.0, "Σγ² = {s2} should stay bounded");
+    }
+
+    #[test]
+    fn adaptive_damps_when_far_from_optimum() {
+        let rule = StepRule::Adaptive { gamma0: 0.9, theta: 1e-2, eps: 1e-4 };
+        let g = 0.9;
+        // far (metric = 1): decrease ~ eps/metric-damped
+        let g_far = rule.next(g, 1.0);
+        // near (metric = 1e-6 < eps): full decrease
+        let g_near = rule.next(g, 1e-6);
+        assert!(g_far > g_near, "far decrease should be slower");
+        assert!(g_far < g && g_near < g);
+    }
+
+    #[test]
+    fn adaptive_handles_nan_metric() {
+        let rule = StepRule::paper_adaptive();
+        let g1 = rule.next(0.9, f64::NAN);
+        assert!(g1 > 0.0 && g1 < 0.9);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let rule = StepRule::Constant { gamma: 0.1 };
+        assert_eq!(rule.next(0.1, 0.5), 0.1);
+        assert_eq!(rule.initial(), 0.1);
+    }
+
+    #[test]
+    fn armijo_test_accepts_sufficient_decrease() {
+        assert!(armijo_accept(0.9, 1.0, 0.1, 0.5, 1.0)); // −0.1 ≤ −0.05
+        assert!(!armijo_accept(0.999, 1.0, 0.1, 0.5, 1.0)); // −0.001 > −0.05
+    }
+}

@@ -1,0 +1,231 @@
+//! Adaptive proximal-weight controller — the paper's τ heuristic (§VI-A):
+//!
+//! * τ starts at the problem's `tau_init()` (`tr(AᵀA)/2n` for LASSO);
+//! * **doubled** (and the iteration *discarded*, `x^{k+1} = x^k`) whenever
+//!   the objective increases;
+//! * **halved** when the objective decreased for 10 consecutive iterations
+//!   *or* the optimality metric is small (re(x) ≤ 1e−2);
+//! * never below the problem's `tau_min()` (nonconvex problems need
+//!   τ > 2c̄ to keep the subproblems strongly convex);
+//! * at most 100 changes in total (the convergence theory allows only
+//!   finitely many changes).
+
+/// Options for the τ controller.
+#[derive(Clone, Copy, Debug)]
+pub struct TauOptions {
+    /// initial τ (usually `problem.tau_init()`)
+    pub tau0: f64,
+    /// hard lower bound (usually `problem.tau_min()`)
+    pub tau_min: f64,
+    /// halve after this many consecutive decreases
+    pub decrease_streak: usize,
+    /// halve whenever the optimality metric is below this
+    pub metric_threshold: f64,
+    /// maximum number of τ changes
+    pub max_updates: usize,
+    /// disable adaptation entirely (ablation)
+    pub frozen: bool,
+}
+
+impl TauOptions {
+    pub fn paper(tau0: f64, tau_min: f64) -> Self {
+        Self {
+            tau0: tau0.max(tau_min),
+            tau_min,
+            decrease_streak: 10,
+            metric_threshold: 1e-2,
+            max_updates: 100,
+            frozen: false,
+        }
+    }
+
+    pub fn frozen(tau0: f64) -> Self {
+        Self {
+            tau0,
+            tau_min: 0.0,
+            decrease_streak: 10,
+            metric_threshold: 1e-2,
+            max_updates: 0,
+            frozen: true,
+        }
+    }
+}
+
+/// What the solver should do with the iterate it just produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TauDecision {
+    /// keep the new iterate
+    Accept,
+    /// objective increased: τ doubled, discard the iterate (x^{k+1} = x^k)
+    RejectAndRetry,
+}
+
+/// Stateful τ controller.
+#[derive(Clone, Debug)]
+pub struct TauController {
+    opts: TauOptions,
+    tau: f64,
+    streak: usize,
+    updates: usize,
+    last_v: f64,
+    /// iterations since the last τ change (cooldown for the metric rule:
+    /// without it, "halve when re(x) ≤ 1e−2" would fire every iteration
+    /// and burn the 100-update budget in 100 consecutive steps)
+    since_change: usize,
+}
+
+impl TauController {
+    pub fn new(opts: TauOptions) -> Self {
+        Self {
+            tau: opts.tau0.max(opts.tau_min),
+            opts,
+            streak: 0,
+            updates: 0,
+            last_v: f64::INFINITY,
+            since_change: 0,
+        }
+    }
+
+    /// Current τ (uniform across blocks, as in the paper's experiments).
+    pub fn tau(&self) -> f64 {
+        self.tau
+    }
+
+    pub fn updates(&self) -> usize {
+        self.updates
+    }
+
+    fn can_update(&self) -> bool {
+        !self.opts.frozen && self.updates < self.opts.max_updates
+    }
+
+    /// Report the objective after a step; returns the accept/reject
+    /// decision. `metric` is the optimality measure (NaN if unknown).
+    pub fn observe(&mut self, v_new: f64, metric: f64) -> TauDecision {
+        self.since_change += 1;
+        // a non-finite objective is an overshoot by definition — treat it
+        // as an increase (NaN would otherwise slip through `>` and poison
+        // the run)
+        if !v_new.is_finite() || v_new > self.last_v {
+            if self.opts.frozen {
+                // frozen controller: accept non-monotone steps (pure
+                // Theorem-1 dynamics) but never propagate non-finite state
+                if !v_new.is_finite() {
+                    return TauDecision::RejectAndRetry;
+                }
+                self.last_v = v_new;
+                return TauDecision::Accept;
+            }
+            // objective increased: discard the iteration; double τ while
+            // the update budget lasts (afterwards keep discarding — the
+            // iteration-indexed γ^k keeps shrinking, so progress resumes)
+            if self.can_update() {
+                self.tau *= 2.0;
+                self.updates += 1;
+                self.since_change = 0;
+            }
+            self.streak = 0;
+            return TauDecision::RejectAndRetry;
+        }
+        if v_new < self.last_v {
+            self.streak += 1;
+        } else {
+            self.streak = 0;
+        }
+        let metric_small = metric.is_finite() && metric <= self.opts.metric_threshold;
+        let cooled_down = self.since_change >= self.opts.decrease_streak;
+        if (self.streak >= self.opts.decrease_streak || (metric_small && cooled_down))
+            && self.can_update()
+            && self.tau * 0.5 >= self.opts.tau_min
+        {
+            self.tau *= 0.5;
+            self.updates += 1;
+            self.streak = 0;
+            self.since_change = 0;
+        }
+        self.last_v = v_new;
+        TauDecision::Accept
+    }
+
+    /// Reset the objective baseline (used after a rejected iteration where
+    /// the iterate was rolled back).
+    pub fn baseline(&mut self, v: f64) {
+        self.last_v = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> TauController {
+        TauController::new(TauOptions::paper(4.0, 0.0))
+    }
+
+    #[test]
+    fn doubles_and_rejects_on_increase() {
+        let mut c = ctl();
+        assert_eq!(c.observe(10.0, f64::NAN), TauDecision::Accept);
+        assert_eq!(c.observe(11.0, f64::NAN), TauDecision::RejectAndRetry);
+        assert_eq!(c.tau(), 8.0);
+        assert_eq!(c.updates(), 1);
+    }
+
+    #[test]
+    fn halves_after_streak() {
+        let mut c = ctl();
+        let mut v = 100.0;
+        for _ in 0..10 {
+            v -= 1.0;
+            c.observe(v, f64::NAN);
+        }
+        assert_eq!(c.tau(), 2.0, "halved after 10 consecutive decreases");
+    }
+
+    #[test]
+    fn halves_on_small_metric_after_cooldown() {
+        let mut c = ctl();
+        // the metric rule only fires after `decrease_streak` iterations
+        // since the last τ change (cooldown), so it cannot burn the whole
+        // update budget in consecutive iterations
+        let mut v = 100.0;
+        for k in 0..9 {
+            v -= 1.0;
+            c.observe(v, 1e-3);
+            assert_eq!(c.tau(), 4.0, "halved too early at iter {k}");
+        }
+        v -= 1.0;
+        c.observe(v, 1e-3);
+        assert_eq!(c.tau(), 2.0, "metric rule did not fire after cooldown");
+    }
+
+    #[test]
+    fn respects_tau_min() {
+        let mut c = TauController::new(TauOptions::paper(4.0, 3.0));
+        c.observe(10.0, 1e-9);
+        // halving would go to 2.0 < tau_min = 3.0 → stays
+        assert_eq!(c.tau(), 4.0);
+    }
+
+    #[test]
+    fn caps_total_updates() {
+        let mut opts = TauOptions::paper(1.0, 0.0);
+        opts.max_updates = 3;
+        let mut c = TauController::new(opts);
+        c.baseline(0.0);
+        for _ in 0..10 {
+            c.observe(1.0, f64::NAN); // each flat/increase triggers doubles
+            c.baseline(0.0);
+        }
+        assert!(c.updates() <= 3);
+        assert!(c.tau() <= 8.0);
+    }
+
+    #[test]
+    fn frozen_never_changes() {
+        let mut c = TauController::new(TauOptions::frozen(5.0));
+        assert_eq!(c.observe(10.0, f64::NAN), TauDecision::Accept);
+        assert_eq!(c.observe(20.0, f64::NAN), TauDecision::Accept); // no reject
+        assert_eq!(c.tau(), 5.0);
+    }
+}

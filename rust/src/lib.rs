@@ -1,0 +1,48 @@
+//! # flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
+//!
+//! A full reproduction of Facchinei, Scutari & Sagratella, *"Parallel
+//! Selective Algorithms for Nonconvex Big Data Optimization"* (IEEE TSP
+//! 2015) as a three-layer rust + JAX/Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: FLEXA (Algorithm 1),
+//!   Gauss-Jacobi (Algorithm 2), GJ-with-Selection (Algorithm 3), the
+//!   greedy selection / step-size / τ machinery, six baseline solvers
+//!   (FISTA, SpaRSA, GRock, greedy-1BCD, ADMM, CDM), the problem library
+//!   (LASSO, group LASSO, sparse logistic regression, nonconvex QP), the
+//!   cluster cost-model simulator and the benchmark harness regenerating
+//!   every figure/table of the paper.
+//! * **L2/L1 (python/compile, build-time only)** — JAX step models composed
+//!   from Pallas kernels, AOT-lowered to HLO text; loaded and executed from
+//!   rust through the PJRT C API (`runtime` module). Python never runs on
+//!   the request path.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use flexa::datagen::nesterov_lasso;
+//! use flexa::problems::LassoProblem;
+//! use flexa::coordinator::{flexa as run_flexa, FlexaOptions};
+//!
+//! let inst = nesterov_lasso(900, 1000, 0.01, 1.0, 42);
+//! let problem = LassoProblem::from_instance(inst);
+//! let x0 = vec![0.0; 1000];
+//! let report = run_flexa(&problem, &x0, &FlexaOptions::default());
+//! println!("relative error: {:.2e}", report.final_rel_err);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datagen;
+pub mod linalg;
+pub mod metrics;
+pub mod problems;
+pub mod rng;
+pub mod runtime;
+pub mod simulator;
+pub mod solvers;
+pub mod util;
+
+pub use coordinator::{flexa, gauss_jacobi, gj_flexa, FlexaOptions, GaussJacobiOptions, SolveReport};
+pub use problems::Problem;

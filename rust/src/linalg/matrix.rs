@@ -1,0 +1,201 @@
+//! Unified matrix type over dense and sparse storage.
+//!
+//! An enum (rather than `dyn LinearOperator`) so the per-column hot-path
+//! calls inline to direct code; the FLEXA inner loop does one `col_dot` and
+//! one `col_axpy` per selected coordinate per iteration.
+
+use super::dense::DenseMatrix;
+use super::sparse::CscMatrix;
+
+/// Dense or sparse matrix with the column-oriented kernel set used by every
+/// solver in this crate.
+#[derive(Clone, Debug)]
+pub enum Matrix {
+    Dense(DenseMatrix),
+    Sparse(CscMatrix),
+}
+
+impl Matrix {
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        match self {
+            Matrix::Dense(a) => a.nrows(),
+            Matrix::Sparse(a) => a.nrows(),
+        }
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        match self {
+            Matrix::Dense(a) => a.ncols(),
+            Matrix::Sparse(a) => a.ncols(),
+        }
+    }
+
+    /// Stored entries (dense: all of them).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Matrix::Dense(a) => a.nrows() * a.ncols(),
+            Matrix::Sparse(a) => a.nnz(),
+        }
+    }
+
+    /// `out = A x`.
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        match self {
+            Matrix::Dense(a) => a.matvec(x, out),
+            Matrix::Sparse(a) => a.matvec(x, out),
+        }
+    }
+
+    /// `out = Aᵀ y`.
+    pub fn matvec_t(&self, y: &[f64], out: &mut [f64]) {
+        match self {
+            Matrix::Dense(a) => a.matvec_t(y, out),
+            Matrix::Sparse(a) => a.matvec_t(y, out),
+        }
+    }
+
+    /// `A_jᵀ y`.
+    #[inline]
+    pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        match self {
+            Matrix::Dense(a) => a.col_dot(j, y),
+            Matrix::Sparse(a) => a.col_dot(j, y),
+        }
+    }
+
+    /// `y += alpha A_j`.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, alpha: f64, y: &mut [f64]) {
+        match self {
+            Matrix::Dense(a) => a.col_axpy(j, alpha, y),
+            Matrix::Sparse(a) => a.col_axpy(j, alpha, y),
+        }
+    }
+
+    /// `Σ_i A_ij² w_i` — weighted squared column dot.
+    #[inline]
+    pub fn col_sq_weighted_dot(&self, j: usize, w: &[f64]) -> f64 {
+        match self {
+            Matrix::Dense(a) => a.col_sq_weighted_dot(j, w),
+            Matrix::Sparse(a) => a.col_sq_weighted_dot(j, w),
+        }
+    }
+
+    /// Number of stored entries in column `j` (flop accounting).
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        match self {
+            Matrix::Dense(a) => a.nrows(),
+            Matrix::Sparse(a) => a.col(j).0.len(),
+        }
+    }
+
+    /// Squared column norms (diag of `AᵀA`).
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        match self {
+            Matrix::Dense(a) => a.col_sq_norms(),
+            Matrix::Sparse(a) => a.col_sq_norms(),
+        }
+    }
+
+    /// `trace(AᵀA)`.
+    pub fn gram_trace(&self) -> f64 {
+        match self {
+            Matrix::Dense(a) => a.gram_trace(),
+            Matrix::Sparse(a) => a.gram_trace(),
+        }
+    }
+
+    pub fn scale_col(&mut self, j: usize, alpha: f64) {
+        match self {
+            Matrix::Dense(a) => a.scale_col(j, alpha),
+            Matrix::Sparse(a) => a.scale_col(j, alpha),
+        }
+    }
+
+    /// Dense view (tests / XLA literal building for fixed small shapes).
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            Matrix::Dense(a) => a.clone(),
+            Matrix::Sparse(a) => a.to_dense(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Matrix::Sparse(_))
+    }
+
+    /// Crude upper bound on `λ_max(2 AᵀA)` (the Lipschitz constant of
+    /// `∇‖Ax−b‖²`) via a few power iterations; used by FISTA when
+    /// backtracking is disabled, and in tests.
+    pub fn lipschitz_2ata(&self, iters: usize, seed: u64) -> f64 {
+        let n = self.ncols();
+        let m = self.nrows();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed);
+        let mut v: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mut av = vec![0.0; m];
+        let mut atav = vec![0.0; n];
+        let mut lam = 0.0;
+        for _ in 0..iters.max(1) {
+            let nv = super::vector::nrm2(&v);
+            if nv == 0.0 {
+                return 0.0;
+            }
+            super::vector::scale(1.0 / nv, &mut v);
+            self.matvec(&v, &mut av);
+            self.matvec_t(&av, &mut atav);
+            lam = super::vector::dot(&v, &atav);
+            std::mem::swap(&mut v, &mut atav);
+        }
+        2.0 * lam
+    }
+}
+
+impl From<DenseMatrix> for Matrix {
+    fn from(a: DenseMatrix) -> Self {
+        Matrix::Dense(a)
+    }
+}
+
+impl From<CscMatrix> for Matrix {
+    fn from(a: CscMatrix) -> Self {
+        Matrix::Sparse(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enum_dispatch_matches() {
+        let d = DenseMatrix::from_row_major(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let s = CscMatrix::from_triplets(
+            2,
+            2,
+            &[(0, 0, 1.0), (0, 1, 2.0), (1, 0, 3.0), (1, 1, 4.0)],
+        );
+        let md: Matrix = d.into();
+        let ms: Matrix = s.into();
+        let x = [1.0, -1.0];
+        let mut od = vec![0.0; 2];
+        let mut os = vec![0.0; 2];
+        md.matvec(&x, &mut od);
+        ms.matvec(&x, &mut os);
+        assert_eq!(od, os);
+        assert_eq!(md.gram_trace(), ms.gram_trace());
+        assert_eq!(md.col_nnz(0), 2);
+        assert!(!md.is_sparse() && ms.is_sparse());
+    }
+
+    #[test]
+    fn lipschitz_upper_bounds_on_identity() {
+        // A = I (2x2): λmax(2 AᵀA) = 2.
+        let d = DenseMatrix::from_row_major(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let m: Matrix = d.into();
+        let l = m.lipschitz_2ata(50, 7);
+        assert!((l - 2.0).abs() < 1e-6, "got {l}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Linear-algebra substrate: dense column-major and CSC-sparse matrices,
+//! vector kernels, and block partitions.
+//!
+//! Everything here is written from scratch (the build is offline; no BLAS,
+//! no ndarray). Layout choices are driven by the paper's access pattern:
+//! column-distributed `A`, per-column dots (`A_jᵀ r`) and per-column axpys
+//! (`r += δ A_j`) dominate, hence column-major storage everywhere.
+
+pub mod dense;
+pub mod matrix;
+pub mod partition;
+pub mod sparse;
+pub mod vector;
+
+pub use dense::DenseMatrix;
+pub use matrix::Matrix;
+pub use partition::{BlockPartition, ProcessorAssignment};
+pub use sparse::CscMatrix;

@@ -1,0 +1,228 @@
+//! Block partitions of the variable vector.
+//!
+//! The paper works with `x = (x_1, …, x_N)`, `x_i ∈ R^{n_i}`; the LASSO /
+//! logistic / nonconvex experiments use scalar blocks (`n_i = 1`) while
+//! group LASSO uses `n_i > 1`. A `BlockPartition` is the offsets table, and
+//! `ProcessorAssignment` maps blocks onto the P (possibly simulated)
+//! processors for the Gauss-Jacobi schemes (Algorithms 2 and 3).
+
+/// Contiguous partition of `0..n` into `N` blocks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockPartition {
+    /// `offsets.len() == N + 1`, `offsets[0] == 0`, `offsets[N] == n`.
+    offsets: Vec<usize>,
+}
+
+impl BlockPartition {
+    /// One scalar block per variable (the paper's main experimental setting).
+    pub fn scalar(n: usize) -> Self {
+        Self { offsets: (0..=n).collect() }
+    }
+
+    /// Uniform blocks of size `block_size` (last may be smaller).
+    pub fn uniform(n: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "block size must be positive");
+        let mut offsets = Vec::with_capacity(n / block_size + 2);
+        let mut o = 0;
+        offsets.push(0);
+        while o < n {
+            o = (o + block_size).min(n);
+            offsets.push(o);
+        }
+        if n == 0 {
+            // degenerate: single empty block boundary
+            return Self { offsets: vec![0] };
+        }
+        Self { offsets }
+    }
+
+    /// Exactly `count` near-equal blocks.
+    pub fn by_count(n: usize, count: usize) -> Self {
+        assert!(count > 0, "block count must be positive");
+        let mut offsets = Vec::with_capacity(count + 1);
+        for k in 0..=count {
+            offsets.push(k * n / count);
+        }
+        offsets.dedup();
+        Self { offsets }
+    }
+
+    /// From explicit block sizes.
+    pub fn from_sizes(sizes: &[usize]) -> Self {
+        let mut offsets = Vec::with_capacity(sizes.len() + 1);
+        let mut o = 0;
+        offsets.push(0);
+        for &s in sizes {
+            assert!(s > 0, "empty block");
+            o += s;
+            offsets.push(o);
+        }
+        Self { offsets }
+    }
+
+    /// Number of blocks `N`.
+    #[inline]
+    pub fn n_blocks(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total dimension `n`.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Half-open index range of block `i`.
+    #[inline]
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.offsets[i]..self.offsets[i + 1]
+    }
+
+    /// Size of block `i`.
+    #[inline]
+    pub fn size(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Largest block size.
+    pub fn max_size(&self) -> usize {
+        (0..self.n_blocks()).map(|i| self.size(i)).max().unwrap_or(0)
+    }
+
+    /// Block containing variable `v`.
+    pub fn block_of(&self, v: usize) -> usize {
+        debug_assert!(v < self.dim());
+        match self.offsets.binary_search(&v) {
+            Ok(i) => {
+                // `v` is a boundary: it starts block i (unless i == N).
+                i.min(self.n_blocks() - 1)
+            }
+            Err(i) => i - 1,
+        }
+    }
+
+    /// True if all blocks are scalars.
+    pub fn is_scalar(&self) -> bool {
+        self.n_blocks() == self.dim()
+    }
+}
+
+/// Assignment of blocks to `P` processors: `I_1, …, I_P` partition of
+/// `{1..N}` (paper §III-A). Contiguous ranges, the layout used by the
+/// paper's column-distributed implementation.
+#[derive(Clone, Debug)]
+pub struct ProcessorAssignment {
+    /// `groups[p]` = blocks owned by processor `p` (sorted).
+    groups: Vec<Vec<usize>>,
+}
+
+impl ProcessorAssignment {
+    /// Contiguous near-equal split of `n_blocks` blocks over `p` processors.
+    pub fn contiguous(n_blocks: usize, p: usize) -> Self {
+        assert!(p > 0);
+        let mut groups = Vec::with_capacity(p);
+        for k in 0..p {
+            let lo = k * n_blocks / p;
+            let hi = (k + 1) * n_blocks / p;
+            groups.push((lo..hi).collect());
+        }
+        Self { groups }
+    }
+
+    /// Round-robin split (load balance for heterogeneous column costs).
+    pub fn round_robin(n_blocks: usize, p: usize) -> Self {
+        assert!(p > 0);
+        let mut groups = vec![Vec::new(); p];
+        for i in 0..n_blocks {
+            groups[i % p].push(i);
+        }
+        Self { groups }
+    }
+
+    #[inline]
+    pub fn n_processors(&self) -> usize {
+        self.groups.len()
+    }
+
+    #[inline]
+    pub fn group(&self, p: usize) -> &[usize] {
+        &self.groups[p]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &[usize]> {
+        self.groups.iter().map(|g| g.as_slice())
+    }
+
+    /// Total number of assigned blocks (== N).
+    pub fn total_blocks(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_partition() {
+        let p = BlockPartition::scalar(4);
+        assert_eq!(p.n_blocks(), 4);
+        assert_eq!(p.dim(), 4);
+        assert_eq!(p.range(2), 2..3);
+        assert!(p.is_scalar());
+    }
+
+    #[test]
+    fn uniform_with_ragged_tail() {
+        let p = BlockPartition::uniform(10, 4);
+        assert_eq!(p.n_blocks(), 3);
+        assert_eq!(p.range(0), 0..4);
+        assert_eq!(p.range(2), 8..10);
+        assert_eq!(p.size(2), 2);
+        assert_eq!(p.max_size(), 4);
+        assert!(!p.is_scalar());
+    }
+
+    #[test]
+    fn by_count_covers_everything() {
+        let p = BlockPartition::by_count(10, 3);
+        assert_eq!(p.dim(), 10);
+        let total: usize = (0..p.n_blocks()).map(|i| p.size(i)).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn from_sizes_roundtrip() {
+        let p = BlockPartition::from_sizes(&[2, 3, 5]);
+        assert_eq!(p.n_blocks(), 3);
+        assert_eq!(p.range(1), 2..5);
+        assert_eq!(p.dim(), 10);
+    }
+
+    #[test]
+    fn block_of_is_consistent() {
+        let p = BlockPartition::from_sizes(&[2, 3, 5]);
+        for v in 0..p.dim() {
+            let b = p.block_of(v);
+            assert!(p.range(b).contains(&v), "v={v} b={b}");
+        }
+    }
+
+    #[test]
+    fn assignment_partitions_blocks() {
+        for (n, p) in [(10, 3), (5, 5), (7, 2), (3, 8)] {
+            let a = ProcessorAssignment::contiguous(n, p);
+            assert_eq!(a.total_blocks(), n);
+            let mut seen = vec![false; n];
+            for g in a.iter() {
+                for &i in g {
+                    assert!(!seen[i], "block {i} assigned twice");
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+            let rr = ProcessorAssignment::round_robin(n, p);
+            assert_eq!(rr.total_blocks(), n);
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Compressed sparse column (CSC) matrices.
+//!
+//! CSC mirrors the dense column-major layout choice (see `dense.rs`): the
+//! FLEXA hot path is per-column dots and axpys, which want contiguous column
+//! access. The rcv1-like / real-sim-like logistic instances are sparse.
+
+use super::vector;
+
+/// Sparse matrix in CSC format.
+#[derive(Clone, Debug)]
+pub struct CscMatrix {
+    nrows: usize,
+    ncols: usize,
+    /// `colptr[j]..colptr[j+1]` indexes the entries of column `j`.
+    colptr: Vec<usize>,
+    rowind: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from (row, col, value) triplets. Duplicates are summed.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Self {
+        let mut per_col: Vec<Vec<(usize, f64)>> = vec![Vec::new(); ncols];
+        for &(i, j, v) in triplets {
+            assert!(i < nrows && j < ncols, "triplet ({i},{j}) out of bounds");
+            per_col[j].push((i, v));
+        }
+        let mut colptr = Vec::with_capacity(ncols + 1);
+        let mut rowind = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for col in per_col.iter_mut() {
+            col.sort_by_key(|&(i, _)| i);
+            let mut k = 0;
+            while k < col.len() {
+                let (i, mut v) = col[k];
+                let mut k2 = k + 1;
+                while k2 < col.len() && col[k2].0 == i {
+                    v += col[k2].1;
+                    k2 += 1;
+                }
+                rowind.push(i);
+                values.push(v);
+                k = k2;
+            }
+            colptr.push(rowind.len());
+        }
+        Self { nrows, ncols, colptr, rowind, values }
+    }
+
+    /// Build directly from CSC arrays (must be sorted within columns).
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        colptr: Vec<usize>,
+        rowind: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(colptr.len(), ncols + 1);
+        assert_eq!(rowind.len(), values.len());
+        assert_eq!(*colptr.last().unwrap(), rowind.len());
+        Self { nrows, ncols, colptr, rowind, values }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Density in [0, 1].
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// Column `j` as (row indices, values).
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let lo = self.colptr[j];
+        let hi = self.colptr[j + 1];
+        (&self.rowind[lo..hi], &self.values[lo..hi])
+    }
+
+    /// `out = A x`.
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(out.len(), self.nrows);
+        out.fill(0.0);
+        for j in 0..self.ncols {
+            let xj = x[j];
+            if xj != 0.0 {
+                let (rows, vals) = self.col(j);
+                for (&i, &v) in rows.iter().zip(vals) {
+                    out[i] += v * xj;
+                }
+            }
+        }
+    }
+
+    /// `out = Aᵀ y`.
+    pub fn matvec_t(&self, y: &[f64], out: &mut [f64]) {
+        assert_eq!(y.len(), self.nrows);
+        assert_eq!(out.len(), self.ncols);
+        for j in 0..self.ncols {
+            out[j] = self.col_dot(j, y);
+        }
+    }
+
+    /// `A_jᵀ y`.
+    #[inline]
+    pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        let (rows, vals) = self.col(j);
+        let mut acc = 0.0;
+        for (&i, &v) in rows.iter().zip(vals) {
+            acc += v * y[i];
+        }
+        acc
+    }
+
+    /// `Σ_i A_ij² w_i` — weighted squared column dot (logistic Hessian diag).
+    #[inline]
+    pub fn col_sq_weighted_dot(&self, j: usize, w: &[f64]) -> f64 {
+        let (rows, vals) = self.col(j);
+        let mut acc = 0.0;
+        for (&i, &v) in rows.iter().zip(vals) {
+            acc += v * v * w[i];
+        }
+        acc
+    }
+
+    /// `y += alpha * A_j`.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, alpha: f64, y: &mut [f64]) {
+        let (rows, vals) = self.col(j);
+        for (&i, &v) in rows.iter().zip(vals) {
+            y[i] += alpha * v;
+        }
+    }
+
+    /// Squared column norms.
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        (0..self.ncols)
+            .map(|j| {
+                let (_, vals) = self.col(j);
+                vector::nrm2_sq(vals)
+            })
+            .collect()
+    }
+
+    /// `trace(AᵀA)`.
+    pub fn gram_trace(&self) -> f64 {
+        vector::nrm2_sq(&self.values)
+    }
+
+    /// Scale a column in place.
+    pub fn scale_col(&mut self, j: usize, alpha: f64) {
+        let lo = self.colptr[j];
+        let hi = self.colptr[j + 1];
+        for v in &mut self.values[lo..hi] {
+            *v *= alpha;
+        }
+    }
+
+    /// Dense copy (tests / small problems only).
+    pub fn to_dense(&self) -> super::dense::DenseMatrix {
+        let mut d = super::dense::DenseMatrix::zeros(self.nrows, self.ncols);
+        for j in 0..self.ncols {
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                d.set(i, j, v);
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        CscMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.0), (2, 0, 4.0), (1, 1, 3.0), (0, 2, 2.0), (2, 2, 5.0)],
+        )
+    }
+
+    #[test]
+    fn construction_and_nnz() {
+        let a = sample();
+        assert_eq!(a.nnz(), 5);
+        assert!((a.density() - 5.0 / 9.0).abs() < 1e-15);
+        let (rows, vals) = a.col(0);
+        assert_eq!(rows, &[0, 2]);
+        assert_eq!(vals, &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let a = CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0)]);
+        assert_eq!(a.nnz(), 1);
+        let (_, vals) = a.col(0);
+        assert_eq!(vals, &[3.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let x = [1.0, -2.0, 0.5];
+        let mut ys = vec![0.0; 3];
+        let mut yd = vec![0.0; 3];
+        a.matvec(&x, &mut ys);
+        d.matvec(&x, &mut yd);
+        assert_eq!(ys, yd);
+    }
+
+    #[test]
+    fn matvec_t_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let y = [1.0, 2.0, 3.0];
+        let mut xs = vec![0.0; 3];
+        let mut xd = vec![0.0; 3];
+        a.matvec_t(&y, &mut xs);
+        d.matvec_t(&y, &mut xd);
+        assert_eq!(xs, xd);
+    }
+
+    #[test]
+    fn col_ops_match_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let y = [0.5, -1.0, 2.0];
+        for j in 0..3 {
+            assert!((a.col_dot(j, &y) - d.col_dot(j, &y)).abs() < 1e-14);
+        }
+        let mut rs = vec![1.0; 3];
+        let mut rd = vec![1.0; 3];
+        a.col_axpy(2, 0.5, &mut rs);
+        d.col_axpy(2, 0.5, &mut rd);
+        assert_eq!(rs, rd);
+    }
+
+    #[test]
+    fn norms_and_trace() {
+        let a = sample();
+        assert_eq!(a.col_sq_norms(), vec![17.0, 9.0, 29.0]);
+        assert_eq!(a.gram_trace(), 55.0);
+    }
+
+    #[test]
+    fn scale_col_works() {
+        let mut a = sample();
+        a.scale_col(0, 2.0);
+        let (_, vals) = a.col(0);
+        assert_eq!(vals, &[2.0, 8.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! `flexa` binary — leader entrypoint + CLI.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    match flexa::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Metrics substrate: flop accounting, per-iteration cost descriptors,
+//! convergence traces, and text tables.
+//!
+//! Every solver in this crate reports its work in flops (the paper's Fig. 3
+//! compares FLOPS directly) and in per-iteration cost descriptors that the
+//! cluster simulator turns into a simulated multi-core time axis (§4 of
+//! DESIGN.md: this container has one physical core).
+
+use crate::util::csv::CsvWriter;
+use crate::util::plot::Series;
+
+/// Cumulative flop counter with coarse categories.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Flops {
+    /// matrix-vector / column kernel flops
+    pub linalg: f64,
+    /// transcendentals (exp/log in logistic) — counted with weight
+    pub transcendental: f64,
+    /// everything else (prox, thresholds, axpy on x, …)
+    pub vector: f64,
+}
+
+impl Flops {
+    pub fn total(&self) -> f64 {
+        self.linalg + self.transcendental + self.vector
+    }
+
+    pub fn add(&mut self, other: Flops) {
+        self.linalg += other.linalg;
+        self.transcendental += other.transcendental;
+        self.vector += other.vector;
+    }
+}
+
+/// Cost of one (outer) iteration, as seen by the cluster simulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterCost {
+    /// total flops this iteration (all workers)
+    pub flops_total: f64,
+    /// flops on the most loaded worker (compute critical path)
+    pub flops_max_worker: f64,
+    /// f64 words allreduced this iteration (e.g. the m-vector residual)
+    pub reduce_words: f64,
+    /// number of reduction rounds (barriers) this iteration
+    pub reduce_rounds: f64,
+}
+
+impl IterCost {
+    /// Perfectly parallel split of `flops_total` over `p` workers with one
+    /// `words`-sized allreduce.
+    pub fn balanced(flops_total: f64, p: usize, words: f64, rounds: f64) -> Self {
+        Self {
+            flops_total,
+            flops_max_worker: flops_total / p.max(1) as f64,
+            reduce_words: words,
+            reduce_rounds: rounds,
+        }
+    }
+
+    /// Fully sequential iteration (single worker, no comm).
+    pub fn sequential(flops: f64) -> Self {
+        Self { flops_total: flops, flops_max_worker: flops, reduce_words: 0.0, reduce_rounds: 0.0 }
+    }
+}
+
+/// One point on a convergence curve.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub iter: usize,
+    /// physical wall-clock since solve start (this container: 1 core)
+    pub wall_s: f64,
+    /// simulated multi-core wall-clock (cluster cost model)
+    pub sim_s: f64,
+    /// objective V(x)
+    pub obj: f64,
+    /// relative error re(x) = (V(x) − V*)/V* when V* is known, else NaN
+    pub rel_err: f64,
+    /// stationarity merit (‖Z(x)‖∞ family), NaN if not computed
+    pub merit: f64,
+    /// number of blocks updated this iteration
+    pub active: usize,
+    /// cumulative flops
+    pub flops: f64,
+}
+
+/// Convergence trace of one solver run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub name: String,
+    pub points: Vec<TracePoint>,
+}
+
+/// Which time axis to plot against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XAxis {
+    Iterations,
+    WallTime,
+    SimTime,
+    Flops,
+}
+
+/// Which metric to plot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum YMetric {
+    RelErr,
+    Merit,
+    Objective,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn last(&self) -> Option<&TracePoint> {
+        self.points.last()
+    }
+
+    fn x_of(p: &TracePoint, axis: XAxis) -> f64 {
+        match axis {
+            XAxis::Iterations => p.iter as f64,
+            XAxis::WallTime => p.wall_s,
+            XAxis::SimTime => p.sim_s,
+            XAxis::Flops => p.flops,
+        }
+    }
+
+    fn y_of(p: &TracePoint, m: YMetric) -> f64 {
+        match m {
+            YMetric::RelErr => p.rel_err,
+            YMetric::Merit => p.merit,
+            YMetric::Objective => p.obj,
+        }
+    }
+
+    /// Convert to a plot series.
+    pub fn series(&self, axis: XAxis, metric: YMetric) -> Series {
+        Series::new(
+            self.name.clone(),
+            self.points
+                .iter()
+                .map(|p| (Self::x_of(p, axis), Self::y_of(p, metric)))
+                .filter(|(x, y)| x.is_finite() && y.is_finite())
+                .collect(),
+        )
+    }
+
+    /// First x (on `axis`) at which `metric` drops to ≤ `tol`.
+    pub fn x_to_tol(&self, axis: XAxis, metric: YMetric, tol: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| Self::y_of(p, metric) <= tol)
+            .map(|p| Self::x_of(p, axis))
+    }
+
+    /// Cumulative flops at the point where `metric` ≤ `tol`.
+    pub fn flops_to_tol(&self, metric: YMetric, tol: f64) -> Option<f64> {
+        self.points.iter().find(|p| Self::y_of(p, metric) <= tol).map(|p| p.flops)
+    }
+
+    /// Dump to CSV rows (`alg,iter,wall_s,sim_s,obj,rel_err,merit,active,flops`).
+    pub fn append_csv(&self, w: &mut CsvWriter) {
+        for p in &self.points {
+            w.row_tagged(
+                &self.name,
+                &[
+                    p.iter as f64,
+                    p.wall_s,
+                    p.sim_s,
+                    p.obj,
+                    p.rel_err,
+                    p.merit,
+                    p.active as f64,
+                    p.flops,
+                ],
+            );
+        }
+    }
+
+    /// Standard CSV header matching `append_csv`.
+    pub fn csv_header() -> [&'static str; 9] {
+        ["alg", "iter", "wall_s", "sim_s", "obj", "rel_err", "merit", "active", "flops"]
+    }
+}
+
+/// Simple aligned text table (Table I, FLOPS tables).
+#[derive(Clone, Debug, Default)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (j, c) in row.iter().enumerate() {
+                widths[j] = widths[j].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("| ");
+            for j in 0..ncols {
+                line.push_str(&format!("{:<width$} | ", cells[j], width = widths[j]));
+            }
+            line.trim_end().to_string()
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_trace() -> Trace {
+        let mut t = Trace::new("FLEXA");
+        for k in 0..10 {
+            t.push(TracePoint {
+                iter: k,
+                wall_s: k as f64 * 0.1,
+                sim_s: k as f64 * 0.01,
+                obj: 100.0 / (k + 1) as f64,
+                rel_err: (10.0f64).powi(-(k as i32)),
+                merit: (10.0f64).powi(-(k as i32) / 2),
+                active: 10 - k,
+                flops: k as f64 * 1e6,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn x_to_tol_finds_first_crossing() {
+        let t = mk_trace();
+        assert_eq!(t.x_to_tol(XAxis::Iterations, YMetric::RelErr, 1e-4), Some(4.0));
+        assert_eq!(t.x_to_tol(XAxis::WallTime, YMetric::RelErr, 1e-4), Some(0.4));
+        assert_eq!(t.x_to_tol(XAxis::Iterations, YMetric::RelErr, 1e-20), None);
+        assert_eq!(t.flops_to_tol(YMetric::RelErr, 1e-4), Some(4e6));
+    }
+
+    #[test]
+    fn series_filters_nonfinite() {
+        let mut t = Trace::new("x");
+        t.push(TracePoint {
+            iter: 0,
+            wall_s: 0.0,
+            sim_s: 0.0,
+            obj: 1.0,
+            rel_err: f64::NAN,
+            merit: 1.0,
+            active: 0,
+            flops: 0.0,
+        });
+        let s = t.series(XAxis::Iterations, YMetric::RelErr);
+        assert!(s.points.is_empty());
+    }
+
+    #[test]
+    fn csv_emission() {
+        let t = mk_trace();
+        let mut w = CsvWriter::new(&Trace::csv_header());
+        t.append_csv(&mut w);
+        assert_eq!(w.n_rows(), 10);
+    }
+
+    #[test]
+    fn iter_cost_builders() {
+        let c = IterCost::balanced(100.0, 4, 10.0, 1.0);
+        assert_eq!(c.flops_max_worker, 25.0);
+        let s = IterCost::sequential(7.0);
+        assert_eq!(s.flops_max_worker, 7.0);
+        assert_eq!(s.reduce_words, 0.0);
+    }
+
+    #[test]
+    fn flops_accumulate() {
+        let mut f = Flops::default();
+        f.add(Flops { linalg: 1.0, transcendental: 2.0, vector: 3.0 });
+        assert_eq!(f.total(), 6.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(&["data set", "m", "n"]);
+        t.row(vec!["gisette".into(), "6000".into(), "5000".into()]);
+        let s = t.render();
+        assert!(s.contains("gisette"));
+        assert!(s.lines().count() == 3);
+    }
+}

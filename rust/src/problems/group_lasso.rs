@@ -1,0 +1,275 @@
+//! Group LASSO: `min ‖Ax − b‖² + c Σ_I ‖x_I‖₂` (paper §II), blocks of size
+//! `> 1`. Exercises the framework's non-scalar block path.
+//!
+//! Best response uses the paper's *linearized* approximant
+//! `P_I(x_I; x^k) = F(x^k) + ∇_I F(x^k)ᵀ(x_I − x_I^k)` with a scaled
+//! identity proximal term `(L_I + τ)/2 ‖x_I − x_I^k‖²`, where
+//! `L_I = 2‖A_I‖_F²` upper-bounds the block curvature `λmax(2A_IᵀA_I)`.
+//! That makes the subproblem a block soft-threshold in closed form while
+//! still satisfying P1–P3 (§III).
+
+use super::Problem;
+use crate::datagen::LassoInstance;
+use crate::linalg::{vector, BlockPartition, Matrix};
+
+/// Group-LASSO problem with maintained residual.
+pub struct GroupLassoProblem {
+    a: Matrix,
+    b: Vec<f64>,
+    c: f64,
+    blocks: BlockPartition,
+    /// per-block curvature bound `L_I = 2 Σ_{j∈I} ‖A_j‖²`
+    block_lip: Vec<f64>,
+    lipschitz: f64,
+}
+
+impl GroupLassoProblem {
+    pub fn new(a: Matrix, b: Vec<f64>, c: f64, blocks: BlockPartition) -> Self {
+        assert_eq!(a.nrows(), b.len());
+        assert_eq!(blocks.dim(), a.ncols());
+        let col_sq = a.col_sq_norms();
+        let block_lip = (0..blocks.n_blocks())
+            .map(|i| 2.0 * blocks.range(i).map(|j| col_sq[j]).sum::<f64>())
+            .collect();
+        let lipschitz = a.lipschitz_2ata(30, 0xF00D);
+        Self { a, b, c, blocks, block_lip, lipschitz }
+    }
+
+    /// Build from a LASSO instance with uniform blocks of `block_size`.
+    /// (Note: the generator's `x*`/`V*` are optimal for the ℓ1 problem, not
+    /// the group problem, so no `v_star` is claimed here.)
+    pub fn from_instance(inst: LassoInstance, block_size: usize) -> Self {
+        let n = inst.a.ncols();
+        Self::new(inst.a, inst.b, inst.c, BlockPartition::uniform(n, block_size))
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+}
+
+impl Problem for GroupLassoProblem {
+    fn n(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn aux_len(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn blocks(&self) -> &BlockPartition {
+        &self.blocks
+    }
+
+    fn init_aux(&self, x: &[f64], aux: &mut [f64]) {
+        self.a.matvec(x, aux);
+        for (r, bi) in aux.iter_mut().zip(&self.b) {
+            *r -= bi;
+        }
+    }
+
+    fn f_val(&self, _x: &[f64], aux: &[f64]) -> f64 {
+        vector::nrm2_sq(aux)
+    }
+
+    fn g_val(&self, x: &[f64]) -> f64 {
+        (0..self.blocks.n_blocks())
+            .map(|i| self.c * vector::nrm2(&x[self.blocks.range(i)]))
+            .sum()
+    }
+
+    fn block_grad(&self, i: usize, _x: &[f64], aux: &[f64], out: &mut [f64]) {
+        for (k, j) in self.blocks.range(i).enumerate() {
+            out[k] = 2.0 * self.a.col_dot(j, aux);
+        }
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        let range = self.blocks.range(i);
+        let bsize = range.len();
+        debug_assert_eq!(out.len(), bsize);
+        let denom = self.block_lip[i] + tau;
+        debug_assert!(denom > 0.0);
+        // v = x_I − ∇_I F / denom, then block soft-threshold with c/denom
+        let mut v = vec![0.0; bsize];
+        for (k, j) in range.clone().enumerate() {
+            let g = 2.0 * self.a.col_dot(j, aux);
+            v[k] = x[range.start + k] - g / denom;
+        }
+        vector::block_soft_threshold(&v, self.c / denom, out);
+        let mut e2 = 0.0;
+        for (k, j) in range.enumerate() {
+            let d = out[k] - x[j];
+            e2 += d * d;
+        }
+        e2.sqrt()
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        for (k, j) in self.blocks.range(i).enumerate() {
+            if delta[k] != 0.0 {
+                self.a.col_axpy(j, delta[k], aux);
+            }
+        }
+    }
+
+    fn grad_full(&self, _x: &[f64], aux: &[f64], out: &mut [f64]) {
+        self.a.matvec_t(aux, out);
+        vector::scale(2.0, out);
+    }
+
+    fn prox_full(&self, v: &[f64], step: f64, out: &mut [f64]) {
+        for i in 0..self.blocks.n_blocks() {
+            let r = self.blocks.range(i);
+            let (vi, oi) = (&v[r.clone()], &mut out[r]);
+            vector::block_soft_threshold(vi, step * self.c, oi);
+        }
+    }
+
+    fn merit(&self, x: &[f64], aux: &[f64]) -> f64 {
+        // natural-residual merit for the group norm: per block,
+        // ‖x_I − prox_{c‖·‖}(x_I − ∇_I F)‖∞ over blocks
+        let mut g = vec![0.0; self.n()];
+        self.grad_full(x, aux, &mut g);
+        let mut worst = 0.0f64;
+        for i in 0..self.blocks.n_blocks() {
+            let r = self.blocks.range(i);
+            let v: Vec<f64> = r.clone().map(|j| x[j] - g[j]).collect();
+            let mut p = vec![0.0; v.len()];
+            vector::block_soft_threshold(&v, self.c, &mut p);
+            let d: f64 = r
+                .clone()
+                .enumerate()
+                .map(|(k, j)| (x[j] - p[k]).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            worst = worst.max(d);
+        }
+        worst
+    }
+
+    fn tau_init(&self) -> f64 {
+        self.a.gram_trace() / (2.0 * self.n() as f64)
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.lipschitz
+    }
+
+    fn flops_best_response(&self, i: usize) -> f64 {
+        let cols: f64 = self.blocks.range(i).map(|j| self.a.col_nnz(j) as f64).sum();
+        2.0 * cols + 8.0 * self.blocks.size(i) as f64
+    }
+
+    fn flops_aux_update(&self, i: usize) -> f64 {
+        2.0 * self.blocks.range(i).map(|j| self.a.col_nnz(j) as f64).sum::<f64>()
+    }
+
+    fn flops_grad_full(&self) -> f64 {
+        2.0 * self.a.nnz() as f64 + self.n() as f64
+    }
+
+    fn flops_obj(&self) -> f64 {
+        2.0 * (self.aux_len() + self.n()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::nesterov_lasso;
+
+    fn small() -> GroupLassoProblem {
+        GroupLassoProblem::from_instance(nesterov_lasso(20, 24, 0.2, 1.0, 55), 4)
+    }
+
+    #[test]
+    fn blocks_are_grouped() {
+        let p = small();
+        assert_eq!(p.blocks().n_blocks(), 6);
+        assert_eq!(p.blocks().size(0), 4);
+    }
+
+    #[test]
+    fn g_val_is_sum_of_block_norms() {
+        let p = small();
+        let mut x = vec![0.0; p.n()];
+        x[0] = 3.0;
+        x[1] = 4.0; // block 0 norm 5
+        x[4] = 1.0; // block 1 norm 1
+        assert!((p.g_val(&x) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_response_improves_surrogate() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(12);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.3).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let tau = 1.0;
+        for i in 0..p.blocks().n_blocks() {
+            let r = p.blocks().range(i);
+            let mut z = vec![0.0; r.len()];
+            let e = p.best_response(i, &x, &aux, tau, &mut z);
+            // surrogate value at z must be ≤ at x_I (z is its minimizer)
+            let mut g = vec![0.0; r.len()];
+            p.block_grad(i, &x, &aux, &mut g);
+            let denom = p.block_lip[i] + tau;
+            let s = |u: &[f64]| -> f64 {
+                let mut acc = 0.0;
+                for k in 0..u.len() {
+                    let d = u[k] - x[r.start + k];
+                    acc += g[k] * d + 0.5 * denom * d * d;
+                }
+                acc + p.c() * vector::nrm2(u)
+            };
+            let xi: Vec<f64> = r.clone().map(|j| x[j]).collect();
+            assert!(s(&z) <= s(&xi) + 1e-10, "block {i}");
+            assert!(e >= 0.0);
+        }
+    }
+
+    #[test]
+    fn incremental_aux_matches() {
+        let p = small();
+        let mut x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let delta = [0.3, -0.2, 0.0, 0.15];
+        for (k, j) in p.blocks().range(2).enumerate() {
+            x[j] += delta[k];
+        }
+        p.apply_block_delta(2, &delta, &mut aux);
+        let mut fresh = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut fresh);
+        assert!(vector::dist2(&aux, &fresh) < 1e-10);
+    }
+
+    #[test]
+    fn merit_decreases_under_gs_sweeps() {
+        let p = small();
+        let mut x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let m0 = p.merit(&x, &aux);
+        // the linearized approximant with the Frobenius curvature bound is
+        // conservative ⇒ geometric but slow; use a light τ and more sweeps
+        let tau = 0.1 * p.tau_init();
+        for _ in 0..2000 {
+            for i in 0..p.blocks().n_blocks() {
+                let r = p.blocks().range(i);
+                let mut z = vec![0.0; r.len()];
+                p.best_response(i, &x, &aux, tau, &mut z);
+                let delta: Vec<f64> =
+                    r.clone().enumerate().map(|(k, j)| z[k] - x[j]).collect();
+                for (k, j) in r.clone().enumerate() {
+                    x[j] = z[k];
+                }
+                p.apply_block_delta(i, &delta, &mut aux);
+            }
+        }
+        let m1 = p.merit(&x, &aux);
+        assert!(m1 < m0 * 0.02, "merit {m0} -> {m1}");
+    }
+}

@@ -1,0 +1,296 @@
+//! LASSO: `min ‖Ax − b‖² + c‖x‖₁` (paper §II, §VI-A; Fig. 1 & 2).
+//!
+//! Scalar blocks. The auxiliary state is the residual `r = Ax − b`:
+//!
+//! * `F(x) = ‖r‖²` — O(m) from the maintained residual;
+//! * `∇_i F = 2 A_iᵀ r` — one column dot;
+//! * best response (paper §IV, Example #2 with `P_i(x_i;x^k) = F(x_i,
+//!   x_{−i}^k)`, i.e. the *exact* scalar subproblem, sharper than a plain
+//!   linearization):
+//!   `x̂_i = ST(x_i − ∇_iF/(2d_i + τ), c/(2d_i + τ))` with `d_i = ‖A_i‖²`;
+//! * selective updates: `r += δ_i A_i` — one column axpy per moved block.
+
+use super::Problem;
+use crate::datagen::LassoInstance;
+use crate::linalg::{vector, BlockPartition, Matrix};
+
+/// LASSO problem with maintained residual.
+pub struct LassoProblem {
+    a: Matrix,
+    b: Vec<f64>,
+    c: f64,
+    /// squared column norms `d_j = ‖A_j‖²`
+    col_sq: Vec<f64>,
+    blocks: BlockPartition,
+    v_star: Option<f64>,
+    lipschitz: f64,
+}
+
+impl LassoProblem {
+    pub fn new(a: Matrix, b: Vec<f64>, c: f64, v_star: Option<f64>) -> Self {
+        assert_eq!(a.nrows(), b.len());
+        assert!(c > 0.0);
+        let n = a.ncols();
+        let col_sq = a.col_sq_norms();
+        let lipschitz = a.lipschitz_2ata(30, 0x5EED);
+        Self { a, b, c, col_sq, blocks: BlockPartition::scalar(n), v_star, lipschitz }
+    }
+
+    pub fn from_instance(inst: LassoInstance) -> Self {
+        let v_star = Some(inst.v_star);
+        Self::new(inst.a, inst.b, inst.c, v_star)
+    }
+
+    pub fn matrix(&self) -> &Matrix {
+        &self.a
+    }
+
+    pub fn rhs(&self) -> &[f64] {
+        &self.b
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+
+    pub fn col_sq_norms(&self) -> &[f64] {
+        &self.col_sq
+    }
+}
+
+impl Problem for LassoProblem {
+    fn n(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn aux_len(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn blocks(&self) -> &BlockPartition {
+        &self.blocks
+    }
+
+    fn init_aux(&self, x: &[f64], aux: &mut [f64]) {
+        self.a.matvec(x, aux);
+        for (r, bi) in aux.iter_mut().zip(&self.b) {
+            *r -= bi;
+        }
+    }
+
+    fn f_val(&self, _x: &[f64], aux: &[f64]) -> f64 {
+        vector::nrm2_sq(aux)
+    }
+
+    fn g_val(&self, x: &[f64]) -> f64 {
+        self.c * vector::nrm1(x)
+    }
+
+    fn block_grad(&self, i: usize, _x: &[f64], aux: &[f64], out: &mut [f64]) {
+        out[0] = 2.0 * self.a.col_dot(i, aux);
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        let g = 2.0 * self.a.col_dot(i, aux);
+        let denom = 2.0 * self.col_sq[i] + tau;
+        debug_assert!(denom > 0.0, "degenerate column {i} with tau = {tau}");
+        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        if delta[0] != 0.0 {
+            self.a.col_axpy(i, delta[0], aux);
+        }
+    }
+
+    fn grad_full(&self, _x: &[f64], aux: &[f64], out: &mut [f64]) {
+        self.a.matvec_t(aux, out);
+        vector::scale(2.0, out);
+    }
+
+    fn prox_full(&self, v: &[f64], step: f64, out: &mut [f64]) {
+        vector::soft_threshold_vec(v, step * self.c, out);
+    }
+
+    fn merit(&self, x: &[f64], aux: &[f64]) -> f64 {
+        let mut g = vec![0.0; self.n()];
+        self.grad_full(x, aux, &mut g);
+        super::l1_merit_inf(&g, x, self.c, None)
+    }
+
+    fn tau_init(&self) -> f64 {
+        // paper §VI-A: τ_i = tr(AᵀA)/2n
+        self.a.gram_trace() / (2.0 * self.n() as f64)
+    }
+
+    fn v_star(&self) -> Option<f64> {
+        self.v_star
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.lipschitz
+    }
+
+    fn flops_best_response(&self, i: usize) -> f64 {
+        // column dot + soft-threshold
+        2.0 * self.a.col_nnz(i) as f64 + 6.0
+    }
+
+    fn flops_aux_update(&self, i: usize) -> f64 {
+        2.0 * self.a.col_nnz(i) as f64
+    }
+
+    fn flops_grad_full(&self) -> f64 {
+        2.0 * self.a.nnz() as f64 + self.n() as f64
+    }
+
+    fn flops_obj(&self) -> f64 {
+        2.0 * (self.aux_len() + self.n()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::nesterov_lasso;
+
+    fn small() -> LassoProblem {
+        LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 42))
+    }
+
+    #[test]
+    fn aux_is_residual() {
+        let p = small();
+        let x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        for (ai, bi) in aux.iter().zip(p.rhs()) {
+            assert!((ai + bi).abs() < 1e-12); // r = -b at x = 0
+        }
+        // objective at zero = ‖b‖²
+        assert!((p.f_val(&x, &aux) - vector::nrm2_sq(p.rhs())).abs() < 1e-10);
+        assert_eq!(p.g_val(&x), 0.0);
+    }
+
+    #[test]
+    fn block_grad_matches_full_grad() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(9);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal()).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut gfull = vec![0.0; p.n()];
+        p.grad_full(&x, &aux, &mut gfull);
+        for i in 0..p.n() {
+            let mut gi = [0.0];
+            p.block_grad(i, &x, &aux, &mut gi);
+            assert!((gi[0] - gfull[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(17);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.3).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut g = vec![0.0; p.n()];
+        p.grad_full(&x, &aux, &mut g);
+        let h = 1e-6;
+        for i in [0, 7, 29] {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut auxp = vec![0.0; p.aux_len()];
+            p.init_aux(&xp, &mut auxp);
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let mut auxm = vec![0.0; p.aux_len()];
+            p.init_aux(&xm, &mut auxm);
+            let fd = (p.f_val(&xp, &auxp) - p.f_val(&xm, &auxm)) / (2.0 * h);
+            assert!((fd - g[i]).abs() < 1e-4, "i={i} fd={fd} g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn best_response_solves_scalar_subproblem() {
+        // x̂_i minimizes q(u) = F(u, x_{-i}) + τ/2 (u-x_i)² + c|u|; check by
+        // sampling around the returned point.
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(3);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.5).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let tau = 0.7;
+        let q = |i: usize, u: f64| -> f64 {
+            let mut xt = x.clone();
+            xt[i] = u;
+            let mut at = vec![0.0; p.aux_len()];
+            p.init_aux(&xt, &mut at);
+            p.f_val(&xt, &at) + tau / 2.0 * (u - x[i]).powi(2) + p.c() * u.abs()
+        };
+        for i in [0, 5, 13] {
+            let mut z = [0.0];
+            let e = p.best_response(i, &x, &aux, tau, &mut z);
+            assert!((e - (z[0] - x[i]).abs()).abs() < 1e-12);
+            let qz = q(i, z[0]);
+            for du in [-0.01, 0.01, -0.1, 0.1] {
+                assert!(q(i, z[0] + du) >= qz - 1e-9, "i={i} du={du}");
+            }
+        }
+    }
+
+    #[test]
+    fn best_response_fixed_point_at_optimum() {
+        // At x* from the Nesterov generator, x̂(x*) = x* (Prop. 8b).
+        let inst = nesterov_lasso(25, 40, 0.1, 1.0, 5);
+        let x_star = inst.x_star.clone();
+        let p = LassoProblem::from_instance(inst);
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x_star, &mut aux);
+        let mut z = [0.0];
+        for i in 0..p.n() {
+            let e = p.best_response(i, &x_star, &aux, 1.0, &mut z);
+            assert!(e < 1e-9, "block {i}: E_i = {e}");
+        }
+        // merit is ~0 at the optimum
+        assert!(p.merit(&x_star, &aux) < 1e-9);
+    }
+
+    #[test]
+    fn incremental_aux_matches_recompute() {
+        let p = small();
+        let mut x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(8);
+        for _ in 0..50 {
+            let i = rng.next_usize(p.n());
+            let d = rng.next_normal() * 0.2;
+            x[i] += d;
+            p.apply_block_delta(i, &[d], &mut aux);
+        }
+        let mut fresh = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut fresh);
+        assert!(vector::dist2(&aux, &fresh) < 1e-9);
+    }
+
+    #[test]
+    fn tau_init_matches_paper_formula() {
+        let p = small();
+        let expect = p.matrix().gram_trace() / (2.0 * p.n() as f64);
+        assert!((p.tau_init() - expect).abs() < 1e-12);
+        assert!(p.tau_init() > 0.0);
+    }
+
+    #[test]
+    fn flop_accounting_positive() {
+        let p = small();
+        assert!(p.flops_best_response(0) > 0.0);
+        assert!(p.flops_aux_update(0) > 0.0);
+        assert!(p.flops_grad_full() > p.flops_best_response(0));
+        assert!(p.flops_obj() > 0.0);
+    }
+}

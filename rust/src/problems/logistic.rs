@@ -1,0 +1,466 @@
+//! Sparse logistic regression: `min Σ_j log(1 + e^{−a_j y_jᵀ x}) + c‖x‖₁`
+//! (paper §II, §VI-B; Fig. 3, Table I).
+//!
+//! Scalar blocks. We fold the labels into the data at construction,
+//! `Ỹ_{ji} = a_j Y_{ji}`, so the auxiliary state is the margin vector
+//! `u = Ỹ x` and
+//!
+//! * `F(x) = Σ_j log1p(e^{−u_j})`;
+//! * `∇F(x) = −Ỹᵀ σ(−u)` with `σ(s) = 1/(1+e^{−s})`;
+//! * the paper's approximant (Example #3) is the **second-order** expansion
+//!   of `F(x_i, x_{−i}^k)`: with `g_i = ∇_i F` and
+//!   `h_i = Σ_j Ỹ_{ji}² σ(−u_j)σ(u_j)` (Hessian diagonal),
+//!   `x̂_i = ST(x_i − g_i/(h_i + τ), c/(h_i + τ))` — a damped Newton step
+//!   through the soft threshold, computable in closed form.
+//!
+//! The per-iteration weights `w_j = σ(−u_j)` and `q_j = w_j(1−w_j)` are
+//! shared by all blocks, so the coordinator computes them once per outer
+//! iteration via [`LogisticProblem::weights_into`] (this is the "extra
+//! calculations for the latest information" trade-off the paper discusses
+//! for Gauss-Seidel variants — the cost model charges for it).
+
+use super::Problem;
+use crate::datagen::LogisticInstance;
+use crate::linalg::{vector, BlockPartition, Matrix};
+
+/// ℓ1-regularized logistic regression with maintained margins.
+pub struct LogisticProblem {
+    /// label-scaled data `Ỹ` (m×n)
+    y: Matrix,
+    c: f64,
+    blocks: BlockPartition,
+    lipschitz: f64,
+    name: String,
+    /// optional reference value for re(x) plots (estimated offline)
+    v_star: Option<f64>,
+}
+
+/// Numerically-stable `log(1 + e^{−u})`.
+#[inline]
+pub fn log1p_exp_neg(u: f64) -> f64 {
+    if u > 0.0 {
+        (-u).exp().ln_1p()
+    } else {
+        -u + u.exp().ln_1p()
+    }
+}
+
+/// Stable `σ(−u) = 1/(1+e^{u})`.
+#[inline]
+pub fn sigma_neg(u: f64) -> f64 {
+    if u >= 0.0 {
+        let e = (-u).exp();
+        e / (1.0 + e)
+    } else {
+        1.0 / (1.0 + u.exp())
+    }
+}
+
+impl LogisticProblem {
+    /// Build from raw data: `y` is m×n (rows = samples), labels in {−1,+1}.
+    pub fn new(mut y: Matrix, labels: &[f64], c: f64, name: impl Into<String>) -> Self {
+        assert_eq!(y.nrows(), labels.len());
+        assert!(c > 0.0);
+        // fold labels into rows: Ỹ = diag(a) Y. Column-major storage means
+        // per-row scaling is a strided pass; do it via dense/sparse cases.
+        match &mut y {
+            Matrix::Dense(d) => {
+                for j in 0..d.ncols() {
+                    let col = d.col_mut(j);
+                    for (i, v) in col.iter_mut().enumerate() {
+                        *v *= labels[i];
+                    }
+                }
+            }
+            Matrix::Sparse(_) => {
+                // rebuild triplets with scaled values
+                let dense_equiv = None::<()>;
+                let _ = dense_equiv;
+                y = scale_sparse_rows(y, labels);
+            }
+        }
+        let n = y.ncols();
+        // L_∇F = λmax(ỸᵀỸ)/4 ≤ tr(ỸᵀỸ)/4 (cheap, safe upper bound)
+        let lipschitz = y.gram_trace() / 4.0;
+        Self {
+            y,
+            c,
+            blocks: BlockPartition::scalar(n),
+            lipschitz,
+            name: name.into(),
+            v_star: None,
+        }
+    }
+
+    pub fn from_instance(inst: LogisticInstance) -> Self {
+        let name = inst.name.clone();
+        Self::new(inst.y, &inst.labels, inst.c, name)
+    }
+
+    /// Attach a reference optimal value (paper §VI-B estimates V* by running
+    /// GJ-FLEXA to ‖Z‖∞ ≤ 1e−7 first).
+    pub fn set_v_star(&mut self, v: f64) {
+        self.v_star = Some(v);
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn m(&self) -> usize {
+        self.y.nrows()
+    }
+
+    pub fn matrix(&self) -> &Matrix {
+        &self.y
+    }
+
+    /// Compute the shared per-sample weights from the margins:
+    /// `w_j = σ(−u_j)` (gradient weights), `q_j = w_j(1−w_j)` (Hessian).
+    pub fn weights_into(&self, aux: &[f64], w: &mut [f64], q: &mut [f64]) {
+        debug_assert_eq!(aux.len(), w.len());
+        debug_assert_eq!(aux.len(), q.len());
+        for j in 0..aux.len() {
+            let s = sigma_neg(aux[j]);
+            w[j] = s;
+            q[j] = s * (1.0 - s);
+        }
+    }
+
+    /// Best response given precomputed weights (the coordinator's fast path;
+    /// `best_response` below recomputes weights for trait-level correctness).
+    pub fn best_response_weighted(
+        &self,
+        i: usize,
+        x: &[f64],
+        w: &[f64],
+        q: &[f64],
+        tau: f64,
+    ) -> f64 {
+        let g = -self.y.col_dot(i, w);
+        let h = self.y.col_sq_weighted_dot(i, q);
+        let denom = h + tau;
+        vector::soft_threshold(x[i] - g / denom, self.c / denom)
+    }
+
+    /// Flops of the shared weight pass (exp ≈ 4 flops each).
+    pub fn flops_weights(&self) -> f64 {
+        6.0 * self.m() as f64
+    }
+}
+
+fn scale_sparse_rows(y: Matrix, labels: &[f64]) -> Matrix {
+    match y {
+        Matrix::Sparse(s) => {
+            let (m, n) = (s.nrows(), s.ncols());
+            let mut triplets = Vec::with_capacity(s.nnz());
+            for j in 0..n {
+                let (rows, vals) = s.col(j);
+                for (&i, &v) in rows.iter().zip(vals) {
+                    triplets.push((i, j, v * labels[i]));
+                }
+            }
+            Matrix::Sparse(crate::linalg::CscMatrix::from_triplets(m, n, &triplets))
+        }
+        other => other,
+    }
+}
+
+impl Problem for LogisticProblem {
+    fn n(&self) -> usize {
+        self.y.ncols()
+    }
+
+    fn aux_len(&self) -> usize {
+        self.y.nrows()
+    }
+
+    fn blocks(&self) -> &BlockPartition {
+        &self.blocks
+    }
+
+    fn init_aux(&self, x: &[f64], aux: &mut [f64]) {
+        self.y.matvec(x, aux);
+    }
+
+    fn f_val(&self, _x: &[f64], aux: &[f64]) -> f64 {
+        aux.iter().map(|&u| log1p_exp_neg(u)).sum()
+    }
+
+    fn g_val(&self, x: &[f64]) -> f64 {
+        self.c * vector::nrm1(x)
+    }
+
+    fn block_grad(&self, i: usize, _x: &[f64], aux: &[f64], out: &mut [f64]) {
+        // ∇_i F = −Σ_j Ỹ_{ji} σ(−u_j); recompute weights locally (trait
+        // path; the coordinator uses `best_response_weighted`)
+        let mut acc = 0.0;
+        match &self.y {
+            Matrix::Dense(d) => {
+                let col = d.col(i);
+                for (v, &u) in col.iter().zip(aux) {
+                    acc += v * sigma_neg(u);
+                }
+            }
+            Matrix::Sparse(s) => {
+                let (rows, vals) = s.col(i);
+                for (&r, &v) in rows.iter().zip(vals) {
+                    acc += v * sigma_neg(aux[r]);
+                }
+            }
+        }
+        out[0] = -acc;
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        let (mut g, mut h) = (0.0, 0.0);
+        match &self.y {
+            Matrix::Dense(d) => {
+                let col = d.col(i);
+                for (v, &u) in col.iter().zip(aux) {
+                    let s = sigma_neg(u);
+                    g -= v * s;
+                    h += v * v * s * (1.0 - s);
+                }
+            }
+            Matrix::Sparse(sp) => {
+                let (rows, vals) = sp.col(i);
+                for (&r, &v) in rows.iter().zip(vals) {
+                    let s = sigma_neg(aux[r]);
+                    g -= v * s;
+                    h += v * v * s * (1.0 - s);
+                }
+            }
+        }
+        let denom = h + tau;
+        debug_assert!(denom > 0.0);
+        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn prelude_len(&self) -> usize {
+        2 * self.m()
+    }
+
+    fn prelude(&self, _x: &[f64], aux: &[f64], scratch: &mut [f64]) {
+        let m = self.m();
+        let (w, q) = scratch.split_at_mut(m);
+        self.weights_into(aux, w, q);
+    }
+
+    fn best_response_with(
+        &self,
+        i: usize,
+        x: &[f64],
+        _aux: &[f64],
+        scratch: &[f64],
+        tau: f64,
+        out: &mut [f64],
+    ) -> f64 {
+        let m = self.m();
+        let (w, q) = scratch.split_at(m);
+        let z = self.best_response_weighted(i, x, w, q, tau);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn flops_prelude(&self) -> f64 {
+        self.flops_weights()
+    }
+
+    fn flops_best_response_fresh(&self, i: usize) -> f64 {
+        // per stored entry: exp (≈4) + sigma + g and h accumulation
+        9.0 * self.y.col_nnz(i) as f64 + 8.0
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        if delta[0] != 0.0 {
+            self.y.col_axpy(i, delta[0], aux);
+        }
+    }
+
+    fn grad_full(&self, _x: &[f64], aux: &[f64], out: &mut [f64]) {
+        let w: Vec<f64> = aux.iter().map(|&u| sigma_neg(u)).collect();
+        self.y.matvec_t(&w, out);
+        vector::scale(-1.0, out);
+    }
+
+    fn prox_full(&self, v: &[f64], step: f64, out: &mut [f64]) {
+        vector::soft_threshold_vec(v, step * self.c, out);
+    }
+
+    fn merit(&self, x: &[f64], aux: &[f64]) -> f64 {
+        // paper §VI-B: ‖Z(x)‖∞ with Z = ∇F − Π_{[-c,c]^n}(∇F − x)
+        let mut g = vec![0.0; self.n()];
+        self.grad_full(x, aux, &mut g);
+        super::l1_merit_inf(&g, x, self.c, None)
+    }
+
+    fn tau_init(&self) -> f64 {
+        // paper §VI-B: τ_i = tr(YᵀY)/2n
+        self.y.gram_trace() / (2.0 * self.n() as f64)
+    }
+
+    fn v_star(&self) -> Option<f64> {
+        self.v_star
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.lipschitz
+    }
+
+    fn flops_best_response(&self, i: usize) -> f64 {
+        // fast path: two fused column passes over precomputed weights
+        4.0 * self.y.col_nnz(i) as f64 + 8.0
+    }
+
+    fn flops_aux_update(&self, i: usize) -> f64 {
+        2.0 * self.y.col_nnz(i) as f64
+    }
+
+    fn flops_grad_full(&self) -> f64 {
+        2.0 * self.y.nnz() as f64 + self.flops_weights()
+    }
+
+    fn flops_obj(&self) -> f64 {
+        5.0 * self.aux_len() as f64 + 2.0 * self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{logistic_like, LogisticPreset};
+
+    fn small() -> LogisticProblem {
+        LogisticProblem::from_instance(logistic_like(LogisticPreset::Gisette, 0.01, 77))
+    }
+
+    #[test]
+    fn stable_scalar_helpers() {
+        assert!((log1p_exp_neg(0.0) - (2.0f64).ln()).abs() < 1e-12);
+        assert!(log1p_exp_neg(800.0) < 1e-300); // no overflow
+        assert!(log1p_exp_neg(-800.0) > 799.0); // ≈ −u
+        assert!((sigma_neg(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigma_neg(800.0) < 1e-300);
+        assert!((sigma_neg(-800.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(1);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.2).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut g = vec![0.0; p.n()];
+        p.grad_full(&x, &aux, &mut g);
+        let h = 1e-6;
+        for i in [0, 3, p.n() - 1] {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut ap = vec![0.0; p.aux_len()];
+            p.init_aux(&xp, &mut ap);
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let mut am = vec![0.0; p.aux_len()];
+            p.init_aux(&xm, &mut am);
+            let fd = (p.f_val(&xp, &ap) - p.f_val(&xm, &am)) / (2.0 * h);
+            assert!((fd - g[i]).abs() < 1e-5, "i={i}: fd={fd} vs g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn block_grad_consistent_with_full() {
+        let p = small();
+        let x = vec![0.1; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut gfull = vec![0.0; p.n()];
+        p.grad_full(&x, &aux, &mut gfull);
+        let mut gi = [0.0];
+        for i in (0..p.n()).step_by(7) {
+            p.block_grad(i, &x, &aux, &mut gi);
+            assert!((gi[0] - gfull[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn weighted_fast_path_matches_trait_path() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(2);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.1).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut w = vec![0.0; p.aux_len()];
+        let mut q = vec![0.0; p.aux_len()];
+        p.weights_into(&aux, &mut w, &mut q);
+        for i in (0..p.n()).step_by(11) {
+            let fast = p.best_response_weighted(i, &x, &w, &q, 0.9);
+            let mut z = [0.0];
+            p.best_response(i, &x, &aux, 0.9, &mut z);
+            assert!((fast - z[0]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn best_response_decreases_model_and_is_descent() {
+        // The damped Newton + soft threshold step must not increase the true
+        // objective by much for a small relax factor; check V decrease along
+        // the direction (Prop. 8c is about the full direction; here scalar).
+        let p = small();
+        let x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let v0 = p.v_val(&x, &aux);
+        // take one full-Jacobi best-response step with gamma = 0.1
+        let mut xn = x.clone();
+        let mut z = [0.0];
+        for i in 0..p.n() {
+            p.best_response(i, &x, &aux, p.tau_init(), &mut z);
+            xn[i] = x[i] + 0.1 * (z[0] - x[i]);
+        }
+        let mut auxn = vec![0.0; p.aux_len()];
+        p.init_aux(&xn, &mut auxn);
+        let v1 = p.v_val(&xn, &auxn);
+        assert!(v1 <= v0 + 1e-9, "V increased: {v0} -> {v1}");
+    }
+
+    #[test]
+    fn incremental_margins_match_recompute() {
+        let p = small();
+        let mut x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(4);
+        for _ in 0..40 {
+            let i = rng.next_usize(p.n());
+            let d = rng.next_normal() * 0.1;
+            x[i] += d;
+            p.apply_block_delta(i, &[d], &mut aux);
+        }
+        let mut fresh = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut fresh);
+        assert!(vector::dist2(&aux, &fresh) < 1e-9);
+    }
+
+    #[test]
+    fn sparse_instance_works() {
+        let p = LogisticProblem::from_instance(logistic_like(LogisticPreset::RealSim, 0.005, 31));
+        assert!(p.matrix().is_sparse());
+        let x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        // F(0) = m·log 2
+        let expect = p.aux_len() as f64 * (2.0f64).ln();
+        assert!((p.f_val(&x, &aux) - expect).abs() < 1e-8);
+        let mut z = [0.0];
+        let e = p.best_response(0, &x, &aux, p.tau_init(), &mut z);
+        assert!(e.is_finite());
+    }
+}

@@ -1,0 +1,306 @@
+//! Nonconvex box-constrained quadratic — problem (13) of the paper (§VI-C;
+//! Fig. 4 & 5):
+//!
+//! ```text
+//! min  ‖Ax − b‖² − c̄‖x‖²  +  c‖x‖₁     s.t.  −β ≤ x_i ≤ β
+//! ```
+//!
+//! `F` is (markedly) nonconvex: its Hessian is `2AᵀA − 2c̄ I`. Scalar
+//! blocks; the auxiliary state is the residual `r = Ax − b` as in LASSO.
+//!
+//! * `∇_i F = 2A_iᵀ r − 2c̄ x_i`;
+//! * per the paper, τ is kept above `tau_min()` so the scalar subproblems
+//!   `q(u) = ∇_iF·(u−x_i) + ½(d_i + τ)(u−x_i)² + c|u|` with
+//!   `d_i = 2‖A_i‖² − 2c̄` (the exact second-order term) are strongly
+//!   convex and solved in closed form: soft-threshold then box clamp
+//!   (for a 1-D convex objective the box solution is the projection of the
+//!   unconstrained minimizer).
+
+use super::Problem;
+use crate::datagen::NonconvexQpInstance;
+use crate::linalg::{vector, BlockPartition, Matrix};
+
+/// Nonconvex quadratic with box constraints and maintained residual.
+pub struct NonconvexQpProblem {
+    a: Matrix,
+    b: Vec<f64>,
+    c: f64,
+    cbar: f64,
+    box_bound: f64,
+    col_sq: Vec<f64>,
+    blocks: BlockPartition,
+    lipschitz: f64,
+    /// reference value for re(x) plots (all solvers converge to the same
+    /// stationary point in the paper's tests; estimated offline)
+    v_star: Option<f64>,
+}
+
+impl NonconvexQpProblem {
+    pub fn new(a: Matrix, b: Vec<f64>, c: f64, cbar: f64, box_bound: f64) -> Self {
+        assert_eq!(a.nrows(), b.len());
+        assert!(c > 0.0 && cbar > 0.0 && box_bound > 0.0);
+        let n = a.ncols();
+        let col_sq = a.col_sq_norms();
+        let lipschitz = a.lipschitz_2ata(30, 0xBEEF) + 2.0 * cbar;
+        Self {
+            a,
+            b,
+            c,
+            cbar,
+            box_bound,
+            col_sq,
+            blocks: BlockPartition::scalar(n),
+            lipschitz,
+            v_star: None,
+        }
+    }
+
+    pub fn from_instance(inst: NonconvexQpInstance) -> Self {
+        Self::new(inst.a, inst.b, inst.c, inst.cbar, inst.box_bound)
+    }
+
+    pub fn set_v_star(&mut self, v: f64) {
+        self.v_star = Some(v);
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+
+    pub fn cbar(&self) -> f64 {
+        self.cbar
+    }
+
+    pub fn box_bound(&self) -> f64 {
+        self.box_bound
+    }
+}
+
+impl Problem for NonconvexQpProblem {
+    fn n(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn aux_len(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn blocks(&self) -> &BlockPartition {
+        &self.blocks
+    }
+
+    fn init_aux(&self, x: &[f64], aux: &mut [f64]) {
+        self.a.matvec(x, aux);
+        for (r, bi) in aux.iter_mut().zip(&self.b) {
+            *r -= bi;
+        }
+    }
+
+    fn f_val(&self, x: &[f64], aux: &[f64]) -> f64 {
+        vector::nrm2_sq(aux) - self.cbar * vector::nrm2_sq(x)
+    }
+
+    fn g_val(&self, x: &[f64]) -> f64 {
+        self.c * vector::nrm1(x)
+    }
+
+    fn block_grad(&self, i: usize, x: &[f64], aux: &[f64], out: &mut [f64]) {
+        out[0] = 2.0 * self.a.col_dot(i, aux) - 2.0 * self.cbar * x[i];
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        debug_assert!(
+            tau >= self.tau_min(),
+            "tau = {tau} below tau_min = {} — subproblem may be nonconvex",
+            self.tau_min()
+        );
+        let g = 2.0 * self.a.col_dot(i, aux) - 2.0 * self.cbar * x[i];
+        let d = 2.0 * self.col_sq[i] - 2.0 * self.cbar; // exact curvature
+        let denom = d + tau;
+        debug_assert!(denom > 0.0);
+        let unclamped = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        let z = unclamped.clamp(-self.box_bound, self.box_bound);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        if delta[0] != 0.0 {
+            self.a.col_axpy(i, delta[0], aux);
+        }
+    }
+
+    fn grad_full(&self, x: &[f64], aux: &[f64], out: &mut [f64]) {
+        self.a.matvec_t(aux, out);
+        for (o, xi) in out.iter_mut().zip(x) {
+            *o = 2.0 * *o - 2.0 * self.cbar * xi;
+        }
+    }
+
+    fn prox_full(&self, v: &[f64], step: f64, out: &mut [f64]) {
+        // prox of step·c‖·‖₁ + δ_[−β,β]: soft-threshold then clamp
+        for (o, &vi) in out.iter_mut().zip(v) {
+            *o = vector::soft_threshold(vi, step * self.c)
+                .clamp(-self.box_bound, self.box_bound);
+        }
+    }
+
+    fn merit(&self, x: &[f64], aux: &[f64]) -> f64 {
+        // paper §VI-C: ‖Z̄(x)‖∞ — the ℓ1 merit with components zeroed when
+        // they push outward at an active box bound
+        let mut g = vec![0.0; self.n()];
+        self.grad_full(x, aux, &mut g);
+        super::l1_merit_inf(&g, x, self.c, Some(self.box_bound))
+    }
+
+    fn tau_init(&self) -> f64 {
+        // LASSO rule, kept above tau_min (paper: "τ_i > c̄" extra condition)
+        (self.a.gram_trace() / (2.0 * self.n() as f64)).max(self.tau_min())
+    }
+
+    fn tau_min(&self) -> f64 {
+        // ensures d_i + τ = 2‖A_i‖² − 2c̄ + τ > 0 for every block
+        2.0 * self.cbar + 1e-9
+    }
+
+    fn v_star(&self) -> Option<f64> {
+        self.v_star
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.lipschitz
+    }
+
+    fn flops_best_response(&self, i: usize) -> f64 {
+        2.0 * self.a.col_nnz(i) as f64 + 10.0
+    }
+
+    fn flops_aux_update(&self, i: usize) -> f64 {
+        2.0 * self.a.col_nnz(i) as f64
+    }
+
+    fn flops_grad_full(&self) -> f64 {
+        2.0 * self.a.nnz() as f64 + 2.0 * self.n() as f64
+    }
+
+    fn flops_obj(&self) -> f64 {
+        2.0 * (self.aux_len() + 2 * self.n()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::nonconvex_qp;
+
+    fn small() -> NonconvexQpProblem {
+        NonconvexQpProblem::from_instance(nonconvex_qp(20, 30, 0.1, 10.0, 50.0, 1.0, 13))
+    }
+
+    #[test]
+    fn f_is_nonconvex_here() {
+        // min eig of Hessian = λmin(2AᵀA) − 2c̄ < 0 when c̄ dominates:
+        // with n > m, AᵀA is singular ⇒ λmin(2AᵀA) = 0 ⇒ min eig = −2c̄.
+        let p = small();
+        assert!(p.n() > p.aux_len());
+        assert!(p.cbar() > 0.0);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(6);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut g = vec![0.0; p.n()];
+        p.grad_full(&x, &aux, &mut g);
+        let h = 1e-6;
+        for i in [0, 11, 29] {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut ap = vec![0.0; p.aux_len()];
+            p.init_aux(&xp, &mut ap);
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let mut am = vec![0.0; p.aux_len()];
+            p.init_aux(&xm, &mut am);
+            let fd = (p.f_val(&xp, &ap) - p.f_val(&xm, &am)) / (2.0 * h);
+            assert!((fd - g[i]).abs() < 1e-4, "i={i} fd={fd} g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn best_response_stays_in_box_and_minimizes() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(7);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let tau = p.tau_min() + 5.0;
+        let q = |i: usize, u: f64, g: f64, d: f64| -> f64 {
+            g * (u - x[i]) + 0.5 * (d + tau) * (u - x[i]).powi(2) + p.c() * u.abs()
+        };
+        let mut z = [0.0];
+        for i in [0, 9, 21] {
+            p.best_response(i, &x, &aux, tau, &mut z);
+            assert!(z[0].abs() <= p.box_bound() + 1e-12);
+            let mut gi = [0.0];
+            p.block_grad(i, &x, &aux, &mut gi);
+            let d = 2.0 * p.col_sq[i] - 2.0 * p.cbar();
+            let qz = q(i, z[0], gi[0], d);
+            // feasible perturbations must not improve
+            for du in [-0.05, 0.05, -0.3, 0.3] {
+                let u = (z[0] + du).clamp(-p.box_bound(), p.box_bound());
+                assert!(q(i, u, gi[0], d) >= qz - 1e-9, "i={i} du={du}");
+            }
+        }
+    }
+
+    #[test]
+    fn prox_respects_box_and_threshold() {
+        let p = small();
+        let v = vec![2.0, -2.0, 0.001, 0.0];
+        let mut out = vec![0.0; 4];
+        p.prox_full(&v[..], 1e-4, &mut out);
+        assert!(out[0] <= p.box_bound());
+        assert!(out[1] >= -p.box_bound());
+        assert_eq!(out[3], 0.0);
+    }
+
+    #[test]
+    fn tau_min_keeps_subproblems_convex() {
+        let p = small();
+        let tau = p.tau_min();
+        for i in 0..p.n() {
+            let d = 2.0 * p.col_sq[i] - 2.0 * p.cbar();
+            assert!(d + tau > 0.0, "block {i} still nonconvex at tau_min");
+        }
+        assert!(p.tau_init() >= p.tau_min());
+    }
+
+    #[test]
+    fn merit_zero_when_clamped_stationary() {
+        // At a point where every coordinate sits at a bound with outward
+        // gradient pressure, Z̄ must vanish.
+        let p = small();
+        let mut x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        // run a few hundred best-response passes to approach stationarity
+        p.init_aux(&x, &mut aux);
+        let tau = p.tau_min() + 1.0;
+        let mut z = [0.0];
+        for _ in 0..300 {
+            for i in 0..p.n() {
+                p.best_response(i, &x, &aux, tau, &mut z);
+                let d = z[0] - x[i];
+                if d != 0.0 {
+                    x[i] = z[0];
+                    p.apply_block_delta(i, &[d], &mut aux);
+                }
+            }
+        }
+        let m = p.merit(&x, &aux);
+        assert!(m < 1e-6, "merit after GS passes: {m}");
+    }
+}

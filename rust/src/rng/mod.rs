@@ -1,0 +1,237 @@
+//! Deterministic pseudo-random generation (xoshiro256++ seeded by
+//! SplitMix64), plus the samplers the data generators need.
+//!
+//! Hand-rolled because the offline crate set has no `rand`; determinism per
+//! seed is load-bearing for the experiment harness (every figure is
+//! regenerated from fixed seeds recorded in EXPERIMENTS.md).
+
+/// SplitMix64 — used to expand a `u64` seed into xoshiro state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ 1.0 by Blackman & Vigna (public domain algorithm).
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+    /// cached second Box-Muller normal
+    gauss_cache: Option<f64>,
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 (never yields the all-zero state).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_cache: None,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        #[inline(always)]
+        fn rotl(x: u64, k: u32) -> u64 {
+            x.rotate_left(k)
+        }
+        let s = &mut self.s;
+        let result = rotl(s[0].wrapping_add(s[3]), 23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = rotl(s[3], 45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn next_usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply trick; bias negligible for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn next_normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_cache.take() {
+            return z;
+        }
+        // avoid u == 0
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let v = self.next_f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.gauss_cache = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Random sign in {-1.0, +1.0}.
+    #[inline]
+    pub fn next_sign(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot choose {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.next_usize(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Fill with iid standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.next_normal();
+        }
+    }
+
+    /// Fill with iid uniform `[lo, hi)`.
+    pub fn fill_uniform(&mut self, lo: f64, hi: f64, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.uniform(lo, hi);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Xoshiro256pp::seed_from_u64(42);
+        let mut b = Xoshiro256pp::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Xoshiro256pp::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..1000 {
+            let u = r.next_f64();
+            assert!((0.0..1.0).contains(&u));
+            let v = r.uniform(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_usize_bounds_and_coverage() {
+        let mut r = Xoshiro256pp::seed_from_u64(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let k = r.next_usize(7);
+            assert!(k < 7);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.next_normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Xoshiro256pp::seed_from_u64(4);
+        let idx = r.choose_k(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::seed_from_u64(5);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut back = xs.clone();
+        back.sort_unstable();
+        assert_eq!(back, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sign_is_pm_one() {
+        let mut r = Xoshiro256pp::seed_from_u64(6);
+        let mut pos = 0;
+        for _ in 0..1000 {
+            let s = r.next_sign();
+            assert!(s == 1.0 || s == -1.0);
+            if s > 0.0 {
+                pos += 1;
+            }
+        }
+        assert!(pos > 400 && pos < 600, "pos={pos}");
+    }
+}

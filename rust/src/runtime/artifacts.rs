@@ -1,0 +1,154 @@
+//! Artifact manifest: metadata for the AOT-compiled HLO modules emitted by
+//! `python/compile/aot.py` into `artifacts/`.
+
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled model at a fixed shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// model function ("lasso_step", "logistic_step", "lasso_objective")
+    pub fn_name: String,
+    pub m: usize,
+    pub n: usize,
+    /// file name inside the artifact directory
+    pub file: String,
+    /// declared input shapes (for validation)
+    pub inputs: Vec<Vec<usize>>,
+    pub n_outputs: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (dir is retained for path resolution).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let json = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let version = json
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            return Err(anyhow!("unsupported manifest version {version}"));
+        }
+        let arr = json
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                a.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("artifact missing {k}"))
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .map(|shapes| {
+                    shapes
+                        .iter()
+                        .filter_map(|s| s.as_arr())
+                        .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                fn_name: get_str("fn")?,
+                m: get_usize("m")?,
+                n: get_usize("n")?,
+                file: get_str("file")?,
+                inputs,
+                n_outputs: get_usize("n_outputs")?,
+            });
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Find a model at an exact shape.
+    pub fn find(&self, fn_name: &str, m: usize, n: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.fn_name == fn_name && a.m == m && a.n == n)
+    }
+
+    /// All shapes available for a model.
+    pub fn shapes_of(&self, fn_name: &str) -> Vec<(usize, usize)> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.fn_name == fn_name)
+            .map(|a| (a.m, a.n))
+            .collect()
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Default artifact directory (repo-root `artifacts/`), honoring
+    /// `FLEXA_ARTIFACTS` for tests and deployments.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("FLEXA_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "lasso_step_m64_n128", "fn": "lasso_step", "m": 64, "n": 128,
+         "file": "lasso_step_m64_n128.hlo.txt",
+         "inputs": [[64,128],[64],[128],[1],[1]], "n_outputs": 3, "dtype": "f32"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("lasso_step", 64, 128).unwrap();
+        assert_eq!(a.n_outputs, 3);
+        assert_eq!(a.inputs[0], vec![64, 128]);
+        assert_eq!(m.path_of(a), PathBuf::from("/tmp/a/lasso_step_m64_n128.hlo.txt"));
+        assert!(m.find("lasso_step", 1, 1).is_none());
+        assert_eq!(m.shapes_of("lasso_step"), vec![(64, 128)]);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{", PathBuf::new()).is_err());
+        assert!(Manifest::parse("{\"version\": 1}", PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT client wrapper: loads HLO-text artifacts, compiles them on the CPU
+//! PJRT plugin, and caches the loaded executables. One compiled executable
+//! per (model, shape); compilation happens once at startup, never on the
+//! request path.
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// PJRT client + executable cache.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl RuntimeClient {
+    /// Create a CPU PJRT client over the given artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Convenience: load the default `artifacts/` directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Look up an artifact by model name and shape.
+    pub fn find(&self, fn_name: &str, m: usize, n: usize) -> Result<ArtifactMeta> {
+        self.manifest
+            .find(fn_name, m, n)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for {fn_name} at m={m}, n={n}; available: {:?}",
+                    self.manifest.shapes_of(fn_name)
+                )
+            })
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&mut self, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&meta.name) {
+            let path = self.manifest.path_of(meta);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+            self.cache.insert(meta.name.clone(), exe);
+        }
+        Ok(self.cache.get(&meta.name).unwrap())
+    }
+
+    /// Execute an artifact with the given literals; returns the output
+    /// tuple elements (jax lowers with `return_tuple=True`).
+    pub fn execute(
+        &mut self,
+        meta: &ArtifactMeta,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let n_out = meta.n_outputs;
+        let exe = self.executable(meta)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", meta.name))?;
+        Self::untuple(&result[0][0], n_out, &meta.name)
+    }
+
+    /// Execute with device-resident buffers (the §Perf fast path: loop-
+    /// invariant inputs like the data matrix are uploaded once via
+    /// [`Self::upload`] instead of per call).
+    pub fn execute_buffers(
+        &mut self,
+        meta: &ArtifactMeta,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let n_out = meta.n_outputs;
+        let exe = self.executable(meta)?;
+        let result = exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow!("executing {} (buffers): {e:?}", meta.name))?;
+        Self::untuple(&result[0][0], n_out, &meta.name)
+    }
+
+    /// Upload a literal to the device once (loop-invariant inputs).
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("uploading literal: {e:?}"))
+    }
+
+    fn untuple(buf: &xla::PjRtBuffer, n_out: usize, name: &str) -> Result<Vec<xla::Literal>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        if parts.len() != n_out {
+            return Err(anyhow!(
+                "{name} returned {} outputs, manifest says {n_out}",
+                parts.len()
+            ));
+        }
+        Ok(parts)
+    }
+}
+
+/// f64 slice → f32 literal of shape `[len]`.
+pub fn vec_literal(v: &[f64]) -> xla::Literal {
+    let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f)
+}
+
+/// f64 scalar → f32 literal of shape `[1]` (the aot.py scalar convention).
+pub fn scalar1_literal(x: f64) -> xla::Literal {
+    xla::Literal::vec1(&[x as f32])
+}
+
+/// Row-major f64 matrix data → f32 literal of shape `[m, n]`.
+pub fn matrix_literal(row_major: &[f64], m: usize, n: usize) -> Result<xla::Literal> {
+    assert_eq!(row_major.len(), m * n);
+    let f: Vec<f32> = row_major.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f)
+        .reshape(&[m as i64, n as i64])
+        .map_err(|e| anyhow!("reshape to [{m},{n}]: {e:?}"))
+}
+
+/// f32 literal → f64 vec.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    Ok(v.into_iter().map(|x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs (they
+    // need built artifacts); here we only cover the literal helpers.
+
+    #[test]
+    fn literal_roundtrip() {
+        let v = vec![1.0, -2.5, 3.25];
+        let lit = vec_literal(&v);
+        assert_eq!(literal_to_vec(&lit).unwrap(), v);
+    }
+
+    #[test]
+    fn matrix_literal_shape() {
+        let lit = matrix_literal(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn scalar1_is_len1() {
+        let lit = scalar1_literal(0.5);
+        assert_eq!(lit.element_count(), 1);
+    }
+}

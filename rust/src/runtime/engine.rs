@@ -1,0 +1,300 @@
+//! `StepEngine`: the full-Jacobi FLEXA step as a swappable backend.
+//!
+//! * [`NativeEngine`] — the L3 rust kernels (any shape; what the large
+//!   paper-scale benchmarks run);
+//! * [`XlaEngine`] — the AOT-compiled L2/L1 artifact executed through PJRT
+//!   (fixed shapes from the manifest; what proves the three-layer
+//!   composition on the request path — python is never invoked).
+//!
+//! Both compute `(ẑ, E, V(x))` from `(x, τ)`; the rust coordinator layers
+//! selection, the memory step, and the τ/γ controllers on top
+//! ([`flexa_with_engine`]). Integration tests assert the two engines agree
+//! to f32 tolerance on identical iterates.
+
+use super::client::{literal_to_vec, matrix_literal, scalar1_literal, vec_literal, RuntimeClient};
+use crate::coordinator::driver::RunState;
+use crate::coordinator::tau::{TauController, TauDecision, TauOptions};
+use crate::coordinator::{FlexaOptions, SolveReport, StopReason};
+use crate::metrics::IterCost;
+use crate::problems::{LassoProblem, Problem};
+use anyhow::Result;
+
+/// A backend computing the full-Jacobi step quantities.
+pub trait StepEngine {
+    /// (m, n) of the problem this engine is bound to.
+    fn shape(&self) -> (usize, usize);
+
+    /// Compute best responses `ẑ` (length n), error bounds `e` (length n;
+    /// scalar blocks), and return the objective `V(x)`.
+    fn step(&mut self, x: &[f64], tau: f64, z: &mut [f64], e: &mut [f64]) -> Result<f64>;
+
+    /// Backend label for reports.
+    fn backend(&self) -> &'static str;
+}
+
+/// Native rust backend over a [`LassoProblem`].
+pub struct NativeEngine<'a> {
+    problem: &'a LassoProblem,
+    aux: Vec<f64>,
+}
+
+impl<'a> NativeEngine<'a> {
+    pub fn new(problem: &'a LassoProblem) -> Self {
+        Self { aux: vec![0.0; problem.aux_len()], problem }
+    }
+}
+
+impl StepEngine for NativeEngine<'_> {
+    fn shape(&self) -> (usize, usize) {
+        (self.problem.aux_len(), self.problem.n())
+    }
+
+    fn step(&mut self, x: &[f64], tau: f64, z: &mut [f64], e: &mut [f64]) -> Result<f64> {
+        // full-Jacobi semantics: recompute the residual at x (the engine is
+        // stateless across calls, mirroring the XLA artifact)
+        self.problem.init_aux(x, &mut self.aux);
+        for i in 0..self.problem.n() {
+            e[i] = self.problem.best_response(i, x, &self.aux, tau, &mut z[i..=i]);
+        }
+        Ok(self.problem.v_val(x, &self.aux))
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT backend executing the `lasso_step` artifact.
+///
+/// The loop-invariant inputs (`A`, `b`) are converted to f32 literals
+/// **once** at bind time and cloned (a C++-side memcpy) per call. NOTE:
+/// the device-resident `PjRtBuffer` + `execute_b` path would avoid even
+/// that, but xla_extension 0.5.1's CPU plugin aborts inside `execute_b`
+/// (`Check failed: pointer_size > 0`), so literals are the supported path
+/// — see EXPERIMENTS.md §Perf.
+pub struct XlaEngine {
+    client: RuntimeClient,
+    meta: crate::runtime::artifacts::ArtifactMeta,
+    a_lit: xla::Literal,
+    b_lit: xla::Literal,
+    m: usize,
+    n: usize,
+}
+
+impl XlaEngine {
+    /// Bind the `lasso_step` artifact at the problem's exact shape.
+    pub fn for_lasso(client: RuntimeClient, problem: &LassoProblem) -> Result<Self> {
+        Self::for_lasso_named(client, problem, "lasso_step")
+    }
+
+    /// Bind a named LASSO-step artifact (`lasso_step` / `lasso_step_fused`).
+    pub fn for_lasso_named(
+        mut client: RuntimeClient,
+        problem: &LassoProblem,
+        fn_name: &str,
+    ) -> Result<Self> {
+        let (m, n) = (problem.aux_len(), problem.n());
+        let meta = client.find(fn_name, m, n)?;
+        // eagerly compile so the request path never hits the compiler
+        client.executable(&meta)?;
+        let a_rm = problem.matrix().to_dense().to_row_major();
+        let a_lit = matrix_literal(&a_rm, m, n)?;
+        let b_lit = vec_literal(problem.rhs());
+        Ok(Self { client, meta, a_lit, b_lit, m, n })
+    }
+
+    /// Execute one step with explicit ℓ1 weight `c`.
+    pub fn step_with_c(
+        &mut self,
+        x: &[f64],
+        tau: f64,
+        c: f64,
+        z: &mut [f64],
+        e: &mut [f64],
+    ) -> Result<f64> {
+        let inputs = vec![
+            self.a_lit.clone(),
+            self.b_lit.clone(),
+            vec_literal(x),
+            scalar1_literal(tau),
+            scalar1_literal(c),
+        ];
+        let outs = self.client.execute(&self.meta, &inputs)?;
+        let zv = literal_to_vec(&outs[0])?;
+        let ev = literal_to_vec(&outs[1])?;
+        z.copy_from_slice(&zv);
+        e.copy_from_slice(&ev);
+        let obj: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(obj[0] as f64)
+    }
+
+    pub fn shape_mn(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+}
+
+/// An engine bound to a concrete LASSO instance (carries `c`).
+pub struct BoundXlaEngine {
+    inner: XlaEngine,
+    c: f64,
+}
+
+impl BoundXlaEngine {
+    pub fn new(client: RuntimeClient, problem: &LassoProblem) -> Result<Self> {
+        Ok(Self { inner: XlaEngine::for_lasso(client, problem)?, c: problem.c() })
+    }
+}
+
+impl StepEngine for BoundXlaEngine {
+    fn shape(&self) -> (usize, usize) {
+        self.inner.shape_mn()
+    }
+
+    fn step(&mut self, x: &[f64], tau: f64, z: &mut [f64], e: &mut [f64]) -> Result<f64> {
+        self.inner.step_with_c(x, tau, self.c, z, e)
+    }
+
+    fn backend(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+/// FLEXA (Algorithm 1) driven by a [`StepEngine`] — the end-to-end
+/// three-layer path: selection/γ/τ on the rust side, compute in the engine.
+pub fn flexa_with_engine(
+    problem: &LassoProblem,
+    engine: &mut dyn StepEngine,
+    x0: &[f64],
+    opts: &FlexaOptions,
+) -> Result<SolveReport> {
+    let n = problem.n();
+    assert_eq!(engine.shape(), (problem.aux_len(), n), "engine/problem shape mismatch");
+    let common = &opts.common;
+    let p_cores = common.cores.max(1);
+
+    let mut x = x0.to_vec();
+    let mut x_old = vec![0.0; n];
+    let mut zhat = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    let mut sel: Vec<usize> = Vec::with_capacity(n);
+
+    let tau_opts = common
+        .tau
+        .unwrap_or_else(|| TauOptions::paper(problem.tau_init(), problem.tau_min()));
+    let mut tau_ctl = TauController::new(tau_opts);
+    let mut gamma = common.stepsize.initial();
+
+    let mut state = RunState::new(problem, common);
+    // aux only for merit/trace instrumentation
+    let mut aux = vec![0.0; problem.aux_len()];
+    problem.init_aux(&x, &mut aux);
+    let mut v = problem.v_val(&x, &aux);
+    tau_ctl.baseline(v);
+    state.record(0, &x, &aux, v, 0);
+
+    let mut stop = StopReason::MaxIters;
+    let mut iters = 0usize;
+
+    for k in 0..common.max_iters {
+        iters = k + 1;
+        let tau = tau_ctl.tau();
+
+        // engine computes ẑ, E, and V(x^k) in one fused call
+        let _v_at_x = engine.step(&x, tau, &mut zhat, &mut e)?;
+
+        let m_k = opts.selection.select(&e, &mut sel);
+        state.last_ebound = m_k;
+
+        x_old.copy_from_slice(&x);
+        let mut active = 0usize;
+        for &i in &sel {
+            let d = gamma * (zhat[i] - x[i]);
+            if d != 0.0 {
+                x[i] += d;
+                active += 1;
+            }
+        }
+
+        // objective for the τ controller from the next engine call would
+        // lag one iteration; evaluate natively (same math, f64)
+        problem.init_aux(&x, &mut aux);
+        let v_new = problem.v_val(&x, &aux);
+
+        match tau_ctl.observe(v_new, state.step_metric()) {
+            TauDecision::Accept => {
+                v = v_new;
+                gamma = common.stepsize.next(gamma, state.step_metric());
+            }
+            TauDecision::RejectAndRetry => {
+                x.copy_from_slice(&x_old);
+                problem.init_aux(&x, &mut aux);
+                state.discarded += 1;
+                tau_ctl.baseline(v);
+                active = 0;
+            }
+        }
+
+        // the engine's step is a fused matvec + rmatvec + threshold
+        state.charge(IterCost::balanced(
+            2.0 * problem.flops_grad_full() + 8.0 * n as f64,
+            p_cores,
+            problem.aux_len() as f64,
+            1.0,
+        ));
+
+        state.record(k + 1, &x, &aux, v, active);
+        if let Some(reason) = state.stop_check(k) {
+            stop = reason;
+            break;
+        }
+    }
+
+    Ok(state.finish(x, &aux, v, iters, stop))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CommonOptions, SelectionRule, TermMetric};
+    use crate::datagen::nesterov_lasso;
+
+    #[test]
+    fn native_engine_matches_problem_path() {
+        let p = LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 4));
+        let mut eng = NativeEngine::new(&p);
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(2);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.3).collect();
+        let mut z = vec![0.0; p.n()];
+        let mut e = vec![0.0; p.n()];
+        let v = eng.step(&x, 0.9, &mut z, &mut e).unwrap();
+        // compare against the trait path
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        assert!((v - p.v_val(&x, &aux)).abs() < 1e-10);
+        let mut zi = [0.0];
+        for i in 0..p.n() {
+            let ei = p.best_response(i, &x, &aux, 0.9, &mut zi);
+            assert!((z[i] - zi[0]).abs() < 1e-12);
+            assert!((e[i] - ei).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn flexa_with_native_engine_converges() {
+        let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
+        let mut eng = NativeEngine::new(&p);
+        let opts = FlexaOptions {
+            common: CommonOptions {
+                max_iters: 3000,
+                tol: 1e-6,
+                term: TermMetric::RelErr,
+                name: "FLEXA-native-engine".into(),
+                ..Default::default()
+            },
+            selection: SelectionRule::sigma(0.5),
+            inexact: None,
+        };
+        let r = flexa_with_engine(&p, &mut eng, &vec![0.0; p.n()], &opts).unwrap();
+        assert!(r.converged(), "stop={:?} re={}", r.stop, r.final_rel_err);
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: loads the AOT-compiled HLO artifacts (`make artifacts`)
+//! through the PJRT C API and exposes them as [`StepEngine`] backends to
+//! the coordinator. Python is build-time only — after the artifacts exist,
+//! the rust binary is self-contained.
+
+pub mod artifacts;
+pub mod client;
+pub mod engine;
+
+pub use artifacts::{ArtifactMeta, Manifest};
+pub use client::RuntimeClient;
+pub use engine::{flexa_with_engine, BoundXlaEngine, NativeEngine, StepEngine, XlaEngine};

@@ -1,0 +1,29 @@
+//! Baseline solvers the paper compares against (§VI):
+//!
+//! * [`fista`] — parallel FISTA with backtracking [Beck & Teboulle 2009],
+//!   the paper's benchmark first-order method for LASSO;
+//! * [`sparsa`] — SpaRSA [Wright, Nowak, Figueiredo 2009]: Barzilai-Borwein
+//!   spectral steps + nonmonotone acceptance (paper's settings: M=5,
+//!   σ=0.01, α ∈ [1e−30, 1e30]);
+//! * [`grock`] — GRock [Peng, Yan, Yin 2013]: per iteration the P blocks
+//!   with the largest block-descent potential take a *full* (γ=1) step;
+//! * [`greedy_1bcd`] — the P=1 special case with convergence guarantees;
+//! * [`admm`] — parallel Jacobi-proximal multi-block ADMM for LASSO in the
+//!   spirit of [Deng, Lai, Peng, Yin 2014] ([41] in the paper);
+//! * [`cdm`] — Gauss-Seidel coordinate descent with exact coordinate
+//!   minimization (the LIBLINEAR-style comparator of §VI-B).
+//!
+//! All report cost through the same `IterCost`/`SimClock` machinery as the
+//! coordinator so the regenerated figures compare like against like.
+
+pub mod admm;
+pub mod cdm;
+pub mod fista;
+pub mod grock;
+pub mod sparsa;
+
+pub use admm::{admm, AdmmOptions};
+pub use cdm::cdm;
+pub use fista::fista;
+pub use grock::{greedy_1bcd, grock};
+pub use sparsa::{sparsa, SparsaOptions};

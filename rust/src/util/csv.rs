@@ -1,0 +1,155 @@
+//! CSV writing (and a small reader for tests): the bench harness emits one
+//! CSV per figure series so results can be re-plotted outside the repo.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// Column-oriented CSV writer.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row of raw cells (must match header length).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of floats.
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|x| format_g(*x)).collect::<Vec<_>>());
+    }
+
+    /// Append a mixed row: leading string tag + floats.
+    pub fn row_tagged(&mut self, tag: &str, cells: &[f64]) {
+        let mut v = vec![tag.to_string()];
+        v.extend(cells.iter().map(|x| format_g(*x)));
+        self.row(&v);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|c| escape(c)).collect();
+            let _ = writeln!(out, "{}", cells.join(","));
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+}
+
+/// `%g`-style float formatting: compact, full precision where it matters.
+pub fn format_g(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    if x.fract() == 0.0 && x.abs() < 1e12 {
+        return format!("{}", x as i64);
+    }
+    let a = x.abs();
+    if (1e-4..1e7).contains(&a) {
+        let s = format!("{x:.6}");
+        let s = s.trim_end_matches('0').trim_end_matches('.').to_string();
+        s
+    } else {
+        format!("{x:.6e}")
+    }
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Parse a CSV string (no embedded newlines in quoted cells).
+pub fn parse_csv(text: &str) -> (Vec<String>, Vec<Vec<String>>) {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().map(split_line).unwrap_or_default();
+    let rows = lines.map(split_line).collect();
+    (header, rows)
+}
+
+fn split_line(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                cells.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    cells.push(cur);
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut w = CsvWriter::new(&["alg", "time", "relerr"]);
+        w.row_tagged("FLEXA, sigma=0.5", &[1.25, 1e-6]);
+        w.row_tagged("FISTA", &[3.0, 0.001]);
+        let s = w.to_string();
+        let (h, rows) = parse_csv(&s);
+        assert_eq!(h, vec!["alg", "time", "relerr"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][0], "FLEXA, sigma=0.5");
+        assert_eq!(rows[1][1], "3");
+    }
+
+    #[test]
+    fn format_g_cases() {
+        assert_eq!(format_g(0.0), "0");
+        assert_eq!(format_g(3.0), "3");
+        assert_eq!(format_g(0.5), "0.5");
+        assert_eq!(format_g(1e-9), "1.000000e-9");
+        assert_eq!(format_g(1.0e8), "100000000"); // integral values stay integral
+        assert!(format_g(12345678.9).contains('e')); // big non-integral → sci
+    }
+
+    #[test]
+    fn quoting() {
+        assert_eq!(escape("a\"b"), "\"a\"\"b\"");
+        let cells = split_line("\"a\"\"b\",c");
+        assert_eq!(cells, vec!["a\"b", "c"]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["x".into()]);
+    }
+}

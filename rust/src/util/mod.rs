@@ -1,0 +1,133 @@
+//! Support substrate: JSON, CSV, ASCII plotting, timing, logging.
+
+pub mod csv;
+pub mod json;
+pub mod plot;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+pub use csv::{format_g, CsvWriter};
+pub use json::Json;
+pub use plot::{render as render_plot, PlotCfg, Series};
+
+/// Wall-clock stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Log verbosity, globally settable from the CLI (`-q`, `-v`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum LogLevel {
+    Quiet = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_log_level(level: LogLevel) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: LogLevel) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level as u8
+}
+
+/// `info!`-style logging macro (stderr, honors the global level).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled($crate::util::LogLevel::Info) {
+            eprintln!("[flexa] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Debug-level logging macro.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled($crate::util::LogLevel::Debug) {
+            eprintln!("[flexa:debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Format a duration in seconds with an adaptive unit.
+pub fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+/// Format a flop count (1.2 GF etc.).
+pub fn human_flops(f: f64) -> String {
+    if f < 1e3 {
+        format!("{f:.0} F")
+    } else if f < 1e6 {
+        format!("{:.1} kF", f / 1e3)
+    } else if f < 1e9 {
+        format!("{:.1} MF", f / 1e6)
+    } else if f < 1e12 {
+        format!("{:.2} GF", f / 1e9)
+    } else {
+        format!("{:.2} TF", f / 1e12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_s() > 0.0);
+        assert!(t.elapsed_ms() >= t.elapsed_s()); // ms value numerically bigger
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_time(0.5), "500.0ms");
+        assert_eq!(human_time(2.0), "2.00s");
+        assert!(human_time(300.0).contains("min"));
+        assert_eq!(human_flops(500.0), "500 F");
+        assert!(human_flops(2.5e9).contains("GF"));
+    }
+
+    #[test]
+    fn log_level_gate() {
+        set_log_level(LogLevel::Quiet);
+        assert!(!log_enabled(LogLevel::Info));
+        set_log_level(LogLevel::Debug);
+        assert!(log_enabled(LogLevel::Info));
+        assert!(log_enabled(LogLevel::Debug));
+        set_log_level(LogLevel::Info);
+    }
+}

@@ -1,0 +1,188 @@
+//! ASCII line plots for regenerating the paper's figures in the terminal
+//! and in EXPERIMENTS.md. Supports log-scale y (relative error curves) and
+//! multiple overlaid series with distinct glyphs.
+
+/// One plotted series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    /// (x, y) points; y must be finite, non-positive y dropped on log scale.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Self { name: name.into(), points }
+    }
+}
+
+/// Plot configuration.
+#[derive(Clone, Debug)]
+pub struct PlotCfg {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub width: usize,
+    pub height: usize,
+    pub log_y: bool,
+    pub log_x: bool,
+}
+
+impl Default for PlotCfg {
+    fn default() -> Self {
+        Self {
+            title: String::new(),
+            x_label: "x".into(),
+            y_label: "y".into(),
+            width: 72,
+            height: 20,
+            log_y: true,
+            log_x: false,
+        }
+    }
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&', '$', '~'];
+
+/// Render series into an ASCII chart.
+pub fn render(cfg: &PlotCfg, series: &[Series]) -> String {
+    let tx = |x: f64| if cfg.log_x { x.max(1e-300).log10() } else { x };
+    let ty = |y: f64| if cfg.log_y { y.max(1e-300).log10() } else { y };
+
+    // collect transformed points
+    let mut all: Vec<(usize, f64, f64)> = Vec::new();
+    for (si, s) in series.iter().enumerate() {
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            if cfg.log_y && y <= 0.0 {
+                continue;
+            }
+            if cfg.log_x && x <= 0.0 {
+                continue;
+            }
+            all.push((si, tx(x), ty(y)));
+        }
+    }
+    if all.is_empty() {
+        return format!("{} (no data)\n", cfg.title);
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(_, x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+
+    let w = cfg.width.max(16);
+    let h = cfg.height.max(6);
+    let mut grid = vec![vec![' '; w]; h];
+    for &(si, x, y) in &all {
+        let cx = (((x - xmin) / (xmax - xmin)) * (w - 1) as f64).round() as usize;
+        let cy = (((y - ymin) / (ymax - ymin)) * (h - 1) as f64).round() as usize;
+        let row = h - 1 - cy.min(h - 1);
+        let col = cx.min(w - 1);
+        let g = GLYPHS[si % GLYPHS.len()];
+        // prefer to show later series when overlapping? keep first drawn
+        if grid[row][col] == ' ' {
+            grid[row][col] = g;
+        }
+    }
+
+    let fmt_tick = |v: f64, log: bool| -> String {
+        if log {
+            format!("1e{:+.0}", v)
+        } else if v.abs() >= 1000.0 || (v != 0.0 && v.abs() < 0.01) {
+            format!("{v:.1e}")
+        } else {
+            format!("{v:.2}")
+        }
+    };
+
+    let mut out = String::new();
+    if !cfg.title.is_empty() {
+        out.push_str(&format!("  {}\n", cfg.title));
+    }
+    for (ri, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * ri as f64 / (h - 1) as f64;
+        let label = if ri % 4 == 0 || ri == h - 1 {
+            format!("{:>9}", fmt_tick(yv, cfg.log_y))
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(9));
+    out.push('+');
+    out.push_str(&"-".repeat(w));
+    out.push('\n');
+    out.push_str(&format!(
+        "{:>10}{}{:>width$}\n",
+        fmt_tick(xmin, cfg.log_x),
+        "",
+        fmt_tick(xmax, cfg.log_x),
+        width = w - 1
+    ));
+    out.push_str(&format!(
+        "{:>9} x: {}   y: {}\n",
+        "", cfg.x_label, cfg.y_label
+    ));
+    out.push_str("  legend: ");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", GLYPHS[si % GLYPHS.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_without_panic_and_contains_legend() {
+        let s1 = Series::new("FLEXA", (0..50).map(|k| (k as f64, (10.0f64).powi(-k / 5))).collect());
+        let s2 = Series::new("FISTA", (0..50).map(|k| (k as f64, (10.0f64).powi(-k / 10))).collect());
+        let cfg = PlotCfg { title: "relerr vs iter".into(), ..Default::default() };
+        let txt = render(&cfg, &[s1, s2]);
+        assert!(txt.contains("legend"));
+        assert!(txt.contains("FLEXA"));
+        assert!(txt.contains('*'));
+        assert!(txt.contains('o'));
+        assert!(txt.lines().count() > 20);
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let cfg = PlotCfg::default();
+        let txt = render(&cfg, &[Series::new("x", vec![])]);
+        assert!(txt.contains("no data"));
+    }
+
+    #[test]
+    fn log_scale_drops_nonpositive() {
+        let s = Series::new("a", vec![(0.0, 0.0), (1.0, 1.0), (2.0, 0.1)]);
+        let cfg = PlotCfg { log_y: true, ..Default::default() };
+        let txt = render(&cfg, &[s]);
+        assert!(txt.contains('*'));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let s = Series::new("c", vec![(0.0, 1.0), (1.0, 1.0)]);
+        let txt = render(&PlotCfg { log_y: false, ..Default::default() }, &[s]);
+        assert!(!txt.is_empty());
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration: the three-layer path. Loads the AOT artifacts produced by
+//! `make artifacts` (python/jax/pallas → HLO text), executes them through
+//! PJRT, and asserts agreement with the native L3 kernels — then runs the
+//! full FLEXA coordinator on the XLA engine.
+//!
+//! These tests are skipped (with a loud message) when artifacts are absent;
+//! `make test` always builds them first.
+
+use flexa::coordinator::{CommonOptions, FlexaOptions, SelectionRule, TermMetric};
+use flexa::datagen::nesterov_lasso;
+use flexa::problems::{LassoProblem, Problem};
+use flexa::runtime::{
+    flexa_with_engine, BoundXlaEngine, Manifest, NativeEngine, RuntimeClient, StepEngine,
+};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIPPING runtime integration ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(m) = manifest() else { return };
+    assert!(m.find("lasso_step", 64, 128).is_some());
+    assert!(m.find("lasso_step", 512, 1024).is_some());
+    assert!(m.find("logistic_step", 64, 128).is_some());
+    for a in &m.artifacts {
+        assert!(m.path_of(a).exists(), "{} missing on disk", a.file);
+    }
+}
+
+#[test]
+fn xla_engine_matches_native_engine() {
+    let Some(m) = manifest() else { return };
+    let client = RuntimeClient::new(m).expect("pjrt client");
+    let inst = nesterov_lasso(64, 128, 0.1, 1.0, 2024);
+    let problem = LassoProblem::from_instance(inst);
+    let mut xla = BoundXlaEngine::new(client, &problem).expect("xla engine");
+    let mut native = NativeEngine::new(&problem);
+
+    let mut rng = flexa::rng::Xoshiro256pp::seed_from_u64(7);
+    for trial in 0..5 {
+        let x: Vec<f64> = (0..problem.n()).map(|_| rng.next_normal() * 0.5).collect();
+        let tau = 0.5 + trial as f64;
+        let (mut z1, mut e1) = (vec![0.0; 128], vec![0.0; 128]);
+        let (mut z2, mut e2) = (vec![0.0; 128], vec![0.0; 128]);
+        let v1 = xla.step(&x, tau, &mut z1, &mut e1).unwrap();
+        let v2 = native.step(&x, tau, &mut z2, &mut e2).unwrap();
+        assert!(
+            (v1 - v2).abs() / v2.abs().max(1.0) < 1e-3,
+            "trial {trial}: objective {v1} vs {v2}"
+        );
+        for i in 0..128 {
+            assert!(
+                (z1[i] - z2[i]).abs() < 5e-4,
+                "trial {trial} z[{i}]: {} vs {}",
+                z1[i],
+                z2[i]
+            );
+            assert!((e1[i] - e2[i]).abs() < 5e-4, "trial {trial} e[{i}]");
+        }
+    }
+}
+
+#[test]
+fn flexa_on_xla_engine_converges_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let client = RuntimeClient::new(m).expect("pjrt client");
+    let inst = nesterov_lasso(64, 128, 0.05, 1.0, 31);
+    let problem = LassoProblem::from_instance(inst);
+    let mut engine = BoundXlaEngine::new(client, &problem).expect("engine");
+    let opts = FlexaOptions {
+        common: CommonOptions {
+            max_iters: 2000,
+            max_wall_s: 120.0,
+            tol: 1e-4, // f32 artifact: don't demand f64 accuracy
+            term: TermMetric::RelErr,
+            name: "FLEXA-xla".into(),
+            ..Default::default()
+        },
+        selection: SelectionRule::sigma(0.5),
+        inexact: None,
+    };
+    let r = flexa_with_engine(&problem, &mut engine, &vec![0.0; problem.n()], &opts)
+        .expect("engine run");
+    assert!(
+        r.converged(),
+        "XLA-engine FLEXA: {:?} re={}",
+        r.stop,
+        r.final_rel_err
+    );
+}
+
+#[test]
+fn logistic_artifact_executes() {
+    let Some(m) = manifest() else { return };
+    let mut client = RuntimeClient::new(m).expect("pjrt client");
+    let meta = client.find("logistic_step", 64, 128).expect("meta");
+    // synthetic Ỹ and x
+    let mut rng = flexa::rng::Xoshiro256pp::seed_from_u64(3);
+    let mut y = vec![0.0f64; 64 * 128];
+    rng.fill_normal(&mut y);
+    let x = vec![0.01f64; 128];
+    let inputs = vec![
+        flexa::runtime::client::matrix_literal(&y, 64, 128).unwrap(),
+        flexa::runtime::client::vec_literal(&x),
+        flexa::runtime::client::scalar1_literal(1.0),
+        flexa::runtime::client::scalar1_literal(0.25),
+    ];
+    let outs = client.execute(&meta, &inputs).expect("execute");
+    assert_eq!(outs.len(), 3);
+    let z = flexa::runtime::client::literal_to_vec(&outs[0]).unwrap();
+    assert_eq!(z.len(), 128);
+    assert!(z.iter().all(|v| v.is_finite()));
+    // objective at x ≈ m·log2 + c‖x‖₁ for small margins
+    let obj: Vec<f32> = outs[2].to_vec().unwrap();
+    let expected = 64.0 * (2.0f64).ln() + 0.25 * 1.28;
+    assert!(
+        (obj[0] as f64 - expected).abs() / expected < 0.2,
+        "objective {} vs ~{expected}",
+        obj[0]
+    );
+}
+
+#[test]
+fn runtime_rejects_unknown_shape() {
+    let Some(m) = manifest() else { return };
+    let client = RuntimeClient::new(m).expect("pjrt client");
+    assert!(client.find("lasso_step", 7, 9).is_err());
+}

@@ -1,0 +1,309 @@
+//! Property-based tests (randomized, seeded, shrink-free mini-proptest):
+//! the paper's structural invariants checked across hundreds of random
+//! instances rather than hand-picked examples.
+
+use flexa::coordinator::SelectionRule;
+use flexa::datagen::nesterov_lasso;
+use flexa::linalg::{vector, BlockPartition, CscMatrix, DenseMatrix};
+use flexa::metrics::IterCost;
+use flexa::problems::{LassoProblem, Problem};
+use flexa::rng::Xoshiro256pp;
+use flexa::simulator::CostModel;
+use flexa::util::Json;
+
+/// Run `f` across `cases` seeded cases; panics carry the seed for replay.
+fn for_all(cases: usize, mut f: impl FnMut(&mut Xoshiro256pp)) {
+    for seed in 0..cases as u64 {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xFEED_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[test]
+fn prop_soft_threshold_is_prox() {
+    // u = ST(v,t) minimizes ½(u−v)² + t|u| ⇔ v−u ∈ t∂|u|
+    for_all(300, |rng| {
+        let v = rng.uniform(-10.0, 10.0);
+        let t = rng.uniform(1e-6, 5.0);
+        let u = vector::soft_threshold(v, t);
+        if u != 0.0 {
+            assert!(((v - u) - t * u.signum()).abs() < 1e-10);
+            assert!(u.signum() == v.signum());
+            assert!(u.abs() <= v.abs());
+        } else {
+            assert!(v.abs() <= t + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_block_soft_threshold_shrinks() {
+    for_all(200, |rng| {
+        let n = 1 + rng.next_usize(8);
+        let v: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let t = rng.uniform(1e-6, 3.0);
+        let mut out = vec![0.0; n];
+        vector::block_soft_threshold(&v, t, &mut out);
+        let nv = vector::nrm2(&v);
+        let no = vector::nrm2(&out);
+        assert!(no <= nv + 1e-12);
+        if nv > t {
+            assert!((no - (nv - t)).abs() < 1e-9, "norm shrinks by exactly t");
+        } else {
+            assert_eq!(no, 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_equals_dense() {
+    for_all(60, |rng| {
+        let m = 1 + rng.next_usize(20);
+        let n = 1 + rng.next_usize(20);
+        let mut triplets = Vec::new();
+        let mut dense = DenseMatrix::zeros(m, n);
+        for _ in 0..rng.next_usize(m * n + 1) {
+            let (i, j, v) = (rng.next_usize(m), rng.next_usize(n), rng.next_normal());
+            triplets.push((i, j, v));
+            dense.set(i, j, dense.get(i, j) + v);
+        }
+        let sparse = CscMatrix::from_triplets(m, n, &triplets);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.next_normal()).collect();
+        let (mut od, mut os) = (vec![0.0; m], vec![0.0; m]);
+        dense.matvec(&x, &mut od);
+        sparse.matvec(&x, &mut os);
+        assert!(vector::dist2(&od, &os) < 1e-9);
+        let (mut td, mut ts) = (vec![0.0; n], vec![0.0; n]);
+        dense.matvec_t(&y, &mut td);
+        sparse.matvec_t(&y, &mut ts);
+        assert!(vector::dist2(&td, &ts) < 1e-9);
+        for j in 0..n {
+            assert!((dense.col_dot(j, &y) - sparse.col_dot(j, &y)).abs() < 1e-10);
+            assert!(
+                (dense.col_sq_weighted_dot(j, &y) - sparse.col_sq_weighted_dot(j, &y)).abs()
+                    < 1e-9
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_selection_contains_argmax_and_respects_sigma() {
+    for_all(200, |rng| {
+        let n = 1 + rng.next_usize(50);
+        let e: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let sigma = rng.next_f64();
+        let rule = SelectionRule::sigma(sigma);
+        let mut sel = Vec::new();
+        let m = rule.select(&e, &mut sel);
+        assert!(!sel.is_empty());
+        let argmax = (0..n).max_by(|&a, &b| e[a].partial_cmp(&e[b]).unwrap()).unwrap();
+        assert!((m - e[argmax]).abs() < 1e-15);
+        assert!(sel.contains(&argmax), "argmax must always be selected");
+        for &i in &sel {
+            if sigma > 0.0 && m > 0.0 {
+                assert!(e[i] >= sigma * m - 1e-15, "selected below threshold");
+            }
+        }
+        // everything above threshold is selected (no false negatives)
+        if sigma > 0.0 && m > 0.0 {
+            for i in 0..n {
+                if e[i] >= sigma * m {
+                    assert!(sel.contains(&i));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_descent_inequality_17() {
+    // Prop. 8(c): (x̂−x)_Sᵀ∇F + Σ_S g(x̂_i) − g(x_i) ≤ −c_τ ‖(x̂−x)_S‖²
+    for_all(40, |rng| {
+        let m = 10 + rng.next_usize(20);
+        let n = 10 + rng.next_usize(30);
+        let inst = nesterov_lasso(m, n, 0.2, 1.0, rng.next_u64());
+        let p = LassoProblem::from_instance(inst);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal() * 0.5).collect();
+        let mut aux = vec![0.0; m];
+        p.init_aux(&x, &mut aux);
+        let tau = rng.uniform(0.1, 5.0);
+        let mut grad = vec![0.0; n];
+        p.grad_full(&x, &aux, &mut grad);
+        let mut lhs = 0.0;
+        let mut dist_sq = 0.0;
+        let mut z = [0.0];
+        for i in 0..n {
+            p.best_response(i, &x, &aux, tau, &mut z);
+            let d = z[0] - x[i];
+            lhs += d * grad[i] + p.c() * (z[0].abs() - x[i].abs());
+            dist_sq += d * d;
+        }
+        // c_τ = q·min τ_i; with Q = I and the exact quadratic the modulus
+        // is at least τ/2 — use the safe constant τ/2
+        assert!(
+            lhs <= -0.5 * tau * dist_sq + 1e-9,
+            "descent inequality violated: lhs={lhs}, bound={}",
+            -0.5 * tau * dist_sq
+        );
+    });
+}
+
+#[test]
+fn prop_fixed_point_iff_stationary() {
+    // Prop. 8(b) on generator instances: x* is a fixed point of x̂(·)
+    for_all(25, |rng| {
+        let m = 15 + rng.next_usize(15);
+        let n = 20 + rng.next_usize(20);
+        let inst = nesterov_lasso(m, n, 0.15, 1.0, rng.next_u64());
+        let x_star = inst.x_star.clone();
+        let p = LassoProblem::from_instance(inst);
+        let mut aux = vec![0.0; m];
+        p.init_aux(&x_star, &mut aux);
+        let tau = rng.uniform(0.1, 10.0);
+        let mut z = [0.0];
+        for i in 0..n {
+            let e = p.best_response(i, &x_star, &aux, tau, &mut z);
+            assert!(e < 1e-8, "x* not a fixed point at block {i}: E={e}");
+        }
+        // and a random non-stationary point is NOT a fixed point
+        let mut y = x_star.clone();
+        y[rng.next_usize(n)] += 1.0;
+        p.init_aux(&y, &mut aux);
+        let total: f64 = (0..n)
+            .map(|i| p.best_response(i, &y, &aux, tau, &mut z))
+            .sum();
+        assert!(total > 1e-6, "perturbed point behaves like a fixed point");
+    });
+}
+
+#[test]
+fn prop_simulator_monotone() {
+    for_all(200, |rng| {
+        let model = CostModel::default();
+        let flops = rng.uniform(1e3, 1e12);
+        let words = rng.uniform(0.0, 1e6);
+        let p1 = 1 + rng.next_usize(64);
+        let p2 = p1 + 1 + rng.next_usize(64);
+        // balanced work ⇒ more cores never slower on the compute term
+        let c1 = IterCost::balanced(flops, p1, words, 1.0);
+        let c2 = IterCost::balanced(flops, p2, words, 1.0);
+        let t1 = model.iter_time_s(&c1, p1);
+        let t2 = model.iter_time_s(&c2, p2);
+        // compute part shrinks; comm may grow — total can cross over only
+        // when comm dominates. Assert the compute-only ordering:
+        let comp1 = c1.flops_max_worker / (model.core_gflops * 1e9);
+        let comp2 = c2.flops_max_worker / (model.core_gflops * 1e9);
+        assert!(comp2 <= comp1 + 1e-15);
+        // and the full model stays finite/positive
+        assert!(t1 > 0.0 && t2 > 0.0 && t1.is_finite() && t2.is_finite());
+    });
+}
+
+#[test]
+fn prop_partition_covers_exactly() {
+    for_all(200, |rng| {
+        let n = 1 + rng.next_usize(200);
+        let p = match rng.next_usize(3) {
+            0 => BlockPartition::scalar(n),
+            1 => BlockPartition::uniform(n, 1 + rng.next_usize(n)),
+            _ => BlockPartition::by_count(n, 1 + rng.next_usize(n)),
+        };
+        assert_eq!(p.dim(), n);
+        let mut covered = vec![false; n];
+        for i in 0..p.n_blocks() {
+            for v in p.range(i) {
+                assert!(!covered[v], "index {v} covered twice");
+                covered[v] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "some index uncovered");
+        // block_of agrees with ranges
+        for v in (0..n).step_by(1 + n / 13) {
+            assert!(p.range(p.block_of(v)).contains(&v));
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Xoshiro256pp, depth: usize) -> Json {
+        match if depth > 2 { rng.next_usize(4) } else { rng.next_usize(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_normal() * 100.0 * 64.0).round() / 64.0),
+            3 => Json::Str(
+                (0..rng.next_usize(12))
+                    .map(|_| char::from(b'a' + rng.next_usize(26) as u8))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.next_usize(4)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_usize(4))
+                    .map(|k| (format!("k{k}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_all(300, |rng| {
+        let j = random_json(rng, 0);
+        let s = j.to_string_compact();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("parse {s:?}: {e}"));
+        assert_eq!(j, back, "roundtrip failed for {s}");
+    });
+}
+
+#[test]
+fn prop_incremental_residual_never_drifts() {
+    // failure-injection flavored: long random walks of block updates keep
+    // the incremental residual within f64 drift bounds of a fresh recompute
+    for_all(20, |rng| {
+        let m = 20 + rng.next_usize(20);
+        let n = 20 + rng.next_usize(40);
+        let inst = nesterov_lasso(m, n, 0.3, 1.0, rng.next_u64());
+        let p = LassoProblem::from_instance(inst);
+        let mut x = vec![0.0; n];
+        let mut aux = vec![0.0; m];
+        p.init_aux(&x, &mut aux);
+        for _ in 0..500 {
+            let i = rng.next_usize(n);
+            let d = rng.next_normal();
+            x[i] += d;
+            p.apply_block_delta(i, &[d], &mut aux);
+        }
+        let mut fresh = vec![0.0; m];
+        p.init_aux(&x, &mut fresh);
+        let drift = vector::dist2(&aux, &fresh) / vector::nrm2(&fresh).max(1.0);
+        assert!(drift < 1e-9, "relative drift {drift}");
+    });
+}
+
+#[test]
+fn prop_nesterov_generator_kkt() {
+    // the generator's certificate holds for every (m, n, sparsity, c)
+    for_all(30, |rng| {
+        let m = 10 + rng.next_usize(40);
+        let n = 10 + rng.next_usize(60);
+        let sparsity = rng.uniform(0.01, 0.5);
+        let c = rng.uniform(0.1, 10.0);
+        let inst = nesterov_lasso(m, n, sparsity, c, rng.next_u64());
+        let mut r = vec![0.0; m];
+        inst.a.matvec(&inst.x_star, &mut r);
+        for (ri, bi) in r.iter_mut().zip(&inst.b) {
+            *ri -= bi;
+        }
+        for i in 0..n {
+            let g = 2.0 * inst.a.col_dot(i, &r);
+            if inst.x_star[i] != 0.0 {
+                assert!((g + c * inst.x_star[i].signum()).abs() < 1e-8 * c.max(1.0));
+            } else {
+                assert!(g.abs() <= c * (1.0 + 1e-9));
+            }
+        }
+    });
+}
