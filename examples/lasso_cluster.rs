@@ -26,7 +26,7 @@ use flexa::runtime::{flexa_with_engine, BoundXlaEngine, RuntimeClient};
 use flexa::solvers::fista;
 use flexa::util::{render_plot, CsvWriter, PlotCfg};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> flexa::util::error::Result<()> {
     // the e2e artifact shape: 1024 variables, 512 samples, 2% nonzeros
     let (m, n) = (512, 1024);
     println!("== FLEXA end-to-end driver ==");

@@ -1,0 +1,13 @@
+"""Shared pytest setup for the L1/L2 test suite.
+
+Makes the ``compile`` package importable without an install step (the repo
+never ships a setup.py — python is build-time only). Runners without the
+JAX/Pallas toolchain skip gracefully via the module-level
+``pytest.importorskip`` calls in each test file.
+"""
+
+import os
+import sys
+
+# repo-root/python on sys.path so `from compile import ...` resolves
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

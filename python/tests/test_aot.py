@@ -7,6 +7,8 @@ import tempfile
 
 import pytest
 
+pytest.importorskip("jax", reason="JAX/Pallas toolchain not on this runner")
+
 from compile import aot, model
 
 

@@ -4,10 +4,14 @@ Hypothesis sweeps shapes (including ragged, non-tile-multiple sizes),
 magnitudes, and edge cases; assert_allclose at f32 tolerances.
 """
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas toolchain not on this runner")
+pytest.importorskip("hypothesis", reason="hypothesis not on this runner")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile import kernels

@@ -2,10 +2,14 @@
 numpy reference implementation of a full FLEXA iteration to pin down the
 semantics the rust coordinator relies on."""
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas toolchain not on this runner")
+pytest.importorskip("hypothesis", reason="hypothesis not on this runner")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile import model

@@ -1,5 +1,8 @@
 //! Bench: regenerate **Fig. 2** — LASSO 10⁵×5000 (scaled), 1% nonzeros,
-//! 8 vs 20 simulated cores (the parallel-scaling panel; Remark 5).
+//! 8 vs 20 simulated cores (the parallel-scaling panel; Remark 5), plus
+//! the measured worker-pool panel: real wall-clock speedups at
+//! `FLEXA_BENCH_THREADS` (default 1,2,4) next to the simulator's modeled
+//! axis.
 
 fn main() {
     let cfg = flexa::bench::BenchConfig::from_env();

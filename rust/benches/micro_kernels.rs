@@ -79,7 +79,8 @@ fn main() {
     });
     results.push((r, 2.0 * 100_000.0));
 
-    // one full FLEXA best-response pass on a real instance
+    // one full FLEXA best-response pass on a real instance, at 1 worker
+    // and at 4 pool workers (quantifies the persistent-pool win)
     let p = LassoProblem::from_instance(nesterov_lasso(m, n, 0.05, 1.0, 5));
     let xp = vec![0.1; n];
     let mut aux = vec![0.0; m];
@@ -87,13 +88,24 @@ fn main() {
     let mut z = vec![0.0; n];
     let mut e = vec![0.0; n];
     let scratch: Vec<f64> = vec![];
-    let r = bench("FLEXA best-response pass 512x1024", budget, || {
-        flexa::coordinator::workers::compute_best_responses(
-            &p, &xp, &aux, &scratch, 1.0, &mut z, &mut e, 1,
+    let br_flops: f64 = (0..n).map(|i| p.flops_best_response(i)).sum();
+    // chunk table precomputed once, as the coordinator hot loop does — the
+    // timed region is the kernel pass alone
+    let br_chunks = flexa::parallel::reduce::best_response_chunks(&p);
+    for threads in [1usize, 4] {
+        let pool = flexa::parallel::WorkerPool::new(threads);
+        let r = bench(
+            &format!("FLEXA best-response pass 512x1024 t={threads}"),
+            budget,
+            || {
+                flexa::parallel::par_best_responses(
+                    &pool, &p, &xp, &aux, &scratch, 1.0, &mut z, &mut e, &br_chunks,
+                );
+                std::hint::black_box(&z);
+            },
         );
-        std::hint::black_box(&z);
-    });
-    results.push((r, (0..n).map(|i| p.flops_best_response(i)).sum()));
+        results.push((r, br_flops));
+    }
 
     println!("\n== micro_kernels ==");
     for (r, flops) in &results {

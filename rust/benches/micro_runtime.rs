@@ -3,12 +3,23 @@
 //! manifest shapes. The XLA-vs-native gap quantifies the PJRT
 //! upload/execute overhead on CPU (§Perf in EXPERIMENTS.md).
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("[micro_runtime] built without the `pjrt` feature — skipping XLA benchmarks");
+}
+
+#[cfg(feature = "pjrt")]
 use flexa::bench::bench;
+#[cfg(feature = "pjrt")]
 use flexa::datagen::nesterov_lasso;
+#[cfg(feature = "pjrt")]
 use flexa::problems::LassoProblem;
+#[cfg(feature = "pjrt")]
 use flexa::runtime::{BoundXlaEngine, Manifest, NativeEngine, RuntimeClient, StepEngine};
+#[cfg(feature = "pjrt")]
 use flexa::util::Timer;
 
+#[cfg(feature = "pjrt")]
 fn main() {
     let Ok(manifest) = Manifest::load(Manifest::default_dir()) else {
         eprintln!("[micro_runtime] artifacts missing — run `make artifacts`; skipping");

@@ -31,17 +31,30 @@ pub struct BenchConfig {
     /// calibrated cost model shared by every run
     pub model: CostModel,
     pub seed: u64,
+    /// measured worker-thread axis (`FLEXA_BENCH_THREADS`, default 1,2,4)
+    pub threads: Vec<usize>,
 }
 
 impl BenchConfig {
     pub fn from_env() -> Self {
         let get = |k: &str| std::env::var(k).ok().and_then(|v| v.parse::<f64>().ok());
+        let threads = std::env::var("FLEXA_BENCH_THREADS")
+            .ok()
+            .map(|v| {
+                v.split(',')
+                    .filter_map(|t| t.trim().parse::<usize>().ok())
+                    .filter(|&t| t >= 1)
+                    .collect::<Vec<_>>()
+            })
+            .filter(|v| !v.is_empty())
+            .unwrap_or_else(|| vec![1, 2, 4]);
         Self {
             scale: get("FLEXA_BENCH_SCALE").unwrap_or(0.12).clamp(0.01, 1.0),
             budget_s: get("FLEXA_BENCH_BUDGET").unwrap_or(5.0),
             out_dir: std::env::var("FLEXA_BENCH_OUT").unwrap_or_else(|_| "results".into()),
             model: CostModel::calibrated(),
             seed: get("FLEXA_BENCH_SEED").map(|s| s as u64).unwrap_or(42),
+            threads,
         }
     }
 
@@ -238,7 +251,11 @@ pub fn fig1(cfg: &BenchConfig) -> Vec<FigureOutput> {
 }
 
 /// **Fig. 2** — LASSO 100 000 vars × 5000 rows (scaled), 1% nonzeros, on
-/// 8 vs 20 simulated cores.
+/// 8 vs 20 simulated cores; plus the **measured** worker-thread scaling
+/// panel: the same FLEXA run on the real [`crate::parallel::WorkerPool`]
+/// at `cfg.threads`, reporting wall-clock speedups next to the
+/// simulator's modeled axis (iterates are bitwise-identical across
+/// thread counts, so the comparison is apples-to-apples).
 pub fn fig2(cfg: &BenchConfig) -> Vec<FigureOutput> {
     let (m, n) = cfg.dims(5000, 100_000);
     let inst = nesterov_lasso(m, n, 0.01, 1.0, cfg.seed + 2);
@@ -256,7 +273,54 @@ pub fn fig2(cfg: &BenchConfig) -> Vec<FigureOutput> {
             1e-6,
         ));
     }
+    outputs.push(fig2_measured_threads(cfg, &problem));
     outputs
+}
+
+/// The measured `--threads` panel of Fig. 2 (wall clock on this machine).
+///
+/// Every run executes a **fixed** iteration count (tol = 0, no wall cap),
+/// so each thread count performs exactly the same work and the wall-clock
+/// ratio is a true speedup — a shared time budget would let slow runs
+/// terminate early and flatten every ratio toward 1.0x.
+fn fig2_measured_threads(cfg: &BenchConfig, problem: &LassoProblem) -> FigureOutput {
+    let x0 = vec![0.0; problem.n()];
+    let avail = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let mut reports = Vec::new();
+    let points = crate::bench::harness::bench_scaling(&cfg.threads, |threads| {
+        let mut common =
+            cfg.common(&format!("FLEXA σ=0.5 threads={threads}"), 8, 1e-6, TermMetric::RelErr);
+        common.threads = threads;
+        common.max_iters = 150;
+        common.tol = 0.0;
+        common.max_wall_s = f64::MAX;
+        common.trace_every = 50;
+        let o = FlexaOptions { common, selection: SelectionRule::sigma(0.5), inexact: None };
+        reports.push(flexa(problem, &x0, &o));
+    });
+    let mut table = TextTable::new(&["threads", "wall [s]", "iters", "rel.err", "speedup vs t=1"]);
+    for (p, r) in points.iter().zip(&reports) {
+        table.row(vec![
+            p.threads.to_string(),
+            format!("{:.3}", p.wall_s),
+            r.iters.to_string(),
+            format!("{:.2e}", r.final_rel_err),
+            format!("{:.2}x", p.speedup),
+        ]);
+    }
+    let text = format!(
+        "Fig.2 measured worker-pool scaling ({} hardware threads available; \
+         iterates bitwise-identical across thread counts)\n{}",
+        avail,
+        table.render()
+    );
+    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    let _ = std::fs::write(format!("{}/fig2_measured_threads.txt", cfg.out_dir), &text);
+    FigureOutput {
+        id: "fig2_measured_threads".into(),
+        traces: reports.into_iter().map(|r| r.trace).collect(),
+        text,
+    }
 }
 
 /// **Table I** — the logistic datasets (full-size spec + the generated
@@ -568,6 +632,65 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
     outputs
 }
 
+/// CI bench-smoke: one tiny fig1-style LASSO through the measured-threads
+/// harness in a few seconds; writes `<out>/BENCH_smoke.json` so the perf
+/// trajectory accumulates commit-over-commit as a CI workflow artifact.
+pub fn smoke(cfg: &BenchConfig) -> FigureOutput {
+    use crate::util::Json;
+    let (m, n) = (60usize, 80usize);
+    let inst = nesterov_lasso(m, n, 0.05, 1.0, cfg.seed);
+    let problem = LassoProblem::from_instance(inst);
+    let x0 = vec![0.0; problem.n()];
+    let mut reports = Vec::new();
+    let points = crate::bench::harness::bench_scaling(&cfg.threads, |threads| {
+        let mut common =
+            cfg.common(&format!("smoke threads={threads}"), 8, 1e-6, TermMetric::RelErr);
+        common.threads = threads;
+        common.max_iters = 3000;
+        common.max_wall_s = 30.0;
+        let o = FlexaOptions { common, selection: SelectionRule::sigma(0.5), inexact: None };
+        reports.push(flexa(&problem, &x0, &o));
+    });
+    let runs = Json::arr(points.iter().zip(&reports).map(|(p, r)| {
+        Json::obj(vec![
+            ("threads", Json::Num(p.threads as f64)),
+            ("wall_s", Json::Num(p.wall_s)),
+            ("speedup", Json::Num(p.speedup)),
+            ("iters", Json::Num(r.iters as f64)),
+            ("rel_err", Json::Num(r.final_rel_err)),
+            ("gflop", Json::Num(r.flops / 1e9)),
+            ("converged", Json::Bool(r.converged())),
+        ])
+    }));
+    let payload = Json::obj(vec![
+        ("bench", Json::str("fig1_lasso_smoke")),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("sigma", Json::Num(0.5)),
+        ("runs", runs),
+    ]);
+    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    let path = format!("{}/BENCH_smoke.json", cfg.out_dir);
+    let _ = std::fs::write(&path, payload.to_string_compact());
+    let mut table = TextTable::new(&["threads", "wall [s]", "iters", "rel.err", "speedup"]);
+    for (p, r) in points.iter().zip(&reports) {
+        table.row(vec![
+            p.threads.to_string(),
+            format!("{:.3}", p.wall_s),
+            r.iters.to_string(),
+            format!("{:.2e}", r.final_rel_err),
+            format!("{:.2}x", p.speedup),
+        ]);
+    }
+    let text =
+        format!("bench-smoke (tiny fig1-style LASSO {m}x{n}) -> {path}\n{}", table.render());
+    FigureOutput {
+        id: "bench_smoke".into(),
+        traces: reports.into_iter().map(|r| r.trace).collect(),
+        text,
+    }
+}
+
 /// Instantiate a problem from a config spec (CLI `solve` path).
 pub fn build_problem(spec: &ProblemSpec) -> Box<dyn Problem> {
     match spec {
@@ -603,6 +726,7 @@ mod tests {
             out_dir: std::env::temp_dir().join("flexa_bench_test").display().to_string(),
             model: CostModel::default(),
             seed: 1,
+            threads: vec![1, 2],
         }
     }
 
@@ -631,6 +755,21 @@ mod tests {
             fl.x_to_tol(XAxis::Iterations, YMetric::RelErr, 1e-4).is_some(),
             "FLEXA σ=0.5 did not reach 1e-4"
         );
+    }
+
+    #[test]
+    fn smoke_writes_json_and_converges() {
+        let cfg = tiny_cfg();
+        let out = smoke(&cfg);
+        assert!(out.text.contains("BENCH_smoke.json"));
+        let path = format!("{}/BENCH_smoke.json", cfg.out_dir);
+        let text = std::fs::read_to_string(&path).expect("smoke json written");
+        let json = crate::util::Json::parse(&text).expect("valid json");
+        let runs = json.get("runs").and_then(|r| r.as_arr()).expect("runs array");
+        assert_eq!(runs.len(), cfg.threads.len());
+        for r in runs {
+            assert_eq!(r.get("converged"), Some(&crate::util::Json::Bool(true)));
+        }
     }
 
     #[test]

@@ -69,6 +69,36 @@ pub fn bench(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
     }
 }
 
+/// One point on the measured `--threads` scaling axis.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub threads: usize,
+    pub wall_s: f64,
+    /// wall-clock speedup versus the first (baseline) thread count
+    pub speedup: f64,
+}
+
+/// Measured-threads harness: run `f(threads)` once per entry and report
+/// wall-clock speedups versus the first entry. This is the real-hardware
+/// axis that `fig2` prints next to the cost-model simulator's modeled
+/// one (the workload itself is bitwise-identical across thread counts,
+/// so the runs are directly comparable).
+pub fn bench_scaling(threads: &[usize], mut f: impl FnMut(usize)) -> Vec<ScalingPoint> {
+    let mut out = Vec::with_capacity(threads.len());
+    let mut base = 0.0;
+    for (k, &t) in threads.iter().enumerate() {
+        let timer = Timer::start();
+        f(t);
+        let wall_s = timer.elapsed_s();
+        if k == 0 {
+            base = wall_s;
+        }
+        let speedup = if wall_s > 0.0 { base / wall_s } else { 0.0 };
+        out.push(ScalingPoint { threads: t, wall_s, speedup });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +120,19 @@ mod tests {
     fn gflops_computation() {
         let r = BenchResult { name: "x".into(), iters: 1, mean_s: 1e-3, min_s: 1e-3, p50_s: 1e-3 };
         assert!((r.gflops(2e6) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_reports_baseline_speedup_one() {
+        let mut calls = Vec::new();
+        let pts = bench_scaling(&[1, 2, 4], |t| {
+            calls.push(t);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert_eq!(calls, vec![1, 2, 4]);
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].threads, 1);
+        assert!((pts[0].speedup - 1.0).abs() < 1e-12);
+        assert!(pts.iter().all(|p| p.wall_s > 0.0));
     }
 }

@@ -1,9 +1,11 @@
 //! Command-line interface (hand-rolled; clap is not in the offline crate
 //! set). Subcommands:
 //!
-//! * `flexa solve --config <file.toml>` — run an experiment config;
-//! * `flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|all>` —
-//!   regenerate the paper's figures/tables into `results/`;
+//! * `flexa solve --config <file.toml> [--threads N]` — run an experiment
+//!   config (`--threads` overrides the worker-pool width of every solver);
+//! * `flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|smoke|all>` —
+//!   regenerate the paper's figures/tables into `results/` (`smoke` is the
+//!   seconds-long CI target that also writes `BENCH_smoke.json`);
 //! * `flexa runtime-check` — load + execute every artifact and compare
 //!   against the native engine (the L1↔L3 smoke test);
 //! * `flexa info` — platform, artifact, and cost-model report.
@@ -18,8 +20,9 @@ use crate::coordinator::{
 };
 use crate::metrics::{Trace, XAxis, YMetric};
 use crate::solvers;
+use crate::util::error::{Context, Result};
 use crate::util::{CsvWriter, PlotCfg};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{anyhow, bail};
 use args::Args;
 
 /// Entry point for the `flexa` binary.
@@ -52,15 +55,21 @@ flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
        (Facchinei, Scutari, Sagratella; IEEE TSP 2015)
 
 USAGE:
-  flexa solve --config <file.toml> [--quiet|--verbose]
-  flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|all>
+  flexa solve --config <file.toml> [--threads N] [--quiet|--verbose]
+  flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|smoke|all>
   flexa runtime-check
   flexa info
 
+OPTIONS:
+  --threads N         override the worker-thread count of every solver in
+                      the config (the real parallelism axis; simulated
+                      cores stay a separate knob)
+
 ENV:
-  FLEXA_BENCH_SCALE   instance scale vs the paper (default 0.2)
-  FLEXA_BENCH_BUDGET  seconds per solver run (default 15)
-  FLEXA_ARTIFACTS     artifact directory (default ./artifacts)";
+  FLEXA_BENCH_SCALE    instance scale vs the paper (default 0.2)
+  FLEXA_BENCH_BUDGET   seconds per solver run (default 15)
+  FLEXA_BENCH_THREADS  comma list for the measured --threads axis (1,2,4)
+  FLEXA_ARTIFACTS      artifact directory (default ./artifacts)";
 
 fn cmd_solve(args: &Args) -> Result<i32> {
     let path = args
@@ -71,6 +80,9 @@ fn cmd_solve(args: &Args) -> Result<i32> {
     let x0 = vec![0.0; problem.n()];
     let model = crate::simulator::CostModel::calibrated();
 
+    // `--threads` overrides every solver's configured worker count
+    let threads_override = args.value_usize("threads");
+
     let mut traces: Vec<Trace> = Vec::new();
     for spec in &cfg.solvers {
         let term = if problem.v_star().is_some() { TermMetric::RelErr } else { TermMetric::Merit };
@@ -80,7 +92,7 @@ fn cmd_solve(args: &Args) -> Result<i32> {
             tol: cfg.tol,
             term,
             cores: spec.cores,
-            threads: spec.threads,
+            threads: threads_override.unwrap_or(spec.threads),
             trace_every: cfg.trace_every,
             cost_model: model,
             name: spec.name.clone(),
@@ -177,6 +189,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         "fig5" => run(bench::fig5(&cfg)),
         "table1" => run(vec![bench::table1(&cfg)]),
         "ablations" => run(bench::ablations(&cfg)),
+        "smoke" => run(vec![bench::smoke(&cfg)]),
         "all" => {
             run(vec![bench::table1(&cfg)]);
             run(bench::fig1(&cfg));
@@ -191,6 +204,16 @@ fn cmd_bench(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_runtime_check() -> Result<i32> {
+    println!(
+        "runtime-check needs the `pjrt` feature (external xla crate); \
+         this build ships the native engine only"
+    );
+    Ok(0)
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_runtime_check() -> Result<i32> {
     use crate::problems::Problem;
     let client = crate::runtime::RuntimeClient::from_default_dir()?;

@@ -4,6 +4,46 @@
 //! into concrete problems (`datagen`) and solver options (`coordinator`,
 //! `solvers`). Keeping config free of solver types avoids cycles and makes
 //! the config surface a stable, documented contract.
+//!
+//! # TOML reference
+//!
+//! ```toml
+//! name = "fig1-smoke"
+//! solvers = "flexa, fista"       # comma-separated solver names
+//! sigma = 0.5                    # shared defaults, overridable per solver
+//! cores = 4
+//! threads = 1
+//!
+//! [problem]
+//! kind = "lasso"                 # lasso | group-lasso | logistic | nonconvex-qp
+//! m = 90
+//! n = 100
+//!
+//! [solver.flexa]                 # per-solver overrides
+//! sigma = 0.5
+//! threads = 4
+//!
+//! [run]
+//! max_iters = 500
+//! tol = 1e-6
+//! ```
+//!
+//! ## `cores` vs `threads`
+//!
+//! These are two *independent* axes and both exist on purpose:
+//!
+//! * `cores` — the **simulated** processor count P fed to the cluster
+//!   cost model; it sets the figures' modeled time axis and never spawns
+//!   anything.
+//! * `threads` — the **physical** worker count of the per-solve
+//!   [`WorkerPool`](crate::parallel::WorkerPool) (default 1). `threads =
+//!   N` spawns N−1 OS workers once per solve and parallelizes the
+//!   prelude, best responses, the `M^k` reduction and the selective aux
+//!   update for real wall-clock speedups. Iterates are guaranteed
+//!   bitwise-identical for every `threads` value (fixed chunk geometry +
+//!   ordered reductions — see `crate::parallel`), so changing it is
+//!   always safe. The CLI flag `--threads N` overrides every solver's
+//!   configured value.
 
 pub mod toml;
 

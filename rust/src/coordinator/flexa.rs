@@ -14,19 +14,38 @@
 //! 5. incremental auxiliary update (`|S^k|` column axpys — the selective
 //!    saving), objective bookkeeping, τ controller (double-and-discard /
 //!    halve heuristic of §VI-A).
+//!
+//! Steps 1, 2, 3 (the `M^k` reduction) and 5 run on a persistent
+//! [`WorkerPool`] created once per solve; fixed chunk geometry keeps the
+//! iterates bitwise-identical for any `threads ≥ 1` (see
+//! [`crate::parallel`]).
 
 use super::driver::RunState;
 use super::stepsize::{armijo_accept, StepRule};
 use super::tau::{TauController, TauDecision, TauOptions};
-use super::workers::compute_best_responses;
 use super::{FlexaOptions, SolveReport, StopReason};
 use crate::linalg::vector;
 use crate::metrics::IterCost;
+use crate::parallel::{self, WorkerPool};
 use crate::problems::Problem;
 use crate::rng::Xoshiro256pp;
 
-/// Run FLEXA from `x0`. See [`FlexaOptions`].
+/// Run FLEXA from `x0`. See [`FlexaOptions`]. Builds one per-solve
+/// [`WorkerPool`] from `opts.common.threads` (workers are spawned once
+/// here, never per iteration).
 pub fn flexa(problem: &dyn Problem, x0: &[f64], opts: &FlexaOptions) -> SolveReport {
+    let pool = WorkerPool::new(opts.common.threads);
+    flexa_with_pool(problem, x0, opts, &pool)
+}
+
+/// FLEXA on a caller-provided worker pool (reusable across solves;
+/// `opts.common.threads` is superseded by the pool's worker count).
+pub fn flexa_with_pool(
+    problem: &dyn Problem,
+    x0: &[f64],
+    opts: &FlexaOptions,
+    pool: &WorkerPool,
+) -> SolveReport {
     let n = problem.n();
     assert_eq!(x0.len(), n, "x0 dimension mismatch");
     let blocks = problem.blocks();
@@ -51,6 +70,16 @@ pub fn flexa(problem: &dyn Problem, x0: &[f64], opts: &FlexaOptions) -> SolveRep
     let mut x_trial = vec![0.0; n];
     let mut aux_trial = vec![0.0; problem.aux_len()];
 
+    // pool-parallel pass tables & buffers — fixed chunk geometry, so every
+    // pass is bitwise-identical for any worker count
+    let br_chunks = parallel::reduce::best_response_chunks(problem);
+    let prl_chunks = parallel::reduce::prelude_chunks(problem);
+    let aux_chunks = parallel::row_chunks(problem.aux_len());
+    let e_chunks = parallel::chunks_of(nb, parallel::MAX_CHUNKS);
+    let mut max_partials: Vec<f64> = Vec::new();
+    let mut dx = vec![0.0; n]; // γ-scaled step, read by the aux fan-out
+    let mut moved = vec![false; nb];
+
     let tau_opts = common
         .tau
         .unwrap_or_else(|| TauOptions::paper(problem.tau_init(), problem.tau_min()));
@@ -71,18 +100,9 @@ pub fn flexa(problem: &dyn Problem, x0: &[f64], opts: &FlexaOptions) -> SolveRep
         let tau = tau_ctl.tau();
 
         // ---- prelude + parallel best responses (S.3) ----
-        if !scratch.is_empty() {
-            problem.prelude(&x, &aux, &mut scratch);
-        }
-        compute_best_responses(
-            problem,
-            &x,
-            &aux,
-            &scratch,
-            tau,
-            &mut zhat,
-            &mut e,
-            common.threads,
+        parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
+        parallel::par_best_responses(
+            pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
         );
 
         // inexact solves: bounded perturbation ε_i^k = eps0·γ^k (Thm 1(iv))
@@ -99,8 +119,9 @@ pub fn flexa(problem: &dyn Problem, x0: &[f64], opts: &FlexaOptions) -> SolveRep
             }
         }
 
-        // ---- greedy selection (S.2) ----
-        let m_k = opts.selection.select(&e, &mut sel);
+        // ---- greedy selection (S.2): pool-parallel M^k reduction ----
+        let m_k = parallel::par_max(pool, &e, &e_chunks, &mut max_partials);
+        opts.selection.select_with_max(&e, m_k, &mut sel);
         state.last_ebound = m_k;
 
         // ---- Armijo line search (Remark 4), if configured ----
@@ -140,28 +161,42 @@ pub fn flexa(problem: &dyn Problem, x0: &[f64], opts: &FlexaOptions) -> SolveRep
         }
 
         // ---- memory step (S.4), saving state for possible τ-rollback ----
+        // The γ-scaled deltas and the x update stay sequential (O(n),
+        // cheap); the |S^k| aux-column axpys — the selective-update hot
+        // path — fan out over fixed aux-row chunks. Each chunk applies the
+        // selected blocks in order, so every aux element sees the same
+        // addition order as the sequential path (bitwise-identical).
         aux_save.copy_from_slice(&aux);
         x_old.copy_from_slice(&x);
         let mut active = 0usize;
         let mut update_flops = 0.0;
         for &i in &sel {
             let r = blocks.range(i);
-            let mut moved = false;
-            for (t, j) in r.clone().enumerate() {
-                delta[t] = gamma * (zhat[j] - x[j]);
-                if delta[t] != 0.0 {
-                    moved = true;
+            let mut any = false;
+            for j in r.clone() {
+                let d = gamma * (zhat[j] - x[j]);
+                dx[j] = d;
+                if d != 0.0 {
+                    any = true;
                 }
             }
-            if moved {
-                for (t, j) in r.clone().enumerate() {
-                    x[j] += delta[t];
+            moved[i] = any;
+            if any {
+                for j in r {
+                    x[j] += dx[j];
                 }
-                problem.apply_block_delta(i, &delta[..r.len()], &mut aux);
                 update_flops += problem.flops_aux_update(i);
                 active += 1;
             }
         }
+        parallel::for_each_row_chunk(pool, &mut aux, &aux_chunks, &|_c, rows, aux_rows| {
+            for &i in &sel {
+                if moved[i] {
+                    let r = blocks.range(i);
+                    problem.apply_block_delta_rows(i, &dx[r], aux_rows, rows.clone());
+                }
+            }
+        });
 
         let v_new = problem.v_val(&x, &aux);
 

@@ -19,15 +19,32 @@
 
 use super::driver::RunState;
 use super::tau::{TauController, TauDecision, TauOptions};
-use super::workers::compute_best_responses;
 use super::{GaussJacobiOptions, SolveReport, StopReason};
 use crate::linalg::ProcessorAssignment;
 use crate::metrics::IterCost;
+use crate::parallel::{self, WorkerPool};
 use crate::problems::Problem;
 
 /// Run Gauss-Jacobi (Algorithm 2) or GJ-with-Selection (Algorithm 3,
-/// when `opts.selection` is set) from `x0`.
+/// when `opts.selection` is set) from `x0`. Builds one per-solve
+/// [`WorkerPool`] from `opts.common.threads`.
 pub fn gauss_jacobi(problem: &dyn Problem, x0: &[f64], opts: &GaussJacobiOptions) -> SolveReport {
+    let pool = WorkerPool::new(opts.common.threads);
+    gauss_jacobi_with_pool(problem, x0, opts, &pool)
+}
+
+/// Gauss-Jacobi on a caller-provided worker pool. The pool drives the
+/// Algorithm-3 selection prepass (prelude + Jacobi best responses + `M^k`
+/// reduction) and the delta merge; the within-processor Gauss-Seidel
+/// sweeps are a sequential dependency chain by construction (each update
+/// feeds the next best response) and stay on the calling thread — their
+/// parallelism across processors is what the cluster cost model charges.
+pub fn gauss_jacobi_with_pool(
+    problem: &dyn Problem,
+    x0: &[f64],
+    opts: &GaussJacobiOptions,
+    pool: &WorkerPool,
+) -> SolveReport {
     let n = problem.n();
     assert_eq!(x0.len(), n);
     let blocks = problem.blocks();
@@ -53,6 +70,13 @@ pub fn gauss_jacobi(problem: &dyn Problem, x0: &[f64], opts: &GaussJacobiOptions
     let mut z_buf = vec![0.0; max_block];
     let mut delta = vec![0.0; max_block];
 
+    // pool-parallel pass tables (fixed chunks ⇒ thread-count-invariant)
+    let br_chunks = parallel::reduce::best_response_chunks(problem);
+    let prl_chunks = parallel::reduce::prelude_chunks(problem);
+    let aux_chunks = parallel::row_chunks(problem.aux_len());
+    let e_chunks = parallel::chunks_of(nb, parallel::MAX_CHUNKS);
+    let mut max_partials: Vec<f64> = Vec::new();
+
     let tau_opts = common
         .tau
         .unwrap_or_else(|| TauOptions::paper(problem.tau_init(), problem.tau_min()));
@@ -71,23 +95,16 @@ pub fn gauss_jacobi(problem: &dyn Problem, x0: &[f64], opts: &GaussJacobiOptions
         iters = k + 1;
         let tau = tau_ctl.tau();
 
-        // ---- Algorithm 3: selection prepass (Jacobi best responses) ----
+        // ---- Algorithm 3: selection prepass (Jacobi best responses),
+        // fanned out over the persistent pool ----
         let mut prepass_flops = 0.0;
         if let Some(rule) = &opts.selection {
-            if !scratch.is_empty() {
-                problem.prelude(&x, &aux, &mut scratch);
-            }
-            compute_best_responses(
-                problem,
-                &x,
-                &aux,
-                &scratch,
-                tau,
-                &mut zhat,
-                &mut e,
-                common.threads,
+            parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
+            parallel::par_best_responses(
+                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
             );
-            let m_k = rule.select(&e, &mut sel);
+            let m_k = parallel::par_max(pool, &e, &e_chunks, &mut max_partials);
+            rule.select_with_max(&e, m_k, &mut sel);
             state.last_ebound = m_k;
             prepass_flops = problem.flops_prelude()
                 + (0..nb).map(|i| problem.flops_best_response(i)).sum::<f64>();
@@ -144,12 +161,16 @@ pub fn gauss_jacobi(problem: &dyn Problem, x0: &[f64], opts: &GaussJacobiOptions
         }
 
         // ---- merge: aux^{k+1} = aux^k + Σ_p (aux_p − aux^k) ----
-        for p in 0..p_procs {
-            let local = &aux_local[p];
-            for j in 0..aux.len() {
-                aux[j] += local[j] - aux_save[j];
+        // (the allreduce of a distributed run) row-chunked over the pool;
+        // per element the processor deltas add in p-order, exactly as the
+        // sequential double loop did — bitwise-identical for any threads.
+        parallel::for_each_row_chunk(pool, &mut aux, &aux_chunks, &|_c, rows, aux_rows| {
+            for local in aux_local.iter() {
+                for (k, j) in rows.clone().enumerate() {
+                    aux_rows[k] += local[j] - aux_save[j];
+                }
             }
-        }
+        });
         total_flops += (2 * p_procs * aux.len()) as f64;
 
         let v_new = problem.v_val(&x, &aux);

@@ -12,8 +12,8 @@ pub mod stepsize;
 pub mod tau;
 pub mod workers;
 
-pub use flexa::flexa;
-pub use gauss_jacobi::{gauss_jacobi, gj_flexa};
+pub use flexa::{flexa, flexa_with_pool};
+pub use gauss_jacobi::{gauss_jacobi, gauss_jacobi_with_pool, gj_flexa};
 pub use selection::SelectionRule;
 pub use stepsize::StepRule;
 pub use tau::{TauController, TauDecision, TauOptions};
@@ -45,7 +45,10 @@ pub struct CommonOptions {
     pub term: TermMetric,
     /// simulated processor count P (time axis of the figures)
     pub cores: usize,
-    /// physical worker threads
+    /// physical worker threads backing the per-solve
+    /// [`WorkerPool`](crate::parallel::WorkerPool) (1 = sequential; the
+    /// pool is created once per solve and iterates are bitwise-identical
+    /// for any value — see `crate::parallel` for the determinism contract)
     pub threads: usize,
     pub trace_every: usize,
     /// merit cadence (full-gradient cost; NOT charged to the simulated

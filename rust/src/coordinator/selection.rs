@@ -37,8 +37,17 @@ impl SelectionRule {
     /// Compute `S^k` (sorted ascending) from the error bounds `e`.
     /// Returns `M^k`. `out` is reused across iterations (no allocation).
     pub fn select(&self, e: &[f64], out: &mut Vec<usize>) -> f64 {
-        out.clear();
         let m = e.iter().fold(0.0f64, |a, &b| a.max(b));
+        self.select_with_max(e, m, out);
+        m
+    }
+
+    /// [`SelectionRule::select`] with a precomputed `M^k = max_i e_i` —
+    /// the coordinator feeds the pool-parallel reduction
+    /// (`parallel::par_max`) here, keeping only the cheap `S^k`-building
+    /// pass sequential.
+    pub fn select_with_max(&self, e: &[f64], m: f64, out: &mut Vec<usize>) {
+        out.clear();
         match self {
             SelectionRule::FullJacobi => {
                 out.extend(0..e.len());
@@ -70,7 +79,6 @@ impl SelectionRule {
                 out.sort_unstable();
             }
         }
-        m
     }
 }
 

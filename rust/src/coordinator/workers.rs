@@ -1,19 +1,33 @@
-//! Parallel best-response computation across worker threads.
+//! Worker-parallel best-response computation, backed by the persistent
+//! [`WorkerPool`](crate::parallel::WorkerPool).
 //!
 //! All cross-block coupling flows through the maintained auxiliary vector,
 //! so the Jacobi best responses of distinct blocks are embarrassingly
 //! parallel: workers read the shared `(x, aux, scratch)` and write into
-//! disjoint slices of `zhat`/`e` split at block boundaries. On this
-//! container `threads` defaults to 1 (single physical core) and the
-//! multi-core time axis comes from the cluster simulator; the threaded path
-//! keeps the coordinator honest about the concurrency structure and is
-//! exercised by tests with `threads > 1`.
+//! disjoint slices of `zhat`/`e` split at fixed block-aligned chunk
+//! boundaries (`parallel::block_chunks`).
+//!
+//! The seed spawned and joined fresh OS threads here on **every**
+//! iteration; the pool version broadcasts the pass to workers that were
+//! spawned once per solve, which is what makes `threads > 1` a measured
+//! win rather than thread-creation overhead. Because chunk boundaries
+//! depend only on the block partition and every output element is written
+//! by exactly one chunk, the results are bitwise-identical for any thread
+//! count — the `threaded_matches_sequential` guarantee below.
+//!
+//! This module is the thin, stable entry point; the chunk plumbing lives
+//! in [`crate::parallel::reduce`].
 
+use crate::parallel::{self, WorkerPool};
 use crate::problems::Problem;
 
-/// Compute `x̂_i(x, τ)` and `E_i` for **all** blocks, in parallel over
-/// `threads` workers. `zhat` has length n (variables), `e` length N
-/// (blocks), `scratch` is the problem's shared prelude output.
+/// Compute `x̂_i(x, τ)` and `E_i` for **all** blocks over the pool's
+/// workers. `zhat` has length n (variables), `e` length N (blocks),
+/// `scratch` is the problem's shared prelude output.
+///
+/// Convenience wrapper that builds the chunk table per call; the
+/// coordinator hot loops precompute it once per solve and call
+/// [`parallel::par_best_responses`] directly.
 pub fn compute_best_responses(
     problem: &dyn Problem,
     x: &[f64],
@@ -22,105 +36,103 @@ pub fn compute_best_responses(
     tau: f64,
     zhat: &mut [f64],
     e: &mut [f64],
-    threads: usize,
+    pool: &WorkerPool,
 ) {
-    let blocks = problem.blocks();
-    let nb = blocks.n_blocks();
-    let threads = threads.max(1).min(nb.max(1));
-    if threads == 1 {
-        for i in 0..nb {
-            let r = blocks.range(i);
-            e[i] = problem.best_response_with(i, x, aux, scratch, tau, &mut zhat[r]);
-        }
-        return;
-    }
-
-    // split block index space into contiguous chunks, then split zhat/e at
-    // the matching variable/block boundaries
-    let mut chunks: Vec<(usize, usize)> = Vec::with_capacity(threads);
-    for t in 0..threads {
-        let lo = t * nb / threads;
-        let hi = (t + 1) * nb / threads;
-        if lo < hi {
-            chunks.push((lo, hi));
-        }
-    }
-
-    std::thread::scope(|s| {
-        let mut z_rest = zhat;
-        let mut e_rest = e;
-        let mut var_off = 0usize;
-        let mut blk_off = 0usize;
-        for &(lo, hi) in &chunks {
-            let var_hi = blocks.range(hi - 1).end;
-            let (z_chunk, z_tail) = z_rest.split_at_mut(var_hi - var_off);
-            let (e_chunk, e_tail) = e_rest.split_at_mut(hi - blk_off);
-            z_rest = z_tail;
-            e_rest = e_tail;
-            let chunk_var_off = var_off;
-            var_off = var_hi;
-            blk_off = hi;
-            s.spawn(move || {
-                for i in lo..hi {
-                    let r = blocks.range(i);
-                    let local = (r.start - chunk_var_off)..(r.end - chunk_var_off);
-                    e_chunk[i - lo] = problem.best_response_with(
-                        i,
-                        x,
-                        aux,
-                        scratch,
-                        tau,
-                        &mut z_chunk[local],
-                    );
-                }
-            });
-        }
-    });
+    let chunks = parallel::reduce::best_response_chunks(problem);
+    parallel::par_best_responses(pool, problem, x, aux, scratch, tau, zhat, e, &chunks);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datagen::nesterov_lasso;
-    use crate::problems::LassoProblem;
+    use crate::datagen::{
+        dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
+    };
+    use crate::linalg::Matrix;
+    use crate::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, SvmProblem};
+
+    /// Bitwise determinism harness: best responses at `threads ∈
+    /// {2, 3, 4, 64}` must equal the sequential (threads = 1) pass.
+    fn assert_threads_match(problem: &dyn Problem, tau: f64, seed: u64) {
+        let n = problem.n();
+        let nb = problem.blocks().n_blocks();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal() * 0.4).collect();
+        let mut aux = vec![0.0; problem.aux_len()];
+        problem.init_aux(&x, &mut aux);
+
+        let mut scratch = vec![0.0; problem.prelude_len()];
+        let prl_chunks = parallel::reduce::prelude_chunks(problem);
+        let pool1 = WorkerPool::new(1);
+        parallel::par_prelude(&pool1, problem, &x, &aux, &mut scratch, &prl_chunks);
+
+        let mut z1 = vec![0.0; n];
+        let mut e1 = vec![0.0; nb];
+        compute_best_responses(problem, &x, &aux, &scratch, tau, &mut z1, &mut e1, &pool1);
+
+        for threads in [2usize, 3, 4, 64] {
+            let pool = WorkerPool::new(threads);
+            // the parallel prelude must reproduce the sequential scratch
+            let mut scratch_t = vec![0.0; problem.prelude_len()];
+            parallel::par_prelude(&pool, problem, &x, &aux, &mut scratch_t, &prl_chunks);
+            assert_eq!(scratch, scratch_t, "prelude diverged at threads={threads}");
+
+            let mut zt = vec![0.0; n];
+            let mut et = vec![0.0; nb];
+            compute_best_responses(problem, &x, &aux, &scratch_t, tau, &mut zt, &mut et, &pool);
+            assert_eq!(z1, zt, "zhat diverged at threads={threads}");
+            assert_eq!(e1, et, "E diverged at threads={threads}");
+
+            // the parallel max reduction must match the sequential fold
+            let e_chunks = parallel::chunks_of(et.len(), parallel::MAX_CHUNKS);
+            let mut partials = Vec::new();
+            let m_seq = e1.iter().fold(0.0f64, |a, &b| a.max(b));
+            let m_par = parallel::par_max(&pool, &et, &e_chunks, &mut partials);
+            assert_eq!(m_seq, m_par, "M^k diverged at threads={threads}");
+        }
+    }
 
     #[test]
     fn threaded_matches_sequential() {
         let p = LassoProblem::from_instance(nesterov_lasso(30, 50, 0.2, 1.0, 3));
-        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(1);
-        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.4).collect();
-        let mut aux = vec![0.0; p.aux_len()];
-        p.init_aux(&x, &mut aux);
-        let scratch: Vec<f64> = vec![];
-
-        let mut z1 = vec![0.0; p.n()];
-        let mut e1 = vec![0.0; p.blocks().n_blocks()];
-        compute_best_responses(&p, &x, &aux, &scratch, 0.8, &mut z1, &mut e1, 1);
-
-        for threads in [2, 3, 7, 64] {
-            let mut zt = vec![0.0; p.n()];
-            let mut et = vec![0.0; p.blocks().n_blocks()];
-            compute_best_responses(&p, &x, &aux, &scratch, 0.8, &mut zt, &mut et, threads);
-            assert_eq!(z1, zt, "threads={threads}");
-            assert_eq!(e1, et, "threads={threads}");
-        }
+        assert_threads_match(&p, 0.8, 1);
     }
 
     #[test]
     fn group_blocks_threaded() {
         use crate::problems::GroupLassoProblem;
         let p = GroupLassoProblem::from_instance(nesterov_lasso(20, 24, 0.2, 1.0, 9), 4);
-        let x = vec![0.1; p.n()];
-        let mut aux = vec![0.0; p.aux_len()];
-        p.init_aux(&x, &mut aux);
-        let scratch: Vec<f64> = vec![];
-        let mut z1 = vec![0.0; p.n()];
-        let mut e1 = vec![0.0; p.blocks().n_blocks()];
-        compute_best_responses(&p, &x, &aux, &scratch, 1.0, &mut z1, &mut e1, 1);
-        let mut z2 = vec![0.0; p.n()];
-        let mut e2 = vec![0.0; p.blocks().n_blocks()];
-        compute_best_responses(&p, &x, &aux, &scratch, 1.0, &mut z2, &mut e2, 4);
-        assert_eq!(z1, z2);
-        assert_eq!(e1, e2);
+        assert_threads_match(&p, 1.0, 2);
+    }
+
+    #[test]
+    fn logistic_threaded_with_parallel_prelude() {
+        let p = LogisticProblem::from_instance(logistic_like(LogisticPreset::Gisette, 0.012, 5));
+        assert_threads_match(&p, 0.5, 3);
+    }
+
+    #[test]
+    fn svm_threaded_matches_sequential() {
+        // reuse the logistic generator's labelled data for the ℓ2-SVM
+        let inst = logistic_like(LogisticPreset::Gisette, 0.012, 7);
+        let p = SvmProblem::new(inst.y, &inst.labels, inst.c.max(0.1));
+        assert_threads_match(&p, 0.7, 4);
+    }
+
+    #[test]
+    fn nonconvex_qp_threaded_matches_sequential() {
+        let p = NonconvexQpProblem::from_instance(nonconvex_qp(30, 40, 0.1, 10.0, 50.0, 1.0, 6));
+        let tau = p.tau_init(); // ≥ tau_min: subproblems stay strongly convex
+        assert_threads_match(&p, tau, 5);
+    }
+
+    #[test]
+    fn dictionary_code_update_threaded() {
+        // the dictionary learner's S-step with D fixed is a LASSO in the
+        // codes; run the pool over that block structure
+        let inst = dictionary_instance(24, 16, 10, 0.4, 0.01, 8);
+        let b: Vec<f64> = inst.y.col(0).to_vec();
+        let p = LassoProblem::new(Matrix::Dense(inst.d_true.clone()), b, inst.c, None);
+        assert_threads_match(&p, 0.5, 6);
     }
 }

@@ -11,10 +11,20 @@
 //!   (LASSO, group LASSO, sparse logistic regression, nonconvex QP), the
 //!   cluster cost-model simulator and the benchmark harness regenerating
 //!   every figure/table of the paper.
+//! * **Parallel runtime (`parallel`)** — a persistent
+//!   [`parallel::WorkerPool`] created once per solve (never per
+//!   iteration) that owns the FLEXA hot path: the per-block best
+//!   responses, the row-chunked prelude (logistic weights), the `M^k`
+//!   max reduction feeding selection, and the post-selection aux axpys.
+//!   Fixed chunk boundaries + ordered reductions make the iterates
+//!   bitwise-identical for any `threads ≥ 1`, so the measured
+//!   `--threads` wall-clock axis and the simulator's modeled axis
+//!   describe the same trajectories.
 //! * **L2/L1 (python/compile, build-time only)** — JAX step models composed
 //!   from Pallas kernels, AOT-lowered to HLO text; loaded and executed from
-//!   rust through the PJRT C API (`runtime` module). Python never runs on
-//!   the request path.
+//!   rust through the PJRT C API (`runtime` module, behind the `pjrt`
+//!   feature since the XLA bindings are an external crate). Python never
+//!   runs on the request path.
 //!
 //! Quickstart:
 //!
@@ -37,6 +47,7 @@ pub mod coordinator;
 pub mod datagen;
 pub mod linalg;
 pub mod metrics;
+pub mod parallel;
 pub mod problems;
 pub mod rng;
 pub mod runtime;

@@ -162,6 +162,18 @@ impl DenseMatrix {
         vector::axpy(alpha, self.col(j), y);
     }
 
+    /// `y_rows += alpha * A_j[rows]` (row-ranged axpy; `y_rows = y[rows]`).
+    #[inline]
+    pub fn col_axpy_range(
+        &self,
+        j: usize,
+        alpha: f64,
+        y_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        vector::axpy(alpha, &self.col(j)[rows], y_rows);
+    }
+
     /// `A_jᵀ y` — single-column gradient component.
     #[inline]
     pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {

@@ -74,6 +74,22 @@ impl Matrix {
         }
     }
 
+    /// `y_rows += alpha * A_j[rows]` where `y_rows = y[rows]` — the
+    /// row-ranged axpy behind the pool-parallel selective aux update.
+    #[inline]
+    pub fn col_axpy_range(
+        &self,
+        j: usize,
+        alpha: f64,
+        y_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        match self {
+            Matrix::Dense(a) => a.col_axpy_range(j, alpha, y_rows, rows),
+            Matrix::Sparse(a) => a.col_axpy_range(j, alpha, y_rows, rows),
+        }
+    }
+
     /// `Σ_i A_ij² w_i` — weighted squared column dot.
     #[inline]
     pub fn col_sq_weighted_dot(&self, j: usize, w: &[f64]) -> f64 {

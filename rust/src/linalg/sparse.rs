@@ -151,6 +151,25 @@ impl CscMatrix {
         }
     }
 
+    /// `y_rows += alpha * A_j[rows]` (row-ranged axpy; `y_rows = y[rows]`).
+    /// Row indices are sorted within a column, so the window is found by
+    /// two binary searches.
+    #[inline]
+    pub fn col_axpy_range(
+        &self,
+        j: usize,
+        alpha: f64,
+        y_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        let (rix, vals) = self.col(j);
+        let lo = rix.partition_point(|&i| i < rows.start);
+        let hi = rix.partition_point(|&i| i < rows.end);
+        for k in lo..hi {
+            y_rows[rix[k] - rows.start] += alpha * vals[k];
+        }
+    }
+
     /// Squared column norms.
     pub fn col_sq_norms(&self) -> Vec<f64> {
         (0..self.ncols)

@@ -1,0 +1,33 @@
+//! Parallel execution layer: a persistent worker pool plus fixed-chunk
+//! work geometry and ordered reductions.
+//!
+//! The seed parallelized only the best-response pass, by spawning and
+//! joining fresh OS threads every iteration (`std::thread::scope`), which
+//! made `threads > 1` slower than sequential on anything but huge blocks.
+//! This layer replaces that with the structure the paper's scaling story
+//! (Fig. 2) needs on real hardware:
+//!
+//! * [`pool::WorkerPool`] — `threads − 1` OS workers spawned **once per
+//!   solve**, barrier-style job handoff per pass;
+//! * [`partition`] — chunk boundaries that depend only on the problem
+//!   size, never on the worker count;
+//! * [`reduce`] — chunked passes (best responses, prelude, selective aux
+//!   update) and ordered reductions (selection max, chunked objective)
+//!   built on the pool.
+//!
+//! **Determinism contract:** every helper here produces bitwise-identical
+//! results for any `threads ≥ 1`, because (a) each output element is
+//! written by exactly one fixed chunk, with the same inner loop as the
+//! sequential path, and (b) reductions combine per-chunk partials in chunk
+//! order on the calling thread. The coordinator's
+//! `threaded_matches_sequential` guarantee rests on this contract.
+
+pub mod partition;
+pub mod pool;
+pub mod reduce;
+
+pub use partition::{block_chunks, chunks_of, row_chunks, MAX_CHUNKS};
+pub use pool::WorkerPool;
+pub use reduce::{
+    for_each_chunk, for_each_row_chunk, par_best_responses, par_max, par_prelude, par_v_val,
+};

@@ -1,0 +1,86 @@
+//! Fixed chunk geometry for the pool-parallel passes.
+//!
+//! Chunk boundaries depend only on the problem size — never on the worker
+//! count — so every per-chunk pass and every ordered reduction produces
+//! the same result for any `threads ≥ 1`: a pool with one worker simply
+//! executes the same chunks in index order. This is the first half of the
+//! determinism contract in [`super`] (the second half is the ordered
+//! combination of per-chunk partials in [`super::reduce`]).
+
+use crate::linalg::BlockPartition;
+use std::ops::Range;
+
+/// Upper bound on chunks per parallel pass: enough slack to load-balance
+/// ~16 workers over heterogeneous column costs, small enough that the
+/// per-chunk dispatch overhead is invisible at `threads = 1`.
+pub const MAX_CHUNKS: usize = 64;
+
+/// Split `0..len` into at most [`MAX_CHUNKS`] near-equal fixed ranges.
+pub fn row_chunks(len: usize) -> Vec<Range<usize>> {
+    chunks_of(len, MAX_CHUNKS)
+}
+
+/// Split `0..len` into at most `max_chunks` near-equal, non-empty fixed
+/// ranges (empty input ⇒ no chunks).
+pub fn chunks_of(len: usize, max_chunks: usize) -> Vec<Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let k = max_chunks.clamp(1, len);
+    (0..k).map(|c| (c * len / k)..((c + 1) * len / k)).collect()
+}
+
+/// Block-aligned chunks: per chunk, the (block index range, variable index
+/// range) pair, so `zhat`/`e` can be split at matching boundaries.
+pub fn block_chunks(blocks: &BlockPartition) -> Vec<(Range<usize>, Range<usize>)> {
+    chunks_of(blocks.n_blocks(), MAX_CHUNKS)
+        .into_iter()
+        .map(|br| {
+            let vr = blocks.range(br.start).start..blocks.range(br.end - 1).end;
+            (br, vr)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_and_do_not_overlap() {
+        for len in [0usize, 1, 5, 63, 64, 65, 1000] {
+            let chunks = row_chunks(len);
+            let mut next = 0;
+            for c in &chunks {
+                assert_eq!(c.start, next, "gap/overlap at {next} (len={len})");
+                assert!(c.end > c.start, "empty chunk (len={len})");
+                next = c.end;
+            }
+            assert_eq!(next, len);
+            assert!(chunks.len() <= MAX_CHUNKS);
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_independent_of_anything_but_len() {
+        // the determinism contract: same len ⇒ same chunks, always
+        assert_eq!(row_chunks(1000), row_chunks(1000));
+        assert_eq!(chunks_of(10, 3), vec![0..3, 3..6, 6..10]);
+    }
+
+    #[test]
+    fn block_chunks_align_to_blocks() {
+        let blocks = BlockPartition::from_sizes(&[2, 3, 5, 1, 4]);
+        let chunks = block_chunks(&blocks);
+        let mut nb = 0;
+        let mut nv = 0;
+        for (br, vr) in &chunks {
+            assert_eq!(blocks.range(br.start).start, vr.start);
+            assert_eq!(blocks.range(br.end - 1).end, vr.end);
+            nb = br.end;
+            nv = vr.end;
+        }
+        assert_eq!(nb, blocks.n_blocks());
+        assert_eq!(nv, blocks.dim());
+    }
+}

@@ -1,0 +1,270 @@
+//! Persistent worker pool with barrier-based job handoff.
+//!
+//! [`WorkerPool::new`] spawns `threads − 1` OS workers **once**; every
+//! [`WorkerPool::run`] broadcasts one job to all workers (the caller
+//! participates as worker 0) and returns only after the last worker has
+//! finished it. The per-pass cost is two condvar rounds instead of a
+//! spawn + join per thread per iteration, which is what lets the FLEXA
+//! hot path show measured speedups instead of thread-creation overhead.
+//!
+//! Jobs receive only their worker index; distributing work (and keeping
+//! it bitwise-deterministic across thread counts) is the concern of the
+//! fixed-chunk helpers in [`super::reduce`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Total OS threads ever spawned by any pool in this process — test
+/// instrumentation for the once-per-solve lifecycle guarantee.
+static OS_THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+type RawJob = *const (dyn Fn(usize) + Sync);
+
+#[derive(Clone, Copy)]
+struct JobPtr(RawJob);
+
+// SAFETY: the pointee is `Sync` (callable from any thread through a shared
+// reference) and `run` keeps it alive until every worker has finished
+// calling it (it waits for `remaining == 0` before returning).
+unsafe impl Send for JobPtr {}
+
+struct Slot {
+    job: Option<JobPtr>,
+    epoch: u64,
+    remaining: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    start: Condvar,
+    done: Condvar,
+}
+
+/// Persistent pool of `threads` logical workers (`threads − 1` OS threads
+/// plus the calling thread). Created once per solve; dropped at solve end.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` logical workers (clamped to ≥ 1). Spawns
+    /// `threads − 1` OS threads now; [`WorkerPool::run`] never spawns.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                job: None,
+                epoch: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads.saturating_sub(1));
+        for w in 1..threads {
+            let sh = Arc::clone(&shared);
+            OS_THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("flexa-worker-{w}"))
+                    .spawn(move || worker_loop(sh, w))
+                    .expect("spawning pool worker"),
+            );
+        }
+        Self { shared, handles, threads }
+    }
+
+    /// Logical worker count, including the calling thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// OS threads owned by this pool (`threads − 1`).
+    pub fn os_threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Total OS threads ever spawned by pools in this process.
+    pub fn os_threads_spawned_total() -> usize {
+        OS_THREADS_SPAWNED.load(Ordering::Relaxed)
+    }
+
+    /// Run `job(worker_index)` on every worker (indices `0..threads`, the
+    /// caller being worker 0) and block until all are done. Not reentrant:
+    /// `job` must not call `run` on the same pool.
+    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        if self.threads == 1 {
+            job(0);
+            return;
+        }
+        {
+            let mut s = self.shared.slot.lock().unwrap();
+            s.job = Some(JobPtr(job as RawJob));
+            s.epoch += 1;
+            s.remaining = self.threads - 1;
+            self.shared.start.notify_all();
+        }
+        // the caller works too; catch a panic so we still wait for the
+        // workers before the job borrow ends (soundness of JobPtr)
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(0)));
+        let worker_panicked;
+        {
+            let mut s = self.shared.slot.lock().unwrap();
+            while s.remaining > 0 {
+                s = self.shared.done.wait(s).unwrap();
+            }
+            s.job = None;
+            worker_panicked = std::mem::replace(&mut s.panicked, false);
+        }
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("worker pool job panicked on a worker thread");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut s = self.shared.slot.lock().unwrap();
+            s.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, w: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job: JobPtr;
+        {
+            let mut s = shared.slot.lock().unwrap();
+            loop {
+                if s.shutdown {
+                    return;
+                }
+                if s.epoch != seen {
+                    if let Some(j) = s.job {
+                        job = j;
+                        seen = s.epoch;
+                        break;
+                    }
+                }
+                s = shared.start.wait(s).unwrap();
+            }
+        }
+        // SAFETY: `run` keeps the job alive until `remaining` reaches 0,
+        // which only happens after this call returns.
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe { (*job.0)(w) }));
+        let mut s = shared.slot.lock().unwrap();
+        if result.is_err() {
+            s.panicked = true;
+        }
+        s.remaining -= 1;
+        if s.remaining == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex as StdMutex;
+
+    #[test]
+    fn all_workers_run_every_job() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(&|_w| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 4 * 50);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.os_threads(), 0);
+        let count = AtomicUsize::new(0);
+        pool.run(&|w| {
+            assert_eq!(w, 0);
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn lifecycle_threads_spawned_once_not_per_run() {
+        // the pool-lifecycle guarantee: a solve creates the pool once and
+        // every iteration reuses the same OS threads. Thread identities
+        // across many runs prove no respawning happens.
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.os_threads(), 3);
+        let ids: StdMutex<HashSet<std::thread::ThreadId>> = StdMutex::new(HashSet::new());
+        for _ in 0..200 {
+            pool.run(&|_w| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        let ids = ids.into_inner().unwrap();
+        assert!(
+            ids.len() <= 4,
+            "expected at most 4 distinct threads across 200 runs, saw {}",
+            ids.len()
+        );
+        assert_eq!(pool.os_threads(), 3, "run() must never spawn");
+    }
+
+    #[test]
+    fn worker_indices_cover_range() {
+        let pool = WorkerPool::new(3);
+        let seen: StdMutex<HashSet<usize>> = StdMutex::new(HashSet::new());
+        pool.run(&|w| {
+            seen.lock().unwrap().insert(w);
+        });
+        assert_eq!(*seen.lock().unwrap(), HashSet::from([0, 1, 2]));
+    }
+
+    #[test]
+    fn worker_panic_propagates_without_deadlock() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|w| {
+                if w == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // pool is still usable after a failed job
+        let count = AtomicUsize::new(0);
+        pool.run(&|_w| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+}

@@ -1,0 +1,249 @@
+//! Pool-parallel passes over fixed chunks: the best-response fan-out, the
+//! banded prelude, disjoint row-chunk updates, and ordered reductions.
+//!
+//! All raw-pointer plumbing for disjoint writes lives in this module; the
+//! coordinator and solvers only see safe slice-level callbacks. Every
+//! function keeps the [`super`] determinism contract: outputs are bitwise
+//! identical for any `threads ≥ 1`.
+
+use super::partition::block_chunks;
+use super::pool::WorkerPool;
+use crate::problems::Problem;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Shared `*mut f64` that chunk jobs index disjointly.
+#[derive(Clone, Copy)]
+struct MutPtr(*mut f64);
+
+// SAFETY: every helper below derives each job's region from fixed,
+// pairwise-disjoint ranges, so no two workers ever alias an element.
+unsafe impl Send for MutPtr {}
+unsafe impl Sync for MutPtr {}
+
+/// Run `f(chunk_index)` once per chunk; chunks are claimed atomically by
+/// the pool workers (claim order does not affect results — each chunk
+/// owns its outputs).
+pub fn for_each_chunk(pool: &WorkerPool, n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n_chunks == 0 {
+        return;
+    }
+    if pool.threads() == 1 {
+        for c in 0..n_chunks {
+            f(c);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    pool.run(&|_w| loop {
+        let c = cursor.fetch_add(1, Ordering::Relaxed);
+        if c >= n_chunks {
+            break;
+        }
+        f(c);
+    });
+}
+
+/// Run `f(chunk_index, rows, data[rows])` once per fixed row chunk of
+/// `data`, with each invocation receiving the chunk's disjoint mutable
+/// sub-slice.
+pub fn for_each_row_chunk(
+    pool: &WorkerPool,
+    data: &mut [f64],
+    chunks: &[Range<usize>],
+    f: &(dyn Fn(usize, Range<usize>, &mut [f64]) + Sync),
+) {
+    let dp = MutPtr(data.as_mut_ptr());
+    for_each_chunk(pool, chunks.len(), &|c| {
+        let r = chunks[c].clone();
+        // SAFETY: row chunks are pairwise disjoint sub-ranges of `data`.
+        let slice =
+            unsafe { std::slice::from_raw_parts_mut(dp.0.add(r.start), r.end - r.start) };
+        f(c, r, slice);
+    });
+}
+
+/// Best responses `x̂_i(x, τ)` and error bounds `E_i` for **all** blocks,
+/// fanned out over block-aligned chunks; `zhat`/`e` are written in
+/// disjoint per-chunk slices (same inner loop as the sequential sweep, so
+/// the results are bitwise identical for any thread count).
+pub fn par_best_responses(
+    pool: &WorkerPool,
+    problem: &dyn Problem,
+    x: &[f64],
+    aux: &[f64],
+    scratch: &[f64],
+    tau: f64,
+    zhat: &mut [f64],
+    e: &mut [f64],
+    chunks: &[(Range<usize>, Range<usize>)],
+) {
+    let blocks = problem.blocks();
+    let zp = MutPtr(zhat.as_mut_ptr());
+    let ep = MutPtr(e.as_mut_ptr());
+    for_each_chunk(pool, chunks.len(), &|c| {
+        let (br, vr) = &chunks[c];
+        // SAFETY: block chunks are pairwise disjoint in both the block and
+        // the variable index space.
+        let z_chunk =
+            unsafe { std::slice::from_raw_parts_mut(zp.0.add(vr.start), vr.end - vr.start) };
+        let e_chunk =
+            unsafe { std::slice::from_raw_parts_mut(ep.0.add(br.start), br.end - br.start) };
+        for i in br.clone() {
+            let r = blocks.range(i);
+            let local = (r.start - vr.start)..(r.end - vr.start);
+            e_chunk[i - br.start] =
+                problem.best_response_with(i, x, aux, scratch, tau, &mut z_chunk[local]);
+        }
+    });
+}
+
+/// Block-aligned chunk table for [`par_best_responses`] (precompute once
+/// per solve; the iteration loop allocates nothing).
+pub fn best_response_chunks(problem: &dyn Problem) -> Vec<(Range<usize>, Range<usize>)> {
+    block_chunks(problem.blocks())
+}
+
+/// Row-chunk table for the problem's banded prelude; empty when the
+/// problem has no chunkable prelude (then [`par_prelude`] falls back to
+/// the sequential `Problem::prelude`).
+pub fn prelude_chunks(problem: &dyn Problem) -> Vec<Range<usize>> {
+    match problem.prelude_bands() {
+        Some((la, _)) => super::partition::row_chunks(la),
+        None => Vec::new(),
+    }
+}
+
+/// Shared per-iteration prelude (logistic weights), row-chunked over the
+/// pool when the problem supports banded filling; sequential otherwise.
+/// Per-element outputs ⇒ bitwise identical for any thread count.
+pub fn par_prelude(
+    pool: &WorkerPool,
+    problem: &dyn Problem,
+    x: &[f64],
+    aux: &[f64],
+    scratch: &mut [f64],
+    chunks: &[Range<usize>],
+) {
+    if scratch.is_empty() {
+        return;
+    }
+    let Some((la, lb)) = problem.prelude_bands() else {
+        problem.prelude(x, aux, scratch);
+        return;
+    };
+    if chunks.is_empty() {
+        problem.prelude(x, aux, scratch);
+        return;
+    }
+    debug_assert_eq!(la, lb, "prelude bands must be row-aligned");
+    debug_assert_eq!(la + lb, scratch.len());
+    let (a, b) = scratch.split_at_mut(la);
+    let ap = MutPtr(a.as_mut_ptr());
+    let bp = MutPtr(b.as_mut_ptr());
+    for_each_chunk(pool, chunks.len(), &|c| {
+        let r = chunks[c].clone();
+        let len = r.end - r.start;
+        // SAFETY: disjoint chunk sub-slices of each band.
+        let ac = unsafe { std::slice::from_raw_parts_mut(ap.0.add(r.start), len) };
+        let bc = unsafe { std::slice::from_raw_parts_mut(bp.0.add(r.start), len) };
+        problem.prelude_rows(x, aux, r, ac, bc);
+    });
+}
+
+/// `max(0, max_i v[i])` — the selection reduction `M^k`. Per-chunk maxima
+/// are combined in chunk order on the calling thread; since `f64::max` is
+/// associative over non-NaN values this equals the sequential fold of
+/// `SelectionRule::select` exactly, for any thread count.
+pub fn par_max(
+    pool: &WorkerPool,
+    v: &[f64],
+    chunks: &[Range<usize>],
+    partials: &mut Vec<f64>,
+) -> f64 {
+    if pool.threads() == 1 || chunks.is_empty() {
+        return v.iter().fold(0.0f64, |a, &b| a.max(b));
+    }
+    partials.clear();
+    partials.resize(chunks.len(), 0.0);
+    let pp = MutPtr(partials.as_mut_ptr());
+    for_each_chunk(pool, chunks.len(), &|c| {
+        let r = chunks[c].clone();
+        let m = v[r].iter().fold(0.0f64, |a, &b| a.max(b));
+        // SAFETY: one partial slot per chunk.
+        unsafe { *pp.0.add(c) = m };
+    });
+    partials.iter().fold(0.0f64, |a, &b| a.max(b))
+}
+
+/// `V(x) = F(x) + G(x)` with `F` summed over fixed aux-row chunks in
+/// order (ordered reduction ⇒ thread-count-invariant); falls back to the
+/// sequential `v_val` when the problem has no chunked objective.
+pub fn par_v_val(
+    pool: &WorkerPool,
+    problem: &dyn Problem,
+    x: &[f64],
+    aux: &[f64],
+    chunks: &[Range<usize>],
+    partials: &mut Vec<f64>,
+) -> f64 {
+    if !problem.supports_chunked_obj() || chunks.is_empty() {
+        return problem.v_val(x, aux);
+    }
+    partials.clear();
+    partials.resize(chunks.len(), 0.0);
+    let pp = MutPtr(partials.as_mut_ptr());
+    for_each_chunk(pool, chunks.len(), &|c| {
+        let r = chunks[c].clone();
+        let f = problem.f_val_rows(x, &aux[r.clone()], r);
+        // SAFETY: one partial slot per chunk.
+        unsafe { *pp.0.add(c) = f };
+    });
+    let f: f64 = partials.iter().sum();
+    f + problem.g_val(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::partition::row_chunks;
+
+    #[test]
+    fn row_chunk_slices_are_the_right_windows() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0.0f64; 500];
+        let chunks = row_chunks(data.len());
+        for_each_row_chunk(&pool, &mut data, &chunks, &|_c, rows, slice| {
+            for (k, j) in rows.clone().enumerate() {
+                slice[k] += j as f64;
+            }
+        });
+        for (j, v) in data.iter().enumerate() {
+            assert_eq!(*v, j as f64);
+        }
+    }
+
+    #[test]
+    fn par_max_matches_sequential_fold() {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(11);
+        let v: Vec<f64> = (0..1000).map(|_| rng.next_normal().abs()).collect();
+        let expect = v.iter().fold(0.0f64, |a, &b| a.max(b));
+        let chunks = row_chunks(v.len());
+        let mut partials = Vec::new();
+        for threads in [1, 2, 4, 64] {
+            let pool = WorkerPool::new(threads);
+            let got = par_max(&pool, &v, &chunks, &mut partials);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        let pool = WorkerPool::new(2);
+        let chunks = row_chunks(0);
+        let mut partials = Vec::new();
+        assert_eq!(par_max(&pool, &[], &chunks, &mut partials), 0.0);
+        let mut data: Vec<f64> = Vec::new();
+        for_each_row_chunk(&pool, &mut data, &chunks, &|_, _, _| panic!("no chunks"));
+    }
+}

@@ -113,6 +113,28 @@ impl Problem for GroupLassoProblem {
         }
     }
 
+    fn apply_block_delta_rows(
+        &self,
+        i: usize,
+        delta: &[f64],
+        aux_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        for (k, j) in self.blocks.range(i).enumerate() {
+            if delta[k] != 0.0 {
+                self.a.col_axpy_range(j, delta[k], aux_rows, rows.clone());
+            }
+        }
+    }
+
+    fn f_val_rows(&self, _x: &[f64], aux_rows: &[f64], _rows: std::ops::Range<usize>) -> f64 {
+        vector::nrm2_sq(aux_rows)
+    }
+
+    fn supports_chunked_obj(&self) -> bool {
+        true
+    }
+
     fn grad_full(&self, _x: &[f64], aux: &[f64], out: &mut [f64]) {
         self.a.matvec_t(aux, out);
         vector::scale(2.0, out);

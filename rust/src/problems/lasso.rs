@@ -105,6 +105,26 @@ impl Problem for LassoProblem {
         }
     }
 
+    fn apply_block_delta_rows(
+        &self,
+        i: usize,
+        delta: &[f64],
+        aux_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        if delta[0] != 0.0 {
+            self.a.col_axpy_range(i, delta[0], aux_rows, rows);
+        }
+    }
+
+    fn f_val_rows(&self, _x: &[f64], aux_rows: &[f64], _rows: std::ops::Range<usize>) -> f64 {
+        vector::nrm2_sq(aux_rows)
+    }
+
+    fn supports_chunked_obj(&self) -> bool {
+        true
+    }
+
     fn grad_full(&self, _x: &[f64], aux: &[f64], out: &mut [f64]) {
         self.a.matvec_t(aux, out);
         vector::scale(2.0, out);

@@ -284,6 +284,45 @@ impl Problem for LogisticProblem {
         }
     }
 
+    fn apply_block_delta_rows(
+        &self,
+        i: usize,
+        delta: &[f64],
+        aux_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        if delta[0] != 0.0 {
+            self.y.col_axpy_range(i, delta[0], aux_rows, rows);
+        }
+    }
+
+    fn prelude_bands(&self) -> Option<(usize, usize)> {
+        Some((self.m(), self.m()))
+    }
+
+    fn prelude_rows(
+        &self,
+        _x: &[f64],
+        aux: &[f64],
+        rows: std::ops::Range<usize>,
+        band_a: &mut [f64],
+        band_b: &mut [f64],
+    ) {
+        for (k, j) in rows.enumerate() {
+            let s = sigma_neg(aux[j]);
+            band_a[k] = s;
+            band_b[k] = s * (1.0 - s);
+        }
+    }
+
+    fn f_val_rows(&self, _x: &[f64], aux_rows: &[f64], _rows: std::ops::Range<usize>) -> f64 {
+        aux_rows.iter().map(|&u| log1p_exp_neg(u)).sum()
+    }
+
+    fn supports_chunked_obj(&self) -> bool {
+        true
+    }
+
     fn grad_full(&self, _x: &[f64], aux: &[f64], out: &mut [f64]) {
         let w: Vec<f64> = aux.iter().map(|&u| sigma_neg(u)).collect();
         self.y.matvec_t(&w, out);

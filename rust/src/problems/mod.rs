@@ -31,6 +31,7 @@ pub use nonconvex_qp::NonconvexQpProblem;
 pub use svm::SvmProblem;
 
 use crate::linalg::BlockPartition;
+use std::ops::Range;
 
 /// A block-structured composite optimization problem.
 pub trait Problem: Send + Sync {
@@ -105,6 +106,60 @@ pub trait Problem: Send + Sync {
     /// Propagate a block step to the auxiliary vector:
     /// `aux ← aux ⊕ (effect of x_i += delta)`. `delta` has block-size length.
     fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]);
+
+    /// Row-ranged [`Problem::apply_block_delta`]: apply the block-`i` delta
+    /// to `aux_rows = aux[rows]` only. The pool-parallel selective update
+    /// fans the aux rows out over fixed chunks, each chunk applying every
+    /// selected block in order — per element this is the same addition
+    /// order as the sequential path, so results stay bitwise identical.
+    /// Every aux vector in this crate is row-indexed (residuals/margins),
+    /// so all problems implement this as a ranged column axpy.
+    fn apply_block_delta_rows(
+        &self,
+        i: usize,
+        delta: &[f64],
+        aux_rows: &mut [f64],
+        rows: Range<usize>,
+    );
+
+    // ---- chunked prelude / objective (pool-parallel fast paths) ----
+
+    /// `Some((len_a, len_b))` when the prelude scratch splits into two
+    /// equal-length row-indexed bands fillable per row range via
+    /// [`Problem::prelude_rows`] (logistic: gradient and Hessian weights);
+    /// `None` keeps the prelude sequential.
+    fn prelude_bands(&self) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Fill rows `rows` of each prelude band. The band slices are already
+    /// offset: `band_a[k]` corresponds to row `rows.start + k`. Only
+    /// called when [`Problem::prelude_bands`] returns `Some`.
+    fn prelude_rows(
+        &self,
+        _x: &[f64],
+        _aux: &[f64],
+        _rows: Range<usize>,
+        _band_a: &mut [f64],
+        _band_b: &mut [f64],
+    ) {
+        unreachable!("prelude_rows requires prelude_bands() == Some");
+    }
+
+    /// Partial smooth objective over the aux rows `rows` (`aux_rows =
+    /// aux[rows]`). Problems returning `true` from
+    /// [`Problem::supports_chunked_obj`] must satisfy
+    /// `Σ_chunks f_val_rows = f_val` up to floating-point reassociation.
+    fn f_val_rows(&self, _x: &[f64], _aux_rows: &[f64], _rows: Range<usize>) -> f64 {
+        0.0
+    }
+
+    /// Whether [`Problem::f_val_rows`] covers the full smooth objective
+    /// (false for objectives with non-row terms, e.g. the −c̄‖x‖² of the
+    /// nonconvex QP).
+    fn supports_chunked_obj(&self) -> bool {
+        false
+    }
 
     /// Full gradient `∇F(x)` into `out` (for FISTA/SpaRSA and merits).
     fn grad_full(&self, x: &[f64], aux: &[f64], out: &mut [f64]);

@@ -130,6 +130,18 @@ impl Problem for NonconvexQpProblem {
         }
     }
 
+    fn apply_block_delta_rows(
+        &self,
+        i: usize,
+        delta: &[f64],
+        aux_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        if delta[0] != 0.0 {
+            self.a.col_axpy_range(i, delta[0], aux_rows, rows);
+        }
+    }
+
     fn grad_full(&self, x: &[f64], aux: &[f64], out: &mut [f64]) {
         self.a.matvec_t(aux, out);
         for (o, xi) in out.iter_mut().zip(x) {

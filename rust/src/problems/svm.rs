@@ -154,6 +154,26 @@ impl Problem for SvmProblem {
         }
     }
 
+    fn apply_block_delta_rows(
+        &self,
+        i: usize,
+        delta: &[f64],
+        aux_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        if delta[0] != 0.0 {
+            self.y.col_axpy_range(i, delta[0], aux_rows, rows);
+        }
+    }
+
+    fn f_val_rows(&self, _x: &[f64], aux_rows: &[f64], _rows: std::ops::Range<usize>) -> f64 {
+        aux_rows.iter().map(|&u| (1.0 - u).max(0.0).powi(2)).sum()
+    }
+
+    fn supports_chunked_obj(&self) -> bool {
+        true
+    }
+
     fn grad_full(&self, _x: &[f64], aux: &[f64], out: &mut [f64]) {
         let h: Vec<f64> = aux.iter().map(|&u| (1.0 - u).max(0.0)).collect();
         self.y.matvec_t(&h, out);

@@ -1,8 +1,9 @@
 //! Artifact manifest: metadata for the AOT-compiled HLO modules emitted by
 //! `python/compile/aot.py` into `artifacts/`.
 
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use crate::util::Json;
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One compiled model at a fixed shape.

@@ -4,7 +4,8 @@
 //! request path.
 
 use super::artifacts::{ArtifactMeta, Manifest};
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 use std::collections::HashMap;
 
 /// PJRT client + executable cache.

@@ -11,13 +11,14 @@
 //! ([`flexa_with_engine`]). Integration tests assert the two engines agree
 //! to f32 tolerance on identical iterates.
 
+#[cfg(feature = "pjrt")]
 use super::client::{literal_to_vec, matrix_literal, scalar1_literal, vec_literal, RuntimeClient};
 use crate::coordinator::driver::RunState;
 use crate::coordinator::tau::{TauController, TauDecision, TauOptions};
 use crate::coordinator::{FlexaOptions, SolveReport, StopReason};
 use crate::metrics::IterCost;
 use crate::problems::{LassoProblem, Problem};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// A backend computing the full-Jacobi step quantities.
 pub trait StepEngine {
@@ -72,6 +73,7 @@ impl StepEngine for NativeEngine<'_> {
 /// that, but xla_extension 0.5.1's CPU plugin aborts inside `execute_b`
 /// (`Check failed: pointer_size > 0`), so literals are the supported path
 /// — see EXPERIMENTS.md §Perf.
+#[cfg(feature = "pjrt")]
 pub struct XlaEngine {
     client: RuntimeClient,
     meta: crate::runtime::artifacts::ArtifactMeta,
@@ -81,6 +83,7 @@ pub struct XlaEngine {
     n: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl XlaEngine {
     /// Bind the `lasso_step` artifact at the problem's exact shape.
     pub fn for_lasso(client: RuntimeClient, problem: &LassoProblem) -> Result<Self> {
@@ -124,7 +127,7 @@ impl XlaEngine {
         let ev = literal_to_vec(&outs[1])?;
         z.copy_from_slice(&zv);
         e.copy_from_slice(&ev);
-        let obj: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let obj: Vec<f32> = outs[2].to_vec().map_err(|e| crate::anyhow!("{e:?}"))?;
         Ok(obj[0] as f64)
     }
 
@@ -134,17 +137,20 @@ impl XlaEngine {
 }
 
 /// An engine bound to a concrete LASSO instance (carries `c`).
+#[cfg(feature = "pjrt")]
 pub struct BoundXlaEngine {
     inner: XlaEngine,
     c: f64,
 }
 
+#[cfg(feature = "pjrt")]
 impl BoundXlaEngine {
     pub fn new(client: RuntimeClient, problem: &LassoProblem) -> Result<Self> {
         Ok(Self { inner: XlaEngine::for_lasso(client, problem)?, c: problem.c() })
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl StepEngine for BoundXlaEngine {
     fn shape(&self) -> (usize, usize) {
         self.inner.shape_mn()

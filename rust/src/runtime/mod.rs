@@ -2,11 +2,21 @@
 //! through the PJRT C API and exposes them as [`StepEngine`] backends to
 //! the coordinator. Python is build-time only — after the artifacts exist,
 //! the rust binary is self-contained.
+//!
+//! The PJRT client ([`client`], [`XlaEngine`]) depends on the external
+//! `xla` crate, which is not part of the offline crate set; it is gated
+//! behind the `pjrt` cargo feature (vendor the crate and enable the
+//! feature to build it). The manifest reader and the [`NativeEngine`]
+//! backend compile unconditionally.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod engine;
 
 pub use artifacts::{ArtifactMeta, Manifest};
+#[cfg(feature = "pjrt")]
 pub use client::RuntimeClient;
-pub use engine::{flexa_with_engine, BoundXlaEngine, NativeEngine, StepEngine, XlaEngine};
+#[cfg(feature = "pjrt")]
+pub use engine::{BoundXlaEngine, XlaEngine};
+pub use engine::{flexa_with_engine, NativeEngine, StepEngine};

@@ -11,13 +11,24 @@
 use crate::coordinator::driver::RunState;
 use crate::coordinator::{CommonOptions, SolveReport, StopReason};
 use crate::metrics::IterCost;
+use crate::parallel::{self, WorkerPool};
 use crate::problems::Problem;
 
 /// Run CDM (sequential coordinate descent) from `x0`. `shuffle` randomizes
 /// the sweep order each iteration (seeded, reproducible).
+///
+/// The Gauss-Seidel sweep itself is a sequential dependency chain (every
+/// update lands in `aux` before the next block is visited), so it cannot
+/// use block-level parallelism without changing the algorithm; the shared
+/// [`WorkerPool`] (one per solve, like the coordinator's) instead drives
+/// the per-sweep objective evaluation via the chunked ordered reduction
+/// (`parallel::par_v_val`), which is thread-count-invariant.
 pub fn cdm(problem: &dyn Problem, x0: &[f64], common: &CommonOptions, shuffle: bool) -> SolveReport {
     let blocks = problem.blocks();
     let nb = blocks.n_blocks();
+    let pool = WorkerPool::new(common.threads);
+    let obj_chunks = parallel::row_chunks(problem.aux_len());
+    let mut obj_partials: Vec<f64> = Vec::new();
     let mut x = x0.to_vec();
     let mut aux = vec![0.0; problem.aux_len()];
     problem.init_aux(&x, &mut aux);
@@ -31,7 +42,7 @@ pub fn cdm(problem: &dyn Problem, x0: &[f64], common: &CommonOptions, shuffle: b
     let tau = 1e-12 * problem.tau_init().max(1.0) + problem.tau_min();
 
     let mut state = RunState::new(problem, common);
-    let mut v = problem.v_val(&x, &aux);
+    let mut v = parallel::par_v_val(&pool, problem, &x, &aux, &obj_chunks, &mut obj_partials);
     state.record(0, &x, &aux, v, 0);
 
     let mut stop = StopReason::MaxIters;
@@ -67,7 +78,7 @@ pub fn cdm(problem: &dyn Problem, x0: &[f64], common: &CommonOptions, shuffle: b
             }
         }
         state.last_ebound = max_e;
-        v = problem.v_val(&x, &aux);
+        v = parallel::par_v_val(&pool, problem, &x, &aux, &obj_chunks, &mut obj_partials);
 
         // strictly sequential: the whole sweep is the critical path
         state.charge(IterCost::sequential(sweep_flops + problem.flops_obj()));

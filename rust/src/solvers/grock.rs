@@ -10,12 +10,14 @@
 //! `greedy_1bcd` is the P = 1 special case (always convergent).
 
 use crate::coordinator::driver::RunState;
-use crate::coordinator::workers::compute_best_responses;
 use crate::coordinator::{CommonOptions, SelectionRule, SolveReport, StopReason};
 use crate::metrics::IterCost;
+use crate::parallel::{self, WorkerPool};
 use crate::problems::Problem;
 
-/// Run GRock with `p_blocks` simultaneous full block updates.
+/// Run GRock with `p_blocks` simultaneous full block updates. The
+/// per-block descent-potential sweep reuses the same persistent
+/// [`WorkerPool`] layer as the coordinator (one pool per solve).
 pub fn grock(
     problem: &dyn Problem,
     x0: &[f64],
@@ -27,6 +29,11 @@ pub fn grock(
     let nb = blocks.n_blocks();
     let p_cores = common.cores.max(1);
     let rule = SelectionRule::TopK { k: p_blocks.max(1) };
+    let pool = WorkerPool::new(common.threads);
+    let br_chunks = parallel::reduce::best_response_chunks(problem);
+    let prl_chunks = parallel::reduce::prelude_chunks(problem);
+    let e_chunks = parallel::chunks_of(nb, parallel::MAX_CHUNKS);
+    let mut max_partials: Vec<f64> = Vec::new();
 
     let mut x = x0.to_vec();
     let mut aux = vec![0.0; problem.aux_len()];
@@ -50,11 +57,12 @@ pub fn grock(
 
     for k in 0..common.max_iters {
         iters = k + 1;
-        if !scratch.is_empty() {
-            problem.prelude(&x, &aux, &mut scratch);
-        }
-        compute_best_responses(problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, common.threads);
-        let m_k = rule.select(&e, &mut sel);
+        parallel::par_prelude(&pool, problem, &x, &aux, &mut scratch, &prl_chunks);
+        parallel::par_best_responses(
+            &pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
+        );
+        let m_k = parallel::par_max(&pool, &e, &e_chunks, &mut max_partials);
+        rule.select_with_max(&e, m_k, &mut sel);
         state.last_ebound = m_k;
 
         let mut active = 0usize;

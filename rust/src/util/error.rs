@@ -1,0 +1,144 @@
+//! Minimal `anyhow`-shaped error surface for an offline build.
+//!
+//! The crate compiles with zero crates.io dependencies; the CLI and runtime
+//! layers previously leaned on `anyhow`, so this module provides the small
+//! subset they use — a message-carrying [`Error`], the [`Result`] alias,
+//! the [`Context`] extension trait, and crate-root `anyhow!` / `bail!`
+//! macros with the same call syntax.
+
+use std::fmt;
+
+/// Message-carrying error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `Result` defaulting to [`Error`], mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, `anyhow::Context`-style.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<F, D>(self, f: F) -> Result<T>
+    where
+        F: FnOnce() -> D,
+        D: fmt::Display;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<F, D>(self, f: F) -> Result<T>
+    where
+        F: FnOnce() -> D,
+        D: fmt::Display,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Build an [`Error`] from a format string or any displayable value
+/// (call-compatible with `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] (call-compatible with `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let c = r.context("loading artifact");
+        assert!(format!("{}", c.unwrap_err()).starts_with("loading artifact: "));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = crate::anyhow!("value {x} bad");
+        assert_eq!(format!("{e}"), "value 3 bad");
+        let e2 = crate::anyhow!("shape {}x{}", 2, 4);
+        assert_eq!(format!("{e2}"), "shape 2x4");
+        let s = String::from("plain");
+        let e3 = crate::anyhow!(s);
+        assert_eq!(format!("{e3}"), "plain");
+        fn fails() -> Result<()> {
+            crate::bail!("nope {}", 7)
+        }
+        assert_eq!(format!("{}", fails().unwrap_err()), "nope 7");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "disk"))?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,6 +1,7 @@
 //! Support substrate: JSON, CSV, ASCII plotting, timing, logging.
 
 pub mod csv;
+pub mod error;
 pub mod json;
 pub mod plot;
 
@@ -8,6 +9,7 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
 pub use csv::{format_g, CsvWriter};
+pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use plot::{render as render_plot, PlotCfg, Series};
 

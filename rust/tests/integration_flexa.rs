@@ -3,8 +3,8 @@
 //! cross-algorithm consistency claims of the paper (Theorems 1–3).
 
 use flexa::coordinator::{
-    flexa as run_flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionRule, StepRule,
-    TermMetric,
+    flexa as run_flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions,
+    SelectionRule, StepRule, TermMetric,
 };
 use flexa::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
 use flexa::problems::{
@@ -205,23 +205,112 @@ fn discarded_iterations_counted_when_tau_doubles() {
     assert!(r.discarded > 0, "expected τ-doubling discards");
 }
 
-#[test]
-fn threaded_flexa_matches_single_threaded() {
-    let p = LassoProblem::from_instance(nesterov_lasso(50, 70, 0.1, 1.0, 17));
+/// FLEXA iterates must be **bitwise-identical** for every thread count
+/// (fixed chunk boundaries + ordered reductions in `flexa::parallel`).
+fn assert_flexa_bitwise_deterministic(p: &dyn Problem, term: TermMetric, max_iters: usize) {
     let mk = |threads: usize| {
-        let mut c = common("t", 1e-7, TermMetric::RelErr);
+        let mut c = common("t", 1e-9, term);
         c.threads = threads;
-        c.max_iters = 200;
+        c.max_iters = max_iters;
         c.tol = 0.0;
+        c.merit_every = 1;
         FlexaOptions { common: c, selection: SelectionRule::sigma(0.5), inexact: None }
     };
-    let r1 = run_flexa(&p, &vec![0.0; p.n()], &mk(1));
-    let r4 = run_flexa(&p, &vec![0.0; p.n()], &mk(4));
-    // identical deterministic trajectories regardless of thread count
-    for (a, b) in r1.x.iter().zip(&r4.x) {
-        assert!((a - b).abs() < 1e-14, "{a} vs {b}");
+    let r1 = run_flexa(p, &vec![0.0; p.n()], &mk(1));
+    for threads in [2usize, 4] {
+        let rt = run_flexa(p, &vec![0.0; p.n()], &mk(threads));
+        assert_eq!(r1.x, rt.x, "iterates diverged at threads={threads}");
+        assert_eq!(r1.iters, rt.iters, "iteration count diverged at threads={threads}");
+        assert_eq!(r1.final_obj, rt.final_obj, "objective diverged at threads={threads}");
     }
-    assert_eq!(r1.iters, r4.iters);
+}
+
+/// Same bitwise guarantee for Gauss-Jacobi with selection (Algorithm 3),
+/// whose prepass runs on the pool.
+fn assert_gj_bitwise_deterministic(p: &dyn Problem, term: TermMetric, max_iters: usize) {
+    let mk = |threads: usize| {
+        let mut c = common("t", 1e-9, term);
+        c.threads = threads;
+        c.max_iters = max_iters;
+        c.tol = 0.0;
+        c.merit_every = 1;
+        GaussJacobiOptions {
+            common: c,
+            selection: Some(SelectionRule::sigma(0.5)),
+            processors: 4,
+        }
+    };
+    let r1 = gauss_jacobi(p, &vec![0.0; p.n()], &mk(1));
+    for threads in [2usize, 4] {
+        let rt = gauss_jacobi(p, &vec![0.0; p.n()], &mk(threads));
+        assert_eq!(r1.x, rt.x, "GJ iterates diverged at threads={threads}");
+        assert_eq!(r1.iters, rt.iters);
+        assert_eq!(r1.final_obj, rt.final_obj);
+    }
+}
+
+#[test]
+fn threaded_flexa_bitwise_identical_on_lasso() {
+    let p = LassoProblem::from_instance(nesterov_lasso(50, 70, 0.1, 1.0, 17));
+    assert_flexa_bitwise_deterministic(&p, TermMetric::RelErr, 200);
+}
+
+#[test]
+fn threaded_flexa_bitwise_identical_on_logistic() {
+    let p = LogisticProblem::from_instance(logistic_like(LogisticPreset::Gisette, 0.012, 9));
+    assert_flexa_bitwise_deterministic(&p, TermMetric::Merit, 60);
+}
+
+#[test]
+fn threaded_flexa_bitwise_identical_on_nonconvex_qp() {
+    let p = NonconvexQpProblem::from_instance(nonconvex_qp(40, 60, 0.1, 10.0, 50.0, 1.0, 12));
+    assert_flexa_bitwise_deterministic(&p, TermMetric::Merit, 100);
+}
+
+#[test]
+fn threaded_gj_bitwise_identical_on_lasso() {
+    let p = LassoProblem::from_instance(nesterov_lasso(50, 70, 0.1, 1.0, 18));
+    assert_gj_bitwise_deterministic(&p, TermMetric::RelErr, 100);
+}
+
+#[test]
+fn threaded_gj_bitwise_identical_on_logistic() {
+    let p = LogisticProblem::from_instance(logistic_like(LogisticPreset::Gisette, 0.012, 10));
+    assert_gj_bitwise_deterministic(&p, TermMetric::Merit, 40);
+}
+
+#[test]
+fn threaded_gj_bitwise_identical_on_nonconvex_qp() {
+    let p = NonconvexQpProblem::from_instance(nonconvex_qp(40, 60, 0.1, 10.0, 50.0, 1.0, 13));
+    assert_gj_bitwise_deterministic(&p, TermMetric::Merit, 60);
+}
+
+#[test]
+fn solve_spawns_workers_once_not_per_iteration() {
+    // pool lifecycle at the solver level: a 300-iteration threads=4 solve
+    // may spawn at most a handful of OS threads (3 for its own pool, plus
+    // whatever concurrently-running tests spawn) — a spawn-per-iteration
+    // implementation would add ≥ 900 to the global counter.
+    use flexa::parallel::WorkerPool;
+    let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 19));
+    let mut c = common("pool-lifecycle", 1e-9, TermMetric::RelErr);
+    c.threads = 4;
+    c.max_iters = 300;
+    c.tol = 0.0;
+    let before = WorkerPool::os_threads_spawned_total();
+    let r = run_flexa(
+        &p,
+        &vec![0.0; p.n()],
+        &FlexaOptions { common: c, selection: SelectionRule::sigma(0.5), inexact: None },
+    );
+    let spawned = WorkerPool::os_threads_spawned_total() - before;
+    assert_eq!(r.iters, 300);
+    assert!(
+        spawned < r.iters,
+        "suspiciously many spawns ({spawned}) for a {}-iteration solve — \
+         workers must be created once per solve, not per iteration",
+        r.iters
+    );
 }
 
 #[test]

@@ -4,7 +4,10 @@
 //! full FLEXA coordinator on the XLA engine.
 //!
 //! These tests are skipped (with a loud message) when artifacts are absent;
-//! `make test` always builds them first.
+//! `make test` always builds them first. The whole file is gated behind
+//! the `pjrt` feature (the XLA bindings are an external crate outside the
+//! offline set).
+#![cfg(feature = "pjrt")]
 
 use flexa::coordinator::{CommonOptions, FlexaOptions, SelectionRule, TermMetric};
 use flexa::datagen::nesterov_lasso;
