@@ -18,7 +18,7 @@
 //! make artifacts && cargo run --release --example lasso_cluster
 //! ```
 
-use flexa::coordinator::{flexa as run_flexa, CommonOptions, FlexaOptions, SelectionRule, TermMetric};
+use flexa::coordinator::{flexa as run_flexa, CommonOptions, FlexaOptions, SelectionSpec, TermMetric};
 use flexa::datagen::nesterov_lasso;
 use flexa::metrics::{Trace, XAxis, YMetric};
 use flexa::problems::{LassoProblem, Problem};
@@ -54,7 +54,7 @@ fn main() -> flexa::util::error::Result<()> {
     let mut engine = BoundXlaEngine::new(client, &problem)?;
     let opts = FlexaOptions {
         common: mk_common("FLEXA xla-engine"),
-        selection: SelectionRule::sigma(0.5),
+        selection: SelectionSpec::sigma(0.5),
         inexact: None,
     };
     let r_xla = flexa_with_engine(&problem, &mut engine, &x0, &opts)?;
@@ -69,7 +69,7 @@ fn main() -> flexa::util::error::Result<()> {
     for sigma in [0.5, 0.0] {
         let o = FlexaOptions {
             common: mk_common(&format!("FLEXA native s{sigma}")),
-            selection: SelectionRule::sigma(sigma),
+            selection: SelectionSpec::sigma(sigma),
             inexact: None,
         };
         let r = run_flexa(&problem, &x0, &o);

@@ -9,7 +9,7 @@
 //! ```
 
 use flexa::coordinator::{
-    flexa as run_flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionRule,
+    flexa as run_flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionSpec,
     TermMetric,
 };
 use flexa::datagen::{logistic_like, LogisticPreset};
@@ -50,7 +50,7 @@ fn main() {
         &x0,
         &GaussJacobiOptions {
             common: ref_common,
-            selection: Some(SelectionRule::sigma(0.5)),
+            selection: Some(SelectionSpec::sigma(0.5)),
             processors: 1,
         },
     );
@@ -76,7 +76,7 @@ fn main() {
             &x0,
             &GaussJacobiOptions {
                 common: mk(&format!("GJ-FLEXA P={procs}"), procs),
-                selection: Some(SelectionRule::sigma(0.5)),
+                selection: Some(SelectionSpec::sigma(0.5)),
                 processors: procs,
             },
         );
@@ -95,7 +95,7 @@ fn main() {
         &x0,
         &FlexaOptions {
             common: mk("FLEXA σ=0.5 (Jacobi)", 16),
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: None,
         },
     );

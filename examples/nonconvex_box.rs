@@ -10,7 +10,7 @@
 //! cargo run --release --example nonconvex_box
 //! ```
 
-use flexa::coordinator::{flexa as run_flexa, CommonOptions, FlexaOptions, SelectionRule, TermMetric};
+use flexa::coordinator::{flexa as run_flexa, CommonOptions, FlexaOptions, SelectionSpec, TermMetric};
 use flexa::datagen::nonconvex_qp;
 use flexa::linalg::vector;
 use flexa::metrics::{XAxis, YMetric};
@@ -52,7 +52,7 @@ fn main() {
         &x0,
         &FlexaOptions {
             common: mk("FLEXA σ=0.5"),
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: None,
         },
     );

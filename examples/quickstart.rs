@@ -5,7 +5,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use flexa::coordinator::{flexa as run_flexa, CommonOptions, FlexaOptions, SelectionRule, TermMetric};
+use flexa::coordinator::{flexa as run_flexa, CommonOptions, FlexaOptions, SelectionSpec, TermMetric};
 use flexa::datagen::nesterov_lasso;
 use flexa::metrics::{XAxis, YMetric};
 use flexa::problems::{LassoProblem, Problem};
@@ -31,7 +31,7 @@ fn main() {
                 name: format!("FLEXA sigma={sigma}"),
                 ..Default::default()
             },
-            selection: SelectionRule::sigma(sigma),
+            selection: SelectionSpec::sigma(sigma),
             inexact: None,
         };
         let report = run_flexa(&problem, &x0, &opts);

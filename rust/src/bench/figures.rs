@@ -10,7 +10,7 @@
 
 use crate::config::ProblemSpec;
 use crate::coordinator::{
-    flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionRule,
+    flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionSpec,
     TermMetric,
 };
 use crate::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
@@ -27,15 +27,18 @@ pub struct BenchConfig {
     pub scale: f64,
     /// wall-clock budget per solver run [s]
     pub budget_s: f64,
+    /// output directory for CSV/txt artifacts
     pub out_dir: String,
     /// calibrated cost model shared by every run
     pub model: CostModel,
+    /// base rng seed shared by the generated instances
     pub seed: u64,
     /// measured worker-thread axis (`FLEXA_BENCH_THREADS`, default 1,2,4)
     pub threads: Vec<usize>,
 }
 
 impl BenchConfig {
+    /// Read the configuration from `FLEXA_BENCH_*` environment variables.
     pub fn from_env() -> Self {
         let get = |k: &str| std::env::var(k).ok().and_then(|v| v.parse::<f64>().ok());
         let threads = std::env::var("FLEXA_BENCH_THREADS")
@@ -82,7 +85,9 @@ impl BenchConfig {
 
 /// Output of one regenerated figure.
 pub struct FigureOutput {
+    /// figure identifier (file stem under the output dir)
     pub id: String,
+    /// the solver traces behind the figure
     pub traces: Vec<Trace>,
     /// human-readable rendering (ASCII plot + summary table)
     pub text: String,
@@ -167,7 +172,7 @@ fn lasso_suite(
     for sigma in [0.0, 0.5] {
         let o = FlexaOptions {
             common: cfg.common(&format!("FLEXA σ={sigma}"), cores, tol, TermMetric::RelErr),
-            selection: SelectionRule::sigma(sigma),
+            selection: SelectionSpec::sigma(sigma),
             inexact: None,
         };
         traces.push(flexa(problem, &x0, &o).trace);
@@ -295,7 +300,7 @@ fn fig2_measured_threads(cfg: &BenchConfig, problem: &LassoProblem) -> FigureOut
         common.tol = 0.0;
         common.max_wall_s = f64::MAX;
         common.trace_every = 50;
-        let o = FlexaOptions { common, selection: SelectionRule::sigma(0.5), inexact: None };
+        let o = FlexaOptions { common, selection: SelectionSpec::sigma(0.5), inexact: None };
         reports.push(flexa(problem, &x0, &o));
     });
     let mut table = TextTable::new(&["threads", "wall [s]", "iters", "rel.err", "speedup vs t=1"]);
@@ -391,7 +396,7 @@ pub fn fig3(cfg: &BenchConfig) -> Vec<FigureOutput> {
                     tol,
                     TermMetric::RelErr,
                 ),
-                selection: Some(SelectionRule::sigma(0.5)),
+                selection: Some(SelectionSpec::sigma(0.5)),
                 processors: procs,
             };
             traces.push(gauss_jacobi(&problem, &x0, &o).trace);
@@ -399,7 +404,7 @@ pub fn fig3(cfg: &BenchConfig) -> Vec<FigureOutput> {
         // FLEXA σ=0.5 (Jacobi)
         let o = FlexaOptions {
             common: cfg.common("FLEXA σ=0.5", 8, tol, TermMetric::RelErr),
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: None,
         };
         traces.push(flexa(&problem, &x0, &o).trace);
@@ -473,7 +478,7 @@ fn nonconvex_fig(
         &x0,
         &FlexaOptions {
             common: ref_common,
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: None,
         },
     );
@@ -489,7 +494,7 @@ fn nonconvex_fig(
     for sigma in [0.0, 0.5] {
         let o = FlexaOptions {
             common: mk(&format!("FLEXA σ={sigma}")),
-            selection: SelectionRule::sigma(sigma),
+            selection: SelectionSpec::sigma(sigma),
             inexact: None,
         };
         traces.push(flexa(&problem, &x0, &o).trace);
@@ -545,7 +550,7 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
     for sigma in [0.0, 0.25, 0.5, 0.75, 0.9] {
         let o = FlexaOptions {
             common: cfg.common(&format!("σ={sigma}"), 40, tol, TermMetric::RelErr),
-            selection: SelectionRule::sigma(sigma),
+            selection: SelectionSpec::sigma(sigma),
             inexact: None,
         };
         traces.push(flexa(&problem, &x0, &o).trace);
@@ -572,7 +577,7 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
     for (name, rule) in rules {
         let mut common = cfg.common(name, 40, tol, TermMetric::RelErr);
         common.stepsize = rule;
-        let o = FlexaOptions { common, selection: SelectionRule::sigma(0.5), inexact: None };
+        let o = FlexaOptions { common, selection: SelectionSpec::sigma(0.5), inexact: None };
         traces.push(flexa(&problem, &x0, &o).trace);
     }
     outputs.push(FigureOutput::build(
@@ -592,7 +597,7 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
         if frozen {
             common.tau = Some(crate::coordinator::TauOptions::frozen(problem.tau_init()));
         }
-        let o = FlexaOptions { common, selection: SelectionRule::sigma(0.5), inexact: None };
+        let o = FlexaOptions { common, selection: SelectionSpec::sigma(0.5), inexact: None };
         traces.push(flexa(&problem, &x0, &o).trace);
     }
     outputs.push(FigureOutput::build(
@@ -610,7 +615,7 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
     for eps0 in [0.0, 0.01, 0.1] {
         let o = FlexaOptions {
             common: cfg.common(&format!("ε0={eps0}"), 40, 1e-5, TermMetric::RelErr),
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: if eps0 > 0.0 {
                 Some(crate::coordinator::InexactOptions { eps0, seed: 9 })
             } else {
@@ -632,6 +637,75 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
     outputs
 }
 
+/// **Selection panel** (beyond the paper's figures) — the strategy
+/// comparison the `coordinator::strategy` subsystem opens: FLEXA on the
+/// fig1-style LASSO under every selection strategy, reporting convergence
+/// *and* the per-iteration scan fraction. The hybrid row is the headline:
+/// same objective tolerance as the greedy σ-rule while scanning ≤ frac of
+/// the blocks per iteration (Daneshmand et al.-style random sketching).
+pub fn selection_panel(cfg: &BenchConfig) -> FigureOutput {
+    let (m, n) = cfg.dims(4500, 5000);
+    let inst = nesterov_lasso(m, n, 0.05, 1.0, cfg.seed + 11);
+    let problem = LassoProblem::from_instance(inst);
+    let x0 = vec![0.0; problem.n()];
+    let nb = problem.blocks().n_blocks();
+    let tol = 1e-6;
+
+    let seed = SelectionSpec::DEFAULT_SEED;
+    let specs: Vec<(&str, SelectionSpec)> = vec![
+        ("greedy σ=0.5", SelectionSpec::sigma(0.5)),
+        ("gauss-southwell", SelectionSpec::gauss_southwell()),
+        ("cyclic 25%", SelectionSpec::Cyclic { frac: 0.25 }),
+        ("random 25%", SelectionSpec::Random { frac: 0.25, seed }),
+        ("importance 25%", SelectionSpec::Importance { frac: 0.25, seed }),
+        ("hybrid 25% σ=0.5", SelectionSpec::Hybrid { frac: 0.25, sigma: 0.5, seed }),
+    ];
+    let mut reports = Vec::new();
+    for (name, spec) in &specs {
+        let o = FlexaOptions {
+            common: cfg.common(name, 40, tol, TermMetric::RelErr),
+            selection: spec.clone(),
+            inexact: None,
+        };
+        reports.push(flexa(&problem, &x0, &o));
+    }
+
+    let traces: Vec<Trace> = reports.iter().map(|r| r.trace.clone()).collect();
+    let mut out = FigureOutput::build(
+        "fig_selection",
+        &format!("Selection strategies on LASSO {n}x{m} (rel.err vs sim time, 40 cores)"),
+        traces,
+        cfg,
+        XAxis::SimTime,
+        YMetric::RelErr,
+        tol,
+    );
+
+    // scan-cost table: the axis the sketching strategies improve
+    let mut table = TextTable::new(&[
+        "strategy", "iters", "scan/iter [%N]", "GFLOP", "final rel.err", "stop",
+    ]);
+    for ((name, _), r) in specs.iter().zip(&reports) {
+        let scan_frac = if r.iters > 0 {
+            100.0 * r.scanned as f64 / (r.iters as f64 * nb as f64)
+        } else {
+            0.0
+        };
+        table.row(vec![
+            (*name).into(),
+            r.iters.to_string(),
+            format!("{scan_frac:.1}"),
+            format!("{:.3}", r.flops / 1e9),
+            format!("{:.2e}", r.final_rel_err),
+            format!("{:?}", r.stop),
+        ]);
+    }
+    out.text.push_str("\n  per-iteration scan cost (blocks scanned / N):\n");
+    out.text.push_str(&table.render());
+    let _ = std::fs::write(format!("{}/{}.txt", cfg.out_dir, out.id), &out.text);
+    out
+}
+
 /// CI bench-smoke: one tiny fig1-style LASSO through the measured-threads
 /// harness in a few seconds; writes `<out>/BENCH_smoke.json` so the perf
 /// trajectory accumulates commit-over-commit as a CI workflow artifact.
@@ -648,7 +722,7 @@ pub fn smoke(cfg: &BenchConfig) -> FigureOutput {
         common.threads = threads;
         common.max_iters = 3000;
         common.max_wall_s = 30.0;
-        let o = FlexaOptions { common, selection: SelectionRule::sigma(0.5), inexact: None };
+        let o = FlexaOptions { common, selection: SelectionSpec::sigma(0.5), inexact: None };
         reports.push(flexa(&problem, &x0, &o));
     });
     let runs = Json::arr(points.iter().zip(&reports).map(|(p, r)| {
@@ -770,6 +844,15 @@ mod tests {
         for r in runs {
             assert_eq!(r.get("converged"), Some(&crate::util::Json::Bool(true)));
         }
+    }
+
+    #[test]
+    fn selection_panel_reports_scan_fractions() {
+        let cfg = tiny_cfg();
+        let out = selection_panel(&cfg);
+        assert_eq!(out.traces.len(), 6);
+        assert!(out.text.contains("hybrid"));
+        assert!(out.text.contains("scan/iter"));
     }
 
     #[test]

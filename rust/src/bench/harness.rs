@@ -7,14 +7,20 @@ use crate::util::{human_time, Timer};
 /// Result of one micro-benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// benchmark name
     pub name: String,
+    /// measured iterations
     pub iters: usize,
+    /// mean seconds per iteration
     pub mean_s: f64,
+    /// fastest iteration [s]
     pub min_s: f64,
+    /// median iteration [s]
     pub p50_s: f64,
 }
 
 impl BenchResult {
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<42} {:>10}/iter (min {:>10}, p50 {:>10}, {} iters)",
@@ -72,7 +78,9 @@ pub fn bench(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
 /// One point on the measured `--threads` scaling axis.
 #[derive(Clone, Debug)]
 pub struct ScalingPoint {
+    /// worker-thread count of this run
     pub threads: usize,
+    /// measured wall-clock [s]
     pub wall_s: f64,
     /// wall-clock speedup versus the first (baseline) thread count
     pub speedup: f64,

@@ -6,7 +6,7 @@ pub mod figures;
 pub mod harness;
 
 pub use figures::{
-    ablations, build_problem, fig1, fig2, fig3, fig4, fig5, smoke, table1, BenchConfig,
-    FigureOutput,
+    ablations, build_problem, fig1, fig2, fig3, fig4, fig5, selection_panel, smoke, table1,
+    BenchConfig, FigureOutput,
 };
 pub use harness::{bench, bench_scaling, BenchResult, ScalingPoint};

@@ -12,6 +12,7 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse `argv` (element 0 = program name).
     pub fn parse(argv: &[String]) -> Self {
         let mut out = Args::default();
         let mut it = argv.iter().skip(1).peekable(); // skip program name
@@ -41,18 +42,22 @@ impl Args {
         self.positionals.get(n).map(|s| s.as_str())
     }
 
+    /// Value of `--key value` / `--key=value`, if present.
     pub fn value(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Whether the bare flag `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Float-typed option value.
     pub fn value_f64(&self, key: &str) -> Option<f64> {
         self.value(key).and_then(|v| v.parse().ok())
     }
 
+    /// Unsigned-integer-typed option value.
     pub fn value_usize(&self, key: &str) -> Option<usize> {
         self.value(key).and_then(|v| v.parse().ok())
     }

@@ -1,11 +1,15 @@
 //! Command-line interface (hand-rolled; clap is not in the offline crate
 //! set). Subcommands:
 //!
-//! * `flexa solve --config <file.toml> [--threads N]` — run an experiment
-//!   config (`--threads` overrides the worker-pool width of every solver);
-//! * `flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|smoke|all>` —
-//!   regenerate the paper's figures/tables into `results/` (`smoke` is the
-//!   seconds-long CI target that also writes `BENCH_smoke.json`);
+//! * `flexa solve --config <file.toml> [--threads N] [--selection SPEC]` —
+//!   run an experiment config (`--threads` overrides the worker-pool width
+//!   of every solver; `--selection` overrides the block-selection strategy
+//!   of the flexa/gj-flexa solvers, e.g. `--selection hybrid:0.25`);
+//! * `flexa bench
+//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|smoke|all>` —
+//!   regenerate the paper's figures/tables into `results/` (`selection` is
+//!   the strategy-comparison panel; `smoke` is the seconds-long CI target
+//!   that also writes `BENCH_smoke.json`);
 //! * `flexa runtime-check` — load + execute every artifact and compare
 //!   against the native engine (the L1↔L3 smoke test);
 //! * `flexa info` — platform, artifact, and cost-model report.
@@ -15,7 +19,7 @@ pub mod args;
 use crate::bench::{self, BenchConfig};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{
-    flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionRule,
+    flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionSpec,
     TermMetric,
 };
 use crate::metrics::{Trace, XAxis, YMetric};
@@ -55,8 +59,9 @@ flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
        (Facchinei, Scutari, Sagratella; IEEE TSP 2015)
 
 USAGE:
-  flexa solve --config <file.toml> [--threads N] [--quiet|--verbose]
-  flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|smoke|all>
+  flexa solve --config <file.toml> [--threads N] [--selection SPEC]
+              [--quiet|--verbose]
+  flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|smoke|all>
   flexa runtime-check
   flexa info
 
@@ -64,12 +69,25 @@ OPTIONS:
   --threads N         override the worker-thread count of every solver in
                       the config (the real parallelism axis; simulated
                       cores stay a separate knob)
+  --selection SPEC    override the block-selection strategy of the
+                      flexa/gj-flexa solvers. SPEC grammar:
+                      greedy[:sigma] | jacobi | gauss-southwell | topk:<k>
+                      | cyclic[:frac] | random[:frac] | importance[:frac]
+                      | hybrid[:frac[:sigma]]   (e.g. hybrid:0.25)
 
 ENV:
   FLEXA_BENCH_SCALE    instance scale vs the paper (default 0.2)
   FLEXA_BENCH_BUDGET   seconds per solver run (default 15)
   FLEXA_BENCH_THREADS  comma list for the measured --threads axis (1,2,4)
   FLEXA_ARTIFACTS      artifact directory (default ./artifacts)";
+
+/// Convert the config `[selection]` table into a strategy spec through
+/// the same constructor/validation path as the CLI grammar
+/// ([`SelectionSpec::from_parts`]), so the two surfaces cannot diverge.
+fn selection_from_settings(s: &crate::config::SelectionSettings) -> Result<SelectionSpec> {
+    SelectionSpec::from_parts(&s.strategy, s.frac, s.sigma, s.k, s.seed)
+        .map_err(|e| anyhow!("[selection] table: {e}"))
+}
 
 fn cmd_solve(args: &Args) -> Result<i32> {
     let path = args
@@ -82,6 +100,17 @@ fn cmd_solve(args: &Args) -> Result<i32> {
 
     // `--threads` overrides every solver's configured worker count
     let threads_override = args.value_usize("threads");
+
+    // selection strategy: CLI `--selection` > config `[selection]` >
+    // per-solver greedy σ-rule
+    let sel_cli: Option<SelectionSpec> = match args.value("selection") {
+        Some(s) => Some(SelectionSpec::parse(s).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
+    let sel_cfg: Option<SelectionSpec> = match &cfg.selection {
+        Some(s) => Some(selection_from_settings(s)?),
+        None => None,
+    };
 
     let mut traces: Vec<Trace> = Vec::new();
     for spec in &cfg.solvers {
@@ -98,23 +127,29 @@ fn cmd_solve(args: &Args) -> Result<i32> {
             name: spec.name.clone(),
             ..Default::default()
         };
-        crate::log_info!("running {} ...", spec.name);
+        let selection = sel_cli
+            .clone()
+            .or_else(|| sel_cfg.clone())
+            .unwrap_or_else(|| SelectionSpec::sigma(spec.sigma));
+        // only flexa/gj-flexa consume the selection strategy; don't
+        // claim it applies to the baselines
+        if matches!(spec.name.as_str(), "flexa" | "gj-flexa") {
+            crate::log_info!("running {} (selection {}) ...", spec.name, selection.name());
+        } else {
+            crate::log_info!("running {} ...", spec.name);
+        }
         let report = match spec.name.as_str() {
             "flexa" => flexa(
                 problem.as_ref(),
                 &x0,
-                &FlexaOptions {
-                    common,
-                    selection: SelectionRule::sigma(spec.sigma),
-                    inexact: None,
-                },
+                &FlexaOptions { common, selection, inexact: None },
             ),
             "gj-flexa" => gauss_jacobi(
                 problem.as_ref(),
                 &x0,
                 &GaussJacobiOptions {
                     common,
-                    selection: Some(SelectionRule::sigma(spec.sigma)),
+                    selection: Some(selection),
                     processors: spec.cores,
                 },
             ),
@@ -189,6 +224,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         "fig5" => run(bench::fig5(&cfg)),
         "table1" => run(vec![bench::table1(&cfg)]),
         "ablations" => run(bench::ablations(&cfg)),
+        "selection" => run(vec![bench::selection_panel(&cfg)]),
         "smoke" => run(vec![bench::smoke(&cfg)]),
         "all" => {
             run(vec![bench::table1(&cfg)]);
@@ -198,6 +234,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
             run(bench::fig4(&cfg));
             run(bench::fig5(&cfg));
             run(bench::ablations(&cfg));
+            run(vec![bench::selection_panel(&cfg)]);
         }
         other => bail!("unknown bench target {other:?}"),
     }

@@ -19,6 +19,13 @@
 //! m = 90
 //! n = 100
 //!
+//! [selection]                    # block-selection strategy (flexa/gj-flexa)
+//! strategy = "hybrid"            # greedy | jacobi | gauss-southwell | topk
+//!                                # | cyclic | random | importance | hybrid
+//! frac = 0.25                    # candidate fraction (sketching strategies)
+//! sigma = 0.5                    # greedy threshold (greedy/hybrid)
+//! seed = 7                       # rng seed (random/importance/hybrid)
+//!
 //! [solver.flexa]                 # per-solver overrides
 //! sigma = 0.5
 //! threads = 4
@@ -27,6 +34,29 @@
 //! max_iters = 500
 //! tol = 1e-6
 //! ```
+//!
+//! ## `[selection]`
+//!
+//! Optional table choosing the block-selection strategy of the
+//! `coordinator::strategy` subsystem for the `flexa` and `gj-flexa`
+//! solvers. Only `strategy` is required; the knobs are:
+//!
+//! * `frac` ∈ (0, 1] (default 0.25) — candidate-sketch size of the
+//!   `cyclic` / `random` / `importance` / `hybrid` strategies;
+//! * `sigma` ∈ [0, 1] (default 0.5) — greedy threshold of `greedy` /
+//!   `hybrid`;
+//! * `k` ≥ 1 — block count for `topk` (`gauss-southwell` ≡ `topk` with
+//!   `k = 1`);
+//! * `seed` — deterministic rng stream of the randomized strategies.
+//!
+//! Knobs a strategy does not take are rejected as misconfigurations
+//! (`seed` is accepted everywhere and ignored by the deterministic
+//! strategies). When the table is absent, solvers use the paper's greedy
+//! σ-rule with the per-solver `sigma`. The CLI flag `--selection <spec>`
+//! (e.g. `--selection hybrid:0.25`) overrides this table; both surfaces
+//! go through the same constructor
+//! (`coordinator::SelectionSpec::from_parts`) and are documented in the
+//! README's selection axis section.
 //!
 //! ## `cores` vs `threads`
 //!
@@ -73,6 +103,25 @@ pub enum ProblemSpec {
     },
 }
 
+/// The `[selection]` table: block-selection strategy settings, kept as
+/// plain data (the CLI layer converts it into a
+/// `coordinator::strategy::SelectionSpec`, keeping config free of solver
+/// types). See the module-level TOML reference for the knob semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectionSettings {
+    /// Strategy name: `greedy` | `jacobi` | `gauss-southwell` | `topk` |
+    /// `cyclic` | `random` | `importance` | `hybrid`.
+    pub strategy: String,
+    /// Candidate fraction for the sketching strategies, (0, 1].
+    pub frac: Option<f64>,
+    /// Greedy threshold σ ∈ [0, 1] (greedy/hybrid).
+    pub sigma: Option<f64>,
+    /// Block count for `topk`.
+    pub k: Option<usize>,
+    /// Rng seed for the randomized strategies.
+    pub seed: Option<u64>,
+}
+
 /// Which solver to run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SolverSpec {
@@ -96,13 +145,23 @@ impl Default for SolverSpec {
 /// A full experiment: problem × solvers × run budget.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Experiment name (CSV/plot file stem).
     pub name: String,
+    /// Problem family and instance shape.
     pub problem: ProblemSpec,
+    /// Solvers to run, in order.
     pub solvers: Vec<SolverSpec>,
+    /// Block-selection strategy (`[selection]` table), if configured.
+    pub selection: Option<SelectionSettings>,
+    /// Iteration budget per solver.
     pub max_iters: usize,
+    /// Wall-clock budget per solver [s].
     pub max_wall_s: f64,
+    /// Termination tolerance.
     pub tol: f64,
+    /// Trace cadence (iterations between recorded points).
     pub trace_every: usize,
+    /// Output directory for CSV/plots.
     pub out_dir: String,
 }
 
@@ -179,10 +238,21 @@ impl ExperimentConfig {
             return Err("no solvers configured".to_string());
         }
 
+        // optional [selection] table (strategy knobs stay plain data here;
+        // the CLI turns them into a coordinator SelectionSpec)
+        let selection = doc.get_str("selection.strategy").map(|s| SelectionSettings {
+            strategy: s.to_string(),
+            frac: doc.get_f64("selection.frac"),
+            sigma: doc.get_f64("selection.sigma"),
+            k: doc.get_usize("selection.k"),
+            seed: doc.get_usize("selection.seed").map(|v| v as u64),
+        });
+
         Ok(Self {
             name,
             problem,
             solvers,
+            selection,
             max_iters: doc.get_usize("run.max_iters").unwrap_or(2000),
             max_wall_s: doc.get_f64("run.max_wall_s").unwrap_or(60.0),
             tol: doc.get_f64("run.tol").unwrap_or(1e-6),
@@ -191,6 +261,7 @@ impl ExperimentConfig {
         })
     }
 
+    /// Read and parse a TOML config file.
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self, String> {
         let text = std::fs::read_to_string(&path)
             .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
@@ -249,6 +320,34 @@ tol = 1e-6
     fn unknown_kind_is_error() {
         let err = ExperimentConfig::from_toml("[problem]\nkind = \"svm\"").unwrap_err();
         assert!(err.contains("unknown problem.kind"));
+    }
+
+    #[test]
+    fn selection_table_parses() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"lasso\"\nm = 20\nn = 30\n\
+             [selection]\nstrategy = \"hybrid\"\nfrac = 0.25\nsigma = 0.6\nseed = 9\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.selection,
+            Some(SelectionSettings {
+                strategy: "hybrid".into(),
+                frac: Some(0.25),
+                sigma: Some(0.6),
+                k: None,
+                seed: Some(9),
+            })
+        );
+    }
+
+    #[test]
+    fn selection_table_absent_is_none() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"lasso\"\nm = 20\nn = 30\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.selection, None);
     }
 
     #[test]

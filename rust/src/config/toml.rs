@@ -10,14 +10,20 @@ use std::collections::BTreeMap;
 /// A parsed TOML value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// quoted string
     Str(String),
+    /// integer literal
     Int(i64),
+    /// float literal
     Float(f64),
+    /// `true` / `false`
     Bool(bool),
+    /// homogeneous array
     Array(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// String value, if this is a [`TomlValue::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
@@ -25,6 +31,7 @@ impl TomlValue {
         }
     }
 
+    /// Numeric value (floats and integers both coerce).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             TomlValue::Float(x) => Some(*x),
@@ -33,6 +40,7 @@ impl TomlValue {
         }
     }
 
+    /// Integer value, if this is a [`TomlValue::Int`].
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             TomlValue::Int(i) => Some(*i),
@@ -40,10 +48,12 @@ impl TomlValue {
         }
     }
 
+    /// Non-negative integer value, if representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|i| usize::try_from(i).ok())
     }
 
+    /// Boolean value, if this is a [`TomlValue::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -51,6 +61,7 @@ impl TomlValue {
         }
     }
 
+    /// Array items, if this is a [`TomlValue::Array`].
     pub fn as_array(&self) -> Option<&[TomlValue]> {
         match self {
             TomlValue::Array(a) => Some(a),
@@ -58,6 +69,7 @@ impl TomlValue {
         }
     }
 
+    /// Array coerced element-wise to `f64` (non-numeric items dropped).
     pub fn as_f64_array(&self) -> Option<Vec<f64>> {
         self.as_array().map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
     }
@@ -70,6 +82,7 @@ pub struct TomlDoc {
 }
 
 impl TomlDoc {
+    /// Parse a TOML document (see the module doc for the subset).
     pub fn parse(text: &str) -> Result<Self, String> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
@@ -107,22 +120,27 @@ impl TomlDoc {
         Ok(doc)
     }
 
+    /// Value at a dotted path (`section.key`), if present.
     pub fn get(&self, path: &str) -> Option<&TomlValue> {
         self.entries.get(path)
     }
 
+    /// String value at a dotted path.
     pub fn get_str(&self, path: &str) -> Option<&str> {
         self.get(path).and_then(|v| v.as_str())
     }
 
+    /// Numeric value at a dotted path.
     pub fn get_f64(&self, path: &str) -> Option<f64> {
         self.get(path).and_then(|v| v.as_f64())
     }
 
+    /// Non-negative integer value at a dotted path.
     pub fn get_usize(&self, path: &str) -> Option<usize> {
         self.get(path).and_then(|v| v.as_usize())
     }
 
+    /// Boolean value at a dotted path.
     pub fn get_bool(&self, path: &str) -> Option<bool> {
         self.get(path).and_then(|v| v.as_bool())
     }
@@ -133,6 +151,7 @@ impl TomlDoc {
         self.entries.keys().filter(|k| k.starts_with(&p)).map(|k| k.as_str()).collect()
     }
 
+    /// Whether the document has no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

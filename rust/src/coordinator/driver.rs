@@ -9,19 +9,33 @@ use crate::util::Timer;
 
 /// Bookkeeping shared by FLEXA and Gauss-Jacobi drivers.
 pub struct RunState<'a> {
+    /// Problem being solved (for merits and reference values).
     pub problem: &'a dyn Problem,
+    /// Options shared by the coordinator algorithms.
     pub opts: &'a CommonOptions,
+    /// Physical wall-clock timer started at construction.
     pub timer: Timer,
+    /// Simulated cluster clock fed by [`RunState::charge`].
     pub clock: SimClock,
+    /// Total flops charged so far.
     pub flops: f64,
+    /// Accumulated trace points.
     pub trace: Trace,
+    /// Most recent stationarity merit.
     pub last_merit: f64,
+    /// Most recent relative error.
     pub last_rel_err: f64,
+    /// Most recent error-bound level `M^k`.
     pub last_ebound: f64,
+    /// Iterations discarded by the τ controller.
     pub discarded: usize,
+    /// Total block scans (best-response evaluations); solvers add the
+    /// candidate-set size every iteration.
+    pub scanned: usize,
 }
 
 impl<'a> RunState<'a> {
+    /// Fresh run state (starts the wall clock and simulated clock).
     pub fn new(problem: &'a dyn Problem, opts: &'a CommonOptions) -> Self {
         Self {
             problem,
@@ -34,6 +48,7 @@ impl<'a> RunState<'a> {
             last_rel_err: f64::NAN,
             last_ebound: f64::NAN,
             discarded: 0,
+            scanned: 0,
         }
     }
 
@@ -137,6 +152,7 @@ impl<'a> RunState<'a> {
             sim_s: self.clock.now_s(),
             flops: self.flops,
             discarded: self.discarded,
+            scanned: self.scanned,
             trace: self.trace,
         }
     }

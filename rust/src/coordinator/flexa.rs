@@ -2,13 +2,18 @@
 //!
 //! Per iteration `k`:
 //!
-//! 1. (prelude) shared per-iteration scratch (logistic weights);
+//! 1. (strategy propose + prelude) the selection strategy names the
+//!    candidate set `C^k` to scan (all blocks for the greedy rules; a
+//!    sketch for cyclic/random/importance/hybrid — see
+//!    [`crate::coordinator::strategy`]), then the shared per-iteration
+//!    scratch (logistic weights) is filled;
 //! 2. (S.3-compute) best responses `x̂_i(x^k, τ)` and error bounds
-//!    `E_i = ‖x̂_i − x_i^k‖` for **all** blocks, in parallel — for our
-//!    problem families `x̂_i` is closed-form, so this is the paper's
-//!    "E_i computable" regime; optional bounded perturbation models inexact
-//!    subproblem solves (`ε_i^k = eps0·γ^k`, Theorem 1(iv));
-//! 3. (S.2) greedy selection `S^k = {i : E_i ≥ σ M^k}`;
+//!    `E_i = ‖x̂_i − x_i^k‖` for the **candidate** blocks, in parallel —
+//!    for our problem families `x̂_i` is closed-form, so this is the
+//!    paper's "E_i computable" regime; optional bounded perturbation
+//!    models inexact subproblem solves (`ε_i^k = eps0·γ^k`, Theorem 1(iv));
+//! 3. (S.2, strategy select) `S^k ⊆ C^k` — e.g. the greedy σ-rule
+//!    `{i : E_i ≥ σ M^k}`, or the σ-rule inside a random sketch (hybrid);
 //! 4. (S.4) memory step `x^{k+1} = x^k + γ^k (ẑ^k − x^k)` restricted to
 //!    `S^k`, with γ from rule (6)/(12), a constant, or Armijo (Remark 4);
 //! 5. incremental auxiliary update (`|S^k|` column axpys — the selective
@@ -22,6 +27,7 @@
 
 use super::driver::RunState;
 use super::stepsize::{armijo_accept, StepRule};
+use super::strategy::Candidates;
 use super::tau::{TauController, TauDecision, TauOptions};
 use super::{FlexaOptions, SolveReport, StopReason};
 use crate::linalg::vector;
@@ -58,10 +64,14 @@ pub fn flexa_with_pool(
     let mut aux = vec![0.0; problem.aux_len()];
     problem.init_aux(&x, &mut aux);
 
+    // per-solve selection strategy (stateful: rng stream, cyclic cursor)
+    let mut strategy = opts.selection.build(problem);
+
     // preallocated workspaces — the iteration loop allocates nothing
     let mut scratch = vec![0.0; problem.prelude_len()];
     let mut zhat = vec![0.0; n];
     let mut e = vec![0.0; nb];
+    let mut cand: Vec<usize> = Vec::with_capacity(nb);
     let mut sel: Vec<usize> = Vec::with_capacity(nb);
     let mut aux_save = vec![0.0; problem.aux_len()];
     let mut x_old = vec![0.0; n]; // pre-step iterate for τ rollback
@@ -79,6 +89,8 @@ pub fn flexa_with_pool(
     let mut max_partials: Vec<f64> = Vec::new();
     let mut dx = vec![0.0; n]; // γ-scaled step, read by the aux fan-out
     let mut moved = vec![false; nb];
+    // full-scan flop total, reused every Candidates::All iteration
+    let total_br_flops: f64 = (0..nb).map(|i| problem.flops_best_response(i)).sum();
 
     let tau_opts = common
         .tau
@@ -99,16 +111,24 @@ pub fn flexa_with_pool(
         iters = k + 1;
         let tau = tau_ctl.tau();
 
-        // ---- prelude + parallel best responses (S.3) ----
+        // ---- strategy propose (which blocks to scan) + prelude ----
+        let scan = strategy.propose(k, nb, &mut cand);
         parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
-        parallel::par_best_responses(
-            pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
-        );
+
+        // ---- parallel best responses (S.3) over the candidate set ----
+        match scan {
+            Candidates::All => parallel::par_best_responses(
+                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
+            ),
+            Candidates::Subset => parallel::par_best_responses_subset(
+                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
+            ),
+        }
 
         // inexact solves: bounded perturbation ε_i^k = eps0·γ^k (Thm 1(iv))
         if let (Some(ix), Some(rng)) = (&opts.inexact, inexact_rng.as_mut()) {
             let eps_k = ix.eps0 * gamma;
-            for i in 0..nb {
+            let mut perturb = |i: usize, zhat: &mut [f64], e: &mut [f64]| {
                 let mut d2 = 0.0;
                 for j in blocks.range(i) {
                     zhat[j] += rng.uniform(-1.0, 1.0) * eps_k;
@@ -116,12 +136,38 @@ pub fn flexa_with_pool(
                     d2 += d * d;
                 }
                 e[i] = d2.sqrt(); // keep E consistent with the perturbed ẑ
+            };
+            match scan {
+                Candidates::All => {
+                    for i in 0..nb {
+                        perturb(i, &mut zhat, &mut e);
+                    }
+                }
+                Candidates::Subset => {
+                    for &i in &cand {
+                        perturb(i, &mut zhat, &mut e);
+                    }
+                }
             }
         }
 
-        // ---- greedy selection (S.2): pool-parallel M^k reduction ----
-        let m_k = parallel::par_max(pool, &e, &e_chunks, &mut max_partials);
-        opts.selection.select_with_max(&e, m_k, &mut sel);
+        // ---- selection (S.2): M^k over the scanned blocks, then the
+        // strategy's pick. The full-scan reduction fans out over the pool;
+        // the sketch maximum is an O(|C^k|) fold on the calling thread.
+        let m_k = match scan {
+            Candidates::All => parallel::par_max(pool, &e, &e_chunks, &mut max_partials),
+            Candidates::Subset => cand.iter().fold(0.0f64, |a, &i| a.max(e[i])),
+        };
+        match scan {
+            Candidates::All => {
+                state.scanned += nb;
+                strategy.select(&e, m_k, &[], &mut sel);
+            }
+            Candidates::Subset => {
+                state.scanned += cand.len();
+                strategy.select(&e, m_k, &cand, &mut sel);
+            }
+        }
         state.last_ebound = m_k;
 
         // ---- Armijo line search (Remark 4), if configured ----
@@ -219,7 +265,14 @@ pub fn flexa_with_pool(
         gamma = common.stepsize.next(gamma, state.step_metric());
 
         // ---- cost accounting (charged to the simulated P-core clock) ----
-        let br_flops: f64 = (0..nb).map(|i| problem.flops_best_response(i)).sum();
+        // sketching strategies only pay for the candidate scans — the
+        // selective saving the hybrid/random selection rules buy
+        let br_flops: f64 = match scan {
+            Candidates::All => total_br_flops,
+            Candidates::Subset => {
+                cand.iter().map(|&i| problem.flops_best_response(i)).sum()
+            }
+        };
         let cost = IterCost {
             flops_total: problem.flops_prelude() + br_flops + update_flops + problem.flops_obj(),
             flops_max_worker: (problem.flops_prelude() + br_flops + update_flops)
@@ -243,7 +296,7 @@ pub fn flexa_with_pool(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{CommonOptions, SelectionRule, TermMetric};
+    use crate::coordinator::{CommonOptions, SelectionSpec, TermMetric};
     use crate::datagen::nesterov_lasso;
     use crate::problems::LassoProblem;
 
@@ -256,7 +309,7 @@ mod tests {
                 name: format!("FLEXA s{sigma}"),
                 ..Default::default()
             },
-            selection: SelectionRule::sigma(sigma),
+            selection: SelectionSpec::sigma(sigma),
             inexact: None,
         }
     }
@@ -361,7 +414,7 @@ mod tests {
     fn gauss_southwell_single_block_updates() {
         let p = LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 2));
         let mut o = small_opts(0.5);
-        o.selection = SelectionRule::gauss_southwell();
+        o.selection = SelectionSpec::gauss_southwell();
         o.common.max_iters = 30;
         o.common.tol = 0.0;
         let r = flexa(&p, &vec![0.0; p.n()], &o);

@@ -8,9 +8,13 @@
 //! γ-scaled deltas as it sweeps. After the sweeps the deltas are merged
 //! (the allreduce of a distributed run, charged to the cost model).
 //!
-//! Algorithm 3 restricts each sweep to `S_p^k = {i ∈ I_p : E_i ≥ σ M^k}`,
-//! with `E_i` from a Jacobi prepass (so the theoretical requirement that
-//! `∪_p S_p^k` contain an `E_i ≥ ρM^k` block holds by construction).
+//! Algorithm 3 restricts each sweep to `S_p^k = S^k ∩ I_p`, where `S^k`
+//! comes from the configured selection strategy
+//! ([`crate::coordinator::strategy`]) over a Jacobi prepass: the greedy
+//! σ-rule scans every block (so the theoretical requirement that
+//! `∪_p S_p^k` contain an `E_i ≥ ρM^k` block holds by construction),
+//! while the sketching strategies (cyclic/random/importance/hybrid) only
+//! scan their candidate subset — the prepass drops from O(N) to O(|C^k|).
 //!
 //! Within-worker sweeps use the **fresh-state** best response (the paper's
 //! point that Gauss-Seidel "latest information" costs extra computation —
@@ -18,6 +22,7 @@
 //! charged via `flops_best_response_fresh`).
 
 use super::driver::RunState;
+use super::strategy::Candidates;
 use super::tau::{TauController, TauDecision, TauOptions};
 use super::{GaussJacobiOptions, SolveReport, StopReason};
 use crate::linalg::ProcessorAssignment;
@@ -58,10 +63,14 @@ pub fn gauss_jacobi_with_pool(
     let mut aux = vec![0.0; problem.aux_len()];
     problem.init_aux(&x, &mut aux);
 
+    // per-solve selection strategy (Algorithm 3), stateful across iterations
+    let mut strategy = opts.selection.as_ref().map(|spec| spec.build(problem));
+
     // workspaces
     let mut scratch = vec![0.0; problem.prelude_len()];
     let mut zhat = vec![0.0; n]; // prepass best responses (Algorithm 3)
     let mut e = vec![0.0; nb];
+    let mut cand: Vec<usize> = Vec::with_capacity(nb);
     let mut sel: Vec<usize> = Vec::with_capacity(nb);
     let mut aux_save = vec![0.0; problem.aux_len()];
     let mut x_old = vec![0.0; n];
@@ -95,19 +104,38 @@ pub fn gauss_jacobi_with_pool(
         iters = k + 1;
         let tau = tau_ctl.tau();
 
-        // ---- Algorithm 3: selection prepass (Jacobi best responses),
-        // fanned out over the persistent pool ----
+        // ---- Algorithm 3: selection prepass (Jacobi best responses over
+        // the strategy's candidate set), fanned out over the persistent
+        // pool ----
         let mut prepass_flops = 0.0;
-        if let Some(rule) = &opts.selection {
+        if let Some(strat) = strategy.as_mut() {
+            let scan = strat.propose(k, nb, &mut cand);
             parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
-            parallel::par_best_responses(
-                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
-            );
-            let m_k = parallel::par_max(pool, &e, &e_chunks, &mut max_partials);
-            rule.select_with_max(&e, m_k, &mut sel);
+            let m_k = match scan {
+                Candidates::All => {
+                    parallel::par_best_responses(
+                        pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
+                    );
+                    state.scanned += nb;
+                    prepass_flops = problem.flops_prelude()
+                        + (0..nb).map(|i| problem.flops_best_response(i)).sum::<f64>();
+                    parallel::par_max(pool, &e, &e_chunks, &mut max_partials)
+                }
+                Candidates::Subset => {
+                    parallel::par_best_responses_subset(
+                        pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
+                    );
+                    state.scanned += cand.len();
+                    prepass_flops = problem.flops_prelude()
+                        + cand.iter().map(|&i| problem.flops_best_response(i)).sum::<f64>();
+                    cand.iter().fold(0.0f64, |a, &i| a.max(e[i]))
+                }
+            };
+            match scan {
+                Candidates::All => strat.select(&e, m_k, &[], &mut sel),
+                Candidates::Subset => strat.select(&e, m_k, &cand, &mut sel),
+            }
             state.last_ebound = m_k;
-            prepass_flops = problem.flops_prelude()
-                + (0..nb).map(|i| problem.flops_best_response(i)).sum::<f64>();
         } else {
             sel.clear();
             sel.extend(0..nb);
@@ -137,6 +165,7 @@ pub fn gauss_jacobi_with_pool(
                 let ei = problem.best_response(i, &x, local, tau, &mut z_buf[..r.len()]);
                 ebound_gs = ebound_gs.max(ei);
                 worker_flops += problem.flops_best_response_fresh(i);
+                state.scanned += 1; // fresh-state scan inside the sweep
                 let mut moved = false;
                 for (t, j) in r.clone().enumerate() {
                     delta[t] = gamma * (z_buf[t] - x[j]);
@@ -219,7 +248,7 @@ pub fn gj_flexa(
     sigma: f64,
     mut opts: GaussJacobiOptions,
 ) -> SolveReport {
-    opts.selection = Some(super::SelectionRule::sigma(sigma));
+    opts.selection = Some(super::SelectionSpec::sigma(sigma));
     gauss_jacobi(problem, x0, &opts)
 }
 
@@ -231,7 +260,7 @@ fn sel_contains(sel: &[usize], i: usize) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{CommonOptions, SelectionRule, TermMetric};
+    use crate::coordinator::{CommonOptions, SelectionSpec, TermMetric};
     use crate::datagen::nesterov_lasso;
     use crate::problems::LassoProblem;
 
@@ -270,7 +299,7 @@ mod tests {
     fn gj_with_selection_converges() {
         let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
         let mut o = opts(4);
-        o.selection = Some(SelectionRule::sigma(0.5));
+        o.selection = Some(SelectionSpec::sigma(0.5));
         let r = gauss_jacobi(&p, &vec![0.0; p.n()], &o);
         assert!(r.converged(), "stop={:?} re={}", r.stop, r.final_rel_err);
         let any_partial = r.trace.points.iter().any(|t| t.active > 0 && t.active < 60);
@@ -298,7 +327,7 @@ mod tests {
             &x0,
             &FlexaOptions {
                 common: mk_common("jacobi"),
-                selection: SelectionRule::FullJacobi,
+                selection: SelectionSpec::full_jacobi(),
                 inexact: None,
             },
         );

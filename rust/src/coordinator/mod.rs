@@ -1,14 +1,16 @@
 //! The paper's contribution, as the L3 coordinator: Algorithm 1 (FLEXA),
 //! Algorithm 2 (Gauss-Jacobi), Algorithm 3 (GJ with selection), and their
-//! shared machinery — greedy selection, diminishing/adaptive/Armijo step
-//! sizes, the adaptive τ controller, worker-parallel best responses, and
-//! inexact-subproblem budgets.
+//! shared machinery — the pluggable block-selection subsystem
+//! ([`strategy`]), diminishing/adaptive/Armijo step sizes, the adaptive τ
+//! controller, worker-parallel best responses, and inexact-subproblem
+//! budgets.
 
 pub mod driver;
 pub mod flexa;
 pub mod gauss_jacobi;
 pub mod selection;
 pub mod stepsize;
+pub mod strategy;
 pub mod tau;
 pub mod workers;
 
@@ -16,6 +18,7 @@ pub use flexa::{flexa, flexa_with_pool};
 pub use gauss_jacobi::{gauss_jacobi, gauss_jacobi_with_pool, gj_flexa};
 pub use selection::SelectionRule;
 pub use stepsize::StepRule;
+pub use strategy::{Candidates, SelectionSpec, SelectionStrategy};
 pub use tau::{TauController, TauDecision, TauOptions};
 
 use crate::metrics::Trace;
@@ -35,13 +38,17 @@ pub enum TermMetric {
 /// Options shared by all coordinator algorithms.
 #[derive(Clone, Debug)]
 pub struct CommonOptions {
+    /// step-size rule γ^k (paper rules (6)/(12), constant, or Armijo)
     pub stepsize: StepRule,
     /// τ controller options; `None` = paper defaults from the problem
     pub tau: Option<TauOptions>,
+    /// iteration budget
     pub max_iters: usize,
     /// physical wall-clock budget
     pub max_wall_s: f64,
+    /// termination tolerance on [`CommonOptions::term`]
     pub tol: f64,
+    /// which metric drives termination
     pub term: TermMetric,
     /// simulated processor count P (time axis of the figures)
     pub cores: usize,
@@ -50,11 +57,14 @@ pub struct CommonOptions {
     /// pool is created once per solve and iterates are bitwise-identical
     /// for any value — see `crate::parallel` for the determinism contract)
     pub threads: usize,
+    /// trace cadence (iterations between recorded points)
     pub trace_every: usize,
     /// merit cadence (full-gradient cost; NOT charged to the simulated
     /// clock — it is instrumentation, not part of the algorithms)
     pub merit_every: usize,
+    /// cluster cost model for the simulated clock
     pub cost_model: CostModel,
+    /// run name (plots, logs)
     pub name: String,
 }
 
@@ -83,15 +93,22 @@ impl Default for CommonOptions {
 /// solves by bounded perturbation.
 #[derive(Clone, Copy, Debug)]
 pub struct InexactOptions {
+    /// perturbation magnitude at γ = 1
     pub eps0: f64,
+    /// seed of the perturbation rng stream
     pub seed: u64,
 }
 
 /// FLEXA (Algorithm 1) options.
 #[derive(Clone, Debug)]
 pub struct FlexaOptions {
+    /// Options shared with the other coordinator algorithms.
     pub common: CommonOptions,
-    pub selection: SelectionRule,
+    /// Block-selection strategy for step (S.2); see
+    /// [`strategy::SelectionSpec`] for the full menu (greedy σ-rule,
+    /// Gauss-Southwell, cyclic, random, importance, hybrid).
+    pub selection: SelectionSpec,
+    /// Inexact-subproblem perturbation schedule; `None` = exact solves.
     pub inexact: Option<InexactOptions>,
 }
 
@@ -99,7 +116,7 @@ impl Default for FlexaOptions {
     fn default() -> Self {
         Self {
             common: CommonOptions::default(),
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: None,
         }
     }
@@ -108,9 +125,10 @@ impl Default for FlexaOptions {
 /// Gauss-Jacobi (Algorithms 2 & 3) options.
 #[derive(Clone, Debug)]
 pub struct GaussJacobiOptions {
+    /// Options shared with the other coordinator algorithms.
     pub common: CommonOptions,
-    /// `Some(rule)` = Algorithm 3 (GJ with Selection); `None` = Algorithm 2
-    pub selection: Option<SelectionRule>,
+    /// `Some(spec)` = Algorithm 3 (GJ with Selection); `None` = Algorithm 2
+    pub selection: Option<SelectionSpec>,
     /// number of processor groups P (defaults to `common.cores` when 0)
     pub processors: usize,
 }
@@ -124,30 +142,49 @@ impl Default for GaussJacobiOptions {
 /// Why the solver stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StopReason {
+    /// termination metric reached `tol`
     Converged,
+    /// iteration budget exhausted
     MaxIters,
+    /// wall-clock budget exhausted
     TimeBudget,
+    /// no further progress possible (e.g. divergence guard)
     Stalled,
 }
 
 /// Result of a solver run.
 #[derive(Clone, Debug)]
 pub struct SolveReport {
+    /// Final iterate.
     pub x: Vec<f64>,
+    /// Per-iteration trace (objective, errors, timings).
     pub trace: Trace,
+    /// Iterations executed.
     pub iters: usize,
+    /// Why the solver stopped.
     pub stop: StopReason,
+    /// Final objective value `V(x)`.
     pub final_obj: f64,
+    /// Final relative error (11), NaN when `V*` is unknown.
     pub final_rel_err: f64,
+    /// Final stationarity merit `‖Z(x)‖∞`.
     pub final_merit: f64,
+    /// Physical wall-clock time of the run [s].
     pub wall_s: f64,
+    /// Simulated cluster time [s].
     pub sim_s: f64,
+    /// Total flops charged to the cost model.
     pub flops: f64,
     /// number of iterations discarded by the τ controller
     pub discarded: usize,
+    /// total block scans (best-response/error-bound evaluations) across
+    /// all iterations — `scanned / (iters · N)` is the per-iteration scan
+    /// fraction the sketching selection strategies reduce below 1
+    pub scanned: usize,
 }
 
 impl SolveReport {
+    /// Whether the run stopped by reaching the tolerance.
     pub fn converged(&self) -> bool {
         self.stop == StopReason::Converged
     }

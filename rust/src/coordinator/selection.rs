@@ -5,6 +5,11 @@
 //! rule is `S^k = {i : E_i ≥ σ M^k}` — σ = 0 gives the full Jacobi update,
 //! σ = 0.5 the paper's "selective" variant. `TopK` covers GRock-style
 //! fixed-cardinality greedy selection and Gauss-Southwell (k = 1).
+//!
+//! These are the *low-level* full-scan rules; the solver-facing,
+//! pluggable subsystem (including the cyclic/random/importance/hybrid
+//! sketching strategies that avoid the O(N) scan) lives in
+//! [`super::strategy`] and wraps [`SelectionRule`] for the greedy cases.
 
 /// A block-selection rule.
 #[derive(Clone, Debug, PartialEq)]
@@ -46,8 +51,16 @@ impl SelectionRule {
     /// the coordinator feeds the pool-parallel reduction
     /// (`parallel::par_max`) here, keeping only the cheap `S^k`-building
     /// pass sequential.
+    ///
+    /// Edge cases: an empty `e` yields an empty `S^k`; otherwise `S^k` is
+    /// never empty — if `m` overestimates the true maximum (so every
+    /// `E_i` falls below `σ·m`), the rule falls back to the argmax, which
+    /// keeps the theoretical requirement `argmax_i E_i ∈ S^k` intact.
     pub fn select_with_max(&self, e: &[f64], m: f64, out: &mut Vec<usize>) {
         out.clear();
+        if e.is_empty() {
+            return;
+        }
         match self {
             SelectionRule::FullJacobi => {
                 out.extend(0..e.len());
@@ -56,9 +69,7 @@ impl SelectionRule {
                 if m <= 0.0 {
                     // already stationary to machine precision: keep argmax
                     // so the invariant "S^k non-empty" holds
-                    if !e.is_empty() {
-                        out.push(0);
-                    }
+                    out.push(0);
                 } else {
                     let thr = sigma * m;
                     for (i, &ei) in e.iter().enumerate() {
@@ -66,11 +77,24 @@ impl SelectionRule {
                             out.push(i);
                         }
                     }
+                    if out.is_empty() {
+                        // m was an overestimate and every block fell below
+                        // the threshold: keep the argmax (ties to lower
+                        // index) so S^k stays non-empty
+                        let mut best = 0usize;
+                        for (i, &ei) in e.iter().enumerate() {
+                            if ei > e[best] {
+                                best = i;
+                            }
+                        }
+                        out.push(best);
+                    }
                 }
             }
             SelectionRule::TopK { k } => {
                 let k = (*k).min(e.len()).max(1);
-                // partial selection: indices of the k largest E_i
+                // partial selection: indices of the k largest E_i (sort_by
+                // is stable, so ties resolve to the lower index)
                 let mut idx: Vec<usize> = (0..e.len()).collect();
                 idx.sort_by(|&a, &b| {
                     e[b].partial_cmp(&e[a]).unwrap_or(std::cmp::Ordering::Equal)
@@ -146,5 +170,66 @@ mod tests {
     #[should_panic]
     fn sigma_out_of_range_panics() {
         SelectionRule::sigma(1.5);
+    }
+
+    #[test]
+    fn empty_error_vector_selects_nothing() {
+        // no blocks -> no selection, and in particular no panic (TopK used
+        // to index past the end of an empty candidate list)
+        let mut out = vec![7usize];
+        for rule in [
+            SelectionRule::FullJacobi,
+            SelectionRule::sigma(0.5),
+            SelectionRule::TopK { k: 3 },
+        ] {
+            let m = rule.select(&[], &mut out);
+            assert_eq!(m, 0.0, "{rule:?}");
+            assert!(out.is_empty(), "{rule:?} selected from an empty e");
+            rule.select_with_max(&[], 1.0, &mut out);
+            assert!(out.is_empty(), "{rule:?} selected from an empty e");
+        }
+    }
+
+    #[test]
+    fn all_below_sigma_threshold_falls_back_to_argmax() {
+        // m overestimates the true maximum (e.g. a stale or padded
+        // reduction): every e_i < sigma*m, yet S^k must stay non-empty and
+        // contain the argmax
+        let e = [0.1, 0.3, 0.2];
+        let mut out = Vec::new();
+        SelectionRule::sigma(0.9).select_with_max(&e, 10.0, &mut out);
+        assert_eq!(out, vec![1]);
+        // ties in the fallback resolve to the lower index
+        let tied = [0.2, 0.3, 0.3];
+        SelectionRule::sigma(0.9).select_with_max(&tied, 10.0, &mut out);
+        assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn ties_at_the_max_are_all_selected_by_sigma_rule() {
+        let e = [0.5, 1.0, 0.49, 1.0, 1.0];
+        let mut out = Vec::new();
+        let rule = SelectionRule::sigma(1.0); // sigma = 1: only the maxima
+        let m = rule.select(&e, &mut out);
+        assert_eq!(m, 1.0);
+        assert_eq!(out, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn topk_ties_resolve_to_lower_index() {
+        let e = [0.7, 1.0, 1.0, 1.0, 0.2];
+        let mut out = Vec::new();
+        SelectionRule::TopK { k: 1 }.select(&e, &mut out);
+        assert_eq!(out, vec![1]);
+        SelectionRule::TopK { k: 2 }.select(&e, &mut out);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn select_with_max_zero_max_keeps_invariant() {
+        // m = 0 exactly (all-stationary): greedy keeps one block
+        let mut out = Vec::new();
+        SelectionRule::sigma(0.5).select_with_max(&[0.0, 0.0, 0.0], 0.0, &mut out);
+        assert_eq!(out, vec![0]);
     }
 }

@@ -34,6 +34,7 @@ impl StepRule {
         StepRule::Diminishing { gamma0: 0.9, theta }
     }
 
+    /// γ at iteration 0.
     pub fn initial(&self) -> f64 {
         match self {
             StepRule::Diminishing { gamma0, .. } | StepRule::Adaptive { gamma0, .. } => *gamma0,
@@ -61,6 +62,7 @@ impl StepRule {
         }
     }
 
+    /// Whether this is the solver-driven Armijo rule.
     pub fn is_armijo(&self) -> bool {
         matches!(self, StepRule::Armijo { .. })
     }

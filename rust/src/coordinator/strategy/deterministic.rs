@@ -1,0 +1,141 @@
+//! Deterministic strategies: the paper's greedy rules (full-scan) and the
+//! essentially-cyclic round-robin sketch.
+
+use super::{batch_size, Candidates, SelectionStrategy};
+use crate::coordinator::selection::SelectionRule;
+
+/// Full-scan greedy selection: wraps a low-level [`SelectionRule`] (the
+/// σ-rule, full Jacobi, or Top-k/Gauss-Southwell) behind the strategy
+/// trait. Proposes [`Candidates::All`] every iteration — this is the
+/// paper's original step (S.2) with its O(N) error scan, which the
+/// coordinator runs through the pool-parallel `M^k` reduction.
+pub struct GreedyStrategy {
+    rule: SelectionRule,
+}
+
+impl GreedyStrategy {
+    /// Wrap a low-level selection rule.
+    pub fn new(rule: SelectionRule) -> Self {
+        Self { rule }
+    }
+}
+
+impl SelectionStrategy for GreedyStrategy {
+    fn name(&self) -> String {
+        match &self.rule {
+            SelectionRule::FullJacobi => "jacobi".into(),
+            SelectionRule::GreedyFraction { sigma } => format!("greedy:{sigma}"),
+            SelectionRule::TopK { k } if *k == 1 => "gauss-southwell".into(),
+            SelectionRule::TopK { k } => format!("topk:{k}"),
+        }
+    }
+
+    fn propose(&mut self, _k: usize, _nb: usize, _out: &mut Vec<usize>) -> Candidates {
+        Candidates::All
+    }
+
+    fn select(&mut self, e: &[f64], m: f64, _cand: &[usize], out: &mut Vec<usize>) {
+        self.rule.select_with_max(e, m, out);
+    }
+}
+
+/// Round-robin sketching: iteration `k` scans (and updates) the next
+/// `⌈frac·N⌉` blocks in cyclic order, so every block is visited exactly
+/// once per `⌈1/frac⌉` iterations (the essentially-cyclic rule). No error
+/// scan outside the batch, no randomness.
+pub struct CyclicStrategy {
+    frac: f64,
+    cursor: usize,
+}
+
+impl CyclicStrategy {
+    /// `frac` ∈ (0, 1]: fraction of blocks per iteration.
+    pub fn new(frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "cyclic frac must be in (0,1]");
+        Self { frac, cursor: 0 }
+    }
+}
+
+impl SelectionStrategy for CyclicStrategy {
+    fn name(&self) -> String {
+        format!("cyclic:{}", self.frac)
+    }
+
+    fn propose(&mut self, _k: usize, nb: usize, out: &mut Vec<usize>) -> Candidates {
+        out.clear();
+        if nb == 0 {
+            return Candidates::Subset;
+        }
+        let c = batch_size(nb, self.frac);
+        let start = self.cursor % nb;
+        for t in 0..c {
+            out.push((start + t) % nb);
+        }
+        self.cursor = (start + c) % nb;
+        out.sort_unstable(); // the wrap-around batch is otherwise unsorted
+        Candidates::Subset
+    }
+
+    fn select(&mut self, _e: &[f64], _m: f64, cand: &[usize], out: &mut Vec<usize>) {
+        out.clear();
+        out.extend_from_slice(cand);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_full_scan_matches_rule() {
+        let mut s = GreedyStrategy::new(SelectionRule::sigma(0.5));
+        let mut cand = Vec::new();
+        assert_eq!(s.propose(0, 5, &mut cand), Candidates::All);
+        assert!(cand.is_empty());
+        let e = [0.1, 0.9, 0.5, 0.44, 1.0];
+        let mut sel = Vec::new();
+        s.select(&e, 1.0, &[], &mut sel);
+        assert_eq!(sel, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn cyclic_covers_all_blocks_each_round() {
+        let nb = 10;
+        let mut s = CyclicStrategy::new(0.3); // batches of 3 -> round of 4 iters
+        let mut seen = vec![0usize; nb];
+        let mut cand = Vec::new();
+        let mut total = 0usize;
+        // 30 blocks proposed over 10 iterations: each block exactly 3 times
+        for k in 0..10 {
+            assert_eq!(s.propose(k, nb, &mut cand), Candidates::Subset);
+            assert_eq!(cand.len(), 3);
+            assert!(cand.windows(2).all(|w| w[0] < w[1]));
+            for &i in &cand {
+                seen[i] += 1;
+            }
+            total += cand.len();
+        }
+        assert_eq!(total, 30);
+        assert!(seen.iter().all(|&c| c == 3), "uneven coverage: {seen:?}");
+    }
+
+    #[test]
+    fn cyclic_selects_whole_batch() {
+        let mut s = CyclicStrategy::new(0.5);
+        let mut cand = Vec::new();
+        let mut sel = Vec::new();
+        s.propose(0, 4, &mut cand);
+        s.select(&[0.0; 4], 0.0, &cand, &mut sel);
+        assert_eq!(sel, cand);
+    }
+
+    #[test]
+    fn cyclic_frac_one_is_full_sweep() {
+        let mut s = CyclicStrategy::new(1.0);
+        let mut cand = Vec::new();
+        s.propose(0, 6, &mut cand);
+        assert_eq!(cand, vec![0, 1, 2, 3, 4, 5]);
+        s.propose(1, 6, &mut cand);
+        assert_eq!(cand, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,529 @@
+//! Pluggable block-selection strategies — the generalized step (S.2).
+//!
+//! The paper's greedy σ-rule spans "virtually all possibilities in between"
+//! full Jacobi and Gauss-Seidel updates, but it needs the **full** error
+//! vector `E(x^k)` — an O(N) scan of best responses every iteration.
+//! Daneshmand, Facchinei, Kungurtsev & Scutari (arXiv:1407.4504) show that
+//! *random* and *hybrid random/greedy* block selection keeps convergence
+//! while only touching a sketch of the blocks, and Richtárik & Takáč
+//! (arXiv:1212.0873) motivate uniform and importance-sampled block
+//! selection for parallel coordinate descent. This module makes the
+//! selection step a first-class, swappable subsystem covering all of them.
+//!
+//! Two-phase protocol (both phases run on the calling thread; the scans
+//! they request fan out over the persistent
+//! [`WorkerPool`](crate::parallel::WorkerPool)):
+//!
+//! 1. [`SelectionStrategy::propose`] — before any best response is
+//!    computed, the strategy names the candidate set `C^k` to *scan*.
+//!    Greedy strategies return [`Candidates::All`] (the classical full
+//!    sweep); randomized/cyclic strategies return a sketch, which is what
+//!    removes the O(N) per-iteration scan from the hot path.
+//! 2. [`SelectionStrategy::select`] — given the error bounds over `C^k`
+//!    and their maximum, the strategy picks `S^k ⊆ C^k` to update.
+//!
+//! Every strategy draws randomness through the deterministic
+//! [`crate::rng`] xoshiro generator seeded from its
+//! [`SelectionSpec`], so a run is reproducible bit-for-bit for any
+//! `threads ≥ 1` (the scans keep the [`crate::parallel`] determinism
+//! contract; the strategies themselves never see the thread count).
+//!
+//! | spec | candidates `C^k` | selected `S^k` | per-iteration scan |
+//! |------|------------------|----------------|--------------------|
+//! | [`SelectionSpec::Greedy`] | all | `{i : E_i ≥ σ M^k}` | O(N) |
+//! | [`SelectionSpec::TopK`] | all | `k` largest `E_i` | O(N) |
+//! | [`SelectionSpec::Cyclic`] | next `⌈fN⌉` blocks round-robin | `= C^k` | O(fN) |
+//! | [`SelectionSpec::Random`] | uniform `⌈fN⌉`-subset | `= C^k` | O(fN) |
+//! | [`SelectionSpec::Importance`] | Lipschitz-weighted sample | `= C^k` | O(fN) |
+//! | [`SelectionSpec::Hybrid`] | uniform `⌈fN⌉`-subset | σ-rule inside `C^k` | O(fN) |
+
+mod deterministic;
+mod randomized;
+
+pub use deterministic::{CyclicStrategy, GreedyStrategy};
+pub use randomized::{HybridStrategy, ImportanceStrategy, RandomStrategy};
+
+use super::selection::SelectionRule;
+use crate::problems::Problem;
+
+/// Which blocks the solver must scan (compute best responses and error
+/// bounds for) this iteration — the outcome of the propose phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Candidates {
+    /// Scan every block: the classical full O(N) sweep. The candidate
+    /// buffer is left empty; error bounds are valid for all blocks.
+    All,
+    /// Scan only the candidate subset written into the propose buffer
+    /// (sorted ascending, distinct, non-empty); error bounds are valid
+    /// only at those indices.
+    Subset,
+}
+
+/// A block-selection strategy: the pluggable step (S.2) of the solvers.
+///
+/// Strategies are stateful (cyclic cursor, rng stream) and are built fresh
+/// per solve from a plain-data [`SelectionSpec`], so options structs stay
+/// `Clone`/`Debug` and runs stay reproducible. The two methods are called
+/// once per iteration, in order, on the solver's calling thread.
+///
+/// Contract: `propose` fills `out` sorted ascending with distinct indices
+/// `< nb` (or returns [`Candidates::All`] leaving `out` untouched);
+/// `select` fills `out` sorted ascending with a non-empty subset of the
+/// candidates whenever the scanned error bounds are not all zero.
+pub trait SelectionStrategy: Send {
+    /// Human-readable strategy name (bench labels, logs).
+    fn name(&self) -> String;
+
+    /// Phase 1, start of iteration `k`: propose the candidate set `C^k`
+    /// over `nb` blocks. Return [`Candidates::All`] for a full scan, or
+    /// fill `out` (sorted ascending, distinct, non-empty) and return
+    /// [`Candidates::Subset`].
+    fn propose(&mut self, k: usize, nb: usize, out: &mut Vec<usize>) -> Candidates;
+
+    /// Phase 2: choose `S^k` into `out` from the error bounds `e` with
+    /// precomputed maximum `m`. When `propose` returned
+    /// [`Candidates::All`], `cand` is empty, every `e[i]` is valid and
+    /// `m = max_i e[i]` (the pool-parallel reduction). When it returned
+    /// [`Candidates::Subset`], `e` is valid only at the `cand` indices and
+    /// `m` is the maximum over them.
+    fn select(&mut self, e: &[f64], m: f64, cand: &[usize], out: &mut Vec<usize>);
+}
+
+/// Plain-data specification of a selection strategy.
+///
+/// Lives inside options structs ([`crate::coordinator::FlexaOptions`],
+/// [`crate::coordinator::GaussJacobiOptions`]); the solver instantiates
+/// the stateful [`SelectionStrategy`] from it once per solve via
+/// [`SelectionSpec::build`]. Parse from CLI/config text with
+/// [`SelectionSpec::parse`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SelectionSpec {
+    /// Greedy σ-rule `S^k = {i : E_i ≥ σ M^k}` (paper (S.2) experimental
+    /// rule); `sigma = 0` is the full Jacobi update.
+    Greedy {
+        /// Selection threshold σ ∈ [0, 1].
+        sigma: f64,
+    },
+    /// The `k` blocks with largest `E_i` (GRock-style; `k = 1` is
+    /// Gauss-Southwell).
+    TopK {
+        /// Number of blocks selected per iteration.
+        k: usize,
+    },
+    /// Round-robin over the blocks, `⌈frac·N⌉` per iteration (essentially
+    /// cyclic rule; every block is visited once per `⌈1/frac⌉` iterations).
+    Cyclic {
+        /// Fraction of blocks scanned (and updated) per iteration, (0, 1].
+        frac: f64,
+    },
+    /// Uniform random `⌈frac·N⌉`-subset per iteration (Richtárik & Takáč
+    /// uniform sampling); every candidate is updated.
+    Random {
+        /// Fraction of blocks scanned per iteration, (0, 1].
+        frac: f64,
+        /// Seed of the strategy's private deterministic rng stream.
+        seed: u64,
+    },
+    /// Random `⌈frac·N⌉`-subset sampled ∝ per-block Lipschitz constants
+    /// ([`Problem::block_lipschitz`]) — importance sampling; blocks with
+    /// stiffer curvature are scanned more often.
+    Importance {
+        /// Fraction of blocks scanned per iteration, (0, 1].
+        frac: f64,
+        /// Seed of the strategy's private deterministic rng stream.
+        seed: u64,
+    },
+    /// Hybrid random/greedy (Daneshmand et al.): sketch a uniform random
+    /// `⌈frac·N⌉` candidate subset, then apply the σ-rule *inside* it —
+    /// greedy quality at a fraction of the scan cost.
+    Hybrid {
+        /// Fraction of blocks scanned per iteration, (0, 1].
+        frac: f64,
+        /// Greedy threshold σ ∈ [0, 1] applied within the sketch.
+        sigma: f64,
+        /// Seed of the strategy's private deterministic rng stream.
+        seed: u64,
+    },
+}
+
+impl SelectionSpec {
+    /// Default candidate fraction for the sketching strategies.
+    pub const DEFAULT_FRAC: f64 = 0.25;
+    /// Default σ for the greedy rule (the paper's experimental value).
+    pub const DEFAULT_SIGMA: f64 = 0.5;
+    /// Default rng seed for the randomized strategies.
+    pub const DEFAULT_SEED: u64 = 0x5E1EC7;
+
+    /// Greedy σ-rule constructor matching the paper's notation
+    /// (σ = 0 ⇒ full Jacobi). Panics outside [0, 1].
+    pub fn sigma(sigma: f64) -> Self {
+        assert!((0.0..=1.0).contains(&sigma), "sigma must be in [0,1]");
+        SelectionSpec::Greedy { sigma }
+    }
+
+    /// Full Jacobi update: every block, every iteration (σ = 0).
+    pub fn full_jacobi() -> Self {
+        SelectionSpec::Greedy { sigma: 0.0 }
+    }
+
+    /// Gauss-Southwell: the single most-violating block.
+    pub fn gauss_southwell() -> Self {
+        SelectionSpec::TopK { k: 1 }
+    }
+
+    /// Hybrid random-then-greedy with default σ and seed.
+    pub fn hybrid(frac: f64) -> Self {
+        SelectionSpec::Hybrid {
+            frac,
+            sigma: Self::DEFAULT_SIGMA,
+            seed: Self::DEFAULT_SEED,
+        }
+    }
+
+    /// Short display name (bench labels, CLI echo).
+    pub fn name(&self) -> String {
+        match self {
+            SelectionSpec::Greedy { sigma } if *sigma == 0.0 => "jacobi".into(),
+            SelectionSpec::Greedy { sigma } => format!("greedy:{sigma}"),
+            SelectionSpec::TopK { k } if *k == 1 => "gauss-southwell".into(),
+            SelectionSpec::TopK { k } => format!("topk:{k}"),
+            SelectionSpec::Cyclic { frac } => format!("cyclic:{frac}"),
+            SelectionSpec::Random { frac, .. } => format!("random:{frac}"),
+            SelectionSpec::Importance { frac, .. } => format!("importance:{frac}"),
+            SelectionSpec::Hybrid { frac, sigma, .. } => format!("hybrid:{frac}:{sigma}"),
+        }
+    }
+
+    /// Parse the CLI/config grammar `name[:arg[:arg]]`:
+    ///
+    /// * `greedy[:sigma]` — σ-rule (default σ = 0.5); `jacobi` ≡ `greedy:0`
+    /// * `gauss-southwell` (alias `gs`) — Top-1; `topk:<k>` — Top-k
+    /// * `cyclic[:frac]`, `random[:frac]`, `importance[:frac]` — sketching
+    ///   strategies (default frac = 0.25)
+    /// * `hybrid[:frac[:sigma]]` — random sketch + σ-rule inside it
+    ///
+    /// ```
+    /// use flexa::coordinator::SelectionSpec;
+    /// assert_eq!(
+    ///     SelectionSpec::parse("hybrid:0.25").unwrap(),
+    ///     SelectionSpec::hybrid(0.25)
+    /// );
+    /// assert_eq!(SelectionSpec::parse("greedy").unwrap(), SelectionSpec::sigma(0.5));
+    /// assert!(SelectionSpec::parse("random:1.5").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or("").trim().to_ascii_lowercase();
+        let arg1 = parts.next().map(str::trim);
+        let arg2 = parts.next().map(str::trim);
+        if parts.next().is_some() {
+            return Err(format!("too many `:` arguments in selection spec {s:?}"));
+        }
+        let f64_arg = |a: Option<&str>, what: &str| -> Result<Option<f64>, String> {
+            match a {
+                None => Ok(None),
+                Some(t) => t
+                    .parse::<f64>()
+                    .map(Some)
+                    .map_err(|_| format!("bad {what} {t:?} in selection spec {s:?}")),
+            }
+        };
+        // map the positional arguments onto the right knobs per strategy;
+        // any argument a strategy does not take is an error, never ignored
+        let (frac, sigma, k) = match head.as_str() {
+            "greedy" => (None, f64_arg(arg1, "sigma")?, None),
+            "topk" => {
+                let k = arg1
+                    .ok_or_else(|| format!("topk needs a count, e.g. topk:8 (got {s:?})"))?
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad topk count in {s:?}"))?;
+                (None, None, Some(k))
+            }
+            "cyclic" | "random" | "importance" => (f64_arg(arg1, "fraction")?, None, None),
+            "hybrid" => (f64_arg(arg1, "fraction")?, f64_arg(arg2, "sigma")?, None),
+            "jacobi" | "full-jacobi" | "gauss-southwell" | "gs" => {
+                if arg1.is_some() {
+                    return Err(format!("{head} takes no arguments in {s:?}"));
+                }
+                (None, None, None)
+            }
+            other => {
+                return Err(format!(
+                    "unknown selection strategy {other:?} \
+                     (expected greedy|jacobi|gauss-southwell|topk|cyclic|random|importance|hybrid)"
+                ))
+            }
+        };
+        if head != "hybrid" && arg2.is_some() {
+            return Err(format!("too many arguments for {head} in {s:?}"));
+        }
+        Self::from_parts(&head, frac, sigma, k, None)
+    }
+
+    /// Construct from a strategy name plus optional knobs — the single
+    /// constructor/validation path behind both [`SelectionSpec::parse`]
+    /// and the config `[selection]` table. Knobs a strategy does not take
+    /// are rejected (a stray `frac` on `greedy` is a misconfiguration,
+    /// not a default to silently apply); `seed` is accepted everywhere
+    /// and ignored by the deterministic strategies, mirroring
+    /// [`SelectionSpec::with_seed`].
+    pub fn from_parts(
+        strategy: &str,
+        frac: Option<f64>,
+        sigma: Option<f64>,
+        k: Option<usize>,
+        seed: Option<u64>,
+    ) -> Result<Self, String> {
+        let frac_v = frac.unwrap_or(Self::DEFAULT_FRAC);
+        if !(frac_v > 0.0 && frac_v <= 1.0) {
+            return Err(format!("selection frac must be in (0,1], got {frac_v}"));
+        }
+        let sigma_v = sigma.unwrap_or(Self::DEFAULT_SIGMA);
+        if !(0.0..=1.0).contains(&sigma_v) {
+            return Err(format!("selection sigma must be in [0,1], got {sigma_v}"));
+        }
+        let seed_v = seed.unwrap_or(Self::DEFAULT_SEED);
+        let reject = |what: &str, present: bool| -> Result<(), String> {
+            if present {
+                Err(format!("selection strategy {strategy:?} takes no {what}"))
+            } else {
+                Ok(())
+            }
+        };
+        match strategy.to_ascii_lowercase().as_str() {
+            "greedy" => {
+                reject("frac", frac.is_some())?;
+                reject("k", k.is_some())?;
+                Ok(SelectionSpec::Greedy { sigma: sigma_v })
+            }
+            "jacobi" | "full-jacobi" => {
+                reject("frac", frac.is_some())?;
+                reject("sigma", sigma.is_some())?;
+                reject("k", k.is_some())?;
+                Ok(SelectionSpec::full_jacobi())
+            }
+            "gauss-southwell" | "gs" => {
+                reject("frac", frac.is_some())?;
+                reject("sigma", sigma.is_some())?;
+                reject("k", k.is_some())?;
+                Ok(SelectionSpec::gauss_southwell())
+            }
+            "topk" => {
+                reject("frac", frac.is_some())?;
+                reject("sigma", sigma.is_some())?;
+                let k = k.ok_or_else(|| "topk needs a count k ≥ 1".to_string())?;
+                if k == 0 {
+                    return Err("topk count must be ≥ 1".to_string());
+                }
+                Ok(SelectionSpec::TopK { k })
+            }
+            "cyclic" => {
+                reject("sigma", sigma.is_some())?;
+                reject("k", k.is_some())?;
+                Ok(SelectionSpec::Cyclic { frac: frac_v })
+            }
+            "random" => {
+                reject("sigma", sigma.is_some())?;
+                reject("k", k.is_some())?;
+                Ok(SelectionSpec::Random { frac: frac_v, seed: seed_v })
+            }
+            "importance" => {
+                reject("sigma", sigma.is_some())?;
+                reject("k", k.is_some())?;
+                Ok(SelectionSpec::Importance { frac: frac_v, seed: seed_v })
+            }
+            "hybrid" => {
+                reject("k", k.is_some())?;
+                Ok(SelectionSpec::Hybrid { frac: frac_v, sigma: sigma_v, seed: seed_v })
+            }
+            other => Err(format!(
+                "unknown selection strategy {other:?} \
+                 (expected greedy|jacobi|gauss-southwell|topk|cyclic|random|importance|hybrid)"
+            )),
+        }
+    }
+
+    /// Replace the rng seed of a randomized strategy (no-op for the
+    /// deterministic ones). Used by config/CLI plumbing.
+    pub fn with_seed(mut self, new_seed: u64) -> Self {
+        match &mut self {
+            SelectionSpec::Random { seed, .. }
+            | SelectionSpec::Importance { seed, .. }
+            | SelectionSpec::Hybrid { seed, .. } => *seed = new_seed,
+            _ => {}
+        }
+        self
+    }
+
+    /// Instantiate the stateful per-solve strategy. `problem` supplies the
+    /// block count and, for [`SelectionSpec::Importance`], the per-block
+    /// Lipschitz weights.
+    pub fn build(&self, problem: &dyn Problem) -> Box<dyn SelectionStrategy> {
+        match self {
+            SelectionSpec::Greedy { sigma } => {
+                Box::new(GreedyStrategy::new(SelectionRule::sigma(*sigma)))
+            }
+            SelectionSpec::TopK { k } => {
+                Box::new(GreedyStrategy::new(SelectionRule::TopK { k: (*k).max(1) }))
+            }
+            SelectionSpec::Cyclic { frac } => Box::new(CyclicStrategy::new(*frac)),
+            SelectionSpec::Random { frac, seed } => Box::new(RandomStrategy::new(*frac, *seed)),
+            SelectionSpec::Importance { frac, seed } => {
+                let nb = problem.blocks().n_blocks();
+                let weights: Vec<f64> = (0..nb).map(|i| problem.block_lipschitz(i)).collect();
+                Box::new(ImportanceStrategy::new(*frac, *seed, &weights))
+            }
+            SelectionSpec::Hybrid { frac, sigma, seed } => {
+                Box::new(HybridStrategy::new(*frac, *sigma, *seed))
+            }
+        }
+    }
+}
+
+impl Default for SelectionSpec {
+    fn default() -> Self {
+        SelectionSpec::sigma(Self::DEFAULT_SIGMA)
+    }
+}
+
+/// Candidate-batch size `⌈frac·nb⌉`, clamped into `[1, nb]`.
+pub(crate) fn batch_size(nb: usize, frac: f64) -> usize {
+    if nb == 0 {
+        return 0;
+    }
+    ((nb as f64 * frac).ceil() as usize).max(1).min(nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::nesterov_lasso;
+    use crate::problems::LassoProblem;
+
+    #[test]
+    fn parse_round_trips_the_grammar() {
+        assert_eq!(SelectionSpec::parse("greedy").unwrap(), SelectionSpec::sigma(0.5));
+        assert_eq!(SelectionSpec::parse("greedy:0.7").unwrap(), SelectionSpec::sigma(0.7));
+        assert_eq!(SelectionSpec::parse("jacobi").unwrap(), SelectionSpec::full_jacobi());
+        assert_eq!(
+            SelectionSpec::parse("gs").unwrap(),
+            SelectionSpec::gauss_southwell()
+        );
+        assert_eq!(SelectionSpec::parse("topk:8").unwrap(), SelectionSpec::TopK { k: 8 });
+        assert_eq!(
+            SelectionSpec::parse("cyclic:0.5").unwrap(),
+            SelectionSpec::Cyclic { frac: 0.5 }
+        );
+        assert_eq!(
+            SelectionSpec::parse("random").unwrap(),
+            SelectionSpec::Random { frac: 0.25, seed: SelectionSpec::DEFAULT_SEED }
+        );
+        assert_eq!(
+            SelectionSpec::parse("importance:0.1").unwrap(),
+            SelectionSpec::Importance { frac: 0.1, seed: SelectionSpec::DEFAULT_SEED }
+        );
+        assert_eq!(
+            SelectionSpec::parse("hybrid:0.25:0.6").unwrap(),
+            SelectionSpec::Hybrid { frac: 0.25, sigma: 0.6, seed: SelectionSpec::DEFAULT_SEED }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "", "frobnicate", "greedy:2", "cyclic:0", "random:1.5", "topk", "topk:0",
+            "topk:x", "hybrid:0.25:1.5", "hybrid:0.25:0.5:9",
+            // excess arguments are errors, never silently dropped
+            "jacobi:1", "gs:8", "gauss-southwell:2", "random:0.25:42", "cyclic:0.5:0.5",
+            "greedy:0.5:0.5", "topk:8:2", "importance:0.25:7",
+        ] {
+            assert!(SelectionSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn from_parts_matches_parse_and_rejects_unused_knobs() {
+        // the shared constructor behind parse and the [selection] table
+        assert_eq!(
+            SelectionSpec::from_parts("hybrid", Some(0.25), None, None, Some(9)).unwrap(),
+            SelectionSpec::Hybrid { frac: 0.25, sigma: 0.5, seed: 9 }
+        );
+        assert_eq!(
+            SelectionSpec::from_parts("topk", None, None, Some(8), None).unwrap(),
+            SelectionSpec::TopK { k: 8 }
+        );
+        // topk requires an explicit k (same as the CLI grammar)
+        assert!(SelectionSpec::from_parts("topk", None, None, None, None).is_err());
+        assert!(SelectionSpec::from_parts("topk", None, None, Some(0), None).is_err());
+        // knobs a strategy does not take are misconfigurations
+        assert!(SelectionSpec::from_parts("greedy", Some(0.25), None, None, None).is_err());
+        assert!(SelectionSpec::from_parts("random", None, Some(0.5), None, None).is_err());
+        assert!(SelectionSpec::from_parts("jacobi", None, None, Some(2), None).is_err());
+        // seed is accepted (and ignored) by deterministic strategies
+        assert_eq!(
+            SelectionSpec::from_parts("greedy", None, None, None, Some(5)).unwrap(),
+            SelectionSpec::sigma(0.5)
+        );
+    }
+
+    #[test]
+    fn with_seed_only_touches_randomized_specs() {
+        assert_eq!(
+            SelectionSpec::hybrid(0.25).with_seed(7),
+            SelectionSpec::Hybrid { frac: 0.25, sigma: 0.5, seed: 7 }
+        );
+        assert_eq!(SelectionSpec::sigma(0.5).with_seed(7), SelectionSpec::sigma(0.5));
+    }
+
+    #[test]
+    fn batch_size_clamps() {
+        assert_eq!(batch_size(100, 0.25), 25);
+        assert_eq!(batch_size(100, 0.001), 1);
+        assert_eq!(batch_size(100, 1.0), 100);
+        assert_eq!(batch_size(3, 0.5), 2);
+        assert_eq!(batch_size(0, 0.5), 0);
+    }
+
+    #[test]
+    fn build_every_spec() {
+        let p = LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 1));
+        for spec in [
+            SelectionSpec::sigma(0.5),
+            SelectionSpec::full_jacobi(),
+            SelectionSpec::gauss_southwell(),
+            SelectionSpec::TopK { k: 4 },
+            SelectionSpec::Cyclic { frac: 0.25 },
+            SelectionSpec::Random { frac: 0.25, seed: 1 },
+            SelectionSpec::Importance { frac: 0.25, seed: 1 },
+            SelectionSpec::hybrid(0.25),
+        ] {
+            let mut strategy = spec.build(&p);
+            let mut cand = Vec::new();
+            let mut sel = Vec::new();
+            let nb = p.blocks().n_blocks();
+            let e: Vec<f64> = (0..nb).map(|i| (i % 7) as f64 / 7.0 + 0.01).collect();
+            for k in 0..5 {
+                let scan = strategy.propose(k, nb, &mut cand);
+                let (m, cand_slice): (f64, &[usize]) = match scan {
+                    Candidates::All => {
+                        (e.iter().fold(0.0f64, |a, &b| a.max(b)), &[][..])
+                    }
+                    Candidates::Subset => {
+                        assert!(!cand.is_empty(), "{spec:?} proposed nothing");
+                        assert!(cand.windows(2).all(|w| w[0] < w[1]), "{spec:?} unsorted");
+                        assert!(*cand.last().unwrap() < nb);
+                        (cand.iter().fold(0.0f64, |a, &i| a.max(e[i])), &cand[..])
+                    }
+                };
+                strategy.select(&e, m, cand_slice, &mut sel);
+                assert!(!sel.is_empty(), "{spec:?} selected nothing at k={k}");
+                assert!(sel.windows(2).all(|w| w[0] < w[1]), "{spec:?} sel unsorted");
+                if scan == Candidates::Subset {
+                    for i in &sel {
+                        assert!(cand.contains(i), "{spec:?} selected outside C^k");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,368 @@
+//! Randomized strategies: uniform, importance-sampled, and hybrid
+//! random-then-greedy block sketching.
+//!
+//! All randomness flows through a private [`Xoshiro256pp`] stream seeded
+//! from the [`SelectionSpec`](super::SelectionSpec), so runs are
+//! reproducible and — because the stream is consumed on the calling
+//! thread, never by the workers — bitwise-identical for any `threads ≥ 1`.
+
+use super::{batch_size, Candidates, SelectionStrategy};
+use crate::rng::Xoshiro256pp;
+
+/// Draw `c` distinct uniform indices from `0..nb` into `out` (sorted) via
+/// partial Fisher-Yates over a persistent index buffer. Reusing the
+/// partially-shuffled buffer across iterations is sound: partial
+/// Fisher-Yates with uniform swaps yields a uniformly distributed
+/// `c`-subset from *any* starting permutation, and it keeps the hot loop
+/// allocation-free after the first call.
+fn draw_uniform(
+    rng: &mut Xoshiro256pp,
+    idx: &mut Vec<usize>,
+    nb: usize,
+    c: usize,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    if nb == 0 {
+        return;
+    }
+    if idx.len() != nb {
+        idx.clear();
+        idx.extend(0..nb);
+    }
+    for t in 0..c {
+        let j = t + rng.next_usize(nb - t);
+        idx.swap(t, j);
+    }
+    out.extend_from_slice(&idx[..c]);
+    out.sort_unstable();
+}
+
+/// Uniform random sketching (Richtárik & Takáč-style sampling): iteration
+/// `k` scans a uniform random `⌈frac·N⌉`-subset and updates all of it.
+pub struct RandomStrategy {
+    frac: f64,
+    rng: Xoshiro256pp,
+    idx: Vec<usize>,
+}
+
+impl RandomStrategy {
+    /// `frac` ∈ (0, 1]: fraction of blocks per iteration; `seed` fixes the
+    /// strategy's private rng stream.
+    pub fn new(frac: f64, seed: u64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "random frac must be in (0,1]");
+        Self { frac, rng: Xoshiro256pp::seed_from_u64(seed), idx: Vec::new() }
+    }
+}
+
+impl SelectionStrategy for RandomStrategy {
+    fn name(&self) -> String {
+        format!("random:{}", self.frac)
+    }
+
+    fn propose(&mut self, _k: usize, nb: usize, out: &mut Vec<usize>) -> Candidates {
+        let c = batch_size(nb, self.frac);
+        draw_uniform(&mut self.rng, &mut self.idx, nb, c, out);
+        Candidates::Subset
+    }
+
+    fn select(&mut self, _e: &[f64], _m: f64, cand: &[usize], out: &mut Vec<usize>) {
+        out.clear();
+        out.extend_from_slice(cand);
+    }
+}
+
+/// Importance-sampled sketching: candidates are drawn with probability
+/// proportional to the per-block Lipschitz constants
+/// ([`crate::problems::Problem::block_lipschitz`]), so stiff blocks are
+/// scanned more often. Draws are with replacement but only *distinct*
+/// blocks join the batch, and drawing continues (bounded) until
+/// `⌈frac·N⌉` distinct candidates are collected — so skewed weight
+/// profiles do not collapse the batch toward a single block. Under
+/// extremely concentrated weights the draw bound may leave the batch
+/// smaller than `⌈frac·N⌉` (never larger, and never empty).
+pub struct ImportanceStrategy {
+    frac: f64,
+    rng: Xoshiro256pp,
+    /// cumulative weights `cumw[i] = Σ_{j ≤ i} w_j` (strictly positive total)
+    cumw: Vec<f64>,
+    /// per-block "already in this batch" scratch (reset after each propose)
+    picked: Vec<bool>,
+}
+
+impl ImportanceStrategy {
+    /// `weights[i]` ≥ 0 is block `i`'s sampling weight (typically its
+    /// Lipschitz constant); degenerate weight vectors (all zero, or any
+    /// non-finite entry) fall back to uniform sampling.
+    pub fn new(frac: f64, seed: u64, weights: &[f64]) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "importance frac must be in (0,1]");
+        let mut cumw = Vec::with_capacity(weights.len());
+        let mut acc = 0.0f64;
+        let mut ok = true;
+        for &w in weights {
+            if !w.is_finite() || w < 0.0 {
+                ok = false;
+                break;
+            }
+            acc += w;
+            cumw.push(acc);
+        }
+        if !ok || !(acc > 0.0) || !acc.is_finite() {
+            cumw.clear();
+            cumw.extend((0..weights.len()).map(|i| (i + 1) as f64));
+        }
+        Self { frac, rng: Xoshiro256pp::seed_from_u64(seed), cumw, picked: Vec::new() }
+    }
+}
+
+impl SelectionStrategy for ImportanceStrategy {
+    fn name(&self) -> String {
+        format!("importance:{}", self.frac)
+    }
+
+    fn propose(&mut self, _k: usize, nb: usize, out: &mut Vec<usize>) -> Candidates {
+        out.clear();
+        if nb == 0 {
+            return Candidates::Subset;
+        }
+        debug_assert_eq!(nb, self.cumw.len(), "strategy built for a different problem");
+        if self.picked.len() != nb {
+            self.picked.clear();
+            self.picked.resize(nb, false);
+        }
+        let c = batch_size(nb, self.frac);
+        let total = *self.cumw.last().unwrap();
+        // keep drawing until c distinct blocks join the batch; the draw
+        // bound keeps pathologically concentrated weights from spinning
+        let max_draws = 8 * c + 16;
+        let mut draws = 0usize;
+        while out.len() < c && draws < max_draws {
+            draws += 1;
+            let u = self.rng.next_f64() * total;
+            // first index with cumw[i] > u (clamped for u == total edge)
+            let i = self.cumw.partition_point(|&w| w <= u).min(nb - 1);
+            if !self.picked[i] {
+                self.picked[i] = true;
+                out.push(i);
+            }
+        }
+        for &i in out.iter() {
+            self.picked[i] = false; // reset the scratch for the next batch
+        }
+        out.sort_unstable();
+        Candidates::Subset
+    }
+
+    fn select(&mut self, _e: &[f64], _m: f64, cand: &[usize], out: &mut Vec<usize>) {
+        out.clear();
+        out.extend_from_slice(cand);
+    }
+}
+
+/// Hybrid random-then-greedy (Daneshmand et al., arXiv:1407.4504): sketch
+/// a uniform random `⌈frac·N⌉` candidate subset, compute error bounds only
+/// there, then apply the greedy σ-rule *inside* the sketch:
+/// `S^k = {i ∈ C^k : E_i ≥ σ·max_{j ∈ C^k} E_j}`. Greedy selection quality
+/// at a fraction of the scan cost; the sketch argmax is always kept, so
+/// `S^k` is never empty.
+pub struct HybridStrategy {
+    frac: f64,
+    sigma: f64,
+    rng: Xoshiro256pp,
+    idx: Vec<usize>,
+}
+
+impl HybridStrategy {
+    /// `frac` ∈ (0, 1] sketch fraction; `sigma` ∈ [0, 1] greedy threshold
+    /// within the sketch; `seed` fixes the rng stream.
+    pub fn new(frac: f64, sigma: f64, seed: u64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "hybrid frac must be in (0,1]");
+        assert!((0.0..=1.0).contains(&sigma), "hybrid sigma must be in [0,1]");
+        Self { frac, sigma, rng: Xoshiro256pp::seed_from_u64(seed), idx: Vec::new() }
+    }
+}
+
+impl SelectionStrategy for HybridStrategy {
+    fn name(&self) -> String {
+        format!("hybrid:{}:{}", self.frac, self.sigma)
+    }
+
+    fn propose(&mut self, _k: usize, nb: usize, out: &mut Vec<usize>) -> Candidates {
+        let c = batch_size(nb, self.frac);
+        draw_uniform(&mut self.rng, &mut self.idx, nb, c, out);
+        Candidates::Subset
+    }
+
+    fn select(&mut self, e: &[f64], m: f64, cand: &[usize], out: &mut Vec<usize>) {
+        out.clear();
+        if cand.is_empty() {
+            return;
+        }
+        if m <= 0.0 {
+            // sketch already stationary to machine precision: keep one
+            // block so the invariant "S^k non-empty" holds
+            out.push(cand[0]);
+            return;
+        }
+        let thr = self.sigma * m;
+        for &i in cand {
+            if e[i] >= thr {
+                out.push(i);
+            }
+        }
+        if out.is_empty() {
+            // numerical guard (m overestimate): keep the sketch argmax
+            let mut best = cand[0];
+            for &i in cand {
+                if e[i] > e[best] {
+                    best = i;
+                }
+            }
+            out.push(best);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_batches_are_distinct_sorted_in_range() {
+        let mut s = RandomStrategy::new(0.3, 42);
+        let mut cand = Vec::new();
+        for k in 0..50 {
+            assert_eq!(s.propose(k, 20, &mut cand), Candidates::Subset);
+            assert_eq!(cand.len(), 6);
+            assert!(cand.windows(2).all(|w| w[0] < w[1]), "k={k}: {cand:?}");
+            assert!(*cand.last().unwrap() < 20);
+        }
+    }
+
+    #[test]
+    fn random_eventually_covers_every_block() {
+        let mut s = RandomStrategy::new(0.25, 7);
+        let mut cand = Vec::new();
+        let mut seen = [false; 16];
+        for k in 0..100 {
+            s.propose(k, 16, &mut cand);
+            for &i in &cand {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "some block never sampled: {seen:?}");
+    }
+
+    #[test]
+    fn random_streams_are_seed_deterministic() {
+        let mut a = RandomStrategy::new(0.25, 9);
+        let mut b = RandomStrategy::new(0.25, 9);
+        let (mut ca, mut cb) = (Vec::new(), Vec::new());
+        for k in 0..20 {
+            a.propose(k, 33, &mut ca);
+            b.propose(k, 33, &mut cb);
+            assert_eq!(ca, cb, "diverged at k={k}");
+        }
+        let mut c = RandomStrategy::new(0.25, 10);
+        let mut cc = Vec::new();
+        let mut diff = false;
+        for k in 0..20 {
+            a.propose(k, 33, &mut ca);
+            c.propose(k, 33, &mut cc);
+            diff |= ca != cc;
+        }
+        assert!(diff, "different seeds produced identical streams");
+    }
+
+    #[test]
+    fn importance_prefers_heavy_blocks() {
+        // block 0 carries 100x the weight of each other block
+        let mut w = vec![1.0; 32];
+        w[0] = 100.0;
+        let mut s = ImportanceStrategy::new(0.125, 3, &w);
+        let mut cand = Vec::new();
+        let mut hits0 = 0usize;
+        let mut hits1 = 0usize;
+        for k in 0..200 {
+            s.propose(k, 32, &mut cand);
+            assert!(!cand.is_empty() && cand.len() <= 4);
+            assert!(cand.windows(2).all(|w| w[0] < w[1]));
+            hits0 += cand.contains(&0) as usize;
+            hits1 += cand.contains(&1) as usize;
+        }
+        assert!(
+            hits0 > 5 * hits1.max(1),
+            "heavy block not preferred: {hits0} vs {hits1}"
+        );
+    }
+
+    #[test]
+    fn importance_degenerate_weights_fall_back_to_uniform() {
+        for w in [vec![0.0; 8], vec![f64::NAN; 8], vec![-1.0; 8]] {
+            let mut s = ImportanceStrategy::new(0.5, 1, &w);
+            let mut cand = Vec::new();
+            let mut seen = [false; 8];
+            for k in 0..100 {
+                s.propose(k, 8, &mut cand);
+                assert!(!cand.is_empty());
+                for &i in &cand {
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&b| b), "fallback not uniform for {w:?}");
+        }
+    }
+
+    #[test]
+    fn hybrid_selects_sigma_rule_inside_sketch() {
+        let mut s = HybridStrategy::new(0.5, 0.5, 11);
+        let nb = 8;
+        let e = [0.0, 1.0, 0.1, 0.9, 0.2, 0.8, 0.05, 0.45];
+        let mut cand = Vec::new();
+        let mut sel = Vec::new();
+        for k in 0..40 {
+            s.propose(k, nb, &mut cand);
+            let m = cand.iter().fold(0.0f64, |a, &i| a.max(e[i]));
+            s.select(&e, m, &cand, &mut sel);
+            assert!(!sel.is_empty(), "k={k}");
+            // every selected block is a candidate above the threshold …
+            for &i in &sel {
+                assert!(cand.contains(&i));
+                assert!(e[i] >= 0.5 * m - 1e-15, "k={k}: e[{i}]={} < σm={}", e[i], 0.5 * m);
+            }
+            // … and the sketch argmax is always in S^k
+            let arg = cand.iter().copied().fold(cand[0], |a, i| if e[i] > e[a] { i } else { a });
+            assert!(sel.contains(&arg), "k={k}: argmax {arg} missing from {sel:?}");
+        }
+    }
+
+    #[test]
+    fn hybrid_zero_errors_keep_one_block() {
+        let mut s = HybridStrategy::new(0.5, 0.5, 2);
+        let mut cand = Vec::new();
+        let mut sel = Vec::new();
+        s.propose(0, 6, &mut cand);
+        s.select(&[0.0; 6], 0.0, &cand, &mut sel);
+        assert_eq!(sel.len(), 1);
+    }
+
+    #[test]
+    fn hybrid_deterministic_per_seed() {
+        // the satellite requirement: same seed -> identical sketch+selection
+        let run = |seed: u64| -> Vec<Vec<usize>> {
+            let mut s = HybridStrategy::new(0.25, 0.5, seed);
+            let e: Vec<f64> = (0..40).map(|i| ((i * 13) % 17) as f64 / 17.0).collect();
+            let (mut cand, mut sel) = (Vec::new(), Vec::new());
+            let mut sels = Vec::new();
+            for k in 0..25 {
+                s.propose(k, 40, &mut cand);
+                let m = cand.iter().fold(0.0f64, |a, &i| a.max(e[i]));
+                s.select(&e, m, &cand, &mut sel);
+                sels.push(sel.clone());
+            }
+            sels
+        };
+        assert_eq!(run(123), run(123));
+        assert_ne!(run(123), run(124));
+    }
+}

@@ -28,6 +28,7 @@ pub struct TauOptions {
 }
 
 impl TauOptions {
+    /// The paper's §VI-A adaptive schedule from an initial τ and floor.
     pub fn paper(tau0: f64, tau_min: f64) -> Self {
         Self {
             tau0: tau0.max(tau_min),
@@ -39,6 +40,7 @@ impl TauOptions {
         }
     }
 
+    /// Fixed τ (controller disabled) — for ablations and theory checks.
     pub fn frozen(tau0: f64) -> Self {
         Self {
             tau0,
@@ -75,6 +77,7 @@ pub struct TauController {
 }
 
 impl TauController {
+    /// New controller from options.
     pub fn new(opts: TauOptions) -> Self {
         Self {
             tau: opts.tau0.max(opts.tau_min),
@@ -91,6 +94,7 @@ impl TauController {
         self.tau
     }
 
+    /// Number of τ changes so far.
     pub fn updates(&self) -> usize {
         self.updates
     }

@@ -18,7 +18,9 @@ use crate::rng::Xoshiro256pp;
 /// A LASSO instance with ground truth.
 #[derive(Clone, Debug)]
 pub struct LassoInstance {
+    /// data matrix `A` (m×n)
     pub a: Matrix,
+    /// right-hand side `b` (length m)
     pub b: Vec<f64>,
     /// ℓ1 weight
     pub c: f64,
@@ -108,6 +110,7 @@ pub struct LogisticInstance {
     pub labels: Vec<f64>,
     /// ℓ1 weight `c`
     pub c: f64,
+    /// preset name (plot/table labels)
     pub name: String,
 }
 
@@ -123,6 +126,7 @@ pub enum LogisticPreset {
 }
 
 impl LogisticPreset {
+    /// Parse a preset from its dataset name (case-insensitive).
     pub fn from_name(name: &str) -> Option<Self> {
         match name.to_ascii_lowercase().as_str() {
             "gisette" => Some(Self::Gisette),
@@ -141,6 +145,7 @@ impl LogisticPreset {
         }
     }
 
+    /// Dataset name as used in the paper's Table I.
     pub fn name(self) -> &'static str {
         match self {
             Self::Gisette => "gisette",
@@ -218,7 +223,9 @@ pub fn logistic_like(preset: LogisticPreset, scale: f64, seed: u64) -> LogisticI
 /// A nonconvex box-constrained quadratic instance — problem (13).
 #[derive(Clone, Debug)]
 pub struct NonconvexQpInstance {
+    /// data matrix `A` (m×n)
     pub a: Matrix,
+    /// linear term `b` (length m)
     pub b: Vec<f64>,
     /// ℓ1 weight `c`
     pub c: f64,

@@ -40,6 +40,8 @@
 //! println!("relative error: {:.2e}", report.final_rel_err);
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -52,11 +52,13 @@ impl DenseMatrix {
     }
 
     #[inline]
+    /// Number of rows.
     pub fn nrows(&self) -> usize {
         self.nrows
     }
 
     #[inline]
+    /// Number of columns.
     pub fn ncols(&self) -> usize {
         self.ncols
     }
@@ -69,6 +71,7 @@ impl DenseMatrix {
     }
 
     #[inline]
+    /// Set entry `(i, j)`.
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.nrows && j < self.ncols);
         self.data[j * self.nrows + i] = v;

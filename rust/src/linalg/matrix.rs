@@ -11,12 +11,15 @@ use super::sparse::CscMatrix;
 /// solver in this crate.
 #[derive(Clone, Debug)]
 pub enum Matrix {
+    /// dense column-major storage
     Dense(DenseMatrix),
+    /// compressed sparse column storage
     Sparse(CscMatrix),
 }
 
 impl Matrix {
     #[inline]
+    /// Number of rows.
     pub fn nrows(&self) -> usize {
         match self {
             Matrix::Dense(a) => a.nrows(),
@@ -25,6 +28,7 @@ impl Matrix {
     }
 
     #[inline]
+    /// Number of columns.
     pub fn ncols(&self) -> usize {
         match self {
             Matrix::Dense(a) => a.ncols(),
@@ -124,6 +128,7 @@ impl Matrix {
         }
     }
 
+    /// Scale column `j` by `alpha` in place.
     pub fn scale_col(&mut self, j: usize, alpha: f64) {
         match self {
             Matrix::Dense(a) => a.scale_col(j, alpha),
@@ -139,6 +144,7 @@ impl Matrix {
         }
     }
 
+    /// Whether the backing storage is sparse.
     pub fn is_sparse(&self) -> bool {
         matches!(self, Matrix::Sparse(_))
     }

@@ -140,15 +140,18 @@ impl ProcessorAssignment {
     }
 
     #[inline]
+    /// Number of processor groups.
     pub fn n_processors(&self) -> usize {
         self.groups.len()
     }
 
     #[inline]
+    /// Block indices owned by processor `p`.
     pub fn group(&self, p: usize) -> &[usize] {
         &self.groups[p]
     }
 
+    /// Iterate over the per-processor block groups.
     pub fn iter(&self) -> impl Iterator<Item = &[usize]> {
         self.groups.iter().map(|g| g.as_slice())
     }

@@ -67,11 +67,13 @@ impl CscMatrix {
     }
 
     #[inline]
+    /// Number of rows.
     pub fn nrows(&self) -> usize {
         self.nrows
     }
 
     #[inline]
+    /// Number of columns.
     pub fn ncols(&self) -> usize {
         self.ncols
     }

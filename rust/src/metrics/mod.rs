@@ -21,10 +21,12 @@ pub struct Flops {
 }
 
 impl Flops {
+    /// Total flop count across all classes.
     pub fn total(&self) -> f64 {
         self.linalg + self.transcendental + self.vector
     }
 
+    /// Accumulate another counter into this one.
     pub fn add(&mut self, other: Flops) {
         self.linalg += other.linalg;
         self.transcendental += other.transcendental;
@@ -66,6 +68,7 @@ impl IterCost {
 /// One point on a convergence curve.
 #[derive(Clone, Copy, Debug)]
 pub struct TracePoint {
+    /// iteration index (0 = initial point)
     pub iter: usize,
     /// physical wall-clock since solve start (this container: 1 core)
     pub wall_s: f64,
@@ -86,36 +89,48 @@ pub struct TracePoint {
 /// Convergence trace of one solver run.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
+    /// series name (legend label)
     pub name: String,
+    /// recorded points, in iteration order
     pub points: Vec<TracePoint>,
 }
 
 /// Which time axis to plot against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum XAxis {
+    /// iteration count
     Iterations,
+    /// physical wall-clock seconds
     WallTime,
+    /// simulated cluster seconds (cost model)
     SimTime,
+    /// cumulative flops
     Flops,
 }
 
 /// Which metric to plot.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum YMetric {
+    /// relative error (11)
     RelErr,
+    /// stationarity merit ‖Z(x)‖∞
     Merit,
+    /// objective value V(x)
     Objective,
 }
 
 impl Trace {
+    /// New empty trace with a legend name.
     pub fn new(name: impl Into<String>) -> Self {
         Self { name: name.into(), points: Vec::new() }
     }
 
+    /// Append a trace point.
     pub fn push(&mut self, p: TracePoint) {
         self.points.push(p);
     }
 
+    /// Most recent point, if any.
     pub fn last(&self) -> Option<&TracePoint> {
         self.points.last()
     }
@@ -195,15 +210,18 @@ pub struct TextTable {
 }
 
 impl TextTable {
+    /// New table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
 
+    /// Append a row (arity must match the header).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len());
         self.rows.push(cells);
     }
 
+    /// Render as an aligned ASCII table.
     pub fn render(&self) -> String {
         let ncols = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();

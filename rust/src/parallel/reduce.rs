@@ -104,6 +104,63 @@ pub fn best_response_chunks(problem: &dyn Problem) -> Vec<(Range<usize>, Range<u
     block_chunks(problem.blocks())
 }
 
+/// Best responses and error bounds for the **candidate** blocks only —
+/// the sketching-strategy counterpart of [`par_best_responses`], used by
+/// the hybrid/random/cyclic selection strategies to avoid the full O(N)
+/// scan. `cand` must hold distinct block indices; `zhat` entries of
+/// non-candidate blocks and `e` entries of non-candidate blocks are left
+/// untouched (stale), which is safe because the solvers only read them at
+/// selected indices `S^k ⊆ C^k`.
+///
+/// Chunk boundaries depend only on `cand.len()` (same geometry rule as
+/// [`super::partition::chunks_of`]) and every candidate's outputs are
+/// written by exactly one chunk, so the results keep the [`super`]
+/// determinism contract: bitwise identical for any `threads ≥ 1`. The
+/// pass allocates nothing.
+pub fn par_best_responses_subset(
+    pool: &WorkerPool,
+    problem: &dyn Problem,
+    x: &[f64],
+    aux: &[f64],
+    scratch: &[f64],
+    tau: f64,
+    zhat: &mut [f64],
+    e: &mut [f64],
+    cand: &[usize],
+) {
+    let len = cand.len();
+    if len == 0 {
+        return;
+    }
+    // the disjoint-writes SAFETY argument below rests on distinctness;
+    // strategies promise sorted-ascending candidates, so check that
+    debug_assert!(
+        cand.windows(2).all(|w| w[0] < w[1]),
+        "candidate indices must be sorted ascending and distinct"
+    );
+    let blocks = problem.blocks();
+    let zp = MutPtr(zhat.as_mut_ptr());
+    let ep = MutPtr(e.as_mut_ptr());
+    let n_chunks = len.min(super::partition::MAX_CHUNKS);
+    for_each_chunk(pool, n_chunks, &|c| {
+        // fixed near-equal ranges over candidate *positions* (the inline
+        // equivalent of `chunks_of(len, MAX_CHUNKS)`, allocation-free)
+        let t0 = c * len / n_chunks;
+        let t1 = (c + 1) * len / n_chunks;
+        for t in t0..t1 {
+            let i = cand[t];
+            let r = blocks.range(i);
+            // SAFETY: candidate indices are distinct, so the block variable
+            // ranges and the per-block e slots are pairwise disjoint across
+            // all chunk items; each is written by exactly one iteration.
+            let z_block =
+                unsafe { std::slice::from_raw_parts_mut(zp.0.add(r.start), r.end - r.start) };
+            let ei = problem.best_response_with(i, x, aux, scratch, tau, z_block);
+            unsafe { *ep.0.add(i) = ei };
+        }
+    });
+}
+
 /// Row-chunk table for the problem's banded prelude; empty when the
 /// problem has no chunkable prelude (then [`par_prelude`] falls back to
 /// the sequential `Problem::prelude`).
@@ -245,5 +302,53 @@ mod tests {
         assert_eq!(par_max(&pool, &[], &chunks, &mut partials), 0.0);
         let mut data: Vec<f64> = Vec::new();
         for_each_row_chunk(&pool, &mut data, &chunks, &|_, _, _| panic!("no chunks"));
+    }
+
+    #[test]
+    fn subset_pass_matches_full_pass_on_candidates() {
+        use crate::datagen::nesterov_lasso;
+        use crate::problems::{LassoProblem, Problem};
+        let p = LassoProblem::from_instance(nesterov_lasso(30, 50, 0.2, 1.0, 3));
+        let n = p.n();
+        let nb = p.blocks().n_blocks();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(4);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal() * 0.4).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let scratch = vec![0.0; p.prelude_len()];
+        let chunks = best_response_chunks(&p);
+        let pool1 = WorkerPool::new(1);
+        let (mut zf, mut ef) = (vec![0.0; n], vec![0.0; nb]);
+        par_best_responses(&pool1, &p, &x, &aux, &scratch, 0.7, &mut zf, &mut ef, &chunks);
+
+        let cand: Vec<usize> = (0..nb).filter(|i| i % 3 != 1).collect();
+        for threads in [1usize, 2, 4, 64] {
+            let pool = WorkerPool::new(threads);
+            let (mut z, mut e) = (vec![-9.0; n], vec![-9.0; nb]);
+            par_best_responses_subset(&pool, &p, &x, &aux, &scratch, 0.7, &mut z, &mut e, &cand);
+            for i in 0..nb {
+                if cand.contains(&i) {
+                    // scalar blocks: variable index == block index
+                    assert_eq!(e[i], ef[i], "threads={threads} e[{i}]");
+                    assert_eq!(z[i], zf[i], "threads={threads} z[{i}]");
+                } else {
+                    assert_eq!(e[i], -9.0, "non-candidate e[{i}] touched");
+                    assert_eq!(z[i], -9.0, "non-candidate z[{i}] touched");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subset_pass_empty_candidates_is_safe() {
+        use crate::datagen::nesterov_lasso;
+        use crate::problems::{LassoProblem, Problem};
+        let p = LassoProblem::from_instance(nesterov_lasso(10, 15, 0.2, 1.0, 1));
+        let pool = WorkerPool::new(2);
+        let x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let (mut z, mut e) = (vec![0.0; p.n()], vec![0.0; p.blocks().n_blocks()]);
+        par_best_responses_subset(&pool, &p, &x, &aux, &[], 0.5, &mut z, &mut e, &[]);
     }
 }

@@ -29,12 +29,15 @@ use crate::util::Timer;
 /// A dictionary-learning instance: observations `Y ≈ D* S*`.
 #[derive(Clone, Debug)]
 pub struct DictionaryInstance {
+    /// observed data Y (m×q)
     pub y: DenseMatrix,
     /// ℓ1 weight on the codes
     pub c: f64,
     /// column-norm bounds α_i (uniform here)
     pub alpha: f64,
+    /// ground-truth dictionary D (m×r)
     pub d_true: DenseMatrix,
+    /// ground-truth sparse codes S (r×q)
     pub s_true: DenseMatrix,
 }
 
@@ -94,10 +97,15 @@ pub fn matmul_into(a: &DenseMatrix, b: &DenseMatrix, out: &mut DenseMatrix) {
 /// Options for the alternating FLEXA dictionary solver.
 #[derive(Clone, Copy, Debug)]
 pub struct DictOptions {
+    /// outer-iteration budget
     pub max_iters: usize,
+    /// objective-decrease stopping tolerance
     pub tol: f64,
+    /// initial step size γ0
     pub gamma0: f64,
+    /// step-size decay θ of rule (6)
     pub theta: f64,
+    /// proximal weight τ
     pub tau: f64,
 }
 
@@ -109,11 +117,17 @@ impl Default for DictOptions {
 
 /// Result of a dictionary-learning run.
 pub struct DictReport {
+    /// learned dictionary
     pub d: DenseMatrix,
+    /// learned sparse codes
     pub s: DenseMatrix,
+    /// final objective value
     pub objective: f64,
+    /// outer iterations executed
     pub iters: usize,
+    /// objective trace
     pub trace: Trace,
+    /// whether the objective-decrease tolerance was reached
     pub converged: bool,
 }
 

@@ -24,6 +24,7 @@ pub struct GroupLassoProblem {
 }
 
 impl GroupLassoProblem {
+    /// Build from raw data over an explicit block partition.
     pub fn new(a: Matrix, b: Vec<f64>, c: f64, blocks: BlockPartition) -> Self {
         assert_eq!(a.nrows(), b.len());
         assert_eq!(blocks.dim(), a.ncols());
@@ -43,6 +44,7 @@ impl GroupLassoProblem {
         Self::new(inst.a, inst.b, inst.c, BlockPartition::uniform(n, block_size))
     }
 
+    /// Group-norm weight `c`.
     pub fn c(&self) -> f64 {
         self.c
     }
@@ -176,6 +178,11 @@ impl Problem for GroupLassoProblem {
 
     fn lipschitz(&self) -> f64 {
         self.lipschitz
+    }
+
+    fn block_lipschitz(&self, i: usize) -> f64 {
+        // precomputed block curvature bound L_I = 2 Σ_{j∈I} ‖A_j‖²
+        self.block_lip[i]
     }
 
     fn flops_best_response(&self, i: usize) -> f64 {

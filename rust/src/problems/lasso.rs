@@ -27,6 +27,7 @@ pub struct LassoProblem {
 }
 
 impl LassoProblem {
+    /// Build from raw data; `v_star` enables relative-error plots.
     pub fn new(a: Matrix, b: Vec<f64>, c: f64, v_star: Option<f64>) -> Self {
         assert_eq!(a.nrows(), b.len());
         assert!(c > 0.0);
@@ -36,23 +37,28 @@ impl LassoProblem {
         Self { a, b, c, col_sq, blocks: BlockPartition::scalar(n), v_star, lipschitz }
     }
 
+    /// Build from a generated instance with known optimum.
     pub fn from_instance(inst: LassoInstance) -> Self {
         let v_star = Some(inst.v_star);
         Self::new(inst.a, inst.b, inst.c, v_star)
     }
 
+    /// The data matrix `A`.
     pub fn matrix(&self) -> &Matrix {
         &self.a
     }
 
+    /// The right-hand side `b`.
     pub fn rhs(&self) -> &[f64] {
         &self.b
     }
 
+    /// ℓ1 weight `c`.
     pub fn c(&self) -> f64 {
         self.c
     }
 
+    /// Squared column norms `‖A_j‖²` (best-response curvatures).
     pub fn col_sq_norms(&self) -> &[f64] {
         &self.col_sq
     }
@@ -151,6 +157,11 @@ impl Problem for LassoProblem {
 
     fn lipschitz(&self) -> f64 {
         self.lipschitz
+    }
+
+    fn block_lipschitz(&self, i: usize) -> f64 {
+        // scalar blocks: ∂²_i F = 2‖A_i‖²
+        2.0 * self.col_sq[i]
     }
 
     fn flops_best_response(&self, i: usize) -> f64 {

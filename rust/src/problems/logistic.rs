@@ -29,6 +29,8 @@ pub struct LogisticProblem {
     y: Matrix,
     c: f64,
     blocks: BlockPartition,
+    /// squared column norms `‖Ỹ_i‖²` (per-block curvature bounds /4)
+    col_sq: Vec<f64>,
     lipschitz: f64,
     name: String,
     /// optional reference value for re(x) plots (estimated offline)
@@ -82,16 +84,19 @@ impl LogisticProblem {
         let n = y.ncols();
         // L_∇F = λmax(ỸᵀỸ)/4 ≤ tr(ỸᵀỸ)/4 (cheap, safe upper bound)
         let lipschitz = y.gram_trace() / 4.0;
+        let col_sq = y.col_sq_norms();
         Self {
             y,
             c,
             blocks: BlockPartition::scalar(n),
+            col_sq,
             lipschitz,
             name: name.into(),
             v_star: None,
         }
     }
 
+    /// Build from a generated dataset analog.
     pub fn from_instance(inst: LogisticInstance) -> Self {
         let name = inst.name.clone();
         Self::new(inst.y, &inst.labels, inst.c, name)
@@ -103,18 +108,22 @@ impl LogisticProblem {
         self.v_star = Some(v);
     }
 
+    /// ℓ1 weight `c`.
     pub fn c(&self) -> f64 {
         self.c
     }
 
+    /// Dataset name (plots, tables).
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// Number of samples m.
     pub fn m(&self) -> usize {
         self.y.nrows()
     }
 
+    /// The label-scaled data matrix `Ỹ`.
     pub fn matrix(&self) -> &Matrix {
         &self.y
     }
@@ -351,6 +360,11 @@ impl Problem for LogisticProblem {
 
     fn lipschitz(&self) -> f64 {
         self.lipschitz
+    }
+
+    fn block_lipschitz(&self, i: usize) -> f64 {
+        // scalar blocks: h_i = Σ_j Ỹ_{ji}² σσ' ≤ ‖Ỹ_i‖²/4
+        self.col_sq[i] / 4.0
     }
 
     fn flops_best_response(&self, i: usize) -> f64 {

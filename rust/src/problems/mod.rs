@@ -188,6 +188,15 @@ pub trait Problem: Send + Sync {
     /// Estimate of the Lipschitz constant of ∇F (FISTA step init).
     fn lipschitz(&self) -> f64;
 
+    /// Upper bound on the block-`i` Lipschitz constant of `∇_i F` (the
+    /// block curvature). Drives the importance-sampled selection strategy
+    /// (`coordinator::strategy`): stiffer blocks are scanned more often.
+    /// The default (uniform weights) makes importance sampling degrade
+    /// gracefully to uniform sampling.
+    fn block_lipschitz(&self, _i: usize) -> f64 {
+        1.0
+    }
+
     // ---- flop accounting (drives the cluster simulator) ----
 
     /// Flops for one best-response of block `i` (column dot + O(1)).

@@ -36,6 +36,7 @@ pub struct NonconvexQpProblem {
 }
 
 impl NonconvexQpProblem {
+    /// Build from raw data; `cbar` is the concavity shift of (13).
     pub fn new(a: Matrix, b: Vec<f64>, c: f64, cbar: f64, box_bound: f64) -> Self {
         assert_eq!(a.nrows(), b.len());
         assert!(c > 0.0 && cbar > 0.0 && box_bound > 0.0);
@@ -55,22 +56,27 @@ impl NonconvexQpProblem {
         }
     }
 
+    /// Build from a generated instance (13).
     pub fn from_instance(inst: NonconvexQpInstance) -> Self {
         Self::new(inst.a, inst.b, inst.c, inst.cbar, inst.box_bound)
     }
 
+    /// Attach a reference stationary value for re(x) plots.
     pub fn set_v_star(&mut self, v: f64) {
         self.v_star = Some(v);
     }
 
+    /// ℓ1 weight `c`.
     pub fn c(&self) -> f64 {
         self.c
     }
 
+    /// Concavity shift `c̄`.
     pub fn cbar(&self) -> f64 {
         self.cbar
     }
 
+    /// Box half-width `b` of `X = [−b, b]^n`.
     pub fn box_bound(&self) -> f64 {
         self.box_bound
     }
@@ -181,6 +187,12 @@ impl Problem for NonconvexQpProblem {
 
     fn lipschitz(&self) -> f64 {
         self.lipschitz
+    }
+
+    fn block_lipschitz(&self, i: usize) -> f64 {
+        // |∂²_i F| ≤ 2‖A_i‖² + 2c̄ (the concave −c̄‖x‖² term contributes
+        // curvature magnitude 2c̄ to every scalar block)
+        2.0 * self.col_sq[i] + 2.0 * self.cbar
     }
 
     fn flops_best_response(&self, i: usize) -> f64 {

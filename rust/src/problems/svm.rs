@@ -23,6 +23,8 @@ pub struct SvmProblem {
     y: Matrix,
     c: f64,
     blocks: BlockPartition,
+    /// squared column norms `‖Ỹ_i‖²` (per-block curvature bounds /2)
+    col_sq: Vec<f64>,
     lipschitz: f64,
 }
 
@@ -36,13 +38,16 @@ impl SvmProblem {
         let n = folded.ncols();
         // L_∇F ≤ 2 λmax(ỸᵀỸ) ≤ 2 tr(ỸᵀỸ)
         let lipschitz = 2.0 * folded.gram_trace();
-        Self { y: folded, c, blocks: BlockPartition::scalar(n), lipschitz }
+        let col_sq = folded.col_sq_norms();
+        Self { y: folded, c, blocks: BlockPartition::scalar(n), col_sq, lipschitz }
     }
 
+    /// ℓ1 weight `c`.
     pub fn c(&self) -> f64 {
         self.c
     }
 
+    /// Number of samples m.
     pub fn m(&self) -> usize {
         self.y.nrows()
     }
@@ -198,6 +203,11 @@ impl Problem for SvmProblem {
         self.lipschitz
     }
 
+    fn block_lipschitz(&self, i: usize) -> f64 {
+        // scalar blocks: generalized Hessian diag ≤ 2‖Ỹ_i‖²
+        2.0 * self.col_sq[i]
+    }
+
     fn flops_best_response(&self, i: usize) -> f64 {
         5.0 * self.y.col_nnz(i) as f64 + 8.0
     }
@@ -276,7 +286,7 @@ mod tests {
 
     #[test]
     fn flexa_drives_svm_merit_down() {
-        use crate::coordinator::{flexa, CommonOptions, FlexaOptions, SelectionRule, TermMetric};
+        use crate::coordinator::{flexa, CommonOptions, FlexaOptions, SelectionSpec, TermMetric};
         let p = small();
         let o = FlexaOptions {
             common: CommonOptions {
@@ -287,7 +297,7 @@ mod tests {
                 name: "svm".into(),
                 ..Default::default()
             },
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: None,
         };
         let r = flexa(&p, &vec![0.0; p.n()], &o);

@@ -12,10 +12,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// New generator from a seed.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 uniformly random bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -44,6 +46,7 @@ impl Xoshiro256pp {
     }
 
     #[inline]
+    /// Next 64 uniformly random bits.
     pub fn next_u64(&mut self) -> u64 {
         #[inline(always)]
         fn rotl(x: u64, k: u32) -> u64 {

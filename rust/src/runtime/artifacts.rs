@@ -9,15 +9,19 @@ use std::path::{Path, PathBuf};
 /// One compiled model at a fixed shape.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactMeta {
+    /// artifact (step function) name
     pub name: String,
     /// model function ("lasso_step", "logistic_step", "lasso_objective")
     pub fn_name: String,
+    /// problem row count the artifact was lowered for
     pub m: usize,
+    /// problem column count the artifact was lowered for
     pub n: usize,
     /// file name inside the artifact directory
     pub file: String,
     /// declared input shapes (for validation)
     pub inputs: Vec<Vec<usize>>,
+    /// number of outputs in the HLO tuple
     pub n_outputs: usize,
 }
 
@@ -25,6 +29,7 @@ pub struct ArtifactMeta {
 #[derive(Clone, Debug)]
 pub struct Manifest {
     dir: PathBuf,
+    /// all artifacts recorded in the manifest
     pub artifacts: Vec<ArtifactMeta>,
 }
 

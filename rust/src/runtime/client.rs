@@ -27,10 +27,12 @@ impl RuntimeClient {
         Self::new(Manifest::load(Manifest::default_dir())?)
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. cpu).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -2,9 +2,10 @@
 //!
 //! * [`NativeEngine`] — the L3 rust kernels (any shape; what the large
 //!   paper-scale benchmarks run);
-//! * [`XlaEngine`] — the AOT-compiled L2/L1 artifact executed through PJRT
-//!   (fixed shapes from the manifest; what proves the three-layer
-//!   composition on the request path — python is never invoked).
+//! * `XlaEngine` (behind the `pjrt` feature) — the AOT-compiled L2/L1
+//!   artifact executed through PJRT (fixed shapes from the manifest; what
+//!   proves the three-layer composition on the request path — python is
+//!   never invoked).
 //!
 //! Both compute `(ẑ, E, V(x))` from `(x, τ)`; the rust coordinator layers
 //! selection, the memory step, and the τ/γ controllers on top
@@ -14,6 +15,7 @@
 #[cfg(feature = "pjrt")]
 use super::client::{literal_to_vec, matrix_literal, scalar1_literal, vec_literal, RuntimeClient};
 use crate::coordinator::driver::RunState;
+use crate::coordinator::strategy::Candidates;
 use crate::coordinator::tau::{TauController, TauDecision, TauOptions};
 use crate::coordinator::{FlexaOptions, SolveReport, StopReason};
 use crate::metrics::IterCost;
@@ -40,6 +42,7 @@ pub struct NativeEngine<'a> {
 }
 
 impl<'a> NativeEngine<'a> {
+    /// New native engine bound to a LASSO problem.
     pub fn new(problem: &'a LassoProblem) -> Self {
         Self { aux: vec![0.0; problem.aux_len()], problem }
     }
@@ -131,6 +134,7 @@ impl XlaEngine {
         Ok(obj[0] as f64)
     }
 
+    /// (m, n) shape this engine was lowered for.
     pub fn shape_mn(&self) -> (usize, usize) {
         (self.m, self.n)
     }
@@ -145,6 +149,7 @@ pub struct BoundXlaEngine {
 
 #[cfg(feature = "pjrt")]
 impl BoundXlaEngine {
+    /// Bind an XLA engine to a problem (compiles the artifact eagerly).
     pub fn new(client: RuntimeClient, problem: &LassoProblem) -> Result<Self> {
         Ok(Self { inner: XlaEngine::for_lasso(client, problem)?, c: problem.c() })
     }
@@ -182,7 +187,12 @@ pub fn flexa_with_engine(
     let mut x_old = vec![0.0; n];
     let mut zhat = vec![0.0; n];
     let mut e = vec![0.0; n];
+    let mut cand: Vec<usize> = Vec::with_capacity(n);
     let mut sel: Vec<usize> = Vec::with_capacity(n);
+    // per-solve selection strategy; the fused engine pass always computes
+    // every block, so sketching strategies restrict only the *selection*
+    // on this path (their scan saving needs the native coordinator)
+    let mut strategy = opts.selection.build(problem);
 
     let tau_opts = common
         .tau
@@ -207,8 +217,17 @@ pub fn flexa_with_engine(
 
         // engine computes ẑ, E, and V(x^k) in one fused call
         let _v_at_x = engine.step(&x, tau, &mut zhat, &mut e)?;
+        state.scanned += n; // scalar blocks: the engine scans all of them
 
-        let m_k = opts.selection.select(&e, &mut sel);
+        let scan = strategy.propose(k, n, &mut cand);
+        let m_k = match scan {
+            Candidates::All => e.iter().fold(0.0f64, |a, &b| a.max(b)),
+            Candidates::Subset => cand.iter().fold(0.0f64, |a, &i| a.max(e[i])),
+        };
+        match scan {
+            Candidates::All => strategy.select(&e, m_k, &[], &mut sel),
+            Candidates::Subset => strategy.select(&e, m_k, &cand, &mut sel),
+        }
         state.last_ebound = m_k;
 
         x_old.copy_from_slice(&x);
@@ -261,7 +280,7 @@ pub fn flexa_with_engine(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{CommonOptions, SelectionRule, TermMetric};
+    use crate::coordinator::{CommonOptions, SelectionSpec, TermMetric};
     use crate::datagen::nesterov_lasso;
 
     #[test]
@@ -297,7 +316,7 @@ mod tests {
                 name: "FLEXA-native-engine".into(),
                 ..Default::default()
             },
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: None,
         };
         let r = flexa_with_engine(&p, &mut eng, &vec![0.0; p.n()], &opts).unwrap();

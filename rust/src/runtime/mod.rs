@@ -3,11 +3,11 @@
 //! the coordinator. Python is build-time only — after the artifacts exist,
 //! the rust binary is self-contained.
 //!
-//! The PJRT client ([`client`], [`XlaEngine`]) depends on the external
-//! `xla` crate, which is not part of the offline crate set; it is gated
-//! behind the `pjrt` cargo feature (vendor the crate and enable the
-//! feature to build it). The manifest reader and the [`NativeEngine`]
-//! backend compile unconditionally.
+//! The PJRT client (`client`, `XlaEngine` — link targets only exist with
+//! the feature) depends on the external `xla` crate, which is not part of
+//! the offline crate set; it is gated behind the `pjrt` cargo feature
+//! (vendor the crate and enable the feature to build it). The manifest
+//! reader and the [`NativeEngine`] backend compile unconditionally.
 
 pub mod artifacts;
 #[cfg(feature = "pjrt")]

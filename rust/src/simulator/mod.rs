@@ -103,6 +103,7 @@ pub struct SimClock {
 }
 
 impl SimClock {
+    /// New clock for `p` simulated cores under `model`.
     pub fn new(model: CostModel, p: usize) -> Self {
         assert!(p > 0, "simulated core count must be positive");
         Self { model, p, t_s: 0.0 }
@@ -113,6 +114,7 @@ impl SimClock {
         Self::new(CostModel::default(), 1)
     }
 
+    /// Simulated core count P.
     pub fn p(&self) -> usize {
         self.p
     }
@@ -129,6 +131,7 @@ impl SimClock {
         self.t_s += seconds.max(0.0);
     }
 
+    /// Current simulated time [s].
     pub fn now_s(&self) -> f64 {
         self.t_s
     }

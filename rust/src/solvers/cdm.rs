@@ -9,13 +9,26 @@
 //! classic GLMNET/LIBLINEAR inner step.
 
 use crate::coordinator::driver::RunState;
-use crate::coordinator::{CommonOptions, SolveReport, StopReason};
+use crate::coordinator::strategy::Candidates;
+use crate::coordinator::{CommonOptions, SelectionSpec, SolveReport, StopReason};
 use crate::metrics::IterCost;
 use crate::parallel::{self, WorkerPool};
 use crate::problems::Problem;
 
 /// Run CDM (sequential coordinate descent) from `x0`. `shuffle` randomizes
-/// the sweep order each iteration (seeded, reproducible).
+/// the sweep order each iteration (seeded, reproducible). Sweeps every
+/// block — the classical full Gauss-Seidel pass; see
+/// [`cdm_with_selection`] for strategy-restricted sweeps.
+pub fn cdm(problem: &dyn Problem, x0: &[f64], common: &CommonOptions, shuffle: bool) -> SolveReport {
+    cdm_with_selection(problem, x0, common, shuffle, &SelectionSpec::full_jacobi())
+}
+
+/// CDM with the sweep restricted by a selection strategy
+/// ([`crate::coordinator::strategy`]): each iteration visits exactly the
+/// strategy's *candidate* set (the full-scan greedy specs propose every
+/// block, reproducing classical CDM; the sketching specs sweep only
+/// `⌈frac·N⌉` blocks). Only the candidate phase applies — a Gauss-Seidel
+/// sweep has no Jacobi error vector for the select phase to threshold.
 ///
 /// The Gauss-Seidel sweep itself is a sequential dependency chain (every
 /// update lands in `aux` before the next block is visited), so it cannot
@@ -23,9 +36,17 @@ use crate::problems::Problem;
 /// [`WorkerPool`] (one per solve, like the coordinator's) instead drives
 /// the per-sweep objective evaluation via the chunked ordered reduction
 /// (`parallel::par_v_val`), which is thread-count-invariant.
-pub fn cdm(problem: &dyn Problem, x0: &[f64], common: &CommonOptions, shuffle: bool) -> SolveReport {
+pub fn cdm_with_selection(
+    problem: &dyn Problem,
+    x0: &[f64],
+    common: &CommonOptions,
+    shuffle: bool,
+    spec: &SelectionSpec,
+) -> SolveReport {
     let blocks = problem.blocks();
     let nb = blocks.n_blocks();
+    let mut strategy = spec.build(problem);
+    let mut cand: Vec<usize> = Vec::with_capacity(nb);
     let pool = WorkerPool::new(common.threads);
     let obj_chunks = parallel::row_chunks(problem.aux_len());
     let mut obj_partials: Vec<f64> = Vec::new();
@@ -50,6 +71,21 @@ pub fn cdm(problem: &dyn Problem, x0: &[f64], common: &CommonOptions, shuffle: b
 
     for k in 0..common.max_iters {
         iters = k + 1;
+        // the strategy's candidate phase names this sweep's blocks; the
+        // persistent `order` buffer keeps classical CDM's compose-across-
+        // iterations shuffle behavior for the full-sweep specs
+        match strategy.propose(k, nb, &mut cand) {
+            Candidates::All => {
+                if order.len() != nb {
+                    order.clear();
+                    order.extend(0..nb);
+                }
+            }
+            Candidates::Subset => {
+                order.clear();
+                order.extend_from_slice(&cand);
+            }
+        }
         if shuffle {
             rng.shuffle(&mut order);
         }
@@ -61,6 +97,7 @@ pub fn cdm(problem: &dyn Problem, x0: &[f64], common: &CommonOptions, shuffle: b
             let ei = problem.best_response(i, &x, &aux, tau, &mut z[..r.len()]);
             max_e = max_e.max(ei);
             sweep_flops += problem.flops_best_response_fresh(i);
+            state.scanned += 1;
             let mut moved = false;
             for (t, j) in r.clone().enumerate() {
                 delta[t] = z[t] - x[j]; // full step

@@ -10,7 +10,8 @@
 //! `greedy_1bcd` is the P = 1 special case (always convergent).
 
 use crate::coordinator::driver::RunState;
-use crate::coordinator::{CommonOptions, SelectionRule, SolveReport, StopReason};
+use crate::coordinator::strategy::Candidates;
+use crate::coordinator::{CommonOptions, SelectionSpec, SolveReport, StopReason};
 use crate::metrics::IterCost;
 use crate::parallel::{self, WorkerPool};
 use crate::problems::Problem;
@@ -24,11 +25,24 @@ pub fn grock(
     common: &CommonOptions,
     p_blocks: usize,
 ) -> SolveReport {
+    grock_with_selection(problem, x0, common, &SelectionSpec::TopK { k: p_blocks.max(1) })
+}
+
+/// GRock's full-step (γ = 1, memoryless) iteration under an arbitrary
+/// selection strategy — [`grock`] is the classical Top-P instance; the
+/// sketching specs ([`SelectionSpec::Hybrid`] etc.) yield randomized
+/// GRock variants that skip the full descent-potential scan.
+pub fn grock_with_selection(
+    problem: &dyn Problem,
+    x0: &[f64],
+    common: &CommonOptions,
+    spec: &SelectionSpec,
+) -> SolveReport {
     let n = problem.n();
     let blocks = problem.blocks();
     let nb = blocks.n_blocks();
     let p_cores = common.cores.max(1);
-    let rule = SelectionRule::TopK { k: p_blocks.max(1) };
+    let mut strategy = spec.build(problem);
     let pool = WorkerPool::new(common.threads);
     let br_chunks = parallel::reduce::best_response_chunks(problem);
     let prl_chunks = parallel::reduce::prelude_chunks(problem);
@@ -41,8 +55,10 @@ pub fn grock(
     let mut scratch = vec![0.0; problem.prelude_len()];
     let mut zhat = vec![0.0; n];
     let mut e = vec![0.0; nb];
+    let mut cand: Vec<usize> = Vec::with_capacity(nb);
     let mut sel: Vec<usize> = Vec::with_capacity(nb);
     let mut delta = vec![0.0; blocks.max_size()];
+    let total_br_flops: f64 = (0..nb).map(|i| problem.flops_best_response(i)).sum();
 
     // GRock uses the plain coordinate minimizer (no extra proximal
     // damping): τ = 0 corresponds to exact block minimization.
@@ -57,12 +73,28 @@ pub fn grock(
 
     for k in 0..common.max_iters {
         iters = k + 1;
+        let scan = strategy.propose(k, nb, &mut cand);
         parallel::par_prelude(&pool, problem, &x, &aux, &mut scratch, &prl_chunks);
-        parallel::par_best_responses(
-            &pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
-        );
-        let m_k = parallel::par_max(&pool, &e, &e_chunks, &mut max_partials);
-        rule.select_with_max(&e, m_k, &mut sel);
+        let m_k = match scan {
+            Candidates::All => {
+                parallel::par_best_responses(
+                    &pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
+                );
+                state.scanned += nb;
+                parallel::par_max(&pool, &e, &e_chunks, &mut max_partials)
+            }
+            Candidates::Subset => {
+                parallel::par_best_responses_subset(
+                    &pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
+                );
+                state.scanned += cand.len();
+                cand.iter().fold(0.0f64, |a, &i| a.max(e[i]))
+            }
+        };
+        match scan {
+            Candidates::All => strategy.select(&e, m_k, &[], &mut sel),
+            Candidates::Subset => strategy.select(&e, m_k, &cand, &mut sel),
+        }
         state.last_ebound = m_k;
 
         let mut active = 0usize;
@@ -87,7 +119,12 @@ pub fn grock(
         }
         v = problem.v_val(&x, &aux);
 
-        let br_flops: f64 = (0..nb).map(|i| problem.flops_best_response(i)).sum();
+        let br_flops: f64 = match scan {
+            Candidates::All => total_br_flops,
+            Candidates::Subset => {
+                cand.iter().map(|&i| problem.flops_best_response(i)).sum()
+            }
+        };
         state.charge(IterCost {
             flops_total: problem.flops_prelude() + br_flops + update_flops + problem.flops_obj(),
             flops_max_worker: (problem.flops_prelude() + br_flops + update_flops)

@@ -23,7 +23,7 @@ pub mod grock;
 pub mod sparsa;
 
 pub use admm::{admm, AdmmOptions};
-pub use cdm::cdm;
+pub use cdm::{cdm, cdm_with_selection};
 pub use fista::fista;
-pub use grock::{greedy_1bcd, grock};
+pub use grock::{greedy_1bcd, grock, grock_with_selection};
 pub use sparsa::{sparsa, SparsaOptions};

@@ -19,7 +19,9 @@ pub struct SparsaOptions {
     pub memory: usize,
     /// sufficient-decrease σ
     pub sigma: f64,
+    /// lower clamp of the Barzilai-Borwein step
     pub alpha_min: f64,
+    /// upper clamp of the Barzilai-Borwein step
     pub alpha_max: f64,
     /// α growth factor on rejection
     pub eta: f64,

@@ -12,6 +12,7 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// New writer with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
@@ -34,10 +35,12 @@ impl CsvWriter {
         self.row(&v);
     }
 
+    /// Number of data rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Render the full CSV document as a string.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "{}", self.header.join(","));
@@ -48,6 +51,7 @@ impl CsvWriter {
         out
     }
 
+    /// Write the CSV to a file, creating parent directories.
     pub fn write_file(&self, path: impl AsRef<Path>) -> io::Result<()> {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;

@@ -14,6 +14,7 @@ pub struct Error {
 }
 
 impl Error {
+    /// Build an error from any displayable message.
     pub fn msg(msg: impl Into<String>) -> Self {
         Self { msg: msg.into() }
     }
@@ -56,7 +57,9 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Attach context to an error, `anyhow::Context`-style.
 pub trait Context<T> {
+    /// Prefix a failure with a fixed context message.
     fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Prefix a failure with a lazily-built context message.
     fn with_context<F, D>(self, f: F) -> Result<T>
     where
         F: FnOnce() -> D,

@@ -12,31 +12,42 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// boolean
     Bool(bool),
+    /// number (all JSON numbers are f64 here)
     Num(f64),
+    /// string
     Str(String),
+    /// array
     Arr(Vec<Json>),
+    /// object (sorted keys, reproducible output)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from any iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Build a numeric array from a float slice.
     pub fn num_arr(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Numeric value, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -44,10 +55,12 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, if representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// String value, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -55,6 +68,7 @@ impl Json {
         }
     }
 
+    /// Array items, if this is a [`Json::Arr`].
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -62,6 +76,7 @@ impl Json {
         }
     }
 
+    /// Object map, if this is a [`Json::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),

@@ -20,14 +20,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start a stopwatch at the current instant.
     pub fn start() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Elapsed seconds since start.
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Elapsed milliseconds since start.
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed_s() * 1e3
     }
@@ -37,17 +40,22 @@ impl Timer {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum LogLevel {
+    /// errors only
     Quiet = 0,
+    /// normal progress output (default)
     Info = 1,
+    /// verbose diagnostics
     Debug = 2,
 }
 
 static LOG_LEVEL: AtomicU8 = AtomicU8::new(1);
 
+/// Set the global log verbosity.
 pub fn set_log_level(level: LogLevel) {
     LOG_LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at `level` are currently emitted.
 pub fn log_enabled(level: LogLevel) -> bool {
     LOG_LEVEL.load(Ordering::Relaxed) >= level as u8
 }

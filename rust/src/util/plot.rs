@@ -5,12 +5,14 @@
 /// One plotted series.
 #[derive(Clone, Debug)]
 pub struct Series {
+    /// series name (legend label)
     pub name: String,
     /// (x, y) points; y must be finite, non-positive y dropped on log scale.
     pub points: Vec<(f64, f64)>,
 }
 
 impl Series {
+    /// New series from (x, y) points.
     pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
         Self { name: name.into(), points }
     }
@@ -19,12 +21,19 @@ impl Series {
 /// Plot configuration.
 #[derive(Clone, Debug)]
 pub struct PlotCfg {
+    /// plot title
     pub title: String,
+    /// x-axis label
     pub x_label: String,
+    /// y-axis label
     pub y_label: String,
+    /// canvas width in characters
     pub width: usize,
+    /// canvas height in rows
     pub height: usize,
+    /// log-scale the y axis
     pub log_y: bool,
+    /// log-scale the x axis
     pub log_x: bool,
 }
 

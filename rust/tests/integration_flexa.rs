@@ -4,7 +4,7 @@
 
 use flexa::coordinator::{
     flexa as run_flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions,
-    SelectionRule, StepRule, TermMetric,
+    SelectionSpec, StepRule, TermMetric,
 };
 use flexa::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
 use flexa::problems::{
@@ -27,7 +27,7 @@ fn flexa_reaches_high_accuracy_on_lasso() {
     let p = LassoProblem::from_instance(nesterov_lasso(90, 120, 0.1, 1.0, 1));
     let o = FlexaOptions {
         common: common("flexa", 1e-8, TermMetric::RelErr),
-        selection: SelectionRule::sigma(0.5),
+        selection: SelectionSpec::sigma(0.5),
         inexact: None,
     };
     let r = run_flexa(&p, &vec![0.0; p.n()], &o);
@@ -44,7 +44,7 @@ fn all_sigmas_converge_to_same_optimum() {
     for sigma in [0.0, 0.3, 0.5, 0.9] {
         let o = FlexaOptions {
             common: common(&format!("s{sigma}"), 1e-7, TermMetric::RelErr),
-            selection: SelectionRule::sigma(sigma),
+            selection: SelectionSpec::sigma(sigma),
             inexact: None,
         };
         let r = run_flexa(&p, &vec![0.0; p.n()], &o);
@@ -68,7 +68,7 @@ fn flexa_and_gj_agree_on_logistic() {
     let r1 = run_flexa(
         &p,
         &x0,
-        &FlexaOptions { common: c1, selection: SelectionRule::sigma(0.5), inexact: None },
+        &FlexaOptions { common: c1, selection: SelectionSpec::sigma(0.5), inexact: None },
     );
     let mut c2 = common("gj", 1e-6, TermMetric::Merit);
     c2.merit_every = 1;
@@ -77,7 +77,7 @@ fn flexa_and_gj_agree_on_logistic() {
         &x0,
         &GaussJacobiOptions {
             common: c2,
-            selection: Some(SelectionRule::sigma(0.5)),
+            selection: Some(SelectionSpec::sigma(0.5)),
             processors: 4,
         },
     );
@@ -96,7 +96,7 @@ fn nonconvex_reaches_stationarity_with_box_respected() {
     let p = NonconvexQpProblem::from_instance(nonconvex_qp(60, 80, 0.1, 10.0, 100.0, 1.0, 3));
     let mut c = common("flexa-ncvx", 1e-4, TermMetric::Merit);
     c.merit_every = 1;
-    let o = FlexaOptions { common: c, selection: SelectionRule::sigma(0.5), inexact: None };
+    let o = FlexaOptions { common: c, selection: SelectionSpec::sigma(0.5), inexact: None };
     let r = run_flexa(&p, &vec![0.0; p.n()], &o);
     assert!(r.final_merit < 1e-3, "merit {} ({:?})", r.final_merit, r.stop);
     assert!(r.x.iter().all(|&v| v.abs() <= 1.0 + 1e-10), "box violated");
@@ -121,7 +121,7 @@ fn group_lasso_exact_on_orthogonal_design() {
     );
     let mut c = common("flexa-group-ortho", 1e-10, TermMetric::Merit);
     c.merit_every = 1;
-    let o = FlexaOptions { common: c, selection: SelectionRule::FullJacobi, inexact: None };
+    let o = FlexaOptions { common: c, selection: SelectionSpec::full_jacobi(), inexact: None };
     let r = run_flexa(&p, &vec![0.0; n], &o);
     assert!(r.converged(), "{:?} merit={}", r.stop, r.final_merit);
     for blk in 0..3 {
@@ -142,7 +142,7 @@ fn group_lasso_blocks_converge() {
     let mut c = common("flexa-group", 5e-2, TermMetric::Merit);
     c.merit_every = 1;
     c.stepsize = StepRule::Constant { gamma: 0.9 };
-    let o = FlexaOptions { common: c, selection: SelectionRule::sigma(0.5), inexact: None };
+    let o = FlexaOptions { common: c, selection: SelectionSpec::sigma(0.5), inexact: None };
     let r = run_flexa(&p, &vec![0.0; p.n()], &o);
     assert!(r.final_merit < 0.2, "merit {} ({:?})", r.final_merit, r.stop);
     // group sparsity: whole blocks are (numerically) zero
@@ -176,7 +176,7 @@ fn gj_select_no_flop_waste_on_logistic() {
         &x0,
         &GaussJacobiOptions {
             common: mk("gj-sel"),
-            selection: Some(SelectionRule::sigma(0.5)),
+            selection: Some(SelectionSpec::sigma(0.5)),
             processors: 2,
         },
     );
@@ -200,7 +200,7 @@ fn discarded_iterations_counted_when_tau_doubles() {
     c.tau = Some(flexa::coordinator::TauOptions::paper(1e-8, 0.0));
     c.stepsize = StepRule::Constant { gamma: 1.0 };
     c.max_iters = 500;
-    let o = FlexaOptions { common: c, selection: SelectionRule::FullJacobi, inexact: None };
+    let o = FlexaOptions { common: c, selection: SelectionSpec::full_jacobi(), inexact: None };
     let r = run_flexa(&p, &vec![0.0; p.n()], &o);
     assert!(r.discarded > 0, "expected τ-doubling discards");
 }
@@ -214,7 +214,7 @@ fn assert_flexa_bitwise_deterministic(p: &dyn Problem, term: TermMetric, max_ite
         c.max_iters = max_iters;
         c.tol = 0.0;
         c.merit_every = 1;
-        FlexaOptions { common: c, selection: SelectionRule::sigma(0.5), inexact: None }
+        FlexaOptions { common: c, selection: SelectionSpec::sigma(0.5), inexact: None }
     };
     let r1 = run_flexa(p, &vec![0.0; p.n()], &mk(1));
     for threads in [2usize, 4] {
@@ -236,7 +236,7 @@ fn assert_gj_bitwise_deterministic(p: &dyn Problem, term: TermMetric, max_iters:
         c.merit_every = 1;
         GaussJacobiOptions {
             common: c,
-            selection: Some(SelectionRule::sigma(0.5)),
+            selection: Some(SelectionSpec::sigma(0.5)),
             processors: 4,
         }
     };
@@ -301,7 +301,7 @@ fn solve_spawns_workers_once_not_per_iteration() {
     let r = run_flexa(
         &p,
         &vec![0.0; p.n()],
-        &FlexaOptions { common: c, selection: SelectionRule::sigma(0.5), inexact: None },
+        &FlexaOptions { common: c, selection: SelectionSpec::sigma(0.5), inexact: None },
     );
     let spawned = WorkerPool::os_threads_spawned_total() - before;
     assert_eq!(r.iters, 300);
@@ -319,7 +319,7 @@ fn time_budget_respected() {
     let mut c = common("budget", 0.0, TermMetric::RelErr);
     c.max_wall_s = 0.3;
     c.max_iters = usize::MAX / 2;
-    let o = FlexaOptions { common: c, selection: SelectionRule::FullJacobi, inexact: None };
+    let o = FlexaOptions { common: c, selection: SelectionSpec::full_jacobi(), inexact: None };
     let t = std::time::Instant::now();
     let r = run_flexa(&p, &vec![0.0; p.n()], &o);
     assert_eq!(r.stop, flexa::coordinator::StopReason::TimeBudget);

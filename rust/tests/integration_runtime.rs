@@ -9,7 +9,7 @@
 //! offline set).
 #![cfg(feature = "pjrt")]
 
-use flexa::coordinator::{CommonOptions, FlexaOptions, SelectionRule, TermMetric};
+use flexa::coordinator::{CommonOptions, FlexaOptions, SelectionSpec, TermMetric};
 use flexa::datagen::nesterov_lasso;
 use flexa::problems::{LassoProblem, Problem};
 use flexa::runtime::{
@@ -86,7 +86,7 @@ fn flexa_on_xla_engine_converges_end_to_end() {
             name: "FLEXA-xla".into(),
             ..Default::default()
         },
-        selection: SelectionRule::sigma(0.5),
+        selection: SelectionSpec::sigma(0.5),
         inexact: None,
     };
     let r = flexa_with_engine(&problem, &mut engine, &vec![0.0; problem.n()], &opts)

@@ -2,7 +2,7 @@
 //! on the Nesterov instances (the precondition for every comparison figure),
 //! and the qualitative orderings the paper reports hold on scaled replicas.
 
-use flexa::coordinator::{flexa as run_flexa, CommonOptions, FlexaOptions, SelectionRule, TermMetric};
+use flexa::coordinator::{flexa as run_flexa, CommonOptions, FlexaOptions, SelectionSpec, TermMetric};
 use flexa::datagen::nesterov_lasso;
 use flexa::metrics::{XAxis, YMetric};
 use flexa::problems::{LassoProblem, Problem};
@@ -67,7 +67,7 @@ fn flexa_beats_fista_in_iterations_on_sparse_lasso() {
         &x0,
         &FlexaOptions {
             common: common("flexa", tol),
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: None,
         },
     );
@@ -94,7 +94,7 @@ fn selective_flexa_beats_full_jacobi_on_dense_solutions() {
             &x0,
             &FlexaOptions {
                 common: common(&format!("s{sigma}"), tol),
-                selection: SelectionRule::sigma(sigma),
+                selection: SelectionSpec::sigma(sigma),
                 inexact: None,
             },
         )
@@ -126,7 +126,7 @@ fn grock_struggles_when_columns_correlate() {
         &x0,
         &FlexaOptions {
             common: common("flexa", tol),
-            selection: SelectionRule::sigma(0.5),
+            selection: SelectionSpec::sigma(0.5),
             inexact: None,
         },
     );
@@ -154,7 +154,7 @@ fn simulated_time_scales_with_cores_for_parallel_solvers() {
             &x0,
             &FlexaOptions {
                 common: c,
-                selection: SelectionRule::sigma(0.5),
+                selection: SelectionSpec::sigma(0.5),
                 inexact: None,
             },
         )
