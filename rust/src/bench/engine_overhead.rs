@@ -1,0 +1,309 @@
+//! `bench engine` — the SolverCore overhead panel.
+//!
+//! The multi-layer refactor routed every solver through the one iteration
+//! engine ([`crate::engine`]). This panel keeps the **pre-refactor FLEXA
+//! hot loop** alive as a frozen measurement baseline (a verbatim,
+//! non-public transcription of the deleted `coordinator::flexa` loop,
+//! greedy-σ path) and proves two things on a fig2-style LASSO instance:
+//!
+//! 1. **equivalence** — the engine-routed solve produces
+//!    **bitwise-identical** iterates to the legacy loop at every measured
+//!    thread count (a hard assertion, not a tolerance);
+//! 2. **zero-cost abstraction** — the engine's phase dispatch adds ≤ 2%
+//!    wall-clock overhead (min-of-`REPS` runs; a small absolute slop
+//!    absorbs timer noise on sub-millisecond runs).
+//!
+//! Results land in `results/BENCH_3.json` (uploaded by the CI bench job,
+//! following the `BENCH_smoke.json` trajectory convention).
+
+use super::figures::BenchConfig;
+use crate::bail;
+use crate::coordinator::driver::RunState;
+use crate::coordinator::selection::SelectionRule;
+use crate::coordinator::tau::{TauController, TauDecision, TauOptions};
+use crate::coordinator::{CommonOptions, SelectionSpec, SolveReport, StopReason, TermMetric};
+use crate::datagen::nesterov_lasso;
+use crate::engine::{self, SolverSpec};
+use crate::metrics::{IterCost, TextTable};
+use crate::parallel::{self, WorkerPool};
+use crate::problems::{LassoProblem, Problem};
+use crate::util::error::Result;
+use crate::util::{Json, Timer};
+
+/// Timed repetitions per path; the two paths are interleaved within each
+/// rep and the per-path minimum is compared (harness noise on shared CI
+/// runners is one-sided, and interleaving keeps a stall from biasing one
+/// path only).
+const REPS: usize = 5;
+/// Fixed iteration count: both paths do exactly the same work.
+const ITERS: usize = 150;
+/// Relative overhead budget for the engine's phase dispatch.
+const MAX_OVERHEAD: f64 = 0.02;
+/// Absolute slop absorbing timer jitter on short runs [s].
+const ABS_SLOP_S: f64 = 0.005;
+
+/// The frozen pre-refactor FLEXA loop (greedy σ-rule, rule-(12) γ,
+/// adaptive τ — the exact configuration the panel measures). Kept here
+/// solely as the overhead/equivalence baseline; production code routes
+/// through [`crate::engine`].
+fn legacy_flexa(
+    problem: &dyn Problem,
+    x0: &[f64],
+    common: &CommonOptions,
+    sigma: f64,
+    pool: &WorkerPool,
+) -> SolveReport {
+    let n = problem.n();
+    let blocks = problem.blocks();
+    let nb = blocks.n_blocks();
+    let p_cores = common.cores.max(1);
+    let rule = SelectionRule::sigma(sigma);
+
+    let mut x = x0.to_vec();
+    let mut aux = vec![0.0; problem.aux_len()];
+    problem.init_aux(&x, &mut aux);
+
+    let mut scratch = vec![0.0; problem.prelude_len()];
+    let mut zhat = vec![0.0; n];
+    let mut e = vec![0.0; nb];
+    let mut sel: Vec<usize> = Vec::with_capacity(nb);
+    let mut aux_save = vec![0.0; problem.aux_len()];
+    let mut x_old = vec![0.0; n];
+    let mut dx = vec![0.0; n];
+    let mut moved = vec![false; nb];
+
+    let br_chunks = parallel::reduce::best_response_chunks(problem);
+    let prl_chunks = parallel::reduce::prelude_chunks(problem);
+    let aux_chunks = parallel::row_chunks(problem.aux_len());
+    let e_chunks = parallel::chunks_of(nb, parallel::MAX_CHUNKS);
+    let mut max_partials: Vec<f64> = Vec::new();
+    let total_br_flops: f64 = (0..nb).map(|i| problem.flops_best_response(i)).sum();
+
+    let tau_opts = common
+        .tau
+        .unwrap_or_else(|| TauOptions::paper(problem.tau_init(), problem.tau_min()));
+    let mut tau_ctl = TauController::new(tau_opts);
+    let mut gamma = common.stepsize.initial();
+
+    let mut state = RunState::new(problem, common);
+    let mut v = problem.v_val(&x, &aux);
+    tau_ctl.baseline(v);
+    state.record(0, &x, &aux, v, 0);
+
+    let mut stop = StopReason::MaxIters;
+    let mut iters = 0usize;
+
+    for k in 0..common.max_iters {
+        iters = k + 1;
+        let tau = tau_ctl.tau();
+
+        parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
+        parallel::par_best_responses(
+            pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
+        );
+        let m_k = parallel::par_max(pool, &e, &e_chunks, &mut max_partials);
+        state.scanned += nb;
+        rule.select_with_max(&e, m_k, &mut sel);
+        state.last_ebound = m_k;
+
+        aux_save.copy_from_slice(&aux);
+        x_old.copy_from_slice(&x);
+        let mut active = 0usize;
+        let mut update_flops = 0.0;
+        for &i in &sel {
+            let r = blocks.range(i);
+            let mut any = false;
+            for j in r.clone() {
+                let d = gamma * (zhat[j] - x[j]);
+                dx[j] = d;
+                if d != 0.0 {
+                    any = true;
+                }
+            }
+            moved[i] = any;
+            if any {
+                for j in r {
+                    x[j] += dx[j];
+                }
+                update_flops += problem.flops_aux_update(i);
+                active += 1;
+            }
+        }
+        parallel::for_each_row_chunk(pool, &mut aux, &aux_chunks, &|_c, rows, aux_rows| {
+            for &i in &sel {
+                if moved[i] {
+                    let r = blocks.range(i);
+                    problem.apply_block_delta_rows(i, &dx[r], aux_rows, rows.clone());
+                }
+            }
+        });
+
+        let v_new = problem.v_val(&x, &aux);
+        match tau_ctl.observe(v_new, state.step_metric()) {
+            TauDecision::Accept => {
+                v = v_new;
+            }
+            TauDecision::RejectAndRetry => {
+                x.copy_from_slice(&x_old);
+                aux.copy_from_slice(&aux_save);
+                state.discarded += 1;
+                tau_ctl.baseline(v);
+                active = 0;
+            }
+        }
+        gamma = common.stepsize.next(gamma, state.step_metric());
+
+        state.charge(IterCost {
+            flops_total: problem.flops_prelude() + total_br_flops + update_flops
+                + problem.flops_obj(),
+            flops_max_worker: (problem.flops_prelude() + total_br_flops + update_flops)
+                / p_cores as f64
+                + problem.flops_obj(),
+            reduce_words: problem.aux_len() as f64,
+            reduce_rounds: 1.0,
+        });
+        state.record(k + 1, &x, &aux, v, active);
+        if let Some(reason) = state.stop_check(k) {
+            stop = reason;
+            break;
+        }
+    }
+    state.finish(x, &aux, v, iters, stop)
+}
+
+/// The engine-overhead panel: engine-routed FLEXA vs the frozen legacy
+/// loop on a fig2-style LASSO, per measured thread count. Bails when the
+/// iterates diverge (they must be bitwise identical) or the overhead
+/// budget is exceeded; writes `BENCH_3.json`.
+pub fn engine_overhead(cfg: &BenchConfig) -> Result<super::figures::FigureOutput> {
+    let (m, n) = cfg.dims(1000, 5000);
+    let inst = nesterov_lasso(m, n, 0.01, 1.0, cfg.seed + 13);
+    let problem = LassoProblem::from_instance(inst);
+    let x0 = vec![0.0; problem.n()];
+    let sigma = 0.5;
+
+    let mk_common = |threads: usize| CommonOptions {
+        max_iters: ITERS,
+        max_wall_s: f64::MAX,
+        tol: 0.0, // fixed work: both paths run exactly ITERS iterations
+        term: TermMetric::RelErr,
+        cores: 8,
+        threads,
+        trace_every: 50,
+        cost_model: cfg.model,
+        name: "engine-overhead".into(),
+        ..Default::default()
+    };
+
+    let mut table =
+        TextTable::new(&["threads", "legacy [s]", "engine [s]", "overhead", "bitwise"]);
+    let mut rows = Vec::new();
+    let mut worst_overhead = f64::NEG_INFINITY;
+
+    for &threads in &cfg.threads {
+        let common = mk_common(threads);
+        let spec = SolverSpec::flexa(common.clone(), SelectionSpec::sigma(sigma), None);
+
+        let mut legacy_best = f64::MAX;
+        let mut engine_best = f64::MAX;
+        let mut x_legacy: Vec<f64> = Vec::new();
+        let mut x_engine: Vec<f64> = Vec::new();
+        for _ in 0..REPS {
+            // one shared pre-built pool per rep: both paths are timed on
+            // identical footing (pool spawn excluded from both)
+            let pool = WorkerPool::new(threads);
+            let t = Timer::start();
+            let r = legacy_flexa(&problem, &x0, &common, sigma, &pool);
+            legacy_best = legacy_best.min(t.elapsed_s());
+            x_legacy = r.x;
+
+            let t = Timer::start();
+            let r = engine::solve_with_pool(&problem, &x0, &spec, &pool);
+            engine_best = engine_best.min(t.elapsed_s());
+            x_engine = r.x;
+        }
+
+        let bitwise = x_legacy == x_engine;
+        if !bitwise {
+            bail!(
+                "engine-routed FLEXA diverged from the legacy loop at threads={threads} \
+                 — the SolverCore refactor must be iterate-preserving"
+            );
+        }
+        let overhead = (engine_best - legacy_best) / legacy_best.max(1e-12);
+        worst_overhead = worst_overhead.max(overhead);
+        table.row(vec![
+            threads.to_string(),
+            format!("{legacy_best:.4}"),
+            format!("{engine_best:.4}"),
+            format!("{:+.2}%", overhead * 100.0),
+            "yes".into(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("legacy_s", Json::Num(legacy_best)),
+            ("engine_s", Json::Num(engine_best)),
+            ("overhead", Json::Num(overhead)),
+            ("bitwise_equal", Json::Bool(true)),
+        ]));
+
+        if engine_best > legacy_best * (1.0 + MAX_OVERHEAD) + ABS_SLOP_S {
+            bail!(
+                "SolverCore overhead budget exceeded at threads={threads}: \
+                 engine {engine_best:.4}s vs legacy {legacy_best:.4}s \
+                 (> {:.0}% + {ABS_SLOP_S}s slop)",
+                MAX_OVERHEAD * 100.0
+            );
+        }
+    }
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("engine_overhead_fig2_lasso")),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("iters", Json::Num(ITERS as f64)),
+        ("reps", Json::Num(REPS as f64)),
+        ("max_overhead_budget", Json::Num(MAX_OVERHEAD)),
+        ("worst_overhead", Json::Num(worst_overhead)),
+        ("runs", Json::arr(rows)),
+    ]);
+    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    let path = format!("{}/BENCH_3.json", cfg.out_dir);
+    let _ = std::fs::write(&path, payload.to_string_compact());
+
+    let text = format!(
+        "SolverCore overhead panel (FLEXA σ={sigma}, LASSO {n}x{m}, {ITERS} fixed iters, \
+         min of {REPS}; engine iterates bitwise-identical to the frozen legacy loop) \
+         -> {path}\n{}",
+        table.render()
+    );
+    Ok(super::figures::FigureOutput { id: "bench_engine".into(), traces: vec![], text })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_baseline_matches_engine_bitwise() {
+        // the equivalence half of the panel, small enough for cargo test
+        let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
+        let x0 = vec![0.0; p.n()];
+        let common = CommonOptions {
+            max_iters: 120,
+            tol: 0.0,
+            term: TermMetric::RelErr,
+            name: "legacy-vs-engine".into(),
+            ..Default::default()
+        };
+        let pool = WorkerPool::new(1);
+        let legacy = legacy_flexa(&p, &x0, &common, 0.5, &pool);
+        let spec = SolverSpec::flexa(common, SelectionSpec::sigma(0.5), None);
+        let engine_r = engine::solve(&p, &x0, &spec);
+        assert_eq!(legacy.x, engine_r.x, "iterates must be bitwise identical");
+        assert_eq!(legacy.final_obj, engine_r.final_obj);
+        assert_eq!(legacy.iters, engine_r.iters);
+        assert_eq!(legacy.discarded, engine_r.discarded);
+        assert_eq!(legacy.scanned, engine_r.scanned);
+    }
+}

@@ -61,7 +61,8 @@ impl BenchConfig {
         }
     }
 
-    fn dims(&self, m: usize, n: usize) -> (usize, usize) {
+    /// Scale paper-sized dimensions by the configured bench scale.
+    pub(crate) fn dims(&self, m: usize, n: usize) -> (usize, usize) {
         (
             ((m as f64 * self.scale).round() as usize).max(32),
             ((n as f64 * self.scale).round() as usize).max(32),

@@ -2,9 +2,11 @@
 //! experiment of the paper's §VI) and a micro-benchmark harness for the
 //! kernel/runtime hot paths.
 
+pub mod engine_overhead;
 pub mod figures;
 pub mod harness;
 
+pub use engine_overhead::engine_overhead;
 pub use figures::{
     ablations, build_problem, fig1, fig2, fig3, fig4, fig5, selection_panel, smoke, table1,
     BenchConfig, FigureOutput,

@@ -4,12 +4,15 @@
 //! * `flexa solve --config <file.toml> [--threads N] [--selection SPEC]` —
 //!   run an experiment config (`--threads` overrides the worker-pool width
 //!   of every solver; `--selection` overrides the block-selection strategy
-//!   of the flexa/gj-flexa solvers, e.g. `--selection hybrid:0.25`);
+//!   of **every** solver in the config, e.g. `--selection hybrid:0.25` —
+//!   all nine solver names, `admm` included, dispatch through the one
+//!   validated [`SolverSpec::from_name`] constructor);
 //! * `flexa bench
-//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|smoke|all>` —
-//!   regenerate the paper's figures/tables into `results/` (`selection` is
-//!   the strategy-comparison panel; `smoke` is the seconds-long CI target
-//!   that also writes `BENCH_smoke.json`);
+//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine|smoke|all>`
+//!   — regenerate the paper's figures/tables into `results/` (`selection`
+//!   is the strategy-comparison panel; `engine` is the SolverCore
+//!   overhead panel writing `BENCH_3.json`; `smoke` is the seconds-long
+//!   CI target that also writes `BENCH_smoke.json`);
 //! * `flexa runtime-check` — load + execute every artifact and compare
 //!   against the native engine (the L1↔L3 smoke test);
 //! * `flexa info` — platform, artifact, and cost-model report.
@@ -17,13 +20,10 @@
 pub mod args;
 
 use crate::bench::{self, BenchConfig};
-use crate::config::ExperimentConfig;
-use crate::coordinator::{
-    flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionSpec,
-    TermMetric,
-};
+use crate::config::{ExperimentConfig, ProblemSpec};
+use crate::coordinator::{CommonOptions, SelectionSpec, TermMetric};
+use crate::engine::{self, SolverSpec};
 use crate::metrics::{Trace, XAxis, YMetric};
-use crate::solvers;
 use crate::util::error::{Context, Result};
 use crate::util::{CsvWriter, PlotCfg};
 use crate::{anyhow, bail};
@@ -61,16 +61,23 @@ flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
 USAGE:
   flexa solve --config <file.toml> [--threads N] [--selection SPEC]
               [--quiet|--verbose]
-  flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|smoke|all>
+  flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine
+               |smoke|all>
   flexa runtime-check
   flexa info
+
+SOLVERS (config `solvers = \"...\"`; all dispatch through one SolverSpec):
+  flexa | gj-flexa | gauss-jacobi | fista | sparsa | grock | greedy-1bcd
+  | admm | cdm      (admm needs problem kind = \"lasso\")
 
 OPTIONS:
   --threads N         override the worker-thread count of every solver in
                       the config (the real parallelism axis; simulated
                       cores stay a separate knob)
-  --selection SPEC    override the block-selection strategy of the
-                      flexa/gj-flexa solvers. SPEC grammar:
+  --selection SPEC    override the block-selection strategy of every
+                      solver in the config (coordinator algorithms
+                      restrict their scans; the full-vector baselines
+                      restrict their update set). SPEC grammar:
                       greedy[:sigma] | jacobi | gauss-southwell | topk:<k>
                       | cyclic[:frac] | random[:frac] | importance[:frac]
                       | hybrid[:frac[:sigma]]   (e.g. hybrid:0.25)
@@ -113,63 +120,55 @@ fn cmd_solve(args: &Args) -> Result<i32> {
     };
 
     let mut traces: Vec<Trace> = Vec::new();
-    for spec in &cfg.solvers {
+    for settings in &cfg.solvers {
         let term = if problem.v_star().is_some() { TermMetric::RelErr } else { TermMetric::Merit };
+        // selection override (CLI > config table); every engine family
+        // accepts one — the coordinator algorithms restrict their scans,
+        // the full-vector baselines restrict their update set (and drop
+        // momentum), so an overridden run is labeled with its strategy:
+        // a sketched "fista+hybrid:…" trace is not classic FISTA
+        let selection = sel_cli.clone().or_else(|| sel_cfg.clone());
+        let run_name = match &selection {
+            Some(s) => format!("{}+{}", settings.name, s.name()),
+            None => settings.name.clone(),
+        };
         let common = CommonOptions {
             max_iters: cfg.max_iters,
             max_wall_s: cfg.max_wall_s,
             tol: cfg.tol,
             term,
-            cores: spec.cores,
-            threads: threads_override.unwrap_or(spec.threads),
+            cores: settings.cores,
+            threads: threads_override.unwrap_or(settings.threads),
             trace_every: cfg.trace_every,
             cost_model: model,
-            name: spec.name.clone(),
+            name: run_name,
             ..Default::default()
         };
-        let selection = sel_cli
-            .clone()
-            .or_else(|| sel_cfg.clone())
-            .unwrap_or_else(|| SelectionSpec::sigma(spec.sigma));
-        // only flexa/gj-flexa consume the selection strategy; don't
-        // claim it applies to the baselines
-        if matches!(spec.name.as_str(), "flexa" | "gj-flexa") {
-            crate::log_info!("running {} (selection {}) ...", spec.name, selection.name());
-        } else {
-            crate::log_info!("running {} ...", spec.name);
+        // ADMM's splitting step assumes the LASSO consensus form; refuse
+        // to silently run it on a problem whose aux is not the residual
+        // (the engine re-checks this with a runtime residual-form probe)
+        if settings.name == "admm" && !matches!(cfg.problem, ProblemSpec::Lasso { .. }) {
+            bail!("solver \"admm\" supports kind = \"lasso\" only");
         }
-        let report = match spec.name.as_str() {
-            "flexa" => flexa(
-                problem.as_ref(),
-                &x0,
-                &FlexaOptions { common, selection, inexact: None },
-            ),
-            "gj-flexa" => gauss_jacobi(
-                problem.as_ref(),
-                &x0,
-                &GaussJacobiOptions {
-                    common,
-                    selection: Some(selection),
-                    processors: spec.cores,
-                },
-            ),
-            "gauss-jacobi" => gauss_jacobi(
-                problem.as_ref(),
-                &x0,
-                &GaussJacobiOptions { common, selection: None, processors: spec.cores },
-            ),
-            "fista" => solvers::fista(problem.as_ref(), &x0, &common),
-            "sparsa" => {
-                solvers::sparsa(problem.as_ref(), &x0, &common, &Default::default())
+        // one validated constructor behind the whole dispatch
+        let spec = SolverSpec::from_name(
+            &settings.name,
+            common,
+            selection,
+            settings.sigma,
+            settings.cores,
+        )
+        .map_err(|e| anyhow!(e))?;
+        match &spec.selection {
+            Some(sel) => {
+                crate::log_info!("running {} (selection {}) ...", settings.name, sel.name())
             }
-            "grock" => solvers::grock(problem.as_ref(), &x0, &common, spec.cores),
-            "greedy-1bcd" => solvers::greedy_1bcd(problem.as_ref(), &x0, &common),
-            "cdm" => solvers::cdm(problem.as_ref(), &x0, &common, true),
-            other => bail!("unknown solver {other:?} in config"),
-        };
+            None => crate::log_info!("running {} ...", settings.name),
+        }
+        let report = engine::solve(problem.as_ref(), &x0, &spec);
         println!(
             "{:<14} stop={:?} iters={} V={:.6e} re={:.2e} merit={:.2e} wall={:.2}s sim={:.3}s GF={:.2}",
-            spec.name,
+            settings.name,
             report.stop,
             report.iters,
             report.final_obj,
@@ -225,6 +224,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         "table1" => run(vec![bench::table1(&cfg)]),
         "ablations" => run(bench::ablations(&cfg)),
         "selection" => run(vec![bench::selection_panel(&cfg)]),
+        "engine" => run(vec![bench::engine_overhead(&cfg)?]),
         "smoke" => run(vec![bench::smoke(&cfg)]),
         "all" => {
             run(vec![bench::table1(&cfg)]);
@@ -235,6 +235,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
             run(bench::fig5(&cfg));
             run(bench::ablations(&cfg));
             run(vec![bench::selection_panel(&cfg)]);
+            run(vec![bench::engine_overhead(&cfg)?]);
         }
         other => bail!("unknown bench target {other:?}"),
     }

@@ -9,7 +9,12 @@
 //!
 //! ```toml
 //! name = "fig1-smoke"
-//! solvers = "flexa, fista"       # comma-separated solver names
+//! solvers = "flexa, fista"       # comma-separated solver names:
+//!                                # flexa | gj-flexa | gauss-jacobi | fista
+//!                                # | sparsa | grock | greedy-1bcd | admm
+//!                                # | cdm  (admm needs kind = "lasso": its
+//!                                # splitting step assumes the residual
+//!                                # consensus form ‖Ax − s − b‖)
 //! sigma = 0.5                    # shared defaults, overridable per solver
 //! cores = 4
 //! threads = 1
@@ -122,11 +127,17 @@ pub struct SelectionSettings {
     pub seed: Option<u64>,
 }
 
-/// Which solver to run.
+/// The `[solver]` knobs for one entry of the `solvers = "…"` list, kept
+/// as plain data. The CLI folds these — together with the `[selection]`
+/// table — into a validated engine
+/// [`SolverSpec`](crate::engine::SolverSpec) through the single
+/// constructor `SolverSpec::from_name`, so the config surface and the
+/// engine dispatch cannot diverge; solver names are validated against
+/// `SolverSpec::NAMES` already at parse time.
 #[derive(Clone, Debug, PartialEq)]
-pub struct SolverSpec {
-    /// "flexa" | "gj-flexa" | "fista" | "sparsa" | "grock" | "greedy-1bcd"
-    /// | "admm" | "cdm"
+pub struct SolverSettings {
+    /// "flexa" | "gj-flexa" | "gauss-jacobi" | "fista" | "sparsa" |
+    /// "grock" | "greedy-1bcd" | "admm" | "cdm"
     pub name: String,
     /// FLEXA selection fraction σ (0 = full Jacobi).
     pub sigma: f64,
@@ -136,7 +147,7 @@ pub struct SolverSpec {
     pub threads: usize,
 }
 
-impl Default for SolverSpec {
+impl Default for SolverSettings {
     fn default() -> Self {
         Self { name: "flexa".into(), sigma: 0.5, cores: 1, threads: 1 }
     }
@@ -150,7 +161,7 @@ pub struct ExperimentConfig {
     /// Problem family and instance shape.
     pub problem: ProblemSpec,
     /// Solvers to run, in order.
-    pub solvers: Vec<SolverSpec>,
+    pub solvers: Vec<SolverSettings>,
     /// Block-selection strategy (`[selection]` table), if configured.
     pub selection: Option<SelectionSettings>,
     /// Iteration budget per solver.
@@ -217,8 +228,15 @@ impl ExperimentConfig {
             if name.is_empty() {
                 continue;
             }
+            // validate against the engine's single source of solver names
+            if !crate::engine::SolverSpec::NAMES.contains(&name.as_str()) {
+                return Err(format!(
+                    "unknown solver {name:?} in `solvers` (expected one of {})",
+                    crate::engine::SolverSpec::NAMES.join("|")
+                ));
+            }
             let prefix = format!("solver.{name}");
-            solvers.push(SolverSpec {
+            solvers.push(SolverSettings {
                 sigma: doc
                     .get_f64(&format!("{prefix}.sigma"))
                     .or_else(|| doc.get_f64("sigma"))
@@ -314,6 +332,24 @@ tol = 1e-6
     #[test]
     fn missing_kind_is_error() {
         assert!(ExperimentConfig::from_toml("name = \"x\"").is_err());
+    }
+
+    #[test]
+    fn unknown_solver_name_is_rejected_at_parse_time() {
+        let err = ExperimentConfig::from_toml(
+            "solvers = \"flexa, frobnicate\"\n[problem]\nkind = \"lasso\"\nm = 20\nn = 30\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown solver"), "{err}");
+    }
+
+    #[test]
+    fn admm_is_a_first_class_config_solver() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"admm\"\n[problem]\nkind = \"lasso\"\nm = 20\nn = 30\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.solvers[0].name, "admm");
     }
 
     #[test]

@@ -20,282 +20,50 @@
 //!    saving), objective bookkeeping, τ controller (double-and-discard /
 //!    halve heuristic of §VI-A).
 //!
-//! Steps 1, 2, 3 (the `M^k` reduction) and 5 run on a persistent
-//! [`WorkerPool`] created once per solve; fixed chunk geometry keeps the
-//! iterates bitwise-identical for any `threads ≥ 1` (see
-//! [`crate::parallel`]).
+//! Since the `SolverCore` refactor this file holds no loop of its own:
+//! FLEXA is the [`SolverSpec::flexa`](crate::engine::SolverSpec::flexa)
+//! configuration of the one iteration engine
+//! ([`crate::engine`]), which runs the phases above on a persistent
+//! [`WorkerPool`] with fixed chunk geometry — iterates stay
+//! bitwise-identical for any `threads ≥ 1`.
 
-use super::driver::RunState;
-use super::stepsize::{armijo_accept, StepRule};
-use super::strategy::Candidates;
-use super::tau::{TauController, TauDecision, TauOptions};
-use super::{FlexaOptions, SolveReport, StopReason};
-use crate::linalg::vector;
-use crate::metrics::IterCost;
-use crate::parallel::{self, WorkerPool};
+use super::{FlexaOptions, SolveReport};
+use crate::engine::{self, SolverSpec};
+use crate::parallel::WorkerPool;
 use crate::problems::Problem;
-use crate::rng::Xoshiro256pp;
+
+/// Build the engine spec for Algorithm 1 from classic [`FlexaOptions`].
+fn spec_of(opts: &FlexaOptions) -> SolverSpec {
+    SolverSpec::flexa(opts.common.clone(), opts.selection.clone(), opts.inexact)
+}
 
 /// Run FLEXA from `x0`. See [`FlexaOptions`]. Builds one per-solve
-/// [`WorkerPool`] from `opts.common.threads` (workers are spawned once
-/// here, never per iteration).
+/// [`WorkerPool`] from `opts.common.threads` (workers are spawned once,
+/// never per iteration).
 pub fn flexa(problem: &dyn Problem, x0: &[f64], opts: &FlexaOptions) -> SolveReport {
-    let pool = WorkerPool::new(opts.common.threads);
-    flexa_with_pool(problem, x0, opts, &pool)
+    engine::solve(problem, x0, &spec_of(opts))
 }
 
 /// FLEXA on a caller-provided worker pool (reusable across solves;
 /// `opts.common.threads` is superseded by the pool's worker count).
+#[deprecated(
+    since = "0.1.0",
+    note = "use `engine::solve_with_pool` with `SolverSpec::flexa` — the \
+            per-solver `_with_pool` variant matrix is folded into the engine"
+)]
 pub fn flexa_with_pool(
     problem: &dyn Problem,
     x0: &[f64],
     opts: &FlexaOptions,
     pool: &WorkerPool,
 ) -> SolveReport {
-    let n = problem.n();
-    assert_eq!(x0.len(), n, "x0 dimension mismatch");
-    let blocks = problem.blocks();
-    let nb = blocks.n_blocks();
-    let common = &opts.common;
-    let p_cores = common.cores.max(1);
-    let max_block = blocks.max_size();
-
-    let mut x = x0.to_vec();
-    let mut aux = vec![0.0; problem.aux_len()];
-    problem.init_aux(&x, &mut aux);
-
-    // per-solve selection strategy (stateful: rng stream, cyclic cursor)
-    let mut strategy = opts.selection.build(problem);
-
-    // preallocated workspaces — the iteration loop allocates nothing
-    let mut scratch = vec![0.0; problem.prelude_len()];
-    let mut zhat = vec![0.0; n];
-    let mut e = vec![0.0; nb];
-    let mut cand: Vec<usize> = Vec::with_capacity(nb);
-    let mut sel: Vec<usize> = Vec::with_capacity(nb);
-    let mut aux_save = vec![0.0; problem.aux_len()];
-    let mut x_old = vec![0.0; n]; // pre-step iterate for τ rollback
-    let mut delta = vec![0.0; max_block];
-    let mut dir_aux = vec![0.0; problem.aux_len()]; // Armijo direction image
-    let mut x_trial = vec![0.0; n];
-    let mut aux_trial = vec![0.0; problem.aux_len()];
-
-    // pool-parallel pass tables & buffers — fixed chunk geometry, so every
-    // pass is bitwise-identical for any worker count
-    let br_chunks = parallel::reduce::best_response_chunks(problem);
-    let prl_chunks = parallel::reduce::prelude_chunks(problem);
-    let aux_chunks = parallel::row_chunks(problem.aux_len());
-    let e_chunks = parallel::chunks_of(nb, parallel::MAX_CHUNKS);
-    let mut max_partials: Vec<f64> = Vec::new();
-    let mut dx = vec![0.0; n]; // γ-scaled step, read by the aux fan-out
-    let mut moved = vec![false; nb];
-    // full-scan flop total, reused every Candidates::All iteration
-    let total_br_flops: f64 = (0..nb).map(|i| problem.flops_best_response(i)).sum();
-
-    let tau_opts = common
-        .tau
-        .unwrap_or_else(|| TauOptions::paper(problem.tau_init(), problem.tau_min()));
-    let mut tau_ctl = TauController::new(tau_opts);
-    let mut gamma = common.stepsize.initial();
-    let mut inexact_rng = opts.inexact.map(|ix| Xoshiro256pp::seed_from_u64(ix.seed));
-
-    let mut state = RunState::new(problem, common);
-    let mut v = problem.v_val(&x, &aux);
-    tau_ctl.baseline(v);
-    state.record(0, &x, &aux, v, 0);
-
-    let mut stop = StopReason::MaxIters;
-    let mut iters = 0usize;
-
-    for k in 0..common.max_iters {
-        iters = k + 1;
-        let tau = tau_ctl.tau();
-
-        // ---- strategy propose (which blocks to scan) + prelude ----
-        let scan = strategy.propose(k, nb, &mut cand);
-        parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
-
-        // ---- parallel best responses (S.3) over the candidate set ----
-        match scan {
-            Candidates::All => parallel::par_best_responses(
-                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
-            ),
-            Candidates::Subset => parallel::par_best_responses_subset(
-                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
-            ),
-        }
-
-        // inexact solves: bounded perturbation ε_i^k = eps0·γ^k (Thm 1(iv))
-        if let (Some(ix), Some(rng)) = (&opts.inexact, inexact_rng.as_mut()) {
-            let eps_k = ix.eps0 * gamma;
-            let mut perturb = |i: usize, zhat: &mut [f64], e: &mut [f64]| {
-                let mut d2 = 0.0;
-                for j in blocks.range(i) {
-                    zhat[j] += rng.uniform(-1.0, 1.0) * eps_k;
-                    let d = zhat[j] - x[j];
-                    d2 += d * d;
-                }
-                e[i] = d2.sqrt(); // keep E consistent with the perturbed ẑ
-            };
-            match scan {
-                Candidates::All => {
-                    for i in 0..nb {
-                        perturb(i, &mut zhat, &mut e);
-                    }
-                }
-                Candidates::Subset => {
-                    for &i in &cand {
-                        perturb(i, &mut zhat, &mut e);
-                    }
-                }
-            }
-        }
-
-        // ---- selection (S.2): M^k over the scanned blocks, then the
-        // strategy's pick. The full-scan reduction fans out over the pool;
-        // the sketch maximum is an O(|C^k|) fold on the calling thread.
-        let m_k = match scan {
-            Candidates::All => parallel::par_max(pool, &e, &e_chunks, &mut max_partials),
-            Candidates::Subset => cand.iter().fold(0.0f64, |a, &i| a.max(e[i])),
-        };
-        match scan {
-            Candidates::All => {
-                state.scanned += nb;
-                strategy.select(&e, m_k, &[], &mut sel);
-            }
-            Candidates::Subset => {
-                state.scanned += cand.len();
-                strategy.select(&e, m_k, &cand, &mut sel);
-            }
-        }
-        state.last_ebound = m_k;
-
-        // ---- Armijo line search (Remark 4), if configured ----
-        let mut armijo_trials = 0usize;
-        if let StepRule::Armijo { alpha, beta, max_backtracks } = common.stepsize {
-            dir_aux.fill(0.0);
-            let mut dir_sq = 0.0;
-            for &i in &sel {
-                let r = blocks.range(i);
-                for (t, j) in r.clone().enumerate() {
-                    delta[t] = zhat[j] - x[j];
-                    dir_sq += delta[t] * delta[t];
-                }
-                problem.apply_block_delta(i, &delta[..r.len()], &mut dir_aux);
-            }
-            let mut g_try = 1.0;
-            gamma = g_try;
-            for _ in 0..=max_backtracks {
-                armijo_trials += 1;
-                // trial point: x + γ·(ẑ − x) on S^k; aux is affine in γ
-                x_trial.copy_from_slice(&x);
-                for &i in &sel {
-                    for j in blocks.range(i) {
-                        x_trial[j] = x[j] + g_try * (zhat[j] - x[j]);
-                    }
-                }
-                aux_trial.copy_from_slice(&aux);
-                vector::axpy(g_try, &dir_aux, &mut aux_trial);
-                let v_trial = problem.v_val(&x_trial, &aux_trial);
-                if armijo_accept(v_trial, v, alpha, g_try, dir_sq) {
-                    gamma = g_try;
-                    break;
-                }
-                g_try *= beta;
-                gamma = g_try;
-            }
-        }
-
-        // ---- memory step (S.4), saving state for possible τ-rollback ----
-        // The γ-scaled deltas and the x update stay sequential (O(n),
-        // cheap); the |S^k| aux-column axpys — the selective-update hot
-        // path — fan out over fixed aux-row chunks. Each chunk applies the
-        // selected blocks in order, so every aux element sees the same
-        // addition order as the sequential path (bitwise-identical).
-        aux_save.copy_from_slice(&aux);
-        x_old.copy_from_slice(&x);
-        let mut active = 0usize;
-        let mut update_flops = 0.0;
-        for &i in &sel {
-            let r = blocks.range(i);
-            let mut any = false;
-            for j in r.clone() {
-                let d = gamma * (zhat[j] - x[j]);
-                dx[j] = d;
-                if d != 0.0 {
-                    any = true;
-                }
-            }
-            moved[i] = any;
-            if any {
-                for j in r {
-                    x[j] += dx[j];
-                }
-                update_flops += problem.flops_aux_update(i);
-                active += 1;
-            }
-        }
-        parallel::for_each_row_chunk(pool, &mut aux, &aux_chunks, &|_c, rows, aux_rows| {
-            for &i in &sel {
-                if moved[i] {
-                    let r = blocks.range(i);
-                    problem.apply_block_delta_rows(i, &dx[r], aux_rows, rows.clone());
-                }
-            }
-        });
-
-        let v_new = problem.v_val(&x, &aux);
-
-        // ---- τ controller (§VI-A): double & discard on increase ----
-        match tau_ctl.observe(v_new, state.step_metric()) {
-            TauDecision::Accept => {
-                v = v_new;
-            }
-            TauDecision::RejectAndRetry => {
-                // paper: iteration discarded, x^{k+1} = x^k
-                x.copy_from_slice(&x_old);
-                aux.copy_from_slice(&aux_save);
-                state.discarded += 1;
-                tau_ctl.baseline(v);
-                active = 0;
-            }
-        }
-        // γ^k is an iteration-indexed schedule (Theorem 1) — it advances
-        // whether or not the τ controller discarded the step
-        gamma = common.stepsize.next(gamma, state.step_metric());
-
-        // ---- cost accounting (charged to the simulated P-core clock) ----
-        // sketching strategies only pay for the candidate scans — the
-        // selective saving the hybrid/random selection rules buy
-        let br_flops: f64 = match scan {
-            Candidates::All => total_br_flops,
-            Candidates::Subset => {
-                cand.iter().map(|&i| problem.flops_best_response(i)).sum()
-            }
-        };
-        let cost = IterCost {
-            flops_total: problem.flops_prelude() + br_flops + update_flops + problem.flops_obj(),
-            flops_max_worker: (problem.flops_prelude() + br_flops + update_flops)
-                / p_cores as f64
-                + problem.flops_obj(),
-            reduce_words: problem.aux_len() as f64,
-            reduce_rounds: 1.0 + armijo_trials as f64,
-        };
-        state.charge(cost);
-
-        state.record(k + 1, &x, &aux, v, active);
-        if let Some(reason) = state.stop_check(k) {
-            stop = reason;
-            break;
-        }
-    }
-
-    state.finish(x, &aux, v, iters, stop)
+    engine::solve_with_pool(problem, x0, &spec_of(opts), pool)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::stepsize::StepRule;
     use crate::coordinator::{CommonOptions, SelectionSpec, TermMetric};
     use crate::datagen::nesterov_lasso;
     use crate::problems::LassoProblem;
@@ -421,5 +189,20 @@ mod tests {
         for t in &r.trace.points[1..] {
             assert!(t.active <= 1, "GS updated {} blocks", t.active);
         }
+    }
+
+    #[test]
+    fn deprecated_pool_shim_matches_engine_path() {
+        // the one-release compat shim must be a pure alias of the engine
+        let p = LassoProblem::from_instance(nesterov_lasso(30, 40, 0.2, 1.0, 7));
+        let mut o = small_opts(0.5);
+        o.common.max_iters = 50;
+        o.common.tol = 0.0;
+        let pool = WorkerPool::new(1);
+        #[allow(deprecated)]
+        let a = flexa_with_pool(&p, &vec![0.0; p.n()], &o, &pool);
+        let b = flexa(&p, &vec![0.0; p.n()], &o);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.final_obj, b.final_obj);
     }
 }

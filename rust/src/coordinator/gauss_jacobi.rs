@@ -3,242 +3,56 @@
 //! P processors run in parallel (Jacobi across processors); inside each
 //! processor the owned blocks are swept *sequentially*, Gauss-Seidel style,
 //! each sweep step using the processor's own freshest iterates
-//! `(x_{pi<}^{k+1}, x_{pi≥}^k, x_{−p}^k)` — realized here by giving every
+//! `(x_{pi<}^{k+1}, x_{pi≥}^k, x_{−p}^k)` — realized by giving every
 //! worker a private copy of the auxiliary vector updated with its own
 //! γ-scaled deltas as it sweeps. After the sweeps the deltas are merged
 //! (the allreduce of a distributed run, charged to the cost model).
 //!
 //! Algorithm 3 restricts each sweep to `S_p^k = S^k ∩ I_p`, where `S^k`
 //! comes from the configured selection strategy
-//! ([`crate::coordinator::strategy`]) over a Jacobi prepass: the greedy
-//! σ-rule scans every block (so the theoretical requirement that
-//! `∪_p S_p^k` contain an `E_i ≥ ρM^k` block holds by construction),
-//! while the sketching strategies (cyclic/random/importance/hybrid) only
-//! scan their candidate subset — the prepass drops from O(N) to O(|C^k|).
+//! ([`crate::coordinator::strategy`]) over a Jacobi prepass.
 //!
-//! Within-worker sweeps use the **fresh-state** best response (the paper's
-//! point that Gauss-Seidel "latest information" costs extra computation —
-//! e.g. re-evaluating the logistic weights per update — is preserved and
-//! charged via `flops_best_response_fresh`).
+//! Since the `SolverCore` refactor both algorithms are the
+//! [`SolverSpec::gauss_jacobi`](crate::engine::SolverSpec::gauss_jacobi)
+//! configuration of the one iteration engine ([`crate::engine`]): the
+//! prepass and the delta merge fan out over the persistent pool, the
+//! within-processor sweeps stay a sequential dependency chain (their
+//! parallelism across processors is what the cluster cost model charges),
+//! and the fresh-state best responses are billed via
+//! `flops_best_response_fresh` — the paper's point that Gauss-Seidel
+//! "latest information" costs extra computation.
 
-use super::driver::RunState;
-use super::strategy::Candidates;
-use super::tau::{TauController, TauDecision, TauOptions};
-use super::{GaussJacobiOptions, SolveReport, StopReason};
-use crate::linalg::ProcessorAssignment;
-use crate::metrics::IterCost;
-use crate::parallel::{self, WorkerPool};
+use super::{GaussJacobiOptions, SolveReport};
+use crate::engine::{self, SolverSpec};
+use crate::parallel::WorkerPool;
 use crate::problems::Problem;
+
+/// Build the engine spec for Algorithms 2/3 from classic
+/// [`GaussJacobiOptions`].
+fn spec_of(opts: &GaussJacobiOptions) -> SolverSpec {
+    SolverSpec::gauss_jacobi(opts.common.clone(), opts.selection.clone(), opts.processors)
+}
 
 /// Run Gauss-Jacobi (Algorithm 2) or GJ-with-Selection (Algorithm 3,
 /// when `opts.selection` is set) from `x0`. Builds one per-solve
 /// [`WorkerPool`] from `opts.common.threads`.
 pub fn gauss_jacobi(problem: &dyn Problem, x0: &[f64], opts: &GaussJacobiOptions) -> SolveReport {
-    let pool = WorkerPool::new(opts.common.threads);
-    gauss_jacobi_with_pool(problem, x0, opts, &pool)
+    engine::solve(problem, x0, &spec_of(opts))
 }
 
-/// Gauss-Jacobi on a caller-provided worker pool. The pool drives the
-/// Algorithm-3 selection prepass (prelude + Jacobi best responses + `M^k`
-/// reduction) and the delta merge; the within-processor Gauss-Seidel
-/// sweeps are a sequential dependency chain by construction (each update
-/// feeds the next best response) and stay on the calling thread — their
-/// parallelism across processors is what the cluster cost model charges.
+/// Gauss-Jacobi on a caller-provided worker pool.
+#[deprecated(
+    since = "0.1.0",
+    note = "use `engine::solve_with_pool` with `SolverSpec::gauss_jacobi` — the \
+            per-solver `_with_pool` variant matrix is folded into the engine"
+)]
 pub fn gauss_jacobi_with_pool(
     problem: &dyn Problem,
     x0: &[f64],
     opts: &GaussJacobiOptions,
     pool: &WorkerPool,
 ) -> SolveReport {
-    let n = problem.n();
-    assert_eq!(x0.len(), n);
-    let blocks = problem.blocks();
-    let nb = blocks.n_blocks();
-    let common = &opts.common;
-    let p_procs = if opts.processors == 0 { common.cores.max(1) } else { opts.processors };
-    let assignment = ProcessorAssignment::contiguous(nb, p_procs);
-    let max_block = blocks.max_size();
-
-    let mut x = x0.to_vec();
-    let mut aux = vec![0.0; problem.aux_len()];
-    problem.init_aux(&x, &mut aux);
-
-    // per-solve selection strategy (Algorithm 3), stateful across iterations
-    let mut strategy = opts.selection.as_ref().map(|spec| spec.build(problem));
-
-    // workspaces
-    let mut scratch = vec![0.0; problem.prelude_len()];
-    let mut zhat = vec![0.0; n]; // prepass best responses (Algorithm 3)
-    let mut e = vec![0.0; nb];
-    let mut cand: Vec<usize> = Vec::with_capacity(nb);
-    let mut sel: Vec<usize> = Vec::with_capacity(nb);
-    let mut aux_save = vec![0.0; problem.aux_len()];
-    let mut x_old = vec![0.0; n];
-    // per-processor private aux copies (allocated once)
-    let mut aux_local: Vec<Vec<f64>> = (0..p_procs).map(|_| vec![0.0; problem.aux_len()]).collect();
-    let mut z_buf = vec![0.0; max_block];
-    let mut delta = vec![0.0; max_block];
-
-    // pool-parallel pass tables (fixed chunks ⇒ thread-count-invariant)
-    let br_chunks = parallel::reduce::best_response_chunks(problem);
-    let prl_chunks = parallel::reduce::prelude_chunks(problem);
-    let aux_chunks = parallel::row_chunks(problem.aux_len());
-    let e_chunks = parallel::chunks_of(nb, parallel::MAX_CHUNKS);
-    let mut max_partials: Vec<f64> = Vec::new();
-
-    let tau_opts = common
-        .tau
-        .unwrap_or_else(|| TauOptions::paper(problem.tau_init(), problem.tau_min()));
-    let mut tau_ctl = TauController::new(tau_opts);
-    let mut gamma = common.stepsize.initial();
-
-    let mut state = RunState::new(problem, common);
-    let mut v = problem.v_val(&x, &aux);
-    tau_ctl.baseline(v);
-    state.record(0, &x, &aux, v, 0);
-
-    let mut stop = StopReason::MaxIters;
-    let mut iters = 0usize;
-
-    for k in 0..common.max_iters {
-        iters = k + 1;
-        let tau = tau_ctl.tau();
-
-        // ---- Algorithm 3: selection prepass (Jacobi best responses over
-        // the strategy's candidate set), fanned out over the persistent
-        // pool ----
-        let mut prepass_flops = 0.0;
-        if let Some(strat) = strategy.as_mut() {
-            let scan = strat.propose(k, nb, &mut cand);
-            parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
-            let m_k = match scan {
-                Candidates::All => {
-                    parallel::par_best_responses(
-                        pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
-                    );
-                    state.scanned += nb;
-                    prepass_flops = problem.flops_prelude()
-                        + (0..nb).map(|i| problem.flops_best_response(i)).sum::<f64>();
-                    parallel::par_max(pool, &e, &e_chunks, &mut max_partials)
-                }
-                Candidates::Subset => {
-                    parallel::par_best_responses_subset(
-                        pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
-                    );
-                    state.scanned += cand.len();
-                    prepass_flops = problem.flops_prelude()
-                        + cand.iter().map(|&i| problem.flops_best_response(i)).sum::<f64>();
-                    cand.iter().fold(0.0f64, |a, &i| a.max(e[i]))
-                }
-            };
-            match scan {
-                Candidates::All => strat.select(&e, m_k, &[], &mut sel),
-                Candidates::Subset => strat.select(&e, m_k, &cand, &mut sel),
-            }
-            state.last_ebound = m_k;
-        } else {
-            sel.clear();
-            sel.extend(0..nb);
-        }
-
-        // ---- Gauss-Seidel sweeps, one per processor ----
-        // Every processor starts from aux^k; its private copy accumulates
-        // only its own γ-scaled deltas (= x_{−p} held at x^k).
-        aux_save.copy_from_slice(&aux);
-        x_old.copy_from_slice(&x);
-        let mut active = 0usize;
-        let mut max_worker_flops: f64 = 0.0;
-        let mut total_flops = prepass_flops;
-        let mut ebound_gs = 0.0f64;
-
-        for p in 0..p_procs {
-            let group = assignment.group(p);
-            let local = &mut aux_local[p];
-            local.copy_from_slice(&aux);
-            let mut worker_flops = problem.aux_len() as f64; // aux copy cost
-            for &i in group {
-                // Algorithm 3: only the selected blocks in this group
-                if opts.selection.is_some() && !sel_contains(&sel, i) {
-                    continue;
-                }
-                let r = blocks.range(i);
-                let ei = problem.best_response(i, &x, local, tau, &mut z_buf[..r.len()]);
-                ebound_gs = ebound_gs.max(ei);
-                worker_flops += problem.flops_best_response_fresh(i);
-                state.scanned += 1; // fresh-state scan inside the sweep
-                let mut moved = false;
-                for (t, j) in r.clone().enumerate() {
-                    delta[t] = gamma * (z_buf[t] - x[j]);
-                    if delta[t] != 0.0 {
-                        moved = true;
-                    }
-                }
-                if moved {
-                    for (t, j) in r.clone().enumerate() {
-                        x[j] += delta[t];
-                    }
-                    problem.apply_block_delta(i, &delta[..r.len()], local);
-                    worker_flops += problem.flops_aux_update(i);
-                    active += 1;
-                }
-            }
-            max_worker_flops = max_worker_flops.max(worker_flops);
-            total_flops += worker_flops;
-        }
-        if opts.selection.is_none() {
-            state.last_ebound = ebound_gs;
-        }
-
-        // ---- merge: aux^{k+1} = aux^k + Σ_p (aux_p − aux^k) ----
-        // (the allreduce of a distributed run) row-chunked over the pool;
-        // per element the processor deltas add in p-order, exactly as the
-        // sequential double loop did — bitwise-identical for any threads.
-        parallel::for_each_row_chunk(pool, &mut aux, &aux_chunks, &|_c, rows, aux_rows| {
-            for local in aux_local.iter() {
-                for (k, j) in rows.clone().enumerate() {
-                    aux_rows[k] += local[j] - aux_save[j];
-                }
-            }
-        });
-        total_flops += (2 * p_procs * aux.len()) as f64;
-
-        let v_new = problem.v_val(&x, &aux);
-
-        // ---- τ controller ----
-        match tau_ctl.observe(v_new, state.step_metric()) {
-            TauDecision::Accept => {
-                v = v_new;
-            }
-            TauDecision::RejectAndRetry => {
-                x.copy_from_slice(&x_old);
-                aux.copy_from_slice(&aux_save);
-                state.discarded += 1;
-                tau_ctl.baseline(v);
-                active = 0;
-            }
-        }
-        // γ^k is an iteration-indexed schedule — advances on discards too
-        gamma = common.stepsize.next(gamma, state.step_metric());
-
-        // ---- cost model: compute critical path = slowest processor ----
-        let cost = IterCost {
-            flops_total: total_flops + problem.flops_obj(),
-            flops_max_worker: prepass_flops / p_procs as f64
-                + max_worker_flops
-                + problem.flops_obj(),
-            reduce_words: problem.aux_len() as f64,
-            reduce_rounds: if opts.selection.is_some() { 2.0 } else { 1.0 },
-        };
-        state.charge(cost);
-
-        state.record(k + 1, &x, &aux, v, active);
-        if let Some(reason) = state.stop_check(k) {
-            stop = reason;
-            break;
-        }
-    }
-
-    state.finish(x, &aux, v, iters, stop)
+    engine::solve_with_pool(problem, x0, &spec_of(opts), pool)
 }
 
 /// Convenience: GJ-FLEXA — Algorithm 3 with the paper's σ-rule.
@@ -252,14 +66,10 @@ pub fn gj_flexa(
     gauss_jacobi(problem, x0, &opts)
 }
 
-#[inline]
-fn sel_contains(sel: &[usize], i: usize) -> bool {
-    sel.binary_search(&i).is_ok()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::tau::TauOptions;
     use crate::coordinator::{CommonOptions, SelectionSpec, TermMetric};
     use crate::datagen::nesterov_lasso;
     use crate::problems::LassoProblem;
@@ -364,5 +174,18 @@ mod tests {
             r1.iters,
             rn.iters
         );
+    }
+
+    #[test]
+    fn deprecated_pool_shim_matches_engine_path() {
+        let p = LassoProblem::from_instance(nesterov_lasso(30, 40, 0.2, 1.0, 9));
+        let mut o = opts(4);
+        o.common.max_iters = 40;
+        o.common.tol = 0.0;
+        let pool = WorkerPool::new(2);
+        #[allow(deprecated)]
+        let a = gauss_jacobi_with_pool(&p, &vec![0.0; p.n()], &o, &pool);
+        let b = gauss_jacobi(&p, &vec![0.0; p.n()], &o);
+        assert_eq!(a.x, b.x);
     }
 }

@@ -2,8 +2,12 @@
 //! Algorithm 2 (Gauss-Jacobi), Algorithm 3 (GJ with selection), and their
 //! shared machinery — the pluggable block-selection subsystem
 //! ([`strategy`]), diminishing/adaptive/Armijo step sizes, the adaptive τ
-//! controller, worker-parallel best responses, and inexact-subproblem
-//! budgets.
+//! controller, and inexact-subproblem budgets.
+//!
+//! The iteration loops themselves live in [`crate::engine`]: each
+//! algorithm here is a thin [`SolverSpec`](crate::engine::SolverSpec)
+//! configuration of the one `SolverCore` engine (the options structs in
+//! this module remain the stable public surface).
 
 pub mod driver;
 pub mod flexa;
@@ -14,8 +18,12 @@ pub mod strategy;
 pub mod tau;
 pub mod workers;
 
-pub use flexa::{flexa, flexa_with_pool};
-pub use gauss_jacobi::{gauss_jacobi, gauss_jacobi_with_pool, gj_flexa};
+pub use flexa::flexa;
+#[allow(deprecated)] // one-release compat shim for the old variant matrix
+pub use flexa::flexa_with_pool;
+pub use gauss_jacobi::{gauss_jacobi, gj_flexa};
+#[allow(deprecated)] // one-release compat shim for the old variant matrix
+pub use gauss_jacobi::gauss_jacobi_with_pool;
 pub use selection::SelectionRule;
 pub use stepsize::StepRule;
 pub use strategy::{Candidates, SelectionSpec, SelectionStrategy};

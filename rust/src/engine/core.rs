@@ -1,0 +1,1198 @@
+//! `SolverCore` — the one iteration loop behind every solver.
+//!
+//! One pass of the loop is five phases, each dispatched on the spec's
+//! pluggable rules:
+//!
+//! 1. **propose/scan** — the selection strategy names `C^k`; the
+//!    direction rule fills `ẑ`/`E` over it (pool-parallel Jacobi best
+//!    responses, a fused [`StepEngine`] call, a prox-gradient trial, or
+//!    nothing for the sweep families);
+//! 2. **select** — `S^k ⊆ C^k` from the error bounds;
+//! 3. **step/merge** — the merge rule turns direction + γ into `x^{k+1}`
+//!    (memory step with selective aux axpys, Gauss-Jacobi private-copy
+//!    sweeps + delta merge, a sequential Gauss-Seidel sweep, or a
+//!    full-vector accept);
+//! 4. **controllers** — objective bookkeeping, the τ
+//!    double-and-discard/halve heuristic with iterate rollback, and the
+//!    γ schedule (iteration-indexed: it advances on discards too);
+//! 5. **accounting** — flop/reduction costs to the simulated cluster
+//!    clock, trace recording, stop checks.
+//!
+//! Every pool pass uses the fixed chunk geometry of
+//! [`crate::parallel::partition`] and ordered reductions, so iterates are
+//! bitwise-identical for any `threads ≥ 1` regardless of configuration —
+//! the equivalence suite (`tests/integration_engine.rs`) pins this for
+//! all seven solver families.
+
+use super::workspace::Workspace;
+use super::{Accel, DirectionRule, MergeRule, SolverSpec};
+use crate::coordinator::driver::RunState;
+use crate::coordinator::stepsize::{armijo_accept, StepRule};
+use crate::coordinator::strategy::{Candidates, SelectionStrategy};
+use crate::coordinator::tau::{TauController, TauDecision, TauOptions};
+use crate::coordinator::{SolveReport, StopReason};
+use crate::linalg::{vector, BlockPartition, ProcessorAssignment};
+use crate::metrics::IterCost;
+use crate::parallel::{self, WorkerPool};
+use crate::problems::Problem;
+use crate::rng::Xoshiro256pp;
+use crate::runtime::StepEngine;
+use crate::util::error::Result;
+
+/// What computes the Jacobi scan: the native pool-parallel kernels, or an
+/// external fused [`StepEngine`] (the L1/L2 artifact path).
+enum ScanBackend<'e> {
+    /// Pool-parallel native best responses (the default).
+    Native,
+    /// A bound step engine computing `(ẑ, E)` for every block in one call.
+    Engine(&'e mut dyn StepEngine),
+}
+
+/// Run a [`SolverSpec`] from `x0`, building one per-solve
+/// [`WorkerPool`] from `spec.common.threads` (workers are spawned once
+/// here, never per iteration).
+pub fn solve(problem: &dyn Problem, x0: &[f64], spec: &SolverSpec) -> SolveReport {
+    let pool = WorkerPool::new(spec.common.threads);
+    solve_with_pool(problem, x0, spec, &pool)
+}
+
+/// Run a [`SolverSpec`] on a caller-provided worker pool (reusable across
+/// solves; `spec.common.threads` is superseded by the pool's width).
+pub fn solve_with_pool(
+    problem: &dyn Problem,
+    x0: &[f64],
+    spec: &SolverSpec,
+    pool: &WorkerPool,
+) -> SolveReport {
+    match run(problem, x0, spec, pool, ScanBackend::Native) {
+        Ok(r) => r,
+        Err(e) => unreachable!("native scan backend cannot fail: {e:?}"),
+    }
+}
+
+/// Run a [`SolverSpec`] with the Jacobi scan computed by an external
+/// [`StepEngine`] (the three-layer path: selection/γ/τ on the rust side,
+/// compute in the engine). The engine scans every block per call, so
+/// sketching strategies restrict only the *selection* on this path; the
+/// auxiliary state is recomputed from `x` (the engine owns the compute).
+pub fn solve_with_step_engine(
+    problem: &dyn Problem,
+    engine: &mut dyn StepEngine,
+    x0: &[f64],
+    spec: &SolverSpec,
+) -> Result<SolveReport> {
+    let pool = WorkerPool::new(spec.common.threads);
+    run(problem, x0, spec, &pool, ScanBackend::Engine(engine))
+}
+
+#[inline]
+fn sel_contains(sel: &[usize], i: usize) -> bool {
+    sel.binary_search(&i).is_ok()
+}
+
+/// `‖a_I − b_I‖` over block `i` — the trial-distance error bound driving
+/// selection on the full-vector (prox/ADMM) families.
+fn block_dist(blocks: &BlockPartition, i: usize, a: &[f64], b: &[f64]) -> f64 {
+    let mut d2 = 0.0;
+    for j in blocks.range(i) {
+        let d = a[j] - b[j];
+        d2 += d * d;
+    }
+    d2.sqrt()
+}
+
+/// Select-and-merge for the full-vector families: error bounds from the
+/// trial distance, the strategy's pick, then the selected blocks replace
+/// their `x` entries. Returns the number of blocks that moved and leaves
+/// `M^k` in `state.last_ebound`. With no strategy the whole trial is
+/// accepted (the classical full-vector update).
+fn merge_trial(
+    problem: &dyn Problem,
+    strategy: &mut Option<Box<dyn SelectionStrategy>>,
+    scan: Candidates,
+    cand: &[usize],
+    sel: &mut Vec<usize>,
+    e: &mut [f64],
+    trial: &[f64],
+    x: &mut [f64],
+    state: &mut RunState,
+) -> usize {
+    let blocks = problem.blocks();
+    let nb = blocks.n_blocks();
+    let mut active = 0usize;
+    match strategy.as_mut() {
+        None => {
+            for i in 0..nb {
+                let mut any = false;
+                for j in blocks.range(i) {
+                    if trial[j] != x[j] {
+                        any = true;
+                    }
+                    x[j] = trial[j];
+                }
+                if any {
+                    active += 1;
+                }
+            }
+        }
+        Some(strat) => {
+            match scan {
+                Candidates::All => {
+                    for i in 0..nb {
+                        e[i] = block_dist(blocks, i, trial, x);
+                    }
+                }
+                Candidates::Subset => {
+                    for &i in cand {
+                        e[i] = block_dist(blocks, i, trial, x);
+                    }
+                }
+            }
+            let m_k = match scan {
+                Candidates::All => e.iter().fold(0.0f64, |a, &b| a.max(b)),
+                Candidates::Subset => cand.iter().fold(0.0f64, |a, &i| a.max(e[i])),
+            };
+            match scan {
+                Candidates::All => strat.select(e, m_k, &[], sel),
+                Candidates::Subset => strat.select(e, m_k, cand, sel),
+            }
+            state.last_ebound = m_k;
+            for &i in sel.iter() {
+                let mut any = false;
+                for j in blocks.range(i) {
+                    if trial[j] != x[j] {
+                        any = true;
+                    }
+                    x[j] = trial[j];
+                }
+                if any {
+                    active += 1;
+                }
+            }
+        }
+    }
+    active
+}
+
+/// The engine loop. See the module docs for the phase structure; every
+/// solver family is a branch of the phase dispatch, sharing the loop,
+/// the workspace, the controllers, and the accounting tail.
+fn run(
+    problem: &dyn Problem,
+    x0: &[f64],
+    spec: &SolverSpec,
+    pool: &WorkerPool,
+    mut backend: ScanBackend<'_>,
+) -> Result<SolveReport> {
+    let n = problem.n();
+    assert_eq!(x0.len(), n, "x0 dimension mismatch");
+    let blocks = problem.blocks();
+    let nb = blocks.n_blocks();
+    let common = &spec.common;
+    let p_cores = common.cores.max(1);
+
+    if let ScanBackend::Engine(engine) = &backend {
+        assert_eq!(
+            engine.shape(),
+            (problem.aux_len(), n),
+            "engine/problem shape mismatch"
+        );
+    }
+
+    // ---- the one preallocated workspace: the loop allocates nothing ----
+    let Workspace {
+        mut scratch,
+        mut zhat,
+        mut e,
+        mut cand,
+        mut sel,
+        mut aux_save,
+        mut x_old,
+        mut delta,
+        mut dir_aux,
+        mut x_trial,
+        mut aux_trial,
+        mut dx,
+        mut moved,
+        mut max_partials,
+        mut obj_partials,
+        mut aux_local,
+        mut z_buf,
+        mut order,
+        mut grad,
+        mut grad_prev,
+        mut x_prev,
+        mut y,
+        mut step_buf,
+        mut trial,
+        mut v_hist,
+        mut s,
+        mut lam,
+        mut v_vec,
+        br_chunks,
+        prl_chunks,
+        aux_chunks,
+        e_chunks,
+        n_chunks,
+        total_br_flops,
+    } = Workspace::new(problem, spec);
+
+    let mut x = x0.to_vec();
+    let mut aux = vec![0.0; problem.aux_len()];
+    problem.init_aux(&x, &mut aux);
+
+    // per-solve selection strategy (stateful: rng stream, cyclic cursor)
+    let mut strategy: Option<Box<dyn SelectionStrategy>> =
+        spec.selection.as_ref().map(|sp| sp.build(problem));
+
+    // τ: adaptive controller for the coordinator families, pinned value
+    // for GRock (τ = 0) and CDM (tiny well-posedness damping)
+    let uses_tau_ctl = matches!(
+        (&spec.direction, &spec.merge),
+        (DirectionRule::BestResponse { tau0: None }, _)
+            | (DirectionRule::SweepFresh, MergeRule::GaussJacobi { .. })
+    );
+    let mut tau_ctl = if uses_tau_ctl {
+        let topts = common
+            .tau
+            .unwrap_or_else(|| TauOptions::paper(problem.tau_init(), problem.tau_min()));
+        Some(TauController::new(topts))
+    } else {
+        None
+    };
+    let fixed_tau = match &spec.direction {
+        DirectionRule::BestResponse { tau0: Some(t) } => *t,
+        DirectionRule::SweepFresh if matches!(spec.merge, MergeRule::Sweep { .. }) => {
+            1e-12 * problem.tau_init().max(1.0) + problem.tau_min()
+        }
+        _ => 0.0,
+    };
+
+    let mut gamma = common.stepsize.initial();
+    let mut inexact_rng = spec.inexact.map(|ix| Xoshiro256pp::seed_from_u64(ix.seed));
+    let mut sweep_rng = Xoshiro256pp::seed_from_u64(0xCD);
+
+    // Gauss-Jacobi processor layout
+    let (p_procs, assignment) = match spec.merge {
+        MergeRule::GaussJacobi { processors } => {
+            let p = if processors == 0 { common.cores.max(1) } else { processors };
+            (p, Some(ProcessorAssignment::contiguous(nb, p)))
+        }
+        _ => (0, None),
+    };
+    debug_assert_eq!(aux_local.len(), p_procs);
+
+    // prox-gradient accelerator state (FISTA L + momentum, SpaRSA BB α)
+    let is_prox = matches!(spec.direction, DirectionRule::ProxGradient { .. });
+    let bt_eta = 1.5f64;
+    let mut lip = if is_prox { problem.lipschitz().max(1e-12) } else { 0.0 };
+    let mut alpha = if is_prox { problem.lipschitz().max(1.0) } else { 0.0 };
+    let mut t_momentum = 1.0f64;
+
+    // ADMM penalty/linearization from the data scale (d_i = ‖A_i‖² via
+    // the per-block curvature 2‖A_i‖²)
+    let (admm_rho, admm_eta) = match &spec.direction {
+        DirectionRule::AdmmSplit { rho, tau } => {
+            let mean_d =
+                (0..nb).map(|i| problem.block_lipschitz(i) / 2.0).sum::<f64>() / nb.max(1) as f64;
+            let rho_v = if *rho > 0.0 { *rho } else { 1.0 / mean_d.max(1e-12) };
+            let lmax_ata = problem.lipschitz() / 2.0;
+            (rho_v, 1.05 * rho_v * lmax_ata + *tau)
+        }
+        _ => (0.0, 0.0),
+    };
+
+    let mut state = RunState::new(problem, common);
+    let mut v = match spec.merge {
+        // CDM reports through the chunked ordered objective
+        MergeRule::Sweep { .. } => {
+            parallel::par_v_val(pool, problem, &x, &aux, &aux_chunks, &mut obj_partials)
+        }
+        _ => problem.v_val(&x, &aux),
+    };
+    if let Some(ctl) = tau_ctl.as_mut() {
+        ctl.baseline(v);
+    }
+    state.record(0, &x, &aux, v, 0);
+
+    // family-specific pre-iteration work, charged like the paper notes
+    match &spec.direction {
+        DirectionRule::ProxGradient { accel } => {
+            match accel {
+                Accel::Nesterov => {
+                    // backtracking init: L estimate ≈ 30 power iterations × 2 matvecs
+                    state.charge(IterCost::balanced(
+                        60.0 * problem.flops_grad_full() / 2.0,
+                        p_cores,
+                        problem.aux_len() as f64,
+                        1.0,
+                    ));
+                }
+                Accel::BarzilaiBorwein { .. } => {
+                    problem.grad_full(&x, &aux, &mut grad);
+                    v_hist.push(v);
+                }
+            }
+            x_prev.copy_from_slice(&x);
+            y.copy_from_slice(&x);
+        }
+        DirectionRule::AdmmSplit { .. } => {
+            // residual-form guard: the splitting step assumes
+            // F(x) = ‖aux‖² with aux = Ax − b (LASSO/group-LASSO
+            // consensus form). Probe at a perturbed point so problems
+            // with non-residual objective terms (logistic margins, the
+            // −c̄‖x‖² of the nonconvex QP — which vanishes at x0 = 0)
+            // cannot slip through and silently produce garbage.
+            {
+                let mut xp = x.clone();
+                if !xp.is_empty() {
+                    xp[0] += 0.5;
+                }
+                let mut auxp = vec![0.0; problem.aux_len()];
+                problem.init_aux(&xp, &mut auxp);
+                let f = problem.f_val(&xp, &auxp);
+                let ssq: f64 = auxp.iter().map(|r| r * r).sum();
+                assert!(
+                    (f - ssq).abs() <= 1e-8 * ssq.abs().max(1.0),
+                    "AdmmSplit requires a residual-form problem \
+                     (F = ‖Ax − b‖², e.g. kind = \"lasso\"); \
+                     F(x) != ‖aux‖² on this problem"
+                );
+            }
+            // setup: column norms + one matvec (the "nontrivial
+            // initialization" of the paper's ADMM curves)
+            state.charge(IterCost::balanced(
+                problem.flops_grad_full(),
+                p_cores,
+                problem.aux_len() as f64,
+                1.0,
+            ));
+        }
+        _ => {}
+    }
+
+    let mut stop = StopReason::MaxIters;
+    let mut iters = 0usize;
+
+    for k in 0..common.max_iters {
+        iters = k + 1;
+        let tau = match tau_ctl.as_ref() {
+            Some(ctl) => ctl.tau(),
+            None => fixed_tau,
+        };
+        let active: usize;
+        let mut extra_stop: Option<StopReason> = None;
+
+        match &spec.merge {
+            // ============ Algorithm 1 (FLEXA) / GRock: Jacobi merge ============
+            MergeRule::Jacobi { full_step } => {
+                let full_step = *full_step;
+                let strat = strategy
+                    .as_mut()
+                    .expect("Jacobi merge requires a selection strategy");
+
+                // ---- phase 1: strategy propose + scan over C^k (S.3) ----
+                let scan = strat.propose(k, nb, &mut cand);
+                let br_flops: f64 = match &mut backend {
+                    ScanBackend::Native => {
+                        parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
+                        match scan {
+                            Candidates::All => parallel::par_best_responses(
+                                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e,
+                                &br_chunks,
+                            ),
+                            Candidates::Subset => parallel::par_best_responses_subset(
+                                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
+                            ),
+                        }
+                        match scan {
+                            Candidates::All => total_br_flops,
+                            Candidates::Subset => {
+                                cand.iter().map(|&i| problem.flops_best_response(i)).sum()
+                            }
+                        }
+                    }
+                    ScanBackend::Engine(engine) => {
+                        // fused pass: the engine computes every block
+                        engine.step(&x, tau, &mut zhat, &mut e)?;
+                        0.0
+                    }
+                };
+
+                // inexact solves: bounded perturbation ε_i^k = eps0·γ^k
+                if let (Some(ix), Some(rng)) = (&spec.inexact, inexact_rng.as_mut()) {
+                    let eps_k = ix.eps0 * gamma;
+                    let mut perturb = |i: usize, zhat: &mut [f64], e: &mut [f64]| {
+                        let mut d2 = 0.0;
+                        for j in blocks.range(i) {
+                            zhat[j] += rng.uniform(-1.0, 1.0) * eps_k;
+                            let d = zhat[j] - x[j];
+                            d2 += d * d;
+                        }
+                        e[i] = d2.sqrt(); // keep E consistent with the perturbed ẑ
+                    };
+                    match scan {
+                        Candidates::All => {
+                            for i in 0..nb {
+                                perturb(i, &mut zhat, &mut e);
+                            }
+                        }
+                        Candidates::Subset => {
+                            for &i in &cand {
+                                perturb(i, &mut zhat, &mut e);
+                            }
+                        }
+                    }
+                }
+
+                // ---- phase 2: selection (S.2) ----
+                let m_k = match scan {
+                    Candidates::All => {
+                        parallel::par_max(pool, &e, &e_chunks, &mut max_partials)
+                    }
+                    Candidates::Subset => cand.iter().fold(0.0f64, |a, &i| a.max(e[i])),
+                };
+                match scan {
+                    Candidates::All => strat.select(&e, m_k, &[], &mut sel),
+                    Candidates::Subset => strat.select(&e, m_k, &cand, &mut sel),
+                }
+                state.scanned += match (&backend, scan) {
+                    // the fused engine pass scans every block regardless of C^k
+                    (ScanBackend::Engine(_), _) => nb,
+                    (_, Candidates::All) => nb,
+                    (_, Candidates::Subset) => cand.len(),
+                };
+                state.last_ebound = m_k;
+
+                // ---- phase 3a: Armijo line search (Remark 4) ----
+                let mut armijo_trials = 0usize;
+                if !full_step {
+                    if let StepRule::Armijo { alpha: slope, beta, max_backtracks } =
+                        common.stepsize
+                    {
+                        dir_aux.fill(0.0);
+                        let mut dir_sq = 0.0;
+                        for &i in &sel {
+                            let r = blocks.range(i);
+                            for (t, j) in r.clone().enumerate() {
+                                delta[t] = zhat[j] - x[j];
+                                dir_sq += delta[t] * delta[t];
+                            }
+                            problem.apply_block_delta(i, &delta[..r.len()], &mut dir_aux);
+                        }
+                        let mut g_try = 1.0;
+                        gamma = g_try;
+                        for _ in 0..=max_backtracks {
+                            armijo_trials += 1;
+                            // trial: x + γ(ẑ − x) on S^k; aux is affine in γ
+                            x_trial.copy_from_slice(&x);
+                            for &i in &sel {
+                                for j in blocks.range(i) {
+                                    x_trial[j] = x[j] + g_try * (zhat[j] - x[j]);
+                                }
+                            }
+                            aux_trial.copy_from_slice(&aux);
+                            vector::axpy(g_try, &dir_aux, &mut aux_trial);
+                            let v_trial = problem.v_val(&x_trial, &aux_trial);
+                            if armijo_accept(v_trial, v, slope, g_try, dir_sq) {
+                                gamma = g_try;
+                                break;
+                            }
+                            g_try *= beta;
+                            gamma = g_try;
+                        }
+                    }
+                }
+
+                // ---- phase 3b: memory step (S.4), saving τ-rollback state ----
+                if tau_ctl.is_some() {
+                    aux_save.copy_from_slice(&aux);
+                    x_old.copy_from_slice(&x);
+                }
+                let gamma_eff = if full_step { 1.0 } else { gamma };
+                let mut act = 0usize;
+                let mut update_flops = 0.0;
+                match &backend {
+                    ScanBackend::Native => {
+                        // γ-scaled deltas + x update sequential (O(n), cheap);
+                        // the |S^k| aux-column axpys fan out over fixed aux-row
+                        // chunks, each chunk applying the selected blocks in
+                        // order — bitwise-identical to the sequential path
+                        for &i in &sel {
+                            let r = blocks.range(i);
+                            let mut any = false;
+                            for j in r.clone() {
+                                let d = gamma_eff * (zhat[j] - x[j]);
+                                dx[j] = d;
+                                if d != 0.0 {
+                                    any = true;
+                                }
+                            }
+                            moved[i] = any;
+                            if any {
+                                for j in r {
+                                    x[j] += dx[j];
+                                }
+                                update_flops += problem.flops_aux_update(i);
+                                act += 1;
+                            }
+                        }
+                        parallel::for_each_row_chunk(
+                            pool,
+                            &mut aux,
+                            &aux_chunks,
+                            &|_c, rows, aux_rows| {
+                                for &i in &sel {
+                                    if moved[i] {
+                                        let r = blocks.range(i);
+                                        problem.apply_block_delta_rows(
+                                            i,
+                                            &dx[r],
+                                            aux_rows,
+                                            rows.clone(),
+                                        );
+                                    }
+                                }
+                            },
+                        );
+                    }
+                    ScanBackend::Engine(_) => {
+                        for &i in &sel {
+                            let mut any = false;
+                            for j in blocks.range(i) {
+                                let d = gamma_eff * (zhat[j] - x[j]);
+                                if d != 0.0 {
+                                    x[j] += d;
+                                    any = true;
+                                }
+                            }
+                            if any {
+                                act += 1;
+                            }
+                        }
+                        // the engine owns the compute; aux only tracks the
+                        // iterate for the τ controller and instrumentation
+                        problem.init_aux(&x, &mut aux);
+                    }
+                }
+
+                let v_new = problem.v_val(&x, &aux);
+
+                // ---- phase 4: τ controller (§VI-A) + γ schedule ----
+                match tau_ctl.as_mut() {
+                    Some(ctl) => match ctl.observe(v_new, state.step_metric()) {
+                        TauDecision::Accept => {
+                            v = v_new;
+                        }
+                        TauDecision::RejectAndRetry => {
+                            // paper: iteration discarded, x^{k+1} = x^k
+                            x.copy_from_slice(&x_old);
+                            aux.copy_from_slice(&aux_save);
+                            state.discarded += 1;
+                            ctl.baseline(v);
+                            act = 0;
+                        }
+                    },
+                    None => {
+                        v = v_new;
+                        // GRock can blow up on correlated columns; report
+                        // honestly instead of spinning on NaNs
+                        if full_step && !v.is_finite() {
+                            extra_stop = Some(StopReason::Stalled);
+                        }
+                    }
+                }
+                if !full_step {
+                    // γ^k is iteration-indexed (Theorem 1): advance on
+                    // discards too
+                    gamma = common.stepsize.next(gamma, state.step_metric());
+                }
+
+                // ---- phase 5: cost accounting ----
+                let cost = match &backend {
+                    ScanBackend::Native => IterCost {
+                        flops_total: problem.flops_prelude()
+                            + br_flops
+                            + update_flops
+                            + problem.flops_obj(),
+                        flops_max_worker: (problem.flops_prelude() + br_flops + update_flops)
+                            / p_cores as f64
+                            + problem.flops_obj(),
+                        reduce_words: problem.aux_len() as f64,
+                        reduce_rounds: 1.0 + armijo_trials as f64,
+                    },
+                    ScanBackend::Engine(_) => IterCost::balanced(
+                        // fused matvec + rmatvec + threshold
+                        2.0 * problem.flops_grad_full() + 8.0 * n as f64,
+                        p_cores,
+                        problem.aux_len() as f64,
+                        1.0,
+                    ),
+                };
+                state.charge(cost);
+                active = act;
+            }
+
+            // ============ Algorithms 2 & 3: Gauss-Jacobi merge ============
+            MergeRule::GaussJacobi { .. } => {
+                let assignment = assignment.as_ref().expect("GJ merge has an assignment");
+
+                // ---- phase 1/2: Algorithm-3 selection prepass ----
+                let mut prepass_flops = 0.0;
+                if let Some(strat) = strategy.as_mut() {
+                    let scan = strat.propose(k, nb, &mut cand);
+                    parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
+                    let m_k = match scan {
+                        Candidates::All => {
+                            parallel::par_best_responses(
+                                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e,
+                                &br_chunks,
+                            );
+                            state.scanned += nb;
+                            prepass_flops = problem.flops_prelude() + total_br_flops;
+                            parallel::par_max(pool, &e, &e_chunks, &mut max_partials)
+                        }
+                        Candidates::Subset => {
+                            parallel::par_best_responses_subset(
+                                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
+                            );
+                            state.scanned += cand.len();
+                            prepass_flops = problem.flops_prelude()
+                                + cand.iter().map(|&i| problem.flops_best_response(i)).sum::<f64>();
+                            cand.iter().fold(0.0f64, |a, &i| a.max(e[i]))
+                        }
+                    };
+                    match scan {
+                        Candidates::All => strat.select(&e, m_k, &[], &mut sel),
+                        Candidates::Subset => strat.select(&e, m_k, &cand, &mut sel),
+                    }
+                    state.last_ebound = m_k;
+                } else {
+                    sel.clear();
+                    sel.extend(0..nb);
+                }
+
+                // ---- phase 3: Gauss-Seidel sweeps, one per processor ----
+                // Every processor starts from aux^k; its private copy
+                // accumulates only its own γ-scaled deltas.
+                aux_save.copy_from_slice(&aux);
+                x_old.copy_from_slice(&x);
+                let mut act = 0usize;
+                let mut max_worker_flops: f64 = 0.0;
+                let mut total_flops = prepass_flops;
+                let mut ebound_gs = 0.0f64;
+                let selective = strategy.is_some();
+
+                for p in 0..p_procs {
+                    let group = assignment.group(p);
+                    let local = &mut aux_local[p];
+                    local.copy_from_slice(&aux);
+                    let mut worker_flops = problem.aux_len() as f64; // aux copy cost
+                    for &i in group {
+                        if selective && !sel_contains(&sel, i) {
+                            continue;
+                        }
+                        let r = blocks.range(i);
+                        let ei = problem.best_response(i, &x, local, tau, &mut z_buf[..r.len()]);
+                        ebound_gs = ebound_gs.max(ei);
+                        worker_flops += problem.flops_best_response_fresh(i);
+                        state.scanned += 1; // fresh-state scan inside the sweep
+                        let mut any = false;
+                        for (t, j) in r.clone().enumerate() {
+                            delta[t] = gamma * (z_buf[t] - x[j]);
+                            if delta[t] != 0.0 {
+                                any = true;
+                            }
+                        }
+                        if any {
+                            for (t, j) in r.clone().enumerate() {
+                                x[j] += delta[t];
+                            }
+                            problem.apply_block_delta(i, &delta[..r.len()], local);
+                            worker_flops += problem.flops_aux_update(i);
+                            act += 1;
+                        }
+                    }
+                    max_worker_flops = max_worker_flops.max(worker_flops);
+                    total_flops += worker_flops;
+                }
+                if !selective {
+                    state.last_ebound = ebound_gs;
+                }
+
+                // merge: aux^{k+1} = aux^k + Σ_p (aux_p − aux^k), row-chunked
+                // over the pool; per element the processor deltas add in
+                // p-order, exactly like the sequential double loop
+                parallel::for_each_row_chunk(pool, &mut aux, &aux_chunks, &|_c, rows, aux_rows| {
+                    for local in aux_local.iter() {
+                        for (t, j) in rows.clone().enumerate() {
+                            aux_rows[t] += local[j] - aux_save[j];
+                        }
+                    }
+                });
+                total_flops += (2 * p_procs * aux.len()) as f64;
+
+                let v_new = problem.v_val(&x, &aux);
+
+                // ---- phase 4: τ controller + γ schedule ----
+                let ctl = tau_ctl.as_mut().expect("GJ uses the τ controller");
+                match ctl.observe(v_new, state.step_metric()) {
+                    TauDecision::Accept => {
+                        v = v_new;
+                    }
+                    TauDecision::RejectAndRetry => {
+                        x.copy_from_slice(&x_old);
+                        aux.copy_from_slice(&aux_save);
+                        state.discarded += 1;
+                        ctl.baseline(v);
+                        act = 0;
+                    }
+                }
+                gamma = common.stepsize.next(gamma, state.step_metric());
+
+                // ---- phase 5: cost — critical path = slowest processor ----
+                state.charge(IterCost {
+                    flops_total: total_flops + problem.flops_obj(),
+                    flops_max_worker: prepass_flops / p_procs as f64
+                        + max_worker_flops
+                        + problem.flops_obj(),
+                    reduce_words: problem.aux_len() as f64,
+                    reduce_rounds: if selective { 2.0 } else { 1.0 },
+                });
+                active = act;
+            }
+
+            // ============ CDM: strictly sequential Gauss-Seidel sweep ============
+            MergeRule::Sweep { shuffle } => {
+                let shuffle = *shuffle;
+                let strat = strategy
+                    .as_mut()
+                    .expect("sweep merge requires a selection strategy");
+                // the strategy's candidate phase names this sweep's blocks;
+                // the persistent `order` buffer keeps classical CDM's
+                // compose-across-iterations shuffle for the full-sweep specs
+                match strat.propose(k, nb, &mut cand) {
+                    Candidates::All => {
+                        if order.len() != nb {
+                            order.clear();
+                            order.extend(0..nb);
+                        }
+                    }
+                    Candidates::Subset => {
+                        order.clear();
+                        order.extend_from_slice(&cand);
+                    }
+                }
+                if shuffle {
+                    sweep_rng.shuffle(&mut order);
+                }
+                let mut act = 0usize;
+                let mut sweep_flops = 0.0;
+                let mut max_e = 0.0f64;
+                for &i in &order {
+                    let r = blocks.range(i);
+                    let ei = problem.best_response(i, &x, &aux, tau, &mut z_buf[..r.len()]);
+                    max_e = max_e.max(ei);
+                    sweep_flops += problem.flops_best_response_fresh(i);
+                    state.scanned += 1;
+                    let mut any = false;
+                    for (t, j) in r.clone().enumerate() {
+                        delta[t] = z_buf[t] - x[j]; // full step
+                        if delta[t] != 0.0 {
+                            any = true;
+                        }
+                    }
+                    if any {
+                        for (t, j) in r.clone().enumerate() {
+                            x[j] += delta[t];
+                        }
+                        problem.apply_block_delta(i, &delta[..r.len()], &mut aux);
+                        sweep_flops += problem.flops_aux_update(i);
+                        act += 1;
+                    }
+                }
+                state.last_ebound = max_e;
+                v = parallel::par_v_val(pool, problem, &x, &aux, &aux_chunks, &mut obj_partials);
+
+                // strictly sequential: the whole sweep is the critical path
+                state.charge(IterCost::sequential(sweep_flops + problem.flops_obj()));
+                active = act;
+            }
+
+            // ============ FISTA / SpaRSA / ADMM: full-vector merge ============
+            MergeRule::FullVector => match &spec.direction {
+                DirectionRule::ProxGradient { accel } => {
+                    let selective = strategy.is_some();
+                    // candidate sketch (which blocks may move this iteration)
+                    let scan = match strategy.as_mut() {
+                        Some(strat) => strat.propose(k, nb, &mut cand),
+                        None => Candidates::All,
+                    };
+                    if selective {
+                        // momentum is unsound under partial updates: fall
+                        // back to plain proximal steps from x
+                        y.copy_from_slice(&x);
+                    }
+
+                    let mut trials = 0usize;
+                    let mut moved_sq = 0.0f64;
+                    match accel {
+                        Accel::Nesterov => {
+                            problem.init_aux(&y, &mut aux_trial);
+                            let f_y = problem.f_val(&y, &aux_trial);
+                            problem.grad_full(&y, &aux_trial, &mut grad);
+                            // backtracking on L
+                            loop {
+                                trials += 1;
+                                parallel::for_each_row_chunk(
+                                    pool,
+                                    &mut step_buf,
+                                    &n_chunks,
+                                    &|_c, rows, out| {
+                                        for (t, i) in rows.clone().enumerate() {
+                                            out[t] = y[i] - grad[i] / lip;
+                                        }
+                                    },
+                                );
+                                problem.prox_full(&step_buf, 1.0 / lip, &mut trial);
+                                problem.init_aux(&trial, &mut aux_trial);
+                                let f_trial = problem.f_val(&trial, &aux_trial);
+                                // quadratic upper bound test, ordered chunked sums
+                                let (lin, sq) = parallel::par_sum_pairs(
+                                    pool,
+                                    &n_chunks,
+                                    &mut max_partials,
+                                    &mut obj_partials,
+                                    &|rows| {
+                                        let (mut lin, mut sq) = (0.0, 0.0);
+                                        for i in rows {
+                                            let d = trial[i] - y[i];
+                                            lin += grad[i] * d;
+                                            sq += d * d;
+                                        }
+                                        (lin, sq)
+                                    },
+                                );
+                                moved_sq = sq;
+                                if f_trial <= f_y + lin + 0.5 * lip * sq + 1e-12 || trials > 60 {
+                                    break;
+                                }
+                                lip *= bt_eta;
+                            }
+                        }
+                        Accel::BarzilaiBorwein { sigma, alpha_min, alpha_max, eta, .. } => {
+                            let (sigma, alpha_min, alpha_max, eta) =
+                                (*sigma, *alpha_min, *alpha_max, *eta);
+                            // BB curvature from the last accepted pair
+                            if k > 0 {
+                                let (num, den) = parallel::par_sum_pairs(
+                                    pool,
+                                    &n_chunks,
+                                    &mut max_partials,
+                                    &mut obj_partials,
+                                    &|rows| {
+                                        let (mut num, mut den) = (0.0, 0.0);
+                                        for i in rows {
+                                            let dxi = x[i] - x_prev[i];
+                                            let dgi = grad[i] - grad_prev[i];
+                                            num += dxi * dgi;
+                                            den += dxi * dxi;
+                                        }
+                                        (num, den)
+                                    },
+                                );
+                                if den > 0.0 && num > 0.0 {
+                                    alpha = (num / den).clamp(alpha_min, alpha_max);
+                                } else {
+                                    // negative curvature (nonconvex F): fall
+                                    // back to the global Lipschitz bound
+                                    alpha = problem.lipschitz().clamp(alpha_min, alpha_max);
+                                }
+                            }
+                            let v_ref =
+                                v_hist.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                            // BB has no extrapolation: the trial steps from x
+                            loop {
+                                trials += 1;
+                                parallel::for_each_row_chunk(
+                                    pool,
+                                    &mut step_buf,
+                                    &n_chunks,
+                                    &|_c, rows, out| {
+                                        for (t, i) in rows.clone().enumerate() {
+                                            out[t] = x[i] - grad[i] / alpha;
+                                        }
+                                    },
+                                );
+                                problem.prox_full(&step_buf, 1.0 / alpha, &mut trial);
+                                problem.init_aux(&trial, &mut aux_trial);
+                                let v_trial = problem.v_val(&trial, &aux_trial);
+                                let (d2, _) = parallel::par_sum_pairs(
+                                    pool,
+                                    &n_chunks,
+                                    &mut max_partials,
+                                    &mut obj_partials,
+                                    &|rows| {
+                                        let mut d2 = 0.0;
+                                        for i in rows {
+                                            let d = trial[i] - x[i];
+                                            d2 += d * d;
+                                        }
+                                        (d2, 0.0)
+                                    },
+                                );
+                                moved_sq = d2;
+                                if v_trial <= v_ref - 0.5 * sigma * alpha * d2 || trials > 60 {
+                                    break;
+                                }
+                                alpha = (alpha * eta).min(alpha_max);
+                            }
+                        }
+                    }
+
+                    // ---- merge (full accept, or selected blocks only) ----
+                    x_prev.copy_from_slice(&x);
+                    if matches!(accel, Accel::BarzilaiBorwein { .. }) {
+                        grad_prev.copy_from_slice(&grad);
+                    }
+                    let act = merge_trial(
+                        problem,
+                        &mut strategy,
+                        scan,
+                        &cand,
+                        &mut sel,
+                        &mut e,
+                        &trial,
+                        &mut x,
+                        &mut state,
+                    );
+                    if selective {
+                        // partial update: the trial aux no longer matches x
+                        problem.init_aux(&x, &mut aux);
+                    } else {
+                        aux.copy_from_slice(&aux_trial);
+                    }
+                    v = problem.v_val(&x, &aux);
+
+                    // accelerator state advance
+                    match accel {
+                        Accel::Nesterov => {
+                            if !selective {
+                                let t_next =
+                                    0.5 * (1.0 + (1.0 + 4.0 * t_momentum * t_momentum).sqrt());
+                                let beta = (t_momentum - 1.0) / t_next;
+                                parallel::for_each_row_chunk(
+                                    pool,
+                                    &mut y,
+                                    &n_chunks,
+                                    &|_c, rows, out| {
+                                        for (t, i) in rows.clone().enumerate() {
+                                            out[t] = x[i] + beta * (x[i] - x_prev[i]);
+                                        }
+                                    },
+                                );
+                                t_momentum = t_next;
+                            }
+                        }
+                        Accel::BarzilaiBorwein { memory, .. } => {
+                            v_hist.push(v);
+                            if v_hist.len() > *memory {
+                                v_hist.remove(0);
+                            }
+                            problem.grad_full(&x, &aux, &mut grad);
+                            // stalled: the prox step no longer moves
+                            if moved_sq.sqrt() < 1e-14 && k > 3 {
+                                extra_stop = Some(StopReason::Stalled);
+                            }
+                        }
+                    }
+
+                    state.scanned += match scan {
+                        // the gradient is inherently full-vector; sketches
+                        // restrict the update set, not the scan
+                        Candidates::All => nb,
+                        Candidates::Subset => cand.len(),
+                    };
+
+                    // ---- phase 5: cost accounting ----
+                    let per_matvec = problem.flops_grad_full() / 2.0;
+                    let cost = match accel {
+                        Accel::Nesterov => IterCost::balanced(
+                            problem.flops_grad_full()
+                                + per_matvec
+                                + trials as f64 * (per_matvec + problem.flops_obj())
+                                + 4.0 * n as f64,
+                            p_cores,
+                            problem.aux_len() as f64,
+                            1.0 + trials as f64,
+                        ),
+                        Accel::BarzilaiBorwein { .. } => IterCost::balanced(
+                            problem.flops_grad_full()
+                                + trials as f64
+                                    * (per_matvec + problem.flops_obj() + 4.0 * n as f64)
+                                + 6.0 * n as f64,
+                            p_cores,
+                            problem.aux_len() as f64,
+                            1.0 + trials as f64,
+                        ),
+                    };
+                    state.charge(cost);
+                    active = act;
+                }
+
+                DirectionRule::AdmmSplit { .. } => {
+                    // ---- splitting step on the residual-form aux (Ax − b) ----
+                    problem.init_aux(&x, &mut aux);
+                    parallel::for_each_row_chunk(pool, &mut v_vec, &aux_chunks, &|_c, rows, out| {
+                        for (t, j) in rows.clone().enumerate() {
+                            out[t] = aux[j] - s[j] + lam[j] / admm_rho;
+                        }
+                    });
+                    // correction Aᵀv (the allreduced quantity): grad_full
+                    // on the combined residual yields 2Aᵀv
+                    problem.grad_full(&x, &v_vec, &mut grad);
+
+                    let scan = match strategy.as_mut() {
+                        Some(strat) => strat.propose(k, nb, &mut cand),
+                        None => Candidates::All,
+                    };
+                    // prox-linear x-update: prox_{G/η}(x − ρAᵀv/η)
+                    parallel::for_each_row_chunk(pool, &mut step_buf, &n_chunks, &|_c, rows, out| {
+                        for (t, i) in rows.clone().enumerate() {
+                            out[t] = x[i] - admm_rho * grad[i] / (2.0 * admm_eta);
+                        }
+                    });
+                    problem.prox_full(&step_buf, 1.0 / admm_eta, &mut trial);
+                    let act = merge_trial(
+                        problem,
+                        &mut strategy,
+                        scan,
+                        &cand,
+                        &mut sel,
+                        &mut e,
+                        &trial,
+                        &mut x,
+                        &mut state,
+                    );
+
+                    // slack + multiplier from the refreshed residual w = Ax⁺ − b
+                    problem.init_aux(&x, &mut aux);
+                    parallel::for_each_row_chunk(pool, &mut s, &aux_chunks, &|_c, rows, out| {
+                        for (t, j) in rows.clone().enumerate() {
+                            out[t] = admm_rho * (aux[j] + lam[j] / admm_rho) / (2.0 + admm_rho);
+                        }
+                    });
+                    parallel::for_each_row_chunk(pool, &mut lam, &aux_chunks, &|_c, rows, out| {
+                        for (t, j) in rows.clone().enumerate() {
+                            out[t] += admm_rho * (aux[j] - s[j]);
+                        }
+                    });
+
+                    // objective at the x iterate (the quantity the paper plots)
+                    v = parallel::par_v_val(
+                        pool, problem, &x, &aux, &aux_chunks, &mut obj_partials,
+                    );
+                    state.scanned += match scan {
+                        Candidates::All => nb,
+                        Candidates::Subset => cand.len(),
+                    };
+
+                    let m_len = problem.aux_len() as f64;
+                    state.charge(IterCost::balanced(
+                        3.0 * problem.flops_grad_full() + 12.0 * m_len + 6.0 * n as f64,
+                        p_cores,
+                        m_len,
+                        2.0,
+                    ));
+                    active = act;
+                }
+
+                other => unreachable!("full-vector merge with direction {other:?}"),
+            },
+        }
+
+        state.record(k + 1, &x, &aux, v, active);
+        if let Some(r) = extra_stop {
+            stop = r;
+            break;
+        }
+        if let Some(reason) = state.stop_check(k) {
+            stop = reason;
+            break;
+        }
+    }
+
+    Ok(state.finish(x, &aux, v, iters, stop))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CommonOptions, SelectionSpec, TermMetric};
+    use crate::datagen::nesterov_lasso;
+    use crate::problems::LassoProblem;
+
+    fn common(name: &str) -> CommonOptions {
+        CommonOptions {
+            max_iters: 5000,
+            tol: 1e-6,
+            term: TermMetric::RelErr,
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn every_family_converges_on_small_lasso() {
+        let p = LassoProblem::from_instance(nesterov_lasso(300, 80, 0.1, 1.0, 33));
+        let x0 = vec![0.0; p.n()];
+        for name in SolverSpec::NAMES {
+            let mut c = common(name);
+            c.max_iters = 50_000;
+            c.tol = 1e-4;
+            let spec = SolverSpec::from_name(name, c, None, 0.5, 8).unwrap();
+            let r = solve(&p, &x0, &spec);
+            assert!(
+                r.converged(),
+                "{name}: stop={:?} re={}",
+                r.stop,
+                r.final_rel_err
+            );
+        }
+    }
+
+    #[test]
+    fn shared_pool_solves_match_private_pool_solves() {
+        let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
+        let x0 = vec![0.0; p.n()];
+        let mut c = common("pooled");
+        c.threads = 4;
+        c.max_iters = 100;
+        c.tol = 0.0;
+        let spec = SolverSpec::flexa(c, SelectionSpec::sigma(0.5), None);
+        let pool = WorkerPool::new(4);
+        let a = solve_with_pool(&p, &x0, &spec, &pool);
+        let b = solve(&p, &x0, &spec);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.final_obj, b.final_obj);
+    }
+
+    #[test]
+    fn selection_restricts_the_prox_baselines_update_set() {
+        let p = LassoProblem::from_instance(nesterov_lasso(60, 80, 0.1, 1.0, 5));
+        let x0 = vec![0.0; p.n()];
+        let mut c = common("fista-sel");
+        c.max_iters = 40;
+        c.tol = 0.0;
+        let spec = SolverSpec::fista(c).with_selection(SelectionSpec::Random {
+            frac: 0.25,
+            seed: 7,
+        });
+        let r = solve(&p, &x0, &spec);
+        let batch = ((p.n() as f64) * 0.25).ceil() as usize;
+        assert_eq!(r.scanned, r.iters * batch, "sketch accounting");
+        for t in &r.trace.points[1..] {
+            assert!(t.active <= batch, "moved {} > batch {batch}", t.active);
+        }
+    }
+}

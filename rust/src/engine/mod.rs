@@ -1,0 +1,461 @@
+//! The single iteration engine behind every solver: `SolverCore`.
+//!
+//! The paper's point is that fully-parallel Jacobi, sequential
+//! Gauss-Seidel, and "virtually all possibilities in between" are one
+//! scheme — Algorithms 1/2/3 differ only in *which blocks are scanned*,
+//! *how a direction is produced*, *how far to step*, and *how the step is
+//! merged back*. Before this module the repo contradicted that: seven
+//! hand-rolled loops (`flexa`, `gauss_jacobi`, `grock`, `cdm`, `fista`,
+//! `sparsa`, `admm`) each re-implemented the same bookkeeping, and every
+//! new axis (the PR-1 worker pool, the PR-2 selection subsystem) had to be
+//! threaded through all of them.
+//!
+//! `SolverCore` collapses those loops into one engine whose iteration is
+//! composed from pluggable phases:
+//!
+//! * **selection** — a [`SelectionStrategy`](crate::coordinator::strategy)
+//!   (PR 2's trait) names the candidate set `C^k` and the update set
+//!   `S^k`;
+//! * **direction** — a [`DirectionRule`]: Jacobi best responses
+//!   `x̂_i(x^k, τ)` (Algorithm 1 / GRock / the Algorithm-3 prepass),
+//!   fresh-state sweep directions (Algorithm 2 / CDM), a full-vector
+//!   prox-gradient trial (FISTA/SpaRSA), or the Jacobi-proximal ADMM
+//!   splitting step;
+//! * **step** — the [`StepRule`](crate::coordinator::StepRule) γ-schedules
+//!   plus the per-family accelerators ([`Accel`]: Nesterov momentum,
+//!   Barzilai-Borwein spectral steps) and the adaptive
+//!   [τ controller](crate::coordinator::tau);
+//! * **merge** — a [`MergeRule`]: the (S.4) memory step on `S^k`
+//!   (Jacobi), the P-processor Gauss-Jacobi hybrid with private aux
+//!   copies, the sequential Gauss-Seidel sweep, or a full-vector accept.
+//!
+//! All phases execute over one preallocated [`workspace::Workspace`]
+//! through a persistent [`WorkerPool`](crate::parallel::WorkerPool) with
+//! the fixed chunk geometry of [`crate::parallel::partition`], so every
+//! configuration keeps the repo-wide determinism contract: iterates are
+//! bitwise-identical for any `threads ≥ 1` and reproducible per seed.
+//!
+//! The seven public solvers are now thin [`SolverSpec`] configurations of
+//! this engine (see the table in `docs/algorithms.md`); the CLI
+//! string-match, the `[solver]` TOML table, and the runtime
+//! [`StepEngine`](crate::runtime::StepEngine) dispatch all funnel through
+//! the one validated constructor [`SolverSpec::from_name`].
+
+pub mod core;
+pub mod workspace;
+
+pub use self::core::{solve, solve_with_pool, solve_with_step_engine};
+pub use self::workspace::Workspace;
+
+use crate::coordinator::strategy::SelectionSpec;
+use crate::coordinator::{CommonOptions, InexactOptions};
+use crate::solvers::{AdmmOptions, SparsaOptions};
+
+/// How the engine produces a search direction each iteration — the phase
+/// that distinguishes the block-selective coordinator algorithms from the
+/// full-vector baselines.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DirectionRule {
+    /// Jacobi best responses `x̂_i(x^k, τ)` of subproblem (4) over the
+    /// candidate set, fanned out over the worker pool (Algorithm 1, the
+    /// Algorithm-3 prepass, GRock). `tau0 = None` takes τ from the
+    /// adaptive controller (§VI-A); `Some(t)` pins it (GRock: `t = 0`,
+    /// exact block minimization).
+    BestResponse {
+        /// Fixed proximal weight, or `None` for the τ controller.
+        tau0: Option<f64>,
+    },
+    /// No Jacobi prepass: directions are produced *inside* the sweep
+    /// merge, each block's best response using the freshest state
+    /// (Algorithm 2 without selection, CDM).
+    SweepFresh,
+    /// Full-vector proximal-gradient trial `prox_{G/α}(y − ∇F(y)/α)`
+    /// with the chosen accelerator (FISTA, SpaRSA).
+    ProxGradient {
+        /// Which acceleration drives the trial point and step length.
+        accel: Accel,
+    },
+    /// Jacobi-proximal multi-block ADMM splitting step on the LASSO
+    /// consensus form `min c‖x‖₁ + ‖s‖² s.t. Ax − s = b` (Deng, Lai,
+    /// Peng & Yin; reference [41] of the paper).
+    AdmmSplit {
+        /// Penalty ρ (0 = auto from the data scale).
+        rho: f64,
+        /// Extra proximal damping added to the linearization weight η.
+        tau: f64,
+    },
+}
+
+/// Accelerator for the [`DirectionRule::ProxGradient`] trial.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Accel {
+    /// Nesterov extrapolation + backtracked Lipschitz step (FISTA
+    /// [Beck & Teboulle 2009]).
+    Nesterov,
+    /// Barzilai-Borwein spectral step + nonmonotone acceptance (SpaRSA
+    /// [Wright, Nowak & Figueiredo 2009]; paper §VI settings).
+    BarzilaiBorwein {
+        /// Nonmonotone memory M.
+        memory: usize,
+        /// Sufficient-decrease σ.
+        sigma: f64,
+        /// Lower clamp of the BB step.
+        alpha_min: f64,
+        /// Upper clamp of the BB step.
+        alpha_max: f64,
+        /// α growth factor on rejection.
+        eta: f64,
+    },
+}
+
+/// How the engine merges a direction into `x^{k+1}` — the axis spanning
+/// the paper's Jacobi ↔ Gauss-Seidel spectrum.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MergeRule {
+    /// Memory step (S.4) `x^{k+1} = x^k + γ^k(ẑ^k − x^k)` restricted to
+    /// `S^k`, with pool-parallel selective aux axpys (Algorithm 1).
+    /// `full_step` pins γ = 1 and drops the memory (GRock).
+    Jacobi {
+        /// γ = 1, memoryless (GRock); otherwise the γ-schedule applies.
+        full_step: bool,
+    },
+    /// P processors Jacobi-across / Gauss-Seidel-within: each processor
+    /// sweeps its blocks against a private aux copy, then the deltas
+    /// merge — the allreduce of a distributed run (Algorithms 2 & 3).
+    GaussJacobi {
+        /// Processor-group count P (0 = `common.cores`).
+        processors: usize,
+    },
+    /// One strictly sequential Gauss-Seidel sweep applying full exact
+    /// coordinate steps in (optionally shuffled) candidate order (CDM).
+    Sweep {
+        /// Shuffle the sweep order each iteration (seeded, reproducible).
+        shuffle: bool,
+    },
+    /// Replace the iterate with the accepted full-vector trial, or — when
+    /// a selection strategy restricts `S^k` — merge only the selected
+    /// blocks (FISTA, SpaRSA, ADMM).
+    FullVector,
+}
+
+/// A complete, validated solver configuration: the engine's only input
+/// besides the problem and `x0`. The seven classic solvers are the named
+/// constructors below; [`SolverSpec::from_name`] is the single
+/// constructor behind the CLI `solve` dispatch and the `[solver]` TOML
+/// table.
+#[derive(Clone, Debug)]
+pub struct SolverSpec {
+    /// Options shared by every solver (budget, tolerances, step rule,
+    /// simulated cores, worker threads, τ override, run name).
+    pub common: CommonOptions,
+    /// Direction phase.
+    pub direction: DirectionRule,
+    /// Merge phase.
+    pub merge: MergeRule,
+    /// Block-selection strategy; `None` means "all blocks" (no prepass
+    /// for the sweep families, full-vector updates for the baselines).
+    pub selection: Option<SelectionSpec>,
+    /// Inexact-subproblem perturbation (Theorem 1(iv)); FLEXA only.
+    pub inexact: Option<InexactOptions>,
+}
+
+impl SolverSpec {
+    /// Every solver name accepted by [`SolverSpec::from_name`] (the CLI
+    /// `solve` grammar and the config `solvers = "..."` list).
+    pub const NAMES: &'static [&'static str] = &[
+        "flexa",
+        "gj-flexa",
+        "gauss-jacobi",
+        "fista",
+        "sparsa",
+        "grock",
+        "greedy-1bcd",
+        "admm",
+        "cdm",
+    ];
+
+    /// FLEXA (Algorithm 1): Jacobi best responses + memory-step merge
+    /// under any selection strategy.
+    pub fn flexa(
+        common: CommonOptions,
+        selection: SelectionSpec,
+        inexact: Option<InexactOptions>,
+    ) -> Self {
+        Self {
+            common,
+            direction: DirectionRule::BestResponse { tau0: None },
+            merge: MergeRule::Jacobi { full_step: false },
+            selection: Some(selection),
+            inexact,
+        }
+    }
+
+    /// Gauss-Jacobi (Algorithm 2) or GJ-with-Selection (Algorithm 3 when
+    /// `selection` is `Some`). `processors = 0` defaults to
+    /// `common.cores`.
+    pub fn gauss_jacobi(
+        common: CommonOptions,
+        selection: Option<SelectionSpec>,
+        processors: usize,
+    ) -> Self {
+        let direction = if selection.is_some() {
+            DirectionRule::BestResponse { tau0: None }
+        } else {
+            DirectionRule::SweepFresh
+        };
+        Self {
+            common,
+            direction,
+            merge: MergeRule::GaussJacobi { processors },
+            selection,
+            inexact: None,
+        }
+    }
+
+    /// GRock [Peng, Yan & Yin 2013]: Top-`p_blocks` greedy selection with
+    /// full (γ = 1) exact block steps.
+    pub fn grock(common: CommonOptions, p_blocks: usize) -> Self {
+        Self::grock_with(common, SelectionSpec::TopK { k: p_blocks.max(1) })
+    }
+
+    /// GRock's full-step iteration under an arbitrary selection strategy
+    /// (the sketching specs yield randomized GRock variants).
+    pub fn grock_with(common: CommonOptions, selection: SelectionSpec) -> Self {
+        Self {
+            common,
+            direction: DirectionRule::BestResponse { tau0: Some(0.0) },
+            merge: MergeRule::Jacobi { full_step: true },
+            selection: Some(selection),
+            inexact: None,
+        }
+    }
+
+    /// Greedy 1-block coordinate descent — GRock's provably convergent
+    /// P = 1 special case.
+    pub fn greedy_1bcd(common: CommonOptions) -> Self {
+        Self::grock(common, 1)
+    }
+
+    /// CDM: sequential Gauss-Seidel exact coordinate descent, full sweep.
+    pub fn cdm(common: CommonOptions, shuffle: bool) -> Self {
+        Self::cdm_with(common, shuffle, SelectionSpec::full_jacobi())
+    }
+
+    /// CDM with the sweep restricted to a strategy's candidate set.
+    pub fn cdm_with(common: CommonOptions, shuffle: bool, selection: SelectionSpec) -> Self {
+        Self {
+            common,
+            direction: DirectionRule::SweepFresh,
+            merge: MergeRule::Sweep { shuffle },
+            selection: Some(selection),
+            inexact: None,
+        }
+    }
+
+    /// Parallel FISTA with backtracking [Beck & Teboulle 2009].
+    pub fn fista(common: CommonOptions) -> Self {
+        Self {
+            common,
+            direction: DirectionRule::ProxGradient { accel: Accel::Nesterov },
+            merge: MergeRule::FullVector,
+            selection: None,
+            inexact: None,
+        }
+    }
+
+    /// SpaRSA [Wright, Nowak & Figueiredo 2009] with the given
+    /// hyper-parameters.
+    pub fn sparsa(common: CommonOptions, opts: &SparsaOptions) -> Self {
+        Self {
+            common,
+            direction: DirectionRule::ProxGradient {
+                accel: Accel::BarzilaiBorwein {
+                    memory: opts.memory,
+                    sigma: opts.sigma,
+                    alpha_min: opts.alpha_min,
+                    alpha_max: opts.alpha_max,
+                    eta: opts.eta,
+                },
+            },
+            merge: MergeRule::FullVector,
+            selection: None,
+            inexact: None,
+        }
+    }
+
+    /// Parallel Jacobi-proximal multi-block ADMM (LASSO consensus form;
+    /// residual-aux problems only — the CLI restricts it to
+    /// `kind = "lasso"`).
+    pub fn admm(common: CommonOptions, opts: &AdmmOptions) -> Self {
+        Self {
+            common,
+            direction: DirectionRule::AdmmSplit { rho: opts.rho, tau: opts.tau },
+            merge: MergeRule::FullVector,
+            selection: None,
+            inexact: None,
+        }
+    }
+
+    /// Override the selection strategy of an existing spec (the CLI
+    /// `--selection` / config `[selection]` plumbing). Every family
+    /// accepts one: the coordinator algorithms restrict their scans, the
+    /// full-vector baselines restrict their update set `S^k`.
+    pub fn with_selection(mut self, spec: SelectionSpec) -> Self {
+        if matches!(self.direction, DirectionRule::SweepFresh)
+            && matches!(self.merge, MergeRule::GaussJacobi { .. })
+        {
+            // Algorithm 2 → Algorithm 3: adding selection turns on the
+            // Jacobi prepass
+            self.direction = DirectionRule::BestResponse { tau0: None };
+        }
+        self.selection = Some(spec);
+        self
+    }
+
+    /// The single validated constructor behind the CLI `solve` dispatch
+    /// and the `[solver]` TOML table: build the spec for solver `name`
+    /// with the shared knobs (`sigma` = greedy threshold when no
+    /// `selection` is given; `cores` doubles as GJ's processor count and
+    /// GRock's P, matching the paper's figures).
+    pub fn from_name(
+        name: &str,
+        common: CommonOptions,
+        selection: Option<SelectionSpec>,
+        sigma: f64,
+        cores: usize,
+    ) -> Result<Self, String> {
+        if !(0.0..=1.0).contains(&sigma) {
+            return Err(format!("solver sigma must be in [0,1], got {sigma}"));
+        }
+        let spec = match name {
+            "flexa" => Self::flexa(
+                common,
+                selection.clone().unwrap_or_else(|| SelectionSpec::sigma(sigma)),
+                None,
+            ),
+            "gj-flexa" => Self::gauss_jacobi(
+                common,
+                Some(selection.clone().unwrap_or_else(|| SelectionSpec::sigma(sigma))),
+                cores,
+            ),
+            "gauss-jacobi" => {
+                let base = Self::gauss_jacobi(common, None, cores);
+                match selection {
+                    Some(ref s) => base.with_selection(s.clone()),
+                    None => base,
+                }
+            }
+            "fista" => match selection {
+                Some(ref s) => Self::fista(common).with_selection(s.clone()),
+                None => Self::fista(common),
+            },
+            "sparsa" => {
+                let base = Self::sparsa(common, &SparsaOptions::default());
+                match selection {
+                    Some(ref s) => base.with_selection(s.clone()),
+                    None => base,
+                }
+            }
+            "grock" => match selection {
+                Some(ref s) => Self::grock_with(common, s.clone()),
+                None => Self::grock(common, cores),
+            },
+            "greedy-1bcd" => match selection {
+                // the override applies to every family; with one it is
+                // exactly GRock under that strategy
+                Some(ref s) => Self::grock_with(common, s.clone()),
+                None => Self::greedy_1bcd(common),
+            },
+            "admm" => {
+                let base = Self::admm(common, &AdmmOptions::default());
+                match selection {
+                    Some(ref s) => base.with_selection(s.clone()),
+                    None => base,
+                }
+            }
+            "cdm" => match selection {
+                Some(ref s) => Self::cdm_with(common, true, s.clone()),
+                None => Self::cdm(common, true),
+            },
+            other => {
+                return Err(format!(
+                    "unknown solver {other:?} (expected one of {})",
+                    Self::NAMES.join("|")
+                ))
+            }
+        };
+        Ok(spec)
+    }
+
+    /// Short family label for logs and bench tables.
+    pub fn family(&self) -> &'static str {
+        match (&self.direction, &self.merge) {
+            (DirectionRule::BestResponse { tau0: None }, MergeRule::Jacobi { .. }) => "flexa",
+            (DirectionRule::BestResponse { .. }, MergeRule::Jacobi { .. }) => "grock",
+            (_, MergeRule::GaussJacobi { .. }) => "gauss-jacobi",
+            (_, MergeRule::Sweep { .. }) => "cdm",
+            (DirectionRule::ProxGradient { accel: Accel::Nesterov }, _) => "fista",
+            (DirectionRule::ProxGradient { .. }, _) => "sparsa",
+            (DirectionRule::AdmmSplit { .. }, _) => "admm",
+            _ => "custom",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TermMetric;
+
+    fn common() -> CommonOptions {
+        CommonOptions {
+            max_iters: 100,
+            tol: 1e-6,
+            term: TermMetric::RelErr,
+            name: "spec-test".into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn from_name_covers_every_solver() {
+        for name in SolverSpec::NAMES {
+            let spec = SolverSpec::from_name(name, common(), None, 0.5, 4)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!spec.family().is_empty());
+        }
+    }
+
+    #[test]
+    fn from_name_rejects_unknown_and_bad_sigma() {
+        assert!(SolverSpec::from_name("frobnicate", common(), None, 0.5, 1).is_err());
+        assert!(SolverSpec::from_name("flexa", common(), None, 1.5, 1).is_err());
+    }
+
+    #[test]
+    fn selection_upgrades_gauss_jacobi_to_algorithm_3() {
+        let alg2 = SolverSpec::gauss_jacobi(common(), None, 4);
+        assert_eq!(alg2.direction, DirectionRule::SweepFresh);
+        let alg3 = alg2.with_selection(SelectionSpec::sigma(0.5));
+        assert_eq!(alg3.direction, DirectionRule::BestResponse { tau0: None });
+        assert!(alg3.selection.is_some());
+    }
+
+    #[test]
+    fn grock_pins_tau_and_full_step() {
+        let spec = SolverSpec::grock(common(), 8);
+        assert_eq!(spec.direction, DirectionRule::BestResponse { tau0: Some(0.0) });
+        assert_eq!(spec.merge, MergeRule::Jacobi { full_step: true });
+        assert_eq!(spec.selection, Some(SelectionSpec::TopK { k: 8 }));
+    }
+
+    #[test]
+    fn families_label_correctly() {
+        assert_eq!(SolverSpec::fista(common()).family(), "fista");
+        assert_eq!(SolverSpec::cdm(common(), true).family(), "cdm");
+        assert_eq!(
+            SolverSpec::admm(common(), &AdmmOptions::default()).family(),
+            "admm"
+        );
+    }
+}

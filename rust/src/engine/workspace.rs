@@ -1,0 +1,210 @@
+//! The engine's preallocated per-solve workspace: every buffer and chunk
+//! table any phase can touch, allocated once before the first iteration so
+//! the hot loop allocates nothing.
+//!
+//! Buffers a configuration does not use are left empty (`Vec::new()`), so
+//! a FLEXA solve does not pay for SpaRSA's gradient history and vice
+//! versa. Chunk tables come from [`crate::parallel::partition`] and depend
+//! only on the problem shape — the first half of the repo's
+//! bitwise-determinism contract.
+
+use super::{DirectionRule, MergeRule, SolverSpec};
+use crate::parallel;
+use crate::problems::Problem;
+use std::ops::Range;
+
+/// Preallocated buffers + fixed chunk tables for one engine solve.
+pub struct Workspace {
+    /// Shared per-iteration prelude scratch (logistic weights).
+    pub scratch: Vec<f64>,
+    /// Best responses / trial directions, variable-indexed (length n).
+    pub zhat: Vec<f64>,
+    /// Error bounds `E_i`, block-indexed (length N).
+    pub e: Vec<f64>,
+    /// Candidate set `C^k` (strategy propose phase).
+    pub cand: Vec<usize>,
+    /// Update set `S^k` (strategy select phase).
+    pub sel: Vec<usize>,
+    /// Pre-step aux copy for τ rollback / the GJ merge baseline.
+    pub aux_save: Vec<f64>,
+    /// Pre-step iterate for τ rollback.
+    pub x_old: Vec<f64>,
+    /// Per-block delta scratch (max block size).
+    pub delta: Vec<f64>,
+    /// Armijo direction image in aux space.
+    pub dir_aux: Vec<f64>,
+    /// Armijo trial iterate.
+    pub x_trial: Vec<f64>,
+    /// Trial aux (Armijo / prox backtracking).
+    pub aux_trial: Vec<f64>,
+    /// γ-scaled step, read by the selective aux fan-out.
+    pub dx: Vec<f64>,
+    /// Which selected blocks actually moved this iteration.
+    pub moved: Vec<bool>,
+    /// Ordered-reduction partials for the `M^k` max.
+    pub max_partials: Vec<f64>,
+    /// Ordered-reduction partials for chunked objectives/sums.
+    pub obj_partials: Vec<f64>,
+    /// Per-processor private aux copies (Gauss-Jacobi merge).
+    pub aux_local: Vec<Vec<f64>>,
+    /// Per-block best-response scratch for the sweeps (max block size).
+    pub z_buf: Vec<f64>,
+    /// Persistent sweep order (CDM's compose-across-iterations shuffle).
+    pub order: Vec<usize>,
+    /// Full gradient ∇F (prox-gradient / ADMM correction).
+    pub grad: Vec<f64>,
+    /// Previous accepted gradient (Barzilai-Borwein curvature).
+    pub grad_prev: Vec<f64>,
+    /// Previous accepted iterate (BB curvature / Nesterov momentum).
+    pub x_prev: Vec<f64>,
+    /// Extrapolated point y (Nesterov momentum).
+    pub y: Vec<f64>,
+    /// Pre-prox step buffer `y − ∇F(y)/α`.
+    pub step_buf: Vec<f64>,
+    /// Prox trial point.
+    pub trial: Vec<f64>,
+    /// Nonmonotone objective history (SpaRSA).
+    pub v_hist: Vec<f64>,
+    /// ADMM slack block s.
+    pub s: Vec<f64>,
+    /// ADMM multiplier λ.
+    pub lam: Vec<f64>,
+    /// ADMM combined residual `Ax − s − b + λ/ρ`.
+    pub v_vec: Vec<f64>,
+    /// Block-aligned chunk table for the best-response fan-out.
+    pub br_chunks: Vec<(Range<usize>, Range<usize>)>,
+    /// Row-chunk table for the banded prelude.
+    pub prl_chunks: Vec<Range<usize>>,
+    /// Row-chunk table over the aux vector (selective update, merges,
+    /// chunked objective).
+    pub aux_chunks: Vec<Range<usize>>,
+    /// Chunk table over the block-error vector (the `M^k` reduction).
+    pub e_chunks: Vec<Range<usize>>,
+    /// Chunk table over the variable vector (elementwise prox passes).
+    pub n_chunks: Vec<Range<usize>>,
+    /// Full-scan best-response flop total, reused every `Candidates::All`
+    /// iteration.
+    pub total_br_flops: f64,
+}
+
+impl Workspace {
+    /// Allocate the workspace a `spec` needs on `problem` (everything the
+    /// configuration's phases touch; unused buffers stay empty).
+    pub fn new(problem: &dyn Problem, spec: &SolverSpec) -> Self {
+        let n = problem.n();
+        let nb = problem.blocks().n_blocks();
+        let m = problem.aux_len();
+        let max_block = problem.blocks().max_size();
+
+        let scan_based = matches!(spec.direction, DirectionRule::BestResponse { .. });
+        let jacobi = matches!(spec.merge, MergeRule::Jacobi { .. });
+        let gj = matches!(spec.merge, MergeRule::GaussJacobi { .. });
+        let sweep = matches!(spec.merge, MergeRule::Sweep { .. });
+        let prox = matches!(spec.direction, DirectionRule::ProxGradient { .. });
+        let admm = matches!(spec.direction, DirectionRule::AdmmSplit { .. });
+        let rollback = (jacobi && !matches!(spec.merge, MergeRule::Jacobi { full_step: true }))
+            || gj;
+
+        let alloc = |yes: bool, len: usize| if yes { vec![0.0; len] } else { Vec::new() };
+
+        // resolve the GJ processor count exactly like the legacy loop did
+        let p_procs = match spec.merge {
+            MergeRule::GaussJacobi { processors: 0 } => spec.common.cores.max(1),
+            MergeRule::GaussJacobi { processors } => processors,
+            _ => 0,
+        };
+
+        Self {
+            scratch: alloc(scan_based || gj || sweep, problem.prelude_len()),
+            zhat: alloc(scan_based, n),
+            e: alloc(scan_based || prox || admm, nb),
+            cand: Vec::with_capacity(nb),
+            sel: Vec::with_capacity(nb),
+            aux_save: alloc(rollback || gj, m),
+            x_old: alloc(rollback || gj, n),
+            delta: alloc(jacobi || gj || sweep, max_block),
+            dir_aux: alloc(jacobi, m),
+            x_trial: alloc(jacobi, n),
+            aux_trial: alloc(jacobi || prox, m),
+            dx: alloc(jacobi, n),
+            moved: if jacobi { vec![false; nb] } else { Vec::new() },
+            max_partials: Vec::new(),
+            obj_partials: Vec::new(),
+            aux_local: (0..p_procs).map(|_| vec![0.0; m]).collect(),
+            z_buf: alloc(gj || sweep, max_block),
+            order: if sweep { (0..nb).collect() } else { Vec::new() },
+            grad: alloc(prox || admm, n),
+            grad_prev: alloc(prox, n),
+            x_prev: alloc(prox, n),
+            y: alloc(prox, n),
+            step_buf: alloc(prox || admm, n),
+            trial: alloc(prox || admm, n),
+            v_hist: Vec::new(),
+            s: alloc(admm, m),
+            lam: alloc(admm, m),
+            v_vec: alloc(admm, m),
+            br_chunks: if scan_based {
+                parallel::reduce::best_response_chunks(problem)
+            } else {
+                Vec::new()
+            },
+            prl_chunks: if scan_based || gj || sweep {
+                parallel::reduce::prelude_chunks(problem)
+            } else {
+                Vec::new()
+            },
+            aux_chunks: parallel::row_chunks(m),
+            e_chunks: parallel::chunks_of(nb, parallel::MAX_CHUNKS),
+            n_chunks: parallel::row_chunks(n),
+            total_br_flops: if scan_based {
+                (0..nb).map(|i| problem.flops_best_response(i)).sum()
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CommonOptions;
+    use crate::coordinator::SelectionSpec;
+    use crate::datagen::nesterov_lasso;
+    use crate::problems::LassoProblem;
+
+    #[test]
+    fn flexa_workspace_skips_prox_buffers() {
+        let p = LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 1));
+        let spec = SolverSpec::flexa(CommonOptions::default(), SelectionSpec::sigma(0.5), None);
+        let ws = Workspace::new(&p, &spec);
+        assert_eq!(ws.zhat.len(), p.n());
+        assert_eq!(ws.dx.len(), p.n());
+        assert!(ws.grad.is_empty() && ws.y.is_empty() && ws.s.is_empty());
+        assert!(!ws.br_chunks.is_empty());
+    }
+
+    #[test]
+    fn fista_workspace_skips_scan_buffers() {
+        let p = LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 1));
+        let spec = SolverSpec::fista(CommonOptions::default());
+        let ws = Workspace::new(&p, &spec);
+        assert_eq!(ws.grad.len(), p.n());
+        assert_eq!(ws.trial.len(), p.n());
+        assert!(ws.dx.is_empty() && ws.dir_aux.is_empty());
+        assert!(ws.br_chunks.is_empty());
+    }
+
+    #[test]
+    fn gj_workspace_allocates_private_aux_copies() {
+        let p = LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 1));
+        let spec = SolverSpec::gauss_jacobi(CommonOptions::default(), None, 3);
+        let ws = Workspace::new(&p, &spec);
+        assert_eq!(ws.aux_local.len(), 3);
+        assert_eq!(ws.aux_local[0].len(), p.aux_len());
+        // processors = 0 resolves to common.cores
+        let c = CommonOptions { cores: 5, ..Default::default() };
+        let ws0 = Workspace::new(&p, &SolverSpec::gauss_jacobi(c, None, 0));
+        assert_eq!(ws0.aux_local.len(), 5);
+    }
+}

@@ -10,7 +10,10 @@
 //!   (FISTA, SpaRSA, GRock, greedy-1BCD, ADMM, CDM), the problem library
 //!   (LASSO, group LASSO, sparse logistic regression, nonconvex QP), the
 //!   cluster cost-model simulator and the benchmark harness regenerating
-//!   every figure/table of the paper.
+//!   every figure/table of the paper. All seven solvers are
+//!   [`SolverSpec`](engine::SolverSpec) configurations of **one**
+//!   iteration engine ([`engine`] — selection/direction/step/merge as
+//!   pluggable phases over a shared preallocated workspace).
 //! * **Parallel runtime (`parallel`)** — a persistent
 //!   [`parallel::WorkerPool`] created once per solve (never per
 //!   iteration) that owns the FLEXA hot path: the per-block best
@@ -47,6 +50,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod datagen;
+pub mod engine;
 pub mod linalg;
 pub mod metrics;
 pub mod parallel;
@@ -58,4 +62,5 @@ pub mod solvers;
 pub mod util;
 
 pub use coordinator::{flexa, gauss_jacobi, gj_flexa, FlexaOptions, GaussJacobiOptions, SolveReport};
+pub use engine::{DirectionRule, MergeRule, SolverSpec};
 pub use problems::Problem;

@@ -30,5 +30,5 @@ pub use partition::{block_chunks, chunks_of, row_chunks, MAX_CHUNKS};
 pub use pool::WorkerPool;
 pub use reduce::{
     for_each_chunk, for_each_row_chunk, par_best_responses, par_best_responses_subset, par_max,
-    par_prelude, par_v_val,
+    par_prelude, par_sum_pairs, par_v_val,
 };

@@ -233,6 +233,49 @@ pub fn par_max(
     partials.iter().fold(0.0f64, |a, &b| a.max(b))
 }
 
+/// Two ordered chunked sums in one pass: `f(range)` returns a chunk's
+/// `(a, b)` partial sums; both are combined **in chunk order** on the
+/// calling thread, so the results are bitwise-identical for any
+/// `threads ≥ 1` (the `threads = 1` shortcut accumulates in the same
+/// chunk order). Used by the engine's prox-gradient phases for the
+/// backtracking inner products `(⟨∇F, d⟩, ‖d‖²)` and the Barzilai-Borwein
+/// curvature pair `(⟨Δg, Δx⟩, ‖Δx‖²)`.
+pub fn par_sum_pairs(
+    pool: &WorkerPool,
+    chunks: &[Range<usize>],
+    partials_a: &mut Vec<f64>,
+    partials_b: &mut Vec<f64>,
+    f: &(dyn Fn(Range<usize>) -> (f64, f64) + Sync),
+) -> (f64, f64) {
+    if chunks.is_empty() {
+        return (0.0, 0.0);
+    }
+    if pool.threads() == 1 {
+        let (mut a, mut b) = (0.0, 0.0);
+        for r in chunks {
+            let (pa, pb) = f(r.clone());
+            a += pa;
+            b += pb;
+        }
+        return (a, b);
+    }
+    partials_a.clear();
+    partials_a.resize(chunks.len(), 0.0);
+    partials_b.clear();
+    partials_b.resize(chunks.len(), 0.0);
+    let pa = MutPtr(partials_a.as_mut_ptr());
+    let pb = MutPtr(partials_b.as_mut_ptr());
+    for_each_chunk(pool, chunks.len(), &|c| {
+        let (a, b) = f(chunks[c].clone());
+        // SAFETY: one partial slot per chunk in each array.
+        unsafe {
+            *pa.0.add(c) = a;
+            *pb.0.add(c) = b;
+        }
+    });
+    (partials_a.iter().sum(), partials_b.iter().sum())
+}
+
 /// `V(x) = F(x) + G(x)` with `F` summed over fixed aux-row chunks in
 /// order (ordered reduction ⇒ thread-count-invariant); falls back to the
 /// sequential `v_val` when the problem has no chunked objective.
@@ -292,6 +335,37 @@ mod tests {
             let got = par_max(&pool, &v, &chunks, &mut partials);
             assert_eq!(got, expect, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn par_sum_pairs_is_thread_count_invariant() {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(21);
+        let a: Vec<f64> = (0..1234).map(|_| rng.next_normal()).collect();
+        let b: Vec<f64> = (0..1234).map(|_| rng.next_normal()).collect();
+        let chunks = row_chunks(a.len());
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let pool1 = WorkerPool::new(1);
+        let expect = par_sum_pairs(&pool1, &chunks, &mut pa, &mut pb, &|rows| {
+            let (mut s1, mut s2) = (0.0, 0.0);
+            for i in rows {
+                s1 += a[i] * b[i];
+                s2 += a[i] * a[i];
+            }
+            (s1, s2)
+        });
+        for threads in [2usize, 4, 64] {
+            let pool = WorkerPool::new(threads);
+            let got = par_sum_pairs(&pool, &chunks, &mut pa, &mut pb, &|rows| {
+                let (mut s1, mut s2) = (0.0, 0.0);
+                for i in rows {
+                    s1 += a[i] * b[i];
+                    s2 += a[i] * a[i];
+                }
+                (s1, s2)
+            });
+            assert_eq!(expect, got, "threads={threads}");
+        }
+        assert_eq!(par_sum_pairs(&pool1, &[], &mut pa, &mut pb, &|_| (1.0, 1.0)), (0.0, 0.0));
     }
 
     #[test]

@@ -14,11 +14,7 @@
 
 #[cfg(feature = "pjrt")]
 use super::client::{literal_to_vec, matrix_literal, scalar1_literal, vec_literal, RuntimeClient};
-use crate::coordinator::driver::RunState;
-use crate::coordinator::strategy::Candidates;
-use crate::coordinator::tau::{TauController, TauDecision, TauOptions};
-use crate::coordinator::{FlexaOptions, SolveReport, StopReason};
-use crate::metrics::IterCost;
+use crate::coordinator::{FlexaOptions, SolveReport};
 use crate::problems::{LassoProblem, Problem};
 use crate::util::error::Result;
 
@@ -171,110 +167,29 @@ impl StepEngine for BoundXlaEngine {
 }
 
 /// FLEXA (Algorithm 1) driven by a [`StepEngine`] — the end-to-end
-/// three-layer path: selection/γ/τ on the rust side, compute in the engine.
+/// three-layer path: selection/γ/τ on the rust side, compute in the
+/// engine. Since the `SolverCore` refactor this is the same
+/// [`SolverSpec::flexa`](crate::engine::SolverSpec::flexa) configuration
+/// as the native `coordinator::flexa`, run through
+/// [`crate::engine::solve_with_step_engine`]: the fused engine pass
+/// replaces the pool-parallel Jacobi scan (it always computes every
+/// block, so sketching strategies restrict only the *selection* on this
+/// path), and the auxiliary state is recomputed from `x` each iteration
+/// (the engine owns the compute). γ now follows the same
+/// iteration-indexed schedule as the native path (it advances on
+/// τ-discarded iterations too, per Theorem 1).
 pub fn flexa_with_engine(
     problem: &LassoProblem,
     engine: &mut dyn StepEngine,
     x0: &[f64],
     opts: &FlexaOptions,
 ) -> Result<SolveReport> {
-    let n = problem.n();
-    assert_eq!(engine.shape(), (problem.aux_len(), n), "engine/problem shape mismatch");
-    let common = &opts.common;
-    let p_cores = common.cores.max(1);
-
-    let mut x = x0.to_vec();
-    let mut x_old = vec![0.0; n];
-    let mut zhat = vec![0.0; n];
-    let mut e = vec![0.0; n];
-    let mut cand: Vec<usize> = Vec::with_capacity(n);
-    let mut sel: Vec<usize> = Vec::with_capacity(n);
-    // per-solve selection strategy; the fused engine pass always computes
-    // every block, so sketching strategies restrict only the *selection*
-    // on this path (their scan saving needs the native coordinator)
-    let mut strategy = opts.selection.build(problem);
-
-    let tau_opts = common
-        .tau
-        .unwrap_or_else(|| TauOptions::paper(problem.tau_init(), problem.tau_min()));
-    let mut tau_ctl = TauController::new(tau_opts);
-    let mut gamma = common.stepsize.initial();
-
-    let mut state = RunState::new(problem, common);
-    // aux only for merit/trace instrumentation
-    let mut aux = vec![0.0; problem.aux_len()];
-    problem.init_aux(&x, &mut aux);
-    let mut v = problem.v_val(&x, &aux);
-    tau_ctl.baseline(v);
-    state.record(0, &x, &aux, v, 0);
-
-    let mut stop = StopReason::MaxIters;
-    let mut iters = 0usize;
-
-    for k in 0..common.max_iters {
-        iters = k + 1;
-        let tau = tau_ctl.tau();
-
-        // engine computes ẑ, E, and V(x^k) in one fused call
-        let _v_at_x = engine.step(&x, tau, &mut zhat, &mut e)?;
-        state.scanned += n; // scalar blocks: the engine scans all of them
-
-        let scan = strategy.propose(k, n, &mut cand);
-        let m_k = match scan {
-            Candidates::All => e.iter().fold(0.0f64, |a, &b| a.max(b)),
-            Candidates::Subset => cand.iter().fold(0.0f64, |a, &i| a.max(e[i])),
-        };
-        match scan {
-            Candidates::All => strategy.select(&e, m_k, &[], &mut sel),
-            Candidates::Subset => strategy.select(&e, m_k, &cand, &mut sel),
-        }
-        state.last_ebound = m_k;
-
-        x_old.copy_from_slice(&x);
-        let mut active = 0usize;
-        for &i in &sel {
-            let d = gamma * (zhat[i] - x[i]);
-            if d != 0.0 {
-                x[i] += d;
-                active += 1;
-            }
-        }
-
-        // objective for the τ controller from the next engine call would
-        // lag one iteration; evaluate natively (same math, f64)
-        problem.init_aux(&x, &mut aux);
-        let v_new = problem.v_val(&x, &aux);
-
-        match tau_ctl.observe(v_new, state.step_metric()) {
-            TauDecision::Accept => {
-                v = v_new;
-                gamma = common.stepsize.next(gamma, state.step_metric());
-            }
-            TauDecision::RejectAndRetry => {
-                x.copy_from_slice(&x_old);
-                problem.init_aux(&x, &mut aux);
-                state.discarded += 1;
-                tau_ctl.baseline(v);
-                active = 0;
-            }
-        }
-
-        // the engine's step is a fused matvec + rmatvec + threshold
-        state.charge(IterCost::balanced(
-            2.0 * problem.flops_grad_full() + 8.0 * n as f64,
-            p_cores,
-            problem.aux_len() as f64,
-            1.0,
-        ));
-
-        state.record(k + 1, &x, &aux, v, active);
-        if let Some(reason) = state.stop_check(k) {
-            stop = reason;
-            break;
-        }
-    }
-
-    Ok(state.finish(x, &aux, v, iters, stop))
+    let spec = crate::engine::SolverSpec::flexa(
+        opts.common.clone(),
+        opts.selection.clone(),
+        opts.inexact,
+    );
+    crate::engine::solve_with_step_engine(problem, engine, x0, &spec)
 }
 
 #[cfg(test)]

@@ -18,14 +18,21 @@
 //! * slack (closed form): `s⁺ = ρ(w + λ/ρ)/(2 + ρ)`, `w = Ax⁺ − b`;
 //! * multiplier: `λ⁺ = λ + ρ(Ax⁺ − s⁺ − b)`.
 //!
-//! The nontrivial initialization the paper mentions (column norms, penalty
-//! scaling) is charged to the cost model before the first iteration.
+//! Since the `SolverCore` refactor ADMM is the
+//! [`SolverSpec::admm`](crate::engine::SolverSpec::admm) configuration of
+//! the one iteration engine ([`crate::engine`]), expressed entirely
+//! through the residual-form [`Problem`](crate::problems::Problem) trait
+//! (`init_aux` = `Ax − b`,
+//! `grad_full` = `2Aᵀ(·)`, `prox_full` = soft-threshold): the splitting
+//! updates run as row-chunked pool passes, the objective through the
+//! chunked ordered reduction, and `SolveReport::scanned` / selection
+//! strategies come along for free. The nontrivial initialization the
+//! paper mentions (column norms, penalty scaling) is still charged to the
+//! cost model before the first iteration.
 
-use crate::coordinator::driver::RunState;
-use crate::coordinator::{CommonOptions, SolveReport, StopReason};
-use crate::linalg::vector;
-use crate::metrics::IterCost;
-use crate::problems::{LassoProblem, Problem};
+use crate::coordinator::{CommonOptions, SolveReport};
+use crate::engine::{self, SolverSpec};
+use crate::problems::LassoProblem;
 
 /// ADMM hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -42,102 +49,16 @@ impl Default for AdmmOptions {
     }
 }
 
-/// Run parallel ADMM on a LASSO problem from `x0`.
+/// Run parallel ADMM on a LASSO problem from `x0`. (The splitting step
+/// assumes the residual form `F = ‖Ax − b‖²`; the CLI enforces
+/// `kind = "lasso"` for the same reason this signature does.)
 pub fn admm(
     problem: &LassoProblem,
     x0: &[f64],
     common: &CommonOptions,
     opts: &AdmmOptions,
 ) -> SolveReport {
-    let n = problem.n();
-    let m = problem.aux_len();
-    let p_cores = common.cores.max(1);
-    let a = problem.matrix();
-    let b = problem.rhs();
-    let c = problem.c();
-    let d = problem.col_sq_norms();
-
-    let mut x = x0.to_vec();
-    let mut s = vec![0.0; m];
-    let mut lam = vec![0.0; m];
-    let mut ax = vec![0.0; m];
-    let mut v_vec = vec![0.0; m];
-    let mut corr = vec![0.0; n];
-    let mut aux = vec![0.0; m]; // residual for objective reporting
-
-    // penalty: scale-aware default (mean column norm), the "nontrivial
-    // initialization" of the paper's ADMM curves
-    let mean_d = d.iter().sum::<f64>() / n as f64;
-    let rho = if opts.rho > 0.0 { opts.rho } else { 1.0 / mean_d.max(1e-12) };
-    // prox-linearization weight: η ≥ ρ·λmax(AᵀA) (linearized-ADMM condition)
-    let lmax_ata = problem.lipschitz() / 2.0;
-    let eta = 1.05 * rho * lmax_ata + opts.tau;
-
-    let mut state = RunState::new(problem, common);
-    problem.init_aux(&x, &mut aux);
-    let mut v_obj = problem.v_val(&x, &aux);
-    state.record(0, &x, &aux, v_obj, 0);
-    // setup cost: column norms + one matvec
-    state.charge(IterCost::balanced(
-        (2 * a.nnz()) as f64,
-        p_cores,
-        m as f64,
-        1.0,
-    ));
-
-    let mut stop = StopReason::MaxIters;
-    let mut iters = 0usize;
-
-    for k in 0..common.max_iters {
-        iters = k + 1;
-
-        // v = Ax − s − b + λ/ρ  (uses current Ax)
-        a.matvec(&x, &mut ax);
-        for j in 0..m {
-            v_vec[j] = ax[j] - s[j] - b[j] + lam[j] / rho;
-        }
-        // corr = Aᵀ v  (the allreduced quantity in a distributed run)
-        a.matvec_t(&v_vec, &mut corr);
-
-        // parallel prox-linear x-update
-        let mut active = 0usize;
-        for i in 0..n {
-            let xi = vector::soft_threshold(x[i] - rho * corr[i] / eta, c / eta);
-            if xi != x[i] {
-                active += 1;
-            }
-            x[i] = xi;
-        }
-
-        // slack + multiplier
-        a.matvec(&x, &mut ax);
-        for j in 0..m {
-            let w = ax[j] - b[j];
-            s[j] = rho * (w + lam[j] / rho) / (2.0 + rho);
-            lam[j] += rho * (ax[j] - s[j] - b[j]);
-        }
-
-        // objective at the x iterate (the quantity the paper plots)
-        for j in 0..m {
-            aux[j] = ax[j] - b[j];
-        }
-        v_obj = problem.v_val(&x, &aux);
-
-        state.charge(IterCost::balanced(
-            (6 * a.nnz() + 12 * m + 6 * n) as f64,
-            p_cores,
-            m as f64,
-            2.0,
-        ));
-
-        state.record(k + 1, &x, &aux, v_obj, active);
-        if let Some(reason) = state.stop_check(k) {
-            stop = reason;
-            break;
-        }
-    }
-
-    state.finish(x, &aux, v_obj, iters, stop)
+    engine::solve(problem, x0, &SolverSpec::admm(common.clone(), opts))
 }
 
 #[cfg(test)]
@@ -145,6 +66,7 @@ mod tests {
     use super::*;
     use crate::coordinator::TermMetric;
     use crate::datagen::nesterov_lasso;
+    use crate::problems::Problem;
 
     #[test]
     fn converges_on_small_lasso() {
@@ -181,5 +103,24 @@ mod tests {
         // exactly the behavior the paper's Fig. 1 shows for ADMM)
         let vs = p.v_star().unwrap();
         assert!((r.final_obj - vs) / vs < 2e-2, "obj={} vs V*={vs}", r.final_obj);
+    }
+
+    #[test]
+    fn engine_admm_is_thread_count_invariant() {
+        let p = LassoProblem::from_instance(nesterov_lasso(30, 40, 0.1, 1.0, 9));
+        let mk = |threads: usize| CommonOptions {
+            max_iters: 80,
+            tol: 0.0,
+            term: TermMetric::RelErr,
+            threads,
+            name: "ADMM".into(),
+            ..Default::default()
+        };
+        let r1 = admm(&p, &vec![0.0; p.n()], &mk(1), &AdmmOptions::default());
+        for threads in [2usize, 4] {
+            let rt = admm(&p, &vec![0.0; p.n()], &mk(threads), &AdmmOptions::default());
+            assert_eq!(r1.x, rt.x, "threads={threads}");
+            assert_eq!(r1.final_obj, rt.final_obj);
+        }
     }
 }

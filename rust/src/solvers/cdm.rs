@@ -7,35 +7,37 @@
 //! visited). For LASSO the exact coordinate minimizer is the τ = 0 best
 //! response; for logistic it is a (damped) Newton coordinate step — the
 //! classic GLMNET/LIBLINEAR inner step.
+//!
+//! Since the `SolverCore` refactor CDM is the
+//! [`SolverSpec::cdm`](crate::engine::SolverSpec::cdm) configuration of the
+//! one iteration engine ([`crate::engine`]): the sweep merge rule is a
+//! sequential dependency chain by construction, so the shared
+//! [`WorkerPool`](crate::parallel::WorkerPool) only drives the per-sweep
+//! objective evaluation (the chunked ordered reduction
+//! `parallel::par_v_val`, thread-count-invariant).
 
-use crate::coordinator::driver::RunState;
-use crate::coordinator::strategy::Candidates;
-use crate::coordinator::{CommonOptions, SelectionSpec, SolveReport, StopReason};
-use crate::metrics::IterCost;
-use crate::parallel::{self, WorkerPool};
+use crate::coordinator::strategy::SelectionSpec;
+use crate::coordinator::{CommonOptions, SolveReport};
+use crate::engine::{self, SolverSpec};
 use crate::problems::Problem;
 
 /// Run CDM (sequential coordinate descent) from `x0`. `shuffle` randomizes
 /// the sweep order each iteration (seeded, reproducible). Sweeps every
-/// block — the classical full Gauss-Seidel pass; see
-/// [`cdm_with_selection`] for strategy-restricted sweeps.
+/// block — the classical full Gauss-Seidel pass.
 pub fn cdm(problem: &dyn Problem, x0: &[f64], common: &CommonOptions, shuffle: bool) -> SolveReport {
-    cdm_with_selection(problem, x0, common, shuffle, &SelectionSpec::full_jacobi())
+    engine::solve(problem, x0, &SolverSpec::cdm(common.clone(), shuffle))
 }
 
 /// CDM with the sweep restricted by a selection strategy
 /// ([`crate::coordinator::strategy`]): each iteration visits exactly the
 /// strategy's *candidate* set (the full-scan greedy specs propose every
 /// block, reproducing classical CDM; the sketching specs sweep only
-/// `⌈frac·N⌉` blocks). Only the candidate phase applies — a Gauss-Seidel
-/// sweep has no Jacobi error vector for the select phase to threshold.
-///
-/// The Gauss-Seidel sweep itself is a sequential dependency chain (every
-/// update lands in `aux` before the next block is visited), so it cannot
-/// use block-level parallelism without changing the algorithm; the shared
-/// [`WorkerPool`] (one per solve, like the coordinator's) instead drives
-/// the per-sweep objective evaluation via the chunked ordered reduction
-/// (`parallel::par_v_val`), which is thread-count-invariant.
+/// `⌈frac·N⌉` blocks).
+#[deprecated(
+    since = "0.1.0",
+    note = "use `engine::solve` with `SolverSpec::cdm_with` — the \
+            per-solver `_with_selection` variant matrix is folded into the engine"
+)]
 pub fn cdm_with_selection(
     problem: &dyn Problem,
     x0: &[f64],
@@ -43,91 +45,11 @@ pub fn cdm_with_selection(
     shuffle: bool,
     spec: &SelectionSpec,
 ) -> SolveReport {
-    let blocks = problem.blocks();
-    let nb = blocks.n_blocks();
-    let mut strategy = spec.build(problem);
-    let mut cand: Vec<usize> = Vec::with_capacity(nb);
-    let pool = WorkerPool::new(common.threads);
-    let obj_chunks = parallel::row_chunks(problem.aux_len());
-    let mut obj_partials: Vec<f64> = Vec::new();
-    let mut x = x0.to_vec();
-    let mut aux = vec![0.0; problem.aux_len()];
-    problem.init_aux(&x, &mut aux);
-    let mut z = vec![0.0; blocks.max_size()];
-    let mut delta = vec![0.0; blocks.max_size()];
-    let mut order: Vec<usize> = (0..nb).collect();
-    let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(0xCD);
-
-    // tiny damping keeps degenerate (near-zero) columns well-posed while
-    // staying numerically indistinguishable from exact minimization
-    let tau = 1e-12 * problem.tau_init().max(1.0) + problem.tau_min();
-
-    let mut state = RunState::new(problem, common);
-    let mut v = parallel::par_v_val(&pool, problem, &x, &aux, &obj_chunks, &mut obj_partials);
-    state.record(0, &x, &aux, v, 0);
-
-    let mut stop = StopReason::MaxIters;
-    let mut iters = 0usize;
-
-    for k in 0..common.max_iters {
-        iters = k + 1;
-        // the strategy's candidate phase names this sweep's blocks; the
-        // persistent `order` buffer keeps classical CDM's compose-across-
-        // iterations shuffle behavior for the full-sweep specs
-        match strategy.propose(k, nb, &mut cand) {
-            Candidates::All => {
-                if order.len() != nb {
-                    order.clear();
-                    order.extend(0..nb);
-                }
-            }
-            Candidates::Subset => {
-                order.clear();
-                order.extend_from_slice(&cand);
-            }
-        }
-        if shuffle {
-            rng.shuffle(&mut order);
-        }
-        let mut active = 0usize;
-        let mut sweep_flops = 0.0;
-        let mut max_e = 0.0f64;
-        for &i in &order {
-            let r = blocks.range(i);
-            let ei = problem.best_response(i, &x, &aux, tau, &mut z[..r.len()]);
-            max_e = max_e.max(ei);
-            sweep_flops += problem.flops_best_response_fresh(i);
-            state.scanned += 1;
-            let mut moved = false;
-            for (t, j) in r.clone().enumerate() {
-                delta[t] = z[t] - x[j]; // full step
-                if delta[t] != 0.0 {
-                    moved = true;
-                }
-            }
-            if moved {
-                for (t, j) in r.clone().enumerate() {
-                    x[j] += delta[t];
-                }
-                problem.apply_block_delta(i, &delta[..r.len()], &mut aux);
-                sweep_flops += problem.flops_aux_update(i);
-                active += 1;
-            }
-        }
-        state.last_ebound = max_e;
-        v = parallel::par_v_val(&pool, problem, &x, &aux, &obj_chunks, &mut obj_partials);
-
-        // strictly sequential: the whole sweep is the critical path
-        state.charge(IterCost::sequential(sweep_flops + problem.flops_obj()));
-
-        state.record(k + 1, &x, &aux, v, active);
-        if let Some(reason) = state.stop_check(k) {
-            stop = reason;
-            break;
-        }
-    }
-
-    state.finish(x, &aux, v, iters, stop)
+    engine::solve(
+        problem,
+        x0,
+        &SolverSpec::cdm_with(common.clone(), shuffle, spec.clone()),
+    )
 }
 
 #[cfg(test)]

@@ -10,113 +10,24 @@
 //! y^{k+1} = x^{k+1} + (t_k−1)/t_{k+1} · (x^{k+1} − x^k)
 //! ```
 //!
-//! The gradient/prox maps are separable across column blocks, so the method
-//! parallelizes exactly as the paper's implementation: each core handles a
-//! column slice; one m-word allreduce per gradient (cost model).
+//! Since the `SolverCore` refactor FISTA is the
+//! [`SolverSpec::fista`](crate::engine::SolverSpec::fista) configuration
+//! of the one iteration engine ([`crate::engine`]) — and inherits the
+//! engine axes for free: the elementwise prox/step/extrapolation passes
+//! and the backtracking inner products run over the persistent
+//! [`WorkerPool`](crate::parallel::WorkerPool) with ordered chunked
+//! reductions (bitwise thread-count-invariant), `SolveReport::scanned`
+//! is accounted, and a selection strategy can restrict the update set
+//! `S^k` (the engine then falls back to unaccelerated partial prox steps
+//! — momentum is unsound under partial updates).
 
-use crate::coordinator::driver::RunState;
-use crate::coordinator::{CommonOptions, SolveReport, StopReason};
-use crate::metrics::IterCost;
+use crate::coordinator::{CommonOptions, SolveReport};
+use crate::engine::{self, SolverSpec};
 use crate::problems::Problem;
 
 /// Run FISTA from `x0`.
 pub fn fista(problem: &dyn Problem, x0: &[f64], common: &CommonOptions) -> SolveReport {
-    let n = problem.n();
-    let p_cores = common.cores.max(1);
-    let mut x = x0.to_vec();
-    let mut x_prev = x0.to_vec();
-    let mut y = x0.to_vec();
-    let mut aux_y = vec![0.0; problem.aux_len()];
-    let mut aux_x = vec![0.0; problem.aux_len()];
-    let mut grad = vec![0.0; n];
-    let mut trial = vec![0.0; n];
-    let mut step_buf = vec![0.0; n];
-
-    // backtracking init: estimate of L (power iterations, counted as the
-    // "pre-iteration computations" the paper notes for the baselines)
-    let mut lip = problem.lipschitz().max(1e-12);
-    let eta = 1.5f64;
-    let mut t = 1.0f64;
-
-    let mut state = RunState::new(problem, common);
-    problem.init_aux(&x, &mut aux_x);
-    let mut v = problem.v_val(&x, &aux_x);
-    state.record(0, &x, &aux_x, v, 0);
-    // charge setup: one lipschitz estimation ≈ 30 power iterations × 2 matvecs
-    state.charge(IterCost::balanced(
-        60.0 * problem.flops_grad_full() / 2.0,
-        p_cores,
-        problem.aux_len() as f64,
-        1.0,
-    ));
-
-    let mut stop = StopReason::MaxIters;
-    let mut iters = 0usize;
-
-    for k in 0..common.max_iters {
-        iters = k + 1;
-        problem.init_aux(&y, &mut aux_y);
-        let f_y = problem.f_val(&y, &aux_y);
-        problem.grad_full(&y, &aux_y, &mut grad);
-
-        // backtracking on L
-        let mut trials = 0usize;
-        loop {
-            trials += 1;
-            // trial = prox(y − grad/L)
-            for i in 0..n {
-                step_buf[i] = y[i] - grad[i] / lip;
-            }
-            problem.prox_full(&step_buf, 1.0 / lip, &mut trial);
-            problem.init_aux(&trial, &mut aux_x);
-            let f_trial = problem.f_val(&trial, &aux_x);
-            // quadratic upper bound test
-            let mut lin = 0.0;
-            let mut sq = 0.0;
-            for i in 0..n {
-                let d = trial[i] - y[i];
-                lin += grad[i] * d;
-                sq += d * d;
-            }
-            if f_trial <= f_y + lin + 0.5 * lip * sq + 1e-12 || trials > 60 {
-                break;
-            }
-            lip *= eta;
-        }
-
-        // accept
-        x_prev.copy_from_slice(&x);
-        x.copy_from_slice(&trial);
-        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
-        let beta = (t - 1.0) / t_next;
-        for i in 0..n {
-            y[i] = x[i] + beta * (x[i] - x_prev[i]);
-        }
-        t = t_next;
-        v = problem.v_val(&x, &aux_x);
-
-        // cost: per backtracking trial one matvec (init_aux) + one obj;
-        // plus the gradient (matvec_t) on y and the y-residual matvec
-        let per_matvec = problem.flops_grad_full() / 2.0;
-        let cost = IterCost::balanced(
-            problem.flops_grad_full()
-                + per_matvec
-                + trials as f64 * (per_matvec + problem.flops_obj())
-                + 4.0 * n as f64,
-            p_cores,
-            problem.aux_len() as f64,
-            1.0 + trials as f64,
-        );
-        state.charge(cost);
-
-        state.record(k + 1, &x, &aux_x, v, problem.blocks().n_blocks());
-        if let Some(reason) = state.stop_check(k) {
-            stop = reason;
-            break;
-        }
-    }
-
-    state.finish(x, &aux_x, v, iters, stop)
+    engine::solve(problem, x0, &SolverSpec::fista(common.clone()))
 }
 
 #[cfg(test)]
@@ -154,5 +65,25 @@ mod tests {
         let r = fista(&p, &vec![0.0; p.n()], &common);
         assert!(r.converged());
         assert!(r.flops > 0.0 && r.sim_s > 0.0);
+    }
+
+    #[test]
+    fn newly_parallel_fista_is_thread_count_invariant() {
+        // the engine axis FISTA gained: same iterates for any pool width
+        let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
+        let mk = |threads: usize| CommonOptions {
+            max_iters: 60,
+            tol: 0.0,
+            term: TermMetric::RelErr,
+            threads,
+            name: "FISTA".into(),
+            ..Default::default()
+        };
+        let r1 = fista(&p, &vec![0.0; p.n()], &mk(1));
+        for threads in [2usize, 4] {
+            let rt = fista(&p, &vec![0.0; p.n()], &mk(threads));
+            assert_eq!(r1.x, rt.x, "threads={threads}");
+            assert_eq!(r1.final_obj, rt.final_obj);
+        }
     }
 }

@@ -5,149 +5,49 @@
 //! number of parallel processors (the paper's §VI instance). Convergence is
 //! only guaranteed when the columns of `A` are near-orthogonal — the paper
 //! shows it diverging or crawling on denser problems, which this
-//! implementation reproduces (it is the baseline, not the contribution).
+//! configuration reproduces (it is the baseline, not the contribution).
 //!
+//! Since the `SolverCore` refactor GRock is the
+//! [`SolverSpec::grock`](crate::engine::SolverSpec::grock) configuration
+//! of the one iteration engine ([`crate::engine`]): the same pool-parallel
+//! Jacobi scan as FLEXA with τ pinned to 0 (exact block minimization),
+//! Top-P selection, and the memoryless full-step merge.
 //! `greedy_1bcd` is the P = 1 special case (always convergent).
 
-use crate::coordinator::driver::RunState;
-use crate::coordinator::strategy::Candidates;
-use crate::coordinator::{CommonOptions, SelectionSpec, SolveReport, StopReason};
-use crate::metrics::IterCost;
-use crate::parallel::{self, WorkerPool};
+use crate::coordinator::strategy::SelectionSpec;
+use crate::coordinator::{CommonOptions, SolveReport};
+use crate::engine::{self, SolverSpec};
 use crate::problems::Problem;
 
 /// Run GRock with `p_blocks` simultaneous full block updates. The
 /// per-block descent-potential sweep reuses the same persistent
-/// [`WorkerPool`] layer as the coordinator (one pool per solve).
+/// [`WorkerPool`](crate::parallel::WorkerPool) layer as the coordinator
+/// (one pool per solve).
 pub fn grock(
     problem: &dyn Problem,
     x0: &[f64],
     common: &CommonOptions,
     p_blocks: usize,
 ) -> SolveReport {
-    grock_with_selection(problem, x0, common, &SelectionSpec::TopK { k: p_blocks.max(1) })
+    engine::solve(problem, x0, &SolverSpec::grock(common.clone(), p_blocks))
 }
 
 /// GRock's full-step (γ = 1, memoryless) iteration under an arbitrary
 /// selection strategy — [`grock`] is the classical Top-P instance; the
 /// sketching specs ([`SelectionSpec::Hybrid`] etc.) yield randomized
 /// GRock variants that skip the full descent-potential scan.
+#[deprecated(
+    since = "0.1.0",
+    note = "use `engine::solve` with `SolverSpec::grock_with` — the \
+            per-solver `_with_selection` variant matrix is folded into the engine"
+)]
 pub fn grock_with_selection(
     problem: &dyn Problem,
     x0: &[f64],
     common: &CommonOptions,
     spec: &SelectionSpec,
 ) -> SolveReport {
-    let n = problem.n();
-    let blocks = problem.blocks();
-    let nb = blocks.n_blocks();
-    let p_cores = common.cores.max(1);
-    let mut strategy = spec.build(problem);
-    let pool = WorkerPool::new(common.threads);
-    let br_chunks = parallel::reduce::best_response_chunks(problem);
-    let prl_chunks = parallel::reduce::prelude_chunks(problem);
-    let e_chunks = parallel::chunks_of(nb, parallel::MAX_CHUNKS);
-    let mut max_partials: Vec<f64> = Vec::new();
-
-    let mut x = x0.to_vec();
-    let mut aux = vec![0.0; problem.aux_len()];
-    problem.init_aux(&x, &mut aux);
-    let mut scratch = vec![0.0; problem.prelude_len()];
-    let mut zhat = vec![0.0; n];
-    let mut e = vec![0.0; nb];
-    let mut cand: Vec<usize> = Vec::with_capacity(nb);
-    let mut sel: Vec<usize> = Vec::with_capacity(nb);
-    let mut delta = vec![0.0; blocks.max_size()];
-    let total_br_flops: f64 = (0..nb).map(|i| problem.flops_best_response(i)).sum();
-
-    // GRock uses the plain coordinate minimizer (no extra proximal
-    // damping): τ = 0 corresponds to exact block minimization.
-    let tau = 0.0;
-
-    let mut state = RunState::new(problem, common);
-    let mut v = problem.v_val(&x, &aux);
-    state.record(0, &x, &aux, v, 0);
-
-    let mut stop = StopReason::MaxIters;
-    let mut iters = 0usize;
-
-    for k in 0..common.max_iters {
-        iters = k + 1;
-        let scan = strategy.propose(k, nb, &mut cand);
-        parallel::par_prelude(&pool, problem, &x, &aux, &mut scratch, &prl_chunks);
-        let m_k = match scan {
-            Candidates::All => {
-                parallel::par_best_responses(
-                    &pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
-                );
-                state.scanned += nb;
-                parallel::par_max(&pool, &e, &e_chunks, &mut max_partials)
-            }
-            Candidates::Subset => {
-                parallel::par_best_responses_subset(
-                    &pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
-                );
-                state.scanned += cand.len();
-                cand.iter().fold(0.0f64, |a, &i| a.max(e[i]))
-            }
-        };
-        match scan {
-            Candidates::All => strategy.select(&e, m_k, &[], &mut sel),
-            Candidates::Subset => strategy.select(&e, m_k, &cand, &mut sel),
-        }
-        state.last_ebound = m_k;
-
-        let mut active = 0usize;
-        let mut update_flops = 0.0;
-        for &i in &sel {
-            let r = blocks.range(i);
-            let mut moved = false;
-            for (t, j) in r.clone().enumerate() {
-                delta[t] = zhat[j] - x[j]; // full step, γ = 1
-                if delta[t] != 0.0 {
-                    moved = true;
-                }
-            }
-            if moved {
-                for (t, j) in r.clone().enumerate() {
-                    x[j] += delta[t];
-                }
-                problem.apply_block_delta(i, &delta[..r.len()], &mut aux);
-                update_flops += problem.flops_aux_update(i);
-                active += 1;
-            }
-        }
-        v = problem.v_val(&x, &aux);
-
-        let br_flops: f64 = match scan {
-            Candidates::All => total_br_flops,
-            Candidates::Subset => {
-                cand.iter().map(|&i| problem.flops_best_response(i)).sum()
-            }
-        };
-        state.charge(IterCost {
-            flops_total: problem.flops_prelude() + br_flops + update_flops + problem.flops_obj(),
-            flops_max_worker: (problem.flops_prelude() + br_flops + update_flops)
-                / p_cores as f64
-                + problem.flops_obj(),
-            reduce_words: problem.aux_len() as f64,
-            reduce_rounds: 1.0,
-        });
-
-        state.record(k + 1, &x, &aux, v, active);
-        // divergence guard: GRock can blow up on correlated columns; report
-        // honestly instead of spinning on NaNs
-        if !v.is_finite() {
-            stop = StopReason::Stalled;
-            break;
-        }
-        if let Some(reason) = state.stop_check(k) {
-            stop = reason;
-            break;
-        }
-    }
-
-    state.finish(x, &aux, v, iters, stop)
+    engine::solve(problem, x0, &SolverSpec::grock_with(common.clone(), spec.clone()))
 }
 
 /// Greedy 1-block coordinate descent — GRock's provably convergent P = 1

@@ -13,8 +13,12 @@
 //! * [`cdm`] — Gauss-Seidel coordinate descent with exact coordinate
 //!   minimization (the LIBLINEAR-style comparator of §VI-B).
 //!
-//! All report cost through the same `IterCost`/`SimClock` machinery as the
-//! coordinator so the regenerated figures compare like against like.
+//! All baselines are thin [`SolverSpec`](crate::engine::SolverSpec)
+//! configurations of the one iteration engine ([`crate::engine`]) and
+//! report cost through the same `IterCost`/`SimClock` machinery as the
+//! coordinator, so the regenerated figures compare like against like —
+//! and all of them inherit the engine axes (worker-pool parallelism,
+//! selection strategies, `scanned` accounting) for free.
 
 pub mod admm;
 pub mod cdm;
@@ -23,7 +27,11 @@ pub mod grock;
 pub mod sparsa;
 
 pub use admm::{admm, AdmmOptions};
-pub use cdm::{cdm, cdm_with_selection};
+pub use cdm::cdm;
+#[allow(deprecated)] // one-release compat shim for the old variant matrix
+pub use cdm::cdm_with_selection;
 pub use fista::fista;
-pub use grock::{greedy_1bcd, grock, grock_with_selection};
+pub use grock::{greedy_1bcd, grock};
+#[allow(deprecated)] // one-release compat shim for the old variant matrix
+pub use grock::grock_with_selection;
 pub use sparsa::{sparsa, SparsaOptions};

@@ -6,10 +6,17 @@
 //! `α_k = ⟨Δg, Δx⟩ / ⟨Δx, Δx⟩` (clamped to [α_min, α_max]),
 //! try `x⁺ = prox_{G/α}(x − ∇F(x)/α)` and accept when
 //! `V(x⁺) ≤ max_{j≤M} V(x^{k−j}) − σ·α/2·‖x⁺ − x‖²`, else `α *= 5`.
+//!
+//! Since the `SolverCore` refactor SpaRSA is the
+//! [`SolverSpec::sparsa`](crate::engine::SolverSpec::sparsa) configuration
+//! of the one iteration engine ([`crate::engine`]): the BB curvature pair
+//! and the acceptance distances are ordered chunked reductions over the
+//! persistent [`WorkerPool`](crate::parallel::WorkerPool)
+//! (bitwise thread-count-invariant), `SolveReport::scanned` is accounted,
+//! and selection strategies can restrict the update set.
 
-use crate::coordinator::driver::RunState;
-use crate::coordinator::{CommonOptions, SolveReport, StopReason};
-use crate::metrics::IterCost;
+use crate::coordinator::{CommonOptions, SolveReport};
+use crate::engine::{self, SolverSpec};
 use crate::problems::Problem;
 
 /// SpaRSA hyper-parameters (defaults = the paper's §VI settings).
@@ -40,105 +47,7 @@ pub fn sparsa(
     common: &CommonOptions,
     opts: &SparsaOptions,
 ) -> SolveReport {
-    let n = problem.n();
-    let p_cores = common.cores.max(1);
-    let mut x = x0.to_vec();
-    let mut aux = vec![0.0; problem.aux_len()];
-    problem.init_aux(&x, &mut aux);
-    let mut grad = vec![0.0; n];
-    let mut grad_prev = vec![0.0; n];
-    let mut x_prev = vec![0.0; n];
-    let mut trial = vec![0.0; n];
-    let mut step_buf = vec![0.0; n];
-    let mut aux_trial = vec![0.0; problem.aux_len()];
-
-    let mut state = RunState::new(problem, common);
-    let mut v = problem.v_val(&x, &aux);
-    let mut v_hist: Vec<f64> = vec![v];
-    state.record(0, &x, &aux, v, 0);
-
-    problem.grad_full(&x, &aux, &mut grad);
-    let mut alpha = problem.lipschitz().max(1.0); // first-iteration curvature
-    let mut stop = StopReason::MaxIters;
-    let mut iters = 0usize;
-
-    for k in 0..common.max_iters {
-        iters = k + 1;
-
-        // BB curvature from the last accepted pair
-        if k > 0 {
-            let (mut num, mut den) = (0.0, 0.0);
-            for i in 0..n {
-                let dx = x[i] - x_prev[i];
-                let dg = grad[i] - grad_prev[i];
-                num += dx * dg;
-                den += dx * dx;
-            }
-            if den > 0.0 && num > 0.0 {
-                alpha = (num / den).clamp(opts.alpha_min, opts.alpha_max);
-            } else {
-                // negative curvature (nonconvex F): fall back to the global
-                // Lipschitz bound — conservative but bounded, so the method
-                // neither blows up nor ratchets the step to zero
-                alpha = problem.lipschitz().clamp(opts.alpha_min, opts.alpha_max);
-            }
-        }
-
-        let v_ref = v_hist.iter().copied().fold(f64::NEG_INFINITY, f64::max);
-        let mut trials = 0usize;
-        let (v_new, moved_sq) = loop {
-            trials += 1;
-            for i in 0..n {
-                step_buf[i] = x[i] - grad[i] / alpha;
-            }
-            problem.prox_full(&step_buf, 1.0 / alpha, &mut trial);
-            problem.init_aux(&trial, &mut aux_trial);
-            let v_trial = problem.v_val(&trial, &aux_trial);
-            let mut d2 = 0.0;
-            for i in 0..n {
-                let d = trial[i] - x[i];
-                d2 += d * d;
-            }
-            if v_trial <= v_ref - 0.5 * opts.sigma * alpha * d2 || trials > 60 {
-                break (v_trial, d2);
-            }
-            alpha = (alpha * opts.eta).min(opts.alpha_max);
-        };
-
-        // accept
-        x_prev.copy_from_slice(&x);
-        grad_prev.copy_from_slice(&grad);
-        x.copy_from_slice(&trial);
-        aux.copy_from_slice(&aux_trial);
-        v = v_new;
-        v_hist.push(v);
-        if v_hist.len() > opts.memory {
-            v_hist.remove(0);
-        }
-        problem.grad_full(&x, &aux, &mut grad);
-
-        let per_matvec = problem.flops_grad_full() / 2.0;
-        state.charge(IterCost::balanced(
-            problem.flops_grad_full()
-                + trials as f64 * (per_matvec + problem.flops_obj() + 4.0 * n as f64)
-                + 6.0 * n as f64,
-            p_cores,
-            problem.aux_len() as f64,
-            1.0 + trials as f64,
-        ));
-
-        state.record(k + 1, &x, &aux, v, problem.blocks().n_blocks());
-        if moved_sq.sqrt() < 1e-14 && k > 3 {
-            stop = StopReason::Stalled;
-            break;
-        }
-        if let Some(reason) = state.stop_check(k) {
-            stop = reason;
-            break;
-        }
-    }
-
-    state.finish(x, &aux, v, iters, stop)
+    engine::solve(problem, x0, &SolverSpec::sparsa(common.clone(), opts))
 }
 
 #[cfg(test)]
@@ -146,7 +55,7 @@ mod tests {
     use super::*;
     use crate::coordinator::TermMetric;
     use crate::datagen::{nesterov_lasso, nonconvex_qp};
-    use crate::problems::{LassoProblem, NonconvexQpProblem};
+    use crate::problems::{LassoProblem, NonconvexQpProblem, Problem};
 
     #[test]
     fn converges_on_small_lasso() {
@@ -183,5 +92,24 @@ mod tests {
         );
         // solution respects the box
         assert!(r.x.iter().all(|&xi| xi.abs() <= 1.0 + 1e-12));
+    }
+
+    #[test]
+    fn newly_parallel_sparsa_is_thread_count_invariant() {
+        let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
+        let mk = |threads: usize| CommonOptions {
+            max_iters: 60,
+            tol: 0.0,
+            term: TermMetric::RelErr,
+            threads,
+            name: "SpaRSA".into(),
+            ..Default::default()
+        };
+        let r1 = sparsa(&p, &vec![0.0; p.n()], &mk(1), &SparsaOptions::default());
+        for threads in [2usize, 4] {
+            let rt = sparsa(&p, &vec![0.0; p.n()], &mk(threads), &SparsaOptions::default());
+            assert_eq!(r1.x, rt.x, "threads={threads}");
+            assert_eq!(r1.final_obj, rt.final_obj);
+        }
     }
 }

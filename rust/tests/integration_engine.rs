@@ -1,0 +1,243 @@
+//! Engine equivalence suite: every solver family routed through the one
+//! `SolverCore` iteration engine must produce **bitwise-identical**
+//! iterates for any worker-thread count on the paper's problem families,
+//! and reruns with the same configuration (and seed, for the randomized
+//! strategies) must reproduce exactly. This pins the multi-layer refactor:
+//! phase composition over the shared pool is iterate-preserving, and the
+//! baselines' new parallelism (fista/sparsa/admm) inherits the repo-wide
+//! determinism contract. The bitwise identity against the *pre-refactor*
+//! loop itself is asserted by the frozen legacy baseline in
+//! `bench::engine_overhead` (unit test + `bench engine` panel).
+
+use flexa::coordinator::{CommonOptions, SelectionSpec, TermMetric};
+use flexa::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+use flexa::engine::{self, SolverSpec};
+use flexa::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, Problem};
+use flexa::solvers::{AdmmOptions, SparsaOptions};
+
+fn common(name: &str, max_iters: usize, term: TermMetric) -> CommonOptions {
+    CommonOptions {
+        max_iters,
+        max_wall_s: 120.0,
+        tol: 0.0, // fixed work: compare identical trajectories
+        term,
+        merit_every: 10,
+        name: name.into(),
+        ..Default::default()
+    }
+}
+
+/// Run `build(threads)` at threads ∈ {1, 2, 4} and require bitwise-equal
+/// iterates, objective, iteration count, and scan accounting.
+fn assert_threads_bitwise(
+    problem: &dyn Problem,
+    build: &dyn Fn(usize) -> SolverSpec,
+    label: &str,
+) {
+    let x0 = vec![0.0; problem.n()];
+    let r1 = engine::solve(problem, &x0, &build(1));
+    assert!(
+        r1.final_obj.is_finite(),
+        "{label}: non-finite objective at threads=1"
+    );
+    for threads in [2usize, 4] {
+        let rt = engine::solve(problem, &x0, &build(threads));
+        assert_eq!(r1.iters, rt.iters, "{label}: iters @ threads={threads}");
+        assert_eq!(r1.scanned, rt.scanned, "{label}: scanned @ threads={threads}");
+        assert_eq!(
+            r1.final_obj, rt.final_obj,
+            "{label}: objective @ threads={threads}"
+        );
+        for i in 0..problem.n() {
+            assert!(
+                r1.x[i] == rt.x[i],
+                "{label}: x[{i}] {} != {} @ threads={threads}",
+                r1.x[i],
+                rt.x[i]
+            );
+        }
+    }
+}
+
+/// The engine-routed families that run on every problem kind (GRock and
+/// ADMM are LASSO-regime solvers and are swept separately), with the
+/// iteration budgets the bitwise sweep uses.
+fn coordinator_specs(threads: usize, iters: usize, term: TermMetric) -> Vec<(String, SolverSpec)> {
+    let mk = |name: &str| {
+        let mut c = common(name, iters, term);
+        c.threads = threads;
+        c
+    };
+    vec![
+        (
+            "flexa".into(),
+            SolverSpec::flexa(mk("flexa"), SelectionSpec::sigma(0.5), None),
+        ),
+        (
+            "gauss-jacobi".into(),
+            SolverSpec::gauss_jacobi(mk("gj"), None, 4),
+        ),
+        (
+            "gj-flexa".into(),
+            SolverSpec::gauss_jacobi(mk("gj-flexa"), Some(SelectionSpec::sigma(0.5)), 4),
+        ),
+        ("cdm".into(), SolverSpec::cdm(mk("cdm"), true)),
+        ("fista".into(), SolverSpec::fista(mk("fista"))),
+        (
+            "sparsa".into(),
+            SolverSpec::sparsa(mk("sparsa"), &SparsaOptions::default()),
+        ),
+    ]
+}
+
+#[test]
+fn engine_families_bitwise_across_threads_on_lasso() {
+    let p = LassoProblem::from_instance(nesterov_lasso(50, 70, 0.1, 1.0, 17));
+    for idx in 0..coordinator_specs(1, 1, TermMetric::RelErr).len() {
+        let build = |threads: usize| {
+            coordinator_specs(threads, 120, TermMetric::RelErr)[idx].1.clone()
+        };
+        let label = coordinator_specs(1, 1, TermMetric::RelErr)[idx].0.clone();
+        assert_threads_bitwise(&p, &build, &label);
+    }
+    // GRock and ADMM are LASSO-regime solvers: covered here
+    let pg = LassoProblem::from_instance(nesterov_lasso(80, 100, 0.02, 1.0, 7));
+    assert_threads_bitwise(
+        &pg,
+        &|threads| {
+            let mut c = common("grock", 30, TermMetric::RelErr);
+            c.threads = threads;
+            SolverSpec::grock(c, 5)
+        },
+        "grock",
+    );
+    assert_threads_bitwise(
+        &p,
+        &|threads| {
+            let mut c = common("admm", 80, TermMetric::RelErr);
+            c.threads = threads;
+            SolverSpec::admm(c, &AdmmOptions::default())
+        },
+        "admm",
+    );
+}
+
+#[test]
+fn engine_families_bitwise_across_threads_on_logistic() {
+    let p = LogisticProblem::from_instance(logistic_like(LogisticPreset::Gisette, 0.012, 9));
+    for idx in 0..coordinator_specs(1, 1, TermMetric::Merit).len() {
+        let build = |threads: usize| {
+            coordinator_specs(threads, 40, TermMetric::Merit)[idx].1.clone()
+        };
+        let label = coordinator_specs(1, 1, TermMetric::Merit)[idx].0.clone();
+        assert_threads_bitwise(&p, &build, &label);
+    }
+}
+
+#[test]
+fn engine_families_bitwise_across_threads_on_nonconvex_qp() {
+    let p = NonconvexQpProblem::from_instance(nonconvex_qp(40, 60, 0.1, 10.0, 50.0, 1.0, 12));
+    for idx in 0..coordinator_specs(1, 1, TermMetric::Merit).len() {
+        let build = |threads: usize| {
+            coordinator_specs(threads, 60, TermMetric::Merit)[idx].1.clone()
+        };
+        let label = coordinator_specs(1, 1, TermMetric::Merit)[idx].0.clone();
+        assert_threads_bitwise(&p, &build, &label);
+    }
+}
+
+#[test]
+fn newly_parallel_fista_and_sparsa_reproduce_per_run() {
+    // seed/rerun reproducibility for the baselines the engine made
+    // pool-parallel: identical configs ⇒ identical trajectories
+    let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 23));
+    let x0 = vec![0.0; p.n()];
+    for (label, spec) in [
+        (
+            "fista",
+            SolverSpec::fista(common("fista", 80, TermMetric::RelErr)),
+        ),
+        (
+            "sparsa",
+            SolverSpec::sparsa(
+                common("sparsa", 80, TermMetric::RelErr),
+                &SparsaOptions::default(),
+            ),
+        ),
+    ] {
+        let a = engine::solve(&p, &x0, &spec);
+        let b = engine::solve(&p, &x0, &spec);
+        assert_eq!(a.iters, b.iters, "{label}");
+        assert!(a.x.iter().zip(&b.x).all(|(u, v)| u == v), "{label}: rerun diverged");
+    }
+}
+
+#[test]
+fn sketched_fista_is_seed_reproducible_and_seed_sensitive() {
+    // the selection axis fista gained: same seed ⇒ identical run,
+    // different seed ⇒ (generically) different trajectory
+    let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 29));
+    let x0 = vec![0.0; p.n()];
+    let run = |seed: u64| {
+        let spec = SolverSpec::fista(common("fista-hybrid", 60, TermMetric::RelErr))
+            .with_selection(SelectionSpec::Hybrid { frac: 0.5, sigma: 0.5, seed });
+        engine::solve(&p, &x0, &spec)
+    };
+    let a = run(42);
+    let b = run(42);
+    assert_eq!(a.scanned, b.scanned);
+    assert!(a.x.iter().zip(&b.x).all(|(u, v)| u == v), "same seed diverged");
+    let c = run(43);
+    assert!(
+        a.x.iter().zip(&c.x).any(|(u, v)| u != v),
+        "different seeds produced identical iterates"
+    );
+}
+
+#[test]
+fn baselines_account_scans_through_the_engine() {
+    // scanned was previously only tracked by the coordinator loops; the
+    // engine accounts it for every family
+    let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 31));
+    let x0 = vec![0.0; p.n()];
+    let nb = p.blocks().n_blocks();
+    for (label, spec) in [
+        ("fista", SolverSpec::fista(common("fista", 30, TermMetric::RelErr))),
+        (
+            "sparsa",
+            SolverSpec::sparsa(common("sparsa", 30, TermMetric::RelErr), &SparsaOptions::default()),
+        ),
+        (
+            "admm",
+            SolverSpec::admm(common("admm", 30, TermMetric::RelErr), &AdmmOptions::default()),
+        ),
+    ] {
+        let r = engine::solve(&p, &x0, &spec);
+        assert_eq!(r.scanned, r.iters * nb, "{label}: full-vector scan accounting");
+    }
+}
+
+#[test]
+fn engine_equivalence_matches_classic_solver_wrappers() {
+    // the thin public wrappers must be pure aliases of the engine specs
+    let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 37));
+    let x0 = vec![0.0; p.n()];
+    let c = common("wrap", 60, TermMetric::RelErr);
+
+    let via_wrapper = flexa::solvers::fista(&p, &x0, &c);
+    let via_engine = engine::solve(&p, &x0, &SolverSpec::fista(c.clone()));
+    assert_eq!(via_wrapper.x, via_engine.x);
+
+    let via_wrapper = flexa::coordinator::flexa(
+        &p,
+        &x0,
+        &flexa::coordinator::FlexaOptions {
+            common: c.clone(),
+            selection: SelectionSpec::sigma(0.5),
+            inexact: None,
+        },
+    );
+    let via_engine =
+        engine::solve(&p, &x0, &SolverSpec::flexa(c, SelectionSpec::sigma(0.5), None));
+    assert_eq!(via_wrapper.x, via_engine.x);
+}

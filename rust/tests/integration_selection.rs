@@ -8,8 +8,8 @@ use flexa::coordinator::{
     SelectionSpec, TermMetric,
 };
 use flexa::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+use flexa::engine::{self, SolverSpec};
 use flexa::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, Problem};
-use flexa::solvers::{cdm_with_selection, grock_with_selection};
 
 /// All six strategy families of the subsystem.
 fn all_specs() -> Vec<SelectionSpec> {
@@ -243,12 +243,10 @@ fn cdm_and_grock_route_through_the_strategy_trait() {
         name: "cdm-cyclic".into(),
         ..Default::default()
     };
-    let r = cdm_with_selection(
+    let r = engine::solve(
         &p,
         &vec![0.0; p.n()],
-        &common,
-        false,
-        &SelectionSpec::Cyclic { frac: 0.25 },
+        &SolverSpec::cdm_with(common.clone(), false, SelectionSpec::Cyclic { frac: 0.25 }),
     );
     assert!(r.converged(), "cdm cyclic:0.25 stop={:?} re={}", r.stop, r.final_rel_err);
     // the sketch really is a quarter-sweep
@@ -259,11 +257,10 @@ fn cdm_and_grock_route_through_the_strategy_trait() {
     // than its P simultaneous updates can collide on) to converge — same
     // regime as the paper's §VI instance
     let pg = LassoProblem::from_instance(nesterov_lasso(80, 100, 0.02, 1.0, 7));
-    let rg = grock_with_selection(
+    let rg = engine::solve(
         &pg,
         &vec![0.0; pg.n()],
-        &common,
-        &SelectionSpec::TopK { k: 4 },
+        &SolverSpec::grock_with(common, SelectionSpec::TopK { k: 4 }),
     );
     assert!(rg.converged(), "grock topk:4 stop={:?} re={}", rg.stop, rg.final_rel_err);
     for t in &rg.trace.points[1..] {
