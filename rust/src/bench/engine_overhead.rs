@@ -46,6 +46,14 @@ const ABS_SLOP_S: f64 = 0.005;
 /// adaptive τ — the exact configuration the panel measures). Kept here
 /// solely as the overhead/equivalence baseline; production code routes
 /// through [`crate::engine`].
+///
+/// One deliberate deviation from the PR-3 transcription: the selective
+/// aux update uses the canonical per-shard partial buffers + fixed-order
+/// reduction of [`crate::parallel::shard`] (the sharded-backend PR moved
+/// *both* engine backends onto that one summation order), so the
+/// hand-rolled baseline keeps producing bitwise-identical iterates to
+/// the engine while still measuring the engine's phase-dispatch overhead
+/// against straight-line code.
 fn legacy_flexa(
     problem: &dyn Problem,
     x0: &[f64],
@@ -70,7 +78,6 @@ fn legacy_flexa(
     let mut aux_save = vec![0.0; problem.aux_len()];
     let mut x_old = vec![0.0; n];
     let mut dx = vec![0.0; n];
-    let mut moved = vec![false; nb];
 
     let br_chunks = parallel::reduce::best_response_chunks(problem);
     let prl_chunks = parallel::reduce::prelude_chunks(problem);
@@ -78,6 +85,12 @@ fn legacy_flexa(
     let e_chunks = parallel::chunks_of(nb, parallel::MAX_CHUNKS);
     let mut max_partials: Vec<f64> = Vec::new();
     let total_br_flops: f64 = (0..nb).map(|i| problem.flops_best_response(i)).sum();
+    // canonical fixed-order reduction geometry (see the doc note above)
+    let shard_layout = parallel::ShardLayout::contiguous(blocks, p_cores);
+    let mut partials: Vec<Vec<f64>> =
+        (0..p_cores).map(|_| vec![0.0; problem.aux_len()]).collect();
+    let mut upd: Vec<usize> = Vec::with_capacity(nb);
+    let mut active_shards: Vec<usize> = Vec::with_capacity(p_cores);
 
     let tau_opts = common
         .tau
@@ -110,6 +123,7 @@ fn legacy_flexa(
         x_old.copy_from_slice(&x);
         let mut active = 0usize;
         let mut update_flops = 0.0;
+        upd.clear();
         for &i in &sel {
             let r = blocks.range(i);
             let mut any = false;
@@ -120,23 +134,24 @@ fn legacy_flexa(
                     any = true;
                 }
             }
-            moved[i] = any;
             if any {
                 for j in r {
                     x[j] += dx[j];
                 }
                 update_flops += problem.flops_aux_update(i);
                 active += 1;
+                upd.push(i);
             }
         }
-        parallel::for_each_row_chunk(pool, &mut aux, &aux_chunks, &|_c, rows, aux_rows| {
-            for &i in &sel {
-                if moved[i] {
-                    let r = blocks.range(i);
-                    problem.apply_block_delta_rows(i, &dx[r], aux_rows, rows.clone());
-                }
-            }
-        });
+        parallel::accumulate_partials(
+            pool,
+            &shard_layout,
+            &upd,
+            &mut partials,
+            &mut active_shards,
+            &|_s, i, partial| problem.apply_block_delta(i, &dx[blocks.range(i)], partial),
+        );
+        parallel::reduce_partials_into(pool, &partials, &active_shards, &mut aux, &aux_chunks);
 
         let v_new = problem.v_val(&x, &aux);
         match tau_ctl.observe(v_new, state.step_metric()) {

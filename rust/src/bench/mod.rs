@@ -5,6 +5,7 @@
 pub mod engine_overhead;
 pub mod figures;
 pub mod harness;
+pub mod shard_panel;
 
 pub use engine_overhead::engine_overhead;
 pub use figures::{
@@ -12,3 +13,4 @@ pub use figures::{
     BenchConfig, FigureOutput,
 };
 pub use harness::{bench, bench_scaling, BenchResult, ScalingPoint};
+pub use shard_panel::shard_panel;

@@ -1,0 +1,217 @@
+//! `bench shard` — the sharded-backend panel.
+//!
+//! Two claims back the column-sharded distributed-memory backend, and
+//! this panel asserts both on every measured thread count across the
+//! paper's three problem families:
+//!
+//! 1. **equivalence** — `--backend sharded` produces **bitwise-identical**
+//!    iterates to `--backend shared` (a hard assertion, not a tolerance):
+//!    both backends fold per-shard partial residual buffers in one
+//!    canonical fixed order, and no sharded worker ever touches a full
+//!    copy of `A`;
+//! 2. **the simulator's time axis is honest** — the cluster
+//!    [`CostModel`](crate::simulator::CostModel) *predicts* reduction
+//!    rounds per iteration; the sharded run *measures* the allreduces it
+//!    actually performs. The panel reports measured vs predicted rounds
+//!    (and the broadcast bill the sequential CDM sweep pays, which the
+//!    cost model deliberately prices at zero rounds — the paper's point
+//!    about Gauss-Seidel methods at scale).
+//!
+//! Results land in `results/BENCH_4.json` (uploaded by the CI bench job,
+//! following the `BENCH_smoke.json` / `BENCH_3.json` trajectory
+//! convention).
+
+use super::figures::{BenchConfig, FigureOutput};
+use crate::bail;
+use crate::coordinator::{Backend, CommonOptions, TermMetric};
+use crate::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+use crate::engine::{self, SolverSpec};
+use crate::metrics::TextTable;
+use crate::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, Problem};
+use crate::util::error::Result;
+use crate::util::Json;
+
+/// Fixed iteration count: both backends do exactly the same work.
+const ITERS: usize = 40;
+/// Simulated cores = shard count (the paper's 8-node cluster shape).
+const CORES: usize = 8;
+
+/// Solver families with a sharded path, per problem kind (GRock pins
+/// τ = 0, which the nonconvex QP's convexity floor forbids).
+fn solvers_for(problem_kind: &str) -> &'static [&'static str] {
+    match problem_kind {
+        "nonconvex-qp" => &["flexa", "gauss-jacobi", "cdm"],
+        _ => &["flexa", "gauss-jacobi", "grock", "cdm"],
+    }
+}
+
+/// The sharded-backend panel: backend equivalence + measured-vs-predicted
+/// communication, per problem family × solver × thread count. Bails when
+/// any pair of runs diverges bitwise; writes `BENCH_4.json`.
+pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
+    let (m, n) = cfg.dims(600, 1200);
+    let gisette_scale = (0.05 * cfg.scale).clamp(0.004, 1.0);
+    let problems: Vec<(&str, Box<dyn Problem>)> = vec![
+        (
+            "lasso",
+            Box::new(LassoProblem::from_instance(nesterov_lasso(
+                m,
+                n,
+                0.05,
+                1.0,
+                cfg.seed + 21,
+            ))),
+        ),
+        (
+            "logistic",
+            Box::new(LogisticProblem::from_instance(logistic_like(
+                LogisticPreset::Gisette,
+                gisette_scale,
+                cfg.seed + 22,
+            ))),
+        ),
+        (
+            "nonconvex-qp",
+            Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
+                m.min(n),
+                n,
+                0.05,
+                10.0,
+                50.0,
+                1.0,
+                cfg.seed + 23,
+            ))),
+        ),
+    ];
+
+    let mut table = TextTable::new(&[
+        "problem",
+        "solver",
+        "threads",
+        "bitwise",
+        "allreduce",
+        "bcast",
+        "predicted",
+        "meas/pred",
+    ]);
+    let mut rows = Vec::new();
+
+    for (kind, problem) in &problems {
+        let x0 = vec![0.0; problem.n()];
+        let term = if problem.v_star().is_some() { TermMetric::RelErr } else { TermMetric::Merit };
+        for &solver in solvers_for(kind) {
+            for &threads in &cfg.threads {
+                let mk = |backend: Backend| -> Result<SolverSpec> {
+                    let common = CommonOptions {
+                        max_iters: ITERS,
+                        max_wall_s: f64::MAX,
+                        tol: 0.0, // fixed work: both backends run exactly ITERS
+                        term,
+                        cores: CORES,
+                        threads,
+                        trace_every: ITERS,
+                        cost_model: cfg.model,
+                        backend,
+                        name: format!("{solver}@{}", backend.name()),
+                        ..Default::default()
+                    };
+                    SolverSpec::from_name(solver, common, None, 0.5, CORES)
+                        .map_err(|e| crate::anyhow!(e))
+                };
+                let shared = engine::solve(problem.as_ref(), &x0, &mk(Backend::Shared)?);
+                let sharded = engine::solve(problem.as_ref(), &x0, &mk(Backend::Sharded)?);
+
+                if shared.x != sharded.x || shared.final_obj != sharded.final_obj {
+                    bail!(
+                        "sharded backend diverged from shared on {kind}/{solver} at \
+                         threads={threads} — the column-distributed path must be \
+                         iterate-preserving"
+                    );
+                }
+                let comm = sharded.comm;
+                let measured = comm.data_rounds() as f64;
+                let predicted = sharded.predicted_rounds;
+                let ratio = if predicted > 0.0 { measured / predicted } else { f64::NAN };
+                table.row(vec![
+                    (*kind).to_string(),
+                    solver.to_string(),
+                    threads.to_string(),
+                    "yes".into(),
+                    comm.allreduce_rounds.to_string(),
+                    comm.broadcast_rounds.to_string(),
+                    format!("{predicted:.0}"),
+                    if ratio.is_finite() { format!("{ratio:.2}") } else { "n/a".into() },
+                ]);
+                rows.push(Json::obj(vec![
+                    ("problem", Json::str(*kind)),
+                    ("solver", Json::str(solver)),
+                    ("threads", Json::Num(threads as f64)),
+                    ("iters", Json::Num(sharded.iters as f64)),
+                    ("bitwise_equal", Json::Bool(true)),
+                    ("allreduce_rounds", Json::Num(comm.allreduce_rounds as f64)),
+                    ("allreduce_words", Json::Num(comm.allreduce_words)),
+                    ("broadcast_rounds", Json::Num(comm.broadcast_rounds as f64)),
+                    ("broadcast_words", Json::Num(comm.broadcast_words)),
+                    ("sync_rounds", Json::Num(comm.sync_rounds as f64)),
+                    ("predicted_rounds", Json::Num(predicted)),
+                    ("predicted_words", Json::Num(sharded.predicted_words)),
+                    ("measured_over_predicted", Json::Num(ratio)),
+                ]));
+            }
+        }
+    }
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("shard_backend_panel")),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("cores", Json::Num(CORES as f64)),
+        ("iters", Json::Num(ITERS as f64)),
+        ("runs", Json::arr(rows)),
+    ]);
+    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    let path = format!("{}/BENCH_4.json", cfg.out_dir);
+    let _ = std::fs::write(&path, payload.to_string_compact());
+
+    let text = format!(
+        "sharded-backend panel ({CORES} shards, {ITERS} fixed iters; sharded iterates \
+         bitwise-identical to shared on every run; `allreduce`/`bcast` are measured \
+         exchange rounds, `predicted` is the cost model's Σ reduce_rounds) -> {path}\n{}",
+        table.render()
+    );
+    Ok(FigureOutput { id: "bench_shard".into(), traces: vec![], text })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_panel_asserts_equivalence_and_writes_json() {
+        let cfg = BenchConfig {
+            scale: 0.05,
+            budget_s: 1.0,
+            out_dir: std::env::temp_dir()
+                .join("flexa_bench_shard_test")
+                .to_string_lossy()
+                .into_owned(),
+            model: crate::simulator::CostModel::default(),
+            seed: 9,
+            threads: vec![1, 2],
+        };
+        let out = shard_panel(&cfg).expect("panel must pass");
+        assert!(out.text.contains("BENCH_4.json"));
+        let text = std::fs::read_to_string(format!("{}/BENCH_4.json", cfg.out_dir))
+            .expect("BENCH_4.json written");
+        let json = Json::parse(&text).expect("valid json");
+        let runs = json.get("runs").and_then(|r| r.as_arr()).expect("runs array");
+        // 2 problems × 4 solvers + 1 problem × 3 solvers, × 2 thread counts
+        assert_eq!(runs.len(), (2 * 4 + 3) * 2);
+        for r in runs {
+            assert_eq!(r.get("bitwise_equal"), Some(&Json::Bool(true)));
+            let ar = r.get("allreduce_rounds").and_then(|v| v.as_f64()).unwrap();
+            let bc = r.get("broadcast_rounds").and_then(|v| v.as_f64()).unwrap();
+            assert!(ar + bc > 0.0, "no communication measured: {r:?}");
+        }
+    }
+}

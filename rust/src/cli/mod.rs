@@ -8,11 +8,13 @@
 //!   all nine solver names, `admm` included, dispatch through the one
 //!   validated [`SolverSpec::from_name`] constructor);
 //! * `flexa bench
-//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine|smoke|all>`
+//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine|shard|smoke|all>`
 //!   — regenerate the paper's figures/tables into `results/` (`selection`
 //!   is the strategy-comparison panel; `engine` is the SolverCore
-//!   overhead panel writing `BENCH_3.json`; `smoke` is the seconds-long
-//!   CI target that also writes `BENCH_smoke.json`);
+//!   overhead panel writing `BENCH_3.json`; `shard` is the sharded-backend
+//!   panel proving bitwise backend equivalence and comparing measured vs
+//!   predicted allreduce rounds into `BENCH_4.json`; `smoke` is the
+//!   seconds-long CI target that also writes `BENCH_smoke.json`);
 //! * `flexa runtime-check` — load + execute every artifact and compare
 //!   against the native engine (the L1↔L3 smoke test);
 //! * `flexa info` — platform, artifact, and cost-model report.
@@ -21,7 +23,7 @@ pub mod args;
 
 use crate::bench::{self, BenchConfig};
 use crate::config::{ExperimentConfig, ProblemSpec};
-use crate::coordinator::{CommonOptions, SelectionSpec, TermMetric};
+use crate::coordinator::{Backend, CommonOptions, SelectionSpec, TermMetric};
 use crate::engine::{self, SolverSpec};
 use crate::metrics::{Trace, XAxis, YMetric};
 use crate::util::error::{Context, Result};
@@ -60,9 +62,9 @@ flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
 
 USAGE:
   flexa solve --config <file.toml> [--threads N] [--selection SPEC]
-              [--quiet|--verbose]
+              [--backend shared|sharded] [--quiet|--verbose]
   flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine
-               |smoke|all>
+               |shard|smoke|all>
   flexa runtime-check
   flexa info
 
@@ -81,6 +83,12 @@ OPTIONS:
                       greedy[:sigma] | jacobi | gauss-southwell | topk:<k>
                       | cyclic[:frac] | random[:frac] | importance[:frac]
                       | hybrid[:frac[:sigma]]   (e.g. hybrid:0.25)
+  --backend B         engine data plane for every solver in the config:
+                      shared (one address space, default) or sharded (the
+                      column-distributed owner-computes model with a
+                      measured fixed-order allreduce; bitwise-identical
+                      iterates, scan/sweep solvers on
+                      lasso|logistic|nonconvex-qp only)
 
 ENV:
   FLEXA_BENCH_SCALE    instance scale vs the paper (default 0.2)
@@ -108,6 +116,12 @@ fn cmd_solve(args: &Args) -> Result<i32> {
     // `--threads` overrides every solver's configured worker count
     let threads_override = args.value_usize("threads");
 
+    // `--backend` overrides every solver's configured data plane
+    let backend_cli: Option<Backend> = match args.value("backend") {
+        Some(s) => Some(Backend::parse(s).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
+
     // selection strategy: CLI `--selection` > config `[selection]` >
     // per-solver greedy σ-rule
     let sel_cli: Option<SelectionSpec> = match args.value("selection") {
@@ -132,6 +146,21 @@ fn cmd_solve(args: &Args) -> Result<i32> {
             Some(s) => format!("{}+{}", settings.name, s.name()),
             None => settings.name.clone(),
         };
+        // backend override (CLI > per-solver/config `backend` key); the
+        // sharded data plane needs column-shard views, which the
+        // group-lasso generator does not provide yet
+        let backend = match backend_cli {
+            Some(b) => b,
+            None => Backend::parse(&settings.backend).map_err(|e| anyhow!(e))?,
+        };
+        if backend == Backend::Sharded
+            && matches!(cfg.problem, ProblemSpec::GroupLasso { .. })
+        {
+            bail!(
+                "backend \"sharded\" supports kind = lasso | logistic | nonconvex-qp \
+                 (group-lasso has no column-shard view yet)"
+            );
+        }
         let common = CommonOptions {
             max_iters: cfg.max_iters,
             max_wall_s: cfg.max_wall_s,
@@ -141,6 +170,7 @@ fn cmd_solve(args: &Args) -> Result<i32> {
             threads: threads_override.unwrap_or(settings.threads),
             trace_every: cfg.trace_every,
             cost_model: model,
+            backend,
             name: run_name,
             ..Default::default()
         };
@@ -225,6 +255,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         "ablations" => run(bench::ablations(&cfg)),
         "selection" => run(vec![bench::selection_panel(&cfg)]),
         "engine" => run(vec![bench::engine_overhead(&cfg)?]),
+        "shard" => run(vec![bench::shard_panel(&cfg)?]),
         "smoke" => run(vec![bench::smoke(&cfg)]),
         "all" => {
             run(vec![bench::table1(&cfg)]);
@@ -236,6 +267,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
             run(bench::ablations(&cfg));
             run(vec![bench::selection_panel(&cfg)]);
             run(vec![bench::engine_overhead(&cfg)?]);
+            run(vec![bench::shard_panel(&cfg)?]);
         }
         other => bail!("unknown bench target {other:?}"),
     }

@@ -18,6 +18,7 @@
 //! sigma = 0.5                    # shared defaults, overridable per solver
 //! cores = 4
 //! threads = 1
+//! backend = "shared"             # shared | sharded (engine data plane)
 //!
 //! [problem]
 //! kind = "lasso"                 # lasso | group-lasso | logistic | nonconvex-qp
@@ -34,6 +35,7 @@
 //! [solver.flexa]                 # per-solver overrides
 //! sigma = 0.5
 //! threads = 4
+//! backend = "sharded"
 //!
 //! [run]
 //! max_iters = 500
@@ -62,6 +64,29 @@
 //! go through the same constructor
 //! (`coordinator::SelectionSpec::from_parts`) and are documented in the
 //! README's selection axis section.
+//!
+//! ## `backend`
+//!
+//! Which data plane the iteration engine runs on (CLI override:
+//! `--backend <shared|sharded>`):
+//!
+//! * `"shared"` (default) — one address space; every worker thread may
+//!   read the full data matrix.
+//! * `"sharded"` — the paper's column-distributed owner-computes model:
+//!   the problem is split into `cores` contiguous column shards (the
+//!   Gauss-Jacobi solvers shard by processor group), each worker computes
+//!   best responses and partial residual deltas **from its own columns
+//!   only**, and the ranks agree on the auxiliary vector through the
+//!   deterministic fixed-order in-process allreduce of
+//!   `crate::parallel::shard`. Iterates are guaranteed
+//!   **bitwise-identical** to `"shared"` (both backends share one
+//!   canonical summation order; `tests/integration_golden.rs` pins it),
+//!   and the actually-exchanged rounds/words are measured into
+//!   `SolveReport::comm` — `bench shard` compares them against the
+//!   cluster cost model's prediction. Supported for the scan/sweep
+//!   solvers (`flexa`, `gj-flexa`, `gauss-jacobi`, `grock`,
+//!   `greedy-1bcd`, `cdm`) on `lasso` / `logistic` / `nonconvex-qp`
+//!   problems; other combinations are rejected with an error.
 //!
 //! ## `cores` vs `threads`
 //!
@@ -132,8 +157,8 @@ pub struct SelectionSettings {
 /// table — into a validated engine
 /// [`SolverSpec`](crate::engine::SolverSpec) through the single
 /// constructor `SolverSpec::from_name`, so the config surface and the
-/// engine dispatch cannot diverge; solver names are validated against
-/// `SolverSpec::NAMES` already at parse time.
+/// engine dispatch cannot diverge; solver names (and the backend name)
+/// are validated already at parse time.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SolverSettings {
     /// "flexa" | "gj-flexa" | "gauss-jacobi" | "fista" | "sparsa" |
@@ -145,11 +170,15 @@ pub struct SolverSettings {
     pub cores: usize,
     /// physical worker threads (defaults to 1 on this container).
     pub threads: usize,
+    /// engine data-plane backend: "shared" (default) or "sharded" (the
+    /// column-distributed owner-computes path; scan/sweep solvers on
+    /// lasso/logistic/nonconvex-qp only).
+    pub backend: String,
 }
 
 impl Default for SolverSettings {
     fn default() -> Self {
-        Self { name: "flexa".into(), sigma: 0.5, cores: 1, threads: 1 }
+        Self { name: "flexa".into(), sigma: 0.5, cores: 1, threads: 1, backend: "shared".into() }
     }
 }
 
@@ -236,6 +265,16 @@ impl ExperimentConfig {
                 ));
             }
             let prefix = format!("solver.{name}");
+            let backend = doc
+                .get_str(&format!("{prefix}.backend"))
+                .or_else(|| doc.get_str("backend"))
+                .unwrap_or("shared")
+                .to_string();
+            if backend != "shared" && backend != "sharded" {
+                return Err(format!(
+                    "unknown backend {backend:?} for solver {name:?} (expected shared|sharded)"
+                ));
+            }
             solvers.push(SolverSettings {
                 sigma: doc
                     .get_f64(&format!("{prefix}.sigma"))
@@ -249,6 +288,7 @@ impl ExperimentConfig {
                     .get_usize(&format!("{prefix}.threads"))
                     .or_else(|| doc.get_usize("threads"))
                     .unwrap_or(1),
+                backend,
                 name,
             });
         }
@@ -356,6 +396,32 @@ tol = 1e-6
     fn unknown_kind_is_error() {
         let err = ExperimentConfig::from_toml("[problem]\nkind = \"svm\"").unwrap_err();
         assert!(err.contains("unknown problem.kind"));
+    }
+
+    #[test]
+    fn backend_defaults_shared_and_parses_sharded() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"lasso\"\nm = 20\nn = 30\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.solvers[0].backend, "shared");
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa, cdm\"\nbackend = \"sharded\"\n\
+             [problem]\nkind = \"lasso\"\nm = 20\nn = 30\n\
+             [solver.cdm]\nbackend = \"shared\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.solvers[0].backend, "sharded");
+        assert_eq!(cfg.solvers[1].backend, "shared", "per-solver override wins");
+    }
+
+    #[test]
+    fn unknown_backend_is_rejected_at_parse_time() {
+        let err = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\nbackend = \"mpi\"\n[problem]\nkind = \"lasso\"\nm = 20\nn = 30\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown backend"), "{err}");
     }
 
     #[test]

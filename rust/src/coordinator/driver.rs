@@ -2,7 +2,7 @@
 //! simulated clock and flop accounting.
 
 use super::{CommonOptions, SolveReport, StopReason, TermMetric};
-use crate::metrics::{IterCost, Trace, TracePoint};
+use crate::metrics::{CommStats, IterCost, Trace, TracePoint};
 use crate::problems::{relative_error, Problem};
 use crate::simulator::SimClock;
 use crate::util::Timer;
@@ -32,6 +32,13 @@ pub struct RunState<'a> {
     /// Total block scans (best-response evaluations); solvers add the
     /// candidate-set size every iteration.
     pub scanned: usize,
+    /// Communication measured by the sharded backend (zeros otherwise);
+    /// the engine copies its counters here before [`RunState::finish`].
+    pub comm: CommStats,
+    /// Reduction rounds predicted by the charged [`IterCost`]s.
+    pub predicted_rounds: f64,
+    /// f64 words the predicted rounds would move.
+    pub predicted_words: f64,
 }
 
 impl<'a> RunState<'a> {
@@ -49,12 +56,18 @@ impl<'a> RunState<'a> {
             last_ebound: f64::NAN,
             discarded: 0,
             scanned: 0,
+            comm: CommStats::default(),
+            predicted_rounds: 0.0,
+            predicted_words: 0.0,
         }
     }
 
-    /// Charge one iteration's cost to the simulated clock and flop counter.
+    /// Charge one iteration's cost to the simulated clock and flop counter
+    /// (and the predicted-communication axis `bench shard` validates).
     pub fn charge(&mut self, cost: IterCost) {
         self.flops += cost.flops_total;
+        self.predicted_rounds += cost.reduce_rounds;
+        self.predicted_words += cost.reduce_rounds * cost.reduce_words;
         self.clock.advance(&cost);
     }
 
@@ -153,6 +166,9 @@ impl<'a> RunState<'a> {
             flops: self.flops,
             discarded: self.discarded,
             scanned: self.scanned,
+            comm: self.comm,
+            predicted_rounds: self.predicted_rounds,
+            predicted_words: self.predicted_words,
             trace: self.trace,
         }
     }

@@ -29,7 +29,6 @@
 
 use super::{FlexaOptions, SolveReport};
 use crate::engine::{self, SolverSpec};
-use crate::parallel::WorkerPool;
 use crate::problems::Problem;
 
 /// Build the engine spec for Algorithm 1 from classic [`FlexaOptions`].
@@ -38,26 +37,13 @@ fn spec_of(opts: &FlexaOptions) -> SolverSpec {
 }
 
 /// Run FLEXA from `x0`. See [`FlexaOptions`]. Builds one per-solve
-/// [`WorkerPool`] from `opts.common.threads` (workers are spawned once,
-/// never per iteration).
+/// [`WorkerPool`](crate::parallel::WorkerPool) from `opts.common.threads`
+/// (workers are spawned once, never per iteration). To reuse a pool
+/// across solves, call
+/// [`engine::solve_with_pool`](crate::engine::solve_with_pool) with
+/// [`SolverSpec::flexa`].
 pub fn flexa(problem: &dyn Problem, x0: &[f64], opts: &FlexaOptions) -> SolveReport {
     engine::solve(problem, x0, &spec_of(opts))
-}
-
-/// FLEXA on a caller-provided worker pool (reusable across solves;
-/// `opts.common.threads` is superseded by the pool's worker count).
-#[deprecated(
-    since = "0.1.0",
-    note = "use `engine::solve_with_pool` with `SolverSpec::flexa` — the \
-            per-solver `_with_pool` variant matrix is folded into the engine"
-)]
-pub fn flexa_with_pool(
-    problem: &dyn Problem,
-    x0: &[f64],
-    opts: &FlexaOptions,
-    pool: &WorkerPool,
-) -> SolveReport {
-    engine::solve_with_pool(problem, x0, &spec_of(opts), pool)
 }
 
 #[cfg(test)]
@@ -192,15 +178,15 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_pool_shim_matches_engine_path() {
-        // the one-release compat shim must be a pure alias of the engine
+    fn pooled_engine_path_matches_wrapper() {
+        // the wrapper must be a pure alias of the engine's pooled path
         let p = LassoProblem::from_instance(nesterov_lasso(30, 40, 0.2, 1.0, 7));
         let mut o = small_opts(0.5);
         o.common.max_iters = 50;
         o.common.tol = 0.0;
-        let pool = WorkerPool::new(1);
-        #[allow(deprecated)]
-        let a = flexa_with_pool(&p, &vec![0.0; p.n()], &o, &pool);
+        let pool = crate::parallel::WorkerPool::new(1);
+        let spec = SolverSpec::flexa(o.common.clone(), o.selection.clone(), o.inexact);
+        let a = engine::solve_with_pool(&p, &vec![0.0; p.n()], &spec, &pool);
         let b = flexa(&p, &vec![0.0; p.n()], &o);
         assert_eq!(a.x, b.x);
         assert_eq!(a.final_obj, b.final_obj);

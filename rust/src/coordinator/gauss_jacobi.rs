@@ -24,7 +24,6 @@
 
 use super::{GaussJacobiOptions, SolveReport};
 use crate::engine::{self, SolverSpec};
-use crate::parallel::WorkerPool;
 use crate::problems::Problem;
 
 /// Build the engine spec for Algorithms 2/3 from classic
@@ -35,24 +34,12 @@ fn spec_of(opts: &GaussJacobiOptions) -> SolverSpec {
 
 /// Run Gauss-Jacobi (Algorithm 2) or GJ-with-Selection (Algorithm 3,
 /// when `opts.selection` is set) from `x0`. Builds one per-solve
-/// [`WorkerPool`] from `opts.common.threads`.
+/// [`WorkerPool`](crate::parallel::WorkerPool) from `opts.common.threads`;
+/// to reuse a pool across solves, call
+/// [`engine::solve_with_pool`](crate::engine::solve_with_pool) with
+/// [`SolverSpec::gauss_jacobi`].
 pub fn gauss_jacobi(problem: &dyn Problem, x0: &[f64], opts: &GaussJacobiOptions) -> SolveReport {
     engine::solve(problem, x0, &spec_of(opts))
-}
-
-/// Gauss-Jacobi on a caller-provided worker pool.
-#[deprecated(
-    since = "0.1.0",
-    note = "use `engine::solve_with_pool` with `SolverSpec::gauss_jacobi` — the \
-            per-solver `_with_pool` variant matrix is folded into the engine"
-)]
-pub fn gauss_jacobi_with_pool(
-    problem: &dyn Problem,
-    x0: &[f64],
-    opts: &GaussJacobiOptions,
-    pool: &WorkerPool,
-) -> SolveReport {
-    engine::solve_with_pool(problem, x0, &spec_of(opts), pool)
 }
 
 /// Convenience: GJ-FLEXA — Algorithm 3 with the paper's σ-rule.
@@ -177,14 +164,14 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_pool_shim_matches_engine_path() {
+    fn pooled_engine_path_matches_wrapper() {
         let p = LassoProblem::from_instance(nesterov_lasso(30, 40, 0.2, 1.0, 9));
         let mut o = opts(4);
         o.common.max_iters = 40;
         o.common.tol = 0.0;
-        let pool = WorkerPool::new(2);
-        #[allow(deprecated)]
-        let a = gauss_jacobi_with_pool(&p, &vec![0.0; p.n()], &o, &pool);
+        let pool = crate::parallel::WorkerPool::new(2);
+        let spec = SolverSpec::gauss_jacobi(o.common.clone(), o.selection.clone(), o.processors);
+        let a = engine::solve_with_pool(&p, &vec![0.0; p.n()], &spec, &pool);
         let b = gauss_jacobi(&p, &vec![0.0; p.n()], &o);
         assert_eq!(a.x, b.x);
     }

@@ -19,18 +19,53 @@ pub mod tau;
 pub mod workers;
 
 pub use flexa::flexa;
-#[allow(deprecated)] // one-release compat shim for the old variant matrix
-pub use flexa::flexa_with_pool;
 pub use gauss_jacobi::{gauss_jacobi, gj_flexa};
-#[allow(deprecated)] // one-release compat shim for the old variant matrix
-pub use gauss_jacobi::gauss_jacobi_with_pool;
 pub use selection::SelectionRule;
 pub use stepsize::StepRule;
 pub use strategy::{Candidates, SelectionSpec, SelectionStrategy};
 pub use tau::{TauController, TauDecision, TauOptions};
 
-use crate::metrics::Trace;
+use crate::metrics::{CommStats, Trace};
 use crate::simulator::CostModel;
+
+/// Which execution backend runs the iteration engine's data plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Single address space: every worker thread may read the full data
+    /// matrix (the classic in-memory path).
+    #[default]
+    Shared,
+    /// Column-sharded distributed-memory model: each of the `cores`
+    /// shards owns copies of exactly its columns of `A` and its block of
+    /// `x`; workers compute only over their own shard and agree on the
+    /// auxiliary vector through the deterministic fixed-order in-process
+    /// allreduce of [`crate::parallel::shard`]. Iterates are
+    /// bitwise-identical to [`Backend::Shared`] (pinned by
+    /// `tests/integration_golden.rs`); the exchanged rounds/words are
+    /// measured into [`SolveReport::comm`]. Supported by the scan/sweep
+    /// families (flexa, gj-flexa, gauss-jacobi, grock, greedy-1bcd, cdm)
+    /// on the lasso / logistic / nonconvex-qp problems.
+    Sharded,
+}
+
+impl Backend {
+    /// Parse the CLI/TOML backend name (`shared` | `sharded`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "shared" => Ok(Backend::Shared),
+            "sharded" => Ok(Backend::Sharded),
+            other => Err(format!("unknown backend {other:?} (expected shared|sharded)")),
+        }
+    }
+
+    /// The CLI/TOML name of this backend.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Shared => "shared",
+            Backend::Sharded => "sharded",
+        }
+    }
+}
 
 /// Which metric drives termination.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -72,6 +107,10 @@ pub struct CommonOptions {
     pub merit_every: usize,
     /// cluster cost model for the simulated clock
     pub cost_model: CostModel,
+    /// execution backend of the engine's data plane (`shared` keeps the
+    /// full matrix in one address space; `sharded` runs the
+    /// column-distributed owner-computes model with a measured allreduce)
+    pub backend: Backend,
     /// run name (plots, logs)
     pub name: String,
 }
@@ -90,6 +129,7 @@ impl Default for CommonOptions {
             trace_every: 1,
             merit_every: 10,
             cost_model: CostModel::default(),
+            backend: Backend::Shared,
             name: "solver".into(),
         }
     }
@@ -189,6 +229,15 @@ pub struct SolveReport {
     /// all iterations — `scanned / (iters · N)` is the per-iteration scan
     /// fraction the sketching selection strategies reduce below 1
     pub scanned: usize,
+    /// communication actually performed by the sharded backend (all
+    /// zeros on [`Backend::Shared`] runs)
+    pub comm: CommStats,
+    /// reduction rounds the cost model *predicted* (Σ over iterations of
+    /// `IterCost::reduce_rounds`) — `bench shard` compares this axis
+    /// against the measured [`SolveReport::comm`]
+    pub predicted_rounds: f64,
+    /// f64 words the cost model predicted those rounds would move
+    pub predicted_words: f64,
 }
 
 impl SolveReport {

@@ -23,14 +23,25 @@
 //! bitwise-identical for any `threads ≥ 1` regardless of configuration —
 //! the equivalence suite (`tests/integration_engine.rs`) pins this for
 //! all seven solver families.
+//!
+//! The loop runs over one of two **data-plane backends**
+//! ([`crate::coordinator::Backend`]): `shared` (every worker may read the
+//! full matrix) or `sharded` (the column-distributed owner-computes model
+//! of [`crate::parallel::shard`], where worker `s` holds only its column
+//! shard and the ranks agree on the auxiliary vector through a measured
+//! fixed-order allreduce). Both backends execute the *same* canonical
+//! summation order — per-shard partial deltas folded in ascending shard
+//! order — so their iterates are bitwise-identical too
+//! (`tests/integration_golden.rs`).
 
+use super::sharded::ShardedWorkspace;
 use super::workspace::Workspace;
 use super::{Accel, DirectionRule, MergeRule, SolverSpec};
 use crate::coordinator::driver::RunState;
 use crate::coordinator::stepsize::{armijo_accept, StepRule};
 use crate::coordinator::strategy::{Candidates, SelectionStrategy};
 use crate::coordinator::tau::{TauController, TauDecision, TauOptions};
-use crate::coordinator::{SolveReport, StopReason};
+use crate::coordinator::{Backend, SolveReport, StopReason};
 use crate::linalg::{vector, BlockPartition, ProcessorAssignment};
 use crate::metrics::IterCost;
 use crate::parallel::{self, WorkerPool};
@@ -213,7 +224,6 @@ fn run(
         mut x_trial,
         mut aux_trial,
         mut dx,
-        mut moved,
         mut max_partials,
         mut obj_partials,
         mut aux_local,
@@ -235,7 +245,24 @@ fn run(
         e_chunks,
         n_chunks,
         total_br_flops,
+        shard_layout,
+        mut partials,
+        mut upd,
+        mut active_shards,
     } = Workspace::new(problem, spec);
+
+    // the distributed-memory data plane: owner-computes column shards +
+    // measured communication (None on the shared backend)
+    let mut shardws: Option<ShardedWorkspace> = match common.backend {
+        Backend::Shared => None,
+        Backend::Sharded => {
+            assert!(
+                matches!(backend, ScanBackend::Native),
+                "backend \"sharded\" requires the native scan (no external step engine)"
+            );
+            Some(ShardedWorkspace::new(problem, spec))
+        }
+    };
 
     let mut x = x0.to_vec();
     let mut aux = vec![0.0; problem.aux_len()];
@@ -396,14 +423,28 @@ fn run(
                 let br_flops: f64 = match &mut backend {
                     ScanBackend::Native => {
                         parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
-                        match scan {
-                            Candidates::All => parallel::par_best_responses(
+                        // owner-computes scan on the sharded backend:
+                        // worker s reads only its own columns; per-block
+                        // arithmetic (and hence ẑ/E) is bitwise-identical
+                        // to the shared full-matrix fan-out
+                        match (scan, shardws.as_ref()) {
+                            (Candidates::All, None) => parallel::par_best_responses(
                                 pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e,
                                 &br_chunks,
                             ),
-                            Candidates::Subset => parallel::par_best_responses_subset(
+                            (Candidates::Subset, None) => parallel::par_best_responses_subset(
                                 pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
                             ),
+                            (Candidates::All, Some(sw)) => parallel::par_best_responses_sharded(
+                                pool, &sw.shards, blocks, &x, &aux, &scratch, tau, &mut zhat,
+                                &mut e,
+                            ),
+                            (Candidates::Subset, Some(sw)) => {
+                                parallel::par_best_responses_subset_sharded(
+                                    pool, &sw.shards, &sw.layout, blocks, &x, &aux, &scratch,
+                                    tau, &mut zhat, &mut e, &cand,
+                                )
+                            }
                         }
                         match scan {
                             Candidates::All => total_br_flops,
@@ -473,13 +514,55 @@ fn run(
                         dir_aux.fill(0.0);
                         let mut dir_sq = 0.0;
                         for &i in &sel {
-                            let r = blocks.range(i);
-                            for (t, j) in r.clone().enumerate() {
-                                delta[t] = zhat[j] - x[j];
-                                dir_sq += delta[t] * delta[t];
+                            for j in blocks.range(i) {
+                                dx[j] = zhat[j] - x[j];
+                                dir_sq += dx[j] * dx[j];
                             }
-                            problem.apply_block_delta(i, &delta[..r.len()], &mut dir_aux);
                         }
+                        // canonical direction image: per-shard partials
+                        // in block order, reduced in shard order — the
+                        // same fixed-order allreduce as the merge, so
+                        // both backends produce one bit pattern
+                        match shardws.as_mut() {
+                            None => parallel::accumulate_partials(
+                                pool,
+                                &shard_layout,
+                                &sel,
+                                &mut partials,
+                                &mut active_shards,
+                                &|_s, i, partial| {
+                                    problem.apply_block_delta(i, &dx[blocks.range(i)], partial)
+                                },
+                            ),
+                            Some(sw) => {
+                                let shards = &sw.shards;
+                                parallel::accumulate_partials(
+                                    pool,
+                                    &sw.layout,
+                                    &sel,
+                                    &mut partials,
+                                    &mut active_shards,
+                                    &|s, i, partial| {
+                                        shards[s].apply_block_delta(
+                                            i,
+                                            &dx[blocks.range(i)],
+                                            partial,
+                                        )
+                                    },
+                                );
+                                if !active_shards.is_empty() {
+                                    sw.comm.allreduce_rounds += 1;
+                                    sw.comm.allreduce_words += problem.aux_len() as f64;
+                                }
+                            }
+                        }
+                        parallel::reduce_partials_into(
+                            pool,
+                            &partials,
+                            &active_shards,
+                            &mut dir_aux,
+                            &aux_chunks,
+                        );
                         let mut g_try = 1.0;
                         gamma = g_try;
                         for _ in 0..=max_backtracks {
@@ -514,10 +597,8 @@ fn run(
                 let mut update_flops = 0.0;
                 match &backend {
                     ScanBackend::Native => {
-                        // γ-scaled deltas + x update sequential (O(n), cheap);
-                        // the |S^k| aux-column axpys fan out over fixed aux-row
-                        // chunks, each chunk applying the selected blocks in
-                        // order — bitwise-identical to the sequential path
+                        // γ-scaled deltas + x update sequential (O(n), cheap)
+                        upd.clear();
                         for &i in &sel {
                             let r = blocks.range(i);
                             let mut any = false;
@@ -528,32 +609,64 @@ fn run(
                                     any = true;
                                 }
                             }
-                            moved[i] = any;
                             if any {
                                 for j in r {
                                     x[j] += dx[j];
                                 }
                                 update_flops += problem.flops_aux_update(i);
                                 act += 1;
+                                upd.push(i);
                             }
                         }
-                        parallel::for_each_row_chunk(
+                        // canonical owner-computes update: each shard
+                        // accumulates its moved blocks' delta columns into
+                        // a partial residual buffer (from its own columns
+                        // on the sharded backend, from the full matrix on
+                        // the shared one), then the deterministic
+                        // fixed-order allreduce folds the partials into
+                        // aux in shard order — one summation order for
+                        // both backends, so iterates are bitwise-identical
+                        match shardws.as_mut() {
+                            None => parallel::accumulate_partials(
+                                pool,
+                                &shard_layout,
+                                &upd,
+                                &mut partials,
+                                &mut active_shards,
+                                &|_s, i, partial| {
+                                    problem.apply_block_delta(i, &dx[blocks.range(i)], partial)
+                                },
+                            ),
+                            Some(sw) => {
+                                let shards = &sw.shards;
+                                parallel::accumulate_partials(
+                                    pool,
+                                    &sw.layout,
+                                    &upd,
+                                    &mut partials,
+                                    &mut active_shards,
+                                    &|s, i, partial| {
+                                        shards[s].apply_block_delta(
+                                            i,
+                                            &dx[blocks.range(i)],
+                                            partial,
+                                        )
+                                    },
+                                );
+                                if !active_shards.is_empty() {
+                                    sw.comm.allreduce_rounds += 1;
+                                    sw.comm.allreduce_words += problem.aux_len() as f64;
+                                }
+                                // selection agreement on M^k / S^k
+                                sw.comm.sync_rounds += 1;
+                            }
+                        }
+                        parallel::reduce_partials_into(
                             pool,
+                            &partials,
+                            &active_shards,
                             &mut aux,
                             &aux_chunks,
-                            &|_c, rows, aux_rows| {
-                                for &i in &sel {
-                                    if moved[i] {
-                                        let r = blocks.range(i);
-                                        problem.apply_block_delta_rows(
-                                            i,
-                                            &dx[r],
-                                            aux_rows,
-                                            rows.clone(),
-                                        );
-                                    }
-                                }
-                            },
                         );
                     }
                     ScanBackend::Engine(_) => {
@@ -644,18 +757,31 @@ fn run(
                     parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
                     let m_k = match scan {
                         Candidates::All => {
-                            parallel::par_best_responses(
-                                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e,
-                                &br_chunks,
-                            );
+                            match shardws.as_ref() {
+                                None => parallel::par_best_responses(
+                                    pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e,
+                                    &br_chunks,
+                                ),
+                                Some(sw) => parallel::par_best_responses_sharded(
+                                    pool, &sw.shards, blocks, &x, &aux, &scratch, tau,
+                                    &mut zhat, &mut e,
+                                ),
+                            }
                             state.scanned += nb;
                             prepass_flops = problem.flops_prelude() + total_br_flops;
                             parallel::par_max(pool, &e, &e_chunks, &mut max_partials)
                         }
                         Candidates::Subset => {
-                            parallel::par_best_responses_subset(
-                                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
-                            );
+                            match shardws.as_ref() {
+                                None => parallel::par_best_responses_subset(
+                                    pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e,
+                                    &cand,
+                                ),
+                                Some(sw) => parallel::par_best_responses_subset_sharded(
+                                    pool, &sw.shards, &sw.layout, blocks, &x, &aux, &scratch,
+                                    tau, &mut zhat, &mut e, &cand,
+                                ),
+                            }
                             state.scanned += cand.len();
                             prepass_flops = problem.flops_prelude()
                                 + cand.iter().map(|&i| problem.flops_best_response(i)).sum::<f64>();
@@ -683,6 +809,11 @@ fn run(
                 let mut ebound_gs = 0.0f64;
                 let selective = strategy.is_some();
 
+                if let Some(sw) = shardws.as_ref() {
+                    // the sharded GJ run maps processor p ↔ shard p: both
+                    // use the contiguous k·N/P boundary rule
+                    debug_assert_eq!(sw.shards.len(), p_procs, "GJ shards ≠ processor groups");
+                }
                 for p in 0..p_procs {
                     let group = assignment.group(p);
                     let local = &mut aux_local[p];
@@ -693,7 +824,20 @@ fn run(
                             continue;
                         }
                         let r = blocks.range(i);
-                        let ei = problem.best_response(i, &x, local, tau, &mut z_buf[..r.len()]);
+                        // owner-computes: processor p's sweep reads only
+                        // its own shard's columns on the sharded backend
+                        let ei = match shardws.as_ref() {
+                            None => {
+                                problem.best_response(i, &x, local, tau, &mut z_buf[..r.len()])
+                            }
+                            Some(sw) => sw.shards[p].best_response(
+                                i,
+                                &x,
+                                local,
+                                tau,
+                                &mut z_buf[..r.len()],
+                            ),
+                        };
                         ebound_gs = ebound_gs.max(ei);
                         worker_flops += problem.flops_best_response_fresh(i);
                         state.scanned += 1; // fresh-state scan inside the sweep
@@ -708,7 +852,12 @@ fn run(
                             for (t, j) in r.clone().enumerate() {
                                 x[j] += delta[t];
                             }
-                            problem.apply_block_delta(i, &delta[..r.len()], local);
+                            match shardws.as_ref() {
+                                None => problem.apply_block_delta(i, &delta[..r.len()], local),
+                                Some(sw) => {
+                                    sw.shards[p].apply_block_delta(i, &delta[..r.len()], local)
+                                }
+                            }
                             worker_flops += problem.flops_aux_update(i);
                             act += 1;
                         }
@@ -731,6 +880,16 @@ fn run(
                     }
                 });
                 total_flops += (2 * p_procs * aux.len()) as f64;
+                if let Some(sw) = shardws.as_mut() {
+                    // the processor-delta merge is the per-iteration
+                    // m-word allreduce of the distributed GJ run
+                    sw.comm.allreduce_rounds += 1;
+                    sw.comm.allreduce_words += problem.aux_len() as f64;
+                    if selective {
+                        // Algorithm-3 prepass: M^k / S^k agreement
+                        sw.comm.sync_rounds += 1;
+                    }
+                }
 
                 let v_new = problem.v_val(&x, &aux);
 
@@ -791,7 +950,17 @@ fn run(
                 let mut max_e = 0.0f64;
                 for &i in &order {
                     let r = blocks.range(i);
-                    let ei = problem.best_response(i, &x, &aux, tau, &mut z_buf[..r.len()]);
+                    // owner-computes: on the sharded backend the owner of
+                    // block i computes from its own columns against the
+                    // replicated aux; arithmetic is identical, so the
+                    // strictly sequential sweep is bitwise-preserved
+                    let ei = match shardws.as_ref() {
+                        None => problem.best_response(i, &x, &aux, tau, &mut z_buf[..r.len()]),
+                        Some(sw) => {
+                            let s = sw.layout.owner(i);
+                            sw.shards[s].best_response(i, &x, &aux, tau, &mut z_buf[..r.len()])
+                        }
+                    };
                     max_e = max_e.max(ei);
                     sweep_flops += problem.flops_best_response_fresh(i);
                     state.scanned += 1;
@@ -806,7 +975,19 @@ fn run(
                         for (t, j) in r.clone().enumerate() {
                             x[j] += delta[t];
                         }
-                        problem.apply_block_delta(i, &delta[..r.len()], &mut aux);
+                        match shardws.as_mut() {
+                            None => problem.apply_block_delta(i, &delta[..r.len()], &mut aux),
+                            Some(sw) => {
+                                let s = sw.layout.owner(i);
+                                sw.shards[s].apply_block_delta(i, &delta[..r.len()], &mut aux);
+                                // every accepted sequential step must ship
+                                // its residual effect to all other ranks —
+                                // the comm bill the Gauss-Seidel methods
+                                // pay in a distributed run
+                                sw.comm.broadcast_rounds += 1;
+                                sw.comm.broadcast_words += problem.aux_len() as f64;
+                            }
+                        }
                         sweep_flops += problem.flops_aux_update(i);
                         act += 1;
                     }
@@ -1122,6 +1303,9 @@ fn run(
         }
     }
 
+    if let Some(sw) = &shardws {
+        state.comm = sw.comm;
+    }
     Ok(state.finish(x, &aux, v, iters, stop))
 }
 
@@ -1175,6 +1359,29 @@ mod tests {
         let b = solve(&p, &x0, &spec);
         assert_eq!(a.x, b.x);
         assert_eq!(a.final_obj, b.final_obj);
+    }
+
+    #[test]
+    fn sharded_backend_matches_shared_bitwise_and_measures_comm() {
+        use crate::coordinator::Backend;
+        let p = LassoProblem::from_instance(nesterov_lasso(40, 60, 0.1, 1.0, 11));
+        let x0 = vec![0.0; p.n()];
+        let mut c = common("backend-eq");
+        c.max_iters = 80;
+        c.tol = 0.0;
+        c.cores = 4;
+        let shared = SolverSpec::flexa(c.clone(), SelectionSpec::sigma(0.5), None);
+        let mut cs = c;
+        cs.backend = Backend::Sharded;
+        let spec_sharded = SolverSpec::flexa(cs, SelectionSpec::sigma(0.5), None);
+        let a = solve(&p, &x0, &shared);
+        let b = solve(&p, &x0, &spec_sharded);
+        assert_eq!(a.x, b.x, "backends must be bitwise-identical");
+        assert_eq!(a.final_obj, b.final_obj);
+        assert!(a.comm.is_empty(), "shared backend exchanges nothing");
+        assert!(b.comm.allreduce_rounds > 0, "sharded backend measured no allreduces");
+        assert!(b.comm.allreduce_words > 0.0);
+        assert!(b.predicted_rounds > 0.0);
     }
 
     #[test]

@@ -42,13 +42,15 @@
 //! the one validated constructor [`SolverSpec::from_name`].
 
 pub mod core;
+pub mod sharded;
 pub mod workspace;
 
 pub use self::core::{solve, solve_with_pool, solve_with_step_engine};
+pub use self::sharded::ShardedWorkspace;
 pub use self::workspace::Workspace;
 
 use crate::coordinator::strategy::SelectionSpec;
-use crate::coordinator::{CommonOptions, InexactOptions};
+use crate::coordinator::{Backend, CommonOptions, InexactOptions};
 use crate::solvers::{AdmmOptions, SparsaOptions};
 
 /// How the engine produces a search direction each iteration — the phase
@@ -384,7 +386,30 @@ impl SolverSpec {
                 ))
             }
         };
+        if spec.common.backend == Backend::Sharded
+            && matches!(spec.merge, MergeRule::FullVector)
+        {
+            return Err(format!(
+                "solver {name:?} does not support backend = \"sharded\": the full-vector \
+                 baselines scan the whole gradient; the column-distributed path covers \
+                 flexa | gj-flexa | gauss-jacobi | grock | greedy-1bcd | cdm"
+            ));
+        }
         Ok(spec)
+    }
+
+    /// Shard count of the column-distributed layout (and the partial
+    /// geometry of the canonical fixed-order reduction, which the shared
+    /// backend uses too): the Gauss-Jacobi families shard by processor
+    /// group, everything else by the simulated core count — both
+    /// independent of the worker-thread count, so iterates stay
+    /// bitwise-identical for any `threads ≥ 1`.
+    pub fn shard_count(&self) -> usize {
+        match self.merge {
+            MergeRule::GaussJacobi { processors: 0 } => self.common.cores.max(1),
+            MergeRule::GaussJacobi { processors } => processors,
+            _ => self.common.cores.max(1),
+        }
     }
 
     /// Short family label for logs and bench tables.
@@ -430,6 +455,26 @@ mod tests {
     fn from_name_rejects_unknown_and_bad_sigma() {
         assert!(SolverSpec::from_name("frobnicate", common(), None, 0.5, 1).is_err());
         assert!(SolverSpec::from_name("flexa", common(), None, 1.5, 1).is_err());
+    }
+
+    #[test]
+    fn from_name_rejects_sharded_full_vector_families() {
+        let mut c = common();
+        c.backend = Backend::Sharded;
+        for name in ["fista", "sparsa", "admm"] {
+            let err = SolverSpec::from_name(name, c.clone(), None, 0.5, 4).unwrap_err();
+            assert!(err.contains("sharded"), "{name}: {err}");
+        }
+        assert!(SolverSpec::from_name("flexa", c, None, 0.5, 4).is_ok());
+    }
+
+    #[test]
+    fn shard_count_follows_processors_then_cores() {
+        let mut c = common();
+        c.cores = 6;
+        assert_eq!(SolverSpec::flexa(c.clone(), SelectionSpec::sigma(0.5), None).shard_count(), 6);
+        assert_eq!(SolverSpec::gauss_jacobi(c.clone(), None, 3).shard_count(), 3);
+        assert_eq!(SolverSpec::gauss_jacobi(c, None, 0).shard_count(), 6);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! bitwise-determinism contract.
 
 use super::{DirectionRule, MergeRule, SolverSpec};
-use crate::parallel;
+use crate::parallel::{self, ShardLayout};
 use crate::problems::Problem;
 use std::ops::Range;
 
@@ -37,10 +37,9 @@ pub struct Workspace {
     pub x_trial: Vec<f64>,
     /// Trial aux (Armijo / prox backtracking).
     pub aux_trial: Vec<f64>,
-    /// γ-scaled step, read by the selective aux fan-out.
+    /// γ-scaled step (and the Armijo direction), read by the canonical
+    /// partial accumulation.
     pub dx: Vec<f64>,
-    /// Which selected blocks actually moved this iteration.
-    pub moved: Vec<bool>,
     /// Ordered-reduction partials for the `M^k` max.
     pub max_partials: Vec<f64>,
     /// Ordered-reduction partials for chunked objectives/sums.
@@ -85,6 +84,19 @@ pub struct Workspace {
     /// Full-scan best-response flop total, reused every `Candidates::All`
     /// iteration.
     pub total_br_flops: f64,
+    /// Contiguous block → shard ownership: the partial geometry of the
+    /// canonical fixed-order reduction (both backends) and the
+    /// owner-computes layout of `--backend sharded`.
+    pub shard_layout: ShardLayout,
+    /// Per-shard partial residual buffers (S × m) for the Jacobi merge's
+    /// canonical update — the sharded backend's communication buffers,
+    /// which the shared backend reuses so both sum in one order.
+    pub partials: Vec<Vec<f64>>,
+    /// Moved subset of `S^k` (ascending) handed to the partial
+    /// accumulation.
+    pub upd: Vec<usize>,
+    /// Shards owning at least one updated block this iteration.
+    pub active_shards: Vec<usize>,
 }
 
 impl Workspace {
@@ -127,7 +139,6 @@ impl Workspace {
             x_trial: alloc(jacobi, n),
             aux_trial: alloc(jacobi || prox, m),
             dx: alloc(jacobi, n),
-            moved: if jacobi { vec![false; nb] } else { Vec::new() },
             max_partials: Vec::new(),
             obj_partials: Vec::new(),
             aux_local: (0..p_procs).map(|_| vec![0.0; m]).collect(),
@@ -160,6 +171,18 @@ impl Workspace {
                 (0..nb).map(|i| problem.flops_best_response(i)).sum()
             } else {
                 0.0
+            },
+            shard_layout: parallel::ShardLayout::contiguous(problem.blocks(), spec.shard_count()),
+            partials: if jacobi {
+                (0..spec.shard_count()).map(|_| vec![0.0; m]).collect()
+            } else {
+                Vec::new()
+            },
+            upd: if jacobi { Vec::with_capacity(nb) } else { Vec::new() },
+            active_shards: if jacobi {
+                Vec::with_capacity(spec.shard_count())
+            } else {
+                Vec::new()
             },
         }
     }

@@ -210,6 +210,21 @@ impl DenseMatrix {
         let n = self.nrows;
         vector::scale(alpha, &mut self.data[j * n..(j + 1) * n]);
     }
+
+    /// Copy of the contiguous column block `cols` (the per-worker shard
+    /// of the column-distributed layout: same rows, `cols.len()`
+    /// columns). Column-major storage makes this one slice copy, and the
+    /// copied values are bit-exact, so per-column kernels on the shard
+    /// match the full matrix bitwise.
+    pub fn columns_range(&self, cols: std::ops::Range<usize>) -> DenseMatrix {
+        assert!(cols.end <= self.ncols, "column range out of bounds");
+        let m = self.nrows;
+        DenseMatrix::from_col_major(
+            m,
+            cols.len(),
+            self.data[cols.start * m..cols.end * m].to_vec(),
+        )
+    }
 }
 
 #[cfg(test)]

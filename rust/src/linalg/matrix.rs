@@ -136,6 +136,17 @@ impl Matrix {
         }
     }
 
+    /// Copy of the contiguous column block `cols` — the per-worker shard
+    /// of the paper's column-distributed layout `A = [A_1 … A_P]`.
+    /// Storage kind is preserved and values are bit-exact, so the shard's
+    /// per-column kernels match the full matrix bitwise.
+    pub fn columns_range(&self, cols: std::ops::Range<usize>) -> Matrix {
+        match self {
+            Matrix::Dense(a) => Matrix::Dense(a.columns_range(cols)),
+            Matrix::Sparse(a) => Matrix::Sparse(a.columns_range(cols)),
+        }
+    }
+
     /// Dense view (tests / XLA literal building for fixed small shapes).
     pub fn to_dense(&self) -> DenseMatrix {
         match self {

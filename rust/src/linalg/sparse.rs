@@ -196,6 +196,26 @@ impl CscMatrix {
         }
     }
 
+    /// Copy of the contiguous column block `cols` (the per-worker shard
+    /// of the column-distributed layout: same rows, `cols.len()`
+    /// columns). The CSC arrays are sliced and the column pointers
+    /// rebased; stored values are bit-exact copies, so per-column kernels
+    /// on the shard match the full matrix bitwise.
+    pub fn columns_range(&self, cols: std::ops::Range<usize>) -> CscMatrix {
+        assert!(cols.end <= self.ncols, "column range out of bounds");
+        let lo = self.colptr[cols.start];
+        let hi = self.colptr[cols.end];
+        let colptr: Vec<usize> =
+            self.colptr[cols.start..=cols.end].iter().map(|&p| p - lo).collect();
+        CscMatrix::from_parts(
+            self.nrows,
+            cols.len(),
+            colptr,
+            self.rowind[lo..hi].to_vec(),
+            self.values[lo..hi].to_vec(),
+        )
+    }
+
     /// Dense copy (tests / small problems only).
     pub fn to_dense(&self) -> super::dense::DenseMatrix {
         let mut d = super::dense::DenseMatrix::zeros(self.nrows, self.ncols);

@@ -65,6 +65,50 @@ impl IterCost {
     }
 }
 
+/// Measured communication of a sharded-backend run — what the in-process
+/// distributed-memory path actually exchanged, as opposed to the
+/// [`IterCost::reduce_rounds`] *prediction* the cluster simulator prices.
+/// `bench shard` compares the two and writes the ratio to
+/// `results/BENCH_4.json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// Fixed-order allreduce invocations over the per-worker partial
+    /// residual buffers (the m-word exchanges the cost model prices).
+    pub allreduce_rounds: usize,
+    /// Total f64 words moved by those allreduces.
+    pub allreduce_words: f64,
+    /// Single-block residual broadcasts (the sequential sweeps: every
+    /// moved CDM block must ship its delta column's effect to all ranks).
+    pub broadcast_rounds: usize,
+    /// Total f64 words moved by those broadcasts.
+    pub broadcast_words: f64,
+    /// Cheap scalar synchronizations (the `M^k` / `S^k` selection
+    /// agreement) the cost model folds into its per-round latency.
+    pub sync_rounds: usize,
+}
+
+impl CommStats {
+    /// Accumulate another counter into this one.
+    pub fn add(&mut self, other: &CommStats) {
+        self.allreduce_rounds += other.allreduce_rounds;
+        self.allreduce_words += other.allreduce_words;
+        self.broadcast_rounds += other.broadcast_rounds;
+        self.broadcast_words += other.broadcast_words;
+        self.sync_rounds += other.sync_rounds;
+    }
+
+    /// All data rounds (allreduces + broadcasts) — the measured
+    /// counterpart of the summed [`IterCost::reduce_rounds`].
+    pub fn data_rounds(&self) -> usize {
+        self.allreduce_rounds + self.broadcast_rounds
+    }
+
+    /// Whether nothing was exchanged (a shared-memory run).
+    pub fn is_empty(&self) -> bool {
+        self.data_rounds() == 0 && self.sync_rounds == 0
+    }
+}
+
 /// One point on a convergence curve.
 #[derive(Clone, Copy, Debug)]
 pub struct TracePoint {

@@ -13,7 +13,11 @@
 //!   size, never on the worker count;
 //! * [`reduce`] — chunked passes (best responses, prelude, selective aux
 //!   update) and ordered reductions (selection max, chunked objective)
-//!   built on the pool.
+//!   built on the pool;
+//! * [`shard`] — the column-sharded distributed-memory layer: contiguous
+//!   block → shard ownership, owner-computes scans over per-shard column
+//!   copies, and the deterministic fixed-order in-process allreduce of
+//!   per-worker partial residual buffers behind `--backend sharded`.
 //!
 //! **Determinism contract:** every helper here produces bitwise-identical
 //! results for any `threads ≥ 1`, because (a) each output element is
@@ -25,10 +29,15 @@
 pub mod partition;
 pub mod pool;
 pub mod reduce;
+pub mod shard;
 
 pub use partition::{block_chunks, chunks_of, row_chunks, MAX_CHUNKS};
 pub use pool::WorkerPool;
 pub use reduce::{
     for_each_chunk, for_each_row_chunk, par_best_responses, par_best_responses_subset, par_max,
     par_prelude, par_sum_pairs, par_v_val,
+};
+pub use shard::{
+    accumulate_partials, allreduce_sum, par_best_responses_sharded,
+    par_best_responses_subset_sharded, reduce_partials_into, ShardLayout,
 };

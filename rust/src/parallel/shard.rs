@@ -1,0 +1,428 @@
+//! Column-sharded distributed-memory layer: the owner-computes shard
+//! layout, the deterministic fixed-order in-process allreduce, and the
+//! per-shard scan passes behind the engine's `--backend sharded` path.
+//!
+//! The paper's experiments run FLEXA column-distributed over an 8-node
+//! cluster (§V of the companion implementation report): worker `s` stores
+//! only its column block `A_s` of the data matrix, its block `x_s` of the
+//! iterate, and a replicated copy of the m-length auxiliary vector
+//! (residual/margins). Each iteration every worker computes best responses
+//! for its own blocks from its own columns, accumulates its selected
+//! blocks' delta columns into a **partial residual buffer**, and the
+//! workers then agree on the next auxiliary vector with one m-word
+//! allreduce — the exact exchange the ring model in
+//! [`crate::simulator::CostModel::allreduce_s`] prices.
+//!
+//! This module is that execution model in-process:
+//!
+//! * [`ShardLayout`] — contiguous block → shard ownership whose boundaries
+//!   depend only on the block count and the shard count (the same
+//!   `k·N/S` rule as
+//!   [`ProcessorAssignment::contiguous`](crate::linalg::ProcessorAssignment)),
+//!   never on the worker-thread count;
+//! * [`accumulate_partials`] / [`reduce_partials_into`] — the two halves
+//!   of the canonical selective update: per-shard partial buffers filled
+//!   in ascending block order, then summed into the auxiliary vector **in
+//!   ascending shard order per element**. Both the shared and the sharded
+//!   backend run exactly this summation, which is why their iterates are
+//!   bitwise identical (see `tests/integration_golden.rs`);
+//! * [`allreduce_sum`] — the bare fixed-order allreduce primitive
+//!   (`out = Σ_s partials[s]`, shard order), pinned bitwise against the
+//!   sequential fold by `tests/property_tests.rs`;
+//! * [`par_best_responses_sharded`] /
+//!   [`par_best_responses_subset_sharded`] — owner-computes Jacobi scans
+//!   where worker `s` reads only `shards[s]`
+//!   (a [`ProblemShard`](crate::problems::ProblemShard) holding copies of
+//!   exactly its columns), never the full matrix.
+//!
+//! **Determinism contract** (inherited from [`super`]): every function
+//! here is bitwise-identical for any `threads ≥ 1`, because shard
+//! boundaries are thread-count independent, each output element is
+//! written by exactly one shard job, and reductions combine per-shard
+//! partials in shard order on the calling thread.
+
+use super::pool::WorkerPool;
+use super::reduce::{for_each_chunk, for_each_row_chunk};
+use crate::linalg::BlockPartition;
+use crate::problems::ProblemShard;
+use std::ops::Range;
+
+/// Shared `*mut f64` that shard jobs index disjointly.
+#[derive(Clone, Copy)]
+struct MutPtr(*mut f64);
+
+// SAFETY: every helper below derives each job's region from the
+// pairwise-disjoint shard block/column ranges, so no two workers ever
+// alias an element.
+unsafe impl Send for MutPtr {}
+unsafe impl Sync for MutPtr {}
+
+/// Shared `*mut Vec<f64>` for per-shard partial buffers (each shard job
+/// takes exactly one buffer).
+#[derive(Clone, Copy)]
+struct MutVecPtr(*mut Vec<f64>);
+
+// SAFETY: each shard index appears at most once in the job list, so no
+// two workers ever alias a buffer.
+unsafe impl Send for MutVecPtr {}
+unsafe impl Sync for MutVecPtr {}
+
+/// Contiguous assignment of blocks (and therefore columns) to shards.
+///
+/// Shard `s` owns the block range `s·N/S .. (s+1)·N/S` — the same
+/// near-equal contiguous rule as
+/// [`ProcessorAssignment::contiguous`](crate::linalg::ProcessorAssignment),
+/// so the Gauss-Jacobi processor groups and the shard ownership coincide.
+/// Boundaries depend only on `(N, S)`: the layout is identical for every
+/// worker-thread count, which is half of the backend-equivalence proof.
+#[derive(Clone, Debug)]
+pub struct ShardLayout {
+    /// `block_ranges[s]` = blocks owned by shard `s` (ascending,
+    /// pairwise-disjoint, covering `0..N`).
+    block_ranges: Vec<Range<usize>>,
+    /// Matching variable/column span of each shard.
+    col_ranges: Vec<Range<usize>>,
+}
+
+impl ShardLayout {
+    /// Near-equal contiguous split of `blocks` over `shards` shards
+    /// (shards beyond the block count end up empty and are never active).
+    pub fn contiguous(blocks: &BlockPartition, shards: usize) -> Self {
+        let nb = blocks.n_blocks();
+        let s = shards.max(1);
+        let mut block_ranges = Vec::with_capacity(s);
+        let mut col_ranges = Vec::with_capacity(s);
+        for k in 0..s {
+            let lo = k * nb / s;
+            let hi = (k + 1) * nb / s;
+            block_ranges.push(lo..hi);
+            if hi > lo {
+                col_ranges.push(blocks.range(lo).start..blocks.range(hi - 1).end);
+            } else {
+                let at = if lo < nb { blocks.range(lo).start } else { blocks.dim() };
+                col_ranges.push(at..at);
+            }
+        }
+        Self { block_ranges, col_ranges }
+    }
+
+    /// Number of shards S.
+    pub fn n_shards(&self) -> usize {
+        self.block_ranges.len()
+    }
+
+    /// Blocks owned by shard `s`.
+    pub fn block_range(&self, s: usize) -> Range<usize> {
+        self.block_ranges[s].clone()
+    }
+
+    /// Variable/column span owned by shard `s`.
+    pub fn col_range(&self, s: usize) -> Range<usize> {
+        self.col_ranges[s].clone()
+    }
+
+    /// Shard owning block `i`.
+    pub fn owner(&self, i: usize) -> usize {
+        debug_assert!(i < self.block_ranges.last().map(|r| r.end).unwrap_or(0));
+        match self.block_ranges.binary_search_by(|r| {
+            if i < r.start {
+                std::cmp::Ordering::Greater
+            } else if i >= r.end {
+                std::cmp::Ordering::Less
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        }) {
+            Ok(s) => s,
+            Err(_) => unreachable!("block {i} not covered by the shard layout"),
+        }
+    }
+}
+
+/// First half of the canonical selective update: for every shard owning
+/// at least one block of `upd` (ascending, distinct block indices), zero
+/// its partial buffer and accumulate the blocks' delta columns in
+/// ascending block order via `apply(shard, block, partial)`.
+///
+/// `active` receives the owning shard ids in ascending order — only those
+/// buffers carry data, and [`reduce_partials_into`] adds only those, so
+/// idle shards cost nothing and (crucially) never perturb signed zeros in
+/// the output. The fan-out runs one job per active shard over the pool;
+/// results are bitwise-identical for any thread count.
+pub fn accumulate_partials(
+    pool: &WorkerPool,
+    layout: &ShardLayout,
+    upd: &[usize],
+    partials: &mut [Vec<f64>],
+    active: &mut Vec<usize>,
+    apply: &(dyn Fn(usize, usize, &mut [f64]) + Sync),
+) {
+    debug_assert_eq!(partials.len(), layout.n_shards());
+    debug_assert!(
+        upd.windows(2).all(|w| w[0] < w[1]),
+        "update-set indices must be sorted ascending and distinct"
+    );
+    active.clear();
+    for s in 0..layout.n_shards() {
+        let br = layout.block_range(s);
+        let lo = upd.partition_point(|&i| i < br.start);
+        let hi = upd.partition_point(|&i| i < br.end);
+        if hi > lo {
+            active.push(s);
+        }
+    }
+    if active.is_empty() {
+        return;
+    }
+    let act: &[usize] = active;
+    let pp = MutVecPtr(partials.as_mut_ptr());
+    for_each_chunk(pool, act.len(), &|a| {
+        let s = act[a];
+        let br = layout.block_range(s);
+        let lo = upd.partition_point(|&i| i < br.start);
+        let hi = upd.partition_point(|&i| i < br.end);
+        // SAFETY: each active shard id appears exactly once, so each job
+        // owns its partial buffer exclusively.
+        let partial = unsafe { &mut *pp.0.add(s) };
+        partial.fill(0.0);
+        for &i in &upd[lo..hi] {
+            apply(s, i, partial);
+        }
+    });
+}
+
+/// Second half of the canonical selective update — the deterministic
+/// fixed-order in-process allreduce: `out[j] += Σ_{s ∈ active}
+/// partials[s][j]`, summed **in ascending shard order per element**,
+/// parallel over the fixed row chunks of `out`. This is the summation
+/// order a rank-0-rooted reduce of the per-worker partial residual
+/// buffers produces, and both backends use it — the arithmetic the ring
+/// model in [`crate::simulator`] prices.
+pub fn reduce_partials_into(
+    pool: &WorkerPool,
+    partials: &[Vec<f64>],
+    active: &[usize],
+    out: &mut [f64],
+    chunks: &[Range<usize>],
+) {
+    if active.is_empty() {
+        return;
+    }
+    for_each_row_chunk(pool, out, chunks, &|_c, rows, out_rows| {
+        for &s in active {
+            let p = &partials[s];
+            for (t, j) in rows.clone().enumerate() {
+                out_rows[t] += p[j];
+            }
+        }
+    });
+}
+
+/// The bare fixed-order allreduce primitive: `out = Σ_s partials[s]`,
+/// element-wise in ascending shard order (`out` is overwritten). Pinned
+/// bitwise against the sequential shard-order fold for every thread count
+/// by `tests/property_tests.rs`.
+pub fn allreduce_sum(
+    pool: &WorkerPool,
+    partials: &[Vec<f64>],
+    out: &mut [f64],
+    chunks: &[Range<usize>],
+) {
+    out.fill(0.0);
+    for_each_row_chunk(pool, out, chunks, &|_c, rows, out_rows| {
+        for p in partials {
+            for (t, j) in rows.clone().enumerate() {
+                out_rows[t] += p[j];
+            }
+        }
+    });
+}
+
+/// Owner-computes Jacobi scan: best responses `x̂_i(x, τ)` and error
+/// bounds `E_i` for **all** blocks, one pool job per shard, each reading
+/// only its own [`ProblemShard`] columns. Per-block arithmetic is the
+/// same closed form as the full-matrix scan
+/// ([`super::par_best_responses`]), so `zhat`/`e` are bitwise identical
+/// to the shared backend for any thread count.
+pub fn par_best_responses_sharded(
+    pool: &WorkerPool,
+    shards: &[Box<dyn ProblemShard>],
+    blocks: &BlockPartition,
+    x: &[f64],
+    aux: &[f64],
+    scratch: &[f64],
+    tau: f64,
+    zhat: &mut [f64],
+    e: &mut [f64],
+) {
+    let zp = MutPtr(zhat.as_mut_ptr());
+    let ep = MutPtr(e.as_mut_ptr());
+    for_each_chunk(pool, shards.len(), &|s| {
+        let shard = &shards[s];
+        for i in shard.block_range() {
+            let r = blocks.range(i);
+            // SAFETY: shard block (and hence variable) ranges are
+            // pairwise disjoint; each block is computed by exactly one
+            // shard job.
+            let z_block =
+                unsafe { std::slice::from_raw_parts_mut(zp.0.add(r.start), r.end - r.start) };
+            let ei = shard.best_response_with(i, x, aux, scratch, tau, z_block);
+            unsafe { *ep.0.add(i) = ei };
+        }
+    });
+}
+
+/// Owner-computes counterpart of
+/// [`super::par_best_responses_subset`]: each shard scans only its own
+/// members of the (sorted ascending, distinct) candidate set `cand`.
+/// Non-candidate entries of `zhat`/`e` are left untouched.
+pub fn par_best_responses_subset_sharded(
+    pool: &WorkerPool,
+    shards: &[Box<dyn ProblemShard>],
+    layout: &ShardLayout,
+    blocks: &BlockPartition,
+    x: &[f64],
+    aux: &[f64],
+    scratch: &[f64],
+    tau: f64,
+    zhat: &mut [f64],
+    e: &mut [f64],
+    cand: &[usize],
+) {
+    if cand.is_empty() {
+        return;
+    }
+    debug_assert!(
+        cand.windows(2).all(|w| w[0] < w[1]),
+        "candidate indices must be sorted ascending and distinct"
+    );
+    let zp = MutPtr(zhat.as_mut_ptr());
+    let ep = MutPtr(e.as_mut_ptr());
+    for_each_chunk(pool, shards.len(), &|s| {
+        let br = layout.block_range(s);
+        let lo = cand.partition_point(|&i| i < br.start);
+        let hi = cand.partition_point(|&i| i < br.end);
+        for &i in &cand[lo..hi] {
+            let r = blocks.range(i);
+            // SAFETY: candidate indices are distinct and each belongs to
+            // exactly one shard; block variable ranges are disjoint.
+            let z_block =
+                unsafe { std::slice::from_raw_parts_mut(zp.0.add(r.start), r.end - r.start) };
+            let ei = shards[s].best_response_with(i, x, aux, scratch, tau, z_block);
+            unsafe { *ep.0.add(i) = ei };
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::row_chunks;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn layout_partitions_blocks_and_columns() {
+        for (n, s) in [(10usize, 3usize), (8, 8), (5, 9), (64, 4), (1, 1)] {
+            let blocks = BlockPartition::scalar(n);
+            let layout = ShardLayout::contiguous(&blocks, s);
+            assert_eq!(layout.n_shards(), s);
+            let mut seen = vec![false; n];
+            for k in 0..s {
+                for i in layout.block_range(k) {
+                    assert!(!seen[i], "block {i} owned twice");
+                    seen[i] = true;
+                    assert_eq!(layout.owner(i), k);
+                }
+                let br = layout.block_range(k);
+                let cr = layout.col_range(k);
+                assert_eq!(cr.len(), br.len(), "scalar blocks: one column per block");
+            }
+            assert!(seen.iter().all(|&b| b), "blocks not covered");
+        }
+    }
+
+    #[test]
+    fn layout_matches_processor_assignment_boundaries() {
+        use crate::linalg::ProcessorAssignment;
+        for (n, p) in [(17usize, 4usize), (9, 3), (5, 8)] {
+            let blocks = BlockPartition::scalar(n);
+            let layout = ShardLayout::contiguous(&blocks, p);
+            let asg = ProcessorAssignment::contiguous(n, p);
+            for k in 0..p {
+                let g = asg.group(k);
+                let r = layout.block_range(k);
+                assert_eq!(g.len(), r.len(), "n={n} p={p} k={k}");
+                if !g.is_empty() {
+                    assert_eq!(g[0], r.start);
+                    assert_eq!(*g.last().unwrap(), r.end - 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_matches_sequential_fold_bitwise() {
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let m = 257;
+        let partials: Vec<Vec<f64>> =
+            (0..5).map(|_| (0..m).map(|_| rng.next_normal()).collect()).collect();
+        let chunks = row_chunks(m);
+        let mut expect = vec![0.0; m];
+        for p in &partials {
+            for (o, v) in expect.iter_mut().zip(p) {
+                *o += v;
+            }
+        }
+        for threads in [1usize, 2, 4, 64] {
+            let pool = WorkerPool::new(threads);
+            let mut out = vec![f64::NAN; m];
+            allreduce_sum(&pool, &partials, &mut out, &chunks);
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn accumulate_then_reduce_is_thread_invariant() {
+        let blocks = BlockPartition::scalar(12);
+        let layout = ShardLayout::contiguous(&blocks, 4);
+        let m = 33;
+        let upd = vec![0usize, 3, 4, 5, 10];
+        let chunks = row_chunks(m);
+        let apply = |_s: usize, i: usize, partial: &mut [f64]| {
+            for (j, p) in partial.iter_mut().enumerate() {
+                *p += (i as f64 + 1.0) * 0.125 + j as f64 * 1e-3;
+            }
+        };
+        let mut expect: Option<Vec<f64>> = None;
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut partials: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; m]).collect();
+            let mut active = Vec::new();
+            accumulate_partials(&pool, &layout, &upd, &mut partials, &mut active, &apply);
+            assert_eq!(active, vec![0, 1, 3], "shards 0 (blocks 0..3), 1 (3..6), 3 (9..12)");
+            let mut aux = vec![1.0; m];
+            reduce_partials_into(&pool, &partials, &active, &mut aux, &chunks);
+            match &expect {
+                None => expect = Some(aux),
+                Some(e) => assert_eq!(&aux, e, "threads={threads}"),
+            }
+        }
+    }
+
+    #[test]
+    fn empty_update_set_touches_nothing() {
+        let blocks = BlockPartition::scalar(6);
+        let layout = ShardLayout::contiguous(&blocks, 2);
+        let pool = WorkerPool::new(2);
+        let mut partials: Vec<Vec<f64>> = (0..2).map(|_| vec![9.0; 4]).collect();
+        let mut active = vec![42];
+        accumulate_partials(&pool, &layout, &[], &mut partials, &mut active, &|_, _, _| {
+            panic!("no update")
+        });
+        assert!(active.is_empty());
+        let mut aux = vec![-0.0f64; 4];
+        reduce_partials_into(&pool, &partials, &active, &mut aux, &row_chunks(4));
+        // idle rounds must not perturb signed zeros
+        assert!(aux.iter().all(|v| v.to_bits() == (-0.0f64).to_bits()));
+    }
+}

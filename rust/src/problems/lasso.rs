@@ -10,7 +10,7 @@
 //!   `x̂_i = ST(x_i − ∇_iF/(2d_i + τ), c/(2d_i + τ))` with `d_i = ‖A_i‖²`;
 //! * selective updates: `r += δ_i A_i` — one column axpy per moved block.
 
-use super::Problem;
+use super::{Problem, ProblemShard};
 use crate::datagen::LassoInstance;
 use crate::linalg::{vector, BlockPartition, Matrix};
 
@@ -164,6 +164,16 @@ impl Problem for LassoProblem {
         2.0 * self.col_sq[i]
     }
 
+    fn column_shard(&self, blocks: std::ops::Range<usize>) -> Option<Box<dyn ProblemShard>> {
+        // scalar blocks: block index == column index
+        Some(Box::new(LassoShard {
+            a: self.a.columns_range(blocks.clone()),
+            c: self.c,
+            col_sq: self.col_sq[blocks.clone()].to_vec(),
+            blocks,
+        }))
+    }
+
     fn flops_best_response(&self, i: usize) -> f64 {
         // column dot + soft-threshold
         2.0 * self.a.col_nnz(i) as f64 + 6.0
@@ -182,6 +192,43 @@ impl Problem for LassoProblem {
     }
 }
 
+/// Column shard of a [`LassoProblem`]: the owned scalar blocks' columns
+/// plus their squared norms — everything the owner-computes scan and the
+/// partial residual update touch. Inner loops are identical to the full
+/// problem, so results are bitwise equal.
+struct LassoShard {
+    /// The shard's columns `A_s` (m × |blocks|).
+    a: Matrix,
+    /// ℓ1 weight `c`.
+    c: f64,
+    /// Squared column norms of the owned columns.
+    col_sq: Vec<f64>,
+    /// Owned global block range.
+    blocks: std::ops::Range<usize>,
+}
+
+impl ProblemShard for LassoShard {
+    fn block_range(&self) -> std::ops::Range<usize> {
+        self.blocks.clone()
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        let j = i - self.blocks.start;
+        let g = 2.0 * self.a.col_dot(j, aux);
+        let denom = 2.0 * self.col_sq[j] + tau;
+        debug_assert!(denom > 0.0, "degenerate column {i} with tau = {tau}");
+        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        if delta[0] != 0.0 {
+            self.a.col_axpy(i - self.blocks.start, delta[0], aux);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +236,29 @@ mod tests {
 
     fn small() -> LassoProblem {
         LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 42))
+    }
+
+    #[test]
+    fn column_shard_matches_full_problem_bitwise() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(21);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.4).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let shard = p.column_shard(7..19).expect("lasso shards");
+        assert_eq!(shard.block_range(), 7..19);
+        let (mut zf, mut zs) = ([0.0], [0.0]);
+        for i in 7..19 {
+            let ef = p.best_response(i, &x, &aux, 0.7, &mut zf);
+            let es = shard.best_response(i, &x, &aux, 0.7, &mut zs);
+            assert_eq!(ef, es, "E_{i}");
+            assert_eq!(zf[0], zs[0], "zhat_{i}");
+            let mut af = aux.clone();
+            let mut as_ = aux.clone();
+            p.apply_block_delta(i, &[0.3], &mut af);
+            shard.apply_block_delta(i, &[0.3], &mut as_);
+            assert_eq!(af, as_, "delta column {i}");
+        }
     }
 
     #[test]

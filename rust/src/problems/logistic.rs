@@ -19,7 +19,7 @@
 //! calculations for the latest information" trade-off the paper discusses
 //! for Gauss-Seidel variants — the cost model charges for it).
 
-use super::Problem;
+use super::{Problem, ProblemShard};
 use crate::datagen::LogisticInstance;
 use crate::linalg::{vector, BlockPartition, Matrix};
 
@@ -367,6 +367,15 @@ impl Problem for LogisticProblem {
         self.col_sq[i] / 4.0
     }
 
+    fn column_shard(&self, blocks: std::ops::Range<usize>) -> Option<Box<dyn ProblemShard>> {
+        // scalar blocks: block index == column index
+        Some(Box::new(LogisticShard {
+            y: self.y.columns_range(blocks.clone()),
+            c: self.c,
+            blocks,
+        }))
+    }
+
     fn flops_best_response(&self, i: usize) -> f64 {
         // fast path: two fused column passes over precomputed weights
         4.0 * self.y.col_nnz(i) as f64 + 8.0
@@ -385,6 +394,78 @@ impl Problem for LogisticProblem {
     }
 }
 
+/// Column shard of a [`LogisticProblem`]: the owned scalar blocks'
+/// label-scaled columns. Both best-response paths (weighted fast path
+/// from the shared prelude scratch, fresh-state recompute) mirror the
+/// full problem's inner loops exactly, so results are bitwise equal.
+struct LogisticShard {
+    /// The shard's label-scaled columns `Ỹ_s` (m × |blocks|).
+    y: Matrix,
+    /// ℓ1 weight `c`.
+    c: f64,
+    /// Owned global block range.
+    blocks: std::ops::Range<usize>,
+}
+
+impl ProblemShard for LogisticShard {
+    fn block_range(&self) -> std::ops::Range<usize> {
+        self.blocks.clone()
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        let (mut g, mut h) = (0.0, 0.0);
+        match &self.y {
+            Matrix::Dense(d) => {
+                let col = d.col(i - self.blocks.start);
+                for (v, &u) in col.iter().zip(aux) {
+                    let s = sigma_neg(u);
+                    g -= v * s;
+                    h += v * v * s * (1.0 - s);
+                }
+            }
+            Matrix::Sparse(sp) => {
+                let (rows, vals) = sp.col(i - self.blocks.start);
+                for (&r, &v) in rows.iter().zip(vals) {
+                    let s = sigma_neg(aux[r]);
+                    g -= v * s;
+                    h += v * v * s * (1.0 - s);
+                }
+            }
+        }
+        let denom = h + tau;
+        debug_assert!(denom > 0.0);
+        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn best_response_with(
+        &self,
+        i: usize,
+        x: &[f64],
+        _aux: &[f64],
+        scratch: &[f64],
+        tau: f64,
+        out: &mut [f64],
+    ) -> f64 {
+        let m = self.y.nrows();
+        let (w, q) = scratch.split_at(m);
+        let j = i - self.blocks.start;
+        let g = -self.y.col_dot(j, w);
+        let h = self.y.col_sq_weighted_dot(j, q);
+        let denom = h + tau;
+        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        if delta[0] != 0.0 {
+            self.y.col_axpy(i - self.blocks.start, delta[0], aux);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -392,6 +473,36 @@ mod tests {
 
     fn small() -> LogisticProblem {
         LogisticProblem::from_instance(logistic_like(LogisticPreset::Gisette, 0.01, 77))
+    }
+
+    #[test]
+    fn column_shard_matches_full_problem_bitwise() {
+        // both the sparse (real-sim-like) and dense (gisette-like) storages
+        for p in [
+            small(),
+            LogisticProblem::from_instance(logistic_like(LogisticPreset::RealSim, 0.005, 31)),
+        ] {
+            let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(5);
+            let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.2).collect();
+            let mut aux = vec![0.0; p.aux_len()];
+            p.init_aux(&x, &mut aux);
+            let mut scratch = vec![0.0; p.prelude_len()];
+            p.prelude(&x, &aux, &mut scratch);
+            let lo = p.n() / 3;
+            let hi = 2 * p.n() / 3;
+            let shard = p.column_shard(lo..hi).expect("logistic shards");
+            let (mut zf, mut zs) = ([0.0], [0.0]);
+            for i in lo..hi {
+                let ef = p.best_response(i, &x, &aux, 0.9, &mut zf);
+                let es = shard.best_response(i, &x, &aux, 0.9, &mut zs);
+                assert_eq!(ef, es, "fresh E_{i}");
+                assert_eq!(zf[0], zs[0], "fresh zhat_{i}");
+                let ef = p.best_response_with(i, &x, &aux, &scratch, 0.9, &mut zf);
+                let es = shard.best_response_with(i, &x, &aux, &scratch, 0.9, &mut zs);
+                assert_eq!(ef, es, "weighted E_{i}");
+                assert_eq!(zf[0], zs[0], "weighted zhat_{i}");
+            }
+        }
     }
 
     #[test]

@@ -33,6 +33,47 @@ pub use svm::SvmProblem;
 use crate::linalg::BlockPartition;
 use std::ops::Range;
 
+/// A column shard of a problem — the per-worker state of the
+/// distributed-memory backend (`--backend sharded`): a contiguous block
+/// range plus **copies of exactly those columns** of the data matrix.
+/// No shard ever holds the full matrix; the engine hands each worker its
+/// shard, the replicated auxiliary vector, and the shared per-iteration
+/// scratch, and the worker computes best responses / delta columns for
+/// its own blocks only (owner-computes).
+///
+/// Every method must use the same inner loops as the corresponding
+/// full-matrix [`Problem`] method, so shard-computed quantities are
+/// **bitwise identical** to the shared-memory backend — the golden-trace
+/// suite (`tests/integration_golden.rs`) pins this end to end.
+pub trait ProblemShard: Send + Sync {
+    /// Global block range this shard owns.
+    fn block_range(&self) -> Range<usize>;
+
+    /// Fresh-state best response of owned block `i` (global index) into
+    /// `out`; returns the error bound `E_i`. Mirrors
+    /// [`Problem::best_response`] but reads only the shard's columns.
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64;
+
+    /// Scratch-assisted best response (logistic weights), defaulting to
+    /// the fresh-state path. Mirrors [`Problem::best_response_with`].
+    fn best_response_with(
+        &self,
+        i: usize,
+        x: &[f64],
+        aux: &[f64],
+        _scratch: &[f64],
+        tau: f64,
+        out: &mut [f64],
+    ) -> f64 {
+        self.best_response(i, x, aux, tau, out)
+    }
+
+    /// Propagate an owned block's step into a residual-sized buffer
+    /// (either the shard's partial delta buffer or a private auxiliary
+    /// copy). Mirrors [`Problem::apply_block_delta`].
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]);
+}
+
 /// A block-structured composite optimization problem.
 pub trait Problem: Send + Sync {
     /// Total variable dimension `n`.
@@ -195,6 +236,17 @@ pub trait Problem: Send + Sync {
     /// gracefully to uniform sampling.
     fn block_lipschitz(&self, _i: usize) -> f64 {
         1.0
+    }
+
+    /// Build the column shard owning the given block range: copies of
+    /// exactly those columns plus the per-block constants the best
+    /// response needs — the per-worker data of the distributed-memory
+    /// backend. `None` (the default) means the family has no sharded
+    /// path yet (`--backend sharded` then refuses to run); the paper's
+    /// three experimental families (LASSO, logistic, nonconvex QP)
+    /// implement it.
+    fn column_shard(&self, _blocks: Range<usize>) -> Option<Box<dyn ProblemShard>> {
+        None
     }
 
     // ---- flop accounting (drives the cluster simulator) ----

@@ -16,7 +16,7 @@
 //!   (for a 1-D convex objective the box solution is the projection of the
 //!   unconstrained minimizer).
 
-use super::Problem;
+use super::{Problem, ProblemShard};
 use crate::datagen::NonconvexQpInstance;
 use crate::linalg::{vector, BlockPartition, Matrix};
 
@@ -195,6 +195,19 @@ impl Problem for NonconvexQpProblem {
         2.0 * self.col_sq[i] + 2.0 * self.cbar
     }
 
+    fn column_shard(&self, blocks: std::ops::Range<usize>) -> Option<Box<dyn ProblemShard>> {
+        // scalar blocks: block index == column index
+        Some(Box::new(QpShard {
+            a: self.a.columns_range(blocks.clone()),
+            c: self.c,
+            cbar: self.cbar,
+            box_bound: self.box_bound,
+            tau_min: self.tau_min(),
+            col_sq: self.col_sq[blocks.clone()].to_vec(),
+            blocks,
+        }))
+    }
+
     fn flops_best_response(&self, i: usize) -> f64 {
         2.0 * self.a.col_nnz(i) as f64 + 10.0
     }
@@ -212,6 +225,55 @@ impl Problem for NonconvexQpProblem {
     }
 }
 
+/// Column shard of a [`NonconvexQpProblem`]: the owned scalar blocks'
+/// columns plus the curvature constants of (13). Inner loops mirror the
+/// full problem exactly, so results are bitwise equal.
+struct QpShard {
+    /// The shard's columns `A_s` (m × |blocks|).
+    a: Matrix,
+    /// ℓ1 weight `c`.
+    c: f64,
+    /// Concavity shift `c̄`.
+    cbar: f64,
+    /// Box half-width `β`.
+    box_bound: f64,
+    /// Convexity floor for τ (`2c̄ + ε`), for the well-posedness check.
+    tau_min: f64,
+    /// Squared column norms of the owned columns.
+    col_sq: Vec<f64>,
+    /// Owned global block range.
+    blocks: std::ops::Range<usize>,
+}
+
+impl ProblemShard for QpShard {
+    fn block_range(&self) -> std::ops::Range<usize> {
+        self.blocks.clone()
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        debug_assert!(
+            tau >= self.tau_min,
+            "tau = {tau} below tau_min = {} — subproblem may be nonconvex",
+            self.tau_min
+        );
+        let j = i - self.blocks.start;
+        let g = 2.0 * self.a.col_dot(j, aux) - 2.0 * self.cbar * x[i];
+        let d = 2.0 * self.col_sq[j] - 2.0 * self.cbar; // exact curvature
+        let denom = d + tau;
+        debug_assert!(denom > 0.0);
+        let unclamped = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        let z = unclamped.clamp(-self.box_bound, self.box_bound);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        if delta[0] != 0.0 {
+            self.a.col_axpy(i - self.blocks.start, delta[0], aux);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +281,24 @@ mod tests {
 
     fn small() -> NonconvexQpProblem {
         NonconvexQpProblem::from_instance(nonconvex_qp(20, 30, 0.1, 10.0, 50.0, 1.0, 13))
+    }
+
+    #[test]
+    fn column_shard_matches_full_problem_bitwise() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(3);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.uniform(-0.8, 0.8)).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let tau = p.tau_min() + 3.0;
+        let shard = p.column_shard(5..25).expect("qp shards");
+        let (mut zf, mut zs) = ([0.0], [0.0]);
+        for i in 5..25 {
+            let ef = p.best_response(i, &x, &aux, tau, &mut zf);
+            let es = shard.best_response(i, &x, &aux, tau, &mut zs);
+            assert_eq!(ef, es, "E_{i}");
+            assert_eq!(zf[0], zs[0], "zhat_{i}");
+        }
     }
 
     #[test]

@@ -17,6 +17,13 @@
 //! What the model preserves from the paper is exactly what its figures
 //! compare: per-iteration work, degree of parallelism, and communication
 //! rounds of each algorithm.
+//!
+//! The communication axis is no longer taken on faith: the column-sharded
+//! backend ([`crate::parallel::shard`], `--backend sharded`) *performs* a
+//! deterministic in-process allreduce mirroring the ring model above and
+//! counts its real rounds/words into `SolveReport::comm`; `bench shard`
+//! compares those measurements against the `reduce_rounds` this model is
+//! fed (`results/BENCH_4.json`).
 
 use crate::linalg::DenseMatrix;
 use crate::metrics::IterCost;

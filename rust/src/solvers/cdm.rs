@@ -16,7 +16,6 @@
 //! objective evaluation (the chunked ordered reduction
 //! `parallel::par_v_val`, thread-count-invariant).
 
-use crate::coordinator::strategy::SelectionSpec;
 use crate::coordinator::{CommonOptions, SolveReport};
 use crate::engine::{self, SolverSpec};
 use crate::problems::Problem;
@@ -26,30 +25,6 @@ use crate::problems::Problem;
 /// block — the classical full Gauss-Seidel pass.
 pub fn cdm(problem: &dyn Problem, x0: &[f64], common: &CommonOptions, shuffle: bool) -> SolveReport {
     engine::solve(problem, x0, &SolverSpec::cdm(common.clone(), shuffle))
-}
-
-/// CDM with the sweep restricted by a selection strategy
-/// ([`crate::coordinator::strategy`]): each iteration visits exactly the
-/// strategy's *candidate* set (the full-scan greedy specs propose every
-/// block, reproducing classical CDM; the sketching specs sweep only
-/// `⌈frac·N⌉` blocks).
-#[deprecated(
-    since = "0.1.0",
-    note = "use `engine::solve` with `SolverSpec::cdm_with` — the \
-            per-solver `_with_selection` variant matrix is folded into the engine"
-)]
-pub fn cdm_with_selection(
-    problem: &dyn Problem,
-    x0: &[f64],
-    common: &CommonOptions,
-    shuffle: bool,
-    spec: &SelectionSpec,
-) -> SolveReport {
-    engine::solve(
-        problem,
-        x0,
-        &SolverSpec::cdm_with(common.clone(), shuffle, spec.clone()),
-    )
 }
 
 #[cfg(test)]

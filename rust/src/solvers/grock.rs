@@ -14,7 +14,6 @@
 //! Top-P selection, and the memoryless full-step merge.
 //! `greedy_1bcd` is the P = 1 special case (always convergent).
 
-use crate::coordinator::strategy::SelectionSpec;
 use crate::coordinator::{CommonOptions, SolveReport};
 use crate::engine::{self, SolverSpec};
 use crate::problems::Problem;
@@ -30,24 +29,6 @@ pub fn grock(
     p_blocks: usize,
 ) -> SolveReport {
     engine::solve(problem, x0, &SolverSpec::grock(common.clone(), p_blocks))
-}
-
-/// GRock's full-step (γ = 1, memoryless) iteration under an arbitrary
-/// selection strategy — [`grock`] is the classical Top-P instance; the
-/// sketching specs ([`SelectionSpec::Hybrid`] etc.) yield randomized
-/// GRock variants that skip the full descent-potential scan.
-#[deprecated(
-    since = "0.1.0",
-    note = "use `engine::solve` with `SolverSpec::grock_with` — the \
-            per-solver `_with_selection` variant matrix is folded into the engine"
-)]
-pub fn grock_with_selection(
-    problem: &dyn Problem,
-    x0: &[f64],
-    common: &CommonOptions,
-    spec: &SelectionSpec,
-) -> SolveReport {
-    engine::solve(problem, x0, &SolverSpec::grock_with(common.clone(), spec.clone()))
 }
 
 /// Greedy 1-block coordinate descent — GRock's provably convergent P = 1

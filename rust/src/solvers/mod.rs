@@ -28,10 +28,6 @@ pub mod sparsa;
 
 pub use admm::{admm, AdmmOptions};
 pub use cdm::cdm;
-#[allow(deprecated)] // one-release compat shim for the old variant matrix
-pub use cdm::cdm_with_selection;
 pub use fista::fista;
 pub use grock::{greedy_1bcd, grock};
-#[allow(deprecated)] // one-release compat shim for the old variant matrix
-pub use grock::grock_with_selection;
 pub use sparsa::{sparsa, SparsaOptions};

@@ -1,0 +1,306 @@
+//! Golden-trace regression harness: the first 5 iterates of every solver
+//! family on small seeded lasso / logistic / nonconvex-qp instances,
+//! pinned **bitwise** (f64 bit patterns, hex-serialized) against
+//! `tests/fixtures/golden_*.txt` — so a future refactor cannot silently
+//! drift numerics — and pinned across the engine's two data-plane
+//! backends and the worker-thread axis:
+//!
+//! * `shared` ≡ `sharded` bitwise for the scan/sweep families (the
+//!   column-distributed owner-computes path with its fixed-order
+//!   allreduce must be iterate-preserving);
+//! * every `threads` value produces the same bits (the repo-wide
+//!   determinism contract).
+//!
+//! The CI matrix drives the axes through env vars:
+//! `FLEXA_TEST_BACKEND` = `shared` | `sharded` | `both` (default `both`)
+//! and `FLEXA_TEST_THREADS` = comma list (default `1,2,4`).
+//!
+//! Missing fixture files are **generated** (and reported on stderr) so the
+//! harness bootstraps on a fresh machine; commit the generated files to
+//! arm the regression check. See `tests/fixtures/README.md`.
+
+use flexa::coordinator::{Backend, CommonOptions, TermMetric};
+use flexa::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+use flexa::engine::{self, SolverSpec};
+use flexa::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, Problem};
+use std::path::PathBuf;
+
+/// Iterates pinned per (problem, family).
+const GOLDEN_ITERS: usize = 5;
+/// Simulated cores: also the shard count of the sharded backend runs.
+const CORES: usize = 4;
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures")
+}
+
+fn threads_axis() -> Vec<usize> {
+    std::env::var("FLEXA_TEST_THREADS")
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .filter_map(|t| t.trim().parse::<usize>().ok())
+                .filter(|&t| t >= 1)
+                .collect::<Vec<_>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
+fn backends_axis() -> Vec<Backend> {
+    match std::env::var("FLEXA_TEST_BACKEND").as_deref() {
+        Ok("shared") => vec![Backend::Shared],
+        Ok("sharded") => vec![Backend::Sharded],
+        _ => vec![Backend::Shared, Backend::Sharded],
+    }
+}
+
+/// One solver family of the golden matrix.
+struct Family {
+    name: &'static str,
+    /// Whether the sharded data plane covers it (scan/sweep families).
+    sharded: bool,
+}
+
+const fn fam(name: &'static str, sharded: bool) -> Family {
+    Family { name, sharded }
+}
+
+/// The families pinned on each problem kind. ADMM assumes the LASSO
+/// residual form; GRock/greedy-1BCD pin τ = 0, which the nonconvex QP's
+/// convexity floor (τ > 2c̄) forbids.
+fn families_for(kind: &str) -> Vec<Family> {
+    let mut fams = vec![
+        fam("flexa", true),
+        fam("gauss-jacobi", true),
+        fam("gj-flexa", true),
+        fam("cdm", true),
+        fam("fista", false),
+        fam("sparsa", false),
+    ];
+    if kind != "nonconvex-qp" {
+        fams.push(fam("grock", true));
+        fams.push(fam("greedy-1bcd", true));
+    }
+    if kind == "lasso" {
+        fams.push(fam("admm", false));
+    }
+    fams
+}
+
+fn build_problem(kind: &str) -> Box<dyn Problem> {
+    match kind {
+        "lasso" => Box::new(LassoProblem::from_instance(nesterov_lasso(30, 40, 0.1, 1.0, 4242))),
+        "logistic" => Box::new(LogisticProblem::from_instance(logistic_like(
+            LogisticPreset::Gisette,
+            0.008,
+            4242,
+        ))),
+        "nonconvex-qp" => Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
+            30, 40, 0.1, 10.0, 50.0, 1.0, 4242,
+        ))),
+        other => panic!("unknown golden problem kind {other:?}"),
+    }
+}
+
+fn spec_for(
+    family: &str,
+    kind: &str,
+    backend: Backend,
+    threads: usize,
+    max_iters: usize,
+) -> SolverSpec {
+    let term = if kind == "lasso" { TermMetric::RelErr } else { TermMetric::Merit };
+    let common = CommonOptions {
+        max_iters,
+        max_wall_s: f64::MAX,
+        tol: 0.0, // never converge inside the pinned window
+        term,
+        cores: CORES,
+        threads,
+        trace_every: max_iters,
+        backend,
+        name: format!("golden-{family}"),
+        ..Default::default()
+    };
+    SolverSpec::from_name(family, common, None, 0.5, CORES)
+        .unwrap_or_else(|e| panic!("{family}: {e}"))
+}
+
+/// `x^1 … x^5` for one configuration: the engine is deterministic, so the
+/// `max_iters = k` run reproduces the first `k` iterations of any longer
+/// run — each final iterate is one golden line.
+fn iterates(
+    problem: &dyn Problem,
+    family: &str,
+    kind: &str,
+    backend: Backend,
+    threads: usize,
+) -> Vec<Vec<f64>> {
+    let x0 = vec![0.0; problem.n()];
+    (1..=GOLDEN_ITERS)
+        .map(|k| engine::solve(problem, &x0, &spec_for(family, kind, backend, threads, k)).x)
+        .collect()
+}
+
+fn to_hex_lines(trace: &[Vec<f64>]) -> String {
+    let mut out = String::new();
+    for x in trace {
+        let words: Vec<String> = x.iter().map(|v| format!("{:016x}", v.to_bits())).collect();
+        out.push_str(&words.join(" "));
+        out.push('\n');
+    }
+    out
+}
+
+fn assert_bits_equal(a: &[Vec<f64>], b: &[Vec<f64>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: iterate count");
+    for (k, (xa, xb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(xa.len(), xb.len(), "{what}: x^{} dimension", k + 1);
+        for i in 0..xa.len() {
+            assert!(
+                xa[i].to_bits() == xb[i].to_bits(),
+                "{what}: x^{}[{i}] {:e} != {:e} (bits {:016x} vs {:016x})",
+                k + 1,
+                xa[i],
+                xb[i],
+                xa[i].to_bits(),
+                xb[i].to_bits()
+            );
+        }
+    }
+}
+
+/// Compare against (or bootstrap) the committed fixture.
+fn check_fixture(kind: &str, family: &str, reference: &[Vec<f64>]) {
+    let dir = fixtures_dir();
+    let path = dir.join(format!("golden_{kind}_{family}.txt"));
+    let rendered = to_hex_lines(reference);
+    match std::fs::read_to_string(&path) {
+        Ok(stored) => {
+            // newline-insensitive compare (editors may add a trailing \n)
+            assert_eq!(
+                stored.trim_end(),
+                rendered.trim_end(),
+                "golden fixture drift: {} no longer matches the engine's first \
+                 {GOLDEN_ITERS} iterates — a refactor changed numerics. If the change \
+                 is intentional, delete the fixture and rerun to regenerate.",
+                path.display()
+            );
+        }
+        Err(_) => {
+            // CI sets FLEXA_GOLDEN_REQUIRE=1 once the fixtures are
+            // committed, turning a silently-bootstrapping run into a
+            // failure (a fresh checkout must have the history to check)
+            assert!(
+                std::env::var("FLEXA_GOLDEN_REQUIRE").is_err(),
+                "golden fixture {} is missing but FLEXA_GOLDEN_REQUIRE is set — \
+                 the committed history check cannot run",
+                path.display()
+            );
+            let _ = std::fs::create_dir_all(&dir);
+            std::fs::write(&path, &rendered)
+                .unwrap_or_else(|e| panic!("cannot write fixture {}: {e}", path.display()));
+            eprintln!("generated golden fixture {} (commit it to arm the check)", path.display());
+        }
+    }
+}
+
+/// The full golden matrix for one problem kind.
+fn golden_matrix(kind: &str) {
+    let problem = build_problem(kind);
+    let backends = backends_axis();
+    let threads = threads_axis();
+    for family in families_for(kind) {
+        let run_backends: Vec<Backend> = backends
+            .iter()
+            .copied()
+            .filter(|b| *b == Backend::Shared || family.sharded)
+            .collect();
+        if run_backends.is_empty() {
+            continue; // sharded-only lane, full-vector family
+        }
+        // reference trace: first backend × first thread count
+        let reference =
+            iterates(problem.as_ref(), family.name, kind, run_backends[0], threads[0]);
+        assert_eq!(reference.len(), GOLDEN_ITERS);
+
+        for &backend in &run_backends {
+            for &t in &threads {
+                if backend == run_backends[0] && t == threads[0] {
+                    continue;
+                }
+                let got = iterates(problem.as_ref(), family.name, kind, backend, t);
+                assert_bits_equal(
+                    &reference,
+                    &got,
+                    &format!("{kind}/{} @ backend={:?} threads={t}", family.name, backend),
+                );
+            }
+        }
+        check_fixture(kind, family.name, &reference);
+    }
+}
+
+#[test]
+fn golden_traces_lasso() {
+    golden_matrix("lasso");
+}
+
+#[test]
+fn golden_traces_logistic() {
+    golden_matrix("logistic");
+}
+
+#[test]
+fn golden_traces_nonconvex_qp() {
+    golden_matrix("nonconvex-qp");
+}
+
+#[test]
+fn golden_run_is_a_prefix_of_a_longer_run() {
+    // the harness premise: a max_iters = k solve reproduces the first k
+    // iterations of a longer run. The trace does not store iterates, but
+    // the objective V(x^k) is a deterministic function of the iterate, so
+    // comparing the long run's per-iteration objective bits against each
+    // truncated run's final objective pins the premise for every k.
+    let problem = build_problem("lasso");
+    let x0 = vec![0.0; problem.n()];
+    let mut long_spec = spec_for("flexa", "lasso", Backend::Shared, 1, 9);
+    long_spec.common.trace_every = 1;
+    let long = engine::solve(problem.as_ref(), &x0, &long_spec);
+    assert_eq!(long.iters, 9);
+    for k in 1..=GOLDEN_ITERS {
+        let short = engine::solve(
+            problem.as_ref(),
+            &x0,
+            &spec_for("flexa", "lasso", Backend::Shared, 1, k),
+        );
+        assert_eq!(short.iters, k);
+        let pt = long
+            .trace
+            .points
+            .iter()
+            .find(|p| p.iter == k)
+            .unwrap_or_else(|| panic!("long run has no trace point at iter {k}"));
+        assert!(
+            short.final_obj.to_bits() == pt.obj.to_bits(),
+            "max_iters = {k} does not reproduce the long run's iterate \
+             (V = {:e} vs {:e})",
+            short.final_obj,
+            pt.obj
+        );
+    }
+    // and the premise holds across thread counts
+    let short = engine::solve(
+        problem.as_ref(),
+        &x0,
+        &spec_for("flexa", "lasso", Backend::Shared, 1, 3),
+    );
+    let replay = engine::solve(
+        problem.as_ref(),
+        &x0,
+        &spec_for("flexa", "lasso", Backend::Shared, 4, 3),
+    );
+    assert_eq!(short.x, replay.x, "prefix determinism across thread counts");
+}

@@ -6,6 +6,7 @@ use flexa::coordinator::SelectionRule;
 use flexa::datagen::nesterov_lasso;
 use flexa::linalg::{vector, BlockPartition, CscMatrix, DenseMatrix};
 use flexa::metrics::IterCost;
+use flexa::parallel::{allreduce_sum, row_chunks, ShardLayout, WorkerPool};
 use flexa::problems::{LassoProblem, Problem};
 use flexa::rng::Xoshiro256pp;
 use flexa::simulator::CostModel;
@@ -280,6 +281,121 @@ fn prop_incremental_residual_never_drifts() {
         p.init_aux(&x, &mut fresh);
         let drift = vector::dist2(&aux, &fresh) / vector::nrm2(&fresh).max(1.0);
         assert!(drift < 1e-9, "relative drift {drift}");
+    });
+}
+
+#[test]
+fn prop_sharded_allreduce_matches_sequential_fixed_order_sum_bitwise() {
+    // the deterministic in-process allreduce behind `--backend sharded`:
+    // out = Σ_s partials[s] in ascending shard order per element, for ANY
+    // worker-thread count — bit-for-bit, not within tolerance
+    for_all(60, |rng| {
+        let shards = 1 + rng.next_usize(7);
+        let m = 1 + rng.next_usize(300);
+        let partials: Vec<Vec<f64>> = (0..shards)
+            .map(|_| {
+                (0..m)
+                    .map(|_| rng.next_normal() * 10f64.powi(rng.next_usize(7) as i32 - 3))
+                    .collect()
+            })
+            .collect();
+        let chunks = row_chunks(m);
+        // the sequential fixed-order fold is the specification
+        let mut expect = vec![0.0f64; m];
+        for p in &partials {
+            for (o, v) in expect.iter_mut().zip(p) {
+                *o += *v;
+            }
+        }
+        for threads in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut out = vec![f64::NAN; m];
+            allreduce_sum(&pool, &partials, &mut out, &chunks);
+            for j in 0..m {
+                assert!(
+                    out[j].to_bits() == expect[j].to_bits(),
+                    "threads={threads} j={j}: {:016x} != {:016x}",
+                    out[j].to_bits(),
+                    expect[j].to_bits()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_shard_layout_partitions_blocks_and_columns_exactly_once() {
+    // owner-computes soundness: every block (and column) belongs to
+    // exactly one shard, shards are contiguous and ascending, and the
+    // boundaries depend only on (N, S)
+    for_all(120, |rng| {
+        let n = 1 + rng.next_usize(200);
+        let shards = 1 + rng.next_usize(12);
+        let blocks = if rng.next_f64() < 0.5 {
+            BlockPartition::scalar(n)
+        } else {
+            BlockPartition::uniform(n, 1 + rng.next_usize(7))
+        };
+        let nb = blocks.n_blocks();
+        let layout = ShardLayout::contiguous(&blocks, shards);
+        assert_eq!(layout.n_shards(), shards);
+        let mut block_owner = vec![usize::MAX; nb];
+        let mut col_owner = vec![usize::MAX; blocks.dim()];
+        let mut prev_end = 0usize;
+        for s in 0..shards {
+            let br = layout.block_range(s);
+            assert_eq!(br.start, prev_end, "shard block ranges must be contiguous");
+            prev_end = br.end;
+            for i in br.clone() {
+                assert_eq!(block_owner[i], usize::MAX, "block {i} owned twice");
+                block_owner[i] = s;
+                assert_eq!(layout.owner(i), s);
+            }
+            let cr = layout.col_range(s);
+            for j in cr {
+                assert_eq!(col_owner[j], usize::MAX, "column {j} owned twice");
+                col_owner[j] = s;
+            }
+        }
+        assert_eq!(prev_end, nb, "blocks not covered");
+        assert!(block_owner.iter().all(|&s| s != usize::MAX));
+        assert!(col_owner.iter().all(|&s| s != usize::MAX), "columns not covered");
+        // same (N, S) ⇒ same boundaries (thread/seed independent)
+        let again = ShardLayout::contiguous(&blocks, shards);
+        for s in 0..shards {
+            assert_eq!(layout.block_range(s), again.block_range(s));
+            assert_eq!(layout.col_range(s), again.col_range(s));
+        }
+    });
+}
+
+#[test]
+fn prop_csc_adjoint_identity() {
+    // ⟨Ax, y⟩ = ⟨x, Aᵀy⟩ for random sparse instances (matvec and
+    // matvec_t are transposes of each other, up to f64 reassociation)
+    for_all(100, |rng| {
+        let m = 1 + rng.next_usize(40);
+        let n = 1 + rng.next_usize(40);
+        let mut triplets = Vec::new();
+        for _ in 0..rng.next_usize(3 * (m + n) + 1) {
+            triplets.push((rng.next_usize(m), rng.next_usize(n), rng.next_normal()));
+        }
+        let a = CscMatrix::from_triplets(m, n, &triplets);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.next_normal()).collect();
+        let mut ax = vec![0.0; m];
+        a.matvec(&x, &mut ax);
+        let mut aty = vec![0.0; n];
+        a.matvec_t(&y, &mut aty);
+        let lhs = vector::dot(&ax, &y);
+        let rhs = vector::dot(&x, &aty);
+        let scale: f64 = triplets.iter().map(|t| t.2.abs()).sum::<f64>()
+            * x.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1.0)
+            * y.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1.0);
+        assert!(
+            (lhs - rhs).abs() <= 1e-12 * scale.max(1.0),
+            "adjoint identity violated: {lhs} vs {rhs} (scale {scale})"
+        );
     });
 }
 
