@@ -782,10 +782,34 @@ pub fn build_problem(spec: &ProblemSpec) -> Box<dyn Problem> {
             let p = LogisticPreset::from_name(preset).unwrap_or(LogisticPreset::Gisette);
             Box::new(LogisticProblem::from_instance(logistic_like(p, *scale, *seed)))
         }
+        ProblemSpec::Svm { preset, scale, c, seed } => {
+            let p = LogisticPreset::from_name(preset).unwrap_or(LogisticPreset::Gisette);
+            let inst = logistic_like(p, *scale, *seed);
+            // default: the preset's sample-scaled ℓ1 weight (like
+            // logistic), floored so tiny scaled instances stay
+            // well-posed; an explicit problem.c overrides it UNCLAMPED
+            // (config parse already rejects c ≤ 0)
+            let c = c.unwrap_or_else(|| inst.c.max(1e-3));
+            Box::new(crate::problems::SvmProblem::new(inst.y, &inst.labels, c))
+        }
         ProblemSpec::NonconvexQp { m, n, sparsity, c, cbar, box_bound, seed } => {
             Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
                 *m, *n, *sparsity, *c, *cbar, *box_bound, *seed,
             )))
+        }
+        ProblemSpec::Dictionary { m, atoms, samples, code_sparsity, noise, c, seed } => {
+            let mut inst = crate::datagen::dictionary_instance(
+                *m,
+                *atoms,
+                *samples,
+                *code_sparsity,
+                *noise,
+                *seed,
+            );
+            if let Some(c) = c {
+                inst.c = *c;
+            }
+            Box::new(crate::problems::DictionaryCodesProblem::from_instance(&inst))
         }
     }
 }
@@ -862,6 +886,7 @@ mod tests {
             ProblemSpec::Lasso { m: 20, n: 30, sparsity: 0.1, c: 1.0, seed: 1 },
             ProblemSpec::GroupLasso { m: 20, n: 32, sparsity: 0.1, c: 1.0, block_size: 4, seed: 1 },
             ProblemSpec::Logistic { preset: "gisette".into(), scale: 0.01, seed: 1 },
+            ProblemSpec::Svm { preset: "gisette".into(), scale: 0.01, c: Some(0.25), seed: 1 },
             ProblemSpec::NonconvexQp {
                 m: 20,
                 n: 30,
@@ -871,10 +896,21 @@ mod tests {
                 box_bound: 1.0,
                 seed: 1,
             },
+            ProblemSpec::Dictionary {
+                m: 12,
+                atoms: 8,
+                samples: 16,
+                code_sparsity: 0.3,
+                noise: 0.01,
+                c: None,
+                seed: 1,
+            },
         ];
         for s in &specs {
             let p = build_problem(s);
             assert!(p.n() > 0);
+            // every config-reachable kind must provide the sharded view
+            assert!(p.supports_column_shard(), "{s:?} lacks column shards");
         }
     }
 }

@@ -1,8 +1,9 @@
 //! `bench shard` — the sharded-backend panel.
 //!
 //! Two claims back the column-sharded distributed-memory backend, and
-//! this panel asserts both on every measured thread count across the
-//! paper's three problem families:
+//! this panel asserts both on every measured thread count across **all
+//! six** problem families (lasso, group-lasso, logistic, svm,
+//! nonconvex-qp, dictionary sparse coding — the full §II workload list):
 //!
 //! 1. **equivalence** — `--backend sharded` produces **bitwise-identical**
 //!    iterates to `--backend shared` (a hard assertion, not a tolerance):
@@ -17,17 +18,23 @@
 //!    cost model deliberately prices at zero rounds — the paper's point
 //!    about Gauss-Seidel methods at scale).
 //!
-//! Results land in `results/BENCH_4.json` (uploaded by the CI bench job,
-//! following the `BENCH_smoke.json` / `BENCH_3.json` trajectory
-//! convention).
+//! Results land in `results/BENCH_5.json` (uploaded by the CI bench job,
+//! following the `BENCH_smoke.json` / `BENCH_3.json` / `BENCH_4.json`
+//! trajectory convention; this PR's panel covers the full 6-family
+//! matrix where `BENCH_4.json` covered three).
 
 use super::figures::{BenchConfig, FigureOutput};
 use crate::bail;
 use crate::coordinator::{Backend, CommonOptions, TermMetric};
-use crate::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+use crate::datagen::{
+    dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
+};
 use crate::engine::{self, SolverSpec};
 use crate::metrics::TextTable;
-use crate::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, Problem};
+use crate::problems::{
+    DictionaryCodesProblem, GroupLassoProblem, LassoProblem, LogisticProblem, NonconvexQpProblem,
+    Problem, SvmProblem,
+};
 use crate::util::error::Result;
 use crate::util::Json;
 
@@ -36,22 +43,26 @@ const ITERS: usize = 40;
 /// Simulated cores = shard count (the paper's 8-node cluster shape).
 const CORES: usize = 8;
 
-/// Solver families with a sharded path, per problem kind (GRock pins
-/// τ = 0, which the nonconvex QP's convexity floor forbids).
+/// Solver families with a sharded path, per problem kind. GRock pins
+/// τ = 0, which the nonconvex QP's convexity floor forbids and which is
+/// ill-posed for the ℓ2-SVM (the active-hinge generalized-Hessian
+/// diagonal vanishes when a column's hinges all deactivate); the engine
+/// floors a pinned τ at `Problem::tau_min`, so the combinations run
+/// safely, but they are not paper configurations and stay out of the
+/// panel.
 fn solvers_for(problem_kind: &str) -> &'static [&'static str] {
     match problem_kind {
-        "nonconvex-qp" => &["flexa", "gauss-jacobi", "cdm"],
+        "nonconvex-qp" | "svm" => &["flexa", "gauss-jacobi", "cdm"],
         _ => &["flexa", "gauss-jacobi", "grock", "cdm"],
     }
 }
 
-/// The sharded-backend panel: backend equivalence + measured-vs-predicted
-/// communication, per problem family × solver × thread count. Bails when
-/// any pair of runs diverges bitwise; writes `BENCH_4.json`.
-pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
+/// The six-family workload of the panel (every paper §II instance the
+/// repo implements, sized by the bench scale).
+fn panel_problems(cfg: &BenchConfig) -> Vec<(&'static str, Box<dyn Problem>)> {
     let (m, n) = cfg.dims(600, 1200);
     let gisette_scale = (0.05 * cfg.scale).clamp(0.004, 1.0);
-    let problems: Vec<(&str, Box<dyn Problem>)> = vec![
+    vec![
         (
             "lasso",
             Box::new(LassoProblem::from_instance(nesterov_lasso(
@@ -60,7 +71,14 @@ pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
                 0.05,
                 1.0,
                 cfg.seed + 21,
-            ))),
+            ))) as Box<dyn Problem>,
+        ),
+        (
+            "group-lasso",
+            Box::new(GroupLassoProblem::from_instance(
+                nesterov_lasso(m, n, 0.05, 1.0, cfg.seed + 24),
+                4,
+            )),
         ),
         (
             "logistic",
@@ -70,6 +88,10 @@ pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
                 cfg.seed + 22,
             ))),
         ),
+        ("svm", {
+            let inst = logistic_like(LogisticPreset::Gisette, gisette_scale, cfg.seed + 25);
+            Box::new(SvmProblem::new(inst.y, &inst.labels, inst.c.max(0.1)))
+        }),
         (
             "nonconvex-qp",
             Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
@@ -82,7 +104,26 @@ pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
                 cfg.seed + 23,
             ))),
         ),
-    ];
+        (
+            "dictionary",
+            Box::new(DictionaryCodesProblem::from_instance(&dictionary_instance(
+                (m / 4).max(8),
+                (m / 8).max(4),
+                (n / 4).max(8),
+                0.3,
+                0.01,
+                cfg.seed + 26,
+            ))),
+        ),
+    ]
+}
+
+/// The sharded-backend panel: backend equivalence + measured-vs-predicted
+/// communication, per problem family × solver × thread count. Bails when
+/// any pair of runs diverges bitwise; writes `BENCH_5.json`.
+pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
+    let (m, n) = cfg.dims(600, 1200);
+    let problems = panel_problems(cfg);
 
     let mut table = TextTable::new(&[
         "problem",
@@ -167,16 +208,19 @@ pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
         ("n", Json::Num(n as f64)),
         ("cores", Json::Num(CORES as f64)),
         ("iters", Json::Num(ITERS as f64)),
+        ("families", Json::Num(problems.len() as f64)),
         ("runs", Json::arr(rows)),
     ]);
     let _ = std::fs::create_dir_all(&cfg.out_dir);
-    let path = format!("{}/BENCH_4.json", cfg.out_dir);
+    let path = format!("{}/BENCH_5.json", cfg.out_dir);
     let _ = std::fs::write(&path, payload.to_string_compact());
 
     let text = format!(
-        "sharded-backend panel ({CORES} shards, {ITERS} fixed iters; sharded iterates \
-         bitwise-identical to shared on every run; `allreduce`/`bcast` are measured \
-         exchange rounds, `predicted` is the cost model's Σ reduce_rounds) -> {path}\n{}",
+        "sharded-backend panel ({CORES} shards, {ITERS} fixed iters, all {} problem \
+         families; sharded iterates bitwise-identical to shared on every run; \
+         `allreduce`/`bcast` are measured exchange rounds, `predicted` is the cost \
+         model's Σ reduce_rounds) -> {path}\n{}",
+        problems.len(),
         table.render()
     );
     Ok(FigureOutput { id: "bench_shard".into(), traces: vec![], text })
@@ -187,7 +231,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn shard_panel_asserts_equivalence_and_writes_json() {
+    fn shard_panel_covers_all_six_families_and_writes_json() {
         let cfg = BenchConfig {
             scale: 0.05,
             budget_s: 1.0,
@@ -200,13 +244,23 @@ mod tests {
             threads: vec![1, 2],
         };
         let out = shard_panel(&cfg).expect("panel must pass");
-        assert!(out.text.contains("BENCH_4.json"));
-        let text = std::fs::read_to_string(format!("{}/BENCH_4.json", cfg.out_dir))
-            .expect("BENCH_4.json written");
+        assert!(out.text.contains("BENCH_5.json"));
+        let text = std::fs::read_to_string(format!("{}/BENCH_5.json", cfg.out_dir))
+            .expect("BENCH_5.json written");
         let json = Json::parse(&text).expect("valid json");
         let runs = json.get("runs").and_then(|r| r.as_arr()).expect("runs array");
-        // 2 problems × 4 solvers + 1 problem × 3 solvers, × 2 thread counts
-        assert_eq!(runs.len(), (2 * 4 + 3) * 2);
+        // 4 four-solver families + 2 three-solver families, × 2 thread counts
+        assert_eq!(runs.len(), (4 * 4 + 2 * 3) * 2);
+        let mut kinds: Vec<&str> = runs
+            .iter()
+            .filter_map(|r| r.get("problem").and_then(|p| p.as_str()))
+            .collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(
+            kinds,
+            vec!["dictionary", "group-lasso", "lasso", "logistic", "nonconvex-qp", "svm"]
+        );
         for r in runs {
             assert_eq!(r.get("bitwise_equal"), Some(&Json::Bool(true)));
             let ar = r.get("allreduce_rounds").and_then(|v| v.as_f64()).unwrap();

@@ -12,9 +12,10 @@
 //!   — regenerate the paper's figures/tables into `results/` (`selection`
 //!   is the strategy-comparison panel; `engine` is the SolverCore
 //!   overhead panel writing `BENCH_3.json`; `shard` is the sharded-backend
-//!   panel proving bitwise backend equivalence and comparing measured vs
-//!   predicted allreduce rounds into `BENCH_4.json`; `smoke` is the
-//!   seconds-long CI target that also writes `BENCH_smoke.json`);
+//!   panel proving bitwise backend equivalence over **all six** problem
+//!   families and comparing measured vs predicted allreduce rounds into
+//!   `BENCH_5.json`; `smoke` is the seconds-long CI target that also
+//!   writes `BENCH_smoke.json`);
 //! * `flexa runtime-check` — load + execute every artifact and compare
 //!   against the native engine (the L1↔L3 smoke test);
 //! * `flexa info` — platform, artifact, and cost-model report.
@@ -22,7 +23,7 @@
 pub mod args;
 
 use crate::bench::{self, BenchConfig};
-use crate::config::{ExperimentConfig, ProblemSpec};
+use crate::config::ExperimentConfig;
 use crate::coordinator::{Backend, CommonOptions, SelectionSpec, TermMetric};
 use crate::engine::{self, SolverSpec};
 use crate::metrics::{Trace, XAxis, YMetric};
@@ -70,7 +71,11 @@ USAGE:
 
 SOLVERS (config `solvers = \"...\"`; all dispatch through one SolverSpec):
   flexa | gj-flexa | gauss-jacobi | fista | sparsa | grock | greedy-1bcd
-  | admm | cdm      (admm needs problem kind = \"lasso\")
+  | admm | cdm      (admm needs a residual-form problem:
+                     kind = lasso | group-lasso | dictionary)
+
+PROBLEM KINDS (config `[problem] kind = \"...\"`; all run on both backends):
+  lasso | group-lasso | logistic | svm | nonconvex-qp | dictionary
 
 OPTIONS:
   --threads N         override the worker-thread count of every solver in
@@ -87,8 +92,7 @@ OPTIONS:
                       shared (one address space, default) or sharded (the
                       column-distributed owner-computes model with a
                       measured fixed-order allreduce; bitwise-identical
-                      iterates, scan/sweep solvers on
-                      lasso|logistic|nonconvex-qp only)
+                      iterates, scan/sweep solvers on every problem kind)
 
 ENV:
   FLEXA_BENCH_SCALE    instance scale vs the paper (default 0.2)
@@ -147,18 +151,17 @@ fn cmd_solve(args: &Args) -> Result<i32> {
             None => settings.name.clone(),
         };
         // backend override (CLI > per-solver/config `backend` key); the
-        // sharded data plane needs column-shard views, which the
-        // group-lasso generator does not provide yet
+        // sharded data plane needs column-shard views — probed on the
+        // built problem (Problem::supports_column_shard), never derived
+        // from a hand-maintained kind list. All six in-tree kinds pass.
         let backend = match backend_cli {
             Some(b) => b,
             None => Backend::parse(&settings.backend).map_err(|e| anyhow!(e))?,
         };
-        if backend == Backend::Sharded
-            && matches!(cfg.problem, ProblemSpec::GroupLasso { .. })
-        {
+        if backend == Backend::Sharded && !problem.supports_column_shard() {
             bail!(
-                "backend \"sharded\" supports kind = lasso | logistic | nonconvex-qp \
-                 (group-lasso has no column-shard view yet)"
+                "backend \"sharded\" needs an owner-computes column-shard view \
+                 (Problem::column_shard), which this problem does not provide"
             );
         }
         let common = CommonOptions {
@@ -174,11 +177,17 @@ fn cmd_solve(args: &Args) -> Result<i32> {
             name: run_name,
             ..Default::default()
         };
-        // ADMM's splitting step assumes the LASSO consensus form; refuse
-        // to silently run it on a problem whose aux is not the residual
-        // (the engine re-checks this with a runtime residual-form probe)
-        if settings.name == "admm" && !matches!(cfg.problem, ProblemSpec::Lasso { .. }) {
-            bail!("solver \"admm\" supports kind = \"lasso\" only");
+        // ADMM's splitting step assumes the residual consensus form
+        // F = ‖Ax − b‖²; the same probe backs the engine's runtime
+        // assert, so the CLI and the engine cannot disagree on coverage
+        // (lasso, group-lasso and dictionary pass; margin-aux and
+        // shifted-objective kinds fail cleanly here instead of asserting
+        // mid-solve)
+        if settings.name == "admm" && !crate::problems::is_residual_form(problem.as_ref()) {
+            bail!(
+                "solver \"admm\" requires a residual-form problem (F = ‖Ax − b‖²); \
+                 this problem's smooth part is not the plain residual sum of squares"
+            );
         }
         // one validated constructor behind the whole dispatch
         let spec = SolverSpec::from_name(

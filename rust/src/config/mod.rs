@@ -12,16 +12,18 @@
 //! solvers = "flexa, fista"       # comma-separated solver names:
 //!                                # flexa | gj-flexa | gauss-jacobi | fista
 //!                                # | sparsa | grock | greedy-1bcd | admm
-//!                                # | cdm  (admm needs kind = "lasso": its
-//!                                # splitting step assumes the residual
-//!                                # consensus form ‖Ax − s − b‖)
+//!                                # | cdm  (admm needs a residual-form
+//!                                # problem — lasso | group-lasso |
+//!                                # dictionary: its splitting step assumes
+//!                                # the consensus form ‖Ax − s − b‖)
 //! sigma = 0.5                    # shared defaults, overridable per solver
 //! cores = 4
 //! threads = 1
 //! backend = "shared"             # shared | sharded (engine data plane)
 //!
 //! [problem]
-//! kind = "lasso"                 # lasso | group-lasso | logistic | nonconvex-qp
+//! kind = "lasso"                 # lasso | group-lasso | logistic | svm
+//!                                # | nonconvex-qp | dictionary
 //! m = 90
 //! n = 100
 //!
@@ -41,6 +43,28 @@
 //! max_iters = 500
 //! tol = 1e-6
 //! ```
+//!
+//! ## `[problem]` kinds
+//!
+//! * `lasso` — Nesterov-generator LASSO (`m`, `n`, `sparsity`, `c`,
+//!   `seed`); the optimum is known by construction.
+//! * `group-lasso` — the same generator over blocks of `block_size`.
+//! * `logistic` — sparse logistic regression shaped like a named dataset
+//!   (`preset` = `gisette` | `real-sim` | `rcv1`, `scale` ∈ (0, 1]).
+//! * `svm` — ℓ1-regularized ℓ2-loss SVM on the same labelled datasets
+//!   (`preset`, `scale`; optional `c` overrides the preset's
+//!   sample-scaled ℓ1 weight).
+//! * `nonconvex-qp` — problem (13) with box constraints (`m`, `n`,
+//!   `sparsity`, `c`, `cbar`, `box`, `seed`).
+//! * `dictionary` — the sparse-coding stage of dictionary learning with
+//!   the dictionary held at the generator's ground truth (`m` = signal
+//!   dimension, `atoms`, `samples`, `code_sparsity`, `noise`; optional
+//!   `c` overrides the instance's ℓ1 weight) — a multi-RHS LASSO over
+//!   `vec(S)` whose effective matrix is `I ⊗ D`.
+//!
+//! All six kinds run on both backends; `admm` additionally requires a
+//! residual-form objective (`F = ‖Ax − b‖²`: `lasso`, `group-lasso`,
+//! `dictionary` — probed, not hand-listed).
 //!
 //! ## `[selection]`
 //!
@@ -85,8 +109,11 @@
 //!   `SolveReport::comm` — `bench shard` compares them against the
 //!   cluster cost model's prediction. Supported for the scan/sweep
 //!   solvers (`flexa`, `gj-flexa`, `gauss-jacobi`, `grock`,
-//!   `greedy-1bcd`, `cdm`) on `lasso` / `logistic` / `nonconvex-qp`
-//!   problems; other combinations are rejected with an error.
+//!   `greedy-1bcd`, `cdm`) on **every** problem kind (each provides an
+//!   owner-computes `Problem::column_shard` view); the full-vector
+//!   baselines are whole-gradient methods and are rejected with an
+//!   error. The guards derive from capability probes, never from
+//!   hand-maintained kind lists.
 //!
 //! ## `cores` vs `threads`
 //!
@@ -121,6 +148,10 @@ pub enum ProblemSpec {
     /// Synthetic sparse logistic regression shaped like a named dataset
     /// (paper §VI-B, Table I), at `scale` ∈ (0,1] of the original size.
     Logistic { preset: String, scale: f64, seed: u64 },
+    /// ℓ1-regularized ℓ2-loss SVM (paper §II, fifth bullet) on the same
+    /// labelled datasets as [`ProblemSpec::Logistic`]; `c` overrides the
+    /// preset's (sample-scaled) ℓ1 weight when set.
+    Svm { preset: String, scale: f64, c: Option<f64>, seed: u64 },
     /// Nonconvex quadratic (13) with box constraints (paper §VI-C).
     NonconvexQp {
         m: usize,
@@ -129,6 +160,20 @@ pub enum ProblemSpec {
         c: f64,
         cbar: f64,
         box_bound: f64,
+        seed: u64,
+    },
+    /// Sparse-coding stage of dictionary learning (paper §II, sixth
+    /// bullet; §IV Example #4): `min_S ‖Y − DS‖²_F + c‖S‖₁` with the
+    /// dictionary held at the generator's ground truth. `m` = signal
+    /// dimension (rows of D), `atoms` = dictionary atoms k, `samples` =
+    /// observation count q.
+    Dictionary {
+        m: usize,
+        atoms: usize,
+        samples: usize,
+        code_sparsity: f64,
+        noise: f64,
+        c: Option<f64>,
         seed: u64,
     },
 }
@@ -215,6 +260,26 @@ impl ExperimentConfig {
             .ok_or("missing problem.kind")?
             .to_string();
         let seed = doc.get_usize("problem.seed").unwrap_or(1) as u64;
+        // reject knob values the instance generators/problems would
+        // otherwise panic on (their asserts are API backstops, not a
+        // user-facing error surface) — bad TOML must Err at parse
+        if let Some(v) = doc.get_f64("problem.c") {
+            if !(v > 0.0) {
+                return Err(format!("problem.c must be > 0, got {v}"));
+            }
+        }
+        for key in ["problem.sparsity", "problem.code_sparsity"] {
+            if let Some(v) = doc.get_f64(key) {
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(format!("{key} must be in [0,1], got {v}"));
+                }
+            }
+        }
+        if let Some(v) = doc.get_f64("problem.scale") {
+            if !(v > 0.0 && v <= 1.0) {
+                return Err(format!("problem.scale must be in (0,1], got {v}"));
+            }
+        }
         let problem = match kind.as_str() {
             "lasso" => ProblemSpec::Lasso {
                 m: doc.get_usize("problem.m").ok_or("missing problem.m")?,
@@ -234,6 +299,21 @@ impl ExperimentConfig {
             "logistic" => ProblemSpec::Logistic {
                 preset: doc.get_str("problem.preset").unwrap_or("gisette").to_string(),
                 scale: doc.get_f64("problem.scale").unwrap_or(0.2),
+                seed,
+            },
+            "svm" => ProblemSpec::Svm {
+                preset: doc.get_str("problem.preset").unwrap_or("gisette").to_string(),
+                scale: doc.get_f64("problem.scale").unwrap_or(0.2),
+                c: doc.get_f64("problem.c"),
+                seed,
+            },
+            "dictionary" => ProblemSpec::Dictionary {
+                m: doc.get_usize("problem.m").unwrap_or(24),
+                atoms: doc.get_usize("problem.atoms").unwrap_or(16),
+                samples: doc.get_usize("problem.samples").unwrap_or(48),
+                code_sparsity: doc.get_f64("problem.code_sparsity").unwrap_or(0.3),
+                noise: doc.get_f64("problem.noise").unwrap_or(0.01),
+                c: doc.get_f64("problem.c"),
                 seed,
             },
             "nonconvex-qp" => ProblemSpec::NonconvexQp {
@@ -270,10 +350,10 @@ impl ExperimentConfig {
                 .or_else(|| doc.get_str("backend"))
                 .unwrap_or("shared")
                 .to_string();
-            if backend != "shared" && backend != "sharded" {
-                return Err(format!(
-                    "unknown backend {backend:?} for solver {name:?} (expected shared|sharded)"
-                ));
+            // one parser for every surface: the CLI flag and this key both
+            // go through coordinator::Backend::parse
+            if let Err(e) = crate::coordinator::Backend::parse(&backend) {
+                return Err(format!("solver {name:?}: {e}"));
             }
             solvers.push(SolverSettings {
                 sigma: doc
@@ -393,9 +473,61 @@ tol = 1e-6
     }
 
     #[test]
+    fn svm_is_a_first_class_kind() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"svm\"\npreset = \"gisette\"\n\
+             scale = 0.02\nc = 0.25\nseed = 3\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.problem,
+            ProblemSpec::Svm { preset: "gisette".into(), scale: 0.02, c: Some(0.25), seed: 3 }
+        );
+    }
+
+    #[test]
+    fn dictionary_is_a_first_class_kind_with_defaults() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"dictionary\"\nm = 12\natoms = 8\n\
+             samples = 20\nseed = 5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.problem,
+            ProblemSpec::Dictionary {
+                m: 12,
+                atoms: 8,
+                samples: 20,
+                code_sparsity: 0.3,
+                noise: 0.01,
+                c: None,
+                seed: 5,
+            }
+        );
+    }
+
+    #[test]
     fn unknown_kind_is_error() {
-        let err = ExperimentConfig::from_toml("[problem]\nkind = \"svm\"").unwrap_err();
+        let err = ExperimentConfig::from_toml("[problem]\nkind = \"frobnicate\"").unwrap_err();
         assert!(err.contains("unknown problem.kind"));
+    }
+
+    #[test]
+    fn generator_panicking_knobs_are_parse_errors() {
+        // values the generators/problems assert on must Err here instead
+        for (body, what) in [
+            ("kind = \"dictionary\"\nc = 0.0", "problem.c"),
+            ("kind = \"svm\"\nc = -1.0", "problem.c"),
+            ("kind = \"lasso\"\nm = 20\nn = 30\nc = 0.0", "problem.c"),
+            ("kind = \"lasso\"\nm = 20\nn = 30\nsparsity = 1.5", "problem.sparsity"),
+            ("kind = \"dictionary\"\ncode_sparsity = -0.1", "problem.code_sparsity"),
+            ("kind = \"svm\"\nscale = 0.0", "problem.scale"),
+            ("kind = \"logistic\"\nscale = 2.0", "problem.scale"),
+        ] {
+            let toml = format!("solvers = \"flexa\"\n[problem]\n{body}\n");
+            let err = ExperimentConfig::from_toml(&toml).unwrap_err();
+            assert!(err.contains(what), "{body}: {err}");
+        }
     }
 
     #[test]

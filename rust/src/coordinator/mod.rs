@@ -44,7 +44,9 @@ pub enum Backend {
     /// `tests/integration_golden.rs`); the exchanged rounds/words are
     /// measured into [`SolveReport::comm`]. Supported by the scan/sweep
     /// families (flexa, gj-flexa, gauss-jacobi, grock, greedy-1bcd, cdm)
-    /// on the lasso / logistic / nonconvex-qp problems.
+    /// on every problem kind providing a
+    /// [`Problem::column_shard`](crate::problems::Problem::column_shard)
+    /// view — all six in-tree families.
     Sharded,
 }
 

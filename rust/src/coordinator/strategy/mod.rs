@@ -275,13 +275,7 @@ impl SelectionSpec {
         seed: Option<u64>,
     ) -> Result<Self, String> {
         let frac_v = frac.unwrap_or(Self::DEFAULT_FRAC);
-        if !(frac_v > 0.0 && frac_v <= 1.0) {
-            return Err(format!("selection frac must be in (0,1], got {frac_v}"));
-        }
         let sigma_v = sigma.unwrap_or(Self::DEFAULT_SIGMA);
-        if !(0.0..=1.0).contains(&sigma_v) {
-            return Err(format!("selection sigma must be in [0,1], got {sigma_v}"));
-        }
         let seed_v = seed.unwrap_or(Self::DEFAULT_SEED);
         let reject = |what: &str, present: bool| -> Result<(), String> {
             if present {
@@ -290,56 +284,87 @@ impl SelectionSpec {
                 Ok(())
             }
         };
-        match strategy.to_ascii_lowercase().as_str() {
+        let spec = match strategy.to_ascii_lowercase().as_str() {
             "greedy" => {
                 reject("frac", frac.is_some())?;
                 reject("k", k.is_some())?;
-                Ok(SelectionSpec::Greedy { sigma: sigma_v })
+                SelectionSpec::Greedy { sigma: sigma_v }
             }
             "jacobi" | "full-jacobi" => {
                 reject("frac", frac.is_some())?;
                 reject("sigma", sigma.is_some())?;
                 reject("k", k.is_some())?;
-                Ok(SelectionSpec::full_jacobi())
+                SelectionSpec::full_jacobi()
             }
             "gauss-southwell" | "gs" => {
                 reject("frac", frac.is_some())?;
                 reject("sigma", sigma.is_some())?;
                 reject("k", k.is_some())?;
-                Ok(SelectionSpec::gauss_southwell())
+                SelectionSpec::gauss_southwell()
             }
             "topk" => {
                 reject("frac", frac.is_some())?;
                 reject("sigma", sigma.is_some())?;
                 let k = k.ok_or_else(|| "topk needs a count k ≥ 1".to_string())?;
-                if k == 0 {
-                    return Err("topk count must be ≥ 1".to_string());
-                }
-                Ok(SelectionSpec::TopK { k })
+                SelectionSpec::TopK { k }
             }
             "cyclic" => {
                 reject("sigma", sigma.is_some())?;
                 reject("k", k.is_some())?;
-                Ok(SelectionSpec::Cyclic { frac: frac_v })
+                SelectionSpec::Cyclic { frac: frac_v }
             }
             "random" => {
                 reject("sigma", sigma.is_some())?;
                 reject("k", k.is_some())?;
-                Ok(SelectionSpec::Random { frac: frac_v, seed: seed_v })
+                SelectionSpec::Random { frac: frac_v, seed: seed_v }
             }
             "importance" => {
                 reject("sigma", sigma.is_some())?;
                 reject("k", k.is_some())?;
-                Ok(SelectionSpec::Importance { frac: frac_v, seed: seed_v })
+                SelectionSpec::Importance { frac: frac_v, seed: seed_v }
             }
             "hybrid" => {
                 reject("k", k.is_some())?;
-                Ok(SelectionSpec::Hybrid { frac: frac_v, sigma: sigma_v, seed: seed_v })
+                SelectionSpec::Hybrid { frac: frac_v, sigma: sigma_v, seed: seed_v }
             }
-            other => Err(format!(
-                "unknown selection strategy {other:?} \
-                 (expected greedy|jacobi|gauss-southwell|topk|cyclic|random|importance|hybrid)"
-            )),
+            other => {
+                return Err(format!(
+                    "unknown selection strategy {other:?} \
+                     (expected greedy|jacobi|gauss-southwell|topk|cyclic|random|importance|hybrid)"
+                ))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Range-check the spec's knobs: `frac` ∈ (0, 1], `sigma` ∈ [0, 1],
+    /// `k` ≥ 1. This is the **one** validation behind the CLI grammar
+    /// ([`SelectionSpec::parse`]), the `[selection]` TOML table, and
+    /// `SolverSpec::from_name` — so a bad knob always surfaces as a parse
+    /// / construction `Err`, never as a strategy-constructor assert
+    /// firing deep inside a running solve (those asserts remain only as
+    /// a backstop against direct API misuse).
+    pub fn validate(&self) -> Result<(), String> {
+        let frac_ok = |f: f64| f > 0.0 && f <= 1.0;
+        let sigma_ok = |s: f64| (0.0..=1.0).contains(&s);
+        match self {
+            SelectionSpec::Greedy { sigma } if !sigma_ok(*sigma) => {
+                Err(format!("selection sigma must be in [0,1], got {sigma}"))
+            }
+            SelectionSpec::TopK { k } if *k == 0 => Err("topk count must be ≥ 1".to_string()),
+            SelectionSpec::Cyclic { frac }
+            | SelectionSpec::Random { frac, .. }
+            | SelectionSpec::Importance { frac, .. }
+            | SelectionSpec::Hybrid { frac, .. }
+                if !frac_ok(*frac) =>
+            {
+                Err(format!("selection frac must be in (0,1], got {frac}"))
+            }
+            SelectionSpec::Hybrid { sigma, .. } if !sigma_ok(*sigma) => {
+                Err(format!("selection sigma must be in [0,1], got {sigma}"))
+            }
+            _ => Ok(()),
         }
     }
 
@@ -464,6 +489,19 @@ mod tests {
             SelectionSpec::from_parts("greedy", None, None, None, Some(5)).unwrap(),
             SelectionSpec::sigma(0.5)
         );
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_knobs_for_every_variant() {
+        assert!(SelectionSpec::Greedy { sigma: 1.5 }.validate().is_err());
+        assert!(SelectionSpec::TopK { k: 0 }.validate().is_err());
+        assert!(SelectionSpec::Cyclic { frac: 0.0 }.validate().is_err());
+        assert!(SelectionSpec::Random { frac: -0.5, seed: 1 }.validate().is_err());
+        assert!(SelectionSpec::Importance { frac: f64::NAN, seed: 1 }.validate().is_err());
+        assert!(SelectionSpec::Hybrid { frac: 0.25, sigma: 2.0, seed: 1 }.validate().is_err());
+        assert!(SelectionSpec::hybrid(0.25).validate().is_ok());
+        assert!(SelectionSpec::full_jacobi().validate().is_ok());
+        assert!(SelectionSpec::gauss_southwell().validate().is_ok());
     }
 
     #[test]

@@ -9,11 +9,23 @@
 //!   like the paper's LIBSVM corpora (Table I): same aspect ratio, density
 //!   and regularization, scaled to fit this container (DESIGN.md §4
 //!   documents the substitution; no network access for the originals).
+//!   The same labelled datasets feed the ℓ2-loss SVM family
+//!   (`kind = "svm"`), which folds the labels into the data exactly like
+//!   logistic regression does.
 //! * `nonconvex_qp` — instance (13): LASSO data with the concave
 //!   `−c̄‖x‖²` shift and box constraints.
+//! * `dictionary_instance` (re-exported from `problems::dictionary`) —
+//!   observations `Y ≈ D* S*` from a unit-norm dictionary and sparse
+//!   codes; `kind = "dictionary"` solves its sparse-coding stage.
 
 use crate::linalg::{CscMatrix, DenseMatrix, Matrix};
 use crate::rng::Xoshiro256pp;
+
+// The dictionary-learning generator lives next to its alternating solver
+// in `problems::dictionary`; re-export it here so every instance
+// generator is reachable through `datagen` (the `kind = "dictionary"`
+// config path and the worker tests import it from here).
+pub use crate::problems::dictionary::{dictionary_instance, DictionaryInstance};
 
 /// A LASSO instance with ground truth.
 #[derive(Clone, Debug)]

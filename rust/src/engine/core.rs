@@ -288,7 +288,12 @@ fn run(
         None
     };
     let fixed_tau = match &spec.direction {
-        DirectionRule::BestResponse { tau0: Some(t) } => *t,
+        // a pinned τ is floored at the problem's admissible minimum:
+        // GRock's exact (τ = 0) block minimization is ill-posed where
+        // the block curvature can vanish (ℓ2-SVM inactive-hinge columns)
+        // or go negative (nonconvex QP). Families with τ_min = 0 are
+        // unchanged bitwise (0.0.max(0.0) == 0.0).
+        DirectionRule::BestResponse { tau0: Some(t) } => t.max(problem.tau_min()),
         DirectionRule::SweepFresh if matches!(spec.merge, MergeRule::Sweep { .. }) => {
             1e-12 * problem.tau_init().max(1.0) + problem.tau_min()
         }
@@ -365,27 +370,18 @@ fn run(
         }
         DirectionRule::AdmmSplit { .. } => {
             // residual-form guard: the splitting step assumes
-            // F(x) = ‖aux‖² with aux = Ax − b (LASSO/group-LASSO
-            // consensus form). Probe at a perturbed point so problems
-            // with non-residual objective terms (logistic margins, the
+            // F(x) = ‖aux‖² with aux = Ax − b (the LASSO consensus
+            // form). The probe perturbs away from x0 so problems with
+            // non-residual objective terms (logistic margins, the
             // −c̄‖x‖² of the nonconvex QP — which vanishes at x0 = 0)
-            // cannot slip through and silently produce garbage.
-            {
-                let mut xp = x.clone();
-                if !xp.is_empty() {
-                    xp[0] += 0.5;
-                }
-                let mut auxp = vec![0.0; problem.aux_len()];
-                problem.init_aux(&xp, &mut auxp);
-                let f = problem.f_val(&xp, &auxp);
-                let ssq: f64 = auxp.iter().map(|r| r * r).sum();
-                assert!(
-                    (f - ssq).abs() <= 1e-8 * ssq.abs().max(1.0),
-                    "AdmmSplit requires a residual-form problem \
-                     (F = ‖Ax − b‖², e.g. kind = \"lasso\"); \
-                     F(x) != ‖aux‖² on this problem"
-                );
-            }
+            // cannot slip through and silently produce garbage; the CLI
+            // guard runs the same probe, so the two surfaces agree.
+            assert!(
+                crate::problems::is_residual_form_at(problem, &x),
+                "AdmmSplit requires a residual-form problem \
+                 (F = ‖Ax − b‖², e.g. kind = \"lasso\"); \
+                 F(x) != ‖aux‖² on this problem"
+            );
             // setup: column norms + one matvec (the "nontrivial
             // initialization" of the paper's ADMM curves)
             state.charge(IterCost::balanced(

@@ -62,7 +62,10 @@ pub enum DirectionRule {
     /// candidate set, fanned out over the worker pool (Algorithm 1, the
     /// Algorithm-3 prepass, GRock). `tau0 = None` takes τ from the
     /// adaptive controller (§VI-A); `Some(t)` pins it (GRock: `t = 0`,
-    /// exact block minimization).
+    /// exact block minimization), floored by the engine at
+    /// [`Problem::tau_min`](crate::problems::Problem::tau_min) so
+    /// families whose block curvature can vanish or go negative stay
+    /// well-posed.
     BestResponse {
         /// Fixed proximal weight, or `None` for the τ controller.
         tau0: Option<f64>,
@@ -286,8 +289,9 @@ impl SolverSpec {
     }
 
     /// Parallel Jacobi-proximal multi-block ADMM (LASSO consensus form;
-    /// residual-aux problems only — the CLI restricts it to
-    /// `kind = "lasso"`).
+    /// residual-form problems only — the CLI and the engine both gate on
+    /// the `problems::is_residual_form` probe, which admits `lasso`,
+    /// `group-lasso`, and `dictionary`).
     pub fn admm(common: CommonOptions, opts: &AdmmOptions) -> Self {
         Self {
             common,
@@ -328,6 +332,11 @@ impl SolverSpec {
     ) -> Result<Self, String> {
         if !(0.0..=1.0).contains(&sigma) {
             return Err(format!("solver sigma must be in [0,1], got {sigma}"));
+        }
+        // out-of-range strategy knobs must fail here (the CLI/TOML error
+        // path), never as an assert deep inside a running solve
+        if let Some(sel) = &selection {
+            sel.validate()?;
         }
         let spec = match name {
             "flexa" => Self::flexa(
@@ -391,11 +400,29 @@ impl SolverSpec {
         {
             return Err(format!(
                 "solver {name:?} does not support backend = \"sharded\": the full-vector \
-                 baselines scan the whole gradient; the column-distributed path covers \
-                 flexa | gj-flexa | gauss-jacobi | grock | greedy-1bcd | cdm"
+                 baselines scan the whole gradient; the column-distributed path covers {}",
+                Self::sharded_names().join(" | ")
             ));
         }
         Ok(spec)
+    }
+
+    /// Whether the named solver's engine configuration supports
+    /// `backend = "sharded"` (everything but the full-vector merge, which
+    /// scans the whole gradient). Derived by building the spec and
+    /// inspecting its merge rule — never a hand-maintained list.
+    pub fn supports_sharded(name: &str) -> bool {
+        // default CommonOptions use the shared backend, so this probe
+        // cannot trip from_name's own sharded rejection
+        Self::from_name(name, CommonOptions::default(), None, 0.5, 1)
+            .map(|s| !matches!(s.merge, MergeRule::FullVector))
+            .unwrap_or(false)
+    }
+
+    /// Every solver name with a sharded data-plane path — the single
+    /// derived source behind the CLI/engine capability messages.
+    pub fn sharded_names() -> Vec<&'static str> {
+        Self::NAMES.iter().copied().filter(|n| Self::supports_sharded(n)).collect()
     }
 
     /// Shard count of the column-distributed layout (and the partial
@@ -455,6 +482,32 @@ mod tests {
     fn from_name_rejects_unknown_and_bad_sigma() {
         assert!(SolverSpec::from_name("frobnicate", common(), None, 0.5, 1).is_err());
         assert!(SolverSpec::from_name("flexa", common(), None, 1.5, 1).is_err());
+    }
+
+    #[test]
+    fn sharded_capability_is_derived_not_listed() {
+        assert_eq!(
+            SolverSpec::sharded_names(),
+            vec!["flexa", "gj-flexa", "gauss-jacobi", "grock", "greedy-1bcd", "cdm"]
+        );
+        assert!(!SolverSpec::supports_sharded("fista"));
+        assert!(!SolverSpec::supports_sharded("frobnicate"));
+    }
+
+    #[test]
+    fn from_name_rejects_out_of_range_selection_knobs() {
+        // a programmatically built bad spec must fail at construction,
+        // not as an assert deep inside a running solve
+        for bad in [
+            SelectionSpec::Hybrid { frac: 0.0, sigma: 0.5, seed: 1 },
+            SelectionSpec::Random { frac: 1.5, seed: 1 },
+            SelectionSpec::Greedy { sigma: -0.1 },
+            SelectionSpec::TopK { k: 0 },
+        ] {
+            let err = SolverSpec::from_name("flexa", common(), Some(bad.clone()), 0.5, 4)
+                .unwrap_err();
+            assert!(err.contains("selection"), "{bad:?}: {err}");
+        }
     }
 
     #[test]

@@ -34,22 +34,24 @@ impl ShardedWorkspace {
     ///
     /// Panics when the configuration has no sharded path: the full-vector
     /// families (fista/sparsa/admm) scan the whole gradient and are
-    /// rejected upstream by [`SolverSpec::from_name`], and problems
-    /// without [`Problem::column_shard`] support (group-lasso, svm,
-    /// dictionary) cannot provide owner-computes views yet.
+    /// rejected upstream by [`SolverSpec::from_name`], and a problem
+    /// whose [`Problem::column_shard`] returns `None` provides no
+    /// owner-computes views (all six in-tree families do; the CLI probes
+    /// [`Problem::supports_column_shard`] before it gets here).
     pub fn new(problem: &dyn Problem, spec: &SolverSpec) -> Self {
         assert!(
             !matches!(spec.merge, MergeRule::FullVector),
-            "backend \"sharded\" supports the scan/sweep families \
-             (flexa | gj-flexa | gauss-jacobi | grock | greedy-1bcd | cdm)"
+            "backend \"sharded\" supports the scan/sweep families ({})",
+            SolverSpec::sharded_names().join(" | ")
         );
         let layout = ShardLayout::contiguous(problem.blocks(), spec.shard_count());
         let shards = (0..layout.n_shards())
             .map(|s| {
                 problem.column_shard(layout.block_range(s)).unwrap_or_else(|| {
                     panic!(
-                        "this problem family has no column-shard view; backend = \"sharded\" \
-                         supports lasso | logistic | nonconvex-qp"
+                        "this problem family has no column-shard view \
+                         (Problem::column_shard returned None); backend = \"sharded\" \
+                         needs owner-computes shards"
                     )
                 })
             })
@@ -97,5 +99,33 @@ mod tests {
         let p = LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 1));
         let spec = SolverSpec::fista(CommonOptions::default());
         let _ = ShardedWorkspace::new(&p, &spec);
+    }
+
+    #[test]
+    fn every_problem_family_builds_a_sharded_workspace() {
+        use crate::datagen::{dictionary_instance, logistic_like, LogisticPreset};
+        use crate::problems::{DictionaryCodesProblem, GroupLassoProblem, SvmProblem};
+        let svm_inst = logistic_like(LogisticPreset::Gisette, 0.01, 2);
+        let problems: Vec<Box<dyn Problem>> = vec![
+            Box::new(GroupLassoProblem::from_instance(nesterov_lasso(20, 24, 0.2, 1.0, 2), 4)),
+            Box::new(SvmProblem::new(svm_inst.y, &svm_inst.labels, 0.25)),
+            Box::new(DictionaryCodesProblem::from_instance(&dictionary_instance(
+                8, 5, 9, 0.3, 0.01, 2,
+            ))),
+        ];
+        for p in &problems {
+            let c = CommonOptions { cores: 3, ..Default::default() };
+            let spec = SolverSpec::flexa(c, SelectionSpec::sigma(0.5), None);
+            let sw = ShardedWorkspace::new(p.as_ref(), &spec);
+            assert_eq!(sw.shards.len(), 3);
+            let mut seen = vec![false; p.blocks().n_blocks()];
+            for s in &sw.shards {
+                for i in s.block_range() {
+                    assert!(!seen[i]);
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
     }
 }

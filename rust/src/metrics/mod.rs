@@ -69,7 +69,7 @@ impl IterCost {
 /// distributed-memory path actually exchanged, as opposed to the
 /// [`IterCost::reduce_rounds`] *prediction* the cluster simulator prices.
 /// `bench shard` compares the two and writes the ratio to
-/// `results/BENCH_4.json`.
+/// `results/BENCH_5.json`.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CommStats {
     /// Fixed-order allreduce invocations over the per-worker partial

@@ -21,7 +21,8 @@
 //! framework's "degree of parallelism" here lives *inside* each matrix
 //! block, matching the paper's description).
 
-use crate::linalg::{vector, DenseMatrix};
+use super::{Problem, ProblemShard};
+use crate::linalg::{vector, BlockPartition, DenseMatrix, Matrix};
 use crate::metrics::Trace;
 use crate::rng::Xoshiro256pp;
 use crate::util::Timer;
@@ -262,6 +263,321 @@ pub fn solve_dictionary(inst: &DictionaryInstance, opts: &DictOptions) -> DictRe
     DictReport { d, s, objective: obj, iters, trace, converged }
 }
 
+/// The **sparse-coding stage** of dictionary learning with the dictionary
+/// held fixed — the `kind = "dictionary"` problem of the config/CLI
+/// surface and the engine's sixth family:
+///
+/// ```text
+/// min_S  ‖Y − D S‖²_F + c‖S‖₁
+/// ```
+///
+/// With `D` fixed this is a multi-right-hand-side LASSO over `x =
+/// vec(S) ∈ R^{k·q}` whose effective data matrix is the block-diagonal
+/// `I_q ⊗ D`: the scalar block `i = j·k + l` (sample `j`, atom `l`)
+/// touches only the residual rows `d·j .. d·(j+1)` through column `D_l`.
+/// The maintained auxiliary vector is the flattened residual `vec(DS −
+/// Y)`, so the best response is the exact scalar subproblem of the LASSO
+/// family — the same inner loops, byte for byte, which is what makes the
+/// owner-computes shard view below bitwise-identical to the full-matrix
+/// path.
+///
+/// This is the inner subproblem the alternating driver
+/// [`solve_dictionary`] solves for its S-block each outer iteration; as a
+/// standalone `Problem` it exposes that stage to every engine solver and
+/// to `--backend sharded` (codes/samples shard; the small dictionary
+/// factor is replicated per worker, as in a real distributed dictionary
+/// learner — the big `Y`/`S` axes are never replicated).
+pub struct DictionaryCodesProblem {
+    /// Fixed dictionary `D` (d×k).
+    d: DenseMatrix,
+    /// Flattened observations `vec(Y)` (column-major, length d·q).
+    y: Vec<f64>,
+    /// ℓ1 weight on the codes.
+    c: f64,
+    /// Atom count k (rows of S).
+    k: usize,
+    /// Sample count q (columns of S and Y).
+    q: usize,
+    /// Squared atom norms `‖D_l‖²` (best-response curvatures).
+    col_sq: Vec<f64>,
+    /// Scalar blocks over `vec(S)`.
+    blocks: BlockPartition,
+    /// Upper bound on `λmax(2 (I⊗D)ᵀ(I⊗D)) = λmax(2 DᵀD)`.
+    lipschitz: f64,
+}
+
+impl DictionaryCodesProblem {
+    /// Build from a fixed dictionary `d` (d×k) and observations `y`
+    /// (d×q); `c` is the ℓ1 weight on the codes.
+    pub fn new(d: DenseMatrix, y: &DenseMatrix, c: f64) -> Self {
+        assert_eq!(d.nrows(), y.nrows(), "dictionary/observation row mismatch");
+        assert!(c > 0.0);
+        let (k, q) = (d.ncols(), y.ncols());
+        let col_sq = d.col_sq_norms();
+        let lipschitz = Matrix::Dense(d.clone()).lipschitz_2ata(30, 0xD1C7);
+        Self {
+            y: y.data().to_vec(),
+            c,
+            k,
+            q,
+            col_sq,
+            blocks: BlockPartition::scalar(k * q),
+            lipschitz,
+            d,
+        }
+    }
+
+    /// Build the sparse-coding stage of a generated
+    /// [`DictionaryInstance`], holding the dictionary at the generator's
+    /// ground truth (the codes then have a meaningful sparse solution).
+    pub fn from_instance(inst: &DictionaryInstance) -> Self {
+        Self::new(inst.d_true.clone(), &inst.y, inst.c)
+    }
+
+    /// ℓ1 weight `c`.
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+
+    /// Atom count k.
+    pub fn atoms(&self) -> usize {
+        self.k
+    }
+
+    /// Sample count q.
+    pub fn samples(&self) -> usize {
+        self.q
+    }
+
+    /// Sample index `j` and atom index `l` of scalar block `i = j·k + l`.
+    #[inline]
+    fn split(&self, i: usize) -> (usize, usize) {
+        (i / self.k, i % self.k)
+    }
+
+    /// Residual rows of sample `j`: `d·j .. d·(j+1)`.
+    #[inline]
+    fn rows_of(&self, j: usize) -> std::ops::Range<usize> {
+        let d = self.d.nrows();
+        d * j..d * (j + 1)
+    }
+}
+
+/// Shared scalar-code best response: the exact LASSO subproblem of block
+/// `i = j·k + l` against atom column `D_l` and the sample-`j` residual
+/// rows. One body serves [`DictionaryCodesProblem`] and its shard, so
+/// the two paths can never drift numerically.
+fn code_best_response(
+    d: &DenseMatrix,
+    k: usize,
+    col_sq: &[f64],
+    c: f64,
+    i: usize,
+    x_i: f64,
+    aux: &[f64],
+    tau: f64,
+    out: &mut [f64],
+) -> f64 {
+    let (j, l) = (i / k, i % k);
+    let dr = d.nrows();
+    let g = 2.0 * vector::dot(d.col(l), &aux[dr * j..dr * (j + 1)]);
+    let denom = 2.0 * col_sq[l] + tau;
+    debug_assert!(denom > 0.0, "degenerate atom {l} with tau = {tau}");
+    let z = vector::soft_threshold(x_i - g / denom, c / denom);
+    out[0] = z;
+    (z - x_i).abs()
+}
+
+/// Shared delta propagation: `aux_j += delta · D_l` for block `i = j·k + l`.
+fn code_apply_delta(d: &DenseMatrix, k: usize, i: usize, delta: f64, aux: &mut [f64]) {
+    if delta != 0.0 {
+        let (j, l) = (i / k, i % k);
+        let dr = d.nrows();
+        vector::axpy(delta, d.col(l), &mut aux[dr * j..dr * (j + 1)]);
+    }
+}
+
+impl Problem for DictionaryCodesProblem {
+    fn n(&self) -> usize {
+        self.k * self.q
+    }
+
+    fn aux_len(&self) -> usize {
+        self.d.nrows() * self.q
+    }
+
+    fn blocks(&self) -> &BlockPartition {
+        &self.blocks
+    }
+
+    fn init_aux(&self, x: &[f64], aux: &mut [f64]) {
+        // per sample: aux_j = D s_j − y_j (column-major segments)
+        for j in 0..self.q {
+            let rows = self.rows_of(j);
+            let seg = &mut aux[rows.clone()];
+            seg.fill(0.0);
+            for l in 0..self.k {
+                let slj = x[j * self.k + l];
+                if slj != 0.0 {
+                    vector::axpy(slj, self.d.col(l), seg);
+                }
+            }
+            for (r, yv) in seg.iter_mut().zip(&self.y[rows]) {
+                *r -= yv;
+            }
+        }
+    }
+
+    fn f_val(&self, _x: &[f64], aux: &[f64]) -> f64 {
+        vector::nrm2_sq(aux)
+    }
+
+    fn g_val(&self, x: &[f64]) -> f64 {
+        self.c * vector::nrm1(x)
+    }
+
+    fn block_grad(&self, i: usize, _x: &[f64], aux: &[f64], out: &mut [f64]) {
+        let (j, l) = self.split(i);
+        out[0] = 2.0 * vector::dot(self.d.col(l), &aux[self.rows_of(j)]);
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        code_best_response(&self.d, self.k, &self.col_sq, self.c, i, x[i], aux, tau, out)
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        code_apply_delta(&self.d, self.k, i, delta[0], aux);
+    }
+
+    fn apply_block_delta_rows(
+        &self,
+        i: usize,
+        delta: &[f64],
+        aux_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        if delta[0] == 0.0 {
+            return;
+        }
+        let (j, l) = self.split(i);
+        let span = self.rows_of(j);
+        let lo = span.start.max(rows.start);
+        let hi = span.end.min(rows.end);
+        if lo >= hi {
+            return;
+        }
+        let col = self.d.col(l);
+        for t in lo..hi {
+            aux_rows[t - rows.start] += delta[0] * col[t - span.start];
+        }
+    }
+
+    fn f_val_rows(&self, _x: &[f64], aux_rows: &[f64], _rows: std::ops::Range<usize>) -> f64 {
+        vector::nrm2_sq(aux_rows)
+    }
+
+    fn supports_chunked_obj(&self) -> bool {
+        true
+    }
+
+    fn grad_full(&self, _x: &[f64], aux: &[f64], out: &mut [f64]) {
+        // ∇F = 2 (I⊗D)ᵀ aux: per sample, 2 Dᵀ aux_j
+        for j in 0..self.q {
+            let seg = &aux[self.rows_of(j)];
+            for l in 0..self.k {
+                out[j * self.k + l] = 2.0 * vector::dot(self.d.col(l), seg);
+            }
+        }
+    }
+
+    fn prox_full(&self, v: &[f64], step: f64, out: &mut [f64]) {
+        vector::soft_threshold_vec(v, step * self.c, out);
+    }
+
+    fn merit(&self, x: &[f64], aux: &[f64]) -> f64 {
+        let mut g = vec![0.0; self.n()];
+        self.grad_full(x, aux, &mut g);
+        super::l1_merit_inf(&g, x, self.c, None)
+    }
+
+    fn tau_init(&self) -> f64 {
+        // tr((I⊗D)ᵀ(I⊗D))/2n = q·tr(DᵀD)/(2·k·q) = Σ_l ‖D_l‖²/(2k)
+        self.col_sq.iter().sum::<f64>() / (2.0 * self.k as f64)
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.lipschitz
+    }
+
+    fn block_lipschitz(&self, i: usize) -> f64 {
+        // scalar blocks: ∂²_i F = 2‖D_l‖²
+        2.0 * self.col_sq[i % self.k]
+    }
+
+    fn column_shard(&self, blocks: std::ops::Range<usize>) -> Option<Box<dyn ProblemShard>> {
+        // owner-computes on the codes/samples axis: the shard's effective
+        // columns are built from the small dictionary factor alone, so D
+        // is replicated per worker while the big Y/S axes stay sharded
+        Some(Box::new(DictCodesShard {
+            d: self.d.clone(),
+            c: self.c,
+            k: self.k,
+            col_sq: self.col_sq.clone(),
+            blocks,
+        }))
+    }
+
+    fn flops_best_response(&self, _i: usize) -> f64 {
+        // one atom-column dot + soft-threshold
+        2.0 * self.d.nrows() as f64 + 6.0
+    }
+
+    fn flops_aux_update(&self, _i: usize) -> f64 {
+        2.0 * self.d.nrows() as f64
+    }
+
+    fn flops_grad_full(&self) -> f64 {
+        2.0 * (self.d.nrows() * self.k * self.q) as f64 + self.n() as f64
+    }
+
+    fn flops_obj(&self) -> f64 {
+        2.0 * (self.aux_len() + self.n()) as f64
+    }
+}
+
+/// Column shard of a [`DictionaryCodesProblem`]: the owned scalar code
+/// blocks plus a replicated copy of the **small** dictionary factor `D`
+/// (d×k), from which every owned effective column of `I_q ⊗ D` is read.
+/// No worker holds the full observations `Y` or codes outside its range;
+/// both paths run the single [`code_best_response`]/[`code_apply_delta`]
+/// kernels, so results are bitwise equal by construction.
+struct DictCodesShard {
+    /// Replicated dictionary factor `D` (d×k).
+    d: DenseMatrix,
+    /// ℓ1 weight `c`.
+    c: f64,
+    /// Atom count k (block `i = j·k + l`).
+    k: usize,
+    /// Squared atom norms `‖D_l‖²`.
+    col_sq: Vec<f64>,
+    /// Owned global block range.
+    blocks: std::ops::Range<usize>,
+}
+
+impl ProblemShard for DictCodesShard {
+    fn block_range(&self) -> std::ops::Range<usize> {
+        self.blocks.clone()
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        code_best_response(&self.d, self.k, &self.col_sq, self.c, i, x[i], aux, tau, out)
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        code_apply_delta(&self.d, self.k, i, delta[0], aux);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,6 +623,142 @@ mod tests {
         // codes are sparse
         let nnz = vector::nnz(r.s.data(), 1e-6);
         assert!(nnz < r.s.data().len(), "codes not sparse at all");
+    }
+
+    fn codes_problem() -> DictionaryCodesProblem {
+        let inst = dictionary_instance(10, 6, 12, 0.3, 0.01, 21);
+        DictionaryCodesProblem::from_instance(&inst)
+    }
+
+    #[test]
+    fn codes_problem_shapes_and_aux() {
+        let p = codes_problem();
+        assert_eq!(p.n(), 6 * 12);
+        assert_eq!(p.aux_len(), 10 * 12);
+        assert_eq!(p.blocks().n_blocks(), p.n());
+        // at S = 0 the residual is −Y, so F(0) = ‖Y‖²_F
+        let x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let yf: f64 = p.y.iter().map(|v| v * v).sum();
+        assert!((p.f_val(&x, &aux) - yf).abs() < 1e-10);
+        assert_eq!(p.g_val(&x), 0.0);
+    }
+
+    #[test]
+    fn codes_grad_matches_finite_differences() {
+        let p = codes_problem();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.3).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut g = vec![0.0; p.n()];
+        p.grad_full(&x, &aux, &mut g);
+        let h = 1e-6;
+        for i in [0, 7, p.n() - 1] {
+            let mut gi = [0.0];
+            p.block_grad(i, &x, &aux, &mut gi);
+            assert!((gi[0] - g[i]).abs() < 1e-10, "block grad vs full at {i}");
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut ap = vec![0.0; p.aux_len()];
+            p.init_aux(&xp, &mut ap);
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let mut am = vec![0.0; p.aux_len()];
+            p.init_aux(&xm, &mut am);
+            let fd = (p.f_val(&xp, &ap) - p.f_val(&xm, &am)) / (2.0 * h);
+            assert!((fd - g[i]).abs() < 1e-4, "i={i}: {fd} vs {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn codes_incremental_aux_matches_recompute() {
+        let p = codes_problem();
+        let mut x = vec![0.0; p.n()];
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        for _ in 0..80 {
+            let i = rng.next_usize(p.n());
+            let d = rng.next_normal() * 0.2;
+            x[i] += d;
+            p.apply_block_delta(i, &[d], &mut aux);
+        }
+        let mut fresh = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut fresh);
+        assert!(vector::dist2(&aux, &fresh) < 1e-9);
+    }
+
+    #[test]
+    fn codes_ranged_delta_matches_full_delta() {
+        let p = codes_problem();
+        let mut rng = Xoshiro256pp::seed_from_u64(14);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.3).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        for i in [0, 13, p.n() - 1] {
+            let mut full = aux.clone();
+            p.apply_block_delta(i, &[0.4], &mut full);
+            // chunked: apply to two halves independently
+            let mut chunked = aux.clone();
+            let mid = p.aux_len() / 2;
+            let (a, b) = chunked.split_at_mut(mid);
+            p.apply_block_delta_rows(i, &[0.4], a, 0..mid);
+            p.apply_block_delta_rows(i, &[0.4], b, mid..p.aux_len());
+            assert_eq!(full, chunked, "block {i}");
+        }
+    }
+
+    #[test]
+    fn codes_best_response_solves_scalar_subproblem() {
+        let p = codes_problem();
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.5).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let tau = 0.7;
+        let q = |i: usize, u: f64| -> f64 {
+            let mut xt = x.clone();
+            xt[i] = u;
+            let mut at = vec![0.0; p.aux_len()];
+            p.init_aux(&xt, &mut at);
+            p.f_val(&xt, &at) + tau / 2.0 * (u - x[i]).powi(2) + p.c() * u.abs()
+        };
+        for i in [0, 11, 29] {
+            let mut z = [0.0];
+            let e = p.best_response(i, &x, &aux, tau, &mut z);
+            assert!((e - (z[0] - x[i]).abs()).abs() < 1e-12);
+            let qz = q(i, z[0]);
+            for du in [-0.01, 0.01, -0.1, 0.1] {
+                assert!(q(i, z[0] + du) >= qz - 1e-9, "i={i} du={du}");
+            }
+        }
+    }
+
+    #[test]
+    fn codes_column_shard_matches_full_problem_bitwise() {
+        let p = codes_problem();
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.4).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        let lo = p.n() / 3;
+        let hi = 2 * p.n() / 3;
+        let shard = p.column_shard(lo..hi).expect("dictionary codes shard");
+        assert_eq!(shard.block_range(), lo..hi);
+        let (mut zf, mut zs) = ([0.0], [0.0]);
+        for i in lo..hi {
+            let ef = p.best_response(i, &x, &aux, 0.7, &mut zf);
+            let es = shard.best_response(i, &x, &aux, 0.7, &mut zs);
+            assert_eq!(ef, es, "E_{i}");
+            assert_eq!(zf[0], zs[0], "zhat_{i}");
+            let mut af = aux.clone();
+            let mut as_ = aux.clone();
+            p.apply_block_delta(i, &[0.3], &mut af);
+            shard.apply_block_delta(i, &[0.3], &mut as_);
+            assert_eq!(af, as_, "delta block {i}");
+        }
     }
 
     #[test]

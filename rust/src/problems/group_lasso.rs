@@ -8,7 +8,7 @@
 //! That makes the subproblem a block soft-threshold in closed form while
 //! still satisfying P1–P3 (§III).
 
-use super::Problem;
+use super::{Problem, ProblemShard};
 use crate::datagen::LassoInstance;
 use crate::linalg::{vector, BlockPartition, Matrix};
 
@@ -50,6 +50,56 @@ impl GroupLassoProblem {
     }
 }
 
+/// Shared block best response: the linearized block soft-threshold of
+/// block `range` with proximal denominator `denom = L_I + τ`.
+/// `col_offset` translates global column indices into the caller's
+/// storage (0 for the full matrix, the shard's first column otherwise),
+/// so one body serves [`GroupLassoProblem`] and its shard and the two
+/// paths can never drift numerically.
+fn group_best_response(
+    a: &Matrix,
+    col_offset: usize,
+    range: std::ops::Range<usize>,
+    denom: f64,
+    c: f64,
+    x: &[f64],
+    aux: &[f64],
+    out: &mut [f64],
+) -> f64 {
+    let bsize = range.len();
+    debug_assert_eq!(out.len(), bsize);
+    debug_assert!(denom > 0.0);
+    // v = x_I − ∇_I F / denom, then block soft-threshold with c/denom
+    let mut v = vec![0.0; bsize];
+    for (k, j) in range.clone().enumerate() {
+        let g = 2.0 * a.col_dot(j - col_offset, aux);
+        v[k] = x[range.start + k] - g / denom;
+    }
+    vector::block_soft_threshold(&v, c / denom, out);
+    let mut e2 = 0.0;
+    for (k, j) in range.enumerate() {
+        let d = out[k] - x[j];
+        e2 += d * d;
+    }
+    e2.sqrt()
+}
+
+/// Shared delta propagation: per-column axpy of the block step, with the
+/// same `col_offset` translation as [`group_best_response`].
+fn group_apply_delta(
+    a: &Matrix,
+    col_offset: usize,
+    range: std::ops::Range<usize>,
+    delta: &[f64],
+    aux: &mut [f64],
+) {
+    for (k, j) in range.enumerate() {
+        if delta[k] != 0.0 {
+            a.col_axpy(j - col_offset, delta[k], aux);
+        }
+    }
+}
+
 impl Problem for GroupLassoProblem {
     fn n(&self) -> usize {
         self.a.ncols()
@@ -87,32 +137,12 @@ impl Problem for GroupLassoProblem {
     }
 
     fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
-        let range = self.blocks.range(i);
-        let bsize = range.len();
-        debug_assert_eq!(out.len(), bsize);
         let denom = self.block_lip[i] + tau;
-        debug_assert!(denom > 0.0);
-        // v = x_I − ∇_I F / denom, then block soft-threshold with c/denom
-        let mut v = vec![0.0; bsize];
-        for (k, j) in range.clone().enumerate() {
-            let g = 2.0 * self.a.col_dot(j, aux);
-            v[k] = x[range.start + k] - g / denom;
-        }
-        vector::block_soft_threshold(&v, self.c / denom, out);
-        let mut e2 = 0.0;
-        for (k, j) in range.enumerate() {
-            let d = out[k] - x[j];
-            e2 += d * d;
-        }
-        e2.sqrt()
+        group_best_response(&self.a, 0, self.blocks.range(i), denom, self.c, x, aux, out)
     }
 
     fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
-        for (k, j) in self.blocks.range(i).enumerate() {
-            if delta[k] != 0.0 {
-                self.a.col_axpy(j, delta[k], aux);
-            }
-        }
+        group_apply_delta(&self.a, 0, self.blocks.range(i), delta, aux);
     }
 
     fn apply_block_delta_rows(
@@ -185,6 +215,30 @@ impl Problem for GroupLassoProblem {
         self.block_lip[i]
     }
 
+    fn column_shard(&self, blocks: std::ops::Range<usize>) -> Option<Box<dyn ProblemShard>> {
+        // blocks are contiguous column groups, so a contiguous block range
+        // maps to one contiguous column range
+        let nb = self.blocks.n_blocks();
+        let cols = if blocks.is_empty() {
+            let at = if blocks.start < nb {
+                self.blocks.range(blocks.start).start
+            } else {
+                self.blocks.dim()
+            };
+            at..at
+        } else {
+            self.blocks.range(blocks.start).start..self.blocks.range(blocks.end - 1).end
+        };
+        Some(Box::new(GroupLassoShard {
+            a: self.a.columns_range(cols.clone()),
+            c: self.c,
+            block_lip: self.block_lip[blocks.clone()].to_vec(),
+            col_start: cols.start,
+            partition: self.blocks.clone(),
+            blocks,
+        }))
+    }
+
     fn flops_best_response(&self, i: usize) -> f64 {
         let cols: f64 = self.blocks.range(i).map(|j| self.a.col_nnz(j) as f64).sum();
         2.0 * cols + 8.0 * self.blocks.size(i) as f64
@@ -203,6 +257,45 @@ impl Problem for GroupLassoProblem {
     }
 }
 
+/// Column shard of a [`GroupLassoProblem`]: copies of the owned blocks'
+/// columns plus their curvature bounds `L_I` — everything the
+/// owner-computes block soft-threshold touches. The global block
+/// partition is replicated (offsets metadata only, like the block map of
+/// a real cluster run; the data matrix itself is never replicated).
+/// Both paths run the single [`group_best_response`] /
+/// [`group_apply_delta`] kernels, so results are bitwise equal by
+/// construction.
+struct GroupLassoShard {
+    /// The shard's columns `A_s` (m × |cols|).
+    a: Matrix,
+    /// Group-norm weight `c`.
+    c: f64,
+    /// Curvature bounds of the owned blocks (`block_lip[i − start]`).
+    block_lip: Vec<f64>,
+    /// Global column index of the shard's first column.
+    col_start: usize,
+    /// Replicated global block partition (offsets metadata).
+    partition: BlockPartition,
+    /// Owned global block range.
+    blocks: std::ops::Range<usize>,
+}
+
+impl ProblemShard for GroupLassoShard {
+    fn block_range(&self) -> std::ops::Range<usize> {
+        self.blocks.clone()
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        let denom = self.block_lip[i - self.blocks.start] + tau;
+        let range = self.partition.range(i);
+        group_best_response(&self.a, self.col_start, range, denom, self.c, x, aux, out)
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        group_apply_delta(&self.a, self.col_start, self.partition.range(i), delta, aux);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +303,41 @@ mod tests {
 
     fn small() -> GroupLassoProblem {
         GroupLassoProblem::from_instance(nesterov_lasso(20, 24, 0.2, 1.0, 55), 4)
+    }
+
+    #[test]
+    fn column_shard_matches_full_problem_bitwise() {
+        let p = small();
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(31);
+        let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.4).collect();
+        let mut aux = vec![0.0; p.aux_len()];
+        p.init_aux(&x, &mut aux);
+        // a middle shard: blocks 2..5 of the 6 size-4 blocks
+        let shard = p.column_shard(2..5).expect("group-lasso shards");
+        assert_eq!(shard.block_range(), 2..5);
+        for i in 2..5 {
+            let r = p.blocks().range(i);
+            let (mut zf, mut zs) = (vec![0.0; r.len()], vec![0.0; r.len()]);
+            let ef = p.best_response(i, &x, &aux, 0.7, &mut zf);
+            let es = shard.best_response(i, &x, &aux, 0.7, &mut zs);
+            assert_eq!(ef, es, "E_{i}");
+            assert_eq!(zf, zs, "zhat block {i}");
+            let delta = vec![0.25; r.len()];
+            let mut af = aux.clone();
+            let mut as_ = aux.clone();
+            p.apply_block_delta(i, &delta, &mut af);
+            shard.apply_block_delta(i, &delta, &mut as_);
+            assert_eq!(af, as_, "delta block {i}");
+        }
+    }
+
+    #[test]
+    fn empty_shard_range_is_well_formed() {
+        let p = small();
+        let nb = p.blocks().n_blocks();
+        // ShardLayout can hand out empty ranges when shards > blocks
+        let shard = p.column_shard(nb..nb).expect("empty shard");
+        assert_eq!(shard.block_range(), nb..nb);
     }
 
     #[test]

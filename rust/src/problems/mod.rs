@@ -23,7 +23,10 @@ pub mod logistic;
 pub mod nonconvex_qp;
 pub mod svm;
 
-pub use dictionary::{dictionary_instance, solve_dictionary, DictOptions, DictReport};
+pub use dictionary::{
+    dictionary_instance, solve_dictionary, DictOptions, DictReport, DictionaryCodesProblem,
+    DictionaryInstance,
+};
 pub use group_lasso::GroupLassoProblem;
 pub use lasso::LassoProblem;
 pub use logistic::LogisticProblem;
@@ -242,11 +245,21 @@ pub trait Problem: Send + Sync {
     /// exactly those columns plus the per-block constants the best
     /// response needs — the per-worker data of the distributed-memory
     /// backend. `None` (the default) means the family has no sharded
-    /// path yet (`--backend sharded` then refuses to run); the paper's
-    /// three experimental families (LASSO, logistic, nonconvex QP)
-    /// implement it.
+    /// path (`--backend sharded` then refuses to run). All six in-tree
+    /// families (LASSO, group LASSO, logistic, ℓ2-SVM, nonconvex QP,
+    /// dictionary sparse coding) implement it.
     fn column_shard(&self, _blocks: Range<usize>) -> Option<Box<dyn ProblemShard>> {
         None
+    }
+
+    /// Whether this family provides owner-computes column shards — the
+    /// **single capability probe** behind every `backend = "sharded"`
+    /// guard (CLI, config, engine), so supported-kind lists can never
+    /// drift from the implementations again. Probes [`Problem::column_shard`]
+    /// on the first block; the default is therefore correct for any impl.
+    fn supports_column_shard(&self) -> bool {
+        let nb = self.blocks().n_blocks();
+        self.column_shard(0..nb.min(1)).is_some()
     }
 
     // ---- flop accounting (drives the cluster simulator) ----
@@ -262,6 +275,32 @@ pub trait Problem: Send + Sync {
 
     /// Flops of one objective evaluation from maintained aux.
     fn flops_obj(&self) -> f64;
+}
+
+/// Whether `problem`'s smooth part is the plain residual sum of squares
+/// `F(x) = ‖aux(x)‖²` at a point perturbed away from `base` — the
+/// capability probe behind the ADMM splitting step (which assumes the
+/// LASSO consensus form `min c‖x‖₁ + ‖s‖² s.t. Ax − s = b`). Probing at
+/// a perturbed point keeps problems whose extra objective terms vanish
+/// at `base` (e.g. the −c̄‖x‖² of the nonconvex QP at 0) from slipping
+/// through. The CLI guard and the engine's runtime assert both call
+/// this, so the two surfaces cannot drift.
+pub fn is_residual_form_at(problem: &dyn Problem, base: &[f64]) -> bool {
+    let mut xp = base.to_vec();
+    if !xp.is_empty() {
+        xp[0] += 0.5;
+    }
+    let mut auxp = vec![0.0; problem.aux_len()];
+    problem.init_aux(&xp, &mut auxp);
+    let f = problem.f_val(&xp, &auxp);
+    let ssq: f64 = auxp.iter().map(|r| r * r).sum();
+    (f - ssq).abs() <= 1e-8 * ssq.abs().max(1.0)
+}
+
+/// [`is_residual_form_at`] probed from the origin.
+pub fn is_residual_form(problem: &dyn Problem) -> bool {
+    let origin = vec![0.0; problem.n()];
+    is_residual_form_at(problem, &origin)
 }
 
 /// Relative error `re(x) = (V(x) − V*)/V*` (paper eq. 11); NaN if V* unknown.
@@ -298,6 +337,51 @@ pub fn l1_merit_inf(grad: &[f64], x: &[f64], c: f64, box_bound: Option<f64>) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn residual_form_probe_separates_the_families() {
+        use crate::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+        let lasso = LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 1));
+        assert!(is_residual_form(&lasso));
+        let group = GroupLassoProblem::from_instance(nesterov_lasso(20, 24, 0.2, 1.0, 1), 4);
+        assert!(is_residual_form(&group));
+        let dict =
+            DictionaryCodesProblem::from_instance(&dictionary_instance(8, 5, 9, 0.3, 0.01, 1));
+        assert!(is_residual_form(&dict));
+        let logistic =
+            LogisticProblem::from_instance(logistic_like(LogisticPreset::Gisette, 0.01, 1));
+        assert!(!is_residual_form(&logistic));
+        let svm_inst = logistic_like(LogisticPreset::Gisette, 0.01, 2);
+        let svm = SvmProblem::new(svm_inst.y, &svm_inst.labels, 0.25);
+        assert!(!is_residual_form(&svm));
+        let qp = NonconvexQpProblem::from_instance(nonconvex_qp(20, 30, 0.2, 10.0, 50.0, 1.0, 1));
+        assert!(!is_residual_form(&qp));
+    }
+
+    #[test]
+    fn every_family_reports_column_shard_support() {
+        use crate::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+        let svm_inst = logistic_like(LogisticPreset::Gisette, 0.01, 3);
+        let problems: Vec<Box<dyn Problem>> = vec![
+            Box::new(LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, 1))),
+            Box::new(GroupLassoProblem::from_instance(nesterov_lasso(20, 24, 0.2, 1.0, 1), 4)),
+            Box::new(LogisticProblem::from_instance(logistic_like(
+                LogisticPreset::Gisette,
+                0.01,
+                1,
+            ))),
+            Box::new(SvmProblem::new(svm_inst.y, &svm_inst.labels, 0.25)),
+            Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
+                20, 30, 0.2, 10.0, 50.0, 1.0, 1,
+            ))),
+            Box::new(DictionaryCodesProblem::from_instance(&dictionary_instance(
+                8, 5, 9, 0.3, 0.01, 1,
+            ))),
+        ];
+        for p in &problems {
+            assert!(p.supports_column_shard());
+        }
+    }
 
     #[test]
     fn relative_error_cases() {

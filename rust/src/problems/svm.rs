@@ -14,7 +14,7 @@
 //! * best response: damped Newton through the soft threshold with the
 //!   generalized Hessian diagonal `H_ii = 2 Σ_{j: u_j<1} Ỹ_{ji}²`.
 
-use super::Problem;
+use super::{Problem, ProblemShard};
 use crate::linalg::{vector, BlockPartition, Matrix};
 
 /// ℓ2-loss SVM with maintained margins.
@@ -51,6 +51,52 @@ impl SvmProblem {
     pub fn m(&self) -> usize {
         self.y.nrows()
     }
+}
+
+/// Shared scalar best-response kernel: the fused margin-residual partial
+/// `g = −2 Σ_{active} Ỹ_{ji}(1 − u_j)` / active-hinge generalized-Hessian
+/// `h = 2 Σ_{active} Ỹ_{ji}²` pass over one label-scaled column, followed
+/// by the damped-Newton soft-threshold. One body serves the full problem
+/// and its column shard (`col` is the caller's local column index), so
+/// the two paths can never drift numerically.
+fn hinge_best_response(
+    y: &Matrix,
+    col: usize,
+    x_i: f64,
+    aux: &[f64],
+    c: f64,
+    tau: f64,
+    out: &mut [f64],
+) -> f64 {
+    let (mut g, mut h) = (0.0, 0.0);
+    match y {
+        Matrix::Dense(d) => {
+            for (v, &u) in d.col(col).iter().zip(aux) {
+                let r = 1.0 - u;
+                if r > 0.0 {
+                    g -= v * r;
+                    h += v * v;
+                }
+            }
+        }
+        Matrix::Sparse(s) => {
+            let (rows, vals) = s.col(col);
+            for (&r0, &v) in rows.iter().zip(vals) {
+                let r = 1.0 - aux[r0];
+                if r > 0.0 {
+                    g -= v * r;
+                    h += v * v;
+                }
+            }
+        }
+    }
+    g *= 2.0;
+    h *= 2.0;
+    let denom = h + tau;
+    debug_assert!(denom > 0.0);
+    let z = vector::soft_threshold(x_i - g / denom, c / denom);
+    out[0] = z;
+    (z - x_i).abs()
 }
 
 fn fold_labels(mut y: Matrix, labels: &[f64]) -> Matrix {
@@ -122,35 +168,7 @@ impl Problem for SvmProblem {
     }
 
     fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
-        let (mut g, mut h) = (0.0, 0.0);
-        match &self.y {
-            Matrix::Dense(d) => {
-                for (v, &u) in d.col(i).iter().zip(aux) {
-                    let r = 1.0 - u;
-                    if r > 0.0 {
-                        g -= v * r;
-                        h += v * v;
-                    }
-                }
-            }
-            Matrix::Sparse(s) => {
-                let (rows, vals) = s.col(i);
-                for (&r0, &v) in rows.iter().zip(vals) {
-                    let r = 1.0 - aux[r0];
-                    if r > 0.0 {
-                        g -= v * r;
-                        h += v * v;
-                    }
-                }
-            }
-        }
-        g *= 2.0;
-        h *= 2.0;
-        let denom = h + tau;
-        debug_assert!(denom > 0.0);
-        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
-        out[0] = z;
-        (z - x[i]).abs()
+        hinge_best_response(&self.y, i, x[i], aux, self.c, tau, out)
     }
 
     fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
@@ -199,6 +217,17 @@ impl Problem for SvmProblem {
         self.y.gram_trace() / (2.0 * self.n() as f64)
     }
 
+    fn tau_min(&self) -> f64 {
+        // the active-hinge generalized-Hessian diagonal h_i vanishes when
+        // every hinge touching column i deactivates, so the exact τ = 0
+        // subproblem is ill-posed (0/0). A tiny scale-aware floor keeps
+        // the denominator positive; in the h = 0 regime the gradient
+        // partial g is 0 too, so the floored step reduces to the correct
+        // τ → 0 limit ST(x_i, c/τ) → 0. The engine floors any pinned τ
+        // (GRock's τ = 0) at this value.
+        1e-9 * self.tau_init()
+    }
+
     fn lipschitz(&self) -> f64 {
         self.lipschitz
     }
@@ -206,6 +235,15 @@ impl Problem for SvmProblem {
     fn block_lipschitz(&self, i: usize) -> f64 {
         // scalar blocks: generalized Hessian diag ≤ 2‖Ỹ_i‖²
         2.0 * self.col_sq[i]
+    }
+
+    fn column_shard(&self, blocks: std::ops::Range<usize>) -> Option<Box<dyn ProblemShard>> {
+        // scalar blocks: block index == column index
+        Some(Box::new(SvmShard {
+            y: self.y.columns_range(blocks.clone()),
+            c: self.c,
+            blocks,
+        }))
     }
 
     fn flops_best_response(&self, i: usize) -> f64 {
@@ -225,6 +263,36 @@ impl Problem for SvmProblem {
     }
 }
 
+/// Column shard of an [`SvmProblem`]: the owned scalar blocks'
+/// label-scaled columns. Both paths run the single
+/// [`hinge_best_response`] kernel (margin-residual partial + active-hinge
+/// generalized-Hessian diagonal), so results are bitwise equal by
+/// construction, not by parallel maintenance of two loops.
+struct SvmShard {
+    /// The shard's label-scaled columns `Ỹ_s` (m × |blocks|).
+    y: Matrix,
+    /// ℓ1 weight `c`.
+    c: f64,
+    /// Owned global block range.
+    blocks: std::ops::Range<usize>,
+}
+
+impl ProblemShard for SvmShard {
+    fn block_range(&self) -> std::ops::Range<usize> {
+        self.blocks.clone()
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        hinge_best_response(&self.y, i - self.blocks.start, x[i], aux, self.c, tau, out)
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        if delta[0] != 0.0 {
+            self.y.col_axpy(i - self.blocks.start, delta[0], aux);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +301,76 @@ mod tests {
     fn small() -> SvmProblem {
         let inst = logistic_like(LogisticPreset::Gisette, 0.01, 123);
         SvmProblem::new(inst.y, &inst.labels, 0.25)
+    }
+
+    #[test]
+    fn column_shard_matches_full_problem_bitwise() {
+        // both the dense (gisette-like) and sparse (real-sim-like) storages
+        for p in [small(), {
+            let inst = logistic_like(LogisticPreset::RealSim, 0.005, 19);
+            SvmProblem::new(inst.y, &inst.labels, 0.25)
+        }] {
+            let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(13);
+            let x: Vec<f64> = (0..p.n()).map(|_| rng.next_normal() * 0.3).collect();
+            let mut aux = vec![0.0; p.aux_len()];
+            p.init_aux(&x, &mut aux);
+            let lo = p.n() / 4;
+            let hi = 3 * p.n() / 4;
+            let shard = p.column_shard(lo..hi).expect("svm shards");
+            assert_eq!(shard.block_range(), lo..hi);
+            let (mut zf, mut zs) = ([0.0], [0.0]);
+            for i in lo..hi {
+                let ef = p.best_response(i, &x, &aux, 0.7, &mut zf);
+                let es = shard.best_response(i, &x, &aux, 0.7, &mut zs);
+                assert_eq!(ef, es, "E_{i}");
+                assert_eq!(zf[0], zs[0], "zhat_{i}");
+                let mut af = aux.clone();
+                let mut as_ = aux.clone();
+                p.apply_block_delta(i, &[0.2], &mut af);
+                shard.apply_block_delta(i, &[0.2], &mut as_);
+                assert_eq!(af, as_, "delta column {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tau_floor_keeps_inactive_hinge_subproblem_well_posed() {
+        let p = small();
+        assert!(p.tau_min() > 0.0, "svm must refuse a pinned τ = 0");
+        // margins u_j = 2 > 1 deactivate every hinge: h = g = 0, and the
+        // τ-floored step must stay finite and hit the τ → 0 limit (zero)
+        let mut aux = vec![2.0; p.aux_len()];
+        let x = vec![0.3; p.n()];
+        let mut z = [f64::NAN];
+        let e = p.best_response(0, &x, &aux, p.tau_min(), &mut z);
+        assert!(z[0].is_finite() && e.is_finite(), "0/0 leaked through the floor");
+        assert_eq!(z[0], 0.0, "no-active-hinge exact step must zero the block");
+        // one active hinge again: a normal damped-Newton step, still finite
+        aux[0] = 0.0;
+        let e = p.best_response(0, &x, &aux, p.tau_min(), &mut z);
+        assert!(z[0].is_finite() && e.is_finite());
+    }
+
+    #[test]
+    fn grock_stays_finite_on_svm_via_the_engine_tau_floor() {
+        // GRock pins τ0 = 0; the engine floors it at tau_min() so the
+        // inactive-hinge 0/0 hazard cannot poison the iterates with NaN
+        use crate::coordinator::{CommonOptions, TermMetric};
+        use crate::engine::{self, SolverSpec};
+        let p = small();
+        let c = CommonOptions {
+            max_iters: 150,
+            tol: 0.0,
+            term: TermMetric::Merit,
+            name: "grock-svm".into(),
+            ..Default::default()
+        };
+        let r = engine::solve(&p, &vec![0.0; p.n()], &SolverSpec::grock(c, 4));
+        // the fixed hazard is 0/0 = NaN specifically; GRock may still
+        // legitimately stall/overflow on adversarial data (the engine
+        // reports StopReason::Stalled for that), so assert NaN-freedom
+        assert!(!r.final_obj.is_nan(), "objective went NaN");
+        assert!(r.x.iter().all(|v| !v.is_nan()), "NaN leaked into the iterate");
     }
 
     #[test]

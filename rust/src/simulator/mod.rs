@@ -23,7 +23,7 @@
 //! deterministic in-process allreduce mirroring the ring model above and
 //! counts its real rounds/words into `SolveReport::comm`; `bench shard`
 //! compares those measurements against the `reduce_rounds` this model is
-//! fed (`results/BENCH_4.json`).
+//! fed (`results/BENCH_5.json`).
 
 use crate::linalg::DenseMatrix;
 use crate::metrics::IterCost;

@@ -9,10 +9,15 @@
 //! loop itself is asserted by the frozen legacy baseline in
 //! `bench::engine_overhead` (unit test + `bench engine` panel).
 
-use flexa::coordinator::{CommonOptions, SelectionSpec, TermMetric};
-use flexa::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+use flexa::coordinator::{Backend, CommonOptions, SelectionSpec, TermMetric};
+use flexa::datagen::{
+    dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
+};
 use flexa::engine::{self, SolverSpec};
-use flexa::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, Problem};
+use flexa::problems::{
+    DictionaryCodesProblem, GroupLassoProblem, LassoProblem, LogisticProblem, NonconvexQpProblem,
+    Problem, SvmProblem,
+};
 use flexa::solvers::{AdmmOptions, SparsaOptions};
 
 fn common(name: &str, max_iters: usize, term: TermMetric) -> CommonOptions {
@@ -143,6 +148,109 @@ fn engine_families_bitwise_across_threads_on_nonconvex_qp() {
         };
         let label = coordinator_specs(1, 1, TermMetric::Merit)[idx].0.clone();
         assert_threads_bitwise(&p, &build, &label);
+    }
+}
+
+#[test]
+fn engine_families_bitwise_across_threads_on_group_lasso() {
+    let p = GroupLassoProblem::from_instance(nesterov_lasso(30, 48, 0.1, 1.0, 14), 4);
+    for idx in 0..coordinator_specs(1, 1, TermMetric::Merit).len() {
+        let build = |threads: usize| {
+            coordinator_specs(threads, 40, TermMetric::Merit)[idx].1.clone()
+        };
+        let label = coordinator_specs(1, 1, TermMetric::Merit)[idx].0.clone();
+        assert_threads_bitwise(&p, &build, &label);
+    }
+}
+
+#[test]
+fn engine_families_bitwise_across_threads_on_svm() {
+    let inst = logistic_like(LogisticPreset::Gisette, 0.012, 15);
+    let p = SvmProblem::new(inst.y, &inst.labels, inst.c.max(0.1));
+    for idx in 0..coordinator_specs(1, 1, TermMetric::Merit).len() {
+        let build = |threads: usize| {
+            coordinator_specs(threads, 40, TermMetric::Merit)[idx].1.clone()
+        };
+        let label = coordinator_specs(1, 1, TermMetric::Merit)[idx].0.clone();
+        assert_threads_bitwise(&p, &build, &label);
+    }
+}
+
+#[test]
+fn engine_families_bitwise_across_threads_on_dictionary_codes() {
+    let p = DictionaryCodesProblem::from_instance(&dictionary_instance(10, 6, 10, 0.3, 0.01, 16));
+    for idx in 0..coordinator_specs(1, 1, TermMetric::Merit).len() {
+        let build = |threads: usize| {
+            coordinator_specs(threads, 40, TermMetric::Merit)[idx].1.clone()
+        };
+        let label = coordinator_specs(1, 1, TermMetric::Merit)[idx].0.clone();
+        assert_threads_bitwise(&p, &build, &label);
+    }
+}
+
+#[test]
+fn sharded_backend_bitwise_on_all_six_families() {
+    // the backend axis of the coverage matrix: shared ≡ sharded for a
+    // scan solver (flexa) and the sequential sweep (cdm) on every
+    // problem family, at threads {1, 2, 4} each
+    let problems: Vec<(&str, Box<dyn Problem>)> = vec![
+        ("lasso", Box::new(LassoProblem::from_instance(nesterov_lasso(30, 40, 0.1, 1.0, 44)))),
+        (
+            "group-lasso",
+            Box::new(GroupLassoProblem::from_instance(nesterov_lasso(30, 40, 0.1, 1.0, 44), 4)),
+        ),
+        (
+            "logistic",
+            Box::new(LogisticProblem::from_instance(logistic_like(
+                LogisticPreset::Gisette,
+                0.01,
+                44,
+            ))),
+        ),
+        ("svm", {
+            let inst = logistic_like(LogisticPreset::Gisette, 0.01, 45);
+            Box::new(SvmProblem::new(inst.y, &inst.labels, inst.c.max(0.1)))
+        }),
+        (
+            "nonconvex-qp",
+            Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
+                30, 40, 0.1, 10.0, 50.0, 1.0, 44,
+            ))),
+        ),
+        (
+            "dictionary",
+            Box::new(DictionaryCodesProblem::from_instance(&dictionary_instance(
+                8, 5, 9, 0.3, 0.01, 44,
+            ))),
+        ),
+    ];
+    for (kind, p) in &problems {
+        assert!(p.supports_column_shard(), "{kind}: no sharded path");
+        let x0 = vec![0.0; p.n()];
+        for solver in ["flexa", "cdm"] {
+            let run = |backend: Backend, threads: usize| {
+                let mut c = common(solver, 25, TermMetric::Merit);
+                c.threads = threads;
+                c.cores = 4;
+                c.backend = backend;
+                let spec = SolverSpec::from_name(solver, c, None, 0.5, 4)
+                    .unwrap_or_else(|e| panic!("{kind}/{solver}: {e}"));
+                engine::solve(p.as_ref(), &x0, &spec)
+            };
+            let reference = run(Backend::Shared, 1);
+            for threads in [1usize, 2, 4] {
+                let sharded = run(Backend::Sharded, threads);
+                assert_eq!(
+                    reference.x, sharded.x,
+                    "{kind}/{solver}: sharded diverged at threads={threads}"
+                );
+                assert_eq!(reference.final_obj, sharded.final_obj, "{kind}/{solver}");
+                assert!(
+                    !sharded.comm.is_empty(),
+                    "{kind}/{solver}: sharded run measured no communication"
+                );
+            }
+        }
     }
 }
 

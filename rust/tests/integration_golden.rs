@@ -1,5 +1,6 @@
 //! Golden-trace regression harness: the first 5 iterates of every solver
-//! family on small seeded lasso / logistic / nonconvex-qp instances,
+//! family on small seeded instances of **all six** problem kinds (lasso,
+//! group-lasso, logistic, svm, nonconvex-qp, dictionary sparse coding),
 //! pinned **bitwise** (f64 bit patterns, hex-serialized) against
 //! `tests/fixtures/golden_*.txt` — so a future refactor cannot silently
 //! drift numerics — and pinned across the engine's two data-plane
@@ -16,13 +17,21 @@
 //! and `FLEXA_TEST_THREADS` = comma list (default `1,2,4`).
 //!
 //! Missing fixture files are **generated** (and reported on stderr) so the
-//! harness bootstraps on a fresh machine; commit the generated files to
-//! arm the regression check. See `tests/fixtures/README.md`.
+//! harness bootstraps on a fresh developer machine; with
+//! `FLEXA_GOLDEN_REQUIRE=1` (set by the CI golden-matrix job whenever the
+//! checkout ships committed fixtures) a missing file is a hard **failure**
+//! instead — the drift check is armed and can never silently re-bootstrap.
+//! See `tests/fixtures/README.md`.
 
 use flexa::coordinator::{Backend, CommonOptions, TermMetric};
-use flexa::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+use flexa::datagen::{
+    dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
+};
 use flexa::engine::{self, SolverSpec};
-use flexa::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, Problem};
+use flexa::problems::{
+    DictionaryCodesProblem, GroupLassoProblem, LassoProblem, LogisticProblem, NonconvexQpProblem,
+    Problem, SvmProblem,
+};
 use std::path::PathBuf;
 
 /// Iterates pinned per (problem, family).
@@ -47,6 +56,13 @@ fn threads_axis() -> Vec<usize> {
         .unwrap_or_else(|| vec![1, 2, 4])
 }
 
+/// Whether a missing fixture is a hard failure (armed drift check)
+/// rather than a bootstrap. Empty / "0" count as unset so a matrix job
+/// can template the variable away.
+fn golden_fixtures_required() -> bool {
+    matches!(std::env::var("FLEXA_GOLDEN_REQUIRE"), Ok(v) if !v.is_empty() && v != "0")
+}
+
 fn backends_axis() -> Vec<Backend> {
     match std::env::var("FLEXA_TEST_BACKEND").as_deref() {
         Ok("shared") => vec![Backend::Shared],
@@ -66,9 +82,14 @@ const fn fam(name: &'static str, sharded: bool) -> Family {
     Family { name, sharded }
 }
 
-/// The families pinned on each problem kind. ADMM assumes the LASSO
-/// residual form; GRock/greedy-1BCD pin τ = 0, which the nonconvex QP's
-/// convexity floor (τ > 2c̄) forbids.
+/// The families pinned on each problem kind. ADMM assumes the residual
+/// consensus form `F = ‖Ax − b‖²` (lasso, group-lasso, dictionary —
+/// the same probe the CLI and engine use); GRock/greedy-1BCD pin τ = 0,
+/// which the nonconvex QP's convexity floor (τ > 2c̄) forbids and which
+/// is ill-posed for the ℓ2-SVM (the active-hinge generalized-Hessian
+/// diagonal can vanish). The engine floors a pinned τ at
+/// `Problem::tau_min`, so those combinations run safely — but they are
+/// not paper configurations, so the pinned matrix leaves them out.
 fn families_for(kind: &str) -> Vec<Family> {
     let mut fams = vec![
         fam("flexa", true),
@@ -78,11 +99,11 @@ fn families_for(kind: &str) -> Vec<Family> {
         fam("fista", false),
         fam("sparsa", false),
     ];
-    if kind != "nonconvex-qp" {
+    if kind != "nonconvex-qp" && kind != "svm" {
         fams.push(fam("grock", true));
         fams.push(fam("greedy-1bcd", true));
     }
-    if kind == "lasso" {
+    if flexa::problems::is_residual_form(build_problem(kind).as_ref()) {
         fams.push(fam("admm", false));
     }
     fams
@@ -91,13 +112,24 @@ fn families_for(kind: &str) -> Vec<Family> {
 fn build_problem(kind: &str) -> Box<dyn Problem> {
     match kind {
         "lasso" => Box::new(LassoProblem::from_instance(nesterov_lasso(30, 40, 0.1, 1.0, 4242))),
+        "group-lasso" => Box::new(GroupLassoProblem::from_instance(
+            nesterov_lasso(30, 40, 0.1, 1.0, 4242),
+            4,
+        )),
         "logistic" => Box::new(LogisticProblem::from_instance(logistic_like(
             LogisticPreset::Gisette,
             0.008,
             4242,
         ))),
+        "svm" => {
+            let inst = logistic_like(LogisticPreset::Gisette, 0.008, 4242);
+            Box::new(SvmProblem::new(inst.y, &inst.labels, inst.c.max(0.1)))
+        }
         "nonconvex-qp" => Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
             30, 40, 0.1, 10.0, 50.0, 1.0, 4242,
+        ))),
+        "dictionary" => Box::new(DictionaryCodesProblem::from_instance(&dictionary_instance(
+            10, 6, 8, 0.3, 0.01, 4242,
         ))),
         other => panic!("unknown golden problem kind {other:?}"),
     }
@@ -189,13 +221,16 @@ fn check_fixture(kind: &str, family: &str, reference: &[Vec<f64>]) {
             );
         }
         Err(_) => {
-            // CI sets FLEXA_GOLDEN_REQUIRE=1 once the fixtures are
-            // committed, turning a silently-bootstrapping run into a
-            // failure (a fresh checkout must have the history to check)
+            // the CI golden-matrix job sets FLEXA_GOLDEN_REQUIRE=1
+            // whenever the checkout ships committed fixtures, turning a
+            // silently-bootstrapping run into a hard failure (a fresh
+            // checkout must have the history to check — this is what
+            // catches a new family added without committing its fixture)
             assert!(
-                std::env::var("FLEXA_GOLDEN_REQUIRE").is_err(),
+                !golden_fixtures_required(),
                 "golden fixture {} is missing but FLEXA_GOLDEN_REQUIRE is set — \
-                 the committed history check cannot run",
+                 the committed history check cannot run; regenerate the fixture \
+                 (run this suite without the variable) and commit it",
                 path.display()
             );
             let _ = std::fs::create_dir_all(&dir);
@@ -248,13 +283,28 @@ fn golden_traces_lasso() {
 }
 
 #[test]
+fn golden_traces_group_lasso() {
+    golden_matrix("group-lasso");
+}
+
+#[test]
 fn golden_traces_logistic() {
     golden_matrix("logistic");
 }
 
 #[test]
+fn golden_traces_svm() {
+    golden_matrix("svm");
+}
+
+#[test]
 fn golden_traces_nonconvex_qp() {
     golden_matrix("nonconvex-qp");
+}
+
+#[test]
+fn golden_traces_dictionary() {
+    golden_matrix("dictionary");
 }
 
 #[test]

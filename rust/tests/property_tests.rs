@@ -3,11 +3,16 @@
 //! instances rather than hand-picked examples.
 
 use flexa::coordinator::SelectionRule;
-use flexa::datagen::nesterov_lasso;
+use flexa::datagen::{
+    dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
+};
 use flexa::linalg::{vector, BlockPartition, CscMatrix, DenseMatrix};
 use flexa::metrics::IterCost;
 use flexa::parallel::{allreduce_sum, row_chunks, ShardLayout, WorkerPool};
-use flexa::problems::{LassoProblem, Problem};
+use flexa::problems::{
+    DictionaryCodesProblem, GroupLassoProblem, LassoProblem, LogisticProblem, NonconvexQpProblem,
+    Problem, SvmProblem,
+};
 use flexa::rng::Xoshiro256pp;
 use flexa::simulator::CostModel;
 use flexa::util::Json;
@@ -365,6 +370,104 @@ fn prop_shard_layout_partitions_blocks_and_columns_exactly_once() {
         for s in 0..shards {
             assert_eq!(layout.block_range(s), again.block_range(s));
             assert_eq!(layout.col_range(s), again.col_range(s));
+        }
+    });
+}
+
+/// One small instance of every `Problem` family, seeded.
+fn all_family_problems(seed: u64) -> Vec<(&'static str, Box<dyn Problem>)> {
+    let log_inst = logistic_like(LogisticPreset::Gisette, 0.01, seed);
+    let svm_inst = logistic_like(LogisticPreset::Gisette, 0.01, seed + 1);
+    vec![
+        (
+            "lasso",
+            Box::new(LassoProblem::from_instance(nesterov_lasso(20, 30, 0.2, 1.0, seed)))
+                as Box<dyn Problem>,
+        ),
+        (
+            "group-lasso",
+            Box::new(GroupLassoProblem::from_instance(
+                nesterov_lasso(20, 24, 0.2, 1.0, seed),
+                4,
+            )),
+        ),
+        ("logistic", Box::new(LogisticProblem::from_instance(log_inst))),
+        (
+            "svm",
+            Box::new(SvmProblem::new(svm_inst.y, &svm_inst.labels, svm_inst.c.max(0.1))),
+        ),
+        (
+            "nonconvex-qp",
+            Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
+                20, 30, 0.2, 10.0, 50.0, 1.0, seed,
+            ))),
+        ),
+        (
+            "dictionary",
+            Box::new(DictionaryCodesProblem::from_instance(&dictionary_instance(
+                8,
+                5,
+                9,
+                0.4,
+                0.01,
+                seed,
+            ))),
+        ),
+    ]
+}
+
+#[test]
+fn prop_every_family_shards_and_shard_views_match_full_problem_bitwise() {
+    // the generic owner-computes contract: for EVERY Problem impl that
+    // exposes column_shard (all six families — future families are picked
+    // up automatically through all_family_problems), a shard's
+    // best-response / scratch-assisted best-response / delta application
+    // over a random block range must equal the full-matrix methods
+    // bit-for-bit, which is the entire backend-equivalence argument
+    for_all(8, |rng| {
+        for (name, problem) in &all_family_problems(rng.next_u64()) {
+            let problem = problem.as_ref();
+            assert!(problem.supports_column_shard(), "{name}: no column-shard view");
+            let nb = problem.blocks().n_blocks();
+            let lo = rng.next_usize(nb);
+            let hi = (lo + 1 + rng.next_usize(nb - lo)).min(nb);
+            let shard = problem.column_shard(lo..hi).expect("probe said shards exist");
+            assert_eq!(shard.block_range(), lo..hi, "{name}");
+
+            let x: Vec<f64> = (0..problem.n()).map(|_| rng.next_normal() * 0.4).collect();
+            let mut aux = vec![0.0; problem.aux_len()];
+            problem.init_aux(&x, &mut aux);
+            let mut scratch = vec![0.0; problem.prelude_len()];
+            problem.prelude(&x, &aux, &mut scratch);
+            // ≥ tau_min keeps the nonconvex QP's subproblems well-posed
+            let tau = problem.tau_init().max(problem.tau_min());
+
+            let mb = problem.blocks().max_size();
+            let (mut zf, mut zs) = (vec![0.0; mb], vec![0.0; mb]);
+            for i in lo..hi {
+                let bl = problem.blocks().range(i).len();
+                let ef = problem.best_response(i, &x, &aux, tau, &mut zf[..bl]);
+                let es = shard.best_response(i, &x, &aux, tau, &mut zs[..bl]);
+                assert_eq!(ef.to_bits(), es.to_bits(), "{name}: E_{i}");
+                assert_eq!(&zf[..bl], &zs[..bl], "{name}: zhat block {i}");
+                let ef = problem.best_response_with(i, &x, &aux, &scratch, tau, &mut zf[..bl]);
+                let es = shard.best_response_with(i, &x, &aux, &scratch, tau, &mut zs[..bl]);
+                assert_eq!(ef.to_bits(), es.to_bits(), "{name}: scratch E_{i}");
+                assert_eq!(&zf[..bl], &zs[..bl], "{name}: scratch zhat block {i}");
+
+                let delta: Vec<f64> = (0..bl).map(|_| rng.next_normal() * 0.3).collect();
+                let mut af = aux.clone();
+                let mut as_ = aux.clone();
+                problem.apply_block_delta(i, &delta, &mut af);
+                shard.apply_block_delta(i, &delta, &mut as_);
+                for j in 0..af.len() {
+                    assert_eq!(
+                        af[j].to_bits(),
+                        as_[j].to_bits(),
+                        "{name}: delta image row {j} of block {i}"
+                    );
+                }
+            }
         }
     });
 }
