@@ -233,7 +233,7 @@ pub fn engine_overhead(cfg: &BenchConfig) -> Result<super::figures::FigureOutput
             x_legacy = r.x;
 
             let t = Timer::start();
-            let r = engine::solve_with_pool(&problem, &x0, &spec, &pool);
+            let r = engine::solve_on(&problem, &x0, &spec, Some(&pool));
             engine_best = engine_best.min(t.elapsed_s());
             x_engine = r.x;
         }

@@ -8,7 +8,6 @@
 //! `FLEXA_BENCH_SCALE=1.0` for the paper's sizes and `FLEXA_BENCH_BUDGET`
 //! (seconds per solver) to extend runs.
 
-use crate::config::ProblemSpec;
 use crate::coordinator::{
     flexa, gauss_jacobi, CommonOptions, FlexaOptions, GaussJacobiOptions, SelectionSpec,
     TermMetric,
@@ -766,57 +765,11 @@ pub fn smoke(cfg: &BenchConfig) -> FigureOutput {
     }
 }
 
-/// Instantiate a problem from a config spec (CLI `solve` path).
-pub fn build_problem(spec: &ProblemSpec) -> Box<dyn Problem> {
-    match spec {
-        ProblemSpec::Lasso { m, n, sparsity, c, seed } => Box::new(LassoProblem::from_instance(
-            nesterov_lasso(*m, *n, *sparsity, *c, *seed),
-        )),
-        ProblemSpec::GroupLasso { m, n, sparsity, c, block_size, seed } => {
-            Box::new(crate::problems::GroupLassoProblem::from_instance(
-                nesterov_lasso(*m, *n, *sparsity, *c, *seed),
-                *block_size,
-            ))
-        }
-        ProblemSpec::Logistic { preset, scale, seed } => {
-            let p = LogisticPreset::from_name(preset).unwrap_or(LogisticPreset::Gisette);
-            Box::new(LogisticProblem::from_instance(logistic_like(p, *scale, *seed)))
-        }
-        ProblemSpec::Svm { preset, scale, c, seed } => {
-            let p = LogisticPreset::from_name(preset).unwrap_or(LogisticPreset::Gisette);
-            let inst = logistic_like(p, *scale, *seed);
-            // default: the preset's sample-scaled ℓ1 weight (like
-            // logistic), floored so tiny scaled instances stay
-            // well-posed; an explicit problem.c overrides it UNCLAMPED
-            // (config parse already rejects c ≤ 0)
-            let c = c.unwrap_or_else(|| inst.c.max(1e-3));
-            Box::new(crate::problems::SvmProblem::new(inst.y, &inst.labels, c))
-        }
-        ProblemSpec::NonconvexQp { m, n, sparsity, c, cbar, box_bound, seed } => {
-            Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
-                *m, *n, *sparsity, *c, *cbar, *box_bound, *seed,
-            )))
-        }
-        ProblemSpec::Dictionary { m, atoms, samples, code_sparsity, noise, c, seed } => {
-            let mut inst = crate::datagen::dictionary_instance(
-                *m,
-                *atoms,
-                *samples,
-                *code_sparsity,
-                *noise,
-                *seed,
-            );
-            if let Some(c) = c {
-                inst.c = *c;
-            }
-            Box::new(crate::problems::DictionaryCodesProblem::from_instance(&inst))
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ProblemSpec;
+    use crate::spec::build_problem;
 
     fn tiny_cfg() -> BenchConfig {
         BenchConfig {

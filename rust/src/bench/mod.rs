@@ -5,12 +5,18 @@
 pub mod engine_overhead;
 pub mod figures;
 pub mod harness;
+pub mod serve_panel;
 pub mod shard_panel;
 
 pub use engine_overhead::engine_overhead;
 pub use figures::{
-    ablations, build_problem, fig1, fig2, fig3, fig4, fig5, selection_panel, smoke, table1,
-    BenchConfig, FigureOutput,
+    ablations, fig1, fig2, fig3, fig4, fig5, selection_panel, smoke, table1, BenchConfig,
+    FigureOutput,
 };
 pub use harness::{bench, bench_scaling, BenchResult, ScalingPoint};
+pub use serve_panel::serve_panel;
 pub use shard_panel::shard_panel;
+
+// problem instantiation moved next to `SolveSpec` (crate::spec); re-export
+// keeps the old `bench::build_problem` path working
+pub use crate::spec::build_problem;

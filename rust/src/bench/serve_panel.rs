@@ -1,0 +1,587 @@
+//! `bench serve` — ramped mixed-workload driver against an in-process
+//! `flexa serve` daemon.
+//!
+//! The driver starts a daemon on an ephemeral port, precomputes the
+//! ground-truth report of every workload entry by solving it directly
+//! ([`execute_prepared`]) with the same cost model the server is bound
+//! with, then offers a mixed request stream from closed-loop paced
+//! clients, ramping `initial_rps → max_rps` in `increment_rps` steps
+//! until the daemon saturates (achieved < 90% of offered). Every single
+//! response is verified against the precomputed report (exact JSON
+//! equality minus the `wall_s` clock) — a dropped or corrupted response
+//! fails the bench, it is never just a statistic.
+//!
+//! Per-round p50/p99/mean/max latency and throughput panels land in
+//! `results/BENCH_6.json` (the CI serve-smoke job uploads it, following
+//! the `BENCH_*` trajectory convention).
+//!
+//! Knobs (env > workload-file `[ramp]` table > default):
+//! `FLEXA_SERVE_WORKLOAD` (TOML file of `[workload.<name>]` tables; see
+//! `configs/serve_workload.toml`), `FLEXA_SERVE_INITIAL_RPS`,
+//! `FLEXA_SERVE_INCREMENT_RPS`, `FLEXA_SERVE_MAX_RPS`,
+//! `FLEXA_SERVE_ROUND_S`, `FLEXA_SERVE_CLIENTS`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::figures::{BenchConfig, FigureOutput};
+use crate::bail;
+use crate::config::toml::TomlDoc;
+use crate::config::{ProblemSpec, ServerSettings};
+use crate::coordinator::Backend;
+use crate::metrics::TextTable;
+use crate::server::Server;
+use crate::spec::{build_problem, execute_prepared, ExecOptions, SolveSpec};
+use crate::util::error::Result;
+use crate::util::Json;
+
+/// Ramp schedule of the serve bench driver.
+#[derive(Clone, Copy, Debug)]
+pub struct RampConfig {
+    /// Offered load of the first round [requests/s].
+    pub initial_rps: f64,
+    /// Offered-load increase per round [requests/s].
+    pub increment_rps: f64,
+    /// Stop ramping past this offered load.
+    pub max_rps: f64,
+    /// Duration of each round [s].
+    pub round_s: f64,
+    /// Concurrent closed-loop client connections.
+    pub clients: usize,
+}
+
+fn env_f64(name: &str) -> Option<f64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+fn knob(doc: Option<&TomlDoc>, key: &str, env: &str, default: f64) -> f64 {
+    env_f64(env).or_else(|| doc.and_then(|d| d.get_f64(key))).unwrap_or(default)
+}
+
+impl RampConfig {
+    /// Resolve the ramp knobs: `FLEXA_SERVE_*` env vars win over the
+    /// workload file's `[ramp]` table, which wins over the defaults
+    /// (8→64 rps in steps of 8, 1.5 s rounds, 4 clients).
+    pub fn from_sources(doc: Option<&TomlDoc>) -> Self {
+        Self {
+            initial_rps: knob(doc, "ramp.initial_rps", "FLEXA_SERVE_INITIAL_RPS", 8.0),
+            increment_rps: knob(doc, "ramp.increment_rps", "FLEXA_SERVE_INCREMENT_RPS", 8.0),
+            max_rps: knob(doc, "ramp.max_rps", "FLEXA_SERVE_MAX_RPS", 64.0),
+            round_s: knob(doc, "ramp.round_s", "FLEXA_SERVE_ROUND_S", 1.5),
+            clients: knob(doc, "ramp.clients", "FLEXA_SERVE_CLIENTS", 4.0).max(1.0) as usize,
+        }
+    }
+}
+
+/// One weighted entry of the serve workload mix.
+#[derive(Clone, Debug)]
+pub struct WorkloadEntry {
+    /// The request spec sent for this entry.
+    pub spec: SolveSpec,
+    /// Relative frequency in the mix (≥ 1).
+    pub weight: usize,
+}
+
+/// The built-in mixed workload: four problem families, both backends,
+/// sized so each solve takes on the order of a millisecond — the panel
+/// measures serving overhead and concurrency, not solver throughput.
+pub fn default_workload() -> Vec<WorkloadEntry> {
+    fn entry(spec: std::result::Result<SolveSpec, String>, weight: usize) -> WorkloadEntry {
+        WorkloadEntry { spec: spec.expect("built-in workload spec"), weight }
+    }
+    let lasso = ProblemSpec::Lasso { m: 40, n: 60, sparsity: 0.1, c: 1.0, seed: 31 };
+    let group = ProblemSpec::GroupLasso {
+        m: 40,
+        n: 48,
+        sparsity: 0.1,
+        c: 1.0,
+        block_size: 4,
+        seed: 32,
+    };
+    let logistic = ProblemSpec::Logistic { preset: "gisette".into(), scale: 0.01, seed: 33 };
+    let qp = ProblemSpec::NonconvexQp {
+        m: 30,
+        n: 40,
+        sparsity: 0.1,
+        c: 10.0,
+        cbar: 50.0,
+        box_bound: 1.0,
+        seed: 34,
+    };
+    let base = |name: &str, problem: &ProblemSpec, solver: &str| {
+        SolveSpec::builder()
+            .name(name)
+            .problem(problem.clone())
+            .solver(solver)
+            .max_iters(30)
+            .tol(1e-4)
+            .trace_every(30)
+    };
+    let sharded = |b: crate::spec::SolveSpecBuilder| b.backend(Backend::Sharded).cores(2);
+    vec![
+        entry(base("lasso", &lasso, "flexa").build(), 3),
+        entry(sharded(base("lasso-sharded", &lasso, "flexa")).build(), 1),
+        entry(base("group", &group, "flexa").build(), 2),
+        entry(sharded(base("group-sharded", &group, "cdm")).build(), 1),
+        entry(base("logistic", &logistic, "flexa").build(), 2),
+        entry(sharded(base("logistic-sharded", &logistic, "gauss-jacobi")).build(), 1),
+        entry(base("qp", &qp, "flexa").build(), 1),
+    ]
+}
+
+/// Parse a workload description file: one `[workload.<name>]` table per
+/// entry holding the problem knobs ([`ProblemSpec::from_toml_at`]) plus
+/// `solver`/`backend`/`threads`/`cores`/`weight`/`max_iters`/`tol`.
+pub fn workload_from_toml(doc: &TomlDoc) -> std::result::Result<Vec<WorkloadEntry>, String> {
+    let mut names: Vec<String> = doc
+        .keys_under("workload")
+        .into_iter()
+        .filter_map(|k| {
+            k.strip_prefix("workload.")
+                .and_then(|rest| rest.split('.').next())
+                .map(str::to_string)
+        })
+        .collect();
+    names.dedup();
+    if names.is_empty() {
+        return Err("workload file has no [workload.<name>] tables".into());
+    }
+    let mut entries = Vec::new();
+    for name in names {
+        let prefix = format!("workload.{name}");
+        let key = |k: &str| format!("{prefix}.{k}");
+        let problem = ProblemSpec::from_toml_at(doc, &prefix)?;
+        let max_iters = doc.get_usize(&key("max_iters")).unwrap_or(30);
+        let mut b = SolveSpec::builder()
+            .name(&name)
+            .problem(problem)
+            .solver(doc.get_str(&key("solver")).unwrap_or("flexa"))
+            .threads(doc.get_usize(&key("threads")).unwrap_or(1))
+            .cores(doc.get_usize(&key("cores")).unwrap_or(2))
+            .max_iters(max_iters)
+            .tol(doc.get_f64(&key("tol")).unwrap_or(1e-4))
+            .trace_every(max_iters.max(1));
+        if let Some(backend) = doc.get_str(&key("backend")) {
+            b = b.backend(Backend::parse(backend).map_err(|e| format!("{prefix}: {e}"))?);
+        }
+        let spec = b.build().map_err(|e| format!("{prefix}: {e}"))?;
+        entries.push(WorkloadEntry {
+            spec,
+            weight: doc.get_usize(&key("weight")).unwrap_or(1).max(1),
+        });
+    }
+    Ok(entries)
+}
+
+/// Drop the physical-clock field before comparing report JSON — it is
+/// the single nondeterministic field of a served report.
+fn strip_wall(mut j: Json) -> Json {
+    if let Json::Obj(map) = &mut j {
+        map.remove("wall_s");
+    }
+    j
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((p / 100.0) * (sorted_ms.len() - 1) as f64).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+struct ClientTally {
+    completed: usize,
+    latencies_ms: Vec<f64>,
+    failure: Option<String>,
+}
+
+/// One closed-loop paced client for one round: sends its share of the
+/// offered load (cycling through the weighted mix), waits for each
+/// response, and verifies it byte-for-byte against the precomputed
+/// ground truth.
+fn run_client(
+    addr: SocketAddr,
+    entries: &[WorkloadEntry],
+    expected: &[Json],
+    mix: &[usize],
+    client_idx: usize,
+    clients: usize,
+    offered_rps: f64,
+    round_s: f64,
+) -> ClientTally {
+    let mut tally = ClientTally { completed: 0, latencies_ms: Vec::new(), failure: None };
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            tally.failure = Some(format!("connect: {e}"));
+            return tally;
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            tally.failure = Some(format!("clone stream: {e}"));
+            return tally;
+        }
+    };
+    let mut reader = BufReader::new(stream);
+    let interval = Duration::from_secs_f64(clients as f64 / offered_rps.max(1e-6));
+    let start = Instant::now();
+    let deadline = start + Duration::from_secs_f64(round_s);
+    let mut next = start;
+    let mut seq = 0usize;
+    while Instant::now() < deadline {
+        if let Some(wait) = next.checked_duration_since(Instant::now()) {
+            thread::sleep(wait);
+        }
+        let slot = mix[(client_idx + seq * clients) % mix.len()];
+        let req = Json::obj(vec![
+            ("op", Json::str("solve")),
+            ("id", Json::Num((client_idx * 1_000_000 + seq) as f64)),
+            ("spec", entries[slot].spec.to_json()),
+        ]);
+        let mut text = req.to_string_compact();
+        text.push('\n');
+        let sent = Instant::now();
+        if writer.write_all(text.as_bytes()).and_then(|()| writer.flush()).is_err() {
+            tally.failure = Some("request write failed".into());
+            break;
+        }
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(n) if n > 0 => {}
+            _ => {
+                tally.failure = Some("response read failed (dropped?)".into());
+                break;
+            }
+        }
+        tally.latencies_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+        match Json::parse(line.trim()) {
+            Ok(resp) => {
+                if resp.get("ok") != Some(&Json::Bool(true)) {
+                    tally.failure =
+                        Some(format!("server error: {}", resp.to_string_compact()));
+                    break;
+                }
+                let got = resp.get("report").cloned().map(strip_wall);
+                if got.as_ref() != Some(&expected[slot]) {
+                    tally.failure = Some(format!(
+                        "corrupted response for entry {:?}",
+                        entries[slot].spec.name
+                    ));
+                    break;
+                }
+            }
+            Err(e) => {
+                tally.failure = Some(format!("bad response JSON: {e}"));
+                break;
+            }
+        }
+        tally.completed += 1;
+        next += interval;
+        seq += 1;
+    }
+    tally
+}
+
+struct RoundStats {
+    offered_rps: f64,
+    achieved_rps: f64,
+    completed: usize,
+    wall_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_ms: f64,
+    max_ms: f64,
+}
+
+fn run_round(
+    addr: SocketAddr,
+    entries: &[WorkloadEntry],
+    expected: &[Json],
+    mix: &[usize],
+    offered_rps: f64,
+    round_s: f64,
+    clients: usize,
+) -> Result<RoundStats> {
+    let started = Instant::now();
+    let tallies: Vec<ClientTally> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|k| {
+                scope.spawn(move || {
+                    run_client(addr, entries, expected, mix, k, clients, offered_rps, round_s)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| ClientTally {
+                    completed: 0,
+                    latencies_ms: Vec::new(),
+                    failure: Some("client thread panicked".into()),
+                })
+            })
+            .collect()
+    });
+    let wall_s = started.elapsed().as_secs_f64();
+    for t in &tallies {
+        if let Some(f) = &t.failure {
+            bail!("serve ramp at {offered_rps} rps: {f}");
+        }
+    }
+    let completed: usize = tallies.iter().map(|t| t.completed).sum();
+    let mut lat: Vec<f64> = tallies.iter().flat_map(|t| t.latencies_ms.iter().copied()).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let mean = if lat.is_empty() { f64::NAN } else { lat.iter().sum::<f64>() / lat.len() as f64 };
+    Ok(RoundStats {
+        offered_rps,
+        achieved_rps: completed as f64 / wall_s.max(1e-9),
+        completed,
+        wall_s,
+        p50_ms: percentile(&lat, 50.0),
+        p99_ms: percentile(&lat, 99.0),
+        mean_ms: mean,
+        max_ms: lat.last().copied().unwrap_or(f64::NAN),
+    })
+}
+
+/// One control request (stats/shutdown) on a fresh connection.
+fn request_once(addr: SocketAddr, body: &str) -> Result<Json> {
+    let stream = TcpStream::connect(addr).map_err(|e| crate::anyhow!("connect: {e}"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let mut writer = stream.try_clone().map_err(|e| crate::anyhow!("clone: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(format!("{body}\n").as_bytes())
+        .and_then(|()| writer.flush())
+        .map_err(|e| crate::anyhow!("write: {e}"))?;
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| crate::anyhow!("read: {e}"))?;
+    Json::parse(line.trim()).map_err(|e| crate::anyhow!("parse: {e}"))
+}
+
+/// `bench serve` with the env/file-resolved ramp and workload.
+pub fn serve_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
+    let (entries, doc) = match std::env::var("FLEXA_SERVE_WORKLOAD") {
+        Ok(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| crate::anyhow!("read workload {path}: {e}"))?;
+            let doc = TomlDoc::parse(&text).map_err(|e| crate::anyhow!("{path}: {e}"))?;
+            let entries = workload_from_toml(&doc).map_err(|e| crate::anyhow!("{path}: {e}"))?;
+            (entries, Some(doc))
+        }
+        Err(_) => (default_workload(), None),
+    };
+    let ramp = RampConfig::from_sources(doc.as_ref());
+    serve_panel_with(cfg, &ramp, &entries)
+}
+
+/// The ramped serve driver with explicit ramp and workload (the unit
+/// test entry point). Writes `results/BENCH_6.json`; bails on the first
+/// dropped or corrupted response.
+pub fn serve_panel_with(
+    cfg: &BenchConfig,
+    ramp: &RampConfig,
+    entries: &[WorkloadEntry],
+) -> Result<FigureOutput> {
+    if entries.is_empty() {
+        bail!("serve workload is empty");
+    }
+    // ground truth: direct in-process solves with the same cost model
+    // the daemon is bound with — responses must match these bitwise
+    let mut expected = Vec::new();
+    for e in entries {
+        let problem = build_problem(&e.spec.problem);
+        let report = execute_prepared(
+            &e.spec,
+            problem.as_ref(),
+            ExecOptions { pool: None, x0: None, model: cfg.model },
+        )
+        .map_err(|err| crate::anyhow!("workload entry {:?}: {err}", e.spec.name))?;
+        expected.push(strip_wall(report.to_json_with(false, false)));
+    }
+    let mix: Vec<usize> =
+        entries.iter().enumerate().flat_map(|(i, e)| vec![i; e.weight.max(1)]).collect();
+
+    let settings = ServerSettings { host: "127.0.0.1".into(), port: 0 };
+    let server =
+        Server::bind_with(&settings, cfg.model).map_err(|e| crate::anyhow!("bind: {e}"))?;
+    let addr = server.local_addr();
+    let daemon = thread::spawn(move || server.run());
+
+    let mut table = TextTable::new(&[
+        "offered rps",
+        "achieved rps",
+        "completed",
+        "p50 ms",
+        "p99 ms",
+        "max ms",
+    ]);
+    let mut round_rows = Vec::new();
+    let mut total_requests = 0usize;
+    let mut saturation_rps = f64::NAN;
+    let mut offered = ramp.initial_rps.max(0.1);
+    while offered <= ramp.max_rps + 1e-9 {
+        let r = run_round(addr, entries, &expected, &mix, offered, ramp.round_s, ramp.clients)?;
+        total_requests += r.completed;
+        table.row(vec![
+            format!("{:.1}", r.offered_rps),
+            format!("{:.1}", r.achieved_rps),
+            r.completed.to_string(),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{:.2}", r.max_ms),
+        ]);
+        round_rows.push(Json::obj(vec![
+            ("offered_rps", Json::Num(r.offered_rps)),
+            ("achieved_rps", Json::Num(r.achieved_rps)),
+            ("completed", Json::Num(r.completed as f64)),
+            ("errors", Json::Num(0.0)),
+            ("p50_ms", Json::num_or_null(r.p50_ms)),
+            ("p99_ms", Json::num_or_null(r.p99_ms)),
+            ("mean_ms", Json::num_or_null(r.mean_ms)),
+            ("max_ms", Json::num_or_null(r.max_ms)),
+            ("wall_s", Json::Num(r.wall_s)),
+        ]));
+        let saturated = r.achieved_rps < 0.9 * r.offered_rps;
+        if saturated {
+            saturation_rps = r.offered_rps;
+            break;
+        }
+        offered += ramp.increment_rps.max(0.1);
+    }
+
+    let stats = request_once(addr, "{\"op\":\"stats\"}")?;
+    let _ = request_once(addr, "{\"op\":\"shutdown\"}")?;
+    daemon
+        .join()
+        .map_err(|_| crate::anyhow!("server thread panicked"))?
+        .map_err(|e| crate::anyhow!("server: {e}"))?;
+
+    let workload_json = Json::arr(entries.iter().map(|e| {
+        Json::obj(vec![
+            ("name", Json::str(e.spec.name.clone())),
+            ("kind", Json::str(e.spec.problem.kind())),
+            ("solver", Json::str(e.spec.solver.clone())),
+            ("backend", Json::str(e.spec.backend.name())),
+            ("weight", Json::Num(e.weight as f64)),
+        ])
+    }));
+    let payload = Json::obj(vec![
+        ("bench", Json::str("serve_ramp")),
+        ("clients", Json::Num(ramp.clients as f64)),
+        ("initial_rps", Json::Num(ramp.initial_rps)),
+        ("increment_rps", Json::Num(ramp.increment_rps)),
+        ("max_rps", Json::Num(ramp.max_rps)),
+        ("round_s", Json::Num(ramp.round_s)),
+        ("workload", workload_json),
+        ("rounds", Json::arr(round_rows)),
+        ("saturation_rps", Json::num_or_null(saturation_rps)),
+        ("total_requests", Json::Num(total_requests as f64)),
+        ("corrupted", Json::Num(0.0)),
+        ("server", stats.get("cache").cloned().unwrap_or(Json::Null)),
+        ("jobs_done", stats.get("jobs_done").cloned().unwrap_or(Json::Null)),
+        ("jobs_failed", stats.get("jobs_failed").cloned().unwrap_or(Json::Null)),
+    ]);
+    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    let path = format!("{}/BENCH_6.json", cfg.out_dir);
+    let _ = std::fs::write(&path, payload.to_string_compact());
+
+    let sat = if saturation_rps.is_finite() {
+        format!("saturated at {saturation_rps:.0} rps offered")
+    } else {
+        format!("no saturation up to {:.0} rps", ramp.max_rps)
+    };
+    let text = format!(
+        "serve ramp ({} workload entries, {} clients, {} verified responses, zero \
+         dropped/corrupted; {sat}) -> {path}\n{}",
+        entries.len(),
+        ramp.clients,
+        total_requests,
+        table.render()
+    );
+    Ok(FigureOutput { id: "bench_serve".into(), traces: vec![], text })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_ramp_serves_verified_mixed_workload() {
+        let cfg = BenchConfig {
+            scale: 0.05,
+            budget_s: 1.0,
+            out_dir: std::env::temp_dir()
+                .join("flexa_bench_serve_test")
+                .to_string_lossy()
+                .into_owned(),
+            model: crate::simulator::CostModel::default(),
+            seed: 1,
+            threads: vec![1],
+        };
+        let ramp = RampConfig {
+            initial_rps: 6.0,
+            increment_rps: 6.0,
+            max_rps: 12.0,
+            round_s: 0.5,
+            clients: 2,
+        };
+        let entries = default_workload();
+        let out = serve_panel_with(&cfg, &ramp, &entries).expect("serve ramp must pass");
+        assert!(out.text.contains("BENCH_6.json"));
+        assert!(out.text.contains("zero"));
+        let text = std::fs::read_to_string(format!("{}/BENCH_6.json", cfg.out_dir))
+            .expect("BENCH_6.json written");
+        let json = Json::parse(&text).expect("valid json");
+        assert_eq!(json.get("bench").and_then(Json::as_str), Some("serve_ramp"));
+        let rounds = json.get("rounds").and_then(Json::as_arr).expect("rounds");
+        assert!(!rounds.is_empty());
+        for r in rounds {
+            assert!(r.get("p50_ms").and_then(Json::as_f64).is_some());
+            assert!(r.get("p99_ms").and_then(Json::as_f64).is_some());
+            assert_eq!(r.get("errors").and_then(Json::as_f64), Some(0.0));
+        }
+        let workload = json.get("workload").and_then(Json::as_arr).expect("workload");
+        assert_eq!(workload.len(), entries.len());
+        let total = json.get("total_requests").and_then(Json::as_usize).unwrap();
+        assert!(total > 0, "no requests completed");
+        assert_eq!(json.get("corrupted").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn default_workload_mixes_families_and_backends() {
+        let entries = default_workload();
+        let mut kinds: Vec<&str> = entries.iter().map(|e| e.spec.problem.kind()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert!(kinds.len() >= 3, "workload covers {kinds:?}");
+        assert!(entries.iter().any(|e| e.spec.backend == Backend::Shared));
+        assert!(entries.iter().any(|e| e.spec.backend == Backend::Sharded));
+    }
+
+    #[test]
+    fn workload_file_parses_problem_and_serving_knobs() {
+        let doc = TomlDoc::parse(
+            "[ramp]\nmax_rps = 16\n\n\
+             [workload.small]\nkind = \"lasso\"\nm = 20\nn = 30\nweight = 2\n\
+             solver = \"cdm\"\nbackend = \"sharded\"\nmax_iters = 10\n",
+        )
+        .expect("toml parses");
+        let entries = workload_from_toml(&doc).expect("workload parses");
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].spec.name, "small");
+        assert_eq!(entries[0].spec.solver, "cdm");
+        assert_eq!(entries[0].spec.backend, Backend::Sharded);
+        assert_eq!(entries[0].weight, 2);
+        assert_eq!(entries[0].spec.budgets.max_iters, 10);
+        let ramp = RampConfig::from_sources(Some(&doc));
+        assert_eq!(ramp.max_rps, 16.0);
+    }
+}

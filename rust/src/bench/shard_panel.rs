@@ -183,21 +183,19 @@ pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
                     format!("{predicted:.0}"),
                     if ratio.is_finite() { format!("{ratio:.2}") } else { "n/a".into() },
                 ]);
-                rows.push(Json::obj(vec![
-                    ("problem", Json::str(*kind)),
-                    ("solver", Json::str(solver)),
-                    ("threads", Json::Num(threads as f64)),
-                    ("iters", Json::Num(sharded.iters as f64)),
-                    ("bitwise_equal", Json::Bool(true)),
-                    ("allreduce_rounds", Json::Num(comm.allreduce_rounds as f64)),
-                    ("allreduce_words", Json::Num(comm.allreduce_words)),
-                    ("broadcast_rounds", Json::Num(comm.broadcast_rounds as f64)),
-                    ("broadcast_words", Json::Num(comm.broadcast_words)),
-                    ("sync_rounds", Json::Num(comm.sync_rounds as f64)),
-                    ("predicted_rounds", Json::Num(predicted)),
-                    ("predicted_words", Json::Num(sharded.predicted_words)),
-                    ("measured_over_predicted", Json::Num(ratio)),
-                ]));
+                // comm fields come from the one CommStats encoder shared
+                // with serve responses — the schemas cannot drift
+                rows.push(
+                    comm.to_json()
+                        .with("problem", Json::str(*kind))
+                        .with("solver", Json::str(solver))
+                        .with("threads", Json::Num(threads as f64))
+                        .with("iters", Json::Num(sharded.iters as f64))
+                        .with("bitwise_equal", Json::Bool(true))
+                        .with("predicted_rounds", Json::Num(predicted))
+                        .with("predicted_words", Json::Num(sharded.predicted_words))
+                        .with("measured_over_predicted", Json::num_or_null(ratio)),
+                );
             }
         }
     }

@@ -1,21 +1,29 @@
 //! Command-line interface (hand-rolled; clap is not in the offline crate
-//! set). Subcommands:
+//! set). Every frontend lowers onto the same validated
+//! [`SolveSpec`](crate::spec::SolveSpec) request type. Subcommands:
 //!
 //! * `flexa solve --config <file.toml> [--threads N] [--selection SPEC]` —
 //!   run an experiment config (`--threads` overrides the worker-pool width
 //!   of every solver; `--selection` overrides the block-selection strategy
 //!   of **every** solver in the config, e.g. `--selection hybrid:0.25` —
 //!   all nine solver names, `admm` included, dispatch through the one
-//!   validated [`SolverSpec::from_name`] constructor);
+//!   validated
+//!   [`SolverSpec::from_name`](crate::engine::SolverSpec::from_name)
+//!   constructor, reached via [`SolveSpec::lower`](crate::spec::SolveSpec::lower));
+//! * `flexa serve [--config <file.toml>] [--host H] [--port P]` — the
+//!   long-running solve daemon ([`crate::server`]): newline-delimited
+//!   JSON `SolveSpec` requests over TCP, warm problem/pool/iterate
+//!   caches, graceful drain on a `shutdown` request (`docs/SERVING.md`);
 //! * `flexa bench
-//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine|shard|smoke|all>`
+//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine|shard|serve|smoke|all>`
 //!   — regenerate the paper's figures/tables into `results/` (`selection`
 //!   is the strategy-comparison panel; `engine` is the SolverCore
 //!   overhead panel writing `BENCH_3.json`; `shard` is the sharded-backend
 //!   panel proving bitwise backend equivalence over **all six** problem
 //!   families and comparing measured vs predicted allreduce rounds into
-//!   `BENCH_5.json`; `smoke` is the seconds-long CI target that also
-//!   writes `BENCH_smoke.json`);
+//!   `BENCH_5.json`; `serve` is the ramped serve-daemon driver writing
+//!   p50/p99/throughput panels to `BENCH_6.json`; `smoke` is the
+//!   seconds-long CI target that also writes `BENCH_smoke.json`);
 //! * `flexa runtime-check` — load + execute every artifact and compare
 //!   against the native engine (the L1↔L3 smoke test);
 //! * `flexa info` — platform, artifact, and cost-model report.
@@ -23,10 +31,10 @@
 pub mod args;
 
 use crate::bench::{self, BenchConfig};
-use crate::config::ExperimentConfig;
-use crate::coordinator::{Backend, CommonOptions, SelectionSpec, TermMetric};
-use crate::engine::{self, SolverSpec};
+use crate::config::{ExperimentConfig, ServerSettings};
+use crate::coordinator::{Backend, SelectionSpec};
 use crate::metrics::{Trace, XAxis, YMetric};
+use crate::spec::{self, FrontendOverrides, SolveSpec};
 use crate::util::error::{Context, Result};
 use crate::util::{CsvWriter, PlotCfg};
 use crate::{anyhow, bail};
@@ -43,6 +51,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
 
     match args.command() {
         Some("solve") => cmd_solve(&args),
+        Some("serve") => cmd_serve(&args),
         Some("bench") => cmd_bench(&args),
         Some("runtime-check") => cmd_runtime_check(),
         Some("info") => cmd_info(),
@@ -64,8 +73,9 @@ flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
 USAGE:
   flexa solve --config <file.toml> [--threads N] [--selection SPEC]
               [--backend shared|sharded] [--quiet|--verbose]
+  flexa serve [--config <file.toml>] [--host HOST] [--port PORT]
   flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine
-               |shard|smoke|all>
+               |shard|serve|smoke|all>
   flexa runtime-check
   flexa info
 
@@ -93,121 +103,73 @@ OPTIONS:
                       column-distributed owner-computes model with a
                       measured fixed-order allreduce; bitwise-identical
                       iterates, scan/sweep solvers on every problem kind)
+  --host / --port     serve bind address overrides (default 127.0.0.1:7070
+                      or the config's [server] table; port 0 = ephemeral)
 
 ENV:
   FLEXA_BENCH_SCALE    instance scale vs the paper (default 0.2)
   FLEXA_BENCH_BUDGET   seconds per solver run (default 15)
   FLEXA_BENCH_THREADS  comma list for the measured --threads axis (1,2,4)
-  FLEXA_ARTIFACTS      artifact directory (default ./artifacts)";
+  FLEXA_ARTIFACTS      artifact directory (default ./artifacts)
+  FLEXA_SERVE_WORKLOAD      bench serve workload TOML (default built-in mix)
+  FLEXA_SERVE_INITIAL_RPS   bench serve ramp start (default 8)
+  FLEXA_SERVE_INCREMENT_RPS bench serve ramp step (default 8)
+  FLEXA_SERVE_MAX_RPS       bench serve ramp ceiling (default 64)
+  FLEXA_SERVE_ROUND_S       bench serve seconds per round (default 1.5)
+  FLEXA_SERVE_CLIENTS       bench serve client connections (default 4)";
 
-/// Convert the config `[selection]` table into a strategy spec through
-/// the same constructor/validation path as the CLI grammar
-/// ([`SelectionSpec::from_parts`]), so the two surfaces cannot diverge.
-fn selection_from_settings(s: &crate::config::SelectionSettings) -> Result<SelectionSpec> {
-    SelectionSpec::from_parts(&s.strategy, s.frac, s.sigma, s.k, s.seed)
-        .map_err(|e| anyhow!("[selection] table: {e}"))
+/// Frontend overrides carried by the `solve` flags (`--threads`,
+/// `--backend`, `--selection`), parsed through the same grammars as
+/// every other surface. Public for the spec round-trip tests.
+pub fn overrides_from_args(args: &Args) -> Result<FrontendOverrides> {
+    let backend = match args.value("backend") {
+        Some(s) => Some(Backend::parse(s).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
+    let selection = match args.value("selection") {
+        Some(s) => Some(SelectionSpec::parse(s).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
+    Ok(FrontendOverrides { threads: args.value_usize("threads"), backend, selection })
 }
 
-fn cmd_solve(args: &Args) -> Result<i32> {
+/// Lower `flexa solve` argv onto the parsed config plus one validated
+/// [`SolveSpec`] per solver — the exact translation [`run`] executes,
+/// exposed so the round-trip tests can assert that the CLI and TOML
+/// frontends produce equal specs for equivalent inputs.
+pub fn solve_specs_from_args(args: &Args) -> Result<(ExperimentConfig, Vec<SolveSpec>)> {
     let path = args
         .value("config")
         .ok_or_else(|| anyhow!("solve requires --config <file.toml>"))?;
     let cfg = ExperimentConfig::from_file(path).map_err(|e| anyhow!(e))?;
+    let ov = overrides_from_args(args)?;
+    let specs = spec::specs_from_experiment(&cfg, &ov).map_err(|e| anyhow!(e))?;
+    Ok((cfg, specs))
+}
+
+fn cmd_solve(args: &Args) -> Result<i32> {
+    let (cfg, specs) = solve_specs_from_args(args)?;
+    // one problem instance shared by every solver run; capability guards
+    // (sharded column shards, admm residual form) are probed on it by
+    // `spec::execute_prepared`, never derived from kind lists
     let problem = bench::build_problem(&cfg.problem);
-    let x0 = vec![0.0; problem.n()];
     let model = crate::simulator::CostModel::calibrated();
 
-    // `--threads` overrides every solver's configured worker count
-    let threads_override = args.value_usize("threads");
-
-    // `--backend` overrides every solver's configured data plane
-    let backend_cli: Option<Backend> = match args.value("backend") {
-        Some(s) => Some(Backend::parse(s).map_err(|e| anyhow!(e))?),
-        None => None,
-    };
-
-    // selection strategy: CLI `--selection` > config `[selection]` >
-    // per-solver greedy σ-rule
-    let sel_cli: Option<SelectionSpec> = match args.value("selection") {
-        Some(s) => Some(SelectionSpec::parse(s).map_err(|e| anyhow!(e))?),
-        None => None,
-    };
-    let sel_cfg: Option<SelectionSpec> = match &cfg.selection {
-        Some(s) => Some(selection_from_settings(s)?),
-        None => None,
-    };
-
     let mut traces: Vec<Trace> = Vec::new();
-    for settings in &cfg.solvers {
-        let term = if problem.v_star().is_some() { TermMetric::RelErr } else { TermMetric::Merit };
-        // selection override (CLI > config table); every engine family
-        // accepts one — the coordinator algorithms restrict their scans,
-        // the full-vector baselines restrict their update set (and drop
-        // momentum), so an overridden run is labeled with its strategy:
-        // a sketched "fista+hybrid:…" trace is not classic FISTA
-        let selection = sel_cli.clone().or_else(|| sel_cfg.clone());
-        let run_name = match &selection {
-            Some(s) => format!("{}+{}", settings.name, s.name()),
-            None => settings.name.clone(),
-        };
-        // backend override (CLI > per-solver/config `backend` key); the
-        // sharded data plane needs column-shard views — probed on the
-        // built problem (Problem::supports_column_shard), never derived
-        // from a hand-maintained kind list. All six in-tree kinds pass.
-        let backend = match backend_cli {
-            Some(b) => b,
-            None => Backend::parse(&settings.backend).map_err(|e| anyhow!(e))?,
-        };
-        if backend == Backend::Sharded && !problem.supports_column_shard() {
-            bail!(
-                "backend \"sharded\" needs an owner-computes column-shard view \
-                 (Problem::column_shard), which this problem does not provide"
-            );
+    for s in &specs {
+        match &s.selection {
+            Some(sel) => crate::log_info!("running {} (selection {}) ...", s.solver, sel.name()),
+            None => crate::log_info!("running {} ...", s.solver),
         }
-        let common = CommonOptions {
-            max_iters: cfg.max_iters,
-            max_wall_s: cfg.max_wall_s,
-            tol: cfg.tol,
-            term,
-            cores: settings.cores,
-            threads: threads_override.unwrap_or(settings.threads),
-            trace_every: cfg.trace_every,
-            cost_model: model,
-            backend,
-            name: run_name,
-            ..Default::default()
-        };
-        // ADMM's splitting step assumes the residual consensus form
-        // F = ‖Ax − b‖²; the same probe backs the engine's runtime
-        // assert, so the CLI and the engine cannot disagree on coverage
-        // (lasso, group-lasso and dictionary pass; margin-aux and
-        // shifted-objective kinds fail cleanly here instead of asserting
-        // mid-solve)
-        if settings.name == "admm" && !crate::problems::is_residual_form(problem.as_ref()) {
-            bail!(
-                "solver \"admm\" requires a residual-form problem (F = ‖Ax − b‖²); \
-                 this problem's smooth part is not the plain residual sum of squares"
-            );
-        }
-        // one validated constructor behind the whole dispatch
-        let spec = SolverSpec::from_name(
-            &settings.name,
-            common,
-            selection,
-            settings.sigma,
-            settings.cores,
+        let report = spec::execute_prepared(
+            s,
+            problem.as_ref(),
+            spec::ExecOptions { pool: None, x0: None, model },
         )
         .map_err(|e| anyhow!(e))?;
-        match &spec.selection {
-            Some(sel) => {
-                crate::log_info!("running {} (selection {}) ...", settings.name, sel.name())
-            }
-            None => crate::log_info!("running {} ...", settings.name),
-        }
-        let report = engine::solve(problem.as_ref(), &x0, &spec);
         println!(
             "{:<14} stop={:?} iters={} V={:.6e} re={:.2e} merit={:.2e} wall={:.2}s sim={:.3}s GF={:.2}",
-            settings.name,
+            s.solver,
             report.stop,
             report.iters,
             report.final_obj,
@@ -239,6 +201,29 @@ fn cmd_solve(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+fn cmd_serve(args: &Args) -> Result<i32> {
+    let mut settings = match args.value("config") {
+        Some(path) => ServerSettings::from_file(path).map_err(|e| anyhow!(e))?,
+        None => ServerSettings::default(),
+    };
+    if let Some(host) = args.value("host") {
+        settings.host = host.to_string();
+    }
+    if let Some(port) = args.value_usize("port") {
+        settings.port = u16::try_from(port).map_err(|_| anyhow!("--port out of range: {port}"))?;
+    }
+    let server = crate::server::Server::bind(&settings)
+        .map_err(|e| anyhow!("bind {}:{}: {e}", settings.host, settings.port))?;
+    println!("flexa serve listening on {}", server.local_addr());
+    println!(
+        "protocol: newline-delimited JSON (docs/SERVING.md); \
+         send {{\"op\":\"shutdown\"}} to stop"
+    );
+    server.run().map_err(|e| anyhow!("serve: {e}"))?;
+    println!("flexa serve drained and stopped");
+    Ok(0)
+}
+
 fn cmd_bench(args: &Args) -> Result<i32> {
     let which = args.positional(1).unwrap_or("all");
     let cfg = BenchConfig::from_env();
@@ -265,6 +250,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         "selection" => run(vec![bench::selection_panel(&cfg)]),
         "engine" => run(vec![bench::engine_overhead(&cfg)?]),
         "shard" => run(vec![bench::shard_panel(&cfg)?]),
+        "serve" => run(vec![bench::serve_panel(&cfg)?]),
         "smoke" => run(vec![bench::smoke(&cfg)]),
         "all" => {
             run(vec![bench::table1(&cfg)]);

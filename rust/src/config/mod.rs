@@ -42,6 +42,10 @@
 //! [run]
 //! max_iters = 500
 //! tol = 1e-6
+//!
+//! [server]                       # `flexa serve` daemon (docs/SERVING.md)
+//! host = "127.0.0.1"             # bind address (default 127.0.0.1)
+//! port = 7070                    # TCP port; 0 binds an ephemeral port
 //! ```
 //!
 //! ## `[problem]` kinds
@@ -131,11 +135,20 @@
 //!   ordered reductions — see `crate::parallel`), so changing it is
 //!   always safe. The CLI flag `--threads N` overrides every solver's
 //!   configured value.
+//!
+//! ## `[server]`
+//!
+//! Optional table read by `flexa serve` (ignored by `flexa solve`):
+//! `host` (default `127.0.0.1`) and `port` (default 7070; `0` asks the
+//! OS for an ephemeral port, printed on startup). The daemon's
+//! newline-delimited JSON protocol, its `SolveSpec` request schema, and
+//! the warm-state cache semantics are documented in `docs/SERVING.md`.
 
 pub mod toml;
 
 use std::path::Path;
 
+use crate::util::Json;
 pub use toml::{TomlDoc, TomlValue};
 
 /// Which problem family to instantiate.
@@ -176,6 +189,297 @@ pub enum ProblemSpec {
         c: Option<f64>,
         seed: u64,
     },
+}
+
+impl ProblemSpec {
+    /// The TOML/JSON `kind` discriminant of this problem family.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ProblemSpec::Lasso { .. } => "lasso",
+            ProblemSpec::GroupLasso { .. } => "group-lasso",
+            ProblemSpec::Logistic { .. } => "logistic",
+            ProblemSpec::Svm { .. } => "svm",
+            ProblemSpec::NonconvexQp { .. } => "nonconvex-qp",
+            ProblemSpec::Dictionary { .. } => "dictionary",
+        }
+    }
+
+    /// Construction-time validation: reject knob values the instance
+    /// generators/problems would otherwise panic on (their asserts are
+    /// API backstops, not a user-facing error surface). Messages start
+    /// with the bare field name so frontends can prefix their own key
+    /// path (the TOML parser reports `problem.c …`, JSON decoding the
+    /// same) — one validator, every surface.
+    pub fn validate(&self) -> Result<(), String> {
+        fn c_pos(c: f64) -> Result<(), String> {
+            if c > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("c must be > 0, got {c}"))
+            }
+        }
+        fn frac01(name: &str, v: f64) -> Result<(), String> {
+            if (0.0..=1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{name} must be in [0,1], got {v}"))
+            }
+        }
+        fn dim(name: &str, v: usize) -> Result<(), String> {
+            if v >= 1 {
+                Ok(())
+            } else {
+                Err(format!("{name} must be ≥ 1, got {v}"))
+            }
+        }
+        match self {
+            ProblemSpec::Lasso { m, n, sparsity, c, .. } => {
+                dim("m", *m)?;
+                dim("n", *n)?;
+                frac01("sparsity", *sparsity)?;
+                c_pos(*c)
+            }
+            ProblemSpec::GroupLasso { m, n, sparsity, c, block_size, .. } => {
+                dim("m", *m)?;
+                dim("n", *n)?;
+                dim("block_size", *block_size)?;
+                frac01("sparsity", *sparsity)?;
+                c_pos(*c)
+            }
+            ProblemSpec::Logistic { scale, .. } => {
+                if *scale > 0.0 && *scale <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("scale must be in (0,1], got {scale}"))
+                }
+            }
+            ProblemSpec::Svm { scale, c, .. } => {
+                if !(*scale > 0.0 && *scale <= 1.0) {
+                    return Err(format!("scale must be in (0,1], got {scale}"));
+                }
+                match c {
+                    Some(c) => c_pos(*c),
+                    None => Ok(()),
+                }
+            }
+            ProblemSpec::NonconvexQp { m, n, sparsity, c, .. } => {
+                dim("m", *m)?;
+                dim("n", *n)?;
+                frac01("sparsity", *sparsity)?;
+                c_pos(*c)
+            }
+            ProblemSpec::Dictionary { m, atoms, samples, code_sparsity, c, .. } => {
+                dim("m", *m)?;
+                dim("atoms", *atoms)?;
+                dim("samples", *samples)?;
+                frac01("code_sparsity", *code_sparsity)?;
+                match c {
+                    Some(c) => c_pos(*c),
+                    None => Ok(()),
+                }
+            }
+        }
+    }
+
+    /// Parse the problem table rooted at `prefix` (e.g. `"problem"` for
+    /// experiment configs, `"workload.<name>"` for serve workload files)
+    /// out of a TOML document, with the documented per-kind defaults.
+    /// Validation errors come back prefixed with the key path
+    /// (`problem.c must be > 0, …`).
+    pub fn from_toml_at(doc: &TomlDoc, prefix: &str) -> Result<Self, String> {
+        let key = |k: &str| format!("{prefix}.{k}");
+        let kind = doc
+            .get_str(&key("kind"))
+            .ok_or(format!("missing {prefix}.kind"))?
+            .to_string();
+        let seed = doc.get_usize(&key("seed")).unwrap_or(1) as u64;
+        let need_usize =
+            |k: &str| doc.get_usize(&key(k)).ok_or(format!("missing {prefix}.{k}"));
+        let spec = match kind.as_str() {
+            "lasso" => ProblemSpec::Lasso {
+                m: need_usize("m")?,
+                n: need_usize("n")?,
+                sparsity: doc.get_f64(&key("sparsity")).unwrap_or(0.01),
+                c: doc.get_f64(&key("c")).unwrap_or(1.0),
+                seed,
+            },
+            "group-lasso" => ProblemSpec::GroupLasso {
+                m: need_usize("m")?,
+                n: need_usize("n")?,
+                sparsity: doc.get_f64(&key("sparsity")).unwrap_or(0.01),
+                c: doc.get_f64(&key("c")).unwrap_or(1.0),
+                block_size: doc.get_usize(&key("block_size")).unwrap_or(4),
+                seed,
+            },
+            "logistic" => ProblemSpec::Logistic {
+                preset: doc.get_str(&key("preset")).unwrap_or("gisette").to_string(),
+                scale: doc.get_f64(&key("scale")).unwrap_or(0.2),
+                seed,
+            },
+            "svm" => ProblemSpec::Svm {
+                preset: doc.get_str(&key("preset")).unwrap_or("gisette").to_string(),
+                scale: doc.get_f64(&key("scale")).unwrap_or(0.2),
+                c: doc.get_f64(&key("c")),
+                seed,
+            },
+            "dictionary" => ProblemSpec::Dictionary {
+                m: doc.get_usize(&key("m")).unwrap_or(24),
+                atoms: doc.get_usize(&key("atoms")).unwrap_or(16),
+                samples: doc.get_usize(&key("samples")).unwrap_or(48),
+                code_sparsity: doc.get_f64(&key("code_sparsity")).unwrap_or(0.3),
+                noise: doc.get_f64(&key("noise")).unwrap_or(0.01),
+                c: doc.get_f64(&key("c")),
+                seed,
+            },
+            "nonconvex-qp" => ProblemSpec::NonconvexQp {
+                m: need_usize("m")?,
+                n: need_usize("n")?,
+                sparsity: doc.get_f64(&key("sparsity")).unwrap_or(0.01),
+                c: doc.get_f64(&key("c")).unwrap_or(100.0),
+                cbar: doc.get_f64(&key("cbar")).unwrap_or(1000.0),
+                box_bound: doc.get_f64(&key("box")).unwrap_or(1.0),
+                seed,
+            },
+            other => return Err(format!("unknown {prefix}.kind {other:?}")),
+        };
+        spec.validate().map_err(|e| format!("{prefix}.{e}"))?;
+        Ok(spec)
+    }
+
+    /// JSON encoding: `{"kind": …}` plus the family's knobs (optional
+    /// `c` overrides are omitted when unset). [`ProblemSpec::from_json`]
+    /// inverts it exactly; the compact form doubles as the serve cache
+    /// fingerprint, so equal specs always share cached state.
+    pub fn to_json(&self) -> Json {
+        let kind = Json::str(self.kind());
+        match self {
+            ProblemSpec::Lasso { m, n, sparsity, c, seed } => Json::obj(vec![
+                ("kind", kind),
+                ("m", Json::Num(*m as f64)),
+                ("n", Json::Num(*n as f64)),
+                ("sparsity", Json::Num(*sparsity)),
+                ("c", Json::Num(*c)),
+                ("seed", Json::Num(*seed as f64)),
+            ]),
+            ProblemSpec::GroupLasso { m, n, sparsity, c, block_size, seed } => Json::obj(vec![
+                ("kind", kind),
+                ("m", Json::Num(*m as f64)),
+                ("n", Json::Num(*n as f64)),
+                ("sparsity", Json::Num(*sparsity)),
+                ("c", Json::Num(*c)),
+                ("block_size", Json::Num(*block_size as f64)),
+                ("seed", Json::Num(*seed as f64)),
+            ]),
+            ProblemSpec::Logistic { preset, scale, seed } => Json::obj(vec![
+                ("kind", kind),
+                ("preset", Json::str(preset.clone())),
+                ("scale", Json::Num(*scale)),
+                ("seed", Json::Num(*seed as f64)),
+            ]),
+            ProblemSpec::Svm { preset, scale, c, seed } => {
+                let mut j = Json::obj(vec![
+                    ("kind", kind),
+                    ("preset", Json::str(preset.clone())),
+                    ("scale", Json::Num(*scale)),
+                    ("seed", Json::Num(*seed as f64)),
+                ]);
+                if let Some(c) = c {
+                    j = j.with("c", Json::Num(*c));
+                }
+                j
+            }
+            ProblemSpec::NonconvexQp { m, n, sparsity, c, cbar, box_bound, seed } => {
+                Json::obj(vec![
+                    ("kind", kind),
+                    ("m", Json::Num(*m as f64)),
+                    ("n", Json::Num(*n as f64)),
+                    ("sparsity", Json::Num(*sparsity)),
+                    ("c", Json::Num(*c)),
+                    ("cbar", Json::Num(*cbar)),
+                    ("box", Json::Num(*box_bound)),
+                    ("seed", Json::Num(*seed as f64)),
+                ])
+            }
+            ProblemSpec::Dictionary { m, atoms, samples, code_sparsity, noise, c, seed } => {
+                let mut j = Json::obj(vec![
+                    ("kind", kind),
+                    ("m", Json::Num(*m as f64)),
+                    ("atoms", Json::Num(*atoms as f64)),
+                    ("samples", Json::Num(*samples as f64)),
+                    ("code_sparsity", Json::Num(*code_sparsity)),
+                    ("noise", Json::Num(*noise)),
+                    ("seed", Json::Num(*seed as f64)),
+                ]);
+                if let Some(c) = c {
+                    j = j.with("c", Json::Num(*c));
+                }
+                j
+            }
+        }
+    }
+
+    /// Decode the [`ProblemSpec::to_json`] wire form (same defaults as
+    /// the TOML surface, same [`ProblemSpec::validate`] gate).
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("problem JSON needs a \"kind\" string")?;
+        let f = |k: &str| j.get(k).and_then(Json::as_f64);
+        let u = |k: &str| j.get(k).and_then(Json::as_usize);
+        let s = |k: &str| j.get(k).and_then(Json::as_str);
+        let need_u = |k: &str| u(k).ok_or(format!("problem JSON needs {k:?}"));
+        let seed = f("seed").map(|v| v as u64).unwrap_or(1);
+        let spec = match kind {
+            "lasso" => ProblemSpec::Lasso {
+                m: need_u("m")?,
+                n: need_u("n")?,
+                sparsity: f("sparsity").unwrap_or(0.01),
+                c: f("c").unwrap_or(1.0),
+                seed,
+            },
+            "group-lasso" => ProblemSpec::GroupLasso {
+                m: need_u("m")?,
+                n: need_u("n")?,
+                sparsity: f("sparsity").unwrap_or(0.01),
+                c: f("c").unwrap_or(1.0),
+                block_size: u("block_size").unwrap_or(4),
+                seed,
+            },
+            "logistic" => ProblemSpec::Logistic {
+                preset: s("preset").unwrap_or("gisette").to_string(),
+                scale: f("scale").unwrap_or(0.2),
+                seed,
+            },
+            "svm" => ProblemSpec::Svm {
+                preset: s("preset").unwrap_or("gisette").to_string(),
+                scale: f("scale").unwrap_or(0.2),
+                c: f("c"),
+                seed,
+            },
+            "dictionary" => ProblemSpec::Dictionary {
+                m: u("m").unwrap_or(24),
+                atoms: u("atoms").unwrap_or(16),
+                samples: u("samples").unwrap_or(48),
+                code_sparsity: f("code_sparsity").unwrap_or(0.3),
+                noise: f("noise").unwrap_or(0.01),
+                c: f("c"),
+                seed,
+            },
+            "nonconvex-qp" => ProblemSpec::NonconvexQp {
+                m: need_u("m")?,
+                n: need_u("n")?,
+                sparsity: f("sparsity").unwrap_or(0.01),
+                c: f("c").unwrap_or(100.0),
+                cbar: f("cbar").unwrap_or(1000.0),
+                box_bound: f("box").unwrap_or(1.0),
+                seed,
+            },
+            other => return Err(format!("unknown problem kind {other:?}")),
+        };
+        spec.validate().map_err(|e| format!("problem.{e}"))?;
+        Ok(spec)
+    }
 }
 
 /// The `[selection]` table: block-selection strategy settings, kept as
@@ -255,78 +559,11 @@ impl ExperimentConfig {
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let doc = TomlDoc::parse(text)?;
         let name = doc.get_str("name").unwrap_or("experiment").to_string();
-        let kind = doc
-            .get_str("problem.kind")
-            .ok_or("missing problem.kind")?
-            .to_string();
-        let seed = doc.get_usize("problem.seed").unwrap_or(1) as u64;
-        // reject knob values the instance generators/problems would
-        // otherwise panic on (their asserts are API backstops, not a
-        // user-facing error surface) — bad TOML must Err at parse
-        if let Some(v) = doc.get_f64("problem.c") {
-            if !(v > 0.0) {
-                return Err(format!("problem.c must be > 0, got {v}"));
-            }
-        }
-        for key in ["problem.sparsity", "problem.code_sparsity"] {
-            if let Some(v) = doc.get_f64(key) {
-                if !(0.0..=1.0).contains(&v) {
-                    return Err(format!("{key} must be in [0,1], got {v}"));
-                }
-            }
-        }
-        if let Some(v) = doc.get_f64("problem.scale") {
-            if !(v > 0.0 && v <= 1.0) {
-                return Err(format!("problem.scale must be in (0,1], got {v}"));
-            }
-        }
-        let problem = match kind.as_str() {
-            "lasso" => ProblemSpec::Lasso {
-                m: doc.get_usize("problem.m").ok_or("missing problem.m")?,
-                n: doc.get_usize("problem.n").ok_or("missing problem.n")?,
-                sparsity: doc.get_f64("problem.sparsity").unwrap_or(0.01),
-                c: doc.get_f64("problem.c").unwrap_or(1.0),
-                seed,
-            },
-            "group-lasso" => ProblemSpec::GroupLasso {
-                m: doc.get_usize("problem.m").ok_or("missing problem.m")?,
-                n: doc.get_usize("problem.n").ok_or("missing problem.n")?,
-                sparsity: doc.get_f64("problem.sparsity").unwrap_or(0.01),
-                c: doc.get_f64("problem.c").unwrap_or(1.0),
-                block_size: doc.get_usize("problem.block_size").unwrap_or(4),
-                seed,
-            },
-            "logistic" => ProblemSpec::Logistic {
-                preset: doc.get_str("problem.preset").unwrap_or("gisette").to_string(),
-                scale: doc.get_f64("problem.scale").unwrap_or(0.2),
-                seed,
-            },
-            "svm" => ProblemSpec::Svm {
-                preset: doc.get_str("problem.preset").unwrap_or("gisette").to_string(),
-                scale: doc.get_f64("problem.scale").unwrap_or(0.2),
-                c: doc.get_f64("problem.c"),
-                seed,
-            },
-            "dictionary" => ProblemSpec::Dictionary {
-                m: doc.get_usize("problem.m").unwrap_or(24),
-                atoms: doc.get_usize("problem.atoms").unwrap_or(16),
-                samples: doc.get_usize("problem.samples").unwrap_or(48),
-                code_sparsity: doc.get_f64("problem.code_sparsity").unwrap_or(0.3),
-                noise: doc.get_f64("problem.noise").unwrap_or(0.01),
-                c: doc.get_f64("problem.c"),
-                seed,
-            },
-            "nonconvex-qp" => ProblemSpec::NonconvexQp {
-                m: doc.get_usize("problem.m").ok_or("missing problem.m")?,
-                n: doc.get_usize("problem.n").ok_or("missing problem.n")?,
-                sparsity: doc.get_f64("problem.sparsity").unwrap_or(0.01),
-                c: doc.get_f64("problem.c").unwrap_or(100.0),
-                cbar: doc.get_f64("problem.cbar").unwrap_or(1000.0),
-                box_bound: doc.get_f64("problem.box").unwrap_or(1.0),
-                seed,
-            },
-            other => return Err(format!("unknown problem.kind {other:?}")),
-        };
+        // one problem parser for every TOML surface (experiment configs
+        // here, serve workload files under `workload.<name>`): defaults,
+        // panicking-knob rejection and error prefixes all live in
+        // ProblemSpec::from_toml_at / ProblemSpec::validate
+        let problem = ProblemSpec::from_toml_at(&doc, "problem")?;
 
         // solvers: comma-separated list of names with shared knobs, or
         // per-solver sections [solver.<name>].
@@ -397,6 +634,52 @@ impl ExperimentConfig {
             trace_every: doc.get_usize("run.trace_every").unwrap_or(1),
             out_dir: doc.get_str("run.out_dir").unwrap_or("results").to_string(),
         })
+    }
+
+    /// Read and parse a TOML config file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self, String> {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+    }
+}
+
+/// The `[server]` table: bind address of the `flexa serve` daemon (see
+/// `docs/SERVING.md` for the wire protocol and cache semantics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerSettings {
+    /// Bind host (default `127.0.0.1`; the daemon speaks a trusting
+    /// plaintext protocol, so keep it on loopback unless firewalled).
+    pub host: String,
+    /// TCP port (default 7070; `0` binds an OS-assigned ephemeral port,
+    /// printed on startup — what the tests and the ramp bench use).
+    pub port: u16,
+}
+
+impl Default for ServerSettings {
+    fn default() -> Self {
+        Self { host: "127.0.0.1".into(), port: 7070 }
+    }
+}
+
+impl ServerSettings {
+    /// Read the `[server]` table out of a parsed document; absent keys
+    /// keep their defaults, so an experiment config without a `[server]`
+    /// table is a valid serve config too.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let mut s = Self::default();
+        if let Some(h) = doc.get_str("server.host") {
+            s.host = h.to_string();
+        }
+        if let Some(p) = doc.get_usize("server.port") {
+            s.port = u16::try_from(p).map_err(|_| format!("server.port out of range: {p}"))?;
+        }
+        Ok(s)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        Self::from_doc(&TomlDoc::parse(text)?)
     }
 
     /// Read and parse a TOML config file.
@@ -582,6 +865,69 @@ tol = 1e-6
         )
         .unwrap();
         assert_eq!(cfg.selection, None);
+    }
+
+    #[test]
+    fn problem_spec_json_roundtrips_every_kind() {
+        let specs = [
+            ProblemSpec::Lasso { m: 90, n: 100, sparsity: 0.1, c: 1.0, seed: 7 },
+            ProblemSpec::GroupLasso {
+                m: 40,
+                n: 64,
+                sparsity: 0.05,
+                c: 0.5,
+                block_size: 4,
+                seed: 2,
+            },
+            ProblemSpec::Logistic { preset: "rcv1".into(), scale: 0.1, seed: 3 },
+            ProblemSpec::Svm { preset: "gisette".into(), scale: 0.02, c: Some(0.25), seed: 4 },
+            ProblemSpec::Svm { preset: "gisette".into(), scale: 0.02, c: None, seed: 4 },
+            ProblemSpec::NonconvexQp {
+                m: 20,
+                n: 30,
+                sparsity: 0.1,
+                c: 100.0,
+                cbar: 1000.0,
+                box_bound: 1.0,
+                seed: 5,
+            },
+            ProblemSpec::Dictionary {
+                m: 12,
+                atoms: 8,
+                samples: 20,
+                code_sparsity: 0.3,
+                noise: 0.01,
+                c: None,
+                seed: 6,
+            },
+        ];
+        for spec in specs {
+            let j = spec.to_json();
+            let text = j.to_string_compact();
+            let back = ProblemSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, spec, "{text}");
+            assert_eq!(back.to_json().to_string_compact(), text, "re-encode drifted");
+        }
+    }
+
+    #[test]
+    fn problem_spec_json_validates_like_toml() {
+        let j = Json::parse(r#"{"kind":"lasso","m":20,"n":30,"c":0}"#).unwrap();
+        let err = ProblemSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("problem.c"), "{err}");
+        let j = Json::parse(r#"{"kind":"frobnicate"}"#).unwrap();
+        assert!(ProblemSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn server_settings_defaults_and_table() {
+        assert_eq!(
+            ServerSettings::from_toml("").unwrap(),
+            ServerSettings { host: "127.0.0.1".into(), port: 7070 }
+        );
+        let s = ServerSettings::from_toml("[server]\nhost = \"0.0.0.0\"\nport = 9000\n").unwrap();
+        assert_eq!(s, ServerSettings { host: "0.0.0.0".into(), port: 9000 });
+        assert!(ServerSettings::from_toml("[server]\nport = 70000\n").is_err());
     }
 
     #[test]

@@ -40,7 +40,7 @@ fn spec_of(opts: &FlexaOptions) -> SolverSpec {
 /// [`WorkerPool`](crate::parallel::WorkerPool) from `opts.common.threads`
 /// (workers are spawned once, never per iteration). To reuse a pool
 /// across solves, call
-/// [`engine::solve_with_pool`](crate::engine::solve_with_pool) with
+/// [`engine::solve_on`](crate::engine::solve_on) with
 /// [`SolverSpec::flexa`].
 pub fn flexa(problem: &dyn Problem, x0: &[f64], opts: &FlexaOptions) -> SolveReport {
     engine::solve(problem, x0, &spec_of(opts))
@@ -186,7 +186,7 @@ mod tests {
         o.common.tol = 0.0;
         let pool = crate::parallel::WorkerPool::new(1);
         let spec = SolverSpec::flexa(o.common.clone(), o.selection.clone(), o.inexact);
-        let a = engine::solve_with_pool(&p, &vec![0.0; p.n()], &spec, &pool);
+        let a = engine::solve_on(&p, &vec![0.0; p.n()], &spec, Some(&pool));
         let b = flexa(&p, &vec![0.0; p.n()], &o);
         assert_eq!(a.x, b.x);
         assert_eq!(a.final_obj, b.final_obj);

@@ -36,7 +36,7 @@ fn spec_of(opts: &GaussJacobiOptions) -> SolverSpec {
 /// when `opts.selection` is set) from `x0`. Builds one per-solve
 /// [`WorkerPool`](crate::parallel::WorkerPool) from `opts.common.threads`;
 /// to reuse a pool across solves, call
-/// [`engine::solve_with_pool`](crate::engine::solve_with_pool) with
+/// [`engine::solve_on`](crate::engine::solve_on) with
 /// [`SolverSpec::gauss_jacobi`].
 pub fn gauss_jacobi(problem: &dyn Problem, x0: &[f64], opts: &GaussJacobiOptions) -> SolveReport {
     engine::solve(problem, x0, &spec_of(opts))
@@ -171,7 +171,7 @@ mod tests {
         o.common.tol = 0.0;
         let pool = crate::parallel::WorkerPool::new(2);
         let spec = SolverSpec::gauss_jacobi(o.common.clone(), o.selection.clone(), o.processors);
-        let a = engine::solve_with_pool(&p, &vec![0.0; p.n()], &spec, &pool);
+        let a = engine::solve_on(&p, &vec![0.0; p.n()], &spec, Some(&pool));
         let b = gauss_jacobi(&p, &vec![0.0; p.n()], &o);
         assert_eq!(a.x, b.x);
     }

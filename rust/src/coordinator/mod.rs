@@ -27,6 +27,7 @@ pub use tau::{TauController, TauDecision, TauOptions};
 
 use crate::metrics::{CommStats, Trace};
 use crate::simulator::CostModel;
+use crate::util::Json;
 
 /// Which execution backend runs the iteration engine's data plane.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -202,6 +203,18 @@ pub enum StopReason {
     Stalled,
 }
 
+impl StopReason {
+    /// Stable wire name (the `stop` field of the report JSON schema).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopReason::Converged => "converged",
+            StopReason::MaxIters => "max-iters",
+            StopReason::TimeBudget => "time-budget",
+            StopReason::Stalled => "stalled",
+        }
+    }
+}
+
 /// Result of a solver run.
 #[derive(Clone, Debug)]
 pub struct SolveReport {
@@ -246,5 +259,43 @@ impl SolveReport {
     /// Whether the run stopped by reaching the tolerance.
     pub fn converged(&self) -> bool {
         self.stop == StopReason::Converged
+    }
+
+    /// JSON encoding with the full iterate and trace included.
+    pub fn to_json(&self) -> Json {
+        self.to_json_with(true, true)
+    }
+
+    /// The one report JSON schema, shared by `flexa serve` responses and
+    /// the bench panel writers. `include_x` / `include_trace` gate the two
+    /// potentially large fields (the final iterate and the per-iteration
+    /// trace); everything else is always present. Non-finite metrics
+    /// (`final_rel_err` is NaN without a known `V*`) encode as `null` —
+    /// JSON has no NaN literal.
+    pub fn to_json_with(&self, include_x: bool, include_trace: bool) -> Json {
+        let mut j = Json::obj(vec![
+            ("name", Json::str(self.trace.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("stop", Json::str(self.stop.name())),
+            ("converged", Json::Bool(self.converged())),
+            ("final_obj", Json::num_or_null(self.final_obj)),
+            ("final_rel_err", Json::num_or_null(self.final_rel_err)),
+            ("final_merit", Json::num_or_null(self.final_merit)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("sim_s", Json::Num(self.sim_s)),
+            ("flops", Json::Num(self.flops)),
+            ("discarded", Json::Num(self.discarded as f64)),
+            ("scanned", Json::Num(self.scanned as f64)),
+            ("comm", self.comm.to_json()),
+            ("predicted_rounds", Json::Num(self.predicted_rounds)),
+            ("predicted_words", Json::Num(self.predicted_words)),
+        ]);
+        if include_x {
+            j = j.with("x", Json::num_arr(&self.x));
+        }
+        if include_trace {
+            j = j.with("trace", self.trace.to_json());
+        }
+        j
     }
 }

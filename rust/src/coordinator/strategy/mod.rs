@@ -45,6 +45,7 @@ pub use randomized::{HybridStrategy, ImportanceStrategy, RandomStrategy};
 
 use super::selection::SelectionRule;
 use crate::problems::Problem;
+use crate::util::Json;
 
 /// Which blocks the solver must scan (compute best responses and error
 /// bounds for) this iteration — the outcome of the propose phase.
@@ -366,6 +367,57 @@ impl SelectionSpec {
             }
             _ => Ok(()),
         }
+    }
+
+    /// JSON encoding: `{"strategy": …}` plus exactly the knobs the
+    /// strategy takes — the wire form of the `SolveSpec.selection` field.
+    /// [`SelectionSpec::from_json`] inverts it exactly (seeds included).
+    pub fn to_json(&self) -> Json {
+        match self {
+            SelectionSpec::Greedy { sigma } => Json::obj(vec![
+                ("strategy", Json::str("greedy")),
+                ("sigma", Json::Num(*sigma)),
+            ]),
+            SelectionSpec::TopK { k } => Json::obj(vec![
+                ("strategy", Json::str("topk")),
+                ("k", Json::Num(*k as f64)),
+            ]),
+            SelectionSpec::Cyclic { frac } => Json::obj(vec![
+                ("strategy", Json::str("cyclic")),
+                ("frac", Json::Num(*frac)),
+            ]),
+            SelectionSpec::Random { frac, seed } => Json::obj(vec![
+                ("strategy", Json::str("random")),
+                ("frac", Json::Num(*frac)),
+                ("seed", Json::Num(*seed as f64)),
+            ]),
+            SelectionSpec::Importance { frac, seed } => Json::obj(vec![
+                ("strategy", Json::str("importance")),
+                ("frac", Json::Num(*frac)),
+                ("seed", Json::Num(*seed as f64)),
+            ]),
+            SelectionSpec::Hybrid { frac, sigma, seed } => Json::obj(vec![
+                ("strategy", Json::str("hybrid")),
+                ("frac", Json::Num(*frac)),
+                ("sigma", Json::Num(*sigma)),
+                ("seed", Json::Num(*seed as f64)),
+            ]),
+        }
+    }
+
+    /// Decode the [`SelectionSpec::to_json`] wire form, funneling through
+    /// [`SelectionSpec::from_parts`] so JSON gets the exact same knob
+    /// validation as the CLI grammar and the `[selection]` TOML table.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let strategy = j
+            .get("strategy")
+            .and_then(Json::as_str)
+            .ok_or("selection JSON needs a \"strategy\" string")?;
+        let frac = j.get("frac").and_then(Json::as_f64);
+        let sigma = j.get("sigma").and_then(Json::as_f64);
+        let k = j.get("k").and_then(Json::as_usize);
+        let seed = j.get("seed").and_then(Json::as_f64).map(|s| s as u64);
+        Self::from_parts(strategy, frac, sigma, k, seed)
     }
 
     /// Replace the rng seed of a randomized strategy (no-op for the

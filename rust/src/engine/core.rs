@@ -63,22 +63,46 @@ enum ScanBackend<'e> {
 /// [`WorkerPool`] from `spec.common.threads` (workers are spawned once
 /// here, never per iteration).
 pub fn solve(problem: &dyn Problem, x0: &[f64], spec: &SolverSpec) -> SolveReport {
-    let pool = WorkerPool::new(spec.common.threads);
-    solve_with_pool(problem, x0, spec, &pool)
+    solve_on(problem, x0, spec, None)
+}
+
+/// Run a [`SolverSpec`], optionally on a caller-provided worker pool —
+/// the canonical native entry point behind both [`solve`] and the serve
+/// daemon. `Some(pool)` reuses the pool across solves (its width
+/// supersedes `spec.common.threads`); `None` builds a per-solve pool
+/// from `spec.common.threads`. Iterates are bitwise-identical either
+/// way (the determinism contract of [`crate::parallel`] is thread-count
+/// independent).
+pub fn solve_on(
+    problem: &dyn Problem,
+    x0: &[f64],
+    spec: &SolverSpec,
+    pool: Option<&WorkerPool>,
+) -> SolveReport {
+    let owned;
+    let pool = match pool {
+        Some(p) => p,
+        None => {
+            owned = WorkerPool::new(spec.common.threads);
+            &owned
+        }
+    };
+    match run(problem, x0, spec, pool, ScanBackend::Native) {
+        Ok(r) => r,
+        Err(e) => unreachable!("native scan backend cannot fail: {e:?}"),
+    }
 }
 
 /// Run a [`SolverSpec`] on a caller-provided worker pool (reusable across
 /// solves; `spec.common.threads` is superseded by the pool's width).
+#[deprecated(since = "0.6.0", note = "use solve_on(problem, x0, spec, Some(pool)) instead")]
 pub fn solve_with_pool(
     problem: &dyn Problem,
     x0: &[f64],
     spec: &SolverSpec,
     pool: &WorkerPool,
 ) -> SolveReport {
-    match run(problem, x0, spec, pool, ScanBackend::Native) {
-        Ok(r) => r,
-        Err(e) => unreachable!("native scan backend cannot fail: {e:?}"),
-    }
+    solve_on(problem, x0, spec, Some(pool))
 }
 
 /// Run a [`SolverSpec`] with the Jacobi scan computed by an external
@@ -1351,7 +1375,7 @@ mod tests {
         c.tol = 0.0;
         let spec = SolverSpec::flexa(c, SelectionSpec::sigma(0.5), None);
         let pool = WorkerPool::new(4);
-        let a = solve_with_pool(&p, &x0, &spec, &pool);
+        let a = solve_on(&p, &x0, &spec, Some(&pool));
         let b = solve(&p, &x0, &spec);
         assert_eq!(a.x, b.x);
         assert_eq!(a.final_obj, b.final_obj);

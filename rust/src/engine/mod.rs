@@ -45,7 +45,9 @@ pub mod core;
 pub mod sharded;
 pub mod workspace;
 
-pub use self::core::{solve, solve_with_pool, solve_with_step_engine};
+pub use self::core::{solve, solve_on, solve_with_step_engine};
+#[allow(deprecated)]
+pub use self::core::solve_with_pool;
 pub use self::sharded::ShardedWorkspace;
 pub use self::workspace::Workspace;
 

@@ -57,10 +57,13 @@ pub mod parallel;
 pub mod problems;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod simulator;
 pub mod solvers;
+pub mod spec;
 pub mod util;
 
 pub use coordinator::{flexa, gauss_jacobi, gj_flexa, FlexaOptions, GaussJacobiOptions, SolveReport};
 pub use engine::{DirectionRule, MergeRule, SolverSpec};
 pub use problems::Problem;
+pub use spec::SolveSpec;

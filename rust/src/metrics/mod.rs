@@ -8,6 +8,7 @@
 
 use crate::util::csv::CsvWriter;
 use crate::util::plot::Series;
+use crate::util::Json;
 
 /// Cumulative flop counter with coarse categories.
 #[derive(Clone, Copy, Debug, Default)]
@@ -107,6 +108,19 @@ impl CommStats {
     pub fn is_empty(&self) -> bool {
         self.data_rounds() == 0 && self.sync_rounds == 0
     }
+
+    /// The one JSON encoding of measured communication — shared verbatim
+    /// by the `bench shard` panel rows and the `flexa serve` responses,
+    /// so the two surfaces cannot drift.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("allreduce_rounds", Json::Num(self.allreduce_rounds as f64)),
+            ("allreduce_words", Json::Num(self.allreduce_words)),
+            ("broadcast_rounds", Json::Num(self.broadcast_rounds as f64)),
+            ("broadcast_words", Json::Num(self.broadcast_words)),
+            ("sync_rounds", Json::Num(self.sync_rounds as f64)),
+        ])
+    }
 }
 
 /// One point on a convergence curve.
@@ -128,6 +142,22 @@ pub struct TracePoint {
     pub active: usize,
     /// cumulative flops
     pub flops: f64,
+}
+
+impl TracePoint {
+    /// JSON encoding of one trace point (non-finite metrics → `null`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iter", Json::Num(self.iter as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("sim_s", Json::Num(self.sim_s)),
+            ("obj", Json::num_or_null(self.obj)),
+            ("rel_err", Json::num_or_null(self.rel_err)),
+            ("merit", Json::num_or_null(self.merit)),
+            ("active", Json::Num(self.active as f64)),
+            ("flops", Json::Num(self.flops)),
+        ])
+    }
 }
 
 /// Convergence trace of one solver run.
@@ -243,6 +273,15 @@ impl Trace {
     /// Standard CSV header matching `append_csv`.
     pub fn csv_header() -> [&'static str; 9] {
         ["alg", "iter", "wall_s", "sim_s", "obj", "rel_err", "merit", "active", "flops"]
+    }
+
+    /// JSON encoding: `{"name": …, "points": [TracePoint…]}` — the one
+    /// trace schema, used by server responses and bench writers alike.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("points", Json::arr(self.points.iter().map(|p| p.to_json()))),
+        ])
     }
 }
 
@@ -364,6 +403,56 @@ mod tests {
         let mut f = Flops::default();
         f.add(Flops { linalg: 1.0, transcendental: 2.0, vector: 3.0 });
         assert_eq!(f.total(), 6.0);
+    }
+
+    #[test]
+    fn comm_stats_json_schema_is_flat_and_complete() {
+        let c = CommStats {
+            allreduce_rounds: 3,
+            allreduce_words: 12.0,
+            broadcast_rounds: 1,
+            broadcast_words: 4.0,
+            sync_rounds: 2,
+        };
+        let j = c.to_json();
+        let keys = [
+            "allreduce_rounds",
+            "allreduce_words",
+            "broadcast_rounds",
+            "broadcast_words",
+            "sync_rounds",
+        ];
+        for key in keys {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("allreduce_rounds").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn trace_json_roundtrips_through_text() {
+        let t = mk_trace();
+        let j = t.to_json();
+        let back = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str(), Some("FLEXA"));
+        assert_eq!(back.get("points").unwrap().as_arr().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn trace_point_nan_metrics_encode_as_null() {
+        let p = TracePoint {
+            iter: 0,
+            wall_s: 0.0,
+            sim_s: 0.0,
+            obj: 1.0,
+            rel_err: f64::NAN,
+            merit: f64::NAN,
+            active: 0,
+            flops: 0.0,
+        };
+        let j = p.to_json();
+        assert_eq!(j.get("rel_err"), Some(&Json::Null));
+        // and the document parses back (NaN would be invalid JSON)
+        assert!(Json::parse(&j.to_string_compact()).is_ok());
     }
 
     #[test]

@@ -1,0 +1,464 @@
+//! Warm state the serve daemon keeps across requests: built problems
+//! with their derived per-block curvature, worker pools, column-shard
+//! views, and per-tenant warm-start iterates.
+//!
+//! Cache keys (documented in `docs/SERVING.md`):
+//!
+//! * **problems** — the spec's [`SolveSpec::fingerprint`] (compact
+//!   problem JSON, sorted keys), so requests differing only in
+//!   solver/selection/budgets share one built instance;
+//! * **pools** — the worker-thread count;
+//! * **warm iterates** — `"{tenant}/{fingerprint}"`, written after every
+//!   solve that names a tenant, read only when the request opts in with
+//!   `warm_start` (a warm start changes the trajectory, so it must never
+//!   be implicit);
+//! * **shards** — the owned block range, memoized inside
+//!   [`CachedProblem`] per problem.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::linalg::BlockPartition;
+use crate::parallel::WorkerPool;
+use crate::problems::{Problem, ProblemShard};
+use crate::spec::{build_problem, SolveSpec};
+use crate::util::Json;
+
+/// Lock a mutex, recovering the data from a poisoned lock (a panicked
+/// solve job must not wedge the whole daemon — the cached state is
+/// value-semantic and stays usable).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A [`ProblemShard`] handle cloned out of the memoized cache. The
+/// engine wants `Box<dyn ProblemShard>` per worker; the cache holds one
+/// `Arc` per block range and hands out cheap delegating boxes.
+struct ArcShard(Arc<dyn ProblemShard>);
+
+impl ProblemShard for ArcShard {
+    fn block_range(&self) -> Range<usize> {
+        self.0.block_range()
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        self.0.best_response(i, x, aux, tau, out)
+    }
+
+    fn best_response_with(
+        &self,
+        i: usize,
+        x: &[f64],
+        aux: &[f64],
+        scratch: &[f64],
+        tau: f64,
+        out: &mut [f64],
+    ) -> f64 {
+        self.0.best_response_with(i, x, aux, scratch, tau, out)
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        self.0.apply_block_delta(i, delta, aux)
+    }
+}
+
+/// A built [`Problem`] plus the derived per-problem state that is pure
+/// function of the instance: the per-block curvature bounds `L_I`
+/// (computed eagerly, once), the scalar constants (`τ` seeds, Lipschitz,
+/// `V*`), and a memo of column-shard views. Implements [`Problem`] by
+/// delegation so cached solves run the identical engine path — same
+/// inner loops, bitwise-identical iterates — while repeat requests skip
+/// the derivations.
+pub struct CachedProblem {
+    inner: Box<dyn Problem>,
+    lips: Vec<f64>,
+    lipschitz: f64,
+    tau_init: f64,
+    tau_min: f64,
+    v_star: Option<f64>,
+    supports_shard: bool,
+    shards: Mutex<HashMap<(usize, usize), Arc<dyn ProblemShard>>>,
+}
+
+impl CachedProblem {
+    /// Wrap a built problem, eagerly deriving the block-`L_I` vector and
+    /// the scalar constants.
+    pub fn new(inner: Box<dyn Problem>) -> Self {
+        let nb = inner.blocks().n_blocks();
+        let lips = (0..nb).map(|i| inner.block_lipschitz(i)).collect();
+        let lipschitz = inner.lipschitz();
+        let tau_init = inner.tau_init();
+        let tau_min = inner.tau_min();
+        let v_star = inner.v_star();
+        let supports_shard = inner.supports_column_shard();
+        Self {
+            inner,
+            lips,
+            lipschitz,
+            tau_init,
+            tau_min,
+            v_star,
+            supports_shard,
+            shards: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl Problem for CachedProblem {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn aux_len(&self) -> usize {
+        self.inner.aux_len()
+    }
+
+    fn blocks(&self) -> &BlockPartition {
+        self.inner.blocks()
+    }
+
+    fn init_aux(&self, x: &[f64], aux: &mut [f64]) {
+        self.inner.init_aux(x, aux)
+    }
+
+    fn f_val(&self, x: &[f64], aux: &[f64]) -> f64 {
+        self.inner.f_val(x, aux)
+    }
+
+    fn g_val(&self, x: &[f64]) -> f64 {
+        self.inner.g_val(x)
+    }
+
+    fn v_val(&self, x: &[f64], aux: &[f64]) -> f64 {
+        self.inner.v_val(x, aux)
+    }
+
+    fn block_grad(&self, i: usize, x: &[f64], aux: &[f64], out: &mut [f64]) {
+        self.inner.block_grad(i, x, aux, out)
+    }
+
+    fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
+        self.inner.best_response(i, x, aux, tau, out)
+    }
+
+    fn prelude_len(&self) -> usize {
+        self.inner.prelude_len()
+    }
+
+    fn prelude(&self, x: &[f64], aux: &[f64], scratch: &mut [f64]) {
+        self.inner.prelude(x, aux, scratch)
+    }
+
+    fn best_response_with(
+        &self,
+        i: usize,
+        x: &[f64],
+        aux: &[f64],
+        scratch: &[f64],
+        tau: f64,
+        out: &mut [f64],
+    ) -> f64 {
+        self.inner.best_response_with(i, x, aux, scratch, tau, out)
+    }
+
+    fn flops_prelude(&self) -> f64 {
+        self.inner.flops_prelude()
+    }
+
+    fn flops_best_response_fresh(&self, i: usize) -> f64 {
+        self.inner.flops_best_response_fresh(i)
+    }
+
+    fn apply_block_delta(&self, i: usize, delta: &[f64], aux: &mut [f64]) {
+        self.inner.apply_block_delta(i, delta, aux)
+    }
+
+    fn apply_block_delta_rows(
+        &self,
+        i: usize,
+        delta: &[f64],
+        aux_rows: &mut [f64],
+        rows: Range<usize>,
+    ) {
+        self.inner.apply_block_delta_rows(i, delta, aux_rows, rows)
+    }
+
+    fn prelude_bands(&self) -> Option<(usize, usize)> {
+        self.inner.prelude_bands()
+    }
+
+    fn prelude_rows(
+        &self,
+        x: &[f64],
+        aux: &[f64],
+        rows: Range<usize>,
+        band_a: &mut [f64],
+        band_b: &mut [f64],
+    ) {
+        self.inner.prelude_rows(x, aux, rows, band_a, band_b)
+    }
+
+    fn f_val_rows(&self, x: &[f64], aux_rows: &[f64], rows: Range<usize>) -> f64 {
+        self.inner.f_val_rows(x, aux_rows, rows)
+    }
+
+    fn supports_chunked_obj(&self) -> bool {
+        self.inner.supports_chunked_obj()
+    }
+
+    fn grad_full(&self, x: &[f64], aux: &[f64], out: &mut [f64]) {
+        self.inner.grad_full(x, aux, out)
+    }
+
+    fn prox_full(&self, v: &[f64], step: f64, out: &mut [f64]) {
+        self.inner.prox_full(v, step, out)
+    }
+
+    fn merit(&self, x: &[f64], aux: &[f64]) -> f64 {
+        self.inner.merit(x, aux)
+    }
+
+    fn tau_init(&self) -> f64 {
+        self.tau_init
+    }
+
+    fn tau_min(&self) -> f64 {
+        self.tau_min
+    }
+
+    fn v_star(&self) -> Option<f64> {
+        self.v_star
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.lipschitz
+    }
+
+    fn block_lipschitz(&self, i: usize) -> f64 {
+        self.lips.get(i).copied().unwrap_or_else(|| self.inner.block_lipschitz(i))
+    }
+
+    fn column_shard(&self, blocks: Range<usize>) -> Option<Box<dyn ProblemShard>> {
+        let key = (blocks.start, blocks.end);
+        let mut shards = lock_unpoisoned(&self.shards);
+        if let Some(arc) = shards.get(&key) {
+            return Some(Box::new(ArcShard(arc.clone())));
+        }
+        let built: Arc<dyn ProblemShard> = Arc::from(self.inner.column_shard(blocks)?);
+        shards.insert(key, built.clone());
+        Some(Box::new(ArcShard(built)))
+    }
+
+    fn supports_column_shard(&self) -> bool {
+        self.supports_shard
+    }
+
+    fn flops_best_response(&self, i: usize) -> f64 {
+        self.inner.flops_best_response(i)
+    }
+
+    fn flops_aux_update(&self, i: usize) -> f64 {
+        self.inner.flops_aux_update(i)
+    }
+
+    fn flops_grad_full(&self) -> f64 {
+        self.inner.flops_grad_full()
+    }
+
+    fn flops_obj(&self) -> f64 {
+        self.inner.flops_obj()
+    }
+}
+
+/// All warm state of one serve daemon, with hit/miss counters per cache
+/// (exposed over the `stats` op and in every solve response, so the
+/// integration tests can assert reuse instead of guessing).
+pub struct StateCache {
+    problems: Mutex<HashMap<String, Arc<CachedProblem>>>,
+    pools: Mutex<HashMap<usize, Arc<Mutex<WorkerPool>>>>,
+    warm: Mutex<HashMap<String, Vec<f64>>>,
+    problem_hits: AtomicUsize,
+    problem_misses: AtomicUsize,
+    pool_hits: AtomicUsize,
+    pool_misses: AtomicUsize,
+    warm_hits: AtomicUsize,
+    warm_misses: AtomicUsize,
+}
+
+impl StateCache {
+    /// Fresh, empty cache.
+    pub fn new() -> Self {
+        Self {
+            problems: Mutex::new(HashMap::new()),
+            pools: Mutex::new(HashMap::new()),
+            warm: Mutex::new(HashMap::new()),
+            problem_hits: AtomicUsize::new(0),
+            problem_misses: AtomicUsize::new(0),
+            pool_hits: AtomicUsize::new(0),
+            pool_misses: AtomicUsize::new(0),
+            warm_hits: AtomicUsize::new(0),
+            warm_misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// The cached problem for this spec's fingerprint, building (and
+    /// deriving block-`L_I` etc.) on first use. Returns `(problem,
+    /// hit)`. The build runs under the map lock on purpose: concurrent
+    /// first requests for the same instance wait and share one build
+    /// instead of racing duplicate ones.
+    pub fn problem(&self, spec: &SolveSpec) -> (Arc<CachedProblem>, bool) {
+        let key = spec.fingerprint();
+        let mut map = lock_unpoisoned(&self.problems);
+        if let Some(p) = map.get(&key) {
+            self.problem_hits.fetch_add(1, Ordering::Relaxed);
+            return (p.clone(), true);
+        }
+        self.problem_misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(CachedProblem::new(build_problem(&spec.problem)));
+        map.insert(key, built.clone());
+        (built, false)
+    }
+
+    /// The shared pool for a thread count, spawning workers on first
+    /// use. Returns `(pool, hit)`. A [`WorkerPool`] serves one solve at
+    /// a time (single result slot), hence the `Mutex`: concurrent jobs
+    /// with equal `threads` serialize on it rather than over-subscribing
+    /// the machine with duplicate pools.
+    pub fn pool(&self, threads: usize) -> (Arc<Mutex<WorkerPool>>, bool) {
+        let mut map = lock_unpoisoned(&self.pools);
+        if let Some(p) = map.get(&threads) {
+            self.pool_hits.fetch_add(1, Ordering::Relaxed);
+            return (p.clone(), true);
+        }
+        self.pool_misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(Mutex::new(WorkerPool::new(threads)));
+        map.insert(threads, built.clone());
+        (built, false)
+    }
+
+    /// The stored warm-start iterate for `(tenant, fingerprint)`, if
+    /// any; counts a warm hit or miss.
+    pub fn warm_get(&self, tenant: &str, fingerprint: &str) -> Option<Vec<f64>> {
+        let map = lock_unpoisoned(&self.warm);
+        match map.get(&format!("{tenant}/{fingerprint}")) {
+            Some(x) => {
+                self.warm_hits.fetch_add(1, Ordering::Relaxed);
+                Some(x.clone())
+            }
+            None => {
+                self.warm_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a tenant's final iterate for future `warm_start` requests
+    /// on the same problem fingerprint.
+    pub fn warm_put(&self, tenant: &str, fingerprint: &str, x: Vec<f64>) {
+        let mut map = lock_unpoisoned(&self.warm);
+        map.insert(format!("{tenant}/{fingerprint}"), x);
+    }
+
+    /// Counters + entry counts as the `stats` response payload.
+    pub fn stats(&self) -> Json {
+        Json::obj(vec![
+            ("problems", Json::Num(lock_unpoisoned(&self.problems).len() as f64)),
+            ("pools", Json::Num(lock_unpoisoned(&self.pools).len() as f64)),
+            ("warm_entries", Json::Num(lock_unpoisoned(&self.warm).len() as f64)),
+            ("problem_hits", Json::Num(self.problem_hits.load(Ordering::Relaxed) as f64)),
+            ("problem_misses", Json::Num(self.problem_misses.load(Ordering::Relaxed) as f64)),
+            ("pool_hits", Json::Num(self.pool_hits.load(Ordering::Relaxed) as f64)),
+            ("pool_misses", Json::Num(self.pool_misses.load(Ordering::Relaxed) as f64)),
+            ("warm_hits", Json::Num(self.warm_hits.load(Ordering::Relaxed) as f64)),
+            ("warm_misses", Json::Num(self.warm_misses.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+impl Default for StateCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ProblemSpec;
+    use crate::coordinator::Backend;
+    use crate::spec::{execute_prepared, ExecOptions};
+
+    fn lasso_spec(seed: u64) -> SolveSpec {
+        SolveSpec::builder()
+            .problem(ProblemSpec::Lasso { m: 25, n: 35, sparsity: 0.1, c: 1.0, seed })
+            .solver("flexa")
+            .max_iters(20)
+            .tol(0.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn problem_cache_hits_on_equal_fingerprint_only() {
+        let cache = StateCache::new();
+        let (a, hit_a) = cache.problem(&lasso_spec(5));
+        assert!(!hit_a);
+        let (b, hit_b) = cache.problem(&lasso_spec(5));
+        assert!(hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        let (_, hit_c) = cache.problem(&lasso_spec(6));
+        assert!(!hit_c);
+    }
+
+    #[test]
+    fn pool_cache_keys_on_thread_count() {
+        let cache = StateCache::new();
+        let (p1, h1) = cache.pool(2);
+        let (p2, h2) = cache.pool(2);
+        let (_, h3) = cache.pool(3);
+        assert!(!h1 && h2 && !h3);
+        assert!(Arc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn warm_iterates_are_per_tenant_per_fingerprint() {
+        let cache = StateCache::new();
+        assert!(cache.warm_get("alice", "fp").is_none());
+        cache.warm_put("alice", "fp", vec![1.0, 2.0]);
+        assert_eq!(cache.warm_get("alice", "fp"), Some(vec![1.0, 2.0]));
+        assert!(cache.warm_get("bob", "fp").is_none());
+        assert!(cache.warm_get("alice", "fp2").is_none());
+        let stats = cache.stats();
+        assert_eq!(stats.get("warm_hits").and_then(Json::as_usize), Some(1));
+        assert_eq!(stats.get("warm_misses").and_then(Json::as_usize), Some(3));
+    }
+
+    #[test]
+    fn cached_problem_solves_bitwise_like_a_fresh_build() {
+        for backend in [Backend::Shared, Backend::Sharded] {
+            let mut spec = lasso_spec(9);
+            spec.backend = backend;
+            spec.cores = 2;
+            let fresh = build_problem(&spec.problem);
+            let direct =
+                execute_prepared(&spec, fresh.as_ref(), ExecOptions::default()).unwrap();
+            let cache = StateCache::new();
+            // solve twice through the cache: the second run exercises the
+            // memoized shards and must still match the fresh build exactly
+            let (cached, _) = cache.problem(&spec);
+            let first =
+                execute_prepared(&spec, cached.as_ref() as &dyn Problem, ExecOptions::default())
+                    .unwrap();
+            let (cached2, hit) = cache.problem(&spec);
+            assert!(hit);
+            let second =
+                execute_prepared(&spec, cached2.as_ref() as &dyn Problem, ExecOptions::default())
+                    .unwrap();
+            assert_eq!(direct.x, first.x, "{backend:?} cold cache diverged");
+            assert_eq!(direct.x, second.x, "{backend:?} warm cache diverged");
+            assert_eq!(direct.final_obj, second.final_obj);
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! `flexa serve` — a long-running solve daemon with warm state.
+//!
+//! Std-only (no crates.io deps, like everything else in this crate):
+//! newline-delimited JSON over [`std::net::TcpListener`], one handler
+//! thread per connection, jobs dispatched onto shared cached
+//! [`WorkerPool`](crate::parallel::WorkerPool)s. Across requests the
+//! daemon keeps built [`Problem`](crate::problems::Problem)s with their
+//! derived block-`L_I`, memoized column-shard views, worker pools, and
+//! per-tenant warm-start iterates — see [`cache`] for the exact keys and
+//! `docs/SERVING.md` for the protocol.
+//!
+//! Determinism contract: a served solve runs [`spec::execute_prepared`]
+//! on the cached state, which is the same engine path as a direct
+//! in-process solve — responses are **bitwise identical** to
+//! [`crate::engine::solve`] with the same spec and `x0`, warm cache or
+//! cold (pinned by `tests/integration_serve.rs`).
+//!
+//! Shutdown semantics: a `shutdown` request flips a flag; the accept
+//! loop stops taking new connections, every in-flight (fully received)
+//! request runs to completion and its response is written, then the
+//! daemon joins its handler threads and returns.
+
+pub mod cache;
+pub mod protocol;
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::ServerSettings;
+use crate::problems::Problem;
+use crate::simulator::CostModel;
+use crate::spec::{execute_prepared, ExecOptions};
+use crate::util::Json;
+
+pub use cache::{CachedProblem, StateCache};
+pub use protocol::{Op, Request};
+
+/// Shared state of a running daemon: the warm caches, the cost model
+/// pricing every job's simulated clock, and lifecycle counters.
+pub struct ServerState {
+    /// Warm problem/pool/iterate caches.
+    pub cache: StateCache,
+    /// Cost model applied to every solve job (injected at bind time so
+    /// tests and benches can pin the deterministic default).
+    pub model: CostModel,
+    /// Set by the `shutdown` op; the accept loop and idle handlers exit
+    /// once it is true.
+    pub shutdown: AtomicBool,
+    /// Completed solve jobs.
+    pub jobs_done: AtomicUsize,
+    /// Solve jobs rejected by validation/capability guards.
+    pub jobs_failed: AtomicUsize,
+}
+
+/// A bound (not yet running) serve daemon.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind on the configured host/port with a hardware-calibrated cost
+    /// model (what the CLI does). `port = 0` asks the OS for an
+    /// ephemeral port — read it back with [`Server::local_addr`].
+    pub fn bind(settings: &ServerSettings) -> io::Result<Server> {
+        Self::bind_with(settings, CostModel::calibrated())
+    }
+
+    /// Bind with an explicit cost model. Tests and the bench driver pass
+    /// `CostModel::default()` so served `sim_s` fields are reproducible
+    /// and bitwise-comparable against local solves.
+    pub fn bind_with(settings: &ServerSettings, model: CostModel) -> io::Result<Server> {
+        let listener = TcpListener::bind((settings.host.as_str(), settings.port))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            cache: StateCache::new(),
+            model,
+            shutdown: AtomicBool::new(false),
+            jobs_done: AtomicUsize::new(0),
+            jobs_failed: AtomicUsize::new(0),
+        });
+        Ok(Server { listener, addr, state })
+    }
+
+    /// The bound address (resolves `port = 0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Handle on the daemon state (counters, caches) — usable from the
+    /// spawning thread while [`Server::run`] owns the accept loop.
+    pub fn state(&self) -> Arc<ServerState> {
+        self.state.clone()
+    }
+
+    /// Accept-and-serve until a `shutdown` request arrives, then drain:
+    /// stop accepting, let in-flight requests finish, join every handler
+    /// thread, return.
+    pub fn run(self) -> io::Result<()> {
+        self.listener.set_nonblocking(true)?;
+        let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
+        while !self.state.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let state = self.state.clone();
+                    handles.push(thread::spawn(move || handle_connection(state, stream)));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+            // reap finished handlers so a long-lived daemon stays flat
+            handles.retain(|h| !h.is_finished());
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Per-connection loop: read lines, answer each with one response line.
+/// The read timeout keeps idle handlers responsive to shutdown; on a
+/// timeout any partially received line stays buffered and the next read
+/// resumes it.
+fn handle_connection(state: Arc<ServerState>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // clean EOF
+            Ok(_) => {
+                let keep_going = process_line(&state, &line, &mut writer);
+                if !line.ends_with('\n') {
+                    return; // EOF mid-line: answered what arrived, close
+                }
+                line.clear();
+                if !keep_going {
+                    return;
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    if line.is_empty() {
+                        return;
+                    }
+                    // half-received request during drain: allow a short
+                    // grace for the rest of the line, then give up
+                    let deadline = *drain_deadline
+                        .get_or_insert_with(|| Instant::now() + Duration::from_secs(5));
+                    if Instant::now() >= deadline {
+                        return;
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Decode one request line, run it, write one response line. Returns
+/// `false` when the connection should close (write failure).
+fn process_line(state: &ServerState, line: &str, writer: &mut TcpStream) -> bool {
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        return true;
+    }
+    let resp = match Request::parse(trimmed) {
+        Ok(req) => match req.op {
+            Op::Ping => protocol::response_base(&req.id, true).with("pong", Json::Bool(true)),
+            Op::Stats => protocol::response_base(&req.id, true)
+                .with("cache", state.cache.stats())
+                .with("jobs_done", Json::Num(state.jobs_done.load(Ordering::Relaxed) as f64))
+                .with(
+                    "jobs_failed",
+                    Json::Num(state.jobs_failed.load(Ordering::Relaxed) as f64),
+                ),
+            Op::Shutdown => {
+                state.shutdown.store(true, Ordering::SeqCst);
+                protocol::response_base(&req.id, true).with("stopping", Json::Bool(true))
+            }
+            Op::Solve => solve_job(state, &req),
+        },
+        Err(e) => protocol::error_response(&None, &e),
+    };
+    let mut text = resp.to_string_compact();
+    text.push('\n');
+    writer.write_all(text.as_bytes()).is_ok() && writer.flush().is_ok()
+}
+
+/// One solve job on the warm caches. Capability guards and validation
+/// errors come back as `"ok": false` responses; the daemon never dies on
+/// a bad request.
+fn solve_job(state: &ServerState, req: &Request) -> Json {
+    let spec = match &req.spec {
+        Some(s) => s,
+        None => return protocol::error_response(&req.id, "solve request needs a spec"),
+    };
+    let fingerprint = spec.fingerprint();
+    let (problem, problem_hit) = state.cache.problem(spec);
+    let (pool, pool_hit) = state.cache.pool(spec.threads);
+    let (warm, warm_label) = if req.warm_start {
+        match req.tenant.as_deref().and_then(|t| state.cache.warm_get(t, &fingerprint)) {
+            Some(x) => (Some(x), "hit"),
+            None => (None, "miss"),
+        }
+    } else {
+        (None, "off")
+    };
+    // a WorkerPool serves one solve at a time; jobs wanting the same
+    // width queue here instead of spawning duplicate pools
+    let guard = pool.lock().unwrap_or_else(|e| e.into_inner());
+    let result = execute_prepared(
+        spec,
+        problem.as_ref() as &dyn Problem,
+        ExecOptions { pool: Some(&guard), x0: warm.as_deref(), model: state.model },
+    );
+    drop(guard);
+    match result {
+        Ok(report) => {
+            if let Some(tenant) = &req.tenant {
+                state.cache.warm_put(tenant, &fingerprint, report.x.clone());
+            }
+            state.jobs_done.fetch_add(1, Ordering::Relaxed);
+            protocol::response_base(&req.id, true)
+                .with("report", report.to_json_with(req.return_x, req.return_trace))
+                .with(
+                    "cache",
+                    Json::obj(vec![
+                        ("problem", Json::str(if problem_hit { "hit" } else { "miss" })),
+                        ("pool", Json::str(if pool_hit { "hit" } else { "miss" })),
+                        ("warm_start", Json::str(warm_label)),
+                    ]),
+                )
+        }
+        Err(e) => {
+            state.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            protocol::error_response(&req.id, &e)
+        }
+    }
+}

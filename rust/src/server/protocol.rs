@@ -1,0 +1,150 @@
+//! The serve wire protocol: newline-delimited JSON, one request object
+//! per line, one response object per line, over a plain TCP stream.
+//!
+//! Request shape (full schema in `docs/SERVING.md`):
+//!
+//! ```json
+//! {"op": "solve", "id": 1, "spec": { …SolveSpec… },
+//!  "tenant": "alice", "warm_start": false,
+//!  "return_x": true, "return_trace": false}
+//! ```
+//!
+//! `op` defaults to `"solve"`; `ping`, `stats` and `shutdown` take no
+//! spec. Responses echo `id` verbatim and carry either `"ok": true` plus
+//! the op's payload, or `"ok": false` plus `"error"`.
+
+use crate::spec::SolveSpec;
+use crate::util::Json;
+
+/// The operation a request line asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Run a [`SolveSpec`] and return its report.
+    Solve,
+    /// Liveness probe; responds `{"ok": true, "pong": true}`.
+    Ping,
+    /// Dump the daemon's cache/job counters.
+    Stats,
+    /// Stop accepting connections, drain in-flight jobs, exit.
+    Shutdown,
+}
+
+impl Op {
+    fn parse(s: &str) -> Result<Op, String> {
+        match s {
+            "solve" => Ok(Op::Solve),
+            "ping" => Ok(Op::Ping),
+            "stats" => Ok(Op::Stats),
+            "shutdown" => Ok(Op::Shutdown),
+            other => Err(format!("unknown op {other:?} (expected solve|ping|stats|shutdown)")),
+        }
+    }
+}
+
+/// One decoded request line.
+#[derive(Debug)]
+pub struct Request {
+    /// Requested operation (default `solve`).
+    pub op: Op,
+    /// Client correlation id, echoed verbatim in the response.
+    pub id: Option<Json>,
+    /// The solve request body; required when `op` is [`Op::Solve`].
+    pub spec: Option<SolveSpec>,
+    /// Warm-start namespace: when set, the final iterate is stored under
+    /// `tenant/fingerprint` after the solve.
+    pub tenant: Option<String>,
+    /// Opt in to seeding `x0` from the tenant's stored iterate. Off by
+    /// default — a warm start changes the trajectory, so it is never
+    /// implicit.
+    pub warm_start: bool,
+    /// Include the solution vector `x` in the response (off by default;
+    /// `x` dominates response size for big instances).
+    pub return_x: bool,
+    /// Include the convergence trace in the response (off by default).
+    pub return_trace: bool,
+}
+
+impl Request {
+    /// Decode one request line. The spec body goes through
+    /// [`SolveSpec::from_json`], i.e. the same construction-time
+    /// validation as every other frontend.
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let j = Json::parse(line)?;
+        let op = match j.get("op").and_then(Json::as_str) {
+            Some(s) => Op::parse(s)?,
+            None => Op::Solve,
+        };
+        let spec = match j.get("spec") {
+            Some(s) => Some(SolveSpec::from_json(s).map_err(|e| format!("bad spec: {e}"))?),
+            None => None,
+        };
+        if op == Op::Solve && spec.is_none() {
+            return Err("solve request needs a \"spec\" object".into());
+        }
+        let flag = |k: &str| j.get(k).and_then(Json::as_bool).unwrap_or(false);
+        Ok(Request {
+            op,
+            id: j.get("id").cloned(),
+            spec,
+            tenant: j.get("tenant").and_then(Json::as_str).map(str::to_string),
+            warm_start: flag("warm_start"),
+            return_x: flag("return_x"),
+            return_trace: flag("return_trace"),
+        })
+    }
+}
+
+/// Start a response object echoing the request id.
+pub fn response_base(id: &Option<Json>, ok: bool) -> Json {
+    Json::obj(vec![
+        ("id", id.clone().unwrap_or(Json::Null)),
+        ("ok", Json::Bool(ok)),
+    ])
+}
+
+/// An `"ok": false` response carrying the error message.
+pub fn error_response(id: &Option<Json>, msg: &str) -> Json {
+    response_base(id, false).with("error", Json::str(msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_ops_parse() {
+        let r = Request::parse(r#"{"op":"ping","id":7}"#).unwrap();
+        assert_eq!(r.op, Op::Ping);
+        assert_eq!(r.id, Some(Json::Num(7.0)));
+        assert!(!r.warm_start && !r.return_x && !r.return_trace);
+        for (op, want) in [("stats", Op::Stats), ("shutdown", Op::Shutdown)] {
+            assert_eq!(Request::parse(&format!("{{\"op\":\"{op}\"}}")).unwrap().op, want);
+        }
+    }
+
+    #[test]
+    fn solve_without_spec_is_rejected() {
+        let err = Request::parse(r#"{"op":"solve"}"#).unwrap_err();
+        assert!(err.contains("spec"), "{err}");
+        // op defaults to solve
+        let err = Request::parse(r#"{"id":1}"#).unwrap_err();
+        assert!(err.contains("spec"), "{err}");
+    }
+
+    #[test]
+    fn solve_spec_body_is_validated() {
+        let err = Request::parse(
+            r#"{"spec":{"problem":{"kind":"lasso","m":10,"n":10},"solver":"nope"}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown solver"), "{err}");
+    }
+
+    #[test]
+    fn error_response_echoes_id() {
+        let j = error_response(&Some(Json::str("req-3")), "boom");
+        assert_eq!(j.get("id").and_then(Json::as_str), Some("req-3"));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("boom"));
+    }
+}

@@ -1,0 +1,685 @@
+//! `SolveSpec` — the one serializable request type every frontend lowers
+//! onto.
+//!
+//! Before this module, running a solve meant threading four separate
+//! option surfaces (`CommonOptions`, config `SolverSettings`, a
+//! `SelectionSpec`, plus backend/problem knobs) through three divergent
+//! frontends (CLI flags, TOML configs, library calls). A `SolveSpec`
+//! folds them into one plain-data value — problem + solver + selection +
+//! backend + budgets — that is:
+//!
+//! * **builder-constructed and validated at construction** (the PR-5
+//!   `SelectionSpec::validate` pattern): an invalid spec is unrepresentable
+//!   past [`SolveSpecBuilder::build`], which probes the same
+//!   `SolverSpec::from_name` path the engine dispatches through;
+//! * **serializable**: [`SolveSpec::to_json`] / [`SolveSpec::from_json`]
+//!   are exact inverses, so the `flexa serve` wire format, the TOML
+//!   surface and the CLI flags all round-trip through the same value;
+//! * **executable**: [`execute`] / [`execute_prepared`] run it through
+//!   [`engine::solve_on`], applying the same capability guards
+//!   (sharded column views, ADMM residual form) on every surface.
+//!
+//! ```
+//! use flexa::config::ProblemSpec;
+//! use flexa::spec::SolveSpec;
+//!
+//! let spec = SolveSpec::builder()
+//!     .problem(ProblemSpec::Lasso { m: 40, n: 60, sparsity: 0.1, c: 1.0, seed: 7 })
+//!     .solver("flexa")
+//!     .max_iters(25)
+//!     .build()
+//!     .unwrap();
+//! let round_trip = SolveSpec::from_json(&spec.to_json()).unwrap();
+//! assert_eq!(round_trip, spec);
+//! ```
+
+use crate::config::{ExperimentConfig, ProblemSpec};
+use crate::coordinator::{Backend, CommonOptions, SelectionSpec, SolveReport, TermMetric};
+use crate::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
+use crate::engine::{self, SolverSpec};
+use crate::parallel::WorkerPool;
+use crate::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, Problem};
+use crate::simulator::CostModel;
+use crate::util::Json;
+
+/// Iteration/time/tolerance budgets of one solve request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Budgets {
+    /// Iteration budget.
+    pub max_iters: usize,
+    /// Physical wall-clock budget [s].
+    pub max_wall_s: f64,
+    /// Termination tolerance (relative error when `V*` is known, else
+    /// the stationarity merit).
+    pub tol: f64,
+    /// Trace cadence (iterations between recorded points).
+    pub trace_every: usize,
+}
+
+impl Default for Budgets {
+    fn default() -> Self {
+        Self { max_iters: 1000, max_wall_s: 60.0, tol: 1e-6, trace_every: 1 }
+    }
+}
+
+impl Budgets {
+    fn validate(&self) -> Result<(), String> {
+        if self.max_iters == 0 {
+            return Err("budgets.max_iters must be ≥ 1".into());
+        }
+        if self.trace_every == 0 {
+            return Err("budgets.trace_every must be ≥ 1".into());
+        }
+        if !(self.max_wall_s > 0.0) {
+            return Err(format!("budgets.max_wall_s must be > 0, got {}", self.max_wall_s));
+        }
+        if !(self.tol >= 0.0 && self.tol.is_finite()) {
+            return Err(format!("budgets.tol must be finite and ≥ 0, got {}", self.tol));
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_iters", Json::Num(self.max_iters as f64)),
+            ("max_wall_s", Json::Num(self.max_wall_s)),
+            ("tol", Json::Num(self.tol)),
+            ("trace_every", Json::Num(self.trace_every as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Self {
+        let d = Self::default();
+        Self {
+            max_iters: j.get("max_iters").and_then(Json::as_usize).unwrap_or(d.max_iters),
+            max_wall_s: j.get("max_wall_s").and_then(Json::as_f64).unwrap_or(d.max_wall_s),
+            tol: j.get("tol").and_then(Json::as_f64).unwrap_or(d.tol),
+            trace_every: j.get("trace_every").and_then(Json::as_usize).unwrap_or(d.trace_every),
+        }
+    }
+}
+
+/// One validated solve request: problem + solver + selection + backend +
+/// budgets. Construct through [`SolveSpec::builder`] (or decode with
+/// [`SolveSpec::from_json`], which funnels through the same builder) —
+/// both validate at construction, so holding a `SolveSpec` means it will
+/// lower onto a runnable engine [`SolverSpec`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolveSpec {
+    /// Run label (trace legend, logs, response `name` field). Defaults
+    /// to the solver name, suffixed `+<selection>` when a selection
+    /// strategy is set — the same naming every frontend used before.
+    pub name: String,
+    /// Problem family and instance shape.
+    pub problem: ProblemSpec,
+    /// Solver name (one of [`SolverSpec::NAMES`]).
+    pub solver: String,
+    /// Greedy selection threshold σ ∈ [0, 1] used when no explicit
+    /// `selection` strategy is set (the paper's σ-rule).
+    pub sigma: f64,
+    /// Simulated processor count P (cost-model time axis; also the
+    /// column-shard count of the sharded backend).
+    pub cores: usize,
+    /// Physical worker threads of the per-solve pool.
+    pub threads: usize,
+    /// Engine data plane (`shared` | `sharded`).
+    pub backend: Backend,
+    /// Explicit block-selection strategy; `None` = the solver's default
+    /// (greedy σ-rule for the coordinator families).
+    pub selection: Option<SelectionSpec>,
+    /// Iteration/time/tolerance budgets.
+    pub budgets: Budgets,
+}
+
+/// Chainable constructor for [`SolveSpec`];
+/// [`SolveSpecBuilder::build`] validates everything at once.
+#[derive(Clone, Debug, Default)]
+pub struct SolveSpecBuilder {
+    name: Option<String>,
+    problem: Option<ProblemSpec>,
+    solver: Option<String>,
+    sigma: Option<f64>,
+    cores: Option<usize>,
+    threads: Option<usize>,
+    backend: Option<Backend>,
+    selection: Option<SelectionSpec>,
+    budgets: Budgets,
+}
+
+impl SolveSpecBuilder {
+    /// Override the run label (defaults to `solver[+selection]`).
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = Some(name.into());
+        self
+    }
+
+    /// Set the problem family and instance shape (required).
+    pub fn problem(mut self, problem: ProblemSpec) -> Self {
+        self.problem = Some(problem);
+        self
+    }
+
+    /// Set the solver name (default `"flexa"`).
+    pub fn solver(mut self, solver: impl Into<String>) -> Self {
+        self.solver = Some(solver.into());
+        self
+    }
+
+    /// Set the greedy threshold σ (default 0.5).
+    pub fn sigma(mut self, sigma: f64) -> Self {
+        self.sigma = Some(sigma);
+        self
+    }
+
+    /// Set the simulated processor count P (default 1).
+    pub fn cores(mut self, cores: usize) -> Self {
+        self.cores = Some(cores);
+        self
+    }
+
+    /// Set the physical worker-thread count (default 1).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Set the engine data plane (default [`Backend::Shared`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Set an explicit block-selection strategy.
+    pub fn selection(mut self, selection: SelectionSpec) -> Self {
+        self.selection = Some(selection);
+        self
+    }
+
+    /// Replace all budgets at once.
+    pub fn budgets(mut self, budgets: Budgets) -> Self {
+        self.budgets = budgets;
+        self
+    }
+
+    /// Set the iteration budget.
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.budgets.max_iters = max_iters;
+        self
+    }
+
+    /// Set the wall-clock budget [s].
+    pub fn max_wall_s(mut self, max_wall_s: f64) -> Self {
+        self.budgets.max_wall_s = max_wall_s;
+        self
+    }
+
+    /// Set the termination tolerance.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.budgets.tol = tol;
+        self
+    }
+
+    /// Set the trace cadence.
+    pub fn trace_every(mut self, trace_every: usize) -> Self {
+        self.budgets.trace_every = trace_every;
+        self
+    }
+
+    /// Validate and construct the [`SolveSpec`]. Checks the problem
+    /// knobs ([`ProblemSpec::validate`]), the solver name, thread/core
+    /// counts and budgets, then probes the engine's own
+    /// `SolverSpec::from_name` constructor — selection-knob and
+    /// backend-capability misconfigurations (e.g. `sharded` on a
+    /// full-vector solver) fail here, never mid-solve.
+    pub fn build(self) -> Result<SolveSpec, String> {
+        let problem = self.problem.ok_or("SolveSpec needs a problem")?;
+        problem.validate().map_err(|e| format!("problem.{e}"))?;
+        let solver = self.solver.unwrap_or_else(|| "flexa".into());
+        if !SolverSpec::NAMES.contains(&solver.as_str()) {
+            return Err(format!(
+                "unknown solver {solver:?} (expected one of {})",
+                SolverSpec::NAMES.join("|")
+            ));
+        }
+        let threads = self.threads.unwrap_or(1);
+        let cores = self.cores.unwrap_or(1);
+        if threads == 0 {
+            return Err("threads must be ≥ 1".into());
+        }
+        if cores == 0 {
+            return Err("cores must be ≥ 1".into());
+        }
+        self.budgets.validate()?;
+        let name = match (&self.name, &self.selection) {
+            (Some(n), _) => n.clone(),
+            (None, Some(sel)) => format!("{}+{}", solver, sel.name()),
+            (None, None) => solver.clone(),
+        };
+        let spec = SolveSpec {
+            name,
+            problem,
+            solver,
+            sigma: self.sigma.unwrap_or(0.5),
+            cores,
+            threads,
+            backend: self.backend.unwrap_or_default(),
+            selection: self.selection,
+            budgets: self.budgets,
+        };
+        // construction-time probe through the engine's one validated
+        // constructor (sigma range, selection knobs, sharded×full-vector)
+        spec.lower(TermMetric::Merit, CostModel::default())?;
+        Ok(spec)
+    }
+}
+
+impl SolveSpec {
+    /// Start building a spec.
+    pub fn builder() -> SolveSpecBuilder {
+        SolveSpecBuilder::default()
+    }
+
+    /// Lower onto the engine's [`SolverSpec`] with the given termination
+    /// metric and cost model. The lowering is total for a built spec
+    /// except for the from_name probe re-run (a built spec cannot fail
+    /// it again; [`SolveSpec::from_json`] relies on this being checked).
+    pub fn lower(&self, term: TermMetric, model: CostModel) -> Result<SolverSpec, String> {
+        let common = CommonOptions {
+            max_iters: self.budgets.max_iters,
+            max_wall_s: self.budgets.max_wall_s,
+            tol: self.budgets.tol,
+            term,
+            cores: self.cores,
+            threads: self.threads,
+            trace_every: self.budgets.trace_every,
+            cost_model: model,
+            backend: self.backend,
+            name: self.name.clone(),
+            ..Default::default()
+        };
+        SolverSpec::from_name(&self.solver, common, self.selection.clone(), self.sigma, self.cores)
+    }
+
+    /// The one wire encoding of a solve request — shared by `flexa
+    /// serve` request bodies, the round-trip tests and the bench serve
+    /// workload driver. [`SolveSpec::from_json`] inverts it exactly.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("problem", self.problem.to_json()),
+            ("solver", Json::str(self.solver.clone())),
+            ("sigma", Json::Num(self.sigma)),
+            ("cores", Json::Num(self.cores as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("backend", Json::str(self.backend.name())),
+            ("budgets", self.budgets.to_json()),
+        ]);
+        if let Some(sel) = &self.selection {
+            j = j.with("selection", sel.to_json());
+        }
+        j
+    }
+
+    /// Decode the [`SolveSpec::to_json`] wire form through the builder,
+    /// so JSON requests get the exact same construction-time validation
+    /// as every other frontend.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let problem = ProblemSpec::from_json(
+            j.get("problem").ok_or("SolveSpec JSON needs a \"problem\" object")?,
+        )?;
+        let mut b = Self::builder().problem(problem);
+        if let Some(name) = j.get("name").and_then(Json::as_str) {
+            b = b.name(name);
+        }
+        if let Some(solver) = j.get("solver").and_then(Json::as_str) {
+            b = b.solver(solver);
+        }
+        if let Some(sigma) = j.get("sigma").and_then(Json::as_f64) {
+            b = b.sigma(sigma);
+        }
+        if let Some(cores) = j.get("cores").and_then(Json::as_usize) {
+            b = b.cores(cores);
+        }
+        if let Some(threads) = j.get("threads").and_then(Json::as_usize) {
+            b = b.threads(threads);
+        }
+        if let Some(backend) = j.get("backend").and_then(Json::as_str) {
+            b = b.backend(Backend::parse(backend)?);
+        }
+        if let Some(sel) = j.get("selection") {
+            b = b.selection(SelectionSpec::from_json(sel)?);
+        }
+        if let Some(budgets) = j.get("budgets") {
+            b = b.budgets(Budgets::from_json(budgets));
+        }
+        b.build()
+    }
+
+    /// Deterministic cache key of the *problem instance* this spec
+    /// solves: the compact problem JSON (sorted keys). Specs differing
+    /// only in solver/selection/budgets share a fingerprint — exactly
+    /// the state (`Problem`, block-`L_I`, shard views, warm iterates)
+    /// the serve daemon can reuse across them.
+    pub fn fingerprint(&self) -> String {
+        self.problem.to_json().to_string_compact()
+    }
+}
+
+/// Instantiate a problem from its spec (every frontend's build path).
+pub fn build_problem(spec: &ProblemSpec) -> Box<dyn Problem> {
+    match spec {
+        ProblemSpec::Lasso { m, n, sparsity, c, seed } => Box::new(LassoProblem::from_instance(
+            nesterov_lasso(*m, *n, *sparsity, *c, *seed),
+        )),
+        ProblemSpec::GroupLasso { m, n, sparsity, c, block_size, seed } => {
+            Box::new(crate::problems::GroupLassoProblem::from_instance(
+                nesterov_lasso(*m, *n, *sparsity, *c, *seed),
+                *block_size,
+            ))
+        }
+        ProblemSpec::Logistic { preset, scale, seed } => {
+            let p = LogisticPreset::from_name(preset).unwrap_or(LogisticPreset::Gisette);
+            Box::new(LogisticProblem::from_instance(logistic_like(p, *scale, *seed)))
+        }
+        ProblemSpec::Svm { preset, scale, c, seed } => {
+            let p = LogisticPreset::from_name(preset).unwrap_or(LogisticPreset::Gisette);
+            let inst = logistic_like(p, *scale, *seed);
+            // default: the preset's sample-scaled ℓ1 weight (like
+            // logistic), floored so tiny scaled instances stay
+            // well-posed; an explicit problem.c overrides it UNCLAMPED
+            // (config parse already rejects c ≤ 0)
+            let c = c.unwrap_or_else(|| inst.c.max(1e-3));
+            Box::new(crate::problems::SvmProblem::new(inst.y, &inst.labels, c))
+        }
+        ProblemSpec::NonconvexQp { m, n, sparsity, c, cbar, box_bound, seed } => {
+            Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
+                *m, *n, *sparsity, *c, *cbar, *box_bound, *seed,
+            )))
+        }
+        ProblemSpec::Dictionary { m, atoms, samples, code_sparsity, noise, c, seed } => {
+            let mut inst = crate::datagen::dictionary_instance(
+                *m,
+                *atoms,
+                *samples,
+                *code_sparsity,
+                *noise,
+                *seed,
+            );
+            if let Some(c) = c {
+                inst.c = *c;
+            }
+            Box::new(crate::problems::DictionaryCodesProblem::from_instance(&inst))
+        }
+    }
+}
+
+/// Execution knobs [`execute_prepared`] takes alongside the spec: an
+/// optional shared pool, an optional warm-start iterate, and the cost
+/// model pricing the simulated clock.
+#[derive(Clone, Copy, Default)]
+pub struct ExecOptions<'a> {
+    /// Worker pool to run on; `None` builds a per-solve pool from
+    /// `spec.threads`. Iterates are bitwise-identical either way.
+    pub pool: Option<&'a WorkerPool>,
+    /// Starting iterate; `None` = zeros (must have length `problem.n()`).
+    /// A warm start changes the trajectory — callers wanting
+    /// bitwise-reproducible runs must pass the same `x0`.
+    pub x0: Option<&'a [f64]>,
+    /// Cost model for the simulated clock (`Default` is the fixed
+    /// deterministic model; pass `CostModel::calibrated()` for measured
+    /// hardware rates — calibration times real matvecs, so `sim_s`
+    /// fields then differ run to run).
+    pub model: CostModel,
+}
+
+/// Run a spec against an already-built problem (the serve daemon's hot
+/// path — the problem comes from its cache). Applies the same capability
+/// guards as the CLI: the sharded backend needs column-shard views and
+/// `admm` needs a residual-form objective, both probed on the problem,
+/// never on kind lists. The x iterates depend only on (spec, x0) — not
+/// on the pool width or the cost model — so equal requests get
+/// bitwise-equal answers on every surface.
+pub fn execute_prepared(
+    spec: &SolveSpec,
+    problem: &dyn Problem,
+    opts: ExecOptions<'_>,
+) -> Result<SolveReport, String> {
+    if spec.backend == Backend::Sharded && !problem.supports_column_shard() {
+        return Err(
+            "backend \"sharded\" needs an owner-computes column-shard view \
+             (Problem::column_shard), which this problem does not provide"
+                .into(),
+        );
+    }
+    if spec.solver == "admm" && !crate::problems::is_residual_form(problem) {
+        return Err(
+            "solver \"admm\" requires a residual-form problem (F = ‖Ax − b‖²); \
+             this problem's smooth part is not the plain residual sum of squares"
+                .into(),
+        );
+    }
+    let term = if problem.v_star().is_some() { TermMetric::RelErr } else { TermMetric::Merit };
+    let sspec = spec.lower(term, opts.model)?;
+    let zeros;
+    let x0 = match opts.x0 {
+        Some(x) => {
+            if x.len() != problem.n() {
+                return Err(format!(
+                    "x0 length {} does not match problem dimension {}",
+                    x.len(),
+                    problem.n()
+                ));
+            }
+            x
+        }
+        None => {
+            zeros = vec![0.0; problem.n()];
+            &zeros
+        }
+    };
+    Ok(engine::solve_on(problem, x0, &sspec, opts.pool))
+}
+
+/// Build the problem and run the spec (one-shot convenience; the serve
+/// daemon uses [`execute_prepared`] against its cache instead).
+pub fn execute(spec: &SolveSpec) -> Result<SolveReport, String> {
+    let problem = build_problem(&spec.problem);
+    execute_prepared(spec, problem.as_ref(), ExecOptions::default())
+}
+
+/// Per-invocation overrides a frontend may apply on top of a parsed
+/// experiment config (the CLI's `--threads`/`--backend`/`--selection`
+/// flags). `None` everywhere = use the config as written.
+#[derive(Clone, Debug, Default)]
+pub struct FrontendOverrides {
+    /// Override the worker-thread count of every solver.
+    pub threads: Option<usize>,
+    /// Override the data-plane backend of every solver.
+    pub backend: Option<Backend>,
+    /// Override the block-selection strategy of every solver.
+    pub selection: Option<SelectionSpec>,
+}
+
+/// Lower an experiment config (one problem × many solvers) onto one
+/// validated [`SolveSpec`] per solver — the single translation the CLI
+/// and the round-trip tests share, so flags and TOML cannot diverge.
+pub fn specs_from_experiment(
+    cfg: &ExperimentConfig,
+    ov: &FrontendOverrides,
+) -> Result<Vec<SolveSpec>, String> {
+    let sel_cfg = match &cfg.selection {
+        Some(s) => Some(
+            SelectionSpec::from_parts(&s.strategy, s.frac, s.sigma, s.k, s.seed)
+                .map_err(|e| format!("[selection] table: {e}"))?,
+        ),
+        None => None,
+    };
+    let mut specs = Vec::new();
+    for settings in &cfg.solvers {
+        let backend = match ov.backend {
+            Some(b) => b,
+            None => Backend::parse(&settings.backend)?,
+        };
+        let mut b = SolveSpec::builder()
+            .problem(cfg.problem.clone())
+            .solver(&settings.name)
+            .sigma(settings.sigma)
+            .cores(settings.cores)
+            .threads(ov.threads.unwrap_or(settings.threads))
+            .backend(backend)
+            .budgets(Budgets {
+                max_iters: cfg.max_iters,
+                max_wall_s: cfg.max_wall_s,
+                tol: cfg.tol,
+                trace_every: cfg.trace_every,
+            });
+        if let Some(sel) = ov.selection.clone().or_else(|| sel_cfg.clone()) {
+            b = b.selection(sel);
+        }
+        specs.push(b.build()?);
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_lasso() -> ProblemSpec {
+        ProblemSpec::Lasso { m: 30, n: 40, sparsity: 0.1, c: 1.0, seed: 3 }
+    }
+
+    #[test]
+    fn builder_requires_problem() {
+        let err = SolveSpec::builder().solver("flexa").build().unwrap_err();
+        assert!(err.contains("problem"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_unknown_solver_and_bad_knobs() {
+        let base = || SolveSpec::builder().problem(tiny_lasso());
+        assert!(base().solver("frobnicate").build().unwrap_err().contains("unknown solver"));
+        assert!(base().threads(0).build().unwrap_err().contains("threads"));
+        assert!(base().cores(0).build().unwrap_err().contains("cores"));
+        assert!(base().max_iters(0).build().unwrap_err().contains("max_iters"));
+        assert!(base().sigma(1.5).build().unwrap_err().contains("sigma"));
+        assert!(base()
+            .problem(ProblemSpec::Lasso { m: 30, n: 40, sparsity: 0.1, c: -1.0, seed: 3 })
+            .build()
+            .unwrap_err()
+            .contains("problem.c"));
+    }
+
+    #[test]
+    fn sharded_full_vector_combination_fails_at_build() {
+        let err = SolveSpec::builder()
+            .problem(tiny_lasso())
+            .solver("fista")
+            .backend(Backend::Sharded)
+            .build()
+            .unwrap_err();
+        assert!(err.contains("sharded"), "{err}");
+    }
+
+    #[test]
+    fn name_defaults_to_solver_plus_selection() {
+        let spec = SolveSpec::builder().problem(tiny_lasso()).solver("flexa").build().unwrap();
+        assert_eq!(spec.name, "flexa");
+        let spec = SolveSpec::builder()
+            .problem(tiny_lasso())
+            .solver("flexa")
+            .selection(SelectionSpec::hybrid(0.25))
+            .build()
+            .unwrap();
+        assert_eq!(spec.name, format!("flexa+{}", SelectionSpec::hybrid(0.25).name()));
+    }
+
+    #[test]
+    fn json_roundtrips_exactly() {
+        let spec = SolveSpec::builder()
+            .problem(tiny_lasso())
+            .solver("gj-flexa")
+            .sigma(0.3)
+            .cores(4)
+            .threads(2)
+            .backend(Backend::Sharded)
+            .selection(SelectionSpec::hybrid(0.25))
+            .max_iters(77)
+            .tol(1e-5)
+            .build()
+            .unwrap();
+        let text = spec.to_json().to_string_compact();
+        let back = SolveSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string_compact(), text, "re-encode drifted");
+    }
+
+    #[test]
+    fn from_json_validates_like_the_builder() {
+        let j = Json::parse(
+            r#"{"problem":{"kind":"lasso","m":30,"n":40},"solver":"flexa",
+                "selection":{"strategy":"random","frac":1.5}}"#,
+        )
+        .unwrap();
+        let err = SolveSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("frac"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_keys_on_the_problem_only() {
+        let a = SolveSpec::builder().problem(tiny_lasso()).solver("flexa").build().unwrap();
+        let b = SolveSpec::builder()
+            .problem(tiny_lasso())
+            .solver("cdm")
+            .threads(4)
+            .build()
+            .unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = SolveSpec::builder()
+            .problem(ProblemSpec::Lasso { m: 31, n: 40, sparsity: 0.1, c: 1.0, seed: 3 })
+            .build()
+            .unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn execute_matches_engine_solve_bitwise() {
+        let spec = SolveSpec::builder()
+            .problem(tiny_lasso())
+            .solver("flexa")
+            .max_iters(30)
+            .tol(0.0)
+            .build()
+            .unwrap();
+        let report = execute(&spec).unwrap();
+        let problem = build_problem(&spec.problem);
+        let term =
+            if problem.v_star().is_some() { TermMetric::RelErr } else { TermMetric::Merit };
+        let sspec = spec.lower(term, CostModel::default()).unwrap();
+        let direct = engine::solve(problem.as_ref(), &vec![0.0; problem.n()], &sspec);
+        assert_eq!(report.x, direct.x);
+        assert_eq!(report.final_obj, direct.final_obj);
+        assert_eq!(report.iters, direct.iters);
+    }
+
+    #[test]
+    fn specs_from_experiment_applies_overrides() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa, cdm\"\n[problem]\nkind = \"lasso\"\nm = 30\nn = 40\n",
+        )
+        .unwrap();
+        let specs = specs_from_experiment(&cfg, &FrontendOverrides::default()).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "flexa");
+        assert_eq!(specs[0].threads, 1);
+        let ov = FrontendOverrides {
+            threads: Some(3),
+            backend: Some(Backend::Sharded),
+            selection: Some(SelectionSpec::hybrid(0.25)),
+        };
+        let specs = specs_from_experiment(&cfg, &ov).unwrap();
+        assert_eq!(specs[0].threads, 3);
+        assert_eq!(specs[0].backend, Backend::Sharded);
+        assert_eq!(specs[0].name, format!("flexa+{}", SelectionSpec::hybrid(0.25).name()));
+    }
+}

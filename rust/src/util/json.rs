@@ -47,6 +47,29 @@ impl Json {
         Json::Str(s.into())
     }
 
+    /// Numeric value, or `null` when `x` is not finite. JSON has no
+    /// NaN/Inf literals, so every field that can legally be non-finite
+    /// (e.g. `rel_err` without a known `V*`) must encode through this.
+    pub fn num_or_null(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Insert (or replace) a key on an object, chaining. Panics when
+    /// `self` is not an object — builder sugar for row construction.
+    pub fn with(mut self, key: &str, val: Json) -> Json {
+        match &mut self {
+            Json::Obj(map) => {
+                map.insert(key.to_string(), val);
+            }
+            other => panic!("Json::with on non-object {other:?}"),
+        }
+        self
+    }
+
     /// Numeric value, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
@@ -58,6 +81,14 @@ impl Json {
     /// Non-negative integer value, if representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
+    }
+
+    /// Boolean value, if this is a [`Json::Bool`].
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     /// String value, if this is a [`Json::Str`].
@@ -393,5 +424,33 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::parse(r#""été""#).unwrap();
         assert_eq!(j.as_str(), Some("été"));
+    }
+
+    #[test]
+    fn num_or_null_guards_nonfinite() {
+        assert_eq!(Json::num_or_null(1.5), Json::Num(1.5));
+        assert_eq!(Json::num_or_null(f64::NAN), Json::Null);
+        assert_eq!(Json::num_or_null(f64::INFINITY), Json::Null);
+        // the document containing it stays parseable
+        let j = Json::obj(vec![("re", Json::num_or_null(f64::NAN))]);
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
+    }
+
+    #[test]
+    fn with_chains_on_objects() {
+        let j = Json::obj(vec![("a", Json::Num(1.0))])
+            .with("b", Json::Num(2.0))
+            .with("a", Json::Num(3.0));
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("b").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn f64_roundtrips_bitwise_through_text() {
+        for x in [0.1 + 0.2, 1.0 / 3.0, 6.02e23, -1.7976931348623157e308, 1e-310] {
+            let s = Json::Num(x).to_string_compact();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} → {s}");
+        }
     }
 }

@@ -1,0 +1,286 @@
+//! End-to-end tests of the `flexa serve` daemon: concurrent solve jobs
+//! across problem families and both backends come back **bitwise
+//! identical** to a direct in-process `engine` solve; warm-cache repeats
+//! reuse the cached problem/pool (visible in the response's cache-hit
+//! labels) without changing a single bit of the answer; tenant
+//! warm-starts are opt-in; malformed requests fail clean; a `shutdown`
+//! request drains the daemon.
+//!
+//! Everything binds an ephemeral loopback port (`port = 0`) and pins the
+//! deterministic default cost model on both the daemon and the local
+//! comparison solves, so `sim_s` fields are comparable. Only `wall_s` is
+//! nondeterministic, and it is stripped before comparing reports.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use flexa::config::{ProblemSpec, ServerSettings};
+use flexa::coordinator::Backend;
+use flexa::server::Server;
+use flexa::simulator::CostModel;
+use flexa::spec::{self, SolveSpec, SolveSpecBuilder};
+use flexa::util::Json;
+
+fn start_server() -> (SocketAddr, thread::JoinHandle<std::io::Result<()>>) {
+    let settings = ServerSettings { host: "127.0.0.1".into(), port: 0 };
+    let server = Server::bind_with(&settings, CostModel::default()).expect("bind ephemeral port");
+    let addr = server.local_addr();
+    (addr, thread::spawn(move || server.run()))
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let writer = stream.try_clone().unwrap();
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    fn request(&mut self, body: &Json) -> Json {
+        let mut text = body.to_string_compact();
+        text.push('\n');
+        self.send_raw(&text)
+    }
+
+    fn send_raw(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).expect("response line");
+        Json::parse(resp.trim()).expect("valid response JSON")
+    }
+}
+
+fn shutdown(addr: SocketAddr, server: thread::JoinHandle<std::io::Result<()>>) {
+    let stop = Client::connect(addr).request(&Json::obj(vec![("op", Json::str("shutdown"))]));
+    assert_eq!(stop.get("stopping"), Some(&Json::Bool(true)), "{stop:?}");
+    server.join().expect("server thread").expect("clean daemon exit");
+}
+
+/// Drop the only nondeterministic report field (physical wall-clock).
+fn strip_wall(report: &Json) -> Json {
+    let mut j = report.clone();
+    if let Json::Obj(m) = &mut j {
+        m.remove("wall_s");
+    }
+    j
+}
+
+fn solve_request(s: &SolveSpec, id: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("solve")),
+        ("id", Json::Num(id as f64)),
+        ("spec", s.to_json()),
+        ("return_x", Json::Bool(true)),
+    ])
+}
+
+/// What a direct in-process solve of the spec returns (the bitwise
+/// ground truth every served response must match).
+fn expected_report(s: &SolveSpec) -> Json {
+    let problem = spec::build_problem(&s.problem);
+    let report = spec::execute_prepared(
+        s,
+        problem.as_ref(),
+        spec::ExecOptions { pool: None, x0: None, model: CostModel::default() },
+    )
+    .expect("local solve");
+    strip_wall(&report.to_json_with(true, false))
+}
+
+fn lasso() -> ProblemSpec {
+    ProblemSpec::Lasso { m: 30, n: 40, sparsity: 0.1, c: 1.0, seed: 41 }
+}
+
+fn base(problem: ProblemSpec, solver: &str) -> SolveSpecBuilder {
+    SolveSpec::builder()
+        .problem(problem)
+        .solver(solver)
+        .threads(2)
+        .max_iters(20)
+        .tol(1e-4)
+        .trace_every(20)
+}
+
+/// Four problem families × both backends, mixed solvers — the concurrent
+/// workload of the equivalence test.
+fn workload() -> Vec<SolveSpec> {
+    let group = ProblemSpec::GroupLasso {
+        m: 30,
+        n: 40,
+        sparsity: 0.1,
+        c: 1.0,
+        block_size: 4,
+        seed: 42,
+    };
+    let logistic = ProblemSpec::Logistic { preset: "gisette".into(), scale: 0.01, seed: 43 };
+    let qp = ProblemSpec::NonconvexQp {
+        m: 25,
+        n: 30,
+        sparsity: 0.1,
+        c: 10.0,
+        cbar: 50.0,
+        box_bound: 1.0,
+        seed: 44,
+    };
+    let sharded = |b: SolveSpecBuilder| b.backend(Backend::Sharded).cores(2);
+    vec![
+        base(lasso(), "flexa").build().unwrap(),
+        sharded(base(lasso(), "flexa")).build().unwrap(),
+        base(group.clone(), "cdm").build().unwrap(),
+        sharded(base(group, "gauss-jacobi")).build().unwrap(),
+        base(logistic.clone(), "flexa").build().unwrap(),
+        sharded(base(logistic, "flexa")).build().unwrap(),
+        base(qp, "flexa").build().unwrap(),
+    ]
+}
+
+#[test]
+fn concurrent_solves_are_bitwise_identical_to_direct_engine() {
+    let specs = workload();
+    let expected: Vec<Json> = specs.iter().map(expected_report).collect();
+    let (addr, server) = start_server();
+    thread::scope(|scope| {
+        for (i, (s, want)) in specs.iter().zip(&expected).enumerate() {
+            scope.spawn(move || {
+                let mut c = Client::connect(addr);
+                let resp = c.request(&solve_request(s, i));
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}: {resp:?}", s.name);
+                assert_eq!(resp.get("id").and_then(Json::as_usize), Some(i));
+                let report = resp.get("report").expect("report in response");
+                assert_eq!(
+                    &strip_wall(report),
+                    want,
+                    "served report diverged from direct engine solve for {} on {:?}",
+                    s.name,
+                    s.backend
+                );
+            });
+        }
+    });
+    shutdown(addr, server);
+}
+
+#[test]
+fn warm_cache_repeat_hits_and_stays_bitwise_identical() {
+    let s = base(lasso(), "flexa").build().unwrap();
+    let want = expected_report(&s);
+    let (addr, server) = start_server();
+    let mut c = Client::connect(addr);
+
+    let cold = c.request(&solve_request(&s, 1));
+    assert_eq!(cold.get("ok"), Some(&Json::Bool(true)), "{cold:?}");
+    let cache = cold.get("cache").expect("cache labels");
+    assert_eq!(cache.get("problem").and_then(Json::as_str), Some("miss"));
+    assert_eq!(cache.get("pool").and_then(Json::as_str), Some("miss"));
+    assert_eq!(strip_wall(cold.get("report").unwrap()), want);
+
+    let warm = c.request(&solve_request(&s, 2));
+    let cache = warm.get("cache").expect("cache labels");
+    assert_eq!(cache.get("problem").and_then(Json::as_str), Some("hit"));
+    assert_eq!(cache.get("pool").and_then(Json::as_str), Some("hit"));
+    assert_eq!(
+        strip_wall(warm.get("report").unwrap()),
+        want,
+        "warm-cache repeat drifted from the cold solve"
+    );
+
+    // a different solver on the same problem instance shares the cached
+    // problem (the fingerprint keys on the problem only)
+    let other = base(lasso(), "cdm").build().unwrap();
+    let resp = c.request(&solve_request(&other, 3));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let cache = resp.get("cache").expect("cache labels");
+    assert_eq!(cache.get("problem").and_then(Json::as_str), Some("hit"));
+
+    let stats = c.request(&Json::obj(vec![("op", Json::str("stats"))]));
+    assert_eq!(stats.get("jobs_done").and_then(Json::as_usize), Some(3));
+    let cache = stats.get("cache").expect("cache counters");
+    assert_eq!(cache.get("problems").and_then(Json::as_usize), Some(1));
+    assert_eq!(cache.get("problem_hits").and_then(Json::as_usize), Some(2));
+    assert_eq!(cache.get("problem_misses").and_then(Json::as_usize), Some(1));
+
+    shutdown(addr, server);
+}
+
+#[test]
+fn tenant_warm_start_is_opt_in_and_per_tenant() {
+    let s = base(lasso(), "flexa").build().unwrap();
+    let (addr, server) = start_server();
+    let mut c = Client::connect(addr);
+    let req = |id: usize, tenant: &str, warm: bool| {
+        solve_request(&s, id)
+            .with("tenant", Json::str(tenant))
+            .with("warm_start", Json::Bool(warm))
+    };
+    let label = |resp: &Json| {
+        resp.get("cache")
+            .and_then(|cj| cj.get("warm_start"))
+            .and_then(Json::as_str)
+            .map(str::to_string)
+    };
+
+    let first = c.request(&req(1, "alice", true));
+    assert_eq!(label(&first).as_deref(), Some("miss"), "{first:?}");
+    let second = c.request(&req(2, "alice", true));
+    assert_eq!(label(&second).as_deref(), Some("hit"), "{second:?}");
+    // another tenant never sees alice's iterate
+    let third = c.request(&req(3, "bob", true));
+    assert_eq!(label(&third).as_deref(), Some("miss"), "{third:?}");
+    // warm_start off: the solve is cold (x0 = 0) even though an iterate
+    // is stored — bitwise-identical to the first (also-cold) run
+    let off = c.request(&req(4, "alice", false));
+    assert_eq!(label(&off).as_deref(), Some("off"), "{off:?}");
+    assert_eq!(
+        strip_wall(off.get("report").unwrap()),
+        strip_wall(first.get("report").unwrap()),
+        "a warm_start=false solve must ignore stored iterates"
+    );
+
+    shutdown(addr, server);
+}
+
+#[test]
+fn malformed_lines_fail_clean_and_the_daemon_survives() {
+    let (addr, server) = start_server();
+    let mut c = Client::connect(addr);
+
+    let pong = c.request(&Json::obj(vec![("op", Json::str("ping")), ("id", Json::str("p1"))]));
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+    assert_eq!(pong.get("id").and_then(Json::as_str), Some("p1"));
+
+    // not JSON at all
+    let bad = c.send_raw("this is not json\n");
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    assert!(bad.get("error").is_some(), "{bad:?}");
+
+    // valid JSON, invalid request (solve without a spec)
+    let bad = c.request(&Json::obj(vec![("op", Json::str("solve")), ("id", Json::Num(9.0))]));
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    let err = bad.get("error").and_then(Json::as_str).unwrap_or_default();
+    assert!(err.contains("spec"), "{bad:?}");
+
+    // valid request shape, spec that fails validation
+    let bad = c.send_raw(
+        "{\"op\":\"solve\",\"spec\":{\"problem\":{\"kind\":\"lasso\",\"m\":10,\"n\":10},\
+         \"solver\":\"fista\",\"backend\":\"sharded\"}}\n",
+    );
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    let err = bad.get("error").and_then(Json::as_str).unwrap_or_default();
+    assert!(err.contains("sharded"), "{bad:?}");
+
+    // the connection is still serviceable after every failure
+    let s = base(lasso(), "flexa").build().unwrap();
+    let good = c.request(&solve_request(&s, 10));
+    assert_eq!(good.get("ok"), Some(&Json::Bool(true)), "{good:?}");
+
+    shutdown(addr, server);
+}

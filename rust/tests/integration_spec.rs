@@ -1,0 +1,189 @@
+//! Round-trip tests of the redesigned [`SolveSpec`] request API: every
+//! shipped TOML config lowers onto specs that survive JSON round-trips
+//! exactly, and the CLI-flag and TOML frontends produce *equal* specs
+//! for equivalent inputs — one request type behind every surface.
+
+use flexa::cli::{self, args::Args};
+use flexa::spec::{self, FrontendOverrides, SolveSpec};
+use flexa::util::Json;
+
+fn argv(parts: &[&str]) -> Args {
+    let v: Vec<String> = std::iter::once("flexa".to_string())
+        .chain(parts.iter().map(|s| s.to_string()))
+        .collect();
+    Args::parse(&v)
+}
+
+/// Every experiment config in `configs/` (serve configs have no
+/// `[problem]` table and are covered by the serve tests) lowers onto
+/// specs whose JSON encoding is an exact involution: decode(encode(s))
+/// == s, and re-encoding reproduces the byte-identical compact string.
+#[test]
+fn every_shipped_config_round_trips_exactly() {
+    let mut paths: Vec<_> = std::fs::read_dir("../configs")
+        .expect("configs dir")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            let name = p.file_name().unwrap_or_default().to_string_lossy().into_owned();
+            name.ends_with(".toml") && !name.starts_with("serve")
+        })
+        .collect();
+    paths.sort();
+    assert!(!paths.is_empty(), "no experiment configs found");
+
+    let mut seen = 0usize;
+    for path in &paths {
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        let cfg = flexa::config::ExperimentConfig::from_file(path)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let specs = spec::specs_from_experiment(&cfg, &FrontendOverrides::default())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!specs.is_empty(), "{name}: no solvers");
+        for s in &specs {
+            let text = s.to_json().to_string_compact();
+            let back = SolveSpec::from_json(&Json::parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", s.name));
+            assert_eq!(&back, s, "{name}: decode drifted");
+            assert_eq!(back.to_json().to_string_compact(), text, "{name}: re-encode drifted");
+            seen += 1;
+        }
+    }
+    assert!(seen >= 5, "expected several shipped specs, saw {seen}");
+}
+
+/// The CLI flags (`--threads/--backend/--selection`) and the native TOML
+/// keys (`threads`/`backend`/`[selection]`) are two spellings of the
+/// same request: lowering either produces equal `SolveSpec` values.
+#[test]
+fn cli_flags_and_toml_keys_produce_equal_specs() {
+    let dir = std::env::temp_dir().join("flexa_spec_frontends_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("base.toml");
+    let full = dir.join("full.toml");
+    let problem = "\
+[problem]\n\
+kind = \"lasso\"\n\
+m = 30\n\
+n = 40\n\
+sparsity = 0.1\n\
+c = 1.0\n\
+seed = 5\n\
+\n\
+[run]\n\
+max_iters = 50\n\
+tol = 1e-5\n";
+    std::fs::write(
+        &base,
+        format!("name = \"frontends\"\nsolvers = \"flexa, cdm\"\ncores = 4\n\n{problem}"),
+    )
+    .unwrap();
+    std::fs::write(
+        &full,
+        format!(
+            "name = \"frontends\"\nsolvers = \"flexa, cdm\"\ncores = 4\n\
+             threads = 3\nbackend = \"sharded\"\n\n\
+             [selection]\nstrategy = \"hybrid\"\nfrac = 0.25\nsigma = 0.5\n\n{problem}"
+        ),
+    )
+    .unwrap();
+
+    let base_s = base.to_string_lossy().into_owned();
+    let full_s = full.to_string_lossy().into_owned();
+    let (_, from_flags) = cli::solve_specs_from_args(&argv(&[
+        "solve",
+        "--config",
+        &base_s,
+        "--threads",
+        "3",
+        "--backend",
+        "sharded",
+        "--selection",
+        "hybrid:0.25:0.5",
+    ]))
+    .unwrap();
+    let (_, from_toml) =
+        cli::solve_specs_from_args(&argv(&["solve", "--config", &full_s])).unwrap();
+
+    assert_eq!(from_flags.len(), 2);
+    assert_eq!(from_flags, from_toml, "CLI-flag and TOML frontends diverged");
+    // and both survive the wire round-trip identically
+    for s in &from_flags {
+        let back = SolveSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(&back, s);
+    }
+}
+
+/// No flags means the config is taken as written — the overrides parser
+/// returns all-`None` and the lowered specs match a direct lowering.
+#[test]
+fn absent_flags_are_no_overrides() {
+    let ov = cli::overrides_from_args(&argv(&["solve", "--config", "x.toml"])).unwrap();
+    assert!(ov.threads.is_none() && ov.backend.is_none() && ov.selection.is_none());
+    // bad flag values are rejected at parse time, not mid-solve
+    assert!(cli::overrides_from_args(&argv(&["solve", "--backend", "quantum"])).is_err());
+    assert!(cli::overrides_from_args(&argv(&["solve", "--selection", "nope:1"])).is_err());
+}
+
+/// JSON request bodies get the exact builder validation — bad specs are
+/// unrepresentable on the wire, with the same error text as the builder.
+#[test]
+fn json_decoding_validates_like_the_builder() {
+    let decode = |s: &str| SolveSpec::from_json(&Json::parse(s).unwrap());
+    let lasso = r#""problem":{"kind":"lasso","m":30,"n":40}"#;
+
+    assert!(decode(r#"{"solver":"flexa"}"#).unwrap_err().contains("problem"));
+    assert!(decode(&format!("{{{lasso},\"solver\":\"nope\"}}"))
+        .unwrap_err()
+        .contains("unknown solver"));
+    assert!(decode(&format!("{{{lasso},\"solver\":\"fista\",\"backend\":\"sharded\"}}"))
+        .unwrap_err()
+        .contains("sharded"));
+    assert!(decode(&format!("{{{lasso},\"budgets\":{{\"max_iters\":0}}}}"))
+        .unwrap_err()
+        .contains("max_iters"));
+    assert!(decode(&format!("{{{lasso},\"sigma\":1.5}}")).unwrap_err().contains("sigma"));
+    assert!(decode(r#"{"problem":{"kind":"lasso","m":30,"n":40,"c":-1.0}}"#)
+        .unwrap_err()
+        .contains("c must be > 0"));
+}
+
+/// The deprecated `engine::solve_with_pool` shim still runs and agrees
+/// bitwise with the `SolveSpec` path it was folded into.
+#[test]
+#[allow(deprecated)]
+fn deprecated_pool_entry_point_matches_spec_execution() {
+    let spec = SolveSpec::builder()
+        .problem(flexa::config::ProblemSpec::Lasso {
+            m: 30,
+            n: 40,
+            sparsity: 0.1,
+            c: 1.0,
+            seed: 11,
+        })
+        .solver("flexa")
+        .threads(2)
+        .max_iters(25)
+        .tol(0.0)
+        .build()
+        .unwrap();
+    let problem = spec::build_problem(&spec.problem);
+    let model = flexa::simulator::CostModel::default();
+    let via_spec = spec::execute_prepared(
+        &spec,
+        problem.as_ref(),
+        spec::ExecOptions { pool: None, x0: None, model },
+    )
+    .unwrap();
+
+    let sspec = spec
+        .lower(flexa::coordinator::TermMetric::RelErr, model)
+        .unwrap();
+    let pool = flexa::parallel::WorkerPool::new(2);
+    let x0 = vec![0.0; problem.n()];
+    let via_shim = flexa::engine::solve_with_pool(problem.as_ref(), &x0, &sspec, &pool);
+
+    assert_eq!(via_spec.x, via_shim.x);
+    assert_eq!(via_spec.final_obj, via_shim.final_obj);
+    assert_eq!(via_spec.iters, via_shim.iters);
+}
