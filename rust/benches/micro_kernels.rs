@@ -1,114 +1,21 @@
-//! Micro-benchmarks for the L3 hot-path kernels: column dots/axpys,
-//! matvecs (dense + sparse), soft thresholds, best responses, and one full
-//! FLEXA iteration. Numbers feed the cost-model calibration and the §Perf
-//! log in EXPERIMENTS.md.
+//! Micro-benchmarks for the L3 hot-path kernels, now a thin wrapper over
+//! the exact-vs-fast kernel tier panel (`flexa bench kernels`). The panel
+//! times every hot kernel under both [`NumericsTier`]s, checks the fast
+//! tier against the documented re-association envelope, and writes
+//! `results/BENCH_7.json`; numbers feed the cost-model calibration and
+//! the §Perf log in EXPERIMENTS.md.
+//!
+//! [`NumericsTier`]: flexa::linalg::NumericsTier
 
-use flexa::bench::{bench, BenchResult};
-use flexa::datagen::nesterov_lasso;
-use flexa::linalg::{vector, CscMatrix, DenseMatrix};
-use flexa::problems::{LassoProblem, Problem};
-use flexa::rng::Xoshiro256pp;
+use flexa::bench::{kernel_panel, BenchConfig};
 
 fn main() {
-    let budget = std::env::var("FLEXA_BENCH_BUDGET")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1.0_f64)
-        .min(3.0);
-    let mut results: Vec<(BenchResult, f64)> = Vec::new();
-    let mut rng = Xoshiro256pp::seed_from_u64(1);
-
-    // dense kernels at the e2e shape
-    let (m, n) = (512, 1024);
-    let a = DenseMatrix::from_fn(m, n, |i, j| ((i * 7 + j * 13) % 101) as f64 / 101.0 - 0.5);
-    let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
-    let y: Vec<f64> = (0..m).map(|_| rng.next_normal()).collect();
-    let mut out_m = vec![0.0; m];
-    let mut out_n = vec![0.0; n];
-
-    let r = bench("dense matvec 512x1024", budget, || {
-        a.matvec(&x, &mut out_m);
-        std::hint::black_box(&out_m);
-    });
-    results.push((r, 2.0 * (m * n) as f64));
-
-    let r = bench("dense rmatvec 512x1024", budget, || {
-        a.matvec_t(&y, &mut out_n);
-        std::hint::black_box(&out_n);
-    });
-    results.push((r, 2.0 * (m * n) as f64));
-
-    let r = bench("col_dot (m=512)", budget, || {
-        std::hint::black_box(a.col_dot(7, &y));
-    });
-    results.push((r, 2.0 * m as f64));
-
-    let mut acc = y.clone();
-    let r = bench("col_axpy (m=512)", budget, || {
-        a.col_axpy(11, 1e-9, &mut acc);
-        std::hint::black_box(&acc);
-    });
-    results.push((r, 2.0 * m as f64));
-
-    // sparse kernels (rcv1-like density)
-    let mut triplets = Vec::new();
-    for j in 0..n {
-        for _ in 0..8 {
-            triplets.push((rng.next_usize(m), j, rng.next_normal()));
+    let cfg = BenchConfig::from_env();
+    match kernel_panel(&cfg) {
+        Ok(out) => println!("\n== micro_kernels ==\n{}", out.text),
+        Err(e) => {
+            eprintln!("kernel panel failed: {e}");
+            std::process::exit(1);
         }
-    }
-    let s = CscMatrix::from_triplets(m, n, &triplets);
-    let nnz = s.nnz();
-    let r = bench(&format!("sparse matvec nnz={nnz}"), budget, || {
-        s.matvec(&x, &mut out_m);
-        std::hint::black_box(&out_m);
-    });
-    results.push((r, 2.0 * nnz as f64));
-
-    // vector ops
-    let big: Vec<f64> = (0..100_000).map(|_| rng.next_normal()).collect();
-    let mut big_out = vec![0.0; 100_000];
-    let r = bench("soft_threshold_vec 100k", budget, || {
-        vector::soft_threshold_vec(&big, 0.5, &mut big_out);
-        std::hint::black_box(&big_out);
-    });
-    results.push((r, 2.0 * 100_000.0));
-
-    let r = bench("dot 100k", budget, || {
-        std::hint::black_box(vector::dot(&big, &big));
-    });
-    results.push((r, 2.0 * 100_000.0));
-
-    // one full FLEXA best-response pass on a real instance, at 1 worker
-    // and at 4 pool workers (quantifies the persistent-pool win)
-    let p = LassoProblem::from_instance(nesterov_lasso(m, n, 0.05, 1.0, 5));
-    let xp = vec![0.1; n];
-    let mut aux = vec![0.0; m];
-    p.init_aux(&xp, &mut aux);
-    let mut z = vec![0.0; n];
-    let mut e = vec![0.0; n];
-    let scratch: Vec<f64> = vec![];
-    let br_flops: f64 = (0..n).map(|i| p.flops_best_response(i)).sum();
-    // chunk table precomputed once, as the coordinator hot loop does — the
-    // timed region is the kernel pass alone
-    let br_chunks = flexa::parallel::reduce::best_response_chunks(&p);
-    for threads in [1usize, 4] {
-        let pool = flexa::parallel::WorkerPool::new(threads);
-        let r = bench(
-            &format!("FLEXA best-response pass 512x1024 t={threads}"),
-            budget,
-            || {
-                flexa::parallel::par_best_responses(
-                    &pool, &p, &xp, &aux, &scratch, 1.0, &mut z, &mut e, &br_chunks,
-                );
-                std::hint::black_box(&z);
-            },
-        );
-        results.push((r, br_flops));
-    }
-
-    println!("\n== micro_kernels ==");
-    for (r, flops) in &results {
-        println!("{}   [{:.2} Gflop/s]", r.report(), r.gflops(*flops));
     }
 }

@@ -112,7 +112,16 @@ fn legacy_flexa(
 
         parallel::par_prelude(pool, problem, &x, &aux, &mut scratch, &prl_chunks);
         parallel::par_best_responses(
-            pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &br_chunks,
+            pool,
+            problem,
+            &x,
+            &aux,
+            &scratch,
+            tau,
+            common.numerics,
+            &mut zhat,
+            &mut e,
+            &br_chunks,
         );
         let m_k = parallel::par_max(pool, &e, &e_chunks, &mut max_partials);
         state.scanned += nb;

@@ -5,6 +5,7 @@
 pub mod engine_overhead;
 pub mod figures;
 pub mod harness;
+pub mod kernel_panel;
 pub mod serve_panel;
 pub mod shard_panel;
 
@@ -14,6 +15,7 @@ pub use figures::{
     FigureOutput,
 };
 pub use harness::{bench, bench_scaling, BenchResult, ScalingPoint};
+pub use kernel_panel::kernel_panel;
 pub use serve_panel::serve_panel;
 pub use shard_panel::shard_panel;
 

@@ -15,15 +15,17 @@
 //!   JSON `SolveSpec` requests over TCP, warm problem/pool/iterate
 //!   caches, graceful drain on a `shutdown` request (`docs/SERVING.md`);
 //! * `flexa bench
-//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine|shard|serve|smoke|all>`
+//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine|shard|serve|kernels|smoke|all>`
 //!   — regenerate the paper's figures/tables into `results/` (`selection`
 //!   is the strategy-comparison panel; `engine` is the SolverCore
 //!   overhead panel writing `BENCH_3.json`; `shard` is the sharded-backend
 //!   panel proving bitwise backend equivalence over **all six** problem
 //!   families and comparing measured vs predicted allreduce rounds into
 //!   `BENCH_5.json`; `serve` is the ramped serve-daemon driver writing
-//!   p50/p99/throughput panels to `BENCH_6.json`; `smoke` is the
-//!   seconds-long CI target that also writes `BENCH_smoke.json`);
+//!   p50/p99/throughput panels to `BENCH_6.json`; `kernels` is the
+//!   per-kernel exact-vs-fast numerics-tier throughput panel writing
+//!   `BENCH_7.json`; `smoke` is the seconds-long CI target that also
+//!   writes `BENCH_smoke.json`);
 //! * `flexa runtime-check` — load + execute every artifact and compare
 //!   against the native engine (the L1↔L3 smoke test);
 //! * `flexa info` — platform, artifact, and cost-model report.
@@ -32,7 +34,7 @@ pub mod args;
 
 use crate::bench::{self, BenchConfig};
 use crate::config::{ExperimentConfig, ServerSettings};
-use crate::coordinator::{Backend, SelectionSpec};
+use crate::coordinator::{Backend, NumericsTier, SelectionSpec};
 use crate::metrics::{Trace, XAxis, YMetric};
 use crate::spec::{self, FrontendOverrides, SolveSpec};
 use crate::util::error::{Context, Result};
@@ -72,10 +74,11 @@ flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
 
 USAGE:
   flexa solve --config <file.toml> [--threads N] [--selection SPEC]
-              [--backend shared|sharded] [--quiet|--verbose]
+              [--backend shared|sharded] [--numerics exact|fast]
+              [--quiet|--verbose]
   flexa serve [--config <file.toml>] [--host HOST] [--port PORT]
   flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine
-               |shard|serve|smoke|all>
+               |shard|serve|kernels|smoke|all>
   flexa runtime-check
   flexa info
 
@@ -103,6 +106,11 @@ OPTIONS:
                       column-distributed owner-computes model with a
                       measured fixed-order allreduce; bitwise-identical
                       iterates, scan/sweep solvers on every problem kind)
+  --numerics T        kernel tier for every solver in the config: exact
+                      (historical scalar kernels, bitwise-pinned, default)
+                      or fast (unrolled/SIMD cache-blocked kernels;
+                      re-associated reductions within documented bounds,
+                      still deterministic per thread count/backend)
   --host / --port     serve bind address overrides (default 127.0.0.1:7070
                       or the config's [server] table; port 0 = ephemeral)
 
@@ -119,18 +127,22 @@ ENV:
   FLEXA_SERVE_CLIENTS       bench serve client connections (default 4)";
 
 /// Frontend overrides carried by the `solve` flags (`--threads`,
-/// `--backend`, `--selection`), parsed through the same grammars as
-/// every other surface. Public for the spec round-trip tests.
+/// `--backend`, `--numerics`, `--selection`), parsed through the same
+/// grammars as every other surface. Public for the spec round-trip tests.
 pub fn overrides_from_args(args: &Args) -> Result<FrontendOverrides> {
     let backend = match args.value("backend") {
         Some(s) => Some(Backend::parse(s).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
+    let numerics = match args.value("numerics") {
+        Some(s) => Some(NumericsTier::parse(s).map_err(|e| anyhow!(e))?),
         None => None,
     };
     let selection = match args.value("selection") {
         Some(s) => Some(SelectionSpec::parse(s).map_err(|e| anyhow!(e))?),
         None => None,
     };
-    Ok(FrontendOverrides { threads: args.value_usize("threads"), backend, selection })
+    Ok(FrontendOverrides { threads: args.value_usize("threads"), backend, numerics, selection })
 }
 
 /// Lower `flexa solve` argv onto the parsed config plus one validated
@@ -251,6 +263,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         "engine" => run(vec![bench::engine_overhead(&cfg)?]),
         "shard" => run(vec![bench::shard_panel(&cfg)?]),
         "serve" => run(vec![bench::serve_panel(&cfg)?]),
+        "kernels" => run(vec![bench::kernel_panel(&cfg)?]),
         "smoke" => run(vec![bench::smoke(&cfg)]),
         "all" => {
             run(vec![bench::table1(&cfg)]);
@@ -263,6 +276,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
             run(vec![bench::selection_panel(&cfg)]);
             run(vec![bench::engine_overhead(&cfg)?]);
             run(vec![bench::shard_panel(&cfg)?]);
+            run(vec![bench::kernel_panel(&cfg)?]);
         }
         other => bail!("unknown bench target {other:?}"),
     }

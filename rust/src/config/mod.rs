@@ -20,6 +20,7 @@
 //! cores = 4
 //! threads = 1
 //! backend = "shared"             # shared | sharded (engine data plane)
+//! numerics = "exact"             # exact | fast (kernel tier)
 //!
 //! [problem]
 //! kind = "lasso"                 # lasso | group-lasso | logistic | svm
@@ -38,6 +39,7 @@
 //! sigma = 0.5
 //! threads = 4
 //! backend = "sharded"
+//! numerics = "fast"
 //!
 //! [run]
 //! max_iters = 500
@@ -118,6 +120,22 @@
 //!   baselines are whole-gradient methods and are rejected with an
 //!   error. The guards derive from capability probes, never from
 //!   hand-maintained kind lists.
+//!
+//! ## `numerics`
+//!
+//! Kernel tier of the per-block inner products (CLI override:
+//! `--numerics <exact|fast>`):
+//!
+//! * `"exact"` (default) — the historical scalar kernels with their
+//!   fixed summation order. Iterates are bitwise-identical to every
+//!   release before the tier existed; the golden fixtures pin this.
+//! * `"fast"` — the unrolled/SIMD cache-blocked kernels of
+//!   `crate::linalg::kernels`. Reductions may be re-associated within a
+//!   kernel call (documented forward-error bound, asserted by
+//!   `tests/kernel_oracle.rs`), but the tier stays fully deterministic:
+//!   for a fixed input, iterates are bitwise-identical across thread
+//!   counts, backends, and the `simd` cargo feature. Accept/reject
+//!   decisions (sweeps, merit passes, aux updates) always run exact.
 //!
 //! ## `cores` vs `threads`
 //!
@@ -523,11 +541,22 @@ pub struct SolverSettings {
     /// column-distributed owner-computes path; scan/sweep solvers on
     /// lasso/logistic/nonconvex-qp only).
     pub backend: String,
+    /// kernel tier of the per-block inner products: "exact" (default,
+    /// bitwise-pinned) or "fast" (unrolled/SIMD, re-associated within
+    /// documented bounds — see the module-level `numerics` section).
+    pub numerics: String,
 }
 
 impl Default for SolverSettings {
     fn default() -> Self {
-        Self { name: "flexa".into(), sigma: 0.5, cores: 1, threads: 1, backend: "shared".into() }
+        Self {
+            name: "flexa".into(),
+            sigma: 0.5,
+            cores: 1,
+            threads: 1,
+            backend: "shared".into(),
+            numerics: "exact".into(),
+        }
     }
 }
 
@@ -592,6 +621,15 @@ impl ExperimentConfig {
             if let Err(e) = crate::coordinator::Backend::parse(&backend) {
                 return Err(format!("solver {name:?}: {e}"));
             }
+            let numerics = doc
+                .get_str(&format!("{prefix}.numerics"))
+                .or_else(|| doc.get_str("numerics"))
+                .unwrap_or("exact")
+                .to_string();
+            // same single-parser rule for the kernel tier
+            if let Err(e) = crate::coordinator::NumericsTier::parse(&numerics) {
+                return Err(format!("solver {name:?}: {e}"));
+            }
             solvers.push(SolverSettings {
                 sigma: doc
                     .get_f64(&format!("{prefix}.sigma"))
@@ -606,6 +644,7 @@ impl ExperimentConfig {
                     .or_else(|| doc.get_usize("threads"))
                     .unwrap_or(1),
                 backend,
+                numerics,
                 name,
             });
         }
@@ -828,6 +867,33 @@ tol = 1e-6
         .unwrap();
         assert_eq!(cfg.solvers[0].backend, "sharded");
         assert_eq!(cfg.solvers[1].backend, "shared", "per-solver override wins");
+    }
+
+    #[test]
+    fn numerics_defaults_exact_and_parses_fast() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"lasso\"\nm = 20\nn = 30\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.solvers[0].numerics, "exact");
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa, cdm\"\nnumerics = \"fast\"\n\
+             [problem]\nkind = \"lasso\"\nm = 20\nn = 30\n\
+             [solver.cdm]\nnumerics = \"exact\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.solvers[0].numerics, "fast");
+        assert_eq!(cfg.solvers[1].numerics, "exact", "per-solver override wins");
+    }
+
+    #[test]
+    fn unknown_numerics_is_rejected_at_parse_time() {
+        let err = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\nnumerics = \"loose\"\n\
+             [problem]\nkind = \"lasso\"\nm = 20\nn = 30\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown numerics"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,7 @@ pub mod strategy;
 pub mod tau;
 pub mod workers;
 
+pub use crate::linalg::NumericsTier;
 pub use flexa::flexa;
 pub use gauss_jacobi::{gauss_jacobi, gj_flexa};
 pub use selection::SelectionRule;
@@ -114,6 +115,12 @@ pub struct CommonOptions {
     /// full matrix in one address space; `sharded` runs the
     /// column-distributed owner-computes model with a measured allreduce)
     pub backend: Backend,
+    /// kernel tier of the Jacobi-scan inner products
+    /// ([`NumericsTier::Exact`] = today's bitwise-pinned arithmetic;
+    /// [`NumericsTier::Fast`] = the unrolled/SIMD cache-blocked kernels,
+    /// deterministic but re-associated within documented bounds — see
+    /// [`crate::linalg::kernels`])
+    pub numerics: NumericsTier,
     /// run name (plots, logs)
     pub name: String,
 }
@@ -133,6 +140,7 @@ impl Default for CommonOptions {
             merit_every: 10,
             cost_model: CostModel::default(),
             backend: Backend::Shared,
+            numerics: NumericsTier::Exact,
             name: "solver".into(),
         }
     }

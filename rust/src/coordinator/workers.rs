@@ -18,6 +18,7 @@
 //! This module is the thin, stable entry point; the chunk plumbing lives
 //! in [`crate::parallel::reduce`].
 
+use crate::linalg::NumericsTier;
 use crate::parallel::{self, WorkerPool};
 use crate::problems::Problem;
 
@@ -25,9 +26,10 @@ use crate::problems::Problem;
 /// workers. `zhat` has length n (variables), `e` length N (blocks),
 /// `scratch` is the problem's shared prelude output.
 ///
-/// Convenience wrapper that builds the chunk table per call; the
-/// coordinator hot loops precompute it once per solve and call
-/// [`parallel::par_best_responses`] directly.
+/// Convenience wrapper that builds the chunk table per call and runs the
+/// exact numerics tier; the coordinator hot loops precompute the table
+/// once per solve and call [`parallel::par_best_responses`] directly
+/// with the configured tier.
 pub fn compute_best_responses(
     problem: &dyn Problem,
     x: &[f64],
@@ -39,7 +41,18 @@ pub fn compute_best_responses(
     pool: &WorkerPool,
 ) {
     let chunks = parallel::reduce::best_response_chunks(problem);
-    parallel::par_best_responses(pool, problem, x, aux, scratch, tau, zhat, e, &chunks);
+    parallel::par_best_responses(
+        pool,
+        problem,
+        x,
+        aux,
+        scratch,
+        tau,
+        NumericsTier::Exact,
+        zhat,
+        e,
+        &chunks,
+    );
 }
 
 #[cfg(test)]

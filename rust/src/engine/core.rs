@@ -33,6 +33,16 @@
 //! summation order — per-shard partial deltas folded in ascending shard
 //! order — so their iterates are bitwise-identical too
 //! (`tests/integration_golden.rs`).
+//!
+//! Orthogonally to the backend, [`CommonOptions::numerics`] picks the
+//! **kernel tier** ([`crate::linalg::NumericsTier`]) of the Jacobi-scan
+//! inner products: `Exact` (default) keeps every result bitwise-unchanged;
+//! `Fast` routes them through the unrolled/SIMD cache-blocked kernels,
+//! which re-associate reductions within documented error bounds but stay
+//! deterministic — fast-tier iterates are still bitwise-identical across
+//! thread counts, backends, and the `simd` cargo feature.
+//!
+//! [`CommonOptions::numerics`]: crate::coordinator::CommonOptions
 
 use super::sharded::ShardedWorkspace;
 use super::workspace::Workspace;
@@ -225,6 +235,11 @@ fn run(
     let nb = blocks.n_blocks();
     let common = &spec.common;
     let p_cores = common.cores.max(1);
+    // kernel tier of the pool-parallel Jacobi scans (Exact by default;
+    // Fast re-associates the per-block inner products within documented
+    // bounds — see linalg::kernels). Sweeps, merit passes, and aux
+    // updates always run exact so accept/reject decisions stay pinned.
+    let tier = common.numerics;
 
     if let ScanBackend::Engine(engine) = &backend {
         assert_eq!(
@@ -449,20 +464,21 @@ fn run(
                         // to the shared full-matrix fan-out
                         match (scan, shardws.as_ref()) {
                             (Candidates::All, None) => parallel::par_best_responses(
-                                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e,
-                                &br_chunks,
+                                pool, problem, &x, &aux, &scratch, tau, tier, &mut zhat,
+                                &mut e, &br_chunks,
                             ),
                             (Candidates::Subset, None) => parallel::par_best_responses_subset(
-                                pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e, &cand,
+                                pool, problem, &x, &aux, &scratch, tau, tier, &mut zhat,
+                                &mut e, &cand,
                             ),
                             (Candidates::All, Some(sw)) => parallel::par_best_responses_sharded(
-                                pool, &sw.shards, blocks, &x, &aux, &scratch, tau, &mut zhat,
-                                &mut e,
+                                pool, &sw.shards, blocks, &x, &aux, &scratch, tau, tier,
+                                &mut zhat, &mut e,
                             ),
                             (Candidates::Subset, Some(sw)) => {
                                 parallel::par_best_responses_subset_sharded(
                                     pool, &sw.shards, &sw.layout, blocks, &x, &aux, &scratch,
-                                    tau, &mut zhat, &mut e, &cand,
+                                    tau, tier, &mut zhat, &mut e, &cand,
                                 )
                             }
                         }
@@ -779,11 +795,11 @@ fn run(
                         Candidates::All => {
                             match shardws.as_ref() {
                                 None => parallel::par_best_responses(
-                                    pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e,
-                                    &br_chunks,
+                                    pool, problem, &x, &aux, &scratch, tau, tier, &mut zhat,
+                                    &mut e, &br_chunks,
                                 ),
                                 Some(sw) => parallel::par_best_responses_sharded(
-                                    pool, &sw.shards, blocks, &x, &aux, &scratch, tau,
+                                    pool, &sw.shards, blocks, &x, &aux, &scratch, tau, tier,
                                     &mut zhat, &mut e,
                                 ),
                             }
@@ -794,12 +810,12 @@ fn run(
                         Candidates::Subset => {
                             match shardws.as_ref() {
                                 None => parallel::par_best_responses_subset(
-                                    pool, problem, &x, &aux, &scratch, tau, &mut zhat, &mut e,
-                                    &cand,
+                                    pool, problem, &x, &aux, &scratch, tau, tier, &mut zhat,
+                                    &mut e, &cand,
                                 ),
                                 Some(sw) => parallel::par_best_responses_subset_sharded(
                                     pool, &sw.shards, &sw.layout, blocks, &x, &aux, &scratch,
-                                    tau, &mut zhat, &mut e, &cand,
+                                    tau, tier, &mut zhat, &mut e, &cand,
                                 ),
                             }
                             state.scanned += cand.len();

@@ -43,6 +43,7 @@
 //! println!("relative error: {:.2e}", report.final_rel_err);
 //! ```
 
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 #![warn(missing_docs)]
 
 pub mod bench;

@@ -6,6 +6,7 @@
 //! and per-column axpys (`r += δ_i A_i`, the incremental residual update
 //! after a selective step). Both touch contiguous memory here.
 
+use super::kernels::{self, NumericsTier};
 use super::vector;
 
 /// Dense `nrows × ncols` matrix, column-major (`data[j*nrows + i] = A[i,j]`).
@@ -111,58 +112,59 @@ impl DenseMatrix {
 
     /// `out = A x` (accumulated per column: cache-friendly in this layout).
     ///
-    /// Processes two columns per pass: halves the traffic on `out`, ~1.5×
-    /// over single-column axpy (EXPERIMENTS.md §Perf).
+    /// Exact tier: two columns per pass, which halves the traffic on
+    /// `out`, ~1.5× over single-column axpy (EXPERIMENTS.md §Perf). The
+    /// body lives in [`kernels::dense_matvec`].
     pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        self.matvec_with(NumericsTier::Exact, x, out);
+    }
+
+    /// Tiered `out = A x`: `Fast` uses the cache-blocked four-column
+    /// panel traversal of the kernel layer.
+    pub fn matvec_with(&self, tier: NumericsTier, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(out.len(), self.nrows);
-        out.fill(0.0);
-        let m = self.nrows;
-        let mut j = 0;
-        while j + 1 < self.ncols {
-            let (x0, x1) = (x[j], x[j + 1]);
-            if x0 == 0.0 && x1 == 0.0 {
-                j += 2;
-                continue;
-            }
-            let c0 = &self.data[j * m..(j + 1) * m];
-            let c1 = &self.data[(j + 1) * m..(j + 2) * m];
-            for i in 0..m {
-                out[i] += x0 * c0[i] + x1 * c1[i];
-            }
-            j += 2;
-        }
-        if j < self.ncols {
-            let xj = x[j];
-            if xj != 0.0 {
-                vector::axpy(xj, self.col(j), out);
-            }
-        }
+        kernels::dense_matvec(tier, self.nrows, &self.data, x, out);
     }
 
     /// `out = Aᵀ y` (per-column dots).
     pub fn matvec_t(&self, y: &[f64], out: &mut [f64]) {
+        self.matvec_t_with(NumericsTier::Exact, y, out);
+    }
+
+    /// Tiered `out = Aᵀ y`.
+    pub fn matvec_t_with(&self, tier: NumericsTier, y: &[f64], out: &mut [f64]) {
         assert_eq!(y.len(), self.nrows);
         assert_eq!(out.len(), self.ncols);
-        for j in 0..self.ncols {
-            out[j] = vector::dot(self.col(j), y);
-        }
+        kernels::dense_matvec_t(tier, self.nrows, &self.data, y, out);
     }
 
     /// Squared column norms `‖A_j‖²` (the diagonal of `AᵀA`).
     pub fn col_sq_norms(&self) -> Vec<f64> {
-        (0..self.ncols).map(|j| vector::nrm2_sq(self.col(j))).collect()
+        self.col_sq_norms_with(NumericsTier::Exact)
+    }
+
+    /// Tiered squared column norms.
+    pub fn col_sq_norms_with(&self, tier: NumericsTier) -> Vec<f64> {
+        (0..self.ncols).map(|j| kernels::sq_norm(tier, self.col(j))).collect()
     }
 
     /// `trace(AᵀA) = Σ_j ‖A_j‖²` (used for the paper's τ init `tr(AᵀA)/2n`).
     pub fn gram_trace(&self) -> f64 {
-        self.col_sq_norms().iter().sum()
+        kernels::gram_trace_from_col_norms(&self.col_sq_norms())
     }
 
     /// `y += alpha * A_j` — the incremental residual update.
     #[inline]
     pub fn col_axpy(&self, j: usize, alpha: f64, y: &mut [f64]) {
         vector::axpy(alpha, self.col(j), y);
+    }
+
+    /// Tiered `y += alpha * A_j` (elementwise: the tiers are
+    /// bitwise-identical, `Fast` only restructures the loop).
+    #[inline]
+    pub fn col_axpy_with(&self, tier: NumericsTier, j: usize, alpha: f64, y: &mut [f64]) {
+        kernels::axpy(tier, alpha, self.col(j), y);
     }
 
     /// `y_rows += alpha * A_j[rows]` (row-ranged axpy; `y_rows = y[rows]`).
@@ -174,7 +176,20 @@ impl DenseMatrix {
         y_rows: &mut [f64],
         rows: std::ops::Range<usize>,
     ) {
-        vector::axpy(alpha, &self.col(j)[rows], y_rows);
+        kernels::axpy_range_contiguous(alpha, &self.col(j)[rows], y_rows);
+    }
+
+    /// Tiered row-ranged axpy (elementwise: tiers are bitwise-identical).
+    #[inline]
+    pub fn col_axpy_range_with(
+        &self,
+        tier: NumericsTier,
+        j: usize,
+        alpha: f64,
+        y_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        kernels::axpy(tier, alpha, &self.col(j)[rows], y_rows);
     }
 
     /// `A_jᵀ y` — single-column gradient component.
@@ -183,16 +198,24 @@ impl DenseMatrix {
         vector::dot(self.col(j), y)
     }
 
+    /// Tiered `A_jᵀ y` (the fast tier re-associates the reduction).
+    #[inline]
+    pub fn col_dot_with(&self, tier: NumericsTier, j: usize, y: &[f64]) -> f64 {
+        kernels::dot(tier, self.col(j), y)
+    }
+
     /// `Σ_i A_ij² w_i` — weighted squared column dot (logistic Hessian diag).
     #[inline]
     pub fn col_sq_weighted_dot(&self, j: usize, w: &[f64]) -> f64 {
+        self.col_sq_weighted_dot_with(NumericsTier::Exact, j, w)
+    }
+
+    /// Tiered weighted squared column dot.
+    #[inline]
+    pub fn col_sq_weighted_dot_with(&self, tier: NumericsTier, j: usize, w: &[f64]) -> f64 {
         let col = self.col(j);
         debug_assert_eq!(col.len(), w.len());
-        let mut acc = 0.0;
-        for (a, wi) in col.iter().zip(w) {
-            acc += a * a * wi;
-        }
-        acc
+        kernels::sq_weighted_dot(tier, col, w)
     }
 
     /// Frobenius norm.

@@ -1,0 +1,307 @@
+//! Fast-tier kernel bodies: 8-lane unrolled reductions and cache-blocked
+//! dense panels.
+//!
+//! **Bitwise contract across the `simd` feature.** Every reduction here
+//! keeps 8 independent accumulators — one per lane of the `f64x8` SIMD
+//! bodies in `simd.rs` — folded in one fixed order
+//! (`(((l0+l1)+l2)+…)+l7`, then `+ tail`), with a separate multiply and
+//! add per element (Rust never contracts to FMA without an explicit
+//! `mul_add`). The scalar fallback below and the `std::simd` bodies
+//! therefore produce **identical bits**; the feature flag changes
+//! codegen, never results. Gathers and scatters stay scalar under both
+//! configurations (SIMD gathers are rarely profitable and keeping them
+//! scalar makes the cross-feature identity trivial).
+
+#[cfg(not(feature = "simd"))]
+use crate::linalg::vector;
+
+/// Accumulator width: the `f64x8` lane count the scalar fallback mirrors.
+pub(super) const LANES: usize = 8;
+
+/// Row-panel height for the cache-blocked dense matvec: 1024 rows of
+/// `out` (8 KiB) stay L1-resident while every column streams past once.
+pub(super) const PANEL_ROWS: usize = 1024;
+
+/// 8-accumulator dot product (re-associated relative to the exact
+/// 4-accumulator [`vector::dot`]).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::dot(x, y)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        let chunks = x.len() / LANES;
+        let mut acc = [0.0f64; LANES];
+        for k in 0..chunks {
+            let i = LANES * k;
+            for l in 0..LANES {
+                acc[l] += x[i + l] * y[i + l];
+            }
+        }
+        fold_tail(&acc, &x[LANES * chunks..], &y[LANES * chunks..])
+    }
+}
+
+/// 8-accumulator weighted squared dot `Σ a_i² w_i`.
+#[inline]
+pub fn sq_weighted_dot(a: &[f64], w: &[f64]) -> f64 {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::sq_weighted_dot(a, w)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        let chunks = a.len() / LANES;
+        let mut acc = [0.0f64; LANES];
+        for k in 0..chunks {
+            let i = LANES * k;
+            for l in 0..LANES {
+                acc[l] += (a[i + l] * a[i + l]) * w[i + l];
+            }
+        }
+        let mut s = acc[0];
+        for l in 1..LANES {
+            s += acc[l];
+        }
+        let mut tail = 0.0;
+        for i in LANES * chunks..a.len() {
+            tail += (a[i] * a[i]) * w[i];
+        }
+        s + tail
+    }
+}
+
+/// Fixed-order horizontal fold shared by the scalar reductions: lane
+/// sums left-to-right, then the scalar tail.
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn fold_tail(acc: &[f64; LANES], x_tail: &[f64], y_tail: &[f64]) -> f64 {
+    let mut s = acc[0];
+    for l in 1..LANES {
+        s += acc[l];
+    }
+    let mut tail = 0.0;
+    for (a, b) in x_tail.iter().zip(y_tail) {
+        tail += a * b;
+    }
+    s + tail
+}
+
+/// `y += alpha * x` — elementwise, bitwise-identical to the exact tier.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::axpy(alpha, x, y);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        vector::axpy(alpha, x, y);
+    }
+}
+
+/// 4-accumulator gather dot `Σ vals[k] · y[rowind[k]]` (scalar under
+/// both feature configurations).
+#[inline]
+pub fn gather_dot(rowind: &[usize], vals: &[f64], y: &[f64]) -> f64 {
+    let n = vals.len();
+    let chunks = n / 4;
+    let mut acc = [0.0f64; 4];
+    for k in 0..chunks {
+        let i = 4 * k;
+        acc[0] += vals[i] * y[rowind[i]];
+        acc[1] += vals[i + 1] * y[rowind[i + 1]];
+        acc[2] += vals[i + 2] * y[rowind[i + 2]];
+        acc[3] += vals[i + 3] * y[rowind[i + 3]];
+    }
+    let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    for i in 4 * chunks..n {
+        s += vals[i] * y[rowind[i]];
+    }
+    s
+}
+
+/// 4-accumulator gather weighted squared dot `Σ vals[k]² · w[rowind[k]]`.
+#[inline]
+pub fn gather_sq_weighted_dot(rowind: &[usize], vals: &[f64], w: &[f64]) -> f64 {
+    let n = vals.len();
+    let chunks = n / 4;
+    let mut acc = [0.0f64; 4];
+    for k in 0..chunks {
+        let i = 4 * k;
+        acc[0] += (vals[i] * vals[i]) * w[rowind[i]];
+        acc[1] += (vals[i + 1] * vals[i + 1]) * w[rowind[i + 1]];
+        acc[2] += (vals[i + 2] * vals[i + 2]) * w[rowind[i + 2]];
+        acc[3] += (vals[i + 3] * vals[i + 3]) * w[rowind[i + 3]];
+    }
+    let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    for i in 4 * chunks..n {
+        s += (vals[i] * vals[i]) * w[rowind[i]];
+    }
+    s
+}
+
+/// 4-way unrolled scatter-axpy `y[rowind[k]] += alpha * vals[k]`.
+/// Row indices are unique within a CSC column, so the unrolled updates
+/// are disjoint and the result is bitwise-identical to the serial loop.
+#[inline]
+pub fn scatter_axpy(alpha: f64, rowind: &[usize], vals: &[f64], y: &mut [f64]) {
+    let n = vals.len();
+    let chunks = n / 4;
+    for k in 0..chunks {
+        let i = 4 * k;
+        y[rowind[i]] += alpha * vals[i];
+        y[rowind[i + 1]] += alpha * vals[i + 1];
+        y[rowind[i + 2]] += alpha * vals[i + 2];
+        y[rowind[i + 3]] += alpha * vals[i + 3];
+    }
+    for i in 4 * chunks..n {
+        y[rowind[i]] += alpha * vals[i];
+    }
+}
+
+/// Scatter-axpy into a rebased window: `y_rows[rowind[k] − base] +=
+/// alpha * vals[k]` (the clipped interior of the row-ranged CSC axpy).
+#[inline]
+pub fn scatter_axpy_rebased(
+    alpha: f64,
+    rowind: &[usize],
+    vals: &[f64],
+    base: usize,
+    y_rows: &mut [f64],
+) {
+    let n = vals.len();
+    let chunks = n / 4;
+    for k in 0..chunks {
+        let i = 4 * k;
+        y_rows[rowind[i] - base] += alpha * vals[i];
+        y_rows[rowind[i + 1] - base] += alpha * vals[i + 1];
+        y_rows[rowind[i + 2] - base] += alpha * vals[i + 2];
+        y_rows[rowind[i + 3] - base] += alpha * vals[i + 3];
+    }
+    for i in 4 * chunks..n {
+        y_rows[rowind[i] - base] += alpha * vals[i];
+    }
+}
+
+/// Cache-blocked dense matvec: row panels of [`PANEL_ROWS`], four-column
+/// fusion with zero-skip inside each panel.
+///
+/// Re-associates relative to the exact two-column pass (four products
+/// fold left-to-right before touching `out`), but the per-element add
+/// order over columns is fixed, so the result is a deterministic pure
+/// function of the input — and identical with and without `simd`
+/// (the fused update is elementwise).
+pub fn dense_matvec(nrows: usize, data: &[f64], x: &[f64], out: &mut [f64]) {
+    out.fill(0.0);
+    let m = nrows;
+    let ncols = x.len();
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + PANEL_ROWS).min(m);
+        let mut j = 0;
+        while j + 3 < ncols {
+            let (x0, x1, x2, x3) = (x[j], x[j + 1], x[j + 2], x[j + 3]);
+            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                j += 4;
+                continue;
+            }
+            fused_axpy4(
+                x0,
+                &data[j * m + r0..j * m + r1],
+                x1,
+                &data[(j + 1) * m + r0..(j + 1) * m + r1],
+                x2,
+                &data[(j + 2) * m + r0..(j + 2) * m + r1],
+                x3,
+                &data[(j + 3) * m + r0..(j + 3) * m + r1],
+                &mut out[r0..r1],
+            );
+            j += 4;
+        }
+        while j < ncols {
+            let xj = x[j];
+            if xj != 0.0 {
+                axpy(xj, &data[j * m + r0..j * m + r1], &mut out[r0..r1]);
+            }
+            j += 1;
+        }
+        r0 = r1;
+    }
+}
+
+/// Fused four-column panel update
+/// `out[i] += ((x0·c0[i] + x1·c1[i]) + x2·c2[i]) + x3·c3[i]`.
+#[inline]
+fn fused_axpy4(
+    x0: f64,
+    c0: &[f64],
+    x1: f64,
+    c1: &[f64],
+    x2: f64,
+    c2: &[f64],
+    x3: f64,
+    c3: &[f64],
+    out: &mut [f64],
+) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::fused_axpy4(x0, c0, x1, c1, x2, c2, x3, c3, out);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        for i in 0..out.len() {
+            out[i] += ((x0 * c0[i] + x1 * c1[i]) + x2 * c2[i]) + x3 * c3[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn fast_dot_close_to_naive_on_lane_boundaries() {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 24, 25, 1023, 1024, 1025] {
+            let (x, y) = vecs(n, n as u64 + 1);
+            let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+            assert!(
+                (dot(&x, &y) - naive).abs() <= 1e-14 * (n as f64 + 1.0) * scale + 1e-300,
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matvec_spans_panel_boundaries() {
+        // m straddles a panel boundary; n exercises the 4-col remainder.
+        for (m, n) in [(1, 1), (3, 5), (PANEL_ROWS - 1, 6), (PANEL_ROWS + 3, 7)] {
+            let (data, x) = {
+                let mut rng = crate::rng::Xoshiro256pp::seed_from_u64((m + n) as u64);
+                let d: Vec<f64> = (0..m * n).map(|_| rng.next_normal()).collect();
+                let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+                (d, x)
+            };
+            let mut out = vec![0.0; m];
+            dense_matvec(m, &data, &x, &mut out);
+            for i in 0..m {
+                let naive: f64 = (0..n).map(|j| data[j * m + i] * x[j]).sum();
+                let scale: f64 = (0..n).map(|j| (data[j * m + i] * x[j]).abs()).sum();
+                assert!(
+                    (out[i] - naive).abs() <= 1e-14 * (n as f64 + 1.0) * scale + 1e-300,
+                    "m={m} n={n} i={i}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,425 @@
+//! Numerics-tier kernel layer: one home for the hot column kernels.
+//!
+//! Every dense / CSC column kernel that the best-response scans and the
+//! aux updates spend their time in lives here, in **two tiers**
+//! ([`NumericsTier`]):
+//!
+//! * [`NumericsTier::Exact`] — the default. Bodies are the crate's
+//!   historical scalar loops, moved here verbatim: fixed summation
+//!   order, 4-way-unrolled dots via [`vector::dot`], the two-column
+//!   fused dense matvec. Iterates produced under `Exact` are
+//!   bitwise-identical to every release before the tier existed (the
+//!   golden fixtures of `tests/integration_golden.rs` pin this).
+//! * [`NumericsTier::Fast`] — wider unrolling (8 independent
+//!   accumulators, matching the `f64x8` SIMD lane width), cache-blocked
+//!   panel traversal for the dense matvec, and four-column fusion. Fast
+//!   **may re-associate additions within a kernel call** — and only
+//!   that: no FMA contraction, no `-ffast-math`-style rewrites, no
+//!   nondeterminism. For a fixed input, a fast kernel is a pure
+//!   function, identical with and without the `simd` cargo feature
+//!   (the SIMD bodies perform the same per-lane multiply-then-add and
+//!   the same fixed-order horizontal fold as the scalar 8-accumulator
+//!   fallback — see `fast.rs` / `simd.rs`).
+//!
+//! **Tolerance contract.** Re-association changes only rounding: for a
+//! reduction over `k` terms, `|fast − exact| ≤ c·k·ε·Σ|termᵢ|` with
+//! `ε = 2⁻⁵²` and a small constant `c` (standard forward error of
+//! reordered summation). `tests/kernel_oracle.rs` asserts this bound
+//! per kernel against the scalar oracle, and the solve-level suites
+//! assert the end-to-end consequence (fast-tier iterates within a
+//! documented relative tolerance of the exact-tier golden traces).
+//!
+//! Elementwise passes (axpy, scatter-axpy, the fused logistic
+//! margin-weight pass) have no reduction to re-associate, so their fast
+//! bodies are bitwise-identical to exact by construction; the tiers
+//! differ only in loop structure.
+//!
+//! This module is also the anti-drift layer for the previously
+//! copy-pasted `col_sq_norms` / `gram_trace` / `col_axpy_range` bodies:
+//! dense and CSC both delegate to the canonical helpers below, and the
+//! dense-vs-CSC agreement property tests make that structural.
+
+use super::vector;
+
+mod fast;
+#[cfg(feature = "simd")]
+mod simd;
+
+/// How much floating-point latitude the column kernels get.
+///
+/// Threaded through [`CommonOptions`](crate::coordinator::CommonOptions)
+/// / `SolveSpec` / `--numerics` exactly like
+/// [`Backend`](crate::coordinator::Backend) selects the data plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum NumericsTier {
+    /// Historical scalar kernels, fixed summation order, bitwise-stable
+    /// across releases. The default.
+    #[default]
+    Exact,
+    /// 8-lane unrolled / SIMD kernels with cache-blocked panels; may
+    /// re-associate additions within a kernel call (deterministic for a
+    /// fixed input, governed by the module-level tolerance contract).
+    Fast,
+}
+
+impl NumericsTier {
+    /// Parse `"exact"` / `"fast"` (the CLI `--numerics` and TOML
+    /// `numerics` values).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "exact" => Ok(NumericsTier::Exact),
+            "fast" => Ok(NumericsTier::Fast),
+            other => Err(format!("unknown numerics {other:?} (expected exact|fast)")),
+        }
+    }
+
+    /// Canonical lowercase name (inverse of [`NumericsTier::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NumericsTier::Exact => "exact",
+            NumericsTier::Fast => "fast",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// tiered slice kernels
+// ---------------------------------------------------------------------
+
+/// Dot product `xᵀy`.
+///
+/// `Exact` is [`vector::dot`] (4 fixed-order partial sums); `Fast` uses
+/// 8 independent accumulators (one per SIMD lane) folded in a fixed
+/// order, re-associating the sum within the call.
+#[inline]
+pub fn dot(tier: NumericsTier, x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    match tier {
+        NumericsTier::Exact => vector::dot(x, y),
+        NumericsTier::Fast => fast::dot(x, y),
+    }
+}
+
+/// Squared Euclidean norm `‖x‖²`.
+#[inline]
+pub fn sq_norm(tier: NumericsTier, x: &[f64]) -> f64 {
+    match tier {
+        NumericsTier::Exact => vector::nrm2_sq(x),
+        NumericsTier::Fast => fast::dot(x, x),
+    }
+}
+
+/// Weighted squared dot `Σ_i a_i² w_i` (the logistic Hessian-diagonal
+/// column pass).
+#[inline]
+pub fn sq_weighted_dot(tier: NumericsTier, a: &[f64], w: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), w.len());
+    match tier {
+        NumericsTier::Exact => {
+            let mut acc = 0.0;
+            for (ai, wi) in a.iter().zip(w) {
+                acc += ai * ai * wi;
+            }
+            acc
+        }
+        NumericsTier::Fast => fast::sq_weighted_dot(a, w),
+    }
+}
+
+/// `y += alpha * x`. Elementwise: both tiers produce identical bits;
+/// `Fast` only restructures the loop for wider codegen.
+#[inline]
+pub fn axpy(tier: NumericsTier, alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    match tier {
+        NumericsTier::Exact => vector::axpy(alpha, x, y),
+        NumericsTier::Fast => fast::axpy(alpha, x, y),
+    }
+}
+
+/// Sparse-column dot `Σ_k vals[k] · y[rowind[k]]`.
+///
+/// Gathers do not vectorize profitably, so `Fast` is a 4-accumulator
+/// scalar unroll under **both** feature configurations (re-associated
+/// relative to `Exact`'s single accumulator, identical with and without
+/// `simd`).
+#[inline]
+pub fn gather_dot(tier: NumericsTier, rowind: &[usize], vals: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(rowind.len(), vals.len());
+    match tier {
+        NumericsTier::Exact => {
+            let mut acc = 0.0;
+            for (&i, &v) in rowind.iter().zip(vals) {
+                acc += v * y[i];
+            }
+            acc
+        }
+        NumericsTier::Fast => fast::gather_dot(rowind, vals, y),
+    }
+}
+
+/// Sparse-column weighted squared dot `Σ_k vals[k]² · w[rowind[k]]`.
+#[inline]
+pub fn gather_sq_weighted_dot(
+    tier: NumericsTier,
+    rowind: &[usize],
+    vals: &[f64],
+    w: &[f64],
+) -> f64 {
+    debug_assert_eq!(rowind.len(), vals.len());
+    match tier {
+        NumericsTier::Exact => {
+            let mut acc = 0.0;
+            for (&i, &v) in rowind.iter().zip(vals) {
+                acc += v * v * w[i];
+            }
+            acc
+        }
+        NumericsTier::Fast => fast::gather_sq_weighted_dot(rowind, vals, w),
+    }
+}
+
+/// Sparse scatter-axpy `y[rowind[k]] += alpha * vals[k]` — the CSC aux
+/// update. Row indices are unique within a column, so the updates are
+/// disjoint and both tiers produce identical bits; `Fast` unrolls to
+/// break the serial dependence chain.
+#[inline]
+pub fn scatter_axpy(tier: NumericsTier, alpha: f64, rowind: &[usize], vals: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(rowind.len(), vals.len());
+    match tier {
+        NumericsTier::Exact => {
+            for (&i, &v) in rowind.iter().zip(vals) {
+                y[i] += alpha * v;
+            }
+        }
+        NumericsTier::Fast => fast::scatter_axpy(alpha, rowind, vals, y),
+    }
+}
+
+/// Dense `out = A x` over column-major `data` (`nrows × x.len()`).
+///
+/// `Exact` is the historical two-column fused pass (verbatim); `Fast`
+/// traverses cache-blocked row panels with four-column fusion, so
+/// each `out` panel stays resident while every column streams once.
+pub fn dense_matvec(tier: NumericsTier, nrows: usize, data: &[f64], x: &[f64], out: &mut [f64]) {
+    let ncols = x.len();
+    debug_assert_eq!(data.len(), nrows * ncols);
+    debug_assert_eq!(out.len(), nrows);
+    match tier {
+        NumericsTier::Exact => {
+            out.fill(0.0);
+            let m = nrows;
+            let mut j = 0;
+            while j + 1 < ncols {
+                let (x0, x1) = (x[j], x[j + 1]);
+                if x0 == 0.0 && x1 == 0.0 {
+                    j += 2;
+                    continue;
+                }
+                let c0 = &data[j * m..(j + 1) * m];
+                let c1 = &data[(j + 1) * m..(j + 2) * m];
+                for i in 0..m {
+                    out[i] += x0 * c0[i] + x1 * c1[i];
+                }
+                j += 2;
+            }
+            if j < ncols {
+                let xj = x[j];
+                if xj != 0.0 {
+                    vector::axpy(xj, &data[j * m..(j + 1) * m], out);
+                }
+            }
+        }
+        NumericsTier::Fast => fast::dense_matvec(nrows, data, x, out),
+    }
+}
+
+/// Dense `out = Aᵀ y` over column-major `data` (per-column dots).
+pub fn dense_matvec_t(tier: NumericsTier, nrows: usize, data: &[f64], y: &[f64], out: &mut [f64]) {
+    let ncols = out.len();
+    debug_assert_eq!(data.len(), nrows * ncols);
+    debug_assert_eq!(y.len(), nrows);
+    for (j, oj) in out.iter_mut().enumerate() {
+        *oj = dot(tier, &data[j * nrows..(j + 1) * nrows], y);
+    }
+}
+
+/// CSC `out = A x`: per-column zero-skipping scatter-axpy. Scatters are
+/// elementwise, so both tiers produce identical bits.
+pub fn csc_matvec(
+    tier: NumericsTier,
+    colptr: &[usize],
+    rowind: &[usize],
+    values: &[f64],
+    x: &[f64],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(colptr.len(), x.len() + 1);
+    out.fill(0.0);
+    for (j, &xj) in x.iter().enumerate() {
+        if xj != 0.0 {
+            let (lo, hi) = (colptr[j], colptr[j + 1]);
+            scatter_axpy(tier, xj, &rowind[lo..hi], &values[lo..hi], out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// canonical exact helpers (the dense/CSC dedup layer)
+// ---------------------------------------------------------------------
+
+/// `trace(AᵀA)` from precomputed squared column norms: an ordered sum
+/// over columns — the canonical **dense** gram-trace order.
+#[inline]
+pub fn gram_trace_from_col_norms(col_sq: &[f64]) -> f64 {
+    col_sq.iter().sum()
+}
+
+/// `trace(AᵀA)` as `‖values‖²` over the flat nonzero array — the
+/// canonical **CSC** gram-trace order (kept distinct from
+/// [`gram_trace_from_col_norms`]: the two historical summation orders
+/// differ and both are pinned by golden fixtures).
+#[inline]
+pub fn gram_trace_flat(values: &[f64]) -> f64 {
+    vector::nrm2_sq(values)
+}
+
+/// `y_rows += alpha * col_rows` for a contiguous (dense) column window
+/// — the canonical row-ranged axpy behind the selective aux update.
+#[inline]
+pub fn axpy_range_contiguous(alpha: f64, col_rows: &[f64], y_rows: &mut [f64]) {
+    vector::axpy(alpha, col_rows, y_rows);
+}
+
+/// Row-ranged CSC scatter-axpy: clips the sorted column to `rows` by
+/// two binary searches, then scatters into the rebased window
+/// `y_rows = y[rows]`. Elementwise, so both tiers produce identical
+/// bits; `Fast` unrolls the clipped interior.
+#[inline]
+pub fn scatter_axpy_clipped(
+    tier: NumericsTier,
+    alpha: f64,
+    rowind: &[usize],
+    vals: &[f64],
+    rows: std::ops::Range<usize>,
+    y_rows: &mut [f64],
+) {
+    let lo = rowind.partition_point(|&i| i < rows.start);
+    let hi = rowind.partition_point(|&i| i < rows.end);
+    match tier {
+        NumericsTier::Exact => {
+            for k in lo..hi {
+                y_rows[rowind[k] - rows.start] += alpha * vals[k];
+            }
+        }
+        NumericsTier::Fast => {
+            fast::scatter_axpy_rebased(alpha, &rowind[lo..hi], &vals[lo..hi], rows.start, y_rows)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// fused margin-residual pass (logistic prelude)
+// ---------------------------------------------------------------------
+
+/// Numerically-stable `σ(−u) = 1 / (1 + eᵘ)` — the canonical
+/// implementation behind `problems::logistic::sigma_neg`.
+#[inline]
+pub fn sigma_neg(u: f64) -> f64 {
+    if u >= 0.0 {
+        let e = (-u).exp();
+        e / (1.0 + e)
+    } else {
+        1.0 / (1.0 + u.exp())
+    }
+}
+
+/// Fused logistic margin-weight pass: from margins `aux`, fill the
+/// gradient weights `w[j] = σ(−aux[j])` and the Hessian-diagonal
+/// weights `q[j] = w[j]·(1 − w[j])` in one sweep. Elementwise
+/// (transcendental per entry, no reduction), so it is tier-independent:
+/// both tiers share these exact bits.
+#[inline]
+pub fn logistic_weights(aux: &[f64], w: &mut [f64], q: &mut [f64]) {
+    debug_assert_eq!(aux.len(), w.len());
+    debug_assert_eq!(aux.len(), q.len());
+    for j in 0..aux.len() {
+        let s = sigma_neg(aux[j]);
+        w[j] = s;
+        q[j] = s * (1.0 - s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn tier_parses_and_names_roundtrip() {
+        assert_eq!(NumericsTier::parse("exact"), Ok(NumericsTier::Exact));
+        assert_eq!(NumericsTier::parse("fast"), Ok(NumericsTier::Fast));
+        assert!(NumericsTier::parse("loose").is_err());
+        assert_eq!(NumericsTier::default(), NumericsTier::Exact);
+        for t in [NumericsTier::Exact, NumericsTier::Fast] {
+            assert_eq!(NumericsTier::parse(t.name()), Ok(t));
+        }
+    }
+
+    #[test]
+    fn exact_dot_is_vector_dot_bitwise() {
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 33, 100] {
+            let (x, y) = vecs(n, 7 + n as u64);
+            assert_eq!(dot(NumericsTier::Exact, &x, &y).to_bits(), vector::dot(&x, &y).to_bits());
+        }
+    }
+
+    #[test]
+    fn fast_dot_within_reassociation_bound() {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65, 1000] {
+            let (x, y) = vecs(n, 100 + n as u64);
+            let exact = dot(NumericsTier::Exact, &x, &y);
+            let fastv = dot(NumericsTier::Fast, &x, &y);
+            let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+            let bound = 1e-14 * (n as f64 + 1.0) * scale + 1e-300;
+            assert!((fastv - exact).abs() <= bound, "n={n}: {fastv} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_are_bitwise_across_tiers() {
+        let (x, _) = vecs(37, 5);
+        let mut ya = vec![1.0; 37];
+        let mut yb = ya.clone();
+        axpy(NumericsTier::Exact, 0.37, &x, &mut ya);
+        axpy(NumericsTier::Fast, 0.37, &x, &mut yb);
+        assert_eq!(ya, yb);
+
+        let rowind: Vec<usize> = (0..37).step_by(3).collect();
+        let vals: Vec<f64> = rowind.iter().map(|&i| x[i]).collect();
+        let mut sa = vec![0.5; 37];
+        let mut sb = sa.clone();
+        scatter_axpy(NumericsTier::Exact, -1.25, &rowind, &vals, &mut sa);
+        scatter_axpy(NumericsTier::Fast, -1.25, &rowind, &vals, &mut sb);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn logistic_weights_matches_scalar_sigma() {
+        let (u, _) = vecs(19, 9);
+        let mut w = vec![0.0; 19];
+        let mut q = vec![0.0; 19];
+        logistic_weights(&u, &mut w, &mut q);
+        for j in 0..19 {
+            let s = sigma_neg(u[j]);
+            assert_eq!(w[j].to_bits(), s.to_bits());
+            assert_eq!(q[j].to_bits(), (s * (1.0 - s)).to_bits());
+        }
+    }
+}

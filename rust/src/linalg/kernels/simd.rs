@@ -1,0 +1,111 @@
+//! `std::simd` bodies for the fast tier (`--features simd`, nightly).
+//!
+//! Each function is the vector form of the scalar 8-accumulator
+//! fallback in `fast.rs` and produces **identical bits**: one lane
+//! accumulates exactly the elements the matching scalar accumulator
+//! does, with a separate multiply and add per element (`acc += a * b`
+//! never contracts to FMA — Rust has no fast-math), and the horizontal
+//! reduction folds `to_array()` left-to-right, the same fixed order as
+//! the scalar fold, before the identical scalar tail.
+
+use super::fast::LANES;
+use std::simd::f64x8;
+
+/// SIMD 8-lane dot product; bitwise-identical to the scalar fallback.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    let chunks = x.len() / LANES;
+    let mut acc = f64x8::splat(0.0);
+    for k in 0..chunks {
+        let i = LANES * k;
+        let a = f64x8::from_slice(&x[i..i + LANES]);
+        let b = f64x8::from_slice(&y[i..i + LANES]);
+        acc += a * b;
+    }
+    let lanes = acc.to_array();
+    let mut s = lanes[0];
+    for l in 1..LANES {
+        s += lanes[l];
+    }
+    let mut tail = 0.0;
+    for i in LANES * chunks..x.len() {
+        tail += x[i] * y[i];
+    }
+    s + tail
+}
+
+/// SIMD weighted squared dot `Σ a_i² w_i`; bitwise-identical to the
+/// scalar fallback.
+#[inline]
+pub fn sq_weighted_dot(a: &[f64], w: &[f64]) -> f64 {
+    let chunks = a.len() / LANES;
+    let mut acc = f64x8::splat(0.0);
+    for k in 0..chunks {
+        let i = LANES * k;
+        let va = f64x8::from_slice(&a[i..i + LANES]);
+        let vw = f64x8::from_slice(&w[i..i + LANES]);
+        acc += (va * va) * vw;
+    }
+    let lanes = acc.to_array();
+    let mut s = lanes[0];
+    for l in 1..LANES {
+        s += lanes[l];
+    }
+    let mut tail = 0.0;
+    for i in LANES * chunks..a.len() {
+        tail += (a[i] * a[i]) * w[i];
+    }
+    s + tail
+}
+
+/// SIMD `y += alpha * x`; elementwise, bitwise-identical to scalar.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let chunks = x.len() / LANES;
+    let va = f64x8::splat(alpha);
+    for k in 0..chunks {
+        let i = LANES * k;
+        let vx = f64x8::from_slice(&x[i..i + LANES]);
+        let mut vy = f64x8::from_slice(&y[i..i + LANES]);
+        vy += va * vx;
+        vy.copy_to_slice(&mut y[i..i + LANES]);
+    }
+    for i in LANES * chunks..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// SIMD fused four-column panel update
+/// `out[i] += ((x0·c0[i] + x1·c1[i]) + x2·c2[i]) + x3·c3[i]`;
+/// elementwise, bitwise-identical to scalar.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn fused_axpy4(
+    x0: f64,
+    c0: &[f64],
+    x1: f64,
+    c1: &[f64],
+    x2: f64,
+    c2: &[f64],
+    x3: f64,
+    c3: &[f64],
+    out: &mut [f64],
+) {
+    let n = out.len();
+    let chunks = n / LANES;
+    let (v0, v1, v2, v3) =
+        (f64x8::splat(x0), f64x8::splat(x1), f64x8::splat(x2), f64x8::splat(x3));
+    for k in 0..chunks {
+        let i = LANES * k;
+        let a = f64x8::from_slice(&c0[i..i + LANES]);
+        let b = f64x8::from_slice(&c1[i..i + LANES]);
+        let c = f64x8::from_slice(&c2[i..i + LANES]);
+        let d = f64x8::from_slice(&c3[i..i + LANES]);
+        let mut o = f64x8::from_slice(&out[i..i + LANES]);
+        o += ((v0 * a + v1 * b) + v2 * c) + v3 * d;
+        o.copy_to_slice(&mut out[i..i + LANES]);
+    }
+    for i in LANES * chunks..n {
+        out[i] += ((x0 * c0[i] + x1 * c1[i]) + x2 * c2[i]) + x3 * c3[i];
+    }
+}

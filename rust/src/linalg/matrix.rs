@@ -5,6 +5,7 @@
 //! one `col_axpy` per selected coordinate per iteration.
 
 use super::dense::DenseMatrix;
+use super::kernels::NumericsTier;
 use super::sparse::CscMatrix;
 
 /// Dense or sparse matrix with the column-oriented kernel set used by every
@@ -100,6 +101,75 @@ impl Matrix {
         match self {
             Matrix::Dense(a) => a.col_sq_weighted_dot(j, w),
             Matrix::Sparse(a) => a.col_sq_weighted_dot(j, w),
+        }
+    }
+
+    /// Tiered `out = A x` ([`NumericsTier::Fast`] uses the cache-blocked
+    /// / unrolled kernel layer; `Exact` is bitwise-identical to
+    /// [`Matrix::matvec`]).
+    pub fn matvec_with(&self, tier: NumericsTier, x: &[f64], out: &mut [f64]) {
+        match self {
+            Matrix::Dense(a) => a.matvec_with(tier, x, out),
+            Matrix::Sparse(a) => a.matvec_with(tier, x, out),
+        }
+    }
+
+    /// Tiered `out = Aᵀ y`.
+    pub fn matvec_t_with(&self, tier: NumericsTier, y: &[f64], out: &mut [f64]) {
+        match self {
+            Matrix::Dense(a) => a.matvec_t_with(tier, y, out),
+            Matrix::Sparse(a) => a.matvec_t_with(tier, y, out),
+        }
+    }
+
+    /// Tiered `A_jᵀ y` — the hot best-response gradient component.
+    #[inline]
+    pub fn col_dot_with(&self, tier: NumericsTier, j: usize, y: &[f64]) -> f64 {
+        match self {
+            Matrix::Dense(a) => a.col_dot_with(tier, j, y),
+            Matrix::Sparse(a) => a.col_dot_with(tier, j, y),
+        }
+    }
+
+    /// Tiered `y += alpha A_j` (elementwise: tiers bitwise-identical).
+    #[inline]
+    pub fn col_axpy_with(&self, tier: NumericsTier, j: usize, alpha: f64, y: &mut [f64]) {
+        match self {
+            Matrix::Dense(a) => a.col_axpy_with(tier, j, alpha, y),
+            Matrix::Sparse(a) => a.col_axpy_with(tier, j, alpha, y),
+        }
+    }
+
+    /// Tiered row-ranged axpy (elementwise: tiers bitwise-identical).
+    #[inline]
+    pub fn col_axpy_range_with(
+        &self,
+        tier: NumericsTier,
+        j: usize,
+        alpha: f64,
+        y_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
+        match self {
+            Matrix::Dense(a) => a.col_axpy_range_with(tier, j, alpha, y_rows, rows),
+            Matrix::Sparse(a) => a.col_axpy_range_with(tier, j, alpha, y_rows, rows),
+        }
+    }
+
+    /// Tiered weighted squared column dot.
+    #[inline]
+    pub fn col_sq_weighted_dot_with(&self, tier: NumericsTier, j: usize, w: &[f64]) -> f64 {
+        match self {
+            Matrix::Dense(a) => a.col_sq_weighted_dot_with(tier, j, w),
+            Matrix::Sparse(a) => a.col_sq_weighted_dot_with(tier, j, w),
+        }
+    }
+
+    /// Tiered squared column norms.
+    pub fn col_sq_norms_with(&self, tier: NumericsTier) -> Vec<f64> {
+        match self {
+            Matrix::Dense(a) => a.col_sq_norms_with(tier),
+            Matrix::Sparse(a) => a.col_sq_norms_with(tier),
         }
     }
 

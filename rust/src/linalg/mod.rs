@@ -7,12 +7,14 @@
 //! (`r += δ A_j`) dominate, hence column-major storage everywhere.
 
 pub mod dense;
+pub mod kernels;
 pub mod matrix;
 pub mod partition;
 pub mod sparse;
 pub mod vector;
 
 pub use dense::DenseMatrix;
+pub use kernels::NumericsTier;
 pub use matrix::Matrix;
 pub use partition::{BlockPartition, ProcessorAssignment};
 pub use sparse::CscMatrix;

@@ -4,7 +4,7 @@
 //! FLEXA hot path is per-column dots and axpys, which want contiguous column
 //! access. The rcv1-like / real-sim-like logistic instances are sparse.
 
-use super::vector;
+use super::kernels::{self, NumericsTier};
 
 /// Sparse matrix in CSC format.
 #[derive(Clone, Debug)]
@@ -99,58 +99,70 @@ impl CscMatrix {
 
     /// `out = A x`.
     pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        self.matvec_with(NumericsTier::Exact, x, out);
+    }
+
+    /// Tiered `out = A x` (per-column scatters are elementwise: the
+    /// tiers are bitwise-identical, `Fast` only unrolls the scatter).
+    pub fn matvec_with(&self, tier: NumericsTier, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(out.len(), self.nrows);
-        out.fill(0.0);
-        for j in 0..self.ncols {
-            let xj = x[j];
-            if xj != 0.0 {
-                let (rows, vals) = self.col(j);
-                for (&i, &v) in rows.iter().zip(vals) {
-                    out[i] += v * xj;
-                }
-            }
-        }
+        kernels::csc_matvec(tier, &self.colptr, &self.rowind, &self.values, x, out);
     }
 
     /// `out = Aᵀ y`.
     pub fn matvec_t(&self, y: &[f64], out: &mut [f64]) {
+        self.matvec_t_with(NumericsTier::Exact, y, out);
+    }
+
+    /// Tiered `out = Aᵀ y` (per-column gather dots).
+    pub fn matvec_t_with(&self, tier: NumericsTier, y: &[f64], out: &mut [f64]) {
         assert_eq!(y.len(), self.nrows);
         assert_eq!(out.len(), self.ncols);
         for j in 0..self.ncols {
-            out[j] = self.col_dot(j, y);
+            out[j] = self.col_dot_with(tier, j, y);
         }
     }
 
     /// `A_jᵀ y`.
     #[inline]
     pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        self.col_dot_with(NumericsTier::Exact, j, y)
+    }
+
+    /// Tiered `A_jᵀ y` (the fast tier re-associates the gather
+    /// reduction across 4 accumulators).
+    #[inline]
+    pub fn col_dot_with(&self, tier: NumericsTier, j: usize, y: &[f64]) -> f64 {
         let (rows, vals) = self.col(j);
-        let mut acc = 0.0;
-        for (&i, &v) in rows.iter().zip(vals) {
-            acc += v * y[i];
-        }
-        acc
+        kernels::gather_dot(tier, rows, vals, y)
     }
 
     /// `Σ_i A_ij² w_i` — weighted squared column dot (logistic Hessian diag).
     #[inline]
     pub fn col_sq_weighted_dot(&self, j: usize, w: &[f64]) -> f64 {
+        self.col_sq_weighted_dot_with(NumericsTier::Exact, j, w)
+    }
+
+    /// Tiered weighted squared column dot.
+    #[inline]
+    pub fn col_sq_weighted_dot_with(&self, tier: NumericsTier, j: usize, w: &[f64]) -> f64 {
         let (rows, vals) = self.col(j);
-        let mut acc = 0.0;
-        for (&i, &v) in rows.iter().zip(vals) {
-            acc += v * v * w[i];
-        }
-        acc
+        kernels::gather_sq_weighted_dot(tier, rows, vals, w)
     }
 
     /// `y += alpha * A_j`.
     #[inline]
     pub fn col_axpy(&self, j: usize, alpha: f64, y: &mut [f64]) {
+        self.col_axpy_with(NumericsTier::Exact, j, alpha, y);
+    }
+
+    /// Tiered `y += alpha * A_j` (elementwise scatter: tiers are
+    /// bitwise-identical).
+    #[inline]
+    pub fn col_axpy_with(&self, tier: NumericsTier, j: usize, alpha: f64, y: &mut [f64]) {
         let (rows, vals) = self.col(j);
-        for (&i, &v) in rows.iter().zip(vals) {
-            y[i] += alpha * v;
-        }
+        kernels::scatter_axpy(tier, alpha, rows, vals, y);
     }
 
     /// `y_rows += alpha * A_j[rows]` (row-ranged axpy; `y_rows = y[rows]`).
@@ -164,27 +176,42 @@ impl CscMatrix {
         y_rows: &mut [f64],
         rows: std::ops::Range<usize>,
     ) {
+        self.col_axpy_range_with(NumericsTier::Exact, j, alpha, y_rows, rows);
+    }
+
+    /// Tiered row-ranged axpy (elementwise: tiers are bitwise-identical).
+    #[inline]
+    pub fn col_axpy_range_with(
+        &self,
+        tier: NumericsTier,
+        j: usize,
+        alpha: f64,
+        y_rows: &mut [f64],
+        rows: std::ops::Range<usize>,
+    ) {
         let (rix, vals) = self.col(j);
-        let lo = rix.partition_point(|&i| i < rows.start);
-        let hi = rix.partition_point(|&i| i < rows.end);
-        for k in lo..hi {
-            y_rows[rix[k] - rows.start] += alpha * vals[k];
-        }
+        kernels::scatter_axpy_clipped(tier, alpha, rix, vals, rows, y_rows);
     }
 
     /// Squared column norms.
     pub fn col_sq_norms(&self) -> Vec<f64> {
+        self.col_sq_norms_with(NumericsTier::Exact)
+    }
+
+    /// Tiered squared column norms (over each column's stored values).
+    pub fn col_sq_norms_with(&self, tier: NumericsTier) -> Vec<f64> {
         (0..self.ncols)
             .map(|j| {
                 let (_, vals) = self.col(j);
-                vector::nrm2_sq(vals)
+                kernels::sq_norm(tier, vals)
             })
             .collect()
     }
 
-    /// `trace(AᵀA)`.
+    /// `trace(AᵀA)` — summed over the flat nonzero array (the canonical
+    /// CSC order; deliberately distinct from the dense per-column sum).
     pub fn gram_trace(&self) -> f64 {
-        vector::nrm2_sq(&self.values)
+        kernels::gram_trace_flat(&self.values)
     }
 
     /// Scale a column in place.

@@ -8,6 +8,7 @@
 
 use super::partition::block_chunks;
 use super::pool::WorkerPool;
+use crate::linalg::NumericsTier;
 use crate::problems::Problem;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -66,7 +67,10 @@ pub fn for_each_row_chunk(
 /// Best responses `x̂_i(x, τ)` and error bounds `E_i` for **all** blocks,
 /// fanned out over block-aligned chunks; `zhat`/`e` are written in
 /// disjoint per-chunk slices (same inner loop as the sequential sweep, so
-/// the results are bitwise identical for any thread count).
+/// the results are bitwise identical for any thread count). `tier`
+/// selects the kernel tier of each block's inner products
+/// ([`NumericsTier::Exact`] keeps today's bitwise results).
+#[allow(clippy::too_many_arguments)]
 pub fn par_best_responses(
     pool: &WorkerPool,
     problem: &dyn Problem,
@@ -74,6 +78,7 @@ pub fn par_best_responses(
     aux: &[f64],
     scratch: &[f64],
     tau: f64,
+    tier: NumericsTier,
     zhat: &mut [f64],
     e: &mut [f64],
     chunks: &[(Range<usize>, Range<usize>)],
@@ -92,8 +97,8 @@ pub fn par_best_responses(
         for i in br.clone() {
             let r = blocks.range(i);
             let local = (r.start - vr.start)..(r.end - vr.start);
-            e_chunk[i - br.start] =
-                problem.best_response_with(i, x, aux, scratch, tau, &mut z_chunk[local]);
+            e_chunk[i - br.start] = problem
+                .best_response_with_tier(i, x, aux, scratch, tau, tier, &mut z_chunk[local]);
         }
     });
 }
@@ -117,6 +122,7 @@ pub fn best_response_chunks(problem: &dyn Problem) -> Vec<(Range<usize>, Range<u
 /// written by exactly one chunk, so the results keep the [`super`]
 /// determinism contract: bitwise identical for any `threads ≥ 1`. The
 /// pass allocates nothing.
+#[allow(clippy::too_many_arguments)]
 pub fn par_best_responses_subset(
     pool: &WorkerPool,
     problem: &dyn Problem,
@@ -124,6 +130,7 @@ pub fn par_best_responses_subset(
     aux: &[f64],
     scratch: &[f64],
     tau: f64,
+    tier: NumericsTier,
     zhat: &mut [f64],
     e: &mut [f64],
     cand: &[usize],
@@ -155,7 +162,7 @@ pub fn par_best_responses_subset(
             // all chunk items; each is written by exactly one iteration.
             let z_block =
                 unsafe { std::slice::from_raw_parts_mut(zp.0.add(r.start), r.end - r.start) };
-            let ei = problem.best_response_with(i, x, aux, scratch, tau, z_block);
+            let ei = problem.best_response_with_tier(i, x, aux, scratch, tau, tier, z_block);
             unsafe { *ep.0.add(i) = ei };
         }
     });
@@ -393,13 +400,35 @@ mod tests {
         let chunks = best_response_chunks(&p);
         let pool1 = WorkerPool::new(1);
         let (mut zf, mut ef) = (vec![0.0; n], vec![0.0; nb]);
-        par_best_responses(&pool1, &p, &x, &aux, &scratch, 0.7, &mut zf, &mut ef, &chunks);
+        par_best_responses(
+            &pool1,
+            &p,
+            &x,
+            &aux,
+            &scratch,
+            0.7,
+            NumericsTier::Exact,
+            &mut zf,
+            &mut ef,
+            &chunks,
+        );
 
         let cand: Vec<usize> = (0..nb).filter(|i| i % 3 != 1).collect();
         for threads in [1usize, 2, 4, 64] {
             let pool = WorkerPool::new(threads);
             let (mut z, mut e) = (vec![-9.0; n], vec![-9.0; nb]);
-            par_best_responses_subset(&pool, &p, &x, &aux, &scratch, 0.7, &mut z, &mut e, &cand);
+            par_best_responses_subset(
+                &pool,
+                &p,
+                &x,
+                &aux,
+                &scratch,
+                0.7,
+                NumericsTier::Exact,
+                &mut z,
+                &mut e,
+                &cand,
+            );
             for i in 0..nb {
                 if cand.contains(&i) {
                     // scalar blocks: variable index == block index
@@ -423,6 +452,17 @@ mod tests {
         let mut aux = vec![0.0; p.aux_len()];
         p.init_aux(&x, &mut aux);
         let (mut z, mut e) = (vec![0.0; p.n()], vec![0.0; p.blocks().n_blocks()]);
-        par_best_responses_subset(&pool, &p, &x, &aux, &[], 0.5, &mut z, &mut e, &[]);
+        par_best_responses_subset(
+            &pool,
+            &p,
+            &x,
+            &aux,
+            &[],
+            0.5,
+            NumericsTier::Exact,
+            &mut z,
+            &mut e,
+            &[],
+        );
     }
 }

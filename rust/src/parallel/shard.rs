@@ -43,7 +43,7 @@
 
 use super::pool::WorkerPool;
 use super::reduce::{for_each_chunk, for_each_row_chunk};
-use crate::linalg::BlockPartition;
+use crate::linalg::{BlockPartition, NumericsTier};
 use crate::problems::ProblemShard;
 use std::ops::Range;
 
@@ -243,7 +243,9 @@ pub fn allreduce_sum(
 /// only its own [`ProblemShard`] columns. Per-block arithmetic is the
 /// same closed form as the full-matrix scan
 /// ([`super::par_best_responses`]), so `zhat`/`e` are bitwise identical
-/// to the shared backend for any thread count.
+/// to the shared backend for any thread count. `tier` selects the kernel
+/// tier of the per-block inner products on both backends identically.
+#[allow(clippy::too_many_arguments)]
 pub fn par_best_responses_sharded(
     pool: &WorkerPool,
     shards: &[Box<dyn ProblemShard>],
@@ -252,6 +254,7 @@ pub fn par_best_responses_sharded(
     aux: &[f64],
     scratch: &[f64],
     tau: f64,
+    tier: NumericsTier,
     zhat: &mut [f64],
     e: &mut [f64],
 ) {
@@ -266,7 +269,7 @@ pub fn par_best_responses_sharded(
             // shard job.
             let z_block =
                 unsafe { std::slice::from_raw_parts_mut(zp.0.add(r.start), r.end - r.start) };
-            let ei = shard.best_response_with(i, x, aux, scratch, tau, z_block);
+            let ei = shard.best_response_with_tier(i, x, aux, scratch, tau, tier, z_block);
             unsafe { *ep.0.add(i) = ei };
         }
     });
@@ -276,6 +279,7 @@ pub fn par_best_responses_sharded(
 /// [`super::par_best_responses_subset`]: each shard scans only its own
 /// members of the (sorted ascending, distinct) candidate set `cand`.
 /// Non-candidate entries of `zhat`/`e` are left untouched.
+#[allow(clippy::too_many_arguments)]
 pub fn par_best_responses_subset_sharded(
     pool: &WorkerPool,
     shards: &[Box<dyn ProblemShard>],
@@ -285,6 +289,7 @@ pub fn par_best_responses_subset_sharded(
     aux: &[f64],
     scratch: &[f64],
     tau: f64,
+    tier: NumericsTier,
     zhat: &mut [f64],
     e: &mut [f64],
     cand: &[usize],
@@ -308,7 +313,7 @@ pub fn par_best_responses_subset_sharded(
             // exactly one shard; block variable ranges are disjoint.
             let z_block =
                 unsafe { std::slice::from_raw_parts_mut(zp.0.add(r.start), r.end - r.start) };
-            let ei = shards[s].best_response_with(i, x, aux, scratch, tau, z_block);
+            let ei = shards[s].best_response_with_tier(i, x, aux, scratch, tau, tier, z_block);
             unsafe { *ep.0.add(i) = ei };
         }
     });

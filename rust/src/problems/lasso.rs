@@ -12,7 +12,7 @@
 
 use super::{Problem, ProblemShard};
 use crate::datagen::LassoInstance;
-use crate::linalg::{vector, BlockPartition, Matrix};
+use crate::linalg::{vector, BlockPartition, Matrix, NumericsTier};
 
 /// LASSO problem with maintained residual.
 pub struct LassoProblem {
@@ -98,6 +98,24 @@ impl Problem for LassoProblem {
 
     fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
         let g = 2.0 * self.a.col_dot(i, aux);
+        let denom = 2.0 * self.col_sq[i] + tau;
+        debug_assert!(denom > 0.0, "degenerate column {i} with tau = {tau}");
+        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn best_response_with_tier(
+        &self,
+        i: usize,
+        x: &[f64],
+        aux: &[f64],
+        _scratch: &[f64],
+        tau: f64,
+        tier: NumericsTier,
+        out: &mut [f64],
+    ) -> f64 {
+        let g = 2.0 * self.a.col_dot_with(tier, i, aux);
         let denom = 2.0 * self.col_sq[i] + tau;
         debug_assert!(denom > 0.0, "degenerate column {i} with tau = {tau}");
         let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
@@ -215,6 +233,25 @@ impl ProblemShard for LassoShard {
     fn best_response(&self, i: usize, x: &[f64], aux: &[f64], tau: f64, out: &mut [f64]) -> f64 {
         let j = i - self.blocks.start;
         let g = 2.0 * self.a.col_dot(j, aux);
+        let denom = 2.0 * self.col_sq[j] + tau;
+        debug_assert!(denom > 0.0, "degenerate column {i} with tau = {tau}");
+        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn best_response_with_tier(
+        &self,
+        i: usize,
+        x: &[f64],
+        aux: &[f64],
+        _scratch: &[f64],
+        tau: f64,
+        tier: NumericsTier,
+        out: &mut [f64],
+    ) -> f64 {
+        let j = i - self.blocks.start;
+        let g = 2.0 * self.a.col_dot_with(tier, j, aux);
         let denom = 2.0 * self.col_sq[j] + tau;
         debug_assert!(denom > 0.0, "degenerate column {i} with tau = {tau}");
         let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);

@@ -21,7 +21,7 @@
 
 use super::{Problem, ProblemShard};
 use crate::datagen::LogisticInstance;
-use crate::linalg::{vector, BlockPartition, Matrix};
+use crate::linalg::{kernels, vector, BlockPartition, Matrix, NumericsTier};
 
 /// ℓ1-regularized logistic regression with maintained margins.
 pub struct LogisticProblem {
@@ -47,15 +47,11 @@ pub fn log1p_exp_neg(u: f64) -> f64 {
     }
 }
 
-/// Stable `σ(−u) = 1/(1+e^{u})`.
+/// Stable `σ(−u) = 1/(1+e^{u})` (canonical body lives in the kernel
+/// layer so the margin-weight pass shares one definition).
 #[inline]
 pub fn sigma_neg(u: f64) -> f64 {
-    if u >= 0.0 {
-        let e = (-u).exp();
-        e / (1.0 + e)
-    } else {
-        1.0 / (1.0 + u.exp())
-    }
+    kernels::sigma_neg(u)
 }
 
 impl LogisticProblem {
@@ -133,11 +129,7 @@ impl LogisticProblem {
     pub fn weights_into(&self, aux: &[f64], w: &mut [f64], q: &mut [f64]) {
         debug_assert_eq!(aux.len(), w.len());
         debug_assert_eq!(aux.len(), q.len());
-        for j in 0..aux.len() {
-            let s = sigma_neg(aux[j]);
-            w[j] = s;
-            q[j] = s * (1.0 - s);
-        }
+        kernels::logistic_weights(aux, w, q);
     }
 
     /// Best response given precomputed weights (the coordinator's fast path;
@@ -274,6 +266,26 @@ impl Problem for LogisticProblem {
         let m = self.m();
         let (w, q) = scratch.split_at(m);
         let z = self.best_response_weighted(i, x, w, q, tau);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn best_response_with_tier(
+        &self,
+        i: usize,
+        x: &[f64],
+        _aux: &[f64],
+        scratch: &[f64],
+        tau: f64,
+        tier: NumericsTier,
+        out: &mut [f64],
+    ) -> f64 {
+        let m = self.m();
+        let (w, q) = scratch.split_at(m);
+        let g = -self.y.col_dot_with(tier, i, w);
+        let h = self.y.col_sq_weighted_dot_with(tier, i, q);
+        let denom = h + tau;
+        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
         out[0] = z;
         (z - x[i]).abs()
     }
@@ -453,6 +465,27 @@ impl ProblemShard for LogisticShard {
         let j = i - self.blocks.start;
         let g = -self.y.col_dot(j, w);
         let h = self.y.col_sq_weighted_dot(j, q);
+        let denom = h + tau;
+        let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
+        out[0] = z;
+        (z - x[i]).abs()
+    }
+
+    fn best_response_with_tier(
+        &self,
+        i: usize,
+        x: &[f64],
+        _aux: &[f64],
+        scratch: &[f64],
+        tau: f64,
+        tier: NumericsTier,
+        out: &mut [f64],
+    ) -> f64 {
+        let m = self.y.nrows();
+        let (w, q) = scratch.split_at(m);
+        let j = i - self.blocks.start;
+        let g = -self.y.col_dot_with(tier, j, w);
+        let h = self.y.col_sq_weighted_dot_with(tier, j, q);
         let denom = h + tau;
         let z = vector::soft_threshold(x[i] - g / denom, self.c / denom);
         out[0] = z;

@@ -33,7 +33,7 @@ pub use logistic::LogisticProblem;
 pub use nonconvex_qp::NonconvexQpProblem;
 pub use svm::SvmProblem;
 
-use crate::linalg::BlockPartition;
+use crate::linalg::{BlockPartition, NumericsTier};
 use std::ops::Range;
 
 /// A column shard of a problem — the per-worker state of the
@@ -69,6 +69,26 @@ pub trait ProblemShard: Send + Sync {
         out: &mut [f64],
     ) -> f64 {
         self.best_response(i, x, aux, tau, out)
+    }
+
+    /// Numerics-tiered scratch-assisted best response. Defaults to the
+    /// tier-less path (i.e. the exact kernels), which keeps every family
+    /// without a fast-path override bitwise-identical across tiers;
+    /// families whose scan is dominated by column reductions (LASSO,
+    /// logistic) override this to route the column dots through
+    /// [`crate::linalg::kernels`]. Mirrors
+    /// [`Problem::best_response_with_tier`].
+    fn best_response_with_tier(
+        &self,
+        i: usize,
+        x: &[f64],
+        aux: &[f64],
+        scratch: &[f64],
+        tau: f64,
+        _tier: NumericsTier,
+        out: &mut [f64],
+    ) -> f64 {
+        self.best_response_with(i, x, aux, scratch, tau, out)
     }
 
     /// Propagate an owned block's step into a residual-sized buffer
@@ -134,6 +154,27 @@ pub trait Problem: Send + Sync {
         out: &mut [f64],
     ) -> f64 {
         self.best_response(i, x, aux, tau, out)
+    }
+
+    /// Numerics-tiered best response using the shared scratch — what the
+    /// pool-parallel Jacobi scans call ([`NumericsTier::Exact`] is the
+    /// engine default and is bitwise-identical to
+    /// [`Problem::best_response_with`]). The default ignores the tier, so
+    /// families without a fast-path override stay bitwise-identical
+    /// across tiers (a valid, documented fast tier); LASSO and logistic
+    /// override it to route their column reductions through the tiered
+    /// kernel layer ([`crate::linalg::kernels`]).
+    fn best_response_with_tier(
+        &self,
+        i: usize,
+        x: &[f64],
+        aux: &[f64],
+        scratch: &[f64],
+        tau: f64,
+        _tier: NumericsTier,
+        out: &mut [f64],
+    ) -> f64 {
+        self.best_response_with(i, x, aux, scratch, tau, out)
     }
 
     /// Flops of one `prelude` call.

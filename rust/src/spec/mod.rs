@@ -34,7 +34,9 @@
 //! ```
 
 use crate::config::{ExperimentConfig, ProblemSpec};
-use crate::coordinator::{Backend, CommonOptions, SelectionSpec, SolveReport, TermMetric};
+use crate::coordinator::{
+    Backend, CommonOptions, NumericsTier, SelectionSpec, SolveReport, TermMetric,
+};
 use crate::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
 use crate::engine::{self, SolverSpec};
 use crate::parallel::WorkerPool;
@@ -124,6 +126,9 @@ pub struct SolveSpec {
     pub threads: usize,
     /// Engine data plane (`shared` | `sharded`).
     pub backend: Backend,
+    /// Kernel tier of the Jacobi-scan inner products
+    /// (`exact` | `fast`; see [`crate::linalg::kernels`]).
+    pub numerics: NumericsTier,
     /// Explicit block-selection strategy; `None` = the solver's default
     /// (greedy σ-rule for the coordinator families).
     pub selection: Option<SelectionSpec>,
@@ -142,6 +147,7 @@ pub struct SolveSpecBuilder {
     cores: Option<usize>,
     threads: Option<usize>,
     backend: Option<Backend>,
+    numerics: Option<NumericsTier>,
     selection: Option<SelectionSpec>,
     budgets: Budgets,
 }
@@ -186,6 +192,12 @@ impl SolveSpecBuilder {
     /// Set the engine data plane (default [`Backend::Shared`]).
     pub fn backend(mut self, backend: Backend) -> Self {
         self.backend = Some(backend);
+        self
+    }
+
+    /// Set the kernel tier (default [`NumericsTier::Exact`]).
+    pub fn numerics(mut self, numerics: NumericsTier) -> Self {
+        self.numerics = Some(numerics);
         self
     }
 
@@ -263,6 +275,7 @@ impl SolveSpecBuilder {
             cores,
             threads,
             backend: self.backend.unwrap_or_default(),
+            numerics: self.numerics.unwrap_or_default(),
             selection: self.selection,
             budgets: self.budgets,
         };
@@ -294,6 +307,7 @@ impl SolveSpec {
             trace_every: self.budgets.trace_every,
             cost_model: model,
             backend: self.backend,
+            numerics: self.numerics,
             name: self.name.clone(),
             ..Default::default()
         };
@@ -312,6 +326,7 @@ impl SolveSpec {
             ("cores", Json::Num(self.cores as f64)),
             ("threads", Json::Num(self.threads as f64)),
             ("backend", Json::str(self.backend.name())),
+            ("numerics", Json::str(self.numerics.name())),
             ("budgets", self.budgets.to_json()),
         ]);
         if let Some(sel) = &self.selection {
@@ -345,6 +360,9 @@ impl SolveSpec {
         }
         if let Some(backend) = j.get("backend").and_then(Json::as_str) {
             b = b.backend(Backend::parse(backend)?);
+        }
+        if let Some(numerics) = j.get("numerics").and_then(Json::as_str) {
+            b = b.numerics(NumericsTier::parse(numerics)?);
         }
         if let Some(sel) = j.get("selection") {
             b = b.selection(SelectionSpec::from_json(sel)?);
@@ -496,6 +514,8 @@ pub struct FrontendOverrides {
     pub threads: Option<usize>,
     /// Override the data-plane backend of every solver.
     pub backend: Option<Backend>,
+    /// Override the kernel tier of every solver.
+    pub numerics: Option<NumericsTier>,
     /// Override the block-selection strategy of every solver.
     pub selection: Option<SelectionSpec>,
 }
@@ -520,6 +540,10 @@ pub fn specs_from_experiment(
             Some(b) => b,
             None => Backend::parse(&settings.backend)?,
         };
+        let numerics = match ov.numerics {
+            Some(t) => t,
+            None => NumericsTier::parse(&settings.numerics)?,
+        };
         let mut b = SolveSpec::builder()
             .problem(cfg.problem.clone())
             .solver(&settings.name)
@@ -527,6 +551,7 @@ pub fn specs_from_experiment(
             .cores(settings.cores)
             .threads(ov.threads.unwrap_or(settings.threads))
             .backend(backend)
+            .numerics(numerics)
             .budgets(Budgets {
                 max_iters: cfg.max_iters,
                 max_wall_s: cfg.max_wall_s,
@@ -675,11 +700,13 @@ mod tests {
         let ov = FrontendOverrides {
             threads: Some(3),
             backend: Some(Backend::Sharded),
+            numerics: Some(NumericsTier::Fast),
             selection: Some(SelectionSpec::hybrid(0.25)),
         };
         let specs = specs_from_experiment(&cfg, &ov).unwrap();
         assert_eq!(specs[0].threads, 3);
         assert_eq!(specs[0].backend, Backend::Sharded);
+        assert_eq!(specs[0].numerics, NumericsTier::Fast);
         assert_eq!(specs[0].name, format!("flexa+{}", SelectionSpec::hybrid(0.25).name()));
     }
 }

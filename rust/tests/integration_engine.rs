@@ -8,8 +8,15 @@
 //! determinism contract. The bitwise identity against the *pre-refactor*
 //! loop itself is asserted by the frozen legacy baseline in
 //! `bench::engine_overhead` (unit test + `bench engine` panel).
+//!
+//! The **fast numerics tier** inherits the same contract: re-association
+//! happens only *within* a kernel call, never across the fixed chunk
+//! geometry or the ordered reductions, so fast-tier iterates must be
+//! bitwise-identical across worker-thread counts too — and a fast-tier
+//! run's final objective must agree with the exact tier's within the
+//! documented envelope on every solver family.
 
-use flexa::coordinator::{Backend, CommonOptions, SelectionSpec, TermMetric};
+use flexa::coordinator::{Backend, CommonOptions, NumericsTier, SelectionSpec, TermMetric};
 use flexa::datagen::{
     dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
 };
@@ -93,6 +100,21 @@ fn coordinator_specs(threads: usize, iters: usize, term: TermMetric) -> Vec<(Str
             SolverSpec::sparsa(mk("sparsa"), &SparsaOptions::default()),
         ),
     ]
+}
+
+/// [`coordinator_specs`] with every spec switched to the given numerics
+/// tier.
+fn coordinator_specs_tier(
+    threads: usize,
+    iters: usize,
+    term: TermMetric,
+    tier: NumericsTier,
+) -> Vec<(String, SolverSpec)> {
+    let mut specs = coordinator_specs(threads, iters, term);
+    for (_, spec) in &mut specs {
+        spec.common.numerics = tier;
+    }
+    specs
 }
 
 #[test]
@@ -250,6 +272,110 @@ fn sharded_backend_bitwise_on_all_six_families() {
                     "{kind}/{solver}: sharded run measured no communication"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn fast_tier_is_bitwise_across_threads_on_core_problems() {
+    // the fast tier re-associates only within a kernel call; the chunk
+    // geometry and ordered reductions are untouched, so its iterates are
+    // just as thread-invariant as the exact tier's
+    let problems: Vec<(&'static str, Box<dyn Problem>, TermMetric, usize)> = vec![
+        (
+            "lasso",
+            Box::new(LassoProblem::from_instance(nesterov_lasso(50, 70, 0.1, 1.0, 17))),
+            TermMetric::RelErr,
+            60,
+        ),
+        (
+            "logistic",
+            Box::new(LogisticProblem::from_instance(logistic_like(
+                LogisticPreset::Gisette,
+                0.012,
+                9,
+            ))),
+            TermMetric::Merit,
+            30,
+        ),
+        (
+            "nonconvex-qp",
+            Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
+                40, 60, 0.1, 10.0, 50.0, 1.0, 12,
+            ))),
+            TermMetric::Merit,
+            30,
+        ),
+    ];
+    for (kind, p, term, iters) in &problems {
+        for idx in 0..coordinator_specs(1, 1, *term).len() {
+            let build = |threads: usize| {
+                coordinator_specs_tier(threads, *iters, *term, NumericsTier::Fast)[idx].1.clone()
+            };
+            let label = format!("{kind}/{} fast-tier", coordinator_specs(1, 1, *term)[idx].0);
+            assert_threads_bitwise(p.as_ref(), &build, &label);
+        }
+    }
+}
+
+#[test]
+fn fast_tier_objective_agrees_with_exact_across_families() {
+    // end-to-end consequence of the kernel envelope: after a fixed
+    // iteration budget, the fast tier's objective lands within a
+    // documented relative tolerance of the exact tier's on every
+    // engine-routed family
+    const TOL: f64 = 1e-6;
+    let problems: Vec<(&'static str, Box<dyn Problem>, TermMetric, usize)> = vec![
+        (
+            "lasso",
+            Box::new(LassoProblem::from_instance(nesterov_lasso(50, 70, 0.1, 1.0, 17))),
+            TermMetric::RelErr,
+            60,
+        ),
+        (
+            "logistic",
+            Box::new(LogisticProblem::from_instance(logistic_like(
+                LogisticPreset::Gisette,
+                0.012,
+                9,
+            ))),
+            TermMetric::Merit,
+            30,
+        ),
+        (
+            "nonconvex-qp",
+            Box::new(NonconvexQpProblem::from_instance(nonconvex_qp(
+                40, 60, 0.1, 10.0, 50.0, 1.0, 12,
+            ))),
+            TermMetric::Merit,
+            30,
+        ),
+    ];
+    for (kind, p, term, iters) in &problems {
+        let x0 = vec![0.0; p.n()];
+        let n_specs = coordinator_specs(1, 1, *term).len();
+        for idx in 0..n_specs {
+            let exact = engine::solve(
+                p.as_ref(),
+                &x0,
+                &coordinator_specs_tier(1, *iters, *term, NumericsTier::Exact)[idx].1,
+            );
+            let fast = engine::solve(
+                p.as_ref(),
+                &x0,
+                &coordinator_specs_tier(1, *iters, *term, NumericsTier::Fast)[idx].1,
+            );
+            let label = &coordinator_specs(1, 1, *term)[idx].0;
+            assert!(exact.final_obj.is_finite(), "{kind}/{label}: exact objective");
+            assert!(fast.final_obj.is_finite(), "{kind}/{label}: fast objective");
+            let scale = exact.final_obj.abs().max(1.0);
+            assert!(
+                (exact.final_obj - fast.final_obj).abs() <= TOL * scale,
+                "{kind}/{label}: fast-tier objective {:e} drifted from exact {:e} \
+                 past rel tol {TOL:e}",
+                fast.final_obj,
+                exact.final_obj
+            );
         }
     }
 }

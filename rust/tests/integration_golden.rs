@@ -22,8 +22,17 @@
 //! checkout ships committed fixtures) a missing file is a hard **failure**
 //! instead — the drift check is armed and can never silently re-bootstrap.
 //! See `tests/fixtures/README.md`.
+//!
+//! The **fast numerics tier** (`--numerics fast`) rides the same matrix
+//! in relative-error mode: its iterates must land within
+//! `FLEXA_GOLDEN_TOL` (default `1e-6`, relative with an absolute floor)
+//! of the exact-tier reference — the committed fixture when one exists,
+//! an in-process exact run otherwise. The exact tier itself is **always**
+//! compared hex-bit; the tolerance mode exists only for the tier whose
+//! contract is "re-associated within a kernel call", never to loosen the
+//! default tier's bitwise pin.
 
-use flexa::coordinator::{Backend, CommonOptions, TermMetric};
+use flexa::coordinator::{Backend, CommonOptions, NumericsTier, TermMetric};
 use flexa::datagen::{
     dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
 };
@@ -142,6 +151,17 @@ fn spec_for(
     threads: usize,
     max_iters: usize,
 ) -> SolverSpec {
+    spec_for_tier(family, kind, backend, threads, max_iters, NumericsTier::Exact)
+}
+
+fn spec_for_tier(
+    family: &str,
+    kind: &str,
+    backend: Backend,
+    threads: usize,
+    max_iters: usize,
+    numerics: NumericsTier,
+) -> SolverSpec {
     let term = if kind == "lasso" { TermMetric::RelErr } else { TermMetric::Merit };
     let common = CommonOptions {
         max_iters,
@@ -152,6 +172,7 @@ fn spec_for(
         threads,
         trace_every: max_iters,
         backend,
+        numerics,
         name: format!("golden-{family}"),
         ..Default::default()
     };
@@ -169,9 +190,23 @@ fn iterates(
     backend: Backend,
     threads: usize,
 ) -> Vec<Vec<f64>> {
+    iterates_tier(problem, family, kind, backend, threads, NumericsTier::Exact)
+}
+
+fn iterates_tier(
+    problem: &dyn Problem,
+    family: &str,
+    kind: &str,
+    backend: Backend,
+    threads: usize,
+    numerics: NumericsTier,
+) -> Vec<Vec<f64>> {
     let x0 = vec![0.0; problem.n()];
     (1..=GOLDEN_ITERS)
-        .map(|k| engine::solve(problem, &x0, &spec_for(family, kind, backend, threads, k)).x)
+        .map(|k| {
+            engine::solve(problem, &x0, &spec_for_tier(family, kind, backend, threads, k, numerics))
+                .x
+        })
         .collect()
 }
 
@@ -277,6 +312,85 @@ fn golden_matrix(kind: &str) {
     }
 }
 
+/// Relative tolerance for the fast-tier comparison (`FLEXA_GOLDEN_TOL`,
+/// default `1e-6`). Applied per element as
+/// `|fast − exact| ≤ tol · max(|exact|, |fast|, 1)` — the unit floor
+/// doubles as the absolute tolerance around zero entries.
+fn golden_tol() -> f64 {
+    std::env::var("FLEXA_GOLDEN_TOL")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|t| t.is_finite() && *t > 0.0)
+        .unwrap_or(1e-6)
+}
+
+/// Parse a golden fixture back into iterate vectors; `None` when any
+/// token is malformed (e.g. a concurrently bootstrapping writer), so the
+/// caller falls back to an in-process exact reference.
+fn from_hex_lines(text: &str) -> Option<Vec<Vec<f64>>> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            l.split_whitespace()
+                .map(|t| u64::from_str_radix(t, 16).ok().map(f64::from_bits))
+                .collect::<Option<Vec<f64>>>()
+        })
+        .collect()
+}
+
+fn assert_within_tol(reference: &[Vec<f64>], got: &[Vec<f64>], tol: f64, what: &str) {
+    assert_eq!(reference.len(), got.len(), "{what}: iterate count");
+    for (k, (xr, xg)) in reference.iter().zip(got).enumerate() {
+        assert_eq!(xr.len(), xg.len(), "{what}: x^{} dimension", k + 1);
+        for i in 0..xr.len() {
+            let scale = xr[i].abs().max(xg[i].abs()).max(1.0);
+            assert!(
+                (xr[i] - xg[i]).abs() <= tol * scale,
+                "{what}: x^{}[{i}] fast tier drifted past FLEXA_GOLDEN_TOL = {tol:e} \
+                 ({:e} vs exact {:e})",
+                k + 1,
+                xg[i],
+                xr[i]
+            );
+        }
+    }
+}
+
+/// Fast-tier matrix for one problem kind: every family's fast-tier
+/// iterates must land within [`golden_tol`] of the exact-tier reference
+/// (the committed fixture when one parses cleanly, an in-process exact
+/// run otherwise). The exact tier's own hex-bit pin is untouched.
+fn golden_matrix_fast(kind: &str) {
+    let problem = build_problem(kind);
+    let tol = golden_tol();
+    for family in families_for(kind) {
+        let fast = iterates_tier(
+            problem.as_ref(),
+            family.name,
+            kind,
+            Backend::Shared,
+            1,
+            NumericsTier::Fast,
+        );
+        let path = fixtures_dir().join(format!("golden_{kind}_{}.txt", family.name));
+        let reference = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|stored| from_hex_lines(&stored))
+            .filter(|r| r.len() == GOLDEN_ITERS && r.iter().all(|x| x.len() == problem.n()))
+            .unwrap_or_else(|| {
+                iterates_tier(
+                    problem.as_ref(),
+                    family.name,
+                    kind,
+                    Backend::Shared,
+                    1,
+                    NumericsTier::Exact,
+                )
+            });
+        assert_within_tol(&reference, &fast, tol, &format!("{kind}/{} fast-tier", family.name));
+    }
+}
+
 #[test]
 fn golden_traces_lasso() {
     golden_matrix("lasso");
@@ -305,6 +419,36 @@ fn golden_traces_nonconvex_qp() {
 #[test]
 fn golden_traces_dictionary() {
     golden_matrix("dictionary");
+}
+
+#[test]
+fn golden_fast_tier_lasso() {
+    golden_matrix_fast("lasso");
+}
+
+#[test]
+fn golden_fast_tier_group_lasso() {
+    golden_matrix_fast("group-lasso");
+}
+
+#[test]
+fn golden_fast_tier_logistic() {
+    golden_matrix_fast("logistic");
+}
+
+#[test]
+fn golden_fast_tier_svm() {
+    golden_matrix_fast("svm");
+}
+
+#[test]
+fn golden_fast_tier_nonconvex_qp() {
+    golden_matrix_fast("nonconvex-qp");
+}
+
+#[test]
+fn golden_fast_tier_dictionary() {
+    golden_matrix_fast("dictionary");
 }
 
 #[test]
