@@ -1,0 +1,210 @@
+//! `bench compare` — the regression gate over generated bench JSON.
+//!
+//! The repo commits acceptance bands in `results/baseline.toml`; after a
+//! bench run regenerates its `BENCH_*.json`, `flexa bench compare`
+//! re-reads each gated file and checks every banded top-level numeric
+//! field against its `[min, max]` interval (booleans coerce to 0/1).
+//! Any out-of-band value, missing field, or unreadable file is a listed
+//! failure and the CLI exits nonzero — the CI bench-smoke job runs
+//! `bench schedule` + `bench compare`, so a scheduling regression fails
+//! the build instead of silently drifting.
+//!
+//! Baseline schema (hand-rolled TOML subset of `config::toml`):
+//!
+//! ```toml
+//! sections = ["bench_8"]        # gated sections, in report order
+//! [bench_8]
+//! file = "BENCH_8.json"         # relative to the bench out dir
+//! dag_deterministic = [1, 1]    # every other key: field = [min, max]
+//! ```
+//!
+//! The baseline is resolved from the bench out dir first (so tests and
+//! ad-hoc runs can carry their own), then from `results/baseline.toml`
+//! at the repo root (also reachable as `../results/` when running from
+//! `rust/`).
+
+use super::figures::{BenchConfig, FigureOutput};
+use crate::anyhow;
+use crate::config::TomlDoc;
+use crate::metrics::TextTable;
+use crate::util::error::Result;
+use crate::util::Json;
+
+/// Where the committed baseline may live, relative to the working dir
+/// (out-dir copy first so tests and ad-hoc runs can override).
+fn baseline_candidates(cfg: &BenchConfig) -> Vec<String> {
+    vec![
+        format!("{}/baseline.toml", cfg.out_dir),
+        "results/baseline.toml".to_string(),
+        "../results/baseline.toml".to_string(),
+    ]
+}
+
+/// A banded top-level field coerced to f64 (`true` → 1, `false` → 0).
+fn field_value(json: &Json, field: &str) -> Option<f64> {
+    let v = json.get(field)?;
+    v.as_f64().or_else(|| v.as_bool().map(|b| if b { 1.0 } else { 0.0 }))
+}
+
+/// The regression gate: check every banded field of every gated section
+/// against the freshly generated bench JSON. Returns the report plus
+/// `ok` (`false` = at least one failure; the CLI exits nonzero).
+pub fn compare(cfg: &BenchConfig) -> Result<(FigureOutput, bool)> {
+    let (path, text) = baseline_candidates(cfg)
+        .into_iter()
+        .find_map(|p| std::fs::read_to_string(&p).ok().map(|t| (p, t)))
+        .ok_or_else(|| anyhow!("no baseline.toml found (looked in out dir and results/)"))?;
+    let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    let sections: Vec<String> = doc
+        .get("sections")
+        .and_then(|v| v.as_array())
+        .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+        .unwrap_or_default();
+    if sections.is_empty() {
+        return Err(anyhow!("{path}: baseline needs a `sections` list"));
+    }
+
+    let mut table = TextTable::new(&["section", "field", "actual", "band", "ok"]);
+    let mut failures: Vec<String> = Vec::new();
+    for section in &sections {
+        let file = doc
+            .get_str(&format!("{section}.file"))
+            .ok_or_else(|| anyhow!("{path}: [{section}] needs a `file` key"))?;
+        let json_path = format!("{}/{file}", cfg.out_dir);
+        let json = match std::fs::read_to_string(&json_path) {
+            Ok(t) => match Json::parse(&t) {
+                Ok(j) => Some(j),
+                Err(e) => {
+                    failures.push(format!("{json_path}: invalid JSON: {e}"));
+                    None
+                }
+            },
+            Err(e) => {
+                failures.push(format!("{json_path}: {e} (run the matching bench first)"));
+                None
+            }
+        };
+        for key in doc.keys_under(section) {
+            let field = &key[section.len() + 1..];
+            if field == "file" {
+                continue;
+            }
+            let band = doc
+                .get(key)
+                .and_then(|v| v.as_f64_array())
+                .filter(|b| b.len() == 2)
+                .ok_or_else(|| anyhow!("{path}: {key} must be a [min, max] band"))?;
+            let (lo, hi) = (band[0], band[1]);
+            let actual = json.as_ref().and_then(|j| field_value(j, field));
+            let ok = matches!(actual, Some(v) if v >= lo && v <= hi);
+            if !ok {
+                failures.push(match actual {
+                    Some(v) => format!("{section}.{field} = {v} outside [{lo}, {hi}]"),
+                    None => format!("{section}.{field} missing from {json_path}"),
+                });
+            }
+            table.row(vec![
+                section.clone(),
+                field.to_string(),
+                actual.map_or("absent".into(), |v| format!("{v}")),
+                format!("[{lo}, {hi}]"),
+                if ok { "yes".into() } else { "NO".into() },
+            ]);
+        }
+    }
+
+    let ok = failures.is_empty();
+    let verdict = if ok {
+        format!("all bands hold ({} gated section(s))", sections.len())
+    } else {
+        format!("{} failure(s):\n  {}", failures.len(), failures.join("\n  "))
+    };
+    let text = format!("regression gate vs {path}: {verdict}\n{}", table.render());
+    Ok((FigureOutput { id: "bench_compare".into(), traces: vec![], text }, ok))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_in(dir: &str) -> BenchConfig {
+        BenchConfig {
+            scale: 0.05,
+            budget_s: 1.0,
+            out_dir: dir.to_string(),
+            model: crate::simulator::CostModel::default(),
+            seed: 9,
+            threads: vec![1, 2],
+        }
+    }
+
+    #[test]
+    fn compare_passes_in_band_and_fails_out_of_band() {
+        let dir = std::env::temp_dir().join("flexa_bench_compare_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir = dir.to_string_lossy().into_owned();
+        std::fs::write(
+            format!("{dir}/BENCH_8.json"),
+            r#"{"dag_deterministic":true,"mean_epochs":6.5,"workloads":2}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            format!("{dir}/baseline.toml"),
+            "sections = [\"bench_8\"]\n[bench_8]\nfile = \"BENCH_8.json\"\n\
+             dag_deterministic = [1, 1]\nmean_epochs = [1.0, 64.0]\nworkloads = [2, 2]\n",
+        )
+        .unwrap();
+        let (out, ok) = compare(&cfg_in(&dir)).unwrap();
+        assert!(ok, "in-band values must pass: {}", out.text);
+        assert!(out.text.contains("all bands hold"));
+
+        // tighten one band past the actual value: must fail, naming it
+        std::fs::write(
+            format!("{dir}/baseline.toml"),
+            "sections = [\"bench_8\"]\n[bench_8]\nfile = \"BENCH_8.json\"\n\
+             mean_epochs = [10.0, 64.0]\n",
+        )
+        .unwrap();
+        let (out, ok) = compare(&cfg_in(&dir)).unwrap();
+        assert!(!ok, "out-of-band value must fail");
+        assert!(out.text.contains("mean_epochs"), "{}", out.text);
+
+        // a gated field the JSON lacks is a failure, not a skip
+        std::fs::write(
+            format!("{dir}/baseline.toml"),
+            "sections = [\"bench_8\"]\n[bench_8]\nfile = \"BENCH_8.json\"\n\
+             nonexistent_metric = [0, 1]\n",
+        )
+        .unwrap();
+        let (out, ok) = compare(&cfg_in(&dir)).unwrap();
+        assert!(!ok);
+        assert!(out.text.contains("nonexistent_metric"), "{}", out.text);
+    }
+
+    #[test]
+    fn compare_fails_on_missing_json_and_rejects_bad_baseline() {
+        let dir = std::env::temp_dir().join("flexa_bench_compare_missing_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir = dir.to_string_lossy().into_owned();
+        std::fs::write(
+            format!("{dir}/baseline.toml"),
+            "sections = [\"bench_9\"]\n[bench_9]\nfile = \"BENCH_9.json\"\nx = [0, 1]\n",
+        )
+        .unwrap();
+        let (out, ok) = compare(&cfg_in(&dir)).unwrap();
+        assert!(!ok, "missing bench JSON must fail the gate");
+        assert!(out.text.contains("BENCH_9.json"), "{}", out.text);
+
+        // malformed band is a hard error (baseline bug, not a regression)
+        std::fs::write(
+            format!("{dir}/baseline.toml"),
+            "sections = [\"bench_9\"]\n[bench_9]\nfile = \"BENCH_9.json\"\nx = [0]\n",
+        )
+        .unwrap();
+        assert!(compare(&cfg_in(&dir)).is_err());
+
+        // no sections list is a hard error too
+        std::fs::write(format!("{dir}/baseline.toml"), "x = 1\n").unwrap();
+        assert!(compare(&cfg_in(&dir)).is_err());
+    }
+}

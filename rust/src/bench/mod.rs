@@ -2,13 +2,16 @@
 //! experiment of the paper's §VI) and a micro-benchmark harness for the
 //! kernel/runtime hot paths.
 
+pub mod compare;
 pub mod engine_overhead;
 pub mod figures;
 pub mod harness;
 pub mod kernel_panel;
+pub mod schedule_panel;
 pub mod serve_panel;
 pub mod shard_panel;
 
+pub use compare::compare;
 pub use engine_overhead::engine_overhead;
 pub use figures::{
     ablations, fig1, fig2, fig3, fig4, fig5, selection_panel, smoke, table1, BenchConfig,
@@ -16,6 +19,7 @@ pub use figures::{
 };
 pub use harness::{bench, bench_scaling, BenchResult, ScalingPoint};
 pub use kernel_panel::kernel_panel;
+pub use schedule_panel::schedule_panel;
 pub use serve_panel::serve_panel;
 pub use shard_panel::shard_panel;
 

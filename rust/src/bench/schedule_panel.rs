@@ -1,0 +1,255 @@
+//! `bench schedule` — the barrier-vs-dag scheduling panel.
+//!
+//! Two claims back the dag schedule (the barrier-free dependency-graph
+//! epoch engine of `engine::depgraph` + `parallel::epoch`), and this
+//! panel asserts the hard one and measures the soft one on CSC-backed
+//! workloads where the dependency graph has real independence:
+//!
+//! 1. **replay determinism** — `--schedule dag` produces
+//!    **bitwise-identical** iterates across every measured thread count,
+//!    across a repeat run of the same spec, and across both backends
+//!    (asserted; any divergence fails the panel). The dag is *not*
+//!    bitwise-equal to `barrier` — it is a different (barrier-free)
+//!    iteration — but it is a deterministic one.
+//! 2. **barrier idle shrinks** — the barrier schedule joins a pool
+//!    barrier several times per iteration (prelude, scan, reduce,
+//!    update); the dag schedule drains one work queue. The panel diffs
+//!    [`WorkerPool::stats`](crate::parallel::WorkerPool::stats)
+//!    snapshots around each solve (`SolveReport::sched.barrier_idle_s`)
+//!    and reports the aggregate idle reduction on multi-threaded runs.
+//!
+//! Results land in `results/BENCH_8.json` (the trajectory convention of
+//! `BENCH_5`..`BENCH_7`); `bench compare` gates the top-level numerics
+//! against the bands committed in `results/baseline.toml`.
+
+use super::figures::{BenchConfig, FigureOutput};
+use crate::bail;
+use crate::coordinator::{Backend, CommonOptions, Schedule, TermMetric};
+use crate::datagen::{logistic_like, LogisticPreset};
+use crate::engine::{self, SolverSpec};
+use crate::linalg::{CscMatrix, Matrix};
+use crate::metrics::TextTable;
+use crate::problems::{LassoProblem, LogisticProblem, Problem};
+use crate::util::error::Result;
+use crate::util::Json;
+
+/// Fixed iteration count: every schedule does the same outer work.
+const ITERS: usize = 30;
+/// Simulated cores for the cost model (not the physical thread axis).
+const CORES: usize = 4;
+
+/// The CSC workloads of the panel: a banded sparse LASSO (3 nnz per
+/// column, strided rows — overlapping but far from complete supports)
+/// and the real-sim-shaped sparse logistic instance. Both report
+/// [`Problem::block_rows`], so the dag coloring is genuinely sparse.
+fn panel_problems(cfg: &BenchConfig) -> Vec<(&'static str, Box<dyn Problem>)> {
+    let (m, n) = cfg.dims(400, 600);
+    let mut t = Vec::new();
+    for j in 0..n {
+        for d in 0..3usize {
+            t.push(((j * 2 + d * 7) % m, j, 1.0 + ((j + d) % 11) as f64 * 0.1));
+        }
+    }
+    let a = Matrix::Sparse(CscMatrix::from_triplets(m, n, &t));
+    let b: Vec<f64> = (0..m).map(|r| (r % 9) as f64 * 0.25 - 1.0).collect();
+    let realsim_scale = (0.05 * cfg.scale).clamp(0.002, 1.0);
+    vec![
+        (
+            "sparse-lasso",
+            Box::new(LassoProblem::new(a, b, 0.05, None)) as Box<dyn Problem>,
+        ),
+        (
+            "logistic-realsim",
+            Box::new(LogisticProblem::from_instance(logistic_like(
+                LogisticPreset::RealSim,
+                realsim_scale,
+                cfg.seed + 31,
+            ))),
+        ),
+    ]
+}
+
+/// The scheduling panel: barrier vs dag:1 per workload × thread count,
+/// with hard replay-determinism assertions on every dag run. Bails on
+/// any bitwise divergence; writes `BENCH_8.json`.
+pub fn schedule_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
+    let problems = panel_problems(cfg);
+    let mut table = TextTable::new(&[
+        "workload",
+        "schedule",
+        "threads",
+        "epochs",
+        "tasks",
+        "idle_s",
+        "wait_s",
+        "wall_s",
+    ]);
+    let mut rows = Vec::new();
+    let (mut idle_barrier, mut idle_dag) = (0.0f64, 0.0f64);
+    let (mut epochs_sum, mut epochs_n) = (0.0f64, 0usize);
+
+    for (kind, problem) in &problems {
+        let x0 = vec![0.0; problem.n()];
+        let term = if problem.v_star().is_some() { TermMetric::RelErr } else { TermMetric::Merit };
+        let mk = |schedule: Schedule, threads: usize, backend: Backend| -> Result<SolverSpec> {
+            let common = CommonOptions {
+                max_iters: ITERS,
+                max_wall_s: f64::MAX,
+                tol: 0.0, // fixed work: every schedule runs exactly ITERS
+                term,
+                cores: CORES,
+                threads,
+                trace_every: ITERS,
+                cost_model: cfg.model,
+                backend,
+                schedule,
+                name: format!("flexa@{}", schedule.name()),
+                ..Default::default()
+            };
+            SolverSpec::from_name("flexa", common, None, 0.5, CORES)
+                .map_err(|e| crate::anyhow!(e))
+        };
+        let mut dag_base: Option<Vec<f64>> = None;
+        for schedule in [Schedule::Barrier, Schedule::Dag { staleness: 1 }] {
+            for &threads in &cfg.threads {
+                let spec = mk(schedule, threads, Backend::Shared)?;
+                let r = engine::solve(problem.as_ref(), &x0, &spec);
+                if schedule.is_dag() {
+                    match &dag_base {
+                        None => {
+                            // first dag config: replay the identical spec
+                            // and cross-check the sharded backend
+                            let again = engine::solve(problem.as_ref(), &x0, &spec);
+                            if again.x != r.x {
+                                bail!("dag replay diverged bitwise on {kind}");
+                            }
+                            let sharded = engine::solve(
+                                problem.as_ref(),
+                                &x0,
+                                &mk(schedule, threads, Backend::Sharded)?,
+                            );
+                            if sharded.x != r.x {
+                                bail!("sharded dag diverged from shared dag on {kind}");
+                            }
+                            dag_base = Some(r.x.clone());
+                        }
+                        Some(base) => {
+                            if base != &r.x {
+                                bail!(
+                                    "dag iterates diverged across thread counts on {kind} \
+                                     at threads={threads} — the epoch executor must be \
+                                     replay-deterministic"
+                                );
+                            }
+                        }
+                    }
+                    epochs_sum += r.sched.epochs as f64;
+                    epochs_n += 1;
+                    if threads > 1 {
+                        idle_dag += r.sched.barrier_idle_s;
+                    }
+                } else if threads > 1 {
+                    idle_barrier += r.sched.barrier_idle_s;
+                }
+                table.row(vec![
+                    (*kind).to_string(),
+                    schedule.name(),
+                    threads.to_string(),
+                    r.sched.epochs.to_string(),
+                    r.sched.tasks.to_string(),
+                    format!("{:.4}", r.sched.barrier_idle_s),
+                    format!("{:.4}", r.sched.queue_wait_s),
+                    format!("{:.3}", r.wall_s),
+                ]);
+                // sched fields come from the one SchedStats encoder shared
+                // with serve responses — the schemas cannot drift
+                rows.push(
+                    r.sched
+                        .to_json()
+                        .with("workload", Json::str(*kind))
+                        .with("schedule", Json::str(schedule.name()))
+                        .with("threads", Json::Num(threads as f64))
+                        .with("iters", Json::Num(r.iters as f64))
+                        .with("final_obj", Json::Num(r.final_obj))
+                        .with("wall_s", Json::Num(r.wall_s)),
+                );
+            }
+        }
+    }
+
+    // aggregate idle reduction over the multi-threaded runs (single-
+    // threaded pools run inline — no barrier, nothing to reduce)
+    let idle_reduction_frac =
+        if idle_barrier > 0.0 { 1.0 - idle_dag / idle_barrier } else { 0.0 };
+    let mean_epochs = if epochs_n > 0 { epochs_sum / epochs_n as f64 } else { 0.0 };
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("schedule_panel")),
+        ("iters", Json::Num(ITERS as f64)),
+        ("workloads", Json::Num(problems.len() as f64)),
+        // every dag run above survived the bitwise assertions or we bailed
+        ("dag_deterministic", Json::Bool(true)),
+        ("mean_epochs", Json::Num(mean_epochs)),
+        ("barrier_idle_s", Json::Num(idle_barrier)),
+        ("dag_idle_s", Json::Num(idle_dag)),
+        ("idle_reduction_frac", Json::Num(idle_reduction_frac)),
+        ("runs", Json::arr(rows)),
+    ]);
+    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    let path = format!("{}/BENCH_8.json", cfg.out_dir);
+    let _ = std::fs::write(&path, payload.to_string_compact());
+
+    let text = format!(
+        "scheduling panel ({ITERS} fixed iters, {} CSC workloads; every dag run \
+         bitwise replay-deterministic across threads/backends; barrier idle \
+         {idle_barrier:.4}s -> dag {idle_dag:.4}s on threads>1, reduction \
+         {:.0}%) -> {path}\n{}",
+        problems.len(),
+        idle_reduction_frac * 100.0,
+        table.render()
+    );
+    Ok(FigureOutput { id: "bench_schedule".into(), traces: vec![], text })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_panel_asserts_dag_determinism_and_writes_json() {
+        let cfg = BenchConfig {
+            scale: 0.05,
+            budget_s: 1.0,
+            out_dir: std::env::temp_dir()
+                .join("flexa_bench_schedule_test")
+                .to_string_lossy()
+                .into_owned(),
+            model: crate::simulator::CostModel::default(),
+            seed: 9,
+            threads: vec![1, 2],
+        };
+        let out = schedule_panel(&cfg).expect("panel must pass");
+        assert!(out.text.contains("BENCH_8.json"));
+        let text = std::fs::read_to_string(format!("{}/BENCH_8.json", cfg.out_dir))
+            .expect("BENCH_8.json written");
+        let json = Json::parse(&text).expect("valid json");
+        assert_eq!(json.get("dag_deterministic"), Some(&Json::Bool(true)));
+        assert_eq!(json.get("workloads").and_then(Json::as_usize), Some(2));
+        assert!(json.get("mean_epochs").and_then(Json::as_f64).unwrap() >= 1.0);
+        let runs = json.get("runs").and_then(Json::as_arr).expect("runs array");
+        // 2 workloads × 2 schedules × 2 thread counts
+        assert_eq!(runs.len(), 8);
+        for r in runs {
+            let sched = r.get("schedule").and_then(Json::as_str).unwrap();
+            let epochs = r.get("epochs").and_then(Json::as_usize).unwrap();
+            let tasks = r.get("tasks").and_then(Json::as_usize).unwrap();
+            match sched {
+                "barrier" => assert_eq!(tasks, 0, "barrier runs have no dag tasks"),
+                _ => {
+                    assert!(epochs >= 1, "dag run lost its epoch count: {r:?}");
+                    assert!(tasks > 0, "dag run counted no events: {r:?}");
+                }
+            }
+        }
+    }
+}

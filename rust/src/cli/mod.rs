@@ -15,7 +15,7 @@
 //!   JSON `SolveSpec` requests over TCP, warm problem/pool/iterate
 //!   caches, graceful drain on a `shutdown` request (`docs/SERVING.md`);
 //! * `flexa bench
-//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine|shard|serve|kernels|smoke|all>`
+//!   <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine|shard|serve|kernels|schedule|compare|smoke|all>`
 //!   — regenerate the paper's figures/tables into `results/` (`selection`
 //!   is the strategy-comparison panel; `engine` is the SolverCore
 //!   overhead panel writing `BENCH_3.json`; `shard` is the sharded-backend
@@ -24,8 +24,12 @@
 //!   `BENCH_5.json`; `serve` is the ramped serve-daemon driver writing
 //!   p50/p99/throughput panels to `BENCH_6.json`; `kernels` is the
 //!   per-kernel exact-vs-fast numerics-tier throughput panel writing
-//!   `BENCH_7.json`; `smoke` is the seconds-long CI target that also
-//!   writes `BENCH_smoke.json`);
+//!   `BENCH_7.json`; `schedule` is the barrier-vs-dag scheduling panel
+//!   proving dag replay determinism and measuring barrier-idle reduction
+//!   into `BENCH_8.json`; `compare` re-reads the committed bench JSON and
+//!   gates it against the bands of `results/baseline.toml`, exiting
+//!   nonzero on regression; `smoke` is the seconds-long CI target that
+//!   also writes `BENCH_smoke.json`);
 //! * `flexa runtime-check` — load + execute every artifact and compare
 //!   against the native engine (the L1↔L3 smoke test);
 //! * `flexa info` — platform, artifact, and cost-model report.
@@ -34,7 +38,7 @@ pub mod args;
 
 use crate::bench::{self, BenchConfig};
 use crate::config::{ExperimentConfig, ServerSettings};
-use crate::coordinator::{Backend, NumericsTier, SelectionSpec};
+use crate::coordinator::{Backend, NumericsTier, Schedule, SelectionSpec};
 use crate::metrics::{Trace, XAxis, YMetric};
 use crate::spec::{self, FrontendOverrides, SolveSpec};
 use crate::util::error::{Context, Result};
@@ -75,10 +79,10 @@ flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
 USAGE:
   flexa solve --config <file.toml> [--threads N] [--selection SPEC]
               [--backend shared|sharded] [--numerics exact|fast]
-              [--quiet|--verbose]
+              [--schedule barrier|dag[:N]] [--quiet|--verbose]
   flexa serve [--config <file.toml>] [--host HOST] [--port PORT]
   flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine
-               |shard|serve|kernels|smoke|all>
+               |shard|serve|kernels|schedule|compare|smoke|all>
   flexa runtime-check
   flexa info
 
@@ -111,6 +115,13 @@ OPTIONS:
                       or fast (unrolled/SIMD cache-blocked kernels;
                       re-associated reductions within documented bounds,
                       still deterministic per thread count/backend)
+  --schedule S        iteration schedule for every solver in the config:
+                      barrier (two-phase scan/merge, bitwise-pinned,
+                      default) or dag[:N] (the barrier-free dependency-
+                      graph epoch engine; N = bounded staleness, dag:0 =
+                      chromatic Gauss-Seidel, dag:inf = Jacobi-style
+                      reads; Jacobi-merge solvers only; replay-
+                      deterministic across threads and backends)
   --host / --port     serve bind address overrides (default 127.0.0.1:7070
                       or the config's [server] table; port 0 = ephemeral)
 
@@ -138,11 +149,21 @@ pub fn overrides_from_args(args: &Args) -> Result<FrontendOverrides> {
         Some(s) => Some(NumericsTier::parse(s).map_err(|e| anyhow!(e))?),
         None => None,
     };
+    let schedule = match args.value("schedule") {
+        Some(s) => Some(Schedule::parse(s).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
     let selection = match args.value("selection") {
         Some(s) => Some(SelectionSpec::parse(s).map_err(|e| anyhow!(e))?),
         None => None,
     };
-    Ok(FrontendOverrides { threads: args.value_usize("threads"), backend, numerics, selection })
+    Ok(FrontendOverrides {
+        threads: args.value_usize("threads"),
+        backend,
+        numerics,
+        schedule,
+        selection,
+    })
 }
 
 /// Lower `flexa solve` argv onto the parsed config plus one validated
@@ -264,6 +285,15 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         "shard" => run(vec![bench::shard_panel(&cfg)?]),
         "serve" => run(vec![bench::serve_panel(&cfg)?]),
         "kernels" => run(vec![bench::kernel_panel(&cfg)?]),
+        "schedule" => run(vec![bench::schedule_panel(&cfg)?]),
+        "compare" => {
+            let (out, ok) = bench::compare(&cfg)?;
+            println!("=== {} ===\n{}", out.id, out.text);
+            if !ok {
+                eprintln!("bench compare: REGRESSION against results/baseline.toml");
+                return Ok(1);
+            }
+        }
         "smoke" => run(vec![bench::smoke(&cfg)]),
         "all" => {
             run(vec![bench::table1(&cfg)]);
@@ -277,6 +307,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
             run(vec![bench::engine_overhead(&cfg)?]);
             run(vec![bench::shard_panel(&cfg)?]);
             run(vec![bench::kernel_panel(&cfg)?]);
+            run(vec![bench::schedule_panel(&cfg)?]);
         }
         other => bail!("unknown bench target {other:?}"),
     }

@@ -21,6 +21,8 @@
 //! threads = 1
 //! backend = "shared"             # shared | sharded (engine data plane)
 //! numerics = "exact"             # exact | fast (kernel tier)
+//! schedule = "barrier"           # barrier | dag | dag:N | dag:inf
+//!                                # (iteration schedule)
 //!
 //! [problem]
 //! kind = "lasso"                 # lasso | group-lasso | logistic | svm
@@ -136,6 +138,27 @@
 //!   for a fixed input, iterates are bitwise-identical across thread
 //!   counts, backends, and the `simd` cargo feature. Accept/reject
 //!   decisions (sweeps, merit passes, aux updates) always run exact.
+//!
+//! ## `schedule`
+//!
+//! How block work is ordered within an iteration (CLI override:
+//! `--schedule <barrier|dag[:N]>`):
+//!
+//! * `"barrier"` (default) — the historical two-phase iteration: all
+//!   selected best responses, a global barrier, then the merge.
+//!   Bitwise-identical to every release before the schedule axis.
+//! * `"dag"` / `"dag:N"` / `"dag:inf"` — the barrier-free
+//!   dependency-graph epoch engine (`engine::depgraph` +
+//!   `parallel::epoch`): blocks are colored into conflict-free epochs
+//!   from the structural column overlap of the data matrix and executed
+//!   by a work-queue with per-event dependencies instead of a global
+//!   barrier. `N` is the bounded staleness (epoch distance a read may
+//!   lag a write; `dag` = `dag:1`, `dag:0` = chromatic Gauss-Seidel,
+//!   `dag:inf` = Jacobi-style reads with ordered writes). Deterministic
+//!   (replay-identical across thread counts and backends) but **not**
+//!   bitwise-equal to `barrier`. Jacobi-merge solvers only (`flexa`,
+//!   `grock`, `greedy-1bcd`), constant/vanishing steps, exact inner
+//!   solves; rejected elsewhere at build time.
 //!
 //! ## `cores` vs `threads`
 //!
@@ -545,6 +568,10 @@ pub struct SolverSettings {
     /// bitwise-pinned) or "fast" (unrolled/SIMD, re-associated within
     /// documented bounds — see the module-level `numerics` section).
     pub numerics: String,
+    /// iteration schedule: "barrier" (default, bitwise-pinned) or
+    /// "dag"/"dag:N"/"dag:inf" (the dependency-graph epoch engine — see
+    /// the module-level `schedule` section).
+    pub schedule: String,
 }
 
 impl Default for SolverSettings {
@@ -556,6 +583,7 @@ impl Default for SolverSettings {
             threads: 1,
             backend: "shared".into(),
             numerics: "exact".into(),
+            schedule: "barrier".into(),
         }
     }
 }
@@ -630,6 +658,16 @@ impl ExperimentConfig {
             if let Err(e) = crate::coordinator::NumericsTier::parse(&numerics) {
                 return Err(format!("solver {name:?}: {e}"));
             }
+            let schedule = doc
+                .get_str(&format!("{prefix}.schedule"))
+                .or_else(|| doc.get_str("schedule"))
+                .unwrap_or("barrier")
+                .to_string();
+            // and for the iteration schedule (solver-compatibility is
+            // checked later by SolverSpec::from_name / the spec builder)
+            if let Err(e) = crate::coordinator::Schedule::parse(&schedule) {
+                return Err(format!("solver {name:?}: {e}"));
+            }
             solvers.push(SolverSettings {
                 sigma: doc
                     .get_f64(&format!("{prefix}.sigma"))
@@ -645,6 +683,7 @@ impl ExperimentConfig {
                     .unwrap_or(1),
                 backend,
                 numerics,
+                schedule,
                 name,
             });
         }
@@ -884,6 +923,33 @@ tol = 1e-6
         .unwrap();
         assert_eq!(cfg.solvers[0].numerics, "fast");
         assert_eq!(cfg.solvers[1].numerics, "exact", "per-solver override wins");
+    }
+
+    #[test]
+    fn schedule_defaults_barrier_and_parses_dag() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"lasso\"\nm = 20\nn = 30\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.solvers[0].schedule, "barrier");
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa, grock\"\nschedule = \"dag:2\"\n\
+             [problem]\nkind = \"lasso\"\nm = 20\nn = 30\n\
+             [solver.grock]\nschedule = \"barrier\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.solvers[0].schedule, "dag:2");
+        assert_eq!(cfg.solvers[1].schedule, "barrier", "per-solver override wins");
+    }
+
+    #[test]
+    fn unknown_schedule_is_rejected_at_parse_time() {
+        let err = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\nschedule = \"chaotic\"\n\
+             [problem]\nkind = \"lasso\"\nm = 20\nn = 30\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown schedule"), "{err}");
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! simulated clock and flop accounting.
 
 use super::{CommonOptions, SolveReport, StopReason, TermMetric};
-use crate::metrics::{CommStats, IterCost, Trace, TracePoint};
+use crate::metrics::{CommStats, IterCost, SchedStats, Trace, TracePoint};
 use crate::problems::{relative_error, Problem};
 use crate::simulator::SimClock;
 use crate::util::Timer;
@@ -35,6 +35,9 @@ pub struct RunState<'a> {
     /// Communication measured by the sharded backend (zeros otherwise);
     /// the engine copies its counters here before [`RunState::finish`].
     pub comm: CommStats,
+    /// Scheduler metrics measured by the engine (barrier idle on every
+    /// run; epoch/queue counters on dag-schedule runs).
+    pub sched: SchedStats,
     /// Reduction rounds predicted by the charged [`IterCost`]s.
     pub predicted_rounds: f64,
     /// f64 words the predicted rounds would move.
@@ -57,6 +60,7 @@ impl<'a> RunState<'a> {
             discarded: 0,
             scanned: 0,
             comm: CommStats::default(),
+            sched: SchedStats::default(),
             predicted_rounds: 0.0,
             predicted_words: 0.0,
         }
@@ -167,6 +171,7 @@ impl<'a> RunState<'a> {
             discarded: self.discarded,
             scanned: self.scanned,
             comm: self.comm,
+            sched: self.sched,
             predicted_rounds: self.predicted_rounds,
             predicted_words: self.predicted_words,
             trace: self.trace,

@@ -26,7 +26,7 @@ pub use stepsize::StepRule;
 pub use strategy::{Candidates, SelectionSpec, SelectionStrategy};
 pub use tau::{TauController, TauDecision, TauOptions};
 
-use crate::metrics::{CommStats, Trace};
+use crate::metrics::{CommStats, SchedStats, Trace};
 use crate::simulator::CostModel;
 use crate::util::Json;
 
@@ -68,6 +68,73 @@ impl Backend {
             Backend::Shared => "shared",
             Backend::Sharded => "sharded",
         }
+    }
+}
+
+/// How the engine orders block work within an iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Schedule {
+    /// The classic barrier model: every parallel pass (scan, update,
+    /// reduction) ends at a pool-wide barrier before the next begins.
+    /// Bitwise-identical to every release so far — the default.
+    #[default]
+    Barrier,
+    /// Barrier-free dependency-graph scheduling: per-block read/write
+    /// events ordered by the column-overlap DAG of
+    /// [`crate::engine::DepGraph`] and claimed from a work queue by
+    /// whichever worker is free ([`crate::parallel::epoch`]). `staleness`
+    /// bounds how many graph-color epochs a block's *read* may lag the
+    /// writes of its neighbors: `0` = chromatic Gauss-Seidel (reads
+    /// always see neighbors' fresh writes), `usize::MAX` = Jacobi-style
+    /// reads (all reads precede all neighbor writes). Deterministic and
+    /// thread-count-invariant — ordering comes from the graph, not from
+    /// claim timing. Only the Jacobi-merge families support it.
+    Dag {
+        /// Bounded-staleness window in graph-color epochs.
+        staleness: usize,
+    },
+}
+
+impl Schedule {
+    /// Parse the CLI/TOML schedule name
+    /// (`barrier` | `dag` | `dag:N` | `dag:inf`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "barrier" => Ok(Schedule::Barrier),
+            "dag" => Ok(Schedule::Dag { staleness: 1 }),
+            other => {
+                if let Some(rest) = other.strip_prefix("dag:") {
+                    match rest {
+                        "inf" | "∞" | "max" => {
+                            return Ok(Schedule::Dag { staleness: usize::MAX })
+                        }
+                        _ => {
+                            if let Ok(n) = rest.parse::<usize>() {
+                                return Ok(Schedule::Dag { staleness: n });
+                            }
+                        }
+                    }
+                }
+                Err(format!(
+                    "unknown schedule {other:?} (expected barrier|dag|dag:N|dag:inf)"
+                ))
+            }
+        }
+    }
+
+    /// The CLI/TOML name of this schedule; round-trips through
+    /// [`Schedule::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            Schedule::Barrier => "barrier".into(),
+            Schedule::Dag { staleness: usize::MAX } => "dag:inf".into(),
+            Schedule::Dag { staleness } => format!("dag:{staleness}"),
+        }
+    }
+
+    /// Whether this is a dag-mode schedule.
+    pub fn is_dag(&self) -> bool {
+        matches!(self, Schedule::Dag { .. })
     }
 }
 
@@ -121,6 +188,12 @@ pub struct CommonOptions {
     /// deterministic but re-associated within documented bounds — see
     /// [`crate::linalg::kernels`])
     pub numerics: NumericsTier,
+    /// execution schedule of the engine's iteration loop
+    /// ([`Schedule::Barrier`] = the classic barrier-per-pass model,
+    /// bitwise-identical to every release so far;
+    /// [`Schedule::Dag`] = barrier-free dependency-graph epochs — see
+    /// [`crate::parallel::epoch`])
+    pub schedule: Schedule,
     /// run name (plots, logs)
     pub name: String,
 }
@@ -141,6 +214,7 @@ impl Default for CommonOptions {
             cost_model: CostModel::default(),
             backend: Backend::Shared,
             numerics: NumericsTier::Exact,
+            schedule: Schedule::Barrier,
             name: "solver".into(),
         }
     }
@@ -223,6 +297,41 @@ impl StopReason {
     }
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_names_round_trip_through_parse() {
+        for s in [
+            Schedule::Barrier,
+            Schedule::Dag { staleness: 0 },
+            Schedule::Dag { staleness: 1 },
+            Schedule::Dag { staleness: 7 },
+            Schedule::Dag { staleness: usize::MAX },
+        ] {
+            assert_eq!(Schedule::parse(&s.name()).unwrap(), s, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn schedule_parse_accepts_spellings_and_rejects_garbage() {
+        assert_eq!(Schedule::parse("dag").unwrap(), Schedule::Dag { staleness: 1 });
+        assert_eq!(Schedule::parse("dag:0").unwrap(), Schedule::Dag { staleness: 0 });
+        for inf in ["dag:inf", "dag:∞", "dag:max"] {
+            assert_eq!(
+                Schedule::parse(inf).unwrap(),
+                Schedule::Dag { staleness: usize::MAX }
+            );
+        }
+        for bad in ["", "DAG", "dag:", "dag:-1", "dag:x", "epoch", "barrier "] {
+            assert!(Schedule::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        assert!(!Schedule::Barrier.is_dag());
+        assert!(Schedule::Dag { staleness: 0 }.is_dag());
+    }
+}
+
 /// Result of a solver run.
 #[derive(Clone, Debug)]
 pub struct SolveReport {
@@ -255,6 +364,9 @@ pub struct SolveReport {
     /// communication actually performed by the sharded backend (all
     /// zeros on [`Backend::Shared`] runs)
     pub comm: CommStats,
+    /// scheduler behaviour measured by the engine: barrier idle time on
+    /// every run; epochs/tasks/queue metrics on `--schedule dag` runs
+    pub sched: SchedStats,
     /// reduction rounds the cost model *predicted* (Σ over iterations of
     /// `IterCost::reduce_rounds`) — `bench shard` compares this axis
     /// against the measured [`SolveReport::comm`]
@@ -295,6 +407,7 @@ impl SolveReport {
             ("discarded", Json::Num(self.discarded as f64)),
             ("scanned", Json::Num(self.scanned as f64)),
             ("comm", self.comm.to_json()),
+            ("sched", self.sched.to_json()),
             ("predicted_rounds", Json::Num(self.predicted_rounds)),
             ("predicted_words", Json::Num(self.predicted_words)),
         ]);

@@ -44,6 +44,7 @@
 //!
 //! [`CommonOptions::numerics`]: crate::coordinator::CommonOptions
 
+use super::depgraph::DepGraph;
 use super::sharded::ShardedWorkspace;
 use super::workspace::Workspace;
 use super::{Accel, DirectionRule, MergeRule, SolverSpec};
@@ -51,10 +52,11 @@ use crate::coordinator::driver::RunState;
 use crate::coordinator::stepsize::{armijo_accept, StepRule};
 use crate::coordinator::strategy::{Candidates, SelectionStrategy};
 use crate::coordinator::tau::{TauController, TauDecision, TauOptions};
-use crate::coordinator::{Backend, SolveReport, StopReason};
+use crate::coordinator::{Backend, Schedule, SolveReport, StopReason};
 use crate::linalg::{vector, BlockPartition, ProcessorAssignment};
 use crate::metrics::IterCost;
-use crate::parallel::{self, WorkerPool};
+use crate::parallel::epoch::{event_block, is_write};
+use crate::parallel::{self, EpochExecutor, EventGraph, WorkerPool};
 use crate::problems::Problem;
 use crate::rng::Xoshiro256pp;
 use crate::runtime::StepEngine;
@@ -103,18 +105,6 @@ pub fn solve_on(
     }
 }
 
-/// Run a [`SolverSpec`] on a caller-provided worker pool (reusable across
-/// solves; `spec.common.threads` is superseded by the pool's width).
-#[deprecated(since = "0.6.0", note = "use solve_on(problem, x0, spec, Some(pool)) instead")]
-pub fn solve_with_pool(
-    problem: &dyn Problem,
-    x0: &[f64],
-    spec: &SolverSpec,
-    pool: &WorkerPool,
-) -> SolveReport {
-    solve_on(problem, x0, spec, Some(pool))
-}
-
 /// Run a [`SolverSpec`] with the Jacobi scan computed by an external
 /// [`StepEngine`] (the three-layer path: selection/γ/τ on the rust side,
 /// compute in the engine). The engine scans every block per call, so
@@ -133,6 +123,36 @@ pub fn solve_with_step_engine(
 #[inline]
 fn sel_contains(sel: &[usize], i: usize) -> bool {
     sel.binary_search(&i).is_ok()
+}
+
+/// Shared mutable view handed to the dag executor's event bodies.
+///
+/// SAFETY: the event graph orders every pair of events whose reads or
+/// writes could touch the same elements ([`DepGraph`]'s column-overlap
+/// adjacency + the [`Problem::block_rows`] locality contract); events
+/// left unordered access disjoint `x` blocks, disjoint `zhat`/`dx`
+/// blocks, disjoint `e`/`moved` entries, and disjoint aux rows. Like
+/// `parallel::shard::MutPtr`, the wrapper exists to move raw pointers
+/// into the pool closure; all concurrent element accesses are disjoint.
+struct SyncPtr<T> {
+    p: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SyncPtr<T> {}
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+
+impl<T> SyncPtr<T> {
+    fn new(s: &mut [T]) -> Self {
+        Self { p: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Reconstruct the slice. Callers must stay within the disjointness
+    /// guarantee described on the type.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice(&self) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.p, self.len)
+    }
 }
 
 /// `‖a_I − b_I‖` over block `i` — the trial-distance error bound driving
@@ -303,6 +323,44 @@ fn run(
         }
     };
 
+    // --schedule dag: the barrier-free dependency-graph epoch engine.
+    // Built once per solve: the column-overlap graph, its conflict-free
+    // coloring, and the R/W event DAG under the staleness bound. Only
+    // the Jacobi-merge families run on it (from_name validates; direct
+    // spec construction fails fast here).
+    let mut dag: Option<(DepGraph, EpochExecutor)> = match common.schedule {
+        Schedule::Barrier => None,
+        Schedule::Dag { staleness } => {
+            assert!(
+                matches!(spec.merge, MergeRule::Jacobi { .. }),
+                "schedule \"dag\" supports only the Jacobi-merge families"
+            );
+            assert!(
+                matches!(backend, ScanBackend::Native),
+                "schedule \"dag\" requires the native scan (no external step engine)"
+            );
+            assert!(
+                !common.stepsize.is_armijo(),
+                "schedule \"dag\" does not support the Armijo line search"
+            );
+            assert!(
+                spec.inexact.is_none(),
+                "schedule \"dag\" does not support inexact-subproblem perturbation"
+            );
+            let dep = DepGraph::build(problem);
+            debug_assert!(dep.validate().is_ok(), "{:?}", dep.validate());
+            let events = EventGraph::build(&dep, staleness);
+            Some((dep, EpochExecutor::new(events)))
+        }
+    };
+    // dag-path per-iteration buffers (empty on the barrier path)
+    let mut moved = vec![false; if dag.is_some() { nb } else { 0 }];
+    let mut color_stamp =
+        vec![usize::MAX; dag.as_ref().map_or(0, |(d, _)| d.n_colors.max(1))];
+    // barrier-idle baseline: the scheduler report diffs pool snapshots
+    // around the solve (both schedules measure it)
+    let pool_stats0 = pool.stats();
+
     let mut x = x0.to_vec();
     let mut aux = vec![0.0; problem.aux_len()];
     problem.init_aux(&x, &mut aux);
@@ -446,6 +504,210 @@ fn run(
         let mut extra_stop: Option<StopReason> = None;
 
         match &spec.merge {
+            // ======== Jacobi merge on the dag schedule (barrier-free) ========
+            MergeRule::Jacobi { full_step } if dag.is_some() => {
+                let full_step = *full_step;
+                let (dep, exec) = dag.as_mut().expect("dag state exists in this arm");
+                let strat = strategy
+                    .as_mut()
+                    .expect("Jacobi merge requires a selection strategy");
+
+                // ---- phase 1/2: stale selection (S.2 from e^{k-1}) ----
+                // There is no barrier between the scan and the selection
+                // on this schedule, so S^k is decided up front from the
+                // *persistent* error bounds of the previous iteration
+                // (zeros at k = 0, which selects every candidate: the
+                // σ-rule keeps blocks with E ≥ σ·M and 0 ≥ σ·0). The
+                // fresh bounds this iteration's R events produce feed the
+                // next selection and the reported M^k.
+                let scan = strat.propose(k, nb, &mut cand);
+                let m_stale = match scan {
+                    Candidates::All => e.iter().fold(0.0f64, |a, &b| a.max(b)),
+                    Candidates::Subset => cand.iter().fold(0.0f64, |a, &i| a.max(e[i])),
+                };
+                match scan {
+                    Candidates::All => strat.select(&e, m_stale, &[], &mut sel),
+                    Candidates::Subset => strat.select(&e, m_stale, &cand, &mut sel),
+                }
+                // the dag scan covers exactly the selected blocks (the R
+                // events); unselected bounds stay stale by design
+                state.scanned += sel.len();
+
+                // ---- phase 3: one graph-ordered drain of R/W events ----
+                if tau_ctl.is_some() {
+                    aux_save.copy_from_slice(&aux);
+                    x_old.copy_from_slice(&x);
+                }
+                let gamma_eff = if full_step { 1.0 } else { gamma };
+                moved.fill(false);
+                {
+                    let xp = SyncPtr::new(&mut x);
+                    let auxp = SyncPtr::new(&mut aux);
+                    let zp = SyncPtr::new(&mut zhat);
+                    let ep = SyncPtr::new(&mut e);
+                    let dxp = SyncPtr::new(&mut dx);
+                    let mvp = SyncPtr::new(&mut moved);
+                    // R_i: fresh-state best response into ẑ/E (reads
+                    // x[block i] + aux rows of block i only — the
+                    // block_rows locality contract the graph is built
+                    // on). W_i: γ-scaled step, x update, delta column
+                    // into aux, in graph order.
+                    match shardws.as_ref() {
+                        None => {
+                            let body = move |ev: u32| {
+                                let i = event_block(ev);
+                                let r = blocks.range(i);
+                                // SAFETY: see SyncPtr — unordered events
+                                // access disjoint elements
+                                let (x, aux) = unsafe { (xp.slice(), auxp.slice()) };
+                                let (zh, eb) = unsafe { (zp.slice(), ep.slice()) };
+                                if !is_write(ev) {
+                                    eb[i] = problem.best_response(
+                                        i,
+                                        x,
+                                        aux,
+                                        tau,
+                                        &mut zh[r],
+                                    );
+                                } else {
+                                    let (dxs, mv) = unsafe { (dxp.slice(), mvp.slice()) };
+                                    let mut any = false;
+                                    for j in r.clone() {
+                                        let d = gamma_eff * (zh[j] - x[j]);
+                                        dxs[j] = d;
+                                        if d != 0.0 {
+                                            any = true;
+                                        }
+                                    }
+                                    if any {
+                                        for j in r.clone() {
+                                            x[j] += dxs[j];
+                                        }
+                                        problem.apply_block_delta(i, &dxs[r], aux);
+                                        mv[i] = true;
+                                    }
+                                }
+                            };
+                            exec.run(pool, &sel, &body);
+                        }
+                        Some(sw) => {
+                            // owner-computes: block i's events run against
+                            // its owner shard's column copies; arithmetic
+                            // is identical to the shared fan-out
+                            let shards = &sw.shards;
+                            let layout = &sw.layout;
+                            let body = move |ev: u32| {
+                                let i = event_block(ev);
+                                let s = layout.owner(i);
+                                let r = blocks.range(i);
+                                // SAFETY: see SyncPtr — unordered events
+                                // access disjoint elements
+                                let (x, aux) = unsafe { (xp.slice(), auxp.slice()) };
+                                let (zh, eb) = unsafe { (zp.slice(), ep.slice()) };
+                                if !is_write(ev) {
+                                    eb[i] = shards[s].best_response(
+                                        i,
+                                        x,
+                                        aux,
+                                        tau,
+                                        &mut zh[r],
+                                    );
+                                } else {
+                                    let (dxs, mv) = unsafe { (dxp.slice(), mvp.slice()) };
+                                    let mut any = false;
+                                    for j in r.clone() {
+                                        let d = gamma_eff * (zh[j] - x[j]);
+                                        dxs[j] = d;
+                                        if d != 0.0 {
+                                            any = true;
+                                        }
+                                    }
+                                    if any {
+                                        for j in r.clone() {
+                                            x[j] += dxs[j];
+                                        }
+                                        shards[s].apply_block_delta(i, &dxs[r], aux);
+                                        mv[i] = true;
+                                    }
+                                }
+                            };
+                            exec.run(pool, &sel, &body);
+                        }
+                    }
+                }
+
+                // fresh M^k over the scanned (= selected) blocks
+                state.last_ebound = sel.iter().fold(0.0f64, |a, &i| a.max(e[i]));
+
+                // moved blocks / flops / distinct active colors ("epochs
+                // touched" — the dag counterpart of the one allreduce per
+                // barrier iteration: each active color's writes form one
+                // wavefront of aux exchanges in a distributed run)
+                let mut act = 0usize;
+                let mut br_flops = 0.0;
+                let mut update_flops = 0.0;
+                let mut active_epochs = 0usize;
+                for &i in &sel {
+                    br_flops += problem.flops_best_response_fresh(i);
+                    if moved[i] {
+                        act += 1;
+                        update_flops += problem.flops_aux_update(i);
+                        let c = dep.color[i];
+                        if color_stamp[c] != k + 1 {
+                            color_stamp[c] = k + 1;
+                            active_epochs += 1;
+                        }
+                    }
+                }
+                if let Some(sw) = shardws.as_mut() {
+                    // per-epoch aux agreement + the M^k/S^k scalar sync
+                    sw.comm.allreduce_rounds += active_epochs;
+                    sw.comm.allreduce_words +=
+                        active_epochs as f64 * problem.aux_len() as f64;
+                    sw.comm.sync_rounds += 1;
+                }
+
+                let v_new = problem.v_val(&x, &aux);
+
+                // ---- phase 4: τ controller (§VI-A) + γ schedule ----
+                match tau_ctl.as_mut() {
+                    Some(ctl) => match ctl.observe(v_new, state.step_metric()) {
+                        TauDecision::Accept => {
+                            v = v_new;
+                        }
+                        TauDecision::RejectAndRetry => {
+                            x.copy_from_slice(&x_old);
+                            aux.copy_from_slice(&aux_save);
+                            state.discarded += 1;
+                            ctl.baseline(v);
+                            act = 0;
+                        }
+                    },
+                    None => {
+                        v = v_new;
+                        if full_step && !v.is_finite() {
+                            extra_stop = Some(StopReason::Stalled);
+                        }
+                    }
+                }
+                if !full_step {
+                    gamma = common.stepsize.next(gamma, state.step_metric());
+                }
+
+                // ---- phase 5: cost accounting ----
+                // no prelude on this path (R events recompute fresh
+                // state); the reduction axis prices one wavefront per
+                // active color instead of one barrier allreduce
+                state.charge(IterCost {
+                    flops_total: br_flops + update_flops + problem.flops_obj(),
+                    flops_max_worker: (br_flops + update_flops) / p_cores as f64
+                        + problem.flops_obj(),
+                    reduce_words: problem.aux_len() as f64,
+                    reduce_rounds: active_epochs as f64,
+                });
+                active = act;
+            }
+
             // ============ Algorithm 1 (FLEXA) / GRock: Jacobi merge ============
             MergeRule::Jacobi { full_step } => {
                 let full_step = *full_step;
@@ -1342,6 +1604,21 @@ fn run(
     if let Some(sw) = &shardws {
         state.comm = sw.comm;
     }
+    // scheduler report: executor counters on the dag path, measured
+    // pool-barrier idle on both paths (diffed around this solve so a
+    // caller-shared pool attributes only this solve's idle time)
+    if let Some((dep, exec)) = &dag {
+        state.sched.epochs = dep.n_colors;
+        state.sched.tasks = exec.stats.tasks as usize;
+        state.sched.ready_depth_mean = if exec.stats.claims > 0 {
+            exec.stats.depth_sum as f64 / exec.stats.claims as f64
+        } else {
+            0.0
+        };
+        state.sched.queue_wait_s = exec.stats.wait_ns as f64 * 1e-9;
+    }
+    state.sched.barrier_idle_s =
+        (pool.stats().barrier_idle_s - pool_stats0.barrier_idle_s).max(0.0);
     Ok(state.finish(x, &aux, v, iters, stop))
 }
 
@@ -1418,6 +1695,51 @@ mod tests {
         assert!(b.comm.allreduce_rounds > 0, "sharded backend measured no allreduces");
         assert!(b.comm.allreduce_words > 0.0);
         assert!(b.predicted_rounds > 0.0);
+    }
+
+    #[test]
+    fn dag_schedule_replays_bitwise_across_threads_and_backends() {
+        use crate::coordinator::{Backend, Schedule};
+        use crate::linalg::{CscMatrix, Matrix};
+        // sparse LASSO with overlapping-but-not-complete column supports:
+        // the dependency graph has real independence, so the executor
+        // genuinely interleaves — exactly what replay determinism must
+        // survive
+        let mut t = Vec::new();
+        for j in 0..24usize {
+            for d in 0..3usize {
+                let r = (j * 2 + d * 5) % 30;
+                t.push((r, j, 1.0 + (j + d) as f64 * 0.1));
+            }
+        }
+        let a = Matrix::Sparse(CscMatrix::from_triplets(30, 24, &t));
+        let b: Vec<f64> = (0..30).map(|r| (r % 7) as f64 * 0.3 - 1.0).collect();
+        let p = LassoProblem::new(a, b, 0.05, None);
+        let x0 = vec![0.0; p.n()];
+        let mk = |threads: usize, backend: Backend| {
+            let mut c = common("dag-replay");
+            c.max_iters = 40;
+            c.tol = 0.0;
+            c.threads = threads;
+            c.cores = 4;
+            c.backend = backend;
+            c.schedule = Schedule::Dag { staleness: 1 };
+            SolverSpec::flexa(c, SelectionSpec::sigma(0.5), None)
+        };
+        let base = solve(&p, &x0, &mk(1, Backend::Shared));
+        assert!(base.sched.epochs > 0, "dag run must report its epoch count");
+        assert!(base.sched.tasks > 0, "dag run must count executed events");
+        for threads in [2usize, 4] {
+            let r = solve(&p, &x0, &mk(threads, Backend::Shared));
+            assert_eq!(base.x, r.x, "dag iterates must be thread-count-invariant");
+            assert_eq!(base.final_obj, r.final_obj);
+        }
+        let sharded = solve(&p, &x0, &mk(4, Backend::Sharded));
+        assert_eq!(base.x, sharded.x, "sharded dag must match shared dag bitwise");
+        assert!(sharded.comm.allreduce_rounds > 0, "dag comm model measured nothing");
+        // replay: same spec, same bits
+        let again = solve(&p, &x0, &mk(4, Backend::Shared));
+        assert_eq!(base.x, again.x);
     }
 
     #[test]

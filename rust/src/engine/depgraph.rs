@@ -1,0 +1,243 @@
+//! Block-dependency graph + conflict-free coloring for the dag schedule.
+//!
+//! Two blocks `i`, `j` **couple** iff their aux row supports intersect —
+//! for the column problems of this crate that is exactly the structural
+//! nonzero test `(AᵀA)_{ij} ≠ 0`: block `i`'s best response reads the
+//! aux rows of column `i`'s support and its accepted step writes those
+//! same rows ([`Problem::block_rows`]' locality contract). Non-adjacent
+//! blocks therefore commute exactly — their reads and writes touch
+//! disjoint aux rows — so any interleaving of their events produces the
+//! same bits. That is the determinism argument of the dag schedule: the
+//! *graph* orders every pair that could interact; the claim order of
+//! independent work is cosmetic.
+//!
+//! A greedy coloring in ascending block order partitions the blocks into
+//! conflict-free classes ("epochs"): no two adjacent blocks share a
+//! color. The epoch executor ([`crate::parallel::epoch`]) uses the
+//! colors both as the priority that fixes the deterministic write order
+//! and as the distance measure for the bounded-staleness semantics.
+//!
+//! Dense problems (any block with `block_rows() == None`) degenerate to
+//! the complete graph — every pair couples, each block is its own color,
+//! and the executor's dependency chain reproduces a fully ordered
+//! schedule (the "pure barrier" end of the spectrum).
+
+use crate::problems::Problem;
+
+/// Column-overlap dependency graph over the problem's blocks, colored
+/// into conflict-free epochs.
+pub struct DepGraph {
+    /// Per-block adjacency lists (ascending, duplicate-free). Empty in
+    /// dense mode — the complete graph is represented implicitly.
+    pub adj: Vec<Vec<usize>>,
+    /// Per-block color; adjacent blocks always differ.
+    pub color: Vec<usize>,
+    /// Number of distinct colors (`max(color) + 1`; `nb` in dense mode).
+    pub n_colors: usize,
+    /// Complete-graph fallback (some block had no row-support info).
+    pub dense: bool,
+}
+
+impl DepGraph {
+    /// Build the graph from [`Problem::block_rows`] row supports. Falls
+    /// back to the dense complete graph as soon as any block reports
+    /// `None`.
+    pub fn build(problem: &dyn Problem) -> Self {
+        let nb = problem.blocks().n_blocks();
+        let mut supports: Vec<Vec<usize>> = Vec::with_capacity(nb);
+        for i in 0..nb {
+            match problem.block_rows(i) {
+                Some(rows) => supports.push(rows),
+                None => return Self::dense(nb),
+            }
+        }
+        // row → incident blocks
+        let m = problem.aux_len();
+        let mut row_blocks: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for (i, rows) in supports.iter().enumerate() {
+            for &r in rows {
+                debug_assert!(r < m, "block {i} reports out-of-range aux row {r}");
+                row_blocks[r].push(i);
+            }
+        }
+        // adjacency: union of each row's incident clique, deduped with a
+        // stamp array (kept sorted by construction: for block i we walk
+        // its rows' incidence lists, which hold blocks in ascending
+        // order per row, then sort once for determinism)
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nb];
+        let mut stamp = vec![usize::MAX; nb];
+        for (i, rows) in supports.iter().enumerate() {
+            for &r in rows {
+                for &j in &row_blocks[r] {
+                    if j != i && stamp[j] != i {
+                        stamp[j] = i;
+                        adj[i].push(j);
+                    }
+                }
+            }
+            adj[i].sort_unstable();
+        }
+        // greedy coloring in ascending block order: smallest color not
+        // used by an already-colored neighbor. Deterministic by
+        // construction (fixed visit order, fixed adjacency).
+        let mut color = vec![usize::MAX; nb];
+        let mut used = vec![usize::MAX; nb.max(1)];
+        let mut n_colors = 0usize;
+        for i in 0..nb {
+            for &j in &adj[i] {
+                if color[j] != usize::MAX {
+                    used[color[j]] = i;
+                }
+            }
+            let mut c = 0usize;
+            while used[c] == i {
+                c += 1;
+            }
+            color[i] = c;
+            n_colors = n_colors.max(c + 1);
+        }
+        if nb == 0 {
+            n_colors = 0;
+        }
+        Self { adj, color, n_colors, dense: false }
+    }
+
+    /// The complete-graph fallback: every pair couples; block `i` is its
+    /// own color, so the coloring is trivially conflict-free and the
+    /// color distance between blocks `i < j` is `j − i`.
+    pub fn dense(nb: usize) -> Self {
+        Self {
+            adj: vec![Vec::new(); nb],
+            color: (0..nb).collect(),
+            n_colors: nb,
+            dense: true,
+        }
+    }
+
+    /// Number of blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.color.len()
+    }
+
+    /// Whether blocks `i` and `j` are adjacent (couple structurally).
+    /// Dense mode: every distinct pair.
+    pub fn adjacent(&self, i: usize, j: usize) -> bool {
+        if i == j {
+            return false;
+        }
+        if self.dense {
+            return true;
+        }
+        self.adj[i].binary_search(&j).is_ok()
+    }
+
+    /// Validate the conflict-free partition invariant: every block has
+    /// exactly one color and no edge joins two blocks of equal color.
+    /// Test support for the property suite; cheap enough to debug-assert.
+    pub fn validate(&self) -> Result<(), String> {
+        let nb = self.n_blocks();
+        for i in 0..nb {
+            if self.color[i] >= self.n_colors {
+                return Err(format!("block {i} color {} ≥ n_colors {}", self.color[i], self.n_colors));
+            }
+            for &j in &self.adj[i] {
+                if j >= nb {
+                    return Err(format!("block {i} adjacent to out-of-range {j}"));
+                }
+                if self.color[i] == self.color[j] {
+                    return Err(format!(
+                        "adjacent blocks {i},{j} share color {}",
+                        self.color[i]
+                    ));
+                }
+                if !self.adjacent(j, i) {
+                    return Err(format!("asymmetric edge {i}→{j}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::nesterov_lasso;
+    use crate::linalg::{CscMatrix, Matrix};
+    use crate::problems::LassoProblem;
+
+    /// Sparse LASSO on a block-diagonal matrix: two decoupled groups.
+    fn block_diag_lasso() -> LassoProblem {
+        // rows 0..3 hit columns 0..3, rows 3..6 hit columns 3..6
+        let mut t = Vec::new();
+        for j in 0..3usize {
+            for r in 0..3usize {
+                t.push((r, j, 1.0 + (r + j) as f64));
+            }
+        }
+        for j in 3..6usize {
+            for r in 3..6usize {
+                t.push((r, j, 1.0 + (r * j) as f64 * 0.1));
+            }
+        }
+        let a = Matrix::Sparse(CscMatrix::from_triplets(6, 6, &t));
+        LassoProblem::new(a, vec![1.0; 6], 0.1, None)
+    }
+
+    #[test]
+    fn block_diagonal_groups_are_independent() {
+        let p = block_diag_lasso();
+        let g = DepGraph::build(&p);
+        assert!(!g.dense);
+        g.validate().unwrap();
+        // within a group: complete; across groups: no edge
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(g.adjacent(i, j), i != j);
+            }
+            for j in 3..6 {
+                assert!(!g.adjacent(i, j), "{i},{j} must be decoupled");
+            }
+        }
+        // each 3-clique needs 3 colors, and the two cliques share them
+        assert_eq!(g.n_colors, 3);
+    }
+
+    #[test]
+    fn dense_problem_degenerates_to_complete_graph() {
+        let p = LassoProblem::from_instance(nesterov_lasso(12, 9, 0.2, 1.0, 7));
+        let g = DepGraph::build(&p);
+        assert!(g.dense);
+        assert_eq!(g.n_colors, 9);
+        for i in 0..9 {
+            assert_eq!(g.color[i], i);
+            for j in 0..9 {
+                assert_eq!(g.adjacent(i, j), i != j);
+            }
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn coloring_is_conflict_free_on_random_sparse_lasso() {
+        use crate::datagen::{logistic_like, LogisticPreset};
+        let inst = logistic_like(LogisticPreset::RealSim, 0.02, 5);
+        let p = crate::problems::LogisticProblem::from_instance(inst);
+        let g = DepGraph::build(&p);
+        assert!(!g.dense);
+        g.validate().unwrap();
+        assert!(g.n_colors >= 1);
+        // adjacency must mirror structural (AᵀA)_{ij} ≠ 0
+        for i in (0..p.n()).step_by(17) {
+            let ri = p.block_rows(i).unwrap();
+            for j in (0..p.n()).step_by(13) {
+                if i == j {
+                    continue;
+                }
+                let rj = p.block_rows(j).unwrap();
+                let overlap = ri.iter().any(|r| rj.binary_search(r).is_ok());
+                assert_eq!(g.adjacent(i, j), overlap, "pair ({i},{j})");
+            }
+        }
+    }
+}

@@ -42,17 +42,17 @@
 //! the one validated constructor [`SolverSpec::from_name`].
 
 pub mod core;
+pub mod depgraph;
 pub mod sharded;
 pub mod workspace;
 
 pub use self::core::{solve, solve_on, solve_with_step_engine};
-#[allow(deprecated)]
-pub use self::core::solve_with_pool;
+pub use self::depgraph::DepGraph;
 pub use self::sharded::ShardedWorkspace;
 pub use self::workspace::Workspace;
 
 use crate::coordinator::strategy::SelectionSpec;
-use crate::coordinator::{Backend, CommonOptions, InexactOptions};
+use crate::coordinator::{Backend, CommonOptions, InexactOptions, Schedule};
 use crate::solvers::{AdmmOptions, SparsaOptions};
 
 /// How the engine produces a search direction each iteration — the phase
@@ -406,6 +406,27 @@ impl SolverSpec {
                 Self::sharded_names().join(" | ")
             ));
         }
+        if let Schedule::Dag { .. } = spec.common.schedule {
+            if !matches!(spec.merge, MergeRule::Jacobi { .. }) {
+                return Err(format!(
+                    "solver {name:?} does not support schedule = \"dag\": only the Jacobi \
+                     merge families have per-block events to schedule; covered: {}",
+                    Self::dag_names().join(" | ")
+                ));
+            }
+            if spec.common.stepsize.is_armijo() {
+                return Err(format!(
+                    "solver {name:?} with schedule = \"dag\" cannot use the Armijo step rule: \
+                     the line search needs the whole direction image before any block commits"
+                ));
+            }
+            if spec.inexact.is_some() {
+                return Err(format!(
+                    "solver {name:?} with schedule = \"dag\" does not support inexact \
+                     subproblem solves (the perturbation pass is a global barrier)"
+                ));
+            }
+        }
         Ok(spec)
     }
 
@@ -425,6 +446,25 @@ impl SolverSpec {
     /// derived source behind the CLI/engine capability messages.
     pub fn sharded_names() -> Vec<&'static str> {
         Self::NAMES.iter().copied().filter(|n| Self::supports_sharded(n)).collect()
+    }
+
+    /// Whether the named solver's engine configuration supports
+    /// `schedule = "dag"` (the Jacobi merge families — their iteration is
+    /// per-block events; sweeps and full-vector trials have no per-block
+    /// schedule). Derived like [`SolverSpec::supports_sharded`]: build
+    /// the spec and inspect its merge rule, never a hand-kept list.
+    pub fn supports_dag(name: &str) -> bool {
+        // default CommonOptions use the barrier schedule, so this probe
+        // cannot trip from_name's own dag rejection
+        Self::from_name(name, CommonOptions::default(), None, 0.5, 1)
+            .map(|s| matches!(s.merge, MergeRule::Jacobi { .. }))
+            .unwrap_or(false)
+    }
+
+    /// Every solver name with a dag-schedule path — the derived source
+    /// behind the CLI/engine capability messages.
+    pub fn dag_names() -> Vec<&'static str> {
+        Self::NAMES.iter().copied().filter(|n| Self::supports_dag(n)).collect()
     }
 
     /// Shard count of the column-distributed layout (and the partial
@@ -521,6 +561,39 @@ mod tests {
             assert!(err.contains("sharded"), "{name}: {err}");
         }
         assert!(SolverSpec::from_name("flexa", c, None, 0.5, 4).is_ok());
+    }
+
+    #[test]
+    fn dag_capability_is_derived_not_listed() {
+        assert_eq!(
+            SolverSpec::dag_names(),
+            vec!["flexa", "grock", "greedy-1bcd"]
+        );
+        assert!(!SolverSpec::supports_dag("cdm"));
+        assert!(!SolverSpec::supports_dag("fista"));
+        assert!(!SolverSpec::supports_dag("frobnicate"));
+    }
+
+    #[test]
+    fn from_name_rejects_dag_on_unsupported_families() {
+        let mut c = common();
+        c.schedule = Schedule::Dag { staleness: 1 };
+        for name in ["gj-flexa", "gauss-jacobi", "cdm", "fista", "sparsa", "admm"] {
+            let err = SolverSpec::from_name(name, c.clone(), None, 0.5, 4).unwrap_err();
+            assert!(err.contains("dag"), "{name}: {err}");
+        }
+        assert!(SolverSpec::from_name("flexa", c.clone(), None, 0.5, 4).is_ok());
+        assert!(SolverSpec::from_name("grock", c, None, 0.5, 4).is_ok());
+    }
+
+    #[test]
+    fn from_name_rejects_dag_with_armijo() {
+        use crate::coordinator::stepsize::StepRule;
+        let mut c = common();
+        c.schedule = Schedule::Dag { staleness: 0 };
+        c.stepsize = StepRule::Armijo { alpha: 1e-4, beta: 0.5, max_backtracks: 20 };
+        let err = SolverSpec::from_name("flexa", c, None, 0.5, 4).unwrap_err();
+        assert!(err.contains("Armijo"), "{err}");
     }
 
     #[test]

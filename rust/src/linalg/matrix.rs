@@ -182,6 +182,19 @@ impl Matrix {
         }
     }
 
+    /// Row support of column `j`: `Some(rows)` for sparse storage (the
+    /// CSC row indices, ascending), `None` for dense (every row). The
+    /// block-dependency graph (`engine::depgraph`) is built from these —
+    /// two scalar blocks couple iff their columns' row supports
+    /// intersect, i.e. iff `(AᵀA)_{ij} ≠ 0` structurally.
+    #[inline]
+    pub fn col_rows(&self, j: usize) -> Option<&[usize]> {
+        match self {
+            Matrix::Dense(_) => None,
+            Matrix::Sparse(a) => Some(a.col(j).0),
+        }
+    }
+
     /// Squared column norms (diag of `AᵀA`).
     pub fn col_sq_norms(&self) -> Vec<f64> {
         match self {

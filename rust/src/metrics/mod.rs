@@ -123,6 +123,57 @@ impl CommStats {
     }
 }
 
+/// Measured scheduler behaviour of a solve — how the execution mode
+/// (`--schedule barrier|dag`) actually spent the workers' time. Zeros on
+/// the barrier path except `barrier_idle_s`, which both paths measure
+/// (for barrier runs it is the per-pass convoy time `bench schedule`
+/// shows the dag mode reclaiming).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SchedStats {
+    /// Conflict-free color classes of the dependency graph (0 on the
+    /// barrier path, constant per solve on the dag path).
+    pub epochs: usize,
+    /// Scheduled events executed by the epoch executor (reads + writes
+    /// over all iterations).
+    pub tasks: usize,
+    /// Mean ready-queue depth observed at claim time — >1 means the
+    /// queue kept workers busy without a barrier.
+    pub ready_depth_mean: f64,
+    /// Worker time lost to the pool's end-of-pass barrier: Σ over jobs
+    /// of `threads·max_finish − Σ finish` (0 for 1 thread).
+    pub barrier_idle_s: f64,
+    /// Worker time spent blocked on the dag ready queue (the executor's
+    /// condvar waits) — the dag-mode counterpart of `barrier_idle_s`.
+    pub queue_wait_s: f64,
+}
+
+impl SchedStats {
+    /// Accumulate another counter into this one (means are re-derived by
+    /// the caller; this folds the raw sums used by the engine).
+    pub fn add(&mut self, other: &SchedStats) {
+        self.epochs = self.epochs.max(other.epochs);
+        self.tasks += other.tasks;
+        self.barrier_idle_s += other.barrier_idle_s;
+        self.queue_wait_s += other.queue_wait_s;
+        // depth means don't sum; callers set ready_depth_mean directly
+        if other.ready_depth_mean > 0.0 {
+            self.ready_depth_mean = other.ready_depth_mean;
+        }
+    }
+
+    /// The one JSON encoding of scheduler metrics — shared by the
+    /// `bench schedule` panel rows and the `flexa serve` responses.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("tasks", Json::Num(self.tasks as f64)),
+            ("ready_depth_mean", Json::Num(self.ready_depth_mean)),
+            ("barrier_idle_s", Json::Num(self.barrier_idle_s)),
+            ("queue_wait_s", Json::Num(self.queue_wait_s)),
+        ])
+    }
+}
+
 /// One point on a convergence curve.
 #[derive(Clone, Copy, Debug)]
 pub struct TracePoint {
@@ -426,6 +477,43 @@ mod tests {
             assert!(j.get(key).is_some(), "missing {key}");
         }
         assert_eq!(j.get("allreduce_rounds").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn sched_stats_json_schema_is_flat_and_complete() {
+        let s = SchedStats {
+            epochs: 4,
+            tasks: 96,
+            ready_depth_mean: 2.5,
+            barrier_idle_s: 0.125,
+            queue_wait_s: 0.0625,
+        };
+        let j = s.to_json();
+        let keys =
+            ["epochs", "tasks", "ready_depth_mean", "barrier_idle_s", "queue_wait_s"];
+        for key in keys {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("epochs").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("tasks").unwrap().as_usize(), Some(96));
+    }
+
+    #[test]
+    fn sched_stats_add_folds_sums_and_keeps_epochs_max() {
+        let mut a = SchedStats { epochs: 3, tasks: 10, ..Default::default() };
+        let b = SchedStats {
+            epochs: 2,
+            tasks: 4,
+            ready_depth_mean: 1.5,
+            barrier_idle_s: 0.5,
+            queue_wait_s: 0.25,
+        };
+        a.add(&b);
+        assert_eq!(a.epochs, 3);
+        assert_eq!(a.tasks, 14);
+        assert_eq!(a.ready_depth_mean, 1.5);
+        assert_eq!(a.barrier_idle_s, 0.5);
+        assert_eq!(a.queue_wait_s, 0.25);
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! Barrier-free epoch executor: the work-queue engine behind
+//! `--schedule dag[:staleness]`.
+//!
+//! Each selected block `i` contributes two **events** per iteration:
+//!
+//! * `R_i` (id `2i`) — *read*: compute the fresh-state best response
+//!   `ẑ_i, E_i` from the current `x`/aux;
+//! * `W_i` (id `2i + 1`) — *write*: turn `ẑ_i` into the γ-scaled step and
+//!   apply its delta column to the shared aux vector.
+//!
+//! The [`EventGraph`] orders exactly the pairs that could interact — two
+//! blocks adjacent in the dependency graph ([`crate::engine::depgraph`])
+//! share aux rows, so their reads and writes must be sequenced; all other
+//! pairs commute bitwise and run in any interleaving. With per-block
+//! colors `c_i` and staleness bound `s`, for each adjacent pair ordered
+//! by color (`c_a < c_b`, colors always differ):
+//!
+//! * `dist = c_b − c_a ≤ s` (within the staleness window — Jacobi-like):
+//!   both blocks read *pre-update* state (`R_a → W_b`, `R_b → W_a`) and
+//!   their writes land in color order (`W_a → W_b` — float addition does
+//!   not commute, so the shared-row write order must be pinned);
+//! * `dist > s` (window exceeded — Gauss-Seidel-like): the later block
+//!   must see the earlier one's write: `W_a → R_b` (and `W_a → W_b`
+//!   follows transitively through `R_b → W_b`).
+//!
+//! Every block also carries `R_i → W_i`. The graph is acyclic: the key
+//! `key(R_i) = c_i`, `key(W_i) = c_i + s + ½` strictly increases along
+//! every edge class above. `s = 0` forces `W_a → R_b` on every adjacent
+//! pair — a chromatic Gauss-Seidel sweep; `s ≥ n_colors` keeps every
+//! pair inside the window — Jacobi reads with ordered writes. Internally
+//! `s` is capped at `n_colors` (`s_eff`), which is semantically identical
+//! (color distances never exceed `n_colors − 1`) and keeps `dag:inf`
+//! arithmetic-safe.
+//!
+//! Dense problems (complete graph, `c_i = i`) would need O(nb²) edges;
+//! the builder emits the transitive reduction instead — the write chain
+//! `W_{i−1} → W_i`, plus `R_i → W_{i−s}` and `W_{i−s−1} → R_i` — an
+//! O(nb) edge set with the same partial order.
+//!
+//! **Determinism:** the iterate produced by one `run` depends only on
+//! the graph and the selection, never on thread count or claim timing —
+//! ordered pairs execute in graph order by construction, unordered pairs
+//! commute bitwise. The ready-heap priority (events keyed by `key(·)`)
+//! only shapes *throughput* (it drains epochs roughly in color order),
+//! not results. `tests/integration_golden.rs` pins replay determinism
+//! across threads {1,2,4} and both backends.
+
+use crate::engine::depgraph::DepGraph;
+use crate::parallel::WorkerPool;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Block of an event id.
+#[inline]
+pub fn event_block(ev: u32) -> usize {
+    (ev >> 1) as usize
+}
+
+/// Whether an event id is a write event.
+#[inline]
+pub fn is_write(ev: u32) -> bool {
+    ev & 1 == 1
+}
+
+/// The per-iteration event DAG: R/W events with the ordering edges
+/// derived from a [`DepGraph`] and a staleness bound.
+pub struct EventGraph {
+    /// Forward edges per event.
+    out: Vec<Vec<u32>>,
+    /// In-degree per event (edge-multiplicity aware).
+    indeg: Vec<u32>,
+    /// Heap priority per event: `2·c` for reads, `2·(c + s_eff) + 1` for
+    /// writes — the integer image of the acyclicity key.
+    prio: Vec<u64>,
+    n_blocks: usize,
+    /// Effective staleness bound (`staleness.min(n_colors)`).
+    pub s_eff: usize,
+}
+
+impl EventGraph {
+    /// Build the event DAG for `dep` under staleness bound `staleness`.
+    pub fn build(dep: &DepGraph, staleness: usize) -> Self {
+        let nb = dep.n_blocks();
+        let s_eff = staleness.min(dep.n_colors);
+        let ne = 2 * nb;
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); ne];
+        let r = |i: usize| (2 * i) as u32;
+        let w = |i: usize| (2 * i + 1) as u32;
+        // per-block compute-before-apply
+        for i in 0..nb {
+            out[r(i) as usize].push(w(i));
+        }
+        if dep.dense {
+            // complete graph, transitive reduction: write chain + the
+            // two window-boundary chords per block
+            for i in 1..nb {
+                out[w(i - 1) as usize].push(w(i));
+                if s_eff >= 1 {
+                    out[r(i) as usize].push(w(i.saturating_sub(s_eff)));
+                }
+                if i > s_eff {
+                    out[w(i - s_eff - 1) as usize].push(r(i));
+                }
+            }
+        } else {
+            for i in 0..nb {
+                for &j in &dep.adj[i] {
+                    if j <= i {
+                        continue; // each undirected pair once
+                    }
+                    let (a, b) = if dep.color[i] < dep.color[j] { (i, j) } else { (j, i) };
+                    let dist = dep.color[b] - dep.color[a];
+                    debug_assert!(dist > 0, "adjacent blocks share a color");
+                    if dist <= s_eff {
+                        out[w(a) as usize].push(w(b));
+                        out[r(a) as usize].push(w(b));
+                        out[r(b) as usize].push(w(a));
+                    } else {
+                        out[w(a) as usize].push(r(b));
+                    }
+                }
+            }
+        }
+        let mut indeg = vec![0u32; ne];
+        for tgts in &out {
+            for &t in tgts {
+                indeg[t as usize] += 1;
+            }
+        }
+        let mut prio = vec![0u64; ne];
+        for i in 0..nb {
+            let c = dep.color[i] as u64;
+            prio[r(i) as usize] = 2 * c;
+            prio[w(i) as usize] = 2 * (c + s_eff as u64) + 1;
+        }
+        Self { out, indeg, prio, n_blocks: nb, s_eff }
+    }
+
+    /// Number of blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Total events (2 per block).
+    pub fn n_events(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Forward edges of an event (tests / diagnostics).
+    pub fn edges(&self, ev: u32) -> &[u32] {
+        &self.out[ev as usize]
+    }
+}
+
+/// Cumulative executor statistics across the `run` calls of one solve.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecutorStats {
+    /// Events executed.
+    pub tasks: u64,
+    /// Claims from the ready heap (== tasks; kept separate so the mean
+    /// depth denominator is explicit).
+    pub claims: u64,
+    /// Σ of ready-heap depth observed at each claim (incl. the claimed
+    /// event) — `depth_sum / claims` is the mean ready-queue depth.
+    pub depth_sum: u64,
+    /// Nanoseconds workers spent blocked on the ready-queue condvar.
+    pub wait_ns: u64,
+}
+
+struct ExecState {
+    remaining: Vec<u32>,
+    ready: BinaryHeap<Reverse<(u64, u32)>>,
+    pending: usize,
+    panicked: bool,
+    selected: Vec<bool>,
+    depth_sum: u64,
+    claims: u64,
+    wait_ns: u64,
+}
+
+/// Work-queue executor over an [`EventGraph`]: one `run` per engine
+/// iteration, draining the selected blocks' events on every pool worker
+/// (the caller included) with no global barrier — a worker that finishes
+/// an event immediately claims the next ready one.
+pub struct EpochExecutor {
+    graph: EventGraph,
+    shared: Mutex<ExecState>,
+    cv: Condvar,
+    /// Cumulative stats across runs (read by the engine at solve end).
+    pub stats: ExecutorStats,
+}
+
+impl EpochExecutor {
+    /// Wrap a built event graph.
+    pub fn new(graph: EventGraph) -> Self {
+        let ne = graph.n_events();
+        let nb = graph.n_blocks();
+        Self {
+            graph,
+            shared: Mutex::new(ExecState {
+                remaining: vec![0; ne],
+                ready: BinaryHeap::new(),
+                pending: 0,
+                panicked: false,
+                selected: vec![false; nb],
+                depth_sum: 0,
+                claims: 0,
+                wait_ns: 0,
+            }),
+            cv: Condvar::new(),
+            stats: ExecutorStats::default(),
+        }
+    }
+
+    /// The wrapped event graph.
+    pub fn graph(&self) -> &EventGraph {
+        &self.graph
+    }
+
+    /// Execute one iteration's events for the selected blocks (`sel`
+    /// ascending, duplicate-free). `exec(ev)` runs the R/W body for
+    /// event `ev`; distinct ready events may run concurrently, so `exec`
+    /// must be safe under the graph's disjointness guarantee (events not
+    /// ordered by the graph touch disjoint state).
+    pub fn run(&mut self, pool: &WorkerPool, sel: &[usize], exec: &(dyn Fn(u32) + Sync)) {
+        if sel.is_empty() {
+            return;
+        }
+        {
+            let st = self.shared.get_mut().unwrap();
+            st.remaining.copy_from_slice(&self.graph.indeg);
+            st.selected.fill(false);
+            for &i in sel {
+                st.selected[i] = true;
+            }
+            st.ready.clear();
+            st.pending = 2 * sel.len();
+            st.panicked = false;
+            st.depth_sum = 0;
+            st.claims = 0;
+            st.wait_ns = 0;
+            // Unselected blocks perform no reads or writes this
+            // iteration, so every ordering constraint through their
+            // events is vacuous: complete them up front in one pass.
+            // After this, `remaining[ev]` counts only selected
+            // in-neighbors — and the topologically-minimal selected
+            // event always has zero of those, so the drain cannot
+            // deadlock.
+            for b in 0..self.graph.n_blocks {
+                if !st.selected[b] {
+                    for ev in [2 * b, 2 * b + 1] {
+                        for &tgt in &self.graph.out[ev] {
+                            st.remaining[tgt as usize] -= 1;
+                        }
+                    }
+                }
+            }
+            for &i in sel {
+                for ev in [(2 * i) as u32, (2 * i + 1) as u32] {
+                    if st.remaining[ev as usize] == 0 {
+                        st.ready.push(Reverse((self.graph.prio[ev as usize], ev)));
+                    }
+                }
+            }
+            debug_assert!(!st.ready.is_empty(), "no source event among the selection");
+        }
+        let this = &*self;
+        pool.run(&|_w| this.drain(exec));
+        let st = self.shared.get_mut().unwrap();
+        self.stats.tasks += 2 * sel.len() as u64;
+        self.stats.claims += st.claims;
+        self.stats.depth_sum += st.depth_sum;
+        self.stats.wait_ns += st.wait_ns;
+    }
+
+    /// Per-worker drain loop: claim the min-priority ready event, run it
+    /// outside the lock, then complete it (decrement dependents, publish
+    /// newly-ready events). Returns when all pending events are done.
+    fn drain(&self, exec: &(dyn Fn(u32) + Sync)) {
+        loop {
+            let ev = {
+                let mut st = self.shared.lock().unwrap();
+                loop {
+                    if st.panicked || st.pending == 0 {
+                        return;
+                    }
+                    if let Some(Reverse((_, ev))) = st.ready.peek().copied() {
+                        st.depth_sum += st.ready.len() as u64;
+                        st.claims += 1;
+                        st.ready.pop();
+                        break ev;
+                    }
+                    let t0 = Instant::now();
+                    st = self.cv.wait(st).unwrap();
+                    st.wait_ns = st
+                        .wait_ns
+                        .saturating_add(t0.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+                }
+            };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec(ev)));
+            let mut st = self.shared.lock().unwrap();
+            if result.is_err() {
+                st.panicked = true;
+                self.cv.notify_all();
+                drop(st);
+                std::panic::resume_unwind(result.unwrap_err());
+            }
+            st.pending -= 1;
+            for &tgt in &self.graph.out[ev as usize] {
+                st.remaining[tgt as usize] -= 1;
+                if st.remaining[tgt as usize] == 0 && st.selected[event_block(tgt)] {
+                    st.ready.push(Reverse((self.graph.prio[tgt as usize], tgt)));
+                    self.cv.notify_one();
+                }
+            }
+            if st.pending == 0 {
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::depgraph::DepGraph;
+    use std::sync::Mutex as StdMutex;
+
+    /// A hand-built sparse graph: path 0 — 1 — 2 (colors 0,1,0).
+    fn path_graph() -> DepGraph {
+        DepGraph {
+            adj: vec![vec![1], vec![0, 2], vec![1]],
+            color: vec![0, 1, 0],
+            n_colors: 2,
+            dense: false,
+        }
+    }
+
+    fn record_order(
+        graph: EventGraph,
+        pool_threads: usize,
+        sel: &[usize],
+    ) -> Vec<u32> {
+        let mut ex = EpochExecutor::new(graph);
+        let pool = WorkerPool::new(pool_threads);
+        let order = StdMutex::new(Vec::new());
+        ex.run(&pool, sel, &|ev| {
+            order.lock().unwrap().push(ev);
+        });
+        order.into_inner().unwrap()
+    }
+
+    fn pos(order: &[u32], ev: u32) -> usize {
+        order.iter().position(|&e| e == ev).unwrap()
+    }
+
+    #[test]
+    fn executes_every_selected_event_exactly_once() {
+        for threads in [1, 2, 4] {
+            let order = record_order(EventGraph::build(&path_graph(), 1), threads, &[0, 1, 2]);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3, 4, 5], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn graph_order_is_respected_single_thread() {
+        // staleness 0: every adjacent pair is W_a → R_b — chromatic GS
+        let order = record_order(EventGraph::build(&path_graph(), 0), 1, &[0, 1, 2]);
+        let (r0, w0, r1, w1, r2, w2) = (0, 1, 2, 3, 4, 5);
+        assert!(pos(&order, w0) < pos(&order, r1), "W_0 before R_1");
+        assert!(pos(&order, w2) < pos(&order, r1), "W_2 before R_1 (color 0 < 1)");
+        assert!(pos(&order, r0) < pos(&order, w0));
+        assert!(pos(&order, r1) < pos(&order, w1));
+        assert!(pos(&order, r2) < pos(&order, w2));
+    }
+
+    #[test]
+    fn staleness_window_orders_reads_before_writes() {
+        // staleness 1 ≥ color distance: R's precede adjacent W's, and
+        // writes land in color order
+        let order = record_order(EventGraph::build(&path_graph(), 1), 2, &[0, 1, 2]);
+        let (r0, w0, r1, w1, r2, w2) = (0u32, 1, 2, 3, 4, 5);
+        assert!(pos(&order, r1) < pos(&order, w0), "R_1 reads pre-update state");
+        assert!(pos(&order, r0) < pos(&order, w1));
+        assert!(pos(&order, w0) < pos(&order, w1), "write order by color");
+        assert!(pos(&order, r1) < pos(&order, w2));
+        assert!(pos(&order, r2) < pos(&order, w1));
+        assert!(pos(&order, w2) < pos(&order, w1), "color 0 writes before color 1");
+    }
+
+    #[test]
+    fn unselected_blocks_do_not_block_the_queue() {
+        // select only the endpoints of the path; the middle block's
+        // events are auto-completed, so the run must terminate
+        for threads in [1, 4] {
+            let order = record_order(EventGraph::build(&path_graph(), 0), threads, &[0, 2]);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 4, 5], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn dense_chain_is_fully_sequential_at_staleness_zero() {
+        let dep = DepGraph::dense(5);
+        let order = record_order(EventGraph::build(&dep, 0), 4, &[0, 1, 2, 3, 4]);
+        // complete graph, s=0: R_0 W_0 R_1 W_1 … — exactly the sweep
+        let expect: Vec<u32> = (0..10).collect();
+        assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn dense_infinite_staleness_runs_all_reads_before_all_writes() {
+        let dep = DepGraph::dense(4);
+        let order = record_order(EventGraph::build(&dep, usize::MAX), 1, &[0, 1, 2, 3]);
+        for i in 0..4u32 {
+            for j in 0..4u32 {
+                assert!(
+                    pos(&order, 2 * i) < pos(&order, 2 * j + 1),
+                    "R_{i} must precede W_{j} (Jacobi reads)"
+                );
+            }
+        }
+        // writes in block order
+        for j in 1..4u32 {
+            assert!(pos(&order, 2 * (j - 1) + 1) < pos(&order, 2 * j + 1));
+        }
+    }
+
+    #[test]
+    fn panic_in_event_body_propagates_without_deadlock() {
+        let mut ex = EpochExecutor::new(EventGraph::build(&path_graph(), 1));
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ex.run(&pool, &[0, 1, 2], &|ev| {
+                if ev == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn stats_accumulate_across_runs() {
+        let mut ex = EpochExecutor::new(EventGraph::build(&path_graph(), 1));
+        let pool = WorkerPool::new(2);
+        ex.run(&pool, &[0, 1, 2], &|_ev| {});
+        ex.run(&pool, &[1], &|_ev| {});
+        assert_eq!(ex.stats.tasks, 8);
+        assert_eq!(ex.stats.claims, 8);
+        assert!(ex.stats.depth_sum >= ex.stats.claims);
+    }
+}

@@ -17,7 +17,12 @@
 //! * [`shard`] — the column-sharded distributed-memory layer: contiguous
 //!   block → shard ownership, owner-computes scans over per-shard column
 //!   copies, and the deterministic fixed-order in-process allreduce of
-//!   per-worker partial residual buffers behind `--backend sharded`.
+//!   per-worker partial residual buffers behind `--backend sharded`;
+//! * [`epoch`] — the barrier-free work-queue executor behind
+//!   `--schedule dag`: per-block read/write events ordered by a
+//!   dependency DAG (`crate::engine::depgraph`), claimed eagerly by
+//!   whichever worker is free, with determinism coming from the graph
+//!   (structural), not from the claim order (cosmetic).
 //!
 //! **Determinism contract:** every helper here produces bitwise-identical
 //! results for any `threads ≥ 1`, because (a) each output element is
@@ -26,13 +31,15 @@
 //! order on the calling thread. The coordinator's
 //! `threaded_matches_sequential` guarantee rests on this contract.
 
+pub mod epoch;
 pub mod partition;
 pub mod pool;
 pub mod reduce;
 pub mod shard;
 
+pub use epoch::{EpochExecutor, EventGraph, ExecutorStats};
 pub use partition::{block_chunks, chunks_of, row_chunks, MAX_CHUNKS};
-pub use pool::WorkerPool;
+pub use pool::{PoolStats, WorkerPool};
 pub use reduce::{
     for_each_chunk, for_each_row_chunk, par_best_responses, par_best_responses_subset, par_max,
     par_prelude, par_sum_pairs, par_v_val,

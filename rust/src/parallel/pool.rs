@@ -11,13 +11,29 @@
 //! it bitwise-deterministic across thread counts) is the concern of the
 //! fixed-chunk helpers in [`super::reduce`].
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Total OS threads ever spawned by any pool in this process — test
 /// instrumentation for the once-per-solve lifecycle guarantee.
 static OS_THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Cumulative barrier accounting for one pool: how many jobs it ran and
+/// how long workers sat idle at the handoff barrier waiting for the
+/// slowest worker of each job. Snapshot via [`WorkerPool::stats`]; the
+/// engine diffs snapshots around a solve to report per-solve idle time
+/// (`SolveReport::sched`), and `flexa serve` surfaces it per cached pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    /// Jobs executed ([`WorkerPool::run`] calls).
+    pub runs: u64,
+    /// Total worker-seconds spent waiting at the end-of-job barrier:
+    /// `Σ_jobs (threads · max_w finish_w − Σ_w finish_w)`. Zero for a
+    /// single-threaded pool (the job runs inline, there is no barrier).
+    pub barrier_idle_s: f64,
+}
 
 type RawJob = *const (dyn Fn(usize) + Sync);
 
@@ -35,12 +51,31 @@ struct Slot {
     remaining: usize,
     panicked: bool,
     shutdown: bool,
+    /// When the current job was posted (barrier-idle accounting).
+    run_start: Option<Instant>,
+    /// Σ over finished workers of (finish time − run_start), ns.
+    finish_sum_ns: u64,
+    /// max over finished workers of (finish time − run_start), ns.
+    finish_max_ns: u64,
 }
 
 struct Shared {
     slot: Mutex<Slot>,
     start: Condvar,
     done: Condvar,
+    /// Lifetime job count (monotonic; includes single-thread inline runs).
+    runs: AtomicU64,
+    /// Lifetime barrier-idle nanoseconds across all workers.
+    idle_ns: AtomicU64,
+}
+
+/// Record one worker's finish time into the slot accumulators.
+fn record_finish(s: &mut Slot) {
+    if let Some(t0) = s.run_start {
+        let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        s.finish_sum_ns = s.finish_sum_ns.saturating_add(ns);
+        s.finish_max_ns = s.finish_max_ns.max(ns);
+    }
 }
 
 /// Persistent pool of `threads` logical workers (`threads − 1` OS threads
@@ -63,9 +98,14 @@ impl WorkerPool {
                 remaining: 0,
                 panicked: false,
                 shutdown: false,
+                run_start: None,
+                finish_sum_ns: 0,
+                finish_max_ns: 0,
             }),
             start: Condvar::new(),
             done: Condvar::new(),
+            runs: AtomicU64::new(0),
+            idle_ns: AtomicU64::new(0),
         });
         let mut handles = Vec::with_capacity(threads.saturating_sub(1));
         for w in 1..threads {
@@ -101,6 +141,8 @@ impl WorkerPool {
     /// `job` must not call `run` on the same pool.
     pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
         if self.threads == 1 {
+            // inline: no barrier, no idle
+            self.shared.runs.fetch_add(1, Ordering::Relaxed);
             job(0);
             return;
         }
@@ -109,6 +151,9 @@ impl WorkerPool {
             s.job = Some(JobPtr(job as RawJob));
             s.epoch += 1;
             s.remaining = self.threads - 1;
+            s.run_start = Some(Instant::now());
+            s.finish_sum_ns = 0;
+            s.finish_max_ns = 0;
             self.shared.start.notify_all();
         }
         // the caller works too; catch a panic so we still wait for the
@@ -117,17 +162,35 @@ impl WorkerPool {
         let worker_panicked;
         {
             let mut s = self.shared.slot.lock().unwrap();
+            record_finish(&mut s); // caller = worker 0
             while s.remaining > 0 {
                 s = self.shared.done.wait(s).unwrap();
             }
             s.job = None;
+            s.run_start = None;
             worker_panicked = std::mem::replace(&mut s.panicked, false);
+            // idle = Σ_w (slowest finish − finish_w); every worker's wait
+            // at the barrier is measured against the last one in
+            let idle = (self.threads as u64)
+                .saturating_mul(s.finish_max_ns)
+                .saturating_sub(s.finish_sum_ns);
+            self.shared.idle_ns.fetch_add(idle, Ordering::Relaxed);
+            self.shared.runs.fetch_add(1, Ordering::Relaxed);
         }
         if let Err(p) = caller {
             std::panic::resume_unwind(p);
         }
         if worker_panicked {
             panic!("worker pool job panicked on a worker thread");
+        }
+    }
+
+    /// Snapshot of this pool's cumulative barrier accounting. Monotonic;
+    /// diff two snapshots to attribute idle time to a span of work.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            runs: self.shared.runs.load(Ordering::Relaxed),
+            barrier_idle_s: self.shared.idle_ns.load(Ordering::Relaxed) as f64 * 1e-9,
         }
     }
 }
@@ -173,6 +236,7 @@ fn worker_loop(shared: Arc<Shared>, w: usize) {
         if result.is_err() {
             s.panicked = true;
         }
+        record_finish(&mut s);
         s.remaining -= 1;
         if s.remaining == 0 {
             shared.done.notify_one();
@@ -247,6 +311,37 @@ mod tests {
             seen.lock().unwrap().insert(w);
         });
         assert_eq!(*seen.lock().unwrap(), HashSet::from([0, 1, 2]));
+    }
+
+    #[test]
+    fn stats_count_runs_and_idle_stays_zero_single_thread() {
+        let pool = WorkerPool::new(1);
+        for _ in 0..5 {
+            pool.run(&|_w| {});
+        }
+        let st = pool.stats();
+        assert_eq!(st.runs, 5);
+        assert_eq!(st.barrier_idle_s, 0.0, "inline runs have no barrier");
+    }
+
+    #[test]
+    fn stats_measure_idle_on_imbalanced_jobs() {
+        let pool = WorkerPool::new(4);
+        let before = pool.stats();
+        for _ in 0..3 {
+            pool.run(&|w| {
+                if w == 0 {
+                    // one slow worker: the other three idle at the barrier
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+            });
+        }
+        let after = pool.stats();
+        assert_eq!(after.runs - before.runs, 3);
+        assert!(
+            after.barrier_idle_s > before.barrier_idle_s,
+            "three workers waited on a 10ms straggler, idle must be > 0"
+        );
     }
 
     #[test]

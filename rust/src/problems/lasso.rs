@@ -182,6 +182,14 @@ impl Problem for LassoProblem {
         2.0 * self.col_sq[i]
     }
 
+    fn block_rows(&self, i: usize) -> Option<Vec<usize>> {
+        // scalar blocks: best_response(i) reads aux only on column i's
+        // row support (one col_dot) and apply_block_delta writes the
+        // same rows (one col_axpy) — the locality contract holds exactly
+        // on the sparse storage; dense columns touch every residual row.
+        self.a.col_rows(i).map(|r| r.to_vec())
+    }
+
     fn column_shard(&self, blocks: std::ops::Range<usize>) -> Option<Box<dyn ProblemShard>> {
         // scalar blocks: block index == column index
         Some(Box::new(LassoShard {

@@ -379,6 +379,15 @@ impl Problem for LogisticProblem {
         self.col_sq[i] / 4.0
     }
 
+    fn block_rows(&self, i: usize) -> Option<Vec<usize>> {
+        // scalar blocks: the fresh-state best_response(i) reads margins
+        // only on column i's row support and apply_block_delta writes
+        // those same rows (one col_axpy). The weighted prelude fast path
+        // reads global weights and is NOT covered — the dag schedule
+        // always uses the fresh-state path.
+        self.y.col_rows(i).map(|r| r.to_vec())
+    }
+
     fn column_shard(&self, blocks: std::ops::Range<usize>) -> Option<Box<dyn ProblemShard>> {
         // scalar blocks: block index == column index
         Some(Box::new(LogisticShard {

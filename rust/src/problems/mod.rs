@@ -282,6 +282,20 @@ pub trait Problem: Send + Sync {
         1.0
     }
 
+    /// Row support of block `i` in the auxiliary vector — the set of aux
+    /// rows that (a) `best_response(i, ..)` reads beyond `x[block i]`
+    /// and (b) `apply_block_delta(i, ..)` writes. `Some(rows)` asserts
+    /// this **locality contract**; `None` (the default) means the block
+    /// may touch every aux row (dense data), which degenerates the
+    /// dependency graph of `engine::depgraph` to the complete graph.
+    /// Implementations must return ascending, duplicate-free indices.
+    /// Only the *fresh-state* best response is covered by the contract —
+    /// the prelude/scratch fast paths read global state and are not used
+    /// on the dag schedule.
+    fn block_rows(&self, _i: usize) -> Option<Vec<usize>> {
+        None
+    }
+
     /// Build the column shard owning the given block range: copies of
     /// exactly those columns plus the per-block constants the best
     /// response needs — the per-worker data of the distributed-memory

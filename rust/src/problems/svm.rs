@@ -237,6 +237,13 @@ impl Problem for SvmProblem {
         2.0 * self.col_sq[i]
     }
 
+    fn block_rows(&self, i: usize) -> Option<Vec<usize>> {
+        // scalar blocks: hinge_best_response reads margins only on
+        // column i's row support and apply_block_delta writes the same
+        // rows — the dag locality contract holds on sparse storage.
+        self.y.col_rows(i).map(|r| r.to_vec())
+    }
+
     fn column_shard(&self, blocks: std::ops::Range<usize>) -> Option<Box<dyn ProblemShard>> {
         // scalar blocks: block index == column index
         Some(Box::new(SvmShard {

@@ -361,6 +361,38 @@ impl StateCache {
         map.insert(format!("{tenant}/{fingerprint}"), x);
     }
 
+    /// Per-pool scheduler accounting for the `stats` op: one entry per
+    /// cached pool keyed by its thread count, with the pool's cumulative
+    /// [`PoolStats`](crate::parallel::PoolStats) counters (jobs run,
+    /// worker-seconds idle at the handoff barrier). A pool that is
+    /// mid-solve is reported as `busy` instead of blocking the stats
+    /// response until its job finishes.
+    pub fn pool_stats(&self) -> Json {
+        let map = lock_unpoisoned(&self.pools);
+        let mut entries: Vec<(usize, Json)> = map
+            .iter()
+            .map(|(&threads, pool)| {
+                let j = match pool.try_lock() {
+                    Ok(p) => {
+                        let st = p.stats();
+                        Json::obj(vec![
+                            ("threads", Json::Num(threads as f64)),
+                            ("runs", Json::Num(st.runs as f64)),
+                            ("barrier_idle_s", Json::Num(st.barrier_idle_s)),
+                        ])
+                    }
+                    Err(_) => Json::obj(vec![
+                        ("threads", Json::Num(threads as f64)),
+                        ("busy", Json::Bool(true)),
+                    ]),
+                };
+                (threads, j)
+            })
+            .collect();
+        entries.sort_by_key(|(t, _)| *t);
+        Json::Arr(entries.into_iter().map(|(_, j)| j).collect())
+    }
+
     /// Counters + entry counts as the `stats` response payload.
     pub fn stats(&self) -> Json {
         Json::obj(vec![
@@ -420,6 +452,27 @@ mod tests {
         let (_, h3) = cache.pool(3);
         assert!(!h1 && h2 && !h3);
         assert!(Arc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn pool_stats_reports_runs_and_busy_per_cached_pool() {
+        let cache = StateCache::new();
+        let (p, _) = cache.pool(2);
+        p.lock().unwrap().run(&|_w| {});
+        let stats = cache.pool_stats();
+        let arr = stats.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("threads").and_then(Json::as_usize), Some(2));
+        assert_eq!(arr[0].get("runs").and_then(Json::as_usize), Some(1));
+        assert!(arr[0].get("barrier_idle_s").and_then(Json::as_f64).is_some());
+        // a pool held by an in-flight job reports busy instead of blocking
+        let guard = p.lock().unwrap();
+        let stats = cache.pool_stats();
+        assert_eq!(
+            stats.as_arr().unwrap()[0].get("busy").and_then(Json::as_bool),
+            Some(true)
+        );
+        drop(guard);
     }
 
     #[test]

@@ -188,6 +188,7 @@ fn process_line(state: &ServerState, line: &str, writer: &mut TcpStream) -> bool
             Op::Ping => protocol::response_base(&req.id, true).with("pong", Json::Bool(true)),
             Op::Stats => protocol::response_base(&req.id, true)
                 .with("cache", state.cache.stats())
+                .with("pools", state.cache.pool_stats())
                 .with("jobs_done", Json::Num(state.jobs_done.load(Ordering::Relaxed) as f64))
                 .with(
                     "jobs_failed",

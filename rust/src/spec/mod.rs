@@ -35,7 +35,7 @@
 
 use crate::config::{ExperimentConfig, ProblemSpec};
 use crate::coordinator::{
-    Backend, CommonOptions, NumericsTier, SelectionSpec, SolveReport, TermMetric,
+    Backend, CommonOptions, NumericsTier, Schedule, SelectionSpec, SolveReport, TermMetric,
 };
 use crate::datagen::{logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset};
 use crate::engine::{self, SolverSpec};
@@ -129,6 +129,9 @@ pub struct SolveSpec {
     /// Kernel tier of the Jacobi-scan inner products
     /// (`exact` | `fast`; see [`crate::linalg::kernels`]).
     pub numerics: NumericsTier,
+    /// Iteration-loop execution schedule
+    /// (`barrier` | `dag[:staleness]`; see [`crate::parallel::epoch`]).
+    pub schedule: Schedule,
     /// Explicit block-selection strategy; `None` = the solver's default
     /// (greedy σ-rule for the coordinator families).
     pub selection: Option<SelectionSpec>,
@@ -148,6 +151,7 @@ pub struct SolveSpecBuilder {
     threads: Option<usize>,
     backend: Option<Backend>,
     numerics: Option<NumericsTier>,
+    schedule: Option<Schedule>,
     selection: Option<SelectionSpec>,
     budgets: Budgets,
 }
@@ -198,6 +202,12 @@ impl SolveSpecBuilder {
     /// Set the kernel tier (default [`NumericsTier::Exact`]).
     pub fn numerics(mut self, numerics: NumericsTier) -> Self {
         self.numerics = Some(numerics);
+        self
+    }
+
+    /// Set the execution schedule (default [`Schedule::Barrier`]).
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = Some(schedule);
         self
     }
 
@@ -276,6 +286,7 @@ impl SolveSpecBuilder {
             threads,
             backend: self.backend.unwrap_or_default(),
             numerics: self.numerics.unwrap_or_default(),
+            schedule: self.schedule.unwrap_or_default(),
             selection: self.selection,
             budgets: self.budgets,
         };
@@ -308,6 +319,7 @@ impl SolveSpec {
             cost_model: model,
             backend: self.backend,
             numerics: self.numerics,
+            schedule: self.schedule,
             name: self.name.clone(),
             ..Default::default()
         };
@@ -327,6 +339,7 @@ impl SolveSpec {
             ("threads", Json::Num(self.threads as f64)),
             ("backend", Json::str(self.backend.name())),
             ("numerics", Json::str(self.numerics.name())),
+            ("schedule", Json::str(self.schedule.name())),
             ("budgets", self.budgets.to_json()),
         ]);
         if let Some(sel) = &self.selection {
@@ -363,6 +376,9 @@ impl SolveSpec {
         }
         if let Some(numerics) = j.get("numerics").and_then(Json::as_str) {
             b = b.numerics(NumericsTier::parse(numerics)?);
+        }
+        if let Some(schedule) = j.get("schedule").and_then(Json::as_str) {
+            b = b.schedule(Schedule::parse(schedule)?);
         }
         if let Some(sel) = j.get("selection") {
             b = b.selection(SelectionSpec::from_json(sel)?);
@@ -516,6 +532,8 @@ pub struct FrontendOverrides {
     pub backend: Option<Backend>,
     /// Override the kernel tier of every solver.
     pub numerics: Option<NumericsTier>,
+    /// Override the execution schedule of every solver.
+    pub schedule: Option<Schedule>,
     /// Override the block-selection strategy of every solver.
     pub selection: Option<SelectionSpec>,
 }
@@ -544,6 +562,10 @@ pub fn specs_from_experiment(
             Some(t) => t,
             None => NumericsTier::parse(&settings.numerics)?,
         };
+        let schedule = match ov.schedule {
+            Some(s) => s,
+            None => Schedule::parse(&settings.schedule)?,
+        };
         let mut b = SolveSpec::builder()
             .problem(cfg.problem.clone())
             .solver(&settings.name)
@@ -552,6 +574,7 @@ pub fn specs_from_experiment(
             .threads(ov.threads.unwrap_or(settings.threads))
             .backend(backend)
             .numerics(numerics)
+            .schedule(schedule)
             .budgets(Budgets {
                 max_iters: cfg.max_iters,
                 max_wall_s: cfg.max_wall_s,
@@ -640,6 +663,41 @@ mod tests {
     }
 
     #[test]
+    fn schedule_round_trips_and_is_validated_at_build() {
+        // dag on a supporting family round-trips through the wire form
+        let spec = SolveSpec::builder()
+            .problem(tiny_lasso())
+            .solver("flexa")
+            .schedule(Schedule::Dag { staleness: 2 })
+            .build()
+            .unwrap();
+        assert_eq!(spec.schedule, Schedule::Dag { staleness: 2 });
+        let back = SolveSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // dag on a non-Jacobi family fails at construction, not mid-solve
+        let err = SolveSpec::builder()
+            .problem(tiny_lasso())
+            .solver("cdm")
+            .schedule(Schedule::Dag { staleness: 1 })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("dag"), "{err}");
+        // and the wire form gets the identical rejection
+        let j = Json::parse(
+            r#"{"problem":{"kind":"lasso","m":30,"n":40},"solver":"fista","schedule":"dag"}"#,
+        )
+        .unwrap();
+        let err = SolveSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("dag"), "{err}");
+        // unknown schedule text is rejected at parse
+        let j = Json::parse(
+            r#"{"problem":{"kind":"lasso","m":30,"n":40},"schedule":"chaotic"}"#,
+        )
+        .unwrap();
+        assert!(SolveSpec::from_json(&j).is_err());
+    }
+
+    #[test]
     fn from_json_validates_like_the_builder() {
         let j = Json::parse(
             r#"{"problem":{"kind":"lasso","m":30,"n":40},"solver":"flexa",
@@ -701,12 +759,20 @@ mod tests {
             threads: Some(3),
             backend: Some(Backend::Sharded),
             numerics: Some(NumericsTier::Fast),
+            schedule: Some(Schedule::Dag { staleness: 1 }),
             selection: Some(SelectionSpec::hybrid(0.25)),
         };
-        let specs = specs_from_experiment(&cfg, &ov).unwrap();
+        // the dag override applies only where the family supports it —
+        // restrict to flexa for the override pass
+        let cfg_flexa = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"lasso\"\nm = 30\nn = 40\n",
+        )
+        .unwrap();
+        let specs = specs_from_experiment(&cfg_flexa, &ov).unwrap();
         assert_eq!(specs[0].threads, 3);
         assert_eq!(specs[0].backend, Backend::Sharded);
         assert_eq!(specs[0].numerics, NumericsTier::Fast);
+        assert_eq!(specs[0].schedule, Schedule::Dag { staleness: 1 });
         assert_eq!(specs[0].name, format!("flexa+{}", SelectionSpec::hybrid(0.25).name()));
     }
 }

@@ -32,7 +32,7 @@
 //! contract is "re-associated within a kernel call", never to loosen the
 //! default tier's bitwise pin.
 
-use flexa::coordinator::{Backend, CommonOptions, NumericsTier, TermMetric};
+use flexa::coordinator::{Backend, CommonOptions, NumericsTier, Schedule, TermMetric};
 use flexa::datagen::{
     dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
 };
@@ -449,6 +449,145 @@ fn golden_fast_tier_nonconvex_qp() {
 #[test]
 fn golden_fast_tier_dictionary() {
     golden_matrix_fast("dictionary");
+}
+
+/// Schedule axis for the dag determinism matrix:
+/// `FLEXA_TEST_SCHEDULE` = comma list of schedule grammar strings
+/// (`dag`, `dag:0`, `dag:3`, `dag:inf`, …; default `dag:1`). The CI
+/// schedule-matrix job sweeps the staleness endpoints through this.
+fn schedule_axis() -> Vec<Schedule> {
+    std::env::var("FLEXA_TEST_SCHEDULE")
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    Schedule::parse(t).unwrap_or_else(|e| panic!("FLEXA_TEST_SCHEDULE: {e}"))
+                })
+                .collect::<Vec<_>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![Schedule::Dag { staleness: 1 }])
+}
+
+/// Banded sparse LASSO for the schedule matrix: column supports overlap
+/// without being complete, so the dependency graph has several blocks
+/// per color and the epoch executor genuinely interleaves — the regime
+/// the determinism pin must survive.
+fn banded_csc_lasso() -> LassoProblem {
+    use flexa::linalg::{CscMatrix, Matrix};
+    let mut t = Vec::new();
+    for j in 0..24usize {
+        for d in 0..3usize {
+            t.push(((j * 2 + d * 5) % 30, j, 1.0 + (j + d) as f64 * 0.1));
+        }
+    }
+    let a = Matrix::Sparse(CscMatrix::from_triplets(30, 24, &t));
+    let b: Vec<f64> = (0..30).map(|r| (r % 7) as f64 * 0.3 - 1.0).collect();
+    LassoProblem::new(a, b, 0.05, None)
+}
+
+/// The dag schedule rides the golden determinism axes: for every
+/// Jacobi-merge family the first [`GOLDEN_ITERS`] iterates under
+/// `--schedule dag[:N]` are **bitwise identical** across the thread
+/// axis, across both data-plane backends, and across a replay of the
+/// same configuration. (The dag is a *different* deterministic
+/// iteration than barrier — no cross-schedule fixture is shared — so
+/// the pin here is self-referential rather than fixture-backed, plus a
+/// converged-objective agreement check against the barrier schedule.)
+#[test]
+fn golden_dag_schedule_is_deterministic_across_the_matrix() {
+    let problem = banded_csc_lasso();
+    let x0 = vec![0.0; problem.n()];
+    let threads = threads_axis();
+    let backends = backends_axis();
+    for schedule in schedule_axis() {
+        let spec = |family: &str, backend: Backend, t: usize, max_iters: usize| {
+            let common = CommonOptions {
+                max_iters,
+                max_wall_s: f64::MAX,
+                tol: 0.0,
+                term: TermMetric::Merit,
+                cores: CORES,
+                threads: t,
+                trace_every: max_iters,
+                backend,
+                schedule,
+                name: format!("golden-sched-{family}"),
+                ..Default::default()
+            };
+            SolverSpec::from_name(family, common, None, 0.5, CORES)
+                .unwrap_or_else(|e| panic!("{family}: {e}"))
+        };
+        for family in ["flexa", "grock", "greedy-1bcd"] {
+            let run = |backend: Backend, t: usize| -> Vec<Vec<f64>> {
+                (1..=GOLDEN_ITERS)
+                    .map(|k| engine::solve(&problem, &x0, &spec(family, backend, t, k)).x)
+                    .collect()
+            };
+            let reference = run(backends[0], threads[0]);
+            for &backend in &backends {
+                for &t in &threads {
+                    if backend == backends[0] && t == threads[0] {
+                        continue;
+                    }
+                    assert_bits_equal(
+                        &reference,
+                        &run(backend, t),
+                        &format!(
+                            "{family} @ schedule={} backend={backend:?} threads={t}",
+                            schedule.name()
+                        ),
+                    );
+                }
+            }
+            // replay: same configuration, same bits
+            assert_bits_equal(
+                &reference,
+                &run(backends[0], threads[0]),
+                &format!("{family} @ schedule={} replay", schedule.name()),
+            );
+        }
+
+        // tolerance mode: barrier and dag are different iterations of the
+        // same convex problem — driven to a tight merit tolerance they
+        // must agree on the objective they converge to
+        let converge = |schedule: Schedule| {
+            let common = CommonOptions {
+                max_iters: 20_000,
+                max_wall_s: f64::MAX,
+                tol: 1e-8,
+                term: TermMetric::Merit,
+                cores: CORES,
+                threads: threads[0],
+                trace_every: 20_000,
+                schedule,
+                name: format!("golden-sched-conv@{}", schedule.name()),
+                ..Default::default()
+            };
+            let spec = SolverSpec::from_name("flexa", common, None, 0.5, CORES)
+                .unwrap_or_else(|e| panic!("flexa: {e}"));
+            engine::solve(&problem, &x0, &spec)
+        };
+        let barrier = converge(Schedule::Barrier);
+        let dag = converge(schedule);
+        assert!(barrier.converged(), "barrier flexa did not converge: {:?}", barrier.stop);
+        assert!(
+            dag.converged(),
+            "dag flexa did not converge under {}: {:?}",
+            schedule.name(),
+            dag.stop
+        );
+        let scale = barrier.final_obj.abs().max(1.0);
+        assert!(
+            (barrier.final_obj - dag.final_obj).abs() <= 1e-6 * scale,
+            "schedules disagree at convergence: barrier V = {:e}, {} V = {:e}",
+            barrier.final_obj,
+            schedule.name(),
+            dag.final_obj
+        );
+    }
 }
 
 #[test]

@@ -120,9 +120,14 @@ tol = 1e-5\n";
 fn absent_flags_are_no_overrides() {
     let ov = cli::overrides_from_args(&argv(&["solve", "--config", "x.toml"])).unwrap();
     assert!(ov.threads.is_none() && ov.backend.is_none() && ov.selection.is_none());
+    assert!(ov.schedule.is_none());
     // bad flag values are rejected at parse time, not mid-solve
     assert!(cli::overrides_from_args(&argv(&["solve", "--backend", "quantum"])).is_err());
     assert!(cli::overrides_from_args(&argv(&["solve", "--selection", "nope:1"])).is_err());
+    assert!(cli::overrides_from_args(&argv(&["solve", "--schedule", "chaotic"])).is_err());
+    // and the good spellings parse
+    let ov = cli::overrides_from_args(&argv(&["solve", "--schedule", "dag:2"])).unwrap();
+    assert_eq!(ov.schedule, Some(flexa::coordinator::Schedule::Dag { staleness: 2 }));
 }
 
 /// JSON request bodies get the exact builder validation — bad specs are
@@ -148,11 +153,10 @@ fn json_decoding_validates_like_the_builder() {
         .contains("c must be > 0"));
 }
 
-/// The deprecated `engine::solve_with_pool` shim still runs and agrees
-/// bitwise with the `SolveSpec` path it was folded into.
+/// The caller-provided-pool entry point (`engine::solve_on`) agrees
+/// bitwise with the `SolveSpec` path it backs.
 #[test]
-#[allow(deprecated)]
-fn deprecated_pool_entry_point_matches_spec_execution() {
+fn pool_entry_point_matches_spec_execution() {
     let spec = SolveSpec::builder()
         .problem(flexa::config::ProblemSpec::Lasso {
             m: 30,
@@ -181,9 +185,9 @@ fn deprecated_pool_entry_point_matches_spec_execution() {
         .unwrap();
     let pool = flexa::parallel::WorkerPool::new(2);
     let x0 = vec![0.0; problem.n()];
-    let via_shim = flexa::engine::solve_with_pool(problem.as_ref(), &x0, &sspec, &pool);
+    let via_pool = flexa::engine::solve_on(problem.as_ref(), &x0, &sspec, Some(&pool));
 
-    assert_eq!(via_spec.x, via_shim.x);
-    assert_eq!(via_spec.final_obj, via_shim.final_obj);
-    assert_eq!(via_spec.iters, via_shim.iters);
+    assert_eq!(via_spec.x, via_pool.x);
+    assert_eq!(via_spec.final_obj, via_pool.final_obj);
+    assert_eq!(via_spec.iters, via_pool.iters);
 }

@@ -1,0 +1,220 @@
+//! Engine-level oracles for the two analytic endpoints of the dag
+//! schedule's staleness spectrum (`--schedule dag:N`, the barrier-free
+//! dependency-graph epoch engine of `engine::depgraph` +
+//! `parallel::epoch`):
+//!
+//! * **`dag:0`** forbids any write to land between an adjacent read and
+//!   its write — on a sparse problem the event graph orders every
+//!   adjacent pair write-before-read by color, which is exactly
+//!   **chromatic Gauss-Seidel**: colors ascending, each block's best
+//!   response reading every lower color's already-applied steps.
+//! * **`dag:∞`** removes all cross-block read/write ordering except the
+//!   determinism chain — on a dense problem every read drains before the
+//!   first write and the writes apply in ascending block order, which is
+//!   exactly the **Jacobi** iteration (all responses against the
+//!   iteration-start state) with a fixed merge order.
+//!
+//! Both oracles are hand-rolled sequential loops over the public
+//! [`Problem`] surface — no engine code — and the engine must match them
+//! **bitwise** at every thread count. This pins the *semantics* of the
+//! scheduler (what iteration it computes), complementing the replay-
+//! determinism tests (that it computes the same thing twice).
+
+use flexa::coordinator::{
+    Backend, CommonOptions, Schedule, SelectionSpec, StepRule, TermMetric,
+};
+use flexa::engine::{self, DepGraph, DirectionRule, MergeRule, SolverSpec};
+use flexa::linalg::{CscMatrix, Matrix};
+use flexa::problems::{LassoProblem, Problem};
+
+const ITERS: usize = 12;
+const GAMMA: f64 = 0.5;
+const TAU: f64 = 0.3;
+
+/// A FLEXA spec pinned so the engine's dag arm is analytically
+/// predictable: fixed γ (no adaptive schedule), fixed τ (no controller,
+/// no accept/reject), σ = 0 (every block selected every iteration).
+fn pinned_spec(schedule: Schedule, threads: usize, backend: Backend) -> SolverSpec {
+    SolverSpec {
+        common: CommonOptions {
+            max_iters: ITERS,
+            tol: 0.0,
+            term: TermMetric::Merit,
+            cores: 4,
+            threads,
+            backend,
+            schedule,
+            stepsize: StepRule::Constant { gamma: GAMMA },
+            name: format!("dag-oracle@{}", schedule.name()),
+            ..Default::default()
+        },
+        direction: DirectionRule::BestResponse { tau0: Some(TAU) },
+        merge: MergeRule::Jacobi { full_step: false },
+        selection: Some(SelectionSpec::sigma(0.0)),
+        inexact: None,
+    }
+}
+
+/// One memory step (S.4) of block `i` against the *current* `x`/`aux`,
+/// replicating the engine's W-event arithmetic exactly: per-coordinate
+/// `d = γ(ẑ_j − x_j)`, and the block moves (x update + aux delta column)
+/// only if some coordinate moved.
+fn write_block(
+    p: &dyn Problem,
+    i: usize,
+    z: &[f64],
+    dx: &mut [f64],
+    x: &mut [f64],
+    aux: &mut [f64],
+) {
+    let r = p.blocks().range(i);
+    let mut any = false;
+    for j in r.clone() {
+        let d = GAMMA * (z[j] - x[j]);
+        dx[j] = d;
+        if d != 0.0 {
+            any = true;
+        }
+    }
+    if any {
+        for j in r.clone() {
+            x[j] += dx[j];
+        }
+        p.apply_block_delta(i, &dx[r], aux);
+    }
+}
+
+/// Chromatic Gauss-Seidel: colors ascending; every block of a color
+/// takes its best response against all lower colors' applied steps.
+/// Same-color blocks have disjoint supports, so their order within the
+/// color is immaterial (ascending here).
+fn chromatic_gs_oracle(p: &dyn Problem, x0: &[f64], tau: f64) -> Vec<f64> {
+    let dep = DepGraph::build(p);
+    let nb = p.blocks().n_blocks();
+    let mut x = x0.to_vec();
+    let mut aux = vec![0.0; p.aux_len()];
+    p.init_aux(&x, &mut aux);
+    let mut z = vec![0.0; p.n()];
+    let mut dx = vec![0.0; p.n()];
+    for _ in 0..ITERS {
+        for c in 0..dep.n_colors {
+            for i in (0..nb).filter(|&i| dep.color[i] == c) {
+                let r = p.blocks().range(i);
+                p.best_response(i, &x, &aux, tau, &mut z[r]);
+                write_block(p, i, &z, &mut dx, &mut x, &mut aux);
+            }
+        }
+    }
+    x
+}
+
+/// Jacobi with a pinned merge order: all best responses against the
+/// iteration-start state, then the memory steps applied in ascending
+/// block order (the engine's write chain — the fixed summation order
+/// that makes the dense dag deterministic).
+fn jacobi_read_oracle(p: &dyn Problem, x0: &[f64], tau: f64) -> Vec<f64> {
+    let nb = p.blocks().n_blocks();
+    let mut x = x0.to_vec();
+    let mut aux = vec![0.0; p.aux_len()];
+    p.init_aux(&x, &mut aux);
+    let mut z = vec![0.0; p.n()];
+    let mut dx = vec![0.0; p.n()];
+    for _ in 0..ITERS {
+        for i in 0..nb {
+            let r = p.blocks().range(i);
+            p.best_response(i, &x, &aux, tau, &mut z[r]);
+        }
+        for i in 0..nb {
+            write_block(p, i, &z, &mut dx, &mut x, &mut aux);
+        }
+    }
+    x
+}
+
+/// Banded sparse LASSO whose columns overlap without being complete:
+/// the dependency graph is genuinely sparse (several blocks per color),
+/// so chromatic GS and Jacobi are distinct iterations.
+fn banded_lasso() -> LassoProblem {
+    let (m, n) = (30usize, 24usize);
+    let mut t = Vec::new();
+    for j in 0..n {
+        for d in 0..3usize {
+            t.push(((j * 2 + d * 5) % m, j, 1.0 + (j + d) as f64 * 0.1));
+        }
+    }
+    let a = Matrix::Sparse(CscMatrix::from_triplets(m, n, &t));
+    let b: Vec<f64> = (0..m).map(|r| (r % 7) as f64 * 0.3 - 1.0).collect();
+    LassoProblem::new(a, b, 0.05, None)
+}
+
+#[test]
+fn dag_zero_staleness_is_chromatic_gauss_seidel_bitwise() {
+    let p = banded_lasso();
+    let x0 = vec![0.0; p.n()];
+    let tau = TAU.max(p.tau_min()); // the engine's pinned-τ floor
+
+    // the workload must exercise real concurrency: a sparse coloring
+    // with more than one block per color and more than one color
+    let dep = DepGraph::build(&p);
+    assert!(!dep.dense, "banded CSC instance must color sparsely");
+    assert!(dep.n_colors > 1 && dep.n_colors < dep.n_blocks());
+
+    let want = chromatic_gs_oracle(&p, &x0, tau);
+    for threads in [1usize, 2, 4] {
+        let spec = pinned_spec(Schedule::Dag { staleness: 0 }, threads, Backend::Shared);
+        let r = engine::solve(&p, &x0, &spec);
+        assert_eq!(r.iters, ITERS);
+        assert_eq!(
+            r.x, want,
+            "dag:0 must equal the chromatic Gauss-Seidel oracle bitwise \
+             (threads={threads})"
+        );
+    }
+    let sharded = engine::solve(
+        &p,
+        &x0,
+        &pinned_spec(Schedule::Dag { staleness: 0 }, 4, Backend::Sharded),
+    );
+    assert_eq!(sharded.x, want, "sharded dag:0 must match the oracle bitwise");
+
+    // sanity: at these endpoints the two oracles are *different*
+    // iterations — otherwise the test would prove nothing
+    let jacobi = jacobi_read_oracle(&p, &x0, tau);
+    assert_ne!(want, jacobi, "GS and Jacobi coincide — workload too decoupled");
+}
+
+#[test]
+fn dag_infinite_staleness_is_jacobi_reads_bitwise() {
+    // dense data: every pair of blocks couples, the graph degenerates to
+    // the complete graph, and dag:∞ keeps only the determinism chain
+    let p = LassoProblem::from_instance(flexa::datagen::nesterov_lasso(
+        40, 24, 0.1, 1.0, 17,
+    ));
+    let x0 = vec![0.0; p.n()];
+    let tau = TAU.max(p.tau_min());
+    assert!(DepGraph::build(&p).dense, "dense instance must fall back to dense mode");
+
+    let want = jacobi_read_oracle(&p, &x0, tau);
+    for threads in [1usize, 2, 4] {
+        let spec = pinned_spec(
+            Schedule::Dag { staleness: usize::MAX },
+            threads,
+            Backend::Shared,
+        );
+        let r = engine::solve(&p, &x0, &spec);
+        assert_eq!(r.iters, ITERS);
+        assert_eq!(
+            r.x, want,
+            "dag:inf must equal the Jacobi-read oracle bitwise (threads={threads})"
+        );
+    }
+
+    // the engine's own barrier Jacobi computes the same mathematical
+    // iteration; its merge applies deltas in the same ascending block
+    // order, so the barrier run corroborates the oracle bitwise
+    let barrier = engine::solve(&p, &x0, &pinned_spec(Schedule::Barrier, 1, Backend::Shared));
+    assert_eq!(
+        barrier.x, want,
+        "barrier Jacobi disagrees with the Jacobi-read oracle"
+    );
+}
