@@ -8,7 +8,7 @@ fn main() {
         "[ablations] scale={} budget={}s/solver out={}",
         cfg.scale, cfg.budget_s, cfg.out_dir
     );
-    for out in flexa::bench::ablations(&cfg) {
+    for out in flexa::bench::ablations(&cfg).expect("ablations bench failed") {
         println!("=== {} ===\n{}", out.id, out.text);
     }
 }

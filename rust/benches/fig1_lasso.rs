@@ -9,7 +9,7 @@ fn main() {
         "[fig1] scale={} budget={}s/solver out={}",
         cfg.scale, cfg.budget_s, cfg.out_dir
     );
-    for out in flexa::bench::fig1(&cfg) {
+    for out in flexa::bench::fig1(&cfg).expect("fig1 bench failed") {
         println!("=== {} ===\n{}", out.id, out.text);
     }
 }

@@ -10,7 +10,7 @@ fn main() {
         "[fig2] scale={} budget={}s/solver out={}",
         cfg.scale, cfg.budget_s, cfg.out_dir
     );
-    for out in flexa::bench::fig2(&cfg) {
+    for out in flexa::bench::fig2(&cfg).expect("fig2 bench failed") {
         println!("=== {} ===\n{}", out.id, out.text);
     }
 }

@@ -9,7 +9,7 @@ fn main() {
         "[fig3] scale={} budget={}s/solver out={}",
         cfg.scale, cfg.budget_s, cfg.out_dir
     );
-    for out in flexa::bench::fig3(&cfg) {
+    for out in flexa::bench::fig3(&cfg).expect("fig3 bench failed") {
         println!("=== {} ===\n{}", out.id, out.text);
     }
 }

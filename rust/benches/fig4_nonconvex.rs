@@ -8,7 +8,7 @@ fn main() {
         "[fig4] scale={} budget={}s/solver out={}",
         cfg.scale, cfg.budget_s, cfg.out_dir
     );
-    for out in flexa::bench::fig4(&cfg) {
+    for out in flexa::bench::fig4(&cfg).expect("fig4 bench failed") {
         println!("=== {} ===\n{}", out.id, out.text);
     }
 }

@@ -7,7 +7,7 @@ fn main() {
         "[fig5] scale={} budget={}s/solver out={}",
         cfg.scale, cfg.budget_s, cfg.out_dir
     );
-    for out in flexa::bench::fig5(&cfg) {
+    for out in flexa::bench::fig5(&cfg).expect("fig5 bench failed") {
         println!("=== {} ===\n{}", out.id, out.text);
     }
 }

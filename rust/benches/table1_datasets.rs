@@ -3,6 +3,6 @@
 
 fn main() {
     let cfg = flexa::bench::BenchConfig::from_env();
-    let out = flexa::bench::table1(&cfg);
+    let out = flexa::bench::table1(&cfg).expect("table1 bench failed");
     println!("{}", out.text);
 }

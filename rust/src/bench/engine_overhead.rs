@@ -27,7 +27,7 @@ use crate::engine::{self, SolverSpec};
 use crate::metrics::{IterCost, TextTable};
 use crate::parallel::{self, WorkerPool};
 use crate::problems::{LassoProblem, Problem};
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::util::{Json, Timer};
 
 /// Timed repetitions per path; the two paths are interleaved within each
@@ -291,9 +291,11 @@ pub fn engine_overhead(cfg: &BenchConfig) -> Result<super::figures::FigureOutput
         ("worst_overhead", Json::Num(worst_overhead)),
         ("runs", Json::arr(rows)),
     ]);
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating bench out dir {}", cfg.out_dir))?;
     let path = format!("{}/BENCH_3.json", cfg.out_dir);
-    let _ = std::fs::write(&path, payload.to_string_compact());
+    std::fs::write(&path, payload.to_string_compact())
+        .with_context(|| format!("writing {path}"))?;
 
     let text = format!(
         "SolverCore overhead panel (FLEXA σ={sigma}, LASSO {n}x{m}, {ITERS} fixed iters, \

@@ -17,6 +17,7 @@ use crate::metrics::{TextTable, Trace, XAxis, YMetric};
 use crate::problems::{LassoProblem, LogisticProblem, NonconvexQpProblem, Problem};
 use crate::simulator::CostModel;
 use crate::solvers::{admm, cdm, fista, greedy_1bcd, grock, sparsa, AdmmOptions, SparsaOptions};
+use crate::util::error::{Context, Result};
 use crate::util::{CsvWriter, PlotCfg, Series};
 
 /// Global bench configuration (env-overridable).
@@ -102,13 +103,15 @@ impl FigureOutput {
         axis: XAxis,
         metric: YMetric,
         tol: f64,
-    ) -> Self {
+    ) -> Result<Self> {
+        std::fs::create_dir_all(&cfg.out_dir)
+            .with_context(|| format!("creating bench out dir {}", cfg.out_dir))?;
         // CSV with every trace point
         let mut csv = CsvWriter::new(&Trace::csv_header());
         for t in &traces {
             t.append_csv(&mut csv);
         }
-        let _ = csv.write_file(format!("{}/{}.csv", cfg.out_dir, id));
+        csv.write_file(format!("{}/{}.csv", cfg.out_dir, id))?;
 
         // ASCII plot
         let series: Vec<Series> = traces.iter().map(|t| t.series(axis, metric)).collect();
@@ -151,9 +154,9 @@ impl FigureOutput {
         text.push('\n');
         text.push_str(&format!("  time/iters/flops to {metric:?} ≤ {tol:.0e}:\n"));
         text.push_str(&table.render());
-        let _ = std::fs::create_dir_all(&cfg.out_dir);
-        let _ = std::fs::write(format!("{}/{}.txt", cfg.out_dir, id), &text);
-        Self { id: id.into(), traces, text }
+        let txt_path = format!("{}/{}.txt", cfg.out_dir, id);
+        std::fs::write(&txt_path, &text).with_context(|| format!("writing {txt_path}"))?;
+        Ok(Self { id: id.into(), traces, text })
     }
 }
 
@@ -219,7 +222,7 @@ fn lasso_suite(
 /// **Fig. 1** — LASSO, 10000 vars × 9000 rows (scaled), solution sparsity
 /// {1, 10, 20, 30, 40}%, relative error vs (simulated 40-core) time; plus
 /// the (a2) panel: relative error vs iterations for the 1% instance.
-pub fn fig1(cfg: &BenchConfig) -> Vec<FigureOutput> {
+pub fn fig1(cfg: &BenchConfig) -> Result<Vec<FigureOutput>> {
     let (m, n) = cfg.dims(9000, 10_000);
     let mut outputs = Vec::new();
     for (panel, sparsity) in [("a1", 0.01), ("b", 0.10), ("c", 0.20), ("d", 0.30), ("e", 0.40)] {
@@ -237,7 +240,7 @@ pub fn fig1(cfg: &BenchConfig) -> Vec<FigureOutput> {
             XAxis::SimTime,
             YMetric::RelErr,
             1e-6,
-        ));
+        )?);
         if panel == "a1" {
             // (a2): same traces plotted against iterations
             let traces2 = outputs.last().unwrap().traces.clone();
@@ -249,10 +252,10 @@ pub fn fig1(cfg: &BenchConfig) -> Vec<FigureOutput> {
                 XAxis::Iterations,
                 YMetric::RelErr,
                 1e-6,
-            ));
+            )?);
         }
     }
-    outputs
+    Ok(outputs)
 }
 
 /// **Fig. 2** — LASSO 100 000 vars × 5000 rows (scaled), 1% nonzeros, on
@@ -261,7 +264,7 @@ pub fn fig1(cfg: &BenchConfig) -> Vec<FigureOutput> {
 /// at `cfg.threads`, reporting wall-clock speedups next to the
 /// simulator's modeled axis (iterates are bitwise-identical across
 /// thread counts, so the comparison is apples-to-apples).
-pub fn fig2(cfg: &BenchConfig) -> Vec<FigureOutput> {
+pub fn fig2(cfg: &BenchConfig) -> Result<Vec<FigureOutput>> {
     let (m, n) = cfg.dims(5000, 100_000);
     let inst = nesterov_lasso(m, n, 0.01, 1.0, cfg.seed + 2);
     let problem = LassoProblem::from_instance(inst);
@@ -276,10 +279,10 @@ pub fn fig2(cfg: &BenchConfig) -> Vec<FigureOutput> {
             XAxis::SimTime,
             YMetric::RelErr,
             1e-6,
-        ));
+        )?);
     }
-    outputs.push(fig2_measured_threads(cfg, &problem));
-    outputs
+    outputs.push(fig2_measured_threads(cfg, &problem)?);
+    Ok(outputs)
 }
 
 /// The measured `--threads` panel of Fig. 2 (wall clock on this machine).
@@ -288,7 +291,7 @@ pub fn fig2(cfg: &BenchConfig) -> Vec<FigureOutput> {
 /// so each thread count performs exactly the same work and the wall-clock
 /// ratio is a true speedup — a shared time budget would let slow runs
 /// terminate early and flatten every ratio toward 1.0x.
-fn fig2_measured_threads(cfg: &BenchConfig, problem: &LassoProblem) -> FigureOutput {
+fn fig2_measured_threads(cfg: &BenchConfig, problem: &LassoProblem) -> Result<FigureOutput> {
     let x0 = vec![0.0; problem.n()];
     let avail = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     let mut reports = Vec::new();
@@ -319,18 +322,23 @@ fn fig2_measured_threads(cfg: &BenchConfig, problem: &LassoProblem) -> FigureOut
         avail,
         table.render()
     );
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
-    let _ = std::fs::write(format!("{}/fig2_measured_threads.txt", cfg.out_dir), &text);
-    FigureOutput {
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating bench out dir {}", cfg.out_dir))?;
+    let path = format!("{}/fig2_measured_threads.txt", cfg.out_dir);
+    std::fs::write(&path, &text).with_context(|| format!("writing {path}"))?;
+    Ok(FigureOutput {
         id: "fig2_measured_threads".into(),
         traces: reports.into_iter().map(|r| r.trace).collect(),
         text,
-    }
+    })
 }
 
 /// **Table I** — the logistic datasets (full-size spec + the generated
-/// scaled instances actually used by Fig. 3).
-pub fn table1(cfg: &BenchConfig) -> FigureOutput {
+/// scaled instances actually used by Fig. 3), plus a real-data leg: the
+/// committed libsvm fixture converted into a mapped column store and
+/// solved end-to-end through the same [`SolveSpec`](crate::spec::SolveSpec)
+/// path the CLI uses, reporting the *measured* shape/nnz/density.
+pub fn table1(cfg: &BenchConfig) -> Result<FigureOutput> {
     let mut table = TextTable::new(&[
         "data set", "m (paper)", "n (paper)", "c", "m (bench)", "n (bench)", "density",
     ]);
@@ -345,13 +353,91 @@ pub fn table1(cfg: &BenchConfig) -> FigureOutput {
             format!("{c}"),
             inst.y.nrows().to_string(),
             inst.y.ncols().to_string(),
-            format!("{:.4}", inst.y.nnz() as f64 / (inst.y.nrows() * inst.y.ncols()) as f64),
+            format!("{:.4}", inst.y.density()),
         ]);
     }
-    let text = format!("Table I — logistic regression data sets\n{}", table.render());
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
-    let _ = std::fs::write(format!("{}/table1.txt", cfg.out_dir), &text);
-    FigureOutput { id: "table1".into(), traces: vec![], text }
+
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating bench out dir {}", cfg.out_dir))?;
+    let (real, trace) = table1_real_data(cfg)?;
+    let text = format!(
+        "Table I — logistic regression data sets\n{}\n  \
+         real-data leg (committed fixture → flexa-mmap store → lasso solve):\n{}",
+        table.render(),
+        real.render()
+    );
+    let path = format!("{}/table1.txt", cfg.out_dir);
+    std::fs::write(&path, &text).with_context(|| format!("writing {path}"))?;
+    Ok(FigureOutput { id: "table1".into(), traces: vec![trace], text })
+}
+
+/// The real-data leg of Table I: convert `tiny.libsvm` (committed under
+/// `rust/tests/fixtures/datasets/`) into a flexa-mmap store in the bench
+/// out dir, solve lasso on the mapped matrix, and report measured
+/// m/n/nnz/density plus whether the solve actually ran out-of-core.
+/// A missing fixture is a hard error — the leg exists to prove the
+/// ingest path works, so silently skipping it would defeat the point.
+fn table1_real_data(cfg: &BenchConfig) -> Result<(TextTable, Trace)> {
+    let fixture = find_dataset_fixture("tiny.libsvm").ok_or_else(|| {
+        crate::anyhow!(
+            "table1 real-data leg: committed fixture tiny.libsvm not found under \
+             rust/tests/fixtures/datasets (run from the repo root or rust/)"
+        )
+    })?;
+    let src = crate::io::load_dataset(&fixture, crate::io::DataFormat::Libsvm)
+        .map_err(|e| crate::anyhow!(e))?;
+    let store_dir = std::path::Path::new(&cfg.out_dir).join("table1_store.fxm");
+    crate::io::store::MmapCscStore::write(&store_dir, &src.a, src.labels.as_deref())
+        .map_err(|e| crate::anyhow!(e))?;
+    let store_path = store_dir.display().to_string();
+    let ds = crate::io::load_dataset(&store_path, crate::io::DataFormat::FlexaMmap)
+        .map_err(|e| crate::anyhow!(e))?;
+
+    let spec = crate::spec::SolveSpec::builder()
+        .problem(crate::config::ProblemSpec::FromFile {
+            kind: crate::config::FileKind::Lasso,
+            path: store_path,
+            format: crate::io::DataFormat::FlexaMmap,
+            c: None,
+            seed: cfg.seed,
+        })
+        .solver("flexa")
+        .max_iters(2000)
+        .tol(1e-6)
+        .build()
+        .map_err(|e| crate::anyhow!(e))?;
+    let report = crate::spec::execute(&spec).map_err(|e| crate::anyhow!(e))?;
+
+    let mut real = TextTable::new(&[
+        "data set", "m", "n", "nnz", "density", "mapped", "iters", "final merit",
+    ]);
+    real.row(vec![
+        "tiny.libsvm → mmap store".into(),
+        ds.a.nrows().to_string(),
+        ds.a.ncols().to_string(),
+        ds.a.nnz().to_string(),
+        format!("{:.4}", ds.a.density()),
+        ds.mapped.to_string(),
+        report.iters.to_string(),
+        format!("{:.2e}", report.final_merit),
+    ]);
+    Ok((real, report.trace))
+}
+
+/// Locate a committed dataset fixture. Unit tests run with cwd = `rust/`,
+/// the CI bench drivers run from the repo root — try both layouts.
+pub(crate) fn find_dataset_fixture(name: &str) -> Option<String> {
+    for base in [
+        "rust/tests/fixtures/datasets",
+        "tests/fixtures/datasets",
+        "../rust/tests/fixtures/datasets",
+    ] {
+        let p = std::path::Path::new(base).join(name);
+        if p.exists() {
+            return Some(p.display().to_string());
+        }
+    }
+    None
 }
 
 fn logistic_scale(cfg: &BenchConfig, preset: LogisticPreset) -> f64 {
@@ -367,7 +453,7 @@ fn logistic_scale(cfg: &BenchConfig, preset: LogisticPreset) -> f64 {
 /// **Fig. 3** — logistic regression on the three (synthetic-analog)
 /// datasets: relative error vs time and the FLOPS table. `V*` is estimated
 /// the paper's way: run GJ-FLEXA to ‖Z‖∞ ≤ 1e−7 first.
-pub fn fig3(cfg: &BenchConfig) -> Vec<FigureOutput> {
+pub fn fig3(cfg: &BenchConfig) -> Result<Vec<FigureOutput>> {
     let mut outputs = Vec::new();
     for preset in [LogisticPreset::Gisette, LogisticPreset::RealSim, LogisticPreset::Rcv1] {
         let inst = logistic_like(preset, logistic_scale(cfg, preset), cfg.seed + 3);
@@ -436,7 +522,7 @@ pub fn fig3(cfg: &BenchConfig) -> Vec<FigureOutput> {
             XAxis::SimTime,
             YMetric::RelErr,
             tol,
-        );
+        )?;
         // FLOPS table (the paper reports FLOPS next to each plot)
         let mut ft = TextTable::new(&["algorithm", "GFLOP to rel.err ≤ 1e-4"]);
         for t in &out.traces {
@@ -448,10 +534,11 @@ pub fn fig3(cfg: &BenchConfig) -> Vec<FigureOutput> {
         }
         out.text.push_str("\n  FLOPS table:\n");
         out.text.push_str(&ft.render());
-        let _ = std::fs::write(format!("{}/{}.txt", cfg.out_dir, out.id), &out.text);
+        let path = format!("{}/{}.txt", cfg.out_dir, out.id);
+        std::fs::write(&path, &out.text).with_context(|| format!("writing {path}"))?;
         outputs.push(out);
     }
-    outputs
+    Ok(outputs)
 }
 
 /// Fig. 4/5 shared driver for the nonconvex problem (13).
@@ -462,7 +549,7 @@ fn nonconvex_fig(
     c: f64,
     cbar: f64,
     box_bound: f64,
-) -> Vec<FigureOutput> {
+) -> Result<Vec<FigureOutput>> {
     let (m, n) = cfg.dims(9000, 10_000);
     let inst = nonconvex_qp(m, n, sparsity, c, cbar, box_bound, cfg.seed + 5);
     let mut problem = NonconvexQpProblem::from_instance(inst);
@@ -502,7 +589,7 @@ fn nonconvex_fig(
     traces.push(fista(&problem, &x0, &mk("FISTA")).trace);
     traces.push(sparsa(&problem, &x0, &mk("SpaRSA"), &SparsaOptions::default()).trace);
 
-    vec![
+    Ok(vec![
         FigureOutput::build(
             &format!("{id}_relerr"),
             &format!("{id} nonconvex QP ({}% sparsity): rel.err vs sim time", sparsity * 100.0),
@@ -511,7 +598,7 @@ fn nonconvex_fig(
             XAxis::SimTime,
             YMetric::RelErr,
             1e-2,
-        ),
+        )?,
         FigureOutput::build(
             &format!("{id}_merit"),
             &format!("{id} nonconvex QP ({}% sparsity): merit vs sim time", sparsity * 100.0),
@@ -520,24 +607,24 @@ fn nonconvex_fig(
             XAxis::SimTime,
             YMetric::Merit,
             tol,
-        ),
-    ]
+        )?,
+    ])
 }
 
 /// **Fig. 4** — nonconvex (13), 1% sparsity, b=1, c=100, c̄=1000.
-pub fn fig4(cfg: &BenchConfig) -> Vec<FigureOutput> {
+pub fn fig4(cfg: &BenchConfig) -> Result<Vec<FigureOutput>> {
     nonconvex_fig(cfg, "fig4", 0.01, 100.0, 1000.0, 1.0)
 }
 
 /// **Fig. 5** — nonconvex (13), 10% sparsity, b=0.1, c=100, c̄=2800.
-pub fn fig5(cfg: &BenchConfig) -> Vec<FigureOutput> {
+pub fn fig5(cfg: &BenchConfig) -> Result<Vec<FigureOutput>> {
     nonconvex_fig(cfg, "fig5", 0.10, 100.0, 2800.0, 0.1)
 }
 
 /// Ablations beyond the paper's figures: σ sweep, step-size rules,
 /// τ adaptation on/off, inexact solves — the design choices DESIGN.md
 /// calls out.
-pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
+pub fn ablations(cfg: &BenchConfig) -> Result<Vec<FigureOutput>> {
     let (m, n) = cfg.dims(4500, 5000);
     let inst = nesterov_lasso(m, n, 0.05, 1.0, cfg.seed + 7);
     let problem = LassoProblem::from_instance(inst);
@@ -563,7 +650,7 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
         XAxis::SimTime,
         YMetric::RelErr,
         tol,
-    ));
+    )?);
 
     // step-size rules
     use crate::coordinator::StepRule;
@@ -588,7 +675,7 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
         XAxis::SimTime,
         YMetric::RelErr,
         tol,
-    ));
+    )?);
 
     // τ controller on/off
     let mut traces = Vec::new();
@@ -608,7 +695,7 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
         XAxis::SimTime,
         YMetric::RelErr,
         tol,
-    ));
+    )?);
 
     // inexact subproblems
     let mut traces = Vec::new();
@@ -632,9 +719,9 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
         XAxis::Iterations,
         YMetric::RelErr,
         1e-5,
-    ));
+    )?);
 
-    outputs
+    Ok(outputs)
 }
 
 /// **Selection panel** (beyond the paper's figures) — the strategy
@@ -643,7 +730,7 @@ pub fn ablations(cfg: &BenchConfig) -> Vec<FigureOutput> {
 /// *and* the per-iteration scan fraction. The hybrid row is the headline:
 /// same objective tolerance as the greedy σ-rule while scanning ≤ frac of
 /// the blocks per iteration (Daneshmand et al.-style random sketching).
-pub fn selection_panel(cfg: &BenchConfig) -> FigureOutput {
+pub fn selection_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
     let (m, n) = cfg.dims(4500, 5000);
     let inst = nesterov_lasso(m, n, 0.05, 1.0, cfg.seed + 11);
     let problem = LassoProblem::from_instance(inst);
@@ -679,7 +766,7 @@ pub fn selection_panel(cfg: &BenchConfig) -> FigureOutput {
         XAxis::SimTime,
         YMetric::RelErr,
         tol,
-    );
+    )?;
 
     // scan-cost table: the axis the sketching strategies improve
     let mut table = TextTable::new(&[
@@ -702,14 +789,15 @@ pub fn selection_panel(cfg: &BenchConfig) -> FigureOutput {
     }
     out.text.push_str("\n  per-iteration scan cost (blocks scanned / N):\n");
     out.text.push_str(&table.render());
-    let _ = std::fs::write(format!("{}/{}.txt", cfg.out_dir, out.id), &out.text);
-    out
+    let path = format!("{}/{}.txt", cfg.out_dir, out.id);
+    std::fs::write(&path, &out.text).with_context(|| format!("writing {path}"))?;
+    Ok(out)
 }
 
 /// CI bench-smoke: one tiny fig1-style LASSO through the measured-threads
 /// harness in a few seconds; writes `<out>/BENCH_smoke.json` so the perf
 /// trajectory accumulates commit-over-commit as a CI workflow artifact.
-pub fn smoke(cfg: &BenchConfig) -> FigureOutput {
+pub fn smoke(cfg: &BenchConfig) -> Result<FigureOutput> {
     use crate::util::Json;
     let (m, n) = (60usize, 80usize);
     let inst = nesterov_lasso(m, n, 0.05, 1.0, cfg.seed);
@@ -743,9 +831,11 @@ pub fn smoke(cfg: &BenchConfig) -> FigureOutput {
         ("sigma", Json::Num(0.5)),
         ("runs", runs),
     ]);
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating bench out dir {}", cfg.out_dir))?;
     let path = format!("{}/BENCH_smoke.json", cfg.out_dir);
-    let _ = std::fs::write(&path, payload.to_string_compact());
+    std::fs::write(&path, payload.to_string_compact())
+        .with_context(|| format!("writing {path}"))?;
     let mut table = TextTable::new(&["threads", "wall [s]", "iters", "rel.err", "speedup"]);
     for (p, r) in points.iter().zip(&reports) {
         table.row(vec![
@@ -758,11 +848,11 @@ pub fn smoke(cfg: &BenchConfig) -> FigureOutput {
     }
     let text =
         format!("bench-smoke (tiny fig1-style LASSO {m}x{n}) -> {path}\n{}", table.render());
-    FigureOutput {
+    Ok(FigureOutput {
         id: "bench_smoke".into(),
         traces: reports.into_iter().map(|r| r.trace).collect(),
         text,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -784,9 +874,13 @@ mod tests {
 
     #[test]
     fn table1_renders() {
-        let out = table1(&tiny_cfg());
+        let out = table1(&tiny_cfg()).unwrap();
         assert!(out.text.contains("gisette"));
         assert!(out.text.contains("rcv1"));
+        // the real-data leg must actually run: measured shape + a trace
+        assert!(out.text.contains("real-data leg"), "missing real-data leg:\n{}", out.text);
+        assert!(out.text.contains("tiny.libsvm"), "missing fixture row:\n{}", out.text);
+        assert_eq!(out.traces.len(), 1);
     }
 
     #[test]
@@ -812,7 +906,7 @@ mod tests {
     #[test]
     fn smoke_writes_json_and_converges() {
         let cfg = tiny_cfg();
-        let out = smoke(&cfg);
+        let out = smoke(&cfg).unwrap();
         assert!(out.text.contains("BENCH_smoke.json"));
         let path = format!("{}/BENCH_smoke.json", cfg.out_dir);
         let text = std::fs::read_to_string(&path).expect("smoke json written");
@@ -827,7 +921,7 @@ mod tests {
     #[test]
     fn selection_panel_reports_scan_fractions() {
         let cfg = tiny_cfg();
-        let out = selection_panel(&cfg);
+        let out = selection_panel(&cfg).unwrap();
         assert_eq!(out.traces.len(), 6);
         assert!(out.text.contains("hybrid"));
         assert!(out.text.contains("scan/iter"));
@@ -860,10 +954,22 @@ mod tests {
             },
         ];
         for s in &specs {
-            let p = build_problem(s);
+            let p = build_problem(s).unwrap();
             assert!(p.n() > 0);
             // every config-reachable kind must provide the sharded view
             assert!(p.supports_column_shard(), "{s:?} lacks column shards");
         }
+        // the file-backed family, from the committed fixture
+        let fixture = find_dataset_fixture("tiny.libsvm").expect("committed fixture");
+        let s = ProblemSpec::FromFile {
+            kind: crate::config::FileKind::Lasso,
+            path: fixture,
+            format: crate::io::DataFormat::Libsvm,
+            c: None,
+            seed: 1,
+        };
+        let p = build_problem(&s).unwrap();
+        assert!(p.n() > 0);
+        assert!(p.supports_column_shard(), "{s:?} lacks column shards");
     }
 }

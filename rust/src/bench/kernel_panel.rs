@@ -24,7 +24,7 @@ use crate::bail;
 use crate::linalg::{CscMatrix, DenseMatrix, NumericsTier};
 use crate::metrics::TextTable;
 use crate::rng::Xoshiro256pp;
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::util::Json;
 
 /// One kernel's measured pair of tier timings plus the divergence check.
@@ -294,17 +294,31 @@ pub fn kernel_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
     }
 
     let simd = cfg!(feature = "simd");
+    // top-level summary fields — `bench compare` bands top-level numeric
+    // fields only, so the gate-worthy aggregates must live here, not
+    // inside the per-kernel `runs` array
+    let max_rel_diff = rows.iter().map(|r| r.rel_diff).fold(0.0f64, f64::max);
+    let min_speedup = rows
+        .iter()
+        .map(|r| r.exact_min_s / r.fast_min_s)
+        .fold(f64::INFINITY, f64::min)
+        .min(1e9);
     let payload = Json::obj(vec![
         ("bench", Json::str("kernel_tier_panel")),
         ("m", Json::Num(m as f64)),
         ("n", Json::Num(n as f64)),
         ("nnz", Json::Num(nnz as f64)),
         ("simd_feature", Json::Bool(simd)),
+        ("kernels", Json::Num(rows.len() as f64)),
+        ("max_rel_diff", Json::Num(max_rel_diff)),
+        ("min_speedup", Json::Num(min_speedup)),
         ("runs", Json::arr(runs)),
     ]);
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating bench out dir {}", cfg.out_dir))?;
     let path = format!("{}/BENCH_7.json", cfg.out_dir);
-    let _ = std::fs::write(&path, payload.to_string_compact());
+    std::fs::write(&path, payload.to_string_compact())
+        .with_context(|| format!("writing {path}"))?;
 
     let text = format!(
         "kernel tier panel ({m}x{n} dense, nnz={nnz} sparse, simd feature {}; \
@@ -343,6 +357,13 @@ mod tests {
         let text = std::fs::read_to_string(format!("{}/BENCH_7.json", cfg.out_dir))
             .expect("BENCH_7.json written");
         let json = Json::parse(&text).expect("valid json");
+        // the gate-facing top-level aggregates (banded by baseline.toml)
+        let k = json.get("kernels").and_then(|v| v.as_f64()).expect("kernels field");
+        let mrd = json.get("max_rel_diff").and_then(|v| v.as_f64()).expect("max_rel_diff field");
+        let msp = json.get("min_speedup").and_then(|v| v.as_f64()).expect("min_speedup field");
+        assert!(k >= 6.0);
+        assert!((0.0..=REL_TOL).contains(&mrd));
+        assert!(msp > 0.0);
         let runs = json.get("runs").and_then(|r| r.as_arr()).expect("runs array");
         let kernels: Vec<&str> =
             runs.iter().filter_map(|r| r.get("kernel").and_then(|k| k.as_str())).collect();

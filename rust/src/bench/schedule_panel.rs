@@ -30,7 +30,7 @@ use crate::engine::{self, SolverSpec};
 use crate::linalg::{CscMatrix, Matrix};
 use crate::metrics::TextTable;
 use crate::problems::{LassoProblem, LogisticProblem, Problem};
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::util::Json;
 
 /// Fixed iteration count: every schedule does the same outer work.
@@ -195,9 +195,11 @@ pub fn schedule_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
         ("idle_reduction_frac", Json::Num(idle_reduction_frac)),
         ("runs", Json::arr(rows)),
     ]);
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating bench out dir {}", cfg.out_dir))?;
     let path = format!("{}/BENCH_8.json", cfg.out_dir);
-    let _ = std::fs::write(&path, payload.to_string_compact());
+    std::fs::write(&path, payload.to_string_compact())
+        .with_context(|| format!("writing {path}"))?;
 
     let text = format!(
         "scheduling panel ({ITERS} fixed iters, {} CSC workloads; every dag run \

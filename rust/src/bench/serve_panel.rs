@@ -34,7 +34,7 @@ use crate::coordinator::Backend;
 use crate::metrics::TextTable;
 use crate::server::Server;
 use crate::spec::{build_problem, execute_prepared, ExecOptions, SolveSpec};
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::util::Json;
 
 /// Ramp schedule of the serve bench driver.
@@ -397,7 +397,8 @@ pub fn serve_panel_with(
     // the daemon is bound with — responses must match these bitwise
     let mut expected = Vec::new();
     for e in entries {
-        let problem = build_problem(&e.spec.problem);
+        let problem = build_problem(&e.spec.problem)
+            .map_err(|err| crate::anyhow!("workload entry {:?}: {err}", e.spec.name))?;
         let report = execute_prepared(
             &e.spec,
             problem.as_ref(),
@@ -489,9 +490,11 @@ pub fn serve_panel_with(
         ("jobs_done", stats.get("jobs_done").cloned().unwrap_or(Json::Null)),
         ("jobs_failed", stats.get("jobs_failed").cloned().unwrap_or(Json::Null)),
     ]);
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating bench out dir {}", cfg.out_dir))?;
     let path = format!("{}/BENCH_6.json", cfg.out_dir);
-    let _ = std::fs::write(&path, payload.to_string_compact());
+    std::fs::write(&path, payload.to_string_compact())
+        .with_context(|| format!("writing {path}"))?;
 
     let sat = if saturation_rps.is_finite() {
         format!("saturated at {saturation_rps:.0} rps offered")

@@ -35,7 +35,7 @@ use crate::problems::{
     DictionaryCodesProblem, GroupLassoProblem, LassoProblem, LogisticProblem, NonconvexQpProblem,
     Problem, SvmProblem,
 };
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::util::Json;
 
 /// Fixed iteration count: both backends do exactly the same work.
@@ -209,9 +209,11 @@ pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
         ("families", Json::Num(problems.len() as f64)),
         ("runs", Json::arr(rows)),
     ]);
-    let _ = std::fs::create_dir_all(&cfg.out_dir);
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating bench out dir {}", cfg.out_dir))?;
     let path = format!("{}/BENCH_5.json", cfg.out_dir);
-    let _ = std::fs::write(&path, payload.to_string_compact());
+    std::fs::write(&path, payload.to_string_compact())
+        .with_context(|| format!("writing {path}"))?;
 
     let text = format!(
         "sharded-backend panel ({CORES} shards, {ITERS} fixed iters, all {} problem \

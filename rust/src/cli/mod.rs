@@ -30,6 +30,10 @@
 //!   gates it against the bands of `results/baseline.toml`, exiting
 //!   nonzero on regression; `smoke` is the seconds-long CI target that
 //!   also writes `BENCH_smoke.json`);
+//! * `flexa convert <input> <out-dir> [--format F]` — convert a
+//!   libsvm/Matrix Market dataset into the memory-mapped `flexa-mmap`
+//!   column store ([`crate::io::store`]), verifying the written store
+//!   bitwise against the source before reporting;
 //! * `flexa runtime-check` — load + execute every artifact and compare
 //!   against the native engine (the L1↔L3 smoke test);
 //! * `flexa info` — platform, artifact, and cost-model report.
@@ -59,6 +63,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench") => cmd_bench(&args),
+        Some("convert") => cmd_convert(&args),
         Some("runtime-check") => cmd_runtime_check(),
         Some("info") => cmd_info(),
         Some(other) => {
@@ -79,10 +84,12 @@ flexa — Parallel Selective Algorithms for Nonconvex Big Data Optimization
 USAGE:
   flexa solve --config <file.toml> [--threads N] [--selection SPEC]
               [--backend shared|sharded] [--numerics exact|fast]
-              [--schedule barrier|dag[:N]] [--quiet|--verbose]
+              [--schedule barrier|dag[:N]] [--data PATH]
+              [--quiet|--verbose]
   flexa serve [--config <file.toml>] [--host HOST] [--port PORT]
   flexa bench <fig1|fig2|fig3|fig4|fig5|table1|ablations|selection|engine
                |shard|serve|kernels|schedule|compare|smoke|all>
+  flexa convert <input> <out-dir> [--format libsvm|matrix-market|flexa-mmap]
   flexa runtime-check
   flexa info
 
@@ -122,6 +129,15 @@ OPTIONS:
                       chromatic Gauss-Seidel, dag:inf = Jacobi-style
                       reads; Jacobi-merge solvers only; replay-
                       deterministic across threads and backends)
+  --data PATH         solve the config's problem kind on a real dataset
+                      instead of the synthetic generator: PATH is a libsvm
+                      file, a Matrix Market .mtx file, or a flexa-mmap
+                      store directory written by `flexa convert` (mapped
+                      read-only, so A can exceed RAM). Applies to
+                      lasso/logistic/svm configs; format is sniffed from
+                      the extension (see `--format` under convert)
+  --format F          convert: input format when the extension is
+                      ambiguous (libsvm | matrix-market | flexa-mmap)
   --host / --port     serve bind address overrides (default 127.0.0.1:7070
                       or the config's [server] table; port 0 = ephemeral)
 
@@ -163,6 +179,7 @@ pub fn overrides_from_args(args: &Args) -> Result<FrontendOverrides> {
         numerics,
         schedule,
         selection,
+        data: args.value("data").map(String::from),
     })
 }
 
@@ -185,7 +202,7 @@ fn cmd_solve(args: &Args) -> Result<i32> {
     // one problem instance shared by every solver run; capability guards
     // (sharded column shards, admm residual form) are probed on it by
     // `spec::execute_prepared`, never derived from kind lists
-    let problem = bench::build_problem(&cfg.problem);
+    let problem = bench::build_problem(&cfg.problem).map_err(|e| anyhow!(e))?;
     let model = crate::simulator::CostModel::calibrated();
 
     let mut traces: Vec<Trace> = Vec::new();
@@ -273,14 +290,14 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         }
     };
     match which {
-        "fig1" => run(bench::fig1(&cfg)),
-        "fig2" => run(bench::fig2(&cfg)),
-        "fig3" => run(bench::fig3(&cfg)),
-        "fig4" => run(bench::fig4(&cfg)),
-        "fig5" => run(bench::fig5(&cfg)),
-        "table1" => run(vec![bench::table1(&cfg)]),
-        "ablations" => run(bench::ablations(&cfg)),
-        "selection" => run(vec![bench::selection_panel(&cfg)]),
+        "fig1" => run(bench::fig1(&cfg)?),
+        "fig2" => run(bench::fig2(&cfg)?),
+        "fig3" => run(bench::fig3(&cfg)?),
+        "fig4" => run(bench::fig4(&cfg)?),
+        "fig5" => run(bench::fig5(&cfg)?),
+        "table1" => run(vec![bench::table1(&cfg)?]),
+        "ablations" => run(bench::ablations(&cfg)?),
+        "selection" => run(vec![bench::selection_panel(&cfg)?]),
         "engine" => run(vec![bench::engine_overhead(&cfg)?]),
         "shard" => run(vec![bench::shard_panel(&cfg)?]),
         "serve" => run(vec![bench::serve_panel(&cfg)?]),
@@ -294,16 +311,16 @@ fn cmd_bench(args: &Args) -> Result<i32> {
                 return Ok(1);
             }
         }
-        "smoke" => run(vec![bench::smoke(&cfg)]),
+        "smoke" => run(vec![bench::smoke(&cfg)?]),
         "all" => {
-            run(vec![bench::table1(&cfg)]);
-            run(bench::fig1(&cfg));
-            run(bench::fig2(&cfg));
-            run(bench::fig3(&cfg));
-            run(bench::fig4(&cfg));
-            run(bench::fig5(&cfg));
-            run(bench::ablations(&cfg));
-            run(vec![bench::selection_panel(&cfg)]);
+            run(vec![bench::table1(&cfg)?]);
+            run(bench::fig1(&cfg)?);
+            run(bench::fig2(&cfg)?);
+            run(bench::fig3(&cfg)?);
+            run(bench::fig4(&cfg)?);
+            run(bench::fig5(&cfg)?);
+            run(bench::ablations(&cfg)?);
+            run(vec![bench::selection_panel(&cfg)?]);
             run(vec![bench::engine_overhead(&cfg)?]);
             run(vec![bench::shard_panel(&cfg)?]);
             run(vec![bench::kernel_panel(&cfg)?]);
@@ -312,6 +329,86 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         other => bail!("unknown bench target {other:?}"),
     }
     Ok(0)
+}
+
+fn cmd_convert(args: &Args) -> Result<i32> {
+    let input = args
+        .positional(1)
+        .ok_or_else(|| anyhow!("convert requires an input: flexa convert <input> <out-dir>"))?;
+    let out_dir = args
+        .positional(2)
+        .ok_or_else(|| anyhow!("convert requires an out-dir: flexa convert <input> <out-dir>"))?;
+    let format = match args.value("format") {
+        Some(f) => crate::io::DataFormat::parse(f).ok_or_else(|| {
+            anyhow!("unknown --format {f:?} (expected libsvm | matrix-market | flexa-mmap)")
+        })?,
+        None => crate::io::DataFormat::detect(input).ok_or_else(|| {
+            anyhow!(
+                "cannot infer the format of {input:?} from its extension; \
+                 pass --format libsvm|matrix-market|flexa-mmap"
+            )
+        })?,
+    };
+    let ds = crate::io::load_dataset(input, format).map_err(|e| anyhow!(e))?;
+    let out = std::path::Path::new(out_dir);
+    crate::io::store::MmapCscStore::write(out, &ds.a, ds.labels.as_deref())
+        .map_err(|e| anyhow!(e))?;
+
+    // re-open what was just written and hold it against the source:
+    // the store is only trustworthy if the round-trip is bitwise exact
+    let reread = crate::io::store::MmapCscStore::open(out).map_err(|e| anyhow!(e))?;
+    verify_convert_bitwise(&ds.a, &reread.matrix)?;
+    let labels_match = match (&ds.labels, &reread.labels) {
+        (None, None) => true,
+        (Some(a), Some(b)) => {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        _ => false,
+    };
+    if !labels_match {
+        bail!("convert verification failed: labels differ after round-trip");
+    }
+
+    println!(
+        "wrote {out_dir}: {}x{}, nnz={} (density {:.4e}), labels={}, verified bitwise{}",
+        ds.a.nrows(),
+        ds.a.ncols(),
+        ds.a.nnz(),
+        ds.a.density(),
+        if ds.labels.is_some() { "yes" } else { "no" },
+        if reread.matrix.is_mapped() { " via mmap" } else { " (portable read)" },
+    );
+    Ok(0)
+}
+
+/// Compare the converted store against the source matrix entry-by-entry
+/// at the bit level (`f64::to_bits`, so `-0.0` and NaN payloads count).
+fn verify_convert_bitwise(
+    src: &crate::linalg::CscMatrix,
+    got: &crate::linalg::CscMatrix,
+) -> Result<()> {
+    if src.nrows() != got.nrows() || src.ncols() != got.ncols() || src.nnz() != got.nnz() {
+        bail!(
+            "convert verification failed: wrote {}x{} nnz={} but re-read {}x{} nnz={}",
+            src.nrows(),
+            src.ncols(),
+            src.nnz(),
+            got.nrows(),
+            got.ncols(),
+            got.nnz()
+        );
+    }
+    for j in 0..src.ncols() {
+        let (ri_s, v_s) = src.col(j);
+        let (ri_g, v_g) = got.col(j);
+        let same = ri_s == ri_g
+            && v_s.len() == v_g.len()
+            && v_s.iter().zip(v_g).all(|(a, b)| a.to_bits() == b.to_bits());
+        if !same {
+            bail!("convert verification failed: column {j} differs after round-trip");
+        }
+    }
+    Ok(())
 }
 
 #[cfg(not(feature = "pjrt"))]

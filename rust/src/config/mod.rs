@@ -29,6 +29,10 @@
 //!                                # | nonconvex-qp | dictionary
 //! m = 90
 //! n = 100
+//! # path = "data/tiny.libsvm"    # file-backed data (lasso/logistic/svm
+//! # format = "libsvm"            # only): libsvm | matrix-market |
+//!                                # flexa-mmap; format is inferred from
+//!                                # the path when omitted
 //!
 //! [selection]                    # block-selection strategy (flexa/gj-flexa)
 //! strategy = "hybrid"            # greedy | jacobi | gauss-southwell | topk
@@ -73,6 +77,22 @@
 //! All six kinds run on both backends; `admm` additionally requires a
 //! residual-form objective (`F = ‖Ax − b‖²`: `lasso`, `group-lasso`,
 //! `dictionary` — probed, not hand-listed).
+//!
+//! ### File-backed data (`path` / `format`)
+//!
+//! Adding `path = "..."` to a `lasso` / `logistic` / `svm` problem
+//! replaces the synthetic generator with a real dataset loaded through
+//! `crate::io`: `libsvm` text, `matrix-market` coordinate files, or a
+//! `flexa-mmap` binary column store written by `flexa convert` (whose
+//! arrays stay memory-mapped, so `A` can exceed RAM). `format` is
+//! inferred from the path extension (`.libsvm`/`.svm`, `.mtx`, or a
+//! store directory) when omitted. `logistic`/`svm` require labels
+//! (libsvm or a labelled store); `lasso` uses the label column as `b`
+//! when present and otherwise plants a synthetic right-hand side from
+//! `seed`. Optional `c` overrides the derived regularization weight
+//! (lasso default `max(0.1·‖Aᵀb‖∞, 1e-6)`, logistic/svm default `1/m`).
+//! The CLI flag `--data <path>` rebases any compatible configured
+//! problem onto a file the same way.
 //!
 //! ## `[selection]`
 //!
@@ -189,8 +209,45 @@ pub mod toml;
 
 use std::path::Path;
 
+use crate::io::DataFormat;
 use crate::util::Json;
 pub use toml::{TomlDoc, TomlValue};
+
+/// Which problem family a file-backed dataset instantiates
+/// ([`ProblemSpec::FromFile`]): the loss/regularizer pairing, with the
+/// data matrix (and labels, where present) coming from the file instead
+/// of `datagen`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileKind {
+    /// `min ‖Ax − b‖² + c‖x‖₁`; `b` is the label column when the file
+    /// has one, else a synthetic planted right-hand side.
+    Lasso,
+    /// Sparse logistic regression; requires labels (libsvm/mmap-with-labels).
+    Logistic,
+    /// ℓ1-regularized ℓ2-loss SVM; requires labels.
+    Svm,
+}
+
+impl FileKind {
+    /// The `kind` discriminant (shared with the synthetic families).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FileKind::Lasso => "lasso",
+            FileKind::Logistic => "logistic",
+            FileKind::Svm => "svm",
+        }
+    }
+
+    /// Parse a `kind` string into a file-backed family, if it is one.
+    pub fn parse(s: &str) -> Option<FileKind> {
+        match s {
+            "lasso" => Some(FileKind::Lasso),
+            "logistic" => Some(FileKind::Logistic),
+            "svm" => Some(FileKind::Svm),
+            _ => None,
+        }
+    }
+}
 
 /// Which problem family to instantiate.
 #[derive(Clone, Debug, PartialEq)]
@@ -230,6 +287,13 @@ pub enum ProblemSpec {
         c: Option<f64>,
         seed: u64,
     },
+    /// A problem built from a real dataset file (`crate::io`) instead of
+    /// the synthetic generators: `[problem] path = "..."` (+ optional
+    /// `format`) in TOML, or the `--data` CLI override. `kind` picks the
+    /// loss family, `c` overrides the derived regularization weight, and
+    /// `seed` drives the planted right-hand side when a lasso file
+    /// carries no labels.
+    FromFile { kind: FileKind, path: String, format: DataFormat, c: Option<f64>, seed: u64 },
 }
 
 impl ProblemSpec {
@@ -242,7 +306,38 @@ impl ProblemSpec {
             ProblemSpec::Svm { .. } => "svm",
             ProblemSpec::NonconvexQp { .. } => "nonconvex-qp",
             ProblemSpec::Dictionary { .. } => "dictionary",
+            ProblemSpec::FromFile { kind, .. } => kind.name(),
         }
+    }
+
+    /// Rebase this spec onto a dataset file (the `--data` CLI override):
+    /// the loss family, `c` override, and seed carry over; the data
+    /// matrix (and labels) will come from `path`. Only the file-backed
+    /// families (`lasso`, `logistic`, `svm`) accept it. The format is
+    /// inferred from the path unless the spec already names one.
+    pub fn with_data(&self, path: &str) -> Result<ProblemSpec, String> {
+        let infer = || {
+            DataFormat::detect(path).ok_or(format!(
+                "cannot infer data format of {path:?} (expected a .libsvm/.svm/.mtx file \
+                 or a flexa-mmap store directory)"
+            ))
+        };
+        let (kind, c, seed, format) = match self {
+            ProblemSpec::Lasso { c, seed, .. } => (FileKind::Lasso, Some(*c), *seed, infer()?),
+            ProblemSpec::Logistic { seed, .. } => (FileKind::Logistic, None, *seed, infer()?),
+            ProblemSpec::Svm { c, seed, .. } => (FileKind::Svm, *c, *seed, infer()?),
+            ProblemSpec::FromFile { kind, c, seed, .. } => (*kind, *c, *seed, infer()?),
+            other => {
+                return Err(format!(
+                    "--data applies to lasso/logistic/svm problems, not {}",
+                    other.kind()
+                ))
+            }
+        };
+        let spec =
+            ProblemSpec::FromFile { kind, path: path.to_string(), format, c, seed };
+        spec.validate().map_err(|e| format!("problem.{e}"))?;
+        Ok(spec)
     }
 
     /// Construction-time validation: reject knob values the instance
@@ -319,6 +414,15 @@ impl ProblemSpec {
                     None => Ok(()),
                 }
             }
+            ProblemSpec::FromFile { path, c, .. } => {
+                if path.is_empty() {
+                    return Err("path must be non-empty".to_string());
+                }
+                match c {
+                    Some(c) => c_pos(*c),
+                    None => Ok(()),
+                }
+            }
         }
     }
 
@@ -336,6 +440,31 @@ impl ProblemSpec {
         let seed = doc.get_usize(&key("seed")).unwrap_or(1) as u64;
         let need_usize =
             |k: &str| doc.get_usize(&key(k)).ok_or(format!("missing {prefix}.{k}"));
+        // `path` switches the kind to its file-backed variant: the data
+        // matrix comes from the named file instead of `datagen`.
+        if let Some(path) = doc.get_str(&key("path")) {
+            let fk = FileKind::parse(&kind).ok_or(format!(
+                "{prefix}.path applies to lasso/logistic/svm problems, not {kind:?}"
+            ))?;
+            let format = match doc.get_str(&key("format")) {
+                Some(f) => DataFormat::parse(f).ok_or(format!(
+                    "unknown {prefix}.format {f:?} (libsvm | matrix-market | flexa-mmap)"
+                ))?,
+                None => DataFormat::detect(path).ok_or(format!(
+                    "cannot infer {prefix}.format from {path:?}; set format = \
+                     \"libsvm\" | \"matrix-market\" | \"flexa-mmap\""
+                ))?,
+            };
+            let spec = ProblemSpec::FromFile {
+                kind: fk,
+                path: path.to_string(),
+                format,
+                c: doc.get_f64(&key("c")),
+                seed,
+            };
+            spec.validate().map_err(|e| format!("{prefix}.{e}"))?;
+            return Ok(spec);
+        }
         let spec = match kind.as_str() {
             "lasso" => ProblemSpec::Lasso {
                 m: need_usize("m")?,
@@ -456,6 +585,18 @@ impl ProblemSpec {
                 }
                 j
             }
+            ProblemSpec::FromFile { path, format, c, seed, .. } => {
+                let mut j = Json::obj(vec![
+                    ("kind", kind),
+                    ("path", Json::str(path.clone())),
+                    ("format", Json::str(format.name())),
+                    ("seed", Json::Num(*seed as f64)),
+                ]);
+                if let Some(c) = c {
+                    j = j.with("c", Json::Num(*c));
+                }
+                j
+            }
         }
     }
 
@@ -471,6 +612,24 @@ impl ProblemSpec {
         let s = |k: &str| j.get(k).and_then(Json::as_str);
         let need_u = |k: &str| u(k).ok_or(format!("problem JSON needs {k:?}"));
         let seed = f("seed").map(|v| v as u64).unwrap_or(1);
+        // A "path" key marks the file-backed variant of the kind.
+        if let Some(path) = s("path") {
+            let fk = FileKind::parse(kind).ok_or(format!(
+                "problem JSON path applies to lasso/logistic/svm, not {kind:?}"
+            ))?;
+            let fmt = s("format").ok_or("file-backed problem JSON needs \"format\"")?;
+            let format = DataFormat::parse(fmt)
+                .ok_or(format!("unknown problem format {fmt:?}"))?;
+            let spec = ProblemSpec::FromFile {
+                kind: fk,
+                path: path.to_string(),
+                format,
+                c: f("c"),
+                seed,
+            };
+            spec.validate().map_err(|e| format!("problem.{e}"))?;
+            return Ok(spec);
+        }
         let spec = match kind {
             "lasso" => ProblemSpec::Lasso {
                 m: need_u("m")?,
@@ -1032,6 +1191,20 @@ tol = 1e-6
                 c: None,
                 seed: 6,
             },
+            ProblemSpec::FromFile {
+                kind: FileKind::Lasso,
+                path: "data/tiny.libsvm".into(),
+                format: crate::io::DataFormat::Libsvm,
+                c: Some(0.5),
+                seed: 8,
+            },
+            ProblemSpec::FromFile {
+                kind: FileKind::Logistic,
+                path: "data/store".into(),
+                format: crate::io::DataFormat::FlexaMmap,
+                c: None,
+                seed: 9,
+            },
         ];
         for spec in specs {
             let j = spec.to_json();
@@ -1049,6 +1222,70 @@ tol = 1e-6
         assert!(err.contains("problem.c"), "{err}");
         let j = Json::parse(r#"{"kind":"frobnicate"}"#).unwrap();
         assert!(ProblemSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn problem_path_key_switches_to_file_backed() {
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"lasso\"\npath = \"data/a.mtx\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.problem,
+            ProblemSpec::FromFile {
+                kind: FileKind::Lasso,
+                path: "data/a.mtx".into(),
+                format: crate::io::DataFormat::MatrixMarket,
+                c: None,
+                seed: 1,
+            }
+        );
+        // Explicit format wins; unknown formats and non-file kinds error.
+        let cfg = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"svm\"\npath = \"d\"\nformat = \"libsvm\"\nc = 0.5\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            cfg.problem,
+            ProblemSpec::FromFile { kind: FileKind::Svm, c: Some(c), .. } if c == 0.5
+        ));
+        let err = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"lasso\"\npath = \"d\"\nformat = \"hdf5\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("format"), "{err}");
+        let err = ExperimentConfig::from_toml(
+            "solvers = \"flexa\"\n[problem]\nkind = \"dictionary\"\npath = \"d.mtx\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("path applies to"), "{err}");
+    }
+
+    #[test]
+    fn with_data_rebases_compatible_kinds() {
+        let lasso = ProblemSpec::Lasso { m: 20, n: 30, sparsity: 0.1, c: 2.0, seed: 7 };
+        let rebased = lasso.with_data("x.libsvm").unwrap();
+        assert_eq!(
+            rebased,
+            ProblemSpec::FromFile {
+                kind: FileKind::Lasso,
+                path: "x.libsvm".into(),
+                format: crate::io::DataFormat::Libsvm,
+                c: Some(2.0),
+                seed: 7,
+            }
+        );
+        let qp = ProblemSpec::NonconvexQp {
+            m: 20,
+            n: 30,
+            sparsity: 0.1,
+            c: 100.0,
+            cbar: 1000.0,
+            box_bound: 1.0,
+            seed: 5,
+        };
+        assert!(qp.with_data("x.libsvm").is_err());
+        assert!(lasso.with_data("mystery.dat").is_err(), "uninferable format");
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! libsvm / svmlight text format.
+//!
+//! One example per line: `label idx:val idx:val ...` with 1-based,
+//! strictly ascending feature indices; blank lines and lines starting
+//! with `#` are skipped. Rows of the matrix are examples, columns are
+//! features — the natural orientation for the logistic/svm problems,
+//! whose `A` is `examples × features`.
+//!
+//! Loading is two-pass and streaming: pass 1 counts entries per column
+//! (and collects labels), pass 2 fills preallocated CSC arrays with a
+//! per-column cursor. Because examples are scanned in row order, each
+//! column's row indices come out strictly increasing by construction;
+//! [`CscMatrix::try_from_parts`] re-checks everything anyway so a bug
+//! here can never leak an invalid matrix.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::{io_err, IoError, IoResult};
+use crate::linalg::CscMatrix;
+
+fn parse_err(path: &Path, line: usize, msg: impl Into<String>) -> IoError {
+    IoError::Parse { path: path.display().to_string(), line, msg: msg.into() }
+}
+
+/// Does this line carry data? (Blank and `#`-comment lines do not.)
+fn is_data(line: &str) -> bool {
+    let t = line.trim_start();
+    !t.is_empty() && !t.starts_with('#')
+}
+
+/// Parse one `idx:val` token; `idx` must be a positive integer.
+fn parse_entry(path: &Path, lineno: usize, tok: &str) -> IoResult<(usize, f64)> {
+    let (idx, val) = tok
+        .split_once(':')
+        .ok_or_else(|| parse_err(path, lineno, format!("expected idx:val, got `{tok}`")))?;
+    let idx: usize = idx
+        .parse()
+        .map_err(|_| parse_err(path, lineno, format!("bad feature index `{idx}`")))?;
+    if idx == 0 {
+        return Err(parse_err(path, lineno, "feature indices are 1-based; got 0"));
+    }
+    let val: f64 = val
+        .parse()
+        .map_err(|_| parse_err(path, lineno, format!("bad feature value `{val}`")))?;
+    Ok((idx, val))
+}
+
+/// Load a libsvm file: returns the `examples × features` matrix and the
+/// per-example labels.
+pub fn load_libsvm(path: &Path) -> IoResult<(CscMatrix, Vec<f64>)> {
+    // Pass 1: labels, per-column counts, dimensions.
+    let file = File::open(path).map_err(|e| io_err(path, e))?;
+    let mut labels: Vec<f64> = Vec::new();
+    let mut col_counts: Vec<usize> = Vec::new();
+    for (i, line) in BufReader::new(file).lines().enumerate() {
+        let lineno = i + 1;
+        let line = line.map_err(|e| io_err(path, e))?;
+        if !is_data(&line) {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let label = toks.next().expect("data line has a first token");
+        let label: f64 = label
+            .parse()
+            .map_err(|_| parse_err(path, lineno, format!("bad label `{label}`")))?;
+        labels.push(label);
+        let mut prev = 0usize;
+        for tok in toks {
+            let (idx, _) = parse_entry(path, lineno, tok)?;
+            if idx <= prev {
+                return Err(parse_err(
+                    path,
+                    lineno,
+                    format!("feature indices must be strictly ascending: {idx} follows {prev}"),
+                ));
+            }
+            prev = idx;
+            if idx > col_counts.len() {
+                col_counts.resize(idx, 0);
+            }
+            col_counts[idx - 1] += 1;
+        }
+    }
+    let nrows = labels.len();
+    let ncols = col_counts.len();
+
+    // Prefix-sum the counts into colptr; keep per-column write cursors.
+    let mut colptr = Vec::with_capacity(ncols + 1);
+    colptr.push(0usize);
+    for &c in &col_counts {
+        colptr.push(colptr.last().unwrap() + c);
+    }
+    let nnz = *colptr.last().unwrap();
+    let mut cursor = colptr[..ncols].to_vec();
+    let mut rowind = vec![0usize; nnz];
+    let mut values = vec![0.0f64; nnz];
+
+    // Pass 2: fill. Rows are visited in increasing order, so each
+    // column's entries land already sorted.
+    let file = File::open(path).map_err(|e| io_err(path, e))?;
+    let mut row = 0usize;
+    for (i, line) in BufReader::new(file).lines().enumerate() {
+        let lineno = i + 1;
+        let line = line.map_err(|e| io_err(path, e))?;
+        if !is_data(&line) {
+            continue;
+        }
+        if row >= nrows {
+            return Err(parse_err(path, lineno, "file grew between passes"));
+        }
+        for tok in line.split_whitespace().skip(1) {
+            let (idx, val) = parse_entry(path, lineno, tok)?;
+            let j = idx - 1;
+            let k = cursor[j];
+            rowind[k] = row;
+            values[k] = val;
+            cursor[j] = k + 1;
+        }
+        row += 1;
+    }
+
+    let a = CscMatrix::try_from_parts(nrows, ncols, colptr, rowind, values)
+        .map_err(|err| IoError::Structure { path: path.display().to_string(), err })?;
+    Ok((a, labels))
+}
+
+/// Write a matrix + labels as libsvm text. Values are printed with
+/// Rust's shortest round-trip `f64` formatting, so load-after-write is
+/// bitwise-exact.
+pub fn write_libsvm(path: &Path, a: &CscMatrix, labels: &[f64]) -> IoResult<()> {
+    if labels.len() != a.nrows() {
+        return Err(IoError::Format {
+            path: path.display().to_string(),
+            msg: format!("{} labels for {} rows", labels.len(), a.nrows()),
+        });
+    }
+    // Transpose the column-major storage into per-row entry lists.
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); a.nrows()];
+    for j in 0..a.ncols() {
+        let (rix, vals) = a.col(j);
+        for (&i, &v) in rix.iter().zip(vals) {
+            rows[i].push((j + 1, v));
+        }
+    }
+    let file = File::create(path).map_err(|e| io_err(path, e))?;
+    let mut w = std::io::BufWriter::new(file);
+    for (i, entries) in rows.iter().enumerate() {
+        let mut line = format!("{}", labels[i]);
+        for &(idx, v) in entries {
+            line.push_str(&format!(" {idx}:{v}"));
+        }
+        line.push('\n');
+        w.write_all(line.as_bytes()).map_err(|e| io_err(path, e))?;
+    }
+    w.flush().map_err(|e| io_err(path, e))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("flexa_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn loads_simple_file_with_comments() {
+        let path = tmp("simple.libsvm");
+        std::fs::write(&path, "# comment\n1 1:0.5 3:2\n\n-1 2:-1.25\n").unwrap();
+        let (a, labels) = load_libsvm(&path).unwrap();
+        assert_eq!((a.nrows(), a.ncols(), a.nnz()), (2, 3, 3));
+        assert_eq!(labels, vec![1.0, -1.0]);
+        assert_eq!(a.to_dense().get(0, 2), 2.0);
+        assert_eq!(a.to_dense().get(1, 1), -1.25);
+    }
+
+    #[test]
+    fn rejects_zero_index_with_line_number() {
+        let path = tmp("zero_idx.libsvm");
+        std::fs::write(&path, "1 1:1\n1 0:2\n").unwrap();
+        let err = load_libsvm(&path).unwrap_err();
+        match err {
+            IoError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("expected Parse error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_descending_indices() {
+        let path = tmp("desc.libsvm");
+        std::fs::write(&path, "1 3:1 2:1\n").unwrap();
+        assert!(matches!(load_libsvm(&path).unwrap_err(), IoError::Parse { line: 1, .. }));
+    }
+
+    #[test]
+    fn rejects_malformed_tokens() {
+        for (name, body) in [
+            ("bad_label.libsvm", "one 1:1\n"),
+            ("bad_pair.libsvm", "1 12\n"),
+            ("bad_value.libsvm", "1 1:abc\n"),
+        ] {
+            let path = tmp(name);
+            std::fs::write(&path, body).unwrap();
+            assert!(
+                matches!(load_libsvm(&path).unwrap_err(), IoError::Parse { .. }),
+                "{name} should fail to parse"
+            );
+        }
+    }
+
+    #[test]
+    fn write_then_load_is_bitwise() {
+        let a = CscMatrix::from_triplets(
+            3,
+            4,
+            &[(0, 0, 0.1), (2, 0, -7.25), (1, 2, 1e-300), (0, 3, 3.5)],
+        );
+        let labels = vec![1.0, -1.0, 1.0];
+        let path = tmp("roundtrip.libsvm");
+        write_libsvm(&path, &a, &labels).unwrap();
+        let (b, got) = load_libsvm(&path).unwrap();
+        assert_eq!(got, labels);
+        assert_eq!((b.nrows(), b.nnz()), (3, 4));
+        // ncols may shrink if trailing columns are empty; col 3 is not.
+        assert_eq!(b.ncols(), 4);
+        for j in 0..4 {
+            let (ra, va) = a.col(j);
+            let (rb, vb) = b.col(j);
+            assert_eq!(ra, rb);
+            let va: Vec<u64> = va.iter().map(|v| v.to_bits()).collect();
+            let vb: Vec<u64> = vb.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(va, vb);
+        }
+    }
+}

@@ -1,0 +1,350 @@
+//! Matrix Market exchange format (coordinate variant).
+//!
+//! Accepts `%%MatrixMarket matrix coordinate {real|integer|pattern}
+//! {general|symmetric|skew-symmetric}` — the variants that describe a
+//! real sparse matrix. `array` (dense), `complex`, and `hermitian`
+//! files are rejected with a message naming the unsupported variant.
+//! Entries are 1-based and bounds-checked with line numbers; symmetric
+//! and skew-symmetric storage is expanded to the full matrix on load.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::{io_err, IoError, IoResult};
+use crate::linalg::CscMatrix;
+
+fn parse_err(path: &Path, line: usize, msg: impl Into<String>) -> IoError {
+    IoError::Parse { path: path.display().to_string(), line, msg: msg.into() }
+}
+
+fn format_err(path: &Path, msg: impl Into<String>) -> IoError {
+    IoError::Format { path: path.display().to_string(), msg: msg.into() }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Symmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+fn parse_header(path: &Path, line: &str) -> IoResult<(Field, Symmetry)> {
+    let toks: Vec<String> = line.split_whitespace().map(|t| t.to_ascii_lowercase()).collect();
+    if toks.len() != 5 || toks[0] != "%%matrixmarket" {
+        return Err(format_err(path, format!("not a MatrixMarket header: `{}`", line.trim())));
+    }
+    if toks[1] != "matrix" {
+        return Err(format_err(path, format!("unsupported object `{}` (only matrix)", toks[1])));
+    }
+    if toks[2] != "coordinate" {
+        return Err(format_err(
+            path,
+            format!("unsupported format `{}` (only coordinate; dense array files are not)", toks[2]),
+        ));
+    }
+    let field = match toks[3].as_str() {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => {
+            return Err(format_err(
+                path,
+                format!("unsupported field `{other}` (only real/integer/pattern)"),
+            ))
+        }
+    };
+    let sym = match toks[4].as_str() {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        "skew-symmetric" => Symmetry::SkewSymmetric,
+        other => {
+            return Err(format_err(
+                path,
+                format!("unsupported symmetry `{other}` (only general/symmetric/skew-symmetric)"),
+            ))
+        }
+    };
+    Ok((field, sym))
+}
+
+/// Load a Matrix Market coordinate file as CSC.
+pub fn load_matrix_market(path: &Path) -> IoResult<CscMatrix> {
+    let file = File::open(path).map_err(|e| io_err(path, e))?;
+    let mut lines = BufReader::new(file).lines().enumerate();
+
+    let (_, first) = lines
+        .next()
+        .ok_or_else(|| format_err(path, "empty file"))?;
+    let first = first.map_err(|e| io_err(path, e))?;
+    let (field, sym) = parse_header(path, &first)?;
+
+    // Comment lines, then the size line.
+    let mut size: Option<(usize, usize, usize, usize)> = None;
+    for (i, line) in &mut lines {
+        let lineno = i + 1;
+        let line = line.map_err(|e| io_err(path, e))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let dims: Vec<&str> = t.split_whitespace().collect();
+        if dims.len() != 3 {
+            return Err(parse_err(path, lineno, format!("expected `m n nnz` size line, got `{t}`")));
+        }
+        let mut parsed = [0usize; 3];
+        for (k, d) in dims.iter().enumerate() {
+            parsed[k] = d
+                .parse()
+                .map_err(|_| parse_err(path, lineno, format!("bad size entry `{d}`")))?;
+        }
+        size = Some((parsed[0], parsed[1], parsed[2], lineno));
+        break;
+    }
+    let (nrows, ncols, stored, size_line) =
+        size.ok_or_else(|| format_err(path, "missing size line"))?;
+
+    // Collect triplets, expanding symmetry.
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(stored);
+    let mut seen = 0usize;
+    for (i, line) in &mut lines {
+        let lineno = i + 1;
+        let line = line.map_err(|e| io_err(path, e))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        seen += 1;
+        if seen > stored {
+            return Err(parse_err(path, lineno, format!("more than {stored} declared entries")));
+        }
+        let toks: Vec<&str> = t.split_whitespace().collect();
+        let want = if field == Field::Pattern { 2 } else { 3 };
+        if toks.len() != want {
+            return Err(parse_err(path, lineno, format!("expected {want} fields, got `{t}`")));
+        }
+        let i1: usize = toks[0]
+            .parse()
+            .map_err(|_| parse_err(path, lineno, format!("bad row index `{}`", toks[0])))?;
+        let j1: usize = toks[1]
+            .parse()
+            .map_err(|_| parse_err(path, lineno, format!("bad column index `{}`", toks[1])))?;
+        if i1 == 0 || j1 == 0 {
+            return Err(parse_err(path, lineno, "indices are 1-based; got 0"));
+        }
+        if i1 > nrows || j1 > ncols {
+            return Err(parse_err(
+                path,
+                lineno,
+                format!("entry ({i1}, {j1}) outside declared {nrows} x {ncols}"),
+            ));
+        }
+        let v: f64 = if field == Field::Pattern {
+            1.0
+        } else {
+            toks[2]
+                .parse()
+                .map_err(|_| parse_err(path, lineno, format!("bad value `{}`", toks[2])))?
+        };
+        let (r, c) = (i1 - 1, j1 - 1);
+        triplets.push((r, c, v));
+        if r != c {
+            match sym {
+                Symmetry::General => {}
+                Symmetry::Symmetric => triplets.push((c, r, v)),
+                Symmetry::SkewSymmetric => triplets.push((c, r, -v)),
+            }
+        }
+    }
+    if seen != stored {
+        return Err(parse_err(
+            path,
+            size_line,
+            format!("size line declares {stored} entries but file has {seen}"),
+        ));
+    }
+
+    // Count / prefix / fill, then sort each column by row and reject
+    // duplicates — coordinate files may list entries in any order, but
+    // a repeated (i, j) is ambiguous and refused rather than summed.
+    let mut colptr = vec![0usize; ncols + 1];
+    for &(_, c, _) in &triplets {
+        colptr[c + 1] += 1;
+    }
+    for j in 0..ncols {
+        colptr[j + 1] += colptr[j];
+    }
+    let nnz = triplets.len();
+    let mut cursor = colptr[..ncols].to_vec();
+    let mut rowind = vec![0usize; nnz];
+    let mut values = vec![0.0f64; nnz];
+    for &(r, c, v) in &triplets {
+        let k = cursor[c];
+        rowind[k] = r;
+        values[k] = v;
+        cursor[c] = k + 1;
+    }
+    for j in 0..ncols {
+        let (lo, hi) = (colptr[j], colptr[j + 1]);
+        let mut perm: Vec<usize> = (lo..hi).collect();
+        perm.sort_by_key(|&k| rowind[k]);
+        let sorted_rows: Vec<usize> = perm.iter().map(|&k| rowind[k]).collect();
+        let sorted_vals: Vec<f64> = perm.iter().map(|&k| values[k]).collect();
+        for w in sorted_rows.windows(2) {
+            if w[0] == w[1] {
+                return Err(format_err(
+                    path,
+                    format!("duplicate entry at row {}, column {}", w[0] + 1, j + 1),
+                ));
+            }
+        }
+        rowind[lo..hi].copy_from_slice(&sorted_rows);
+        values[lo..hi].copy_from_slice(&sorted_vals);
+    }
+
+    CscMatrix::try_from_parts(nrows, ncols, colptr, rowind, values)
+        .map_err(|err| IoError::Structure { path: path.display().to_string(), err })
+}
+
+/// Write a matrix as `coordinate real general`, entries in column-major
+/// order. Values use Rust's shortest round-trip `f64` formatting, so
+/// load-after-write is bitwise-exact.
+pub fn write_matrix_market(path: &Path, a: &CscMatrix) -> IoResult<()> {
+    let file = File::create(path).map_err(|e| io_err(path, e))?;
+    let mut w = std::io::BufWriter::new(file);
+    let mut out = String::new();
+    out.push_str("%%MatrixMarket matrix coordinate real general\n");
+    out.push_str(&format!("{} {} {}\n", a.nrows(), a.ncols(), a.nnz()));
+    for j in 0..a.ncols() {
+        let (rows, vals) = a.col(j);
+        for (&i, &v) in rows.iter().zip(vals) {
+            out.push_str(&format!("{} {} {v}\n", i + 1, j + 1));
+        }
+    }
+    w.write_all(out.as_bytes()).map_err(|e| io_err(path, e))?;
+    w.flush().map_err(|e| io_err(path, e))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("flexa_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn loads_general_real_file() {
+        let path = tmp("general.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n% a comment\n3 3 4\n3 1 4.0\n1 1 1.0\n2 2 3.0\n1 3 2.5\n",
+        )
+        .unwrap();
+        let a = load_matrix_market(&path).unwrap();
+        assert_eq!((a.nrows(), a.ncols(), a.nnz()), (3, 3, 4));
+        let (rows, vals) = a.col(0);
+        assert_eq!(rows, &[0, 2]); // sorted despite file order
+        assert_eq!(vals, &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn expands_symmetric_and_pattern() {
+        let path = tmp("sym.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate pattern symmetric\n3 3 2\n2 1\n3 3\n",
+        )
+        .unwrap();
+        let a = load_matrix_market(&path).unwrap();
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.to_dense().get(0, 1), 1.0);
+        assert_eq!(a.to_dense().get(1, 0), 1.0);
+
+        let path = tmp("skew.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n2 1 5.0\n",
+        )
+        .unwrap();
+        let a = load_matrix_market(&path).unwrap();
+        assert_eq!(a.to_dense().get(1, 0), 5.0);
+        assert_eq!(a.to_dense().get(0, 1), -5.0);
+    }
+
+    #[test]
+    fn rejects_unsupported_variants() {
+        for (name, hdr) in [
+            ("array.mtx", "%%MatrixMarket matrix array real general"),
+            ("complex.mtx", "%%MatrixMarket matrix coordinate complex general"),
+            ("herm.mtx", "%%MatrixMarket matrix coordinate real hermitian"),
+            ("vector.mtx", "%%MatrixMarket vector coordinate real general"),
+            ("garbage.mtx", "not a header at all"),
+        ] {
+            let path = tmp(name);
+            std::fs::write(&path, format!("{hdr}\n1 1 0\n")).unwrap();
+            assert!(
+                matches!(load_matrix_market(&path).unwrap_err(), IoError::Format { .. }),
+                "{name} should be rejected as unsupported"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_and_truncation() {
+        let path = tmp("oob.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
+        )
+        .unwrap();
+        assert!(matches!(load_matrix_market(&path).unwrap_err(), IoError::Parse { line: 3, .. }));
+
+        let path = tmp("trunc.mtx");
+        std::fs::write(&path, "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n")
+            .unwrap();
+        assert!(matches!(load_matrix_market(&path).unwrap_err(), IoError::Parse { line: 2, .. }));
+    }
+
+    #[test]
+    fn rejects_duplicate_entries() {
+        let path = tmp("dup.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n1 1 2.0\n",
+        )
+        .unwrap();
+        assert!(matches!(load_matrix_market(&path).unwrap_err(), IoError::Format { .. }));
+    }
+
+    #[test]
+    fn write_then_load_is_bitwise() {
+        let a = CscMatrix::from_triplets(
+            4,
+            3,
+            &[(0, 0, 0.3), (3, 0, -1.0e-12), (2, 1, 7.5), (1, 2, 0.1 + 0.2)],
+        );
+        let path = tmp("roundtrip.mtx");
+        write_matrix_market(&path, &a).unwrap();
+        let b = load_matrix_market(&path).unwrap();
+        assert_eq!((b.nrows(), b.ncols(), b.nnz()), (4, 3, 4));
+        for j in 0..3 {
+            let (ra, va) = a.col(j);
+            let (rb, vb) = b.col(j);
+            assert_eq!(ra, rb);
+            let va: Vec<u64> = va.iter().map(|v| v.to_bits()).collect();
+            let vb: Vec<u64> = vb.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(va, vb);
+        }
+    }
+}

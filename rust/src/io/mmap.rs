@@ -1,0 +1,293 @@
+//! Read-only memory-mapped regions and typed views over them.
+//!
+//! This is the out-of-core substrate for the `flexa-mmap` column store
+//! (`super::store`): each of `colptr.bin` / `rowind.bin` / `values.bin`
+//! is opened as one [`MmapRegion`], and the matrix holds [`MapSlice`]
+//! views into it. On Unix the region is a real `mmap(2)` of the file —
+//! the kernel pages nonzeros in on demand and evicts them under memory
+//! pressure, so `A` can exceed RAM. On other platforms (or if the
+//! syscall fails) the region transparently falls back to an owned,
+//! 8-byte-aligned in-memory copy; callers cannot tell the difference.
+//!
+//! No external crates: the Unix path declares the two raw syscalls it
+//! needs in a private `extern "C"` block.
+
+use std::fs::File;
+use std::io::Read;
+use std::marker::PhantomData;
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(unix)]
+mod sys {
+    //! The two POSIX calls we need, declared directly (no libc crate).
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+enum Backing {
+    /// 8-byte-aligned in-memory copy (empty files, non-Unix platforms,
+    /// or an mmap syscall failure). The byte length lives on the region.
+    Owned(Vec<u64>),
+    #[cfg(unix)]
+    Mapped {
+        ptr: *const u8,
+        map_len: usize,
+    },
+}
+
+/// A read-only byte region backed by a memory-mapped file where
+/// possible, an owned aligned buffer otherwise.
+pub struct MmapRegion {
+    /// Logical length in bytes (the file size; the map may be longer).
+    len: usize,
+    backing: Backing,
+}
+
+// Safety: the region is read-only for its entire lifetime — the mapping
+// is PROT_READ/MAP_PRIVATE and the owned buffer is never mutated after
+// construction — so shared references across threads are sound.
+unsafe impl Send for MmapRegion {}
+unsafe impl Sync for MmapRegion {}
+
+impl MmapRegion {
+    /// Map (or read) the whole file at `path`.
+    pub fn open(path: &Path) -> std::io::Result<MmapRegion> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "file too large for usize")
+        })?;
+        if len == 0 {
+            return Ok(MmapRegion { len: 0, backing: Backing::Owned(Vec::new()) });
+        }
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize != -1 {
+                // The file descriptor can be closed once the mapping
+                // exists; the mapping keeps the pages alive.
+                return Ok(MmapRegion { len, backing: Backing::Mapped { ptr, map_len: len } });
+            }
+            // fall through to the owned copy on syscall failure
+        }
+        Self::read_owned(file, len)
+    }
+
+    /// Portable fallback: read the file into an 8-byte-aligned buffer.
+    fn read_owned(mut file: File, len: usize) -> std::io::Result<MmapRegion> {
+        let words = len.div_ceil(8);
+        let mut buf = vec![0u64; words];
+        // Safety: the u64 buffer is a valid writable byte region of at
+        // least `len` bytes; we only reinterpret for the read.
+        let bytes =
+            unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+        file.read_exact(bytes)?;
+        Ok(MmapRegion { len, backing: Backing::Owned(buf) })
+    }
+
+    /// Logical length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the region is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether the backing is a real kernel mapping (vs an owned copy).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            Backing::Owned(_) => false,
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+        }
+    }
+
+    /// Base pointer; aligned to at least 8 bytes (page-aligned when
+    /// mapped, `Vec<u64>`-aligned when owned).
+    fn base(&self) -> *const u8 {
+        match &self.backing {
+            Backing::Owned(v) => v.as_ptr() as *const u8,
+            #[cfg(unix)]
+            Backing::Mapped { ptr, .. } => *ptr,
+        }
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, map_len } = self.backing {
+            // Safety: `ptr` came from a successful mmap of `map_len`
+            // bytes and is unmapped exactly once.
+            unsafe {
+                sys::munmap(ptr as *mut u8, map_len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MmapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapRegion")
+            .field("len", &self.len)
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+/// A `&[T]` view into a shared [`MmapRegion`], cheap to clone and
+/// sub-slice (the sharded backend's `columns_range` views are exactly
+/// these sub-slices — no nonzeros are copied).
+///
+/// The element type is reinterpreted directly from the mapped bytes, so
+/// constructors in this crate only build `MapSlice<usize>` /
+/// `MapSlice<f64>` over little-endian 8-byte-per-element files on
+/// targets where that reinterpretation is the identity (little-endian,
+/// 64-bit); other targets decode to owned storage instead (see
+/// `super::store`).
+pub struct MapSlice<T: Copy + 'static> {
+    region: Arc<MmapRegion>,
+    /// Offset into the region, in elements.
+    off: usize,
+    /// Length, in elements.
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<T: Copy + 'static> Clone for MapSlice<T> {
+    fn clone(&self) -> Self {
+        MapSlice { region: Arc::clone(&self.region), off: self.off, len: self.len, _elem: PhantomData }
+    }
+}
+
+impl<T: Copy + 'static> MapSlice<T> {
+    /// View the whole region as a `[T]`. Errors if the region size is
+    /// not a whole number of elements.
+    pub fn whole(region: Arc<MmapRegion>) -> std::io::Result<MapSlice<T>> {
+        let esz = std::mem::size_of::<T>();
+        debug_assert!(esz == 8, "store element types are 8 bytes");
+        if region.len() % esz != 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("region of {} bytes is not a multiple of {esz}", region.len()),
+            ));
+        }
+        let len = region.len() / esz;
+        Ok(MapSlice { region, off: 0, len, _elem: PhantomData })
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The viewed elements.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        if self.len == 0 {
+            return &[];
+        }
+        // Safety: construction guaranteed `off + len` elements lie
+        // within the region, the base is 8-byte aligned and the element
+        // size is 8, and the region's memory is immutable and outlives
+        // `self` via the Arc.
+        unsafe {
+            let base = self.region.base().add(self.off * std::mem::size_of::<T>());
+            std::slice::from_raw_parts(base as *const T, self.len)
+        }
+    }
+
+    /// Zero-copy sub-view (shares the same region).
+    pub fn slice(&self, r: std::ops::Range<usize>) -> MapSlice<T> {
+        assert!(r.start <= r.end && r.end <= self.len, "MapSlice range out of bounds");
+        MapSlice {
+            region: Arc::clone(&self.region),
+            off: self.off + r.start,
+            len: r.end - r.start,
+            _elem: PhantomData,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_words(path: &Path, words: &[u64]) {
+        let mut bytes = Vec::with_capacity(words.len() * 8);
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn region_round_trips_words() {
+        let dir = std::env::temp_dir().join("flexa_mmap_region_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("words.bin");
+        write_words(&path, &[0, 7, u64::MAX, 42]);
+        let region = Arc::new(MmapRegion::open(&path).unwrap());
+        assert_eq!(region.len(), 32);
+        if cfg!(all(target_endian = "little", target_pointer_width = "64")) {
+            let view: MapSlice<usize> = MapSlice::whole(Arc::clone(&region)).unwrap();
+            assert_eq!(view.as_slice(), &[0usize, 7, usize::MAX, 42]);
+            let sub = view.slice(1..3);
+            assert_eq!(sub.as_slice(), &[7, usize::MAX]);
+            assert_eq!(sub.slice(1..2).as_slice(), &[usize::MAX]);
+        }
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_view() {
+        let dir = std::env::temp_dir().join("flexa_mmap_region_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let region = Arc::new(MmapRegion::open(&path).unwrap());
+        assert!(region.is_empty());
+        assert!(!region.is_mapped());
+        let view: MapSlice<f64> = MapSlice::whole(region).unwrap();
+        assert!(view.as_slice().is_empty());
+    }
+
+    #[test]
+    fn ragged_region_is_rejected_as_whole_view() {
+        let dir = std::env::temp_dir().join("flexa_mmap_region_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ragged.bin");
+        std::fs::write(&path, &[1u8, 2, 3]).unwrap();
+        let region = Arc::new(MmapRegion::open(&path).unwrap());
+        assert!(MapSlice::<f64>::whole(region).is_err());
+    }
+}

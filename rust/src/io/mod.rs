@@ -1,0 +1,169 @@
+//! Data ingest: real-dataset loaders and the out-of-core column store.
+//!
+//! Everything upstream of this module is synthetic (`crate::datagen`);
+//! this is where file data enters the crate. Three formats are
+//! supported, all landing on the same validated [`CscMatrix`]:
+//!
+//! - **libsvm** (`label idx:val ...`, 1-based ascending indices) — the
+//!   common distribution format for gisette/rcv1/real-sim-class
+//!   datasets; carries per-row labels.
+//! - **Matrix Market** coordinate (`%%MatrixMarket matrix coordinate
+//!   real general`, plus integer/pattern fields and
+//!   symmetric/skew-symmetric storage) — matrix only, no labels.
+//! - **flexa-mmap** (`super::io::store`) — this crate's own binary
+//!   column store, written by `flexa convert`, whose arrays are
+//!   memory-mapped at open so `A` can exceed RAM.
+//!
+//! Loaders are streaming and two-pass (count, then fill), and every
+//! malformed input comes back as a typed [`IoError`] with the offending
+//! path and line — never a panic. Structural validation is delegated to
+//! [`CscMatrix::try_from_parts`], so no loader can construct a matrix
+//! that violates the kernel invariants.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::linalg::{CscError, CscMatrix};
+
+pub mod libsvm;
+pub mod matrix_market;
+pub mod mmap;
+pub mod store;
+
+/// Why a dataset failed to load or convert.
+#[derive(Debug)]
+pub enum IoError {
+    /// An underlying filesystem error.
+    Io {
+        /// File being read or written.
+        path: String,
+        /// The OS error.
+        err: std::io::Error,
+    },
+    /// A line of a text format failed to parse.
+    Parse {
+        /// File being read.
+        path: String,
+        /// 1-based line number of the offending line.
+        line: usize,
+        /// What was wrong.
+        msg: String,
+    },
+    /// The parsed arrays violate the CSC structural invariant.
+    Structure {
+        /// File being read.
+        path: String,
+        /// The rejected invariant.
+        err: CscError,
+    },
+    /// The file is not in the expected format (bad header, unsupported
+    /// variant, missing store file, ...).
+    Format {
+        /// File being read.
+        path: String,
+        /// What was wrong.
+        msg: String,
+    },
+}
+
+impl fmt::Display for IoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IoError::Io { path, err } => write!(f, "{path}: {err}"),
+            IoError::Parse { path, line, msg } => write!(f, "{path}:{line}: {msg}"),
+            IoError::Structure { path, err } => write!(f, "{path}: invalid CSC structure: {err}"),
+            IoError::Format { path, msg } => write!(f, "{path}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {}
+
+/// Shorthand result for this module.
+pub type IoResult<T> = Result<T, IoError>;
+
+pub(crate) fn io_err(path: &Path, err: std::io::Error) -> IoError {
+    IoError::Io { path: path.display().to_string(), err }
+}
+
+/// A dataset file format understood by [`load_dataset`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataFormat {
+    /// `label idx:val ...` text lines, 1-based ascending indices.
+    Libsvm,
+    /// Matrix Market coordinate format (`.mtx`).
+    MatrixMarket,
+    /// This crate's binary column store directory (`flexa convert`).
+    FlexaMmap,
+}
+
+impl DataFormat {
+    /// Canonical name, as accepted by `format = "..."` in TOML.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataFormat::Libsvm => "libsvm",
+            DataFormat::MatrixMarket => "matrix-market",
+            DataFormat::FlexaMmap => "flexa-mmap",
+        }
+    }
+
+    /// Parse a format name (the inverse of [`DataFormat::name`]).
+    pub fn parse(s: &str) -> Option<DataFormat> {
+        match s {
+            "libsvm" => Some(DataFormat::Libsvm),
+            "matrix-market" | "matrixmarket" | "mtx" => Some(DataFormat::MatrixMarket),
+            "flexa-mmap" | "mmap" => Some(DataFormat::FlexaMmap),
+            _ => None,
+        }
+    }
+
+    /// Infer the format from the path: a directory containing a
+    /// `header` file is a flexa-mmap store, `.mtx` is Matrix Market,
+    /// `.libsvm`/`.svm` is libsvm.
+    pub fn detect(path: &str) -> Option<DataFormat> {
+        let p = Path::new(path);
+        if p.is_dir() {
+            if p.join(store::HEADER_FILE).is_file() {
+                return Some(DataFormat::FlexaMmap);
+            }
+            return None;
+        }
+        match p.extension().and_then(|e| e.to_str()) {
+            Some("mtx") => Some(DataFormat::MatrixMarket),
+            Some("libsvm") | Some("svm") => Some(DataFormat::Libsvm),
+            _ => None,
+        }
+    }
+}
+
+/// A loaded dataset: the design matrix, optional per-row labels, and
+/// whether the matrix is backed by memory-mapped (out-of-core) storage.
+#[derive(Debug)]
+pub struct LoadedDataset {
+    /// The design matrix `A` (always sparse CSC).
+    pub a: CscMatrix,
+    /// Per-row labels (`Some` for libsvm and labeled mmap stores).
+    pub labels: Option<Vec<f64>>,
+    /// Whether `a` is a view over mapped files rather than owned memory.
+    pub mapped: bool,
+}
+
+/// Load a dataset from `path` in the given `format`.
+pub fn load_dataset(path: &str, format: DataFormat) -> IoResult<LoadedDataset> {
+    let p = Path::new(path);
+    match format {
+        DataFormat::Libsvm => {
+            let (a, labels) = libsvm::load_libsvm(p)?;
+            Ok(LoadedDataset { a, labels: Some(labels), mapped: false })
+        }
+        DataFormat::MatrixMarket => {
+            let a = matrix_market::load_matrix_market(p)?;
+            Ok(LoadedDataset { a, labels: None, mapped: false })
+        }
+        DataFormat::FlexaMmap => {
+            let s = store::MmapCscStore::open(p)?;
+            let mapped = s.matrix.is_mapped();
+            Ok(LoadedDataset { a: s.matrix, labels: s.labels, mapped })
+        }
+    }
+}

@@ -1,0 +1,343 @@
+//! The `flexa-mmap` binary column store, written by `flexa convert`.
+//!
+//! A store is a directory:
+//!
+//! ```text
+//! store/
+//!   header       text: magic + nrows/ncols/nnz/labels
+//!   colptr.bin   (ncols + 1) × u64, little-endian
+//!   rowind.bin   nnz × u64, little-endian
+//!   values.bin   nnz × f64, little-endian
+//!   labels.bin   nrows × f64, little-endian (only if labels 1)
+//! ```
+//!
+//! On open, the three matrix arrays are memory-mapped and viewed in
+//! place (zero-copy) on little-endian 64-bit targets — the kernels then
+//! stream nonzeros straight off the page cache, and the sharded
+//! backend's `columns_range` shards are sub-views of the same mapping.
+//! Other targets decode to owned memory; both paths funnel through the
+//! checked `CscMatrix` constructors, so a corrupted store is rejected
+//! with a typed error rather than trusted. Labels are small (one `f64`
+//! per row) and always read into owned memory.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+
+use super::mmap::{MapSlice, MmapRegion};
+use super::{io_err, IoError, IoResult};
+use crate::linalg::CscMatrix;
+
+/// Name of the text header file inside a store directory.
+pub const HEADER_FILE: &str = "header";
+/// Magic first line of the header.
+const MAGIC: &str = "flexa-mmap-csc v1";
+
+/// Whether u64/f64 little-endian files can be viewed in place.
+fn zero_copy_target() -> bool {
+    cfg!(all(target_endian = "little", target_pointer_width = "64"))
+}
+
+fn format_err(path: &Path, msg: impl Into<String>) -> IoError {
+    IoError::Format { path: path.display().to_string(), msg: msg.into() }
+}
+
+/// An opened (or just-written) store: the matrix plus optional labels.
+#[derive(Debug)]
+pub struct MmapCscStore {
+    /// The design matrix; `is_mapped()` reports whether it is a view
+    /// over the store files or an owned decode.
+    pub matrix: CscMatrix,
+    /// Per-row labels, when the store carries them.
+    pub labels: Option<Vec<f64>>,
+}
+
+fn write_u64s<I: Iterator<Item = u64>>(path: &Path, it: I) -> IoResult<()> {
+    let file = std::fs::File::create(path).map_err(|e| io_err(path, e))?;
+    let mut w = std::io::BufWriter::new(file);
+    for v in it {
+        w.write_all(&v.to_le_bytes()).map_err(|e| io_err(path, e))?;
+    }
+    w.flush().map_err(|e| io_err(path, e))
+}
+
+fn read_header_fields(dir: &Path) -> IoResult<(usize, usize, usize, bool)> {
+    let path = dir.join(HEADER_FILE);
+    let text = std::fs::read_to_string(&path).map_err(|e| io_err(&path, e))?;
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(l) if l.trim() == MAGIC => {}
+        other => {
+            return Err(format_err(
+                &path,
+                format!("bad magic line {:?} (expected `{MAGIC}`)", other.unwrap_or("")),
+            ))
+        }
+    }
+    let (mut nrows, mut ncols, mut nnz, mut labels) = (None, None, None, None);
+    for l in lines {
+        let l = l.trim();
+        if l.is_empty() {
+            continue;
+        }
+        let (key, val) = l
+            .split_once(' ')
+            .ok_or_else(|| format_err(&path, format!("bad header line `{l}`")))?;
+        let val: usize = val
+            .trim()
+            .parse()
+            .map_err(|_| format_err(&path, format!("bad header value in `{l}`")))?;
+        match key {
+            "nrows" => nrows = Some(val),
+            "ncols" => ncols = Some(val),
+            "nnz" => nnz = Some(val),
+            "labels" => labels = Some(val != 0),
+            _ => return Err(format_err(&path, format!("unknown header key `{key}`"))),
+        }
+    }
+    match (nrows, ncols, nnz, labels) {
+        (Some(m), Some(n), Some(z), Some(l)) => Ok((m, n, z, l)),
+        _ => Err(format_err(&path, "header missing nrows/ncols/nnz/labels")),
+    }
+}
+
+/// Open a binary file and check its exact byte length.
+fn open_region(path: &Path, expect_bytes: usize) -> IoResult<Arc<MmapRegion>> {
+    let region = MmapRegion::open(path).map_err(|e| io_err(path, e))?;
+    if region.len() != expect_bytes {
+        return Err(format_err(
+            path,
+            format!("expected {expect_bytes} bytes, found {}", region.len()),
+        ));
+    }
+    Ok(Arc::new(region))
+}
+
+/// Decode little-endian u64 bytes into owned `usize`s (portable path).
+fn decode_usizes(path: &Path, bytes: &[u8]) -> IoResult<Vec<usize>> {
+    let mut out = Vec::with_capacity(bytes.len() / 8);
+    for chunk in bytes.chunks_exact(8) {
+        let v = u64::from_le_bytes(chunk.try_into().expect("chunks_exact(8)"));
+        let v = usize::try_from(v)
+            .map_err(|_| format_err(path, format!("index {v} overflows usize on this target")))?;
+        out.push(v);
+    }
+    Ok(out)
+}
+
+impl MmapCscStore {
+    /// Serialize `a` (and optional labels) into the store directory,
+    /// creating it if needed. Existing store files are overwritten.
+    pub fn write(dir: &Path, a: &CscMatrix, labels: Option<&[f64]>) -> IoResult<()> {
+        if let Some(l) = labels {
+            if l.len() != a.nrows() {
+                return Err(format_err(
+                    dir,
+                    format!("{} labels for {} rows", l.len(), a.nrows()),
+                ));
+            }
+        }
+        std::fs::create_dir_all(dir).map_err(|e| io_err(dir, e))?;
+
+        // colptr / rowind / values, reassembled through the public
+        // column API (works identically for owned and mapped sources).
+        let mut colptr: Vec<u64> = Vec::with_capacity(a.ncols() + 1);
+        colptr.push(0);
+        for j in 0..a.ncols() {
+            colptr.push(colptr[j] + a.col(j).0.len() as u64);
+        }
+        write_u64s(&dir.join("colptr.bin"), colptr.into_iter())?;
+        write_u64s(
+            &dir.join("rowind.bin"),
+            (0..a.ncols()).flat_map(|j| a.col(j).0.iter().map(|&r| r as u64).collect::<Vec<_>>()),
+        )?;
+        write_u64s(
+            &dir.join("values.bin"),
+            (0..a.ncols())
+                .flat_map(|j| a.col(j).1.iter().map(|v| v.to_bits()).collect::<Vec<_>>()),
+        )?;
+        if let Some(l) = labels {
+            write_u64s(&dir.join("labels.bin"), l.iter().map(|v| v.to_bits()))?;
+        }
+
+        let header = format!(
+            "{MAGIC}\nnrows {}\nncols {}\nnnz {}\nlabels {}\n",
+            a.nrows(),
+            a.ncols(),
+            a.nnz(),
+            u8::from(labels.is_some()),
+        );
+        let hpath = dir.join(HEADER_FILE);
+        std::fs::write(&hpath, header).map_err(|e| io_err(&hpath, e))?;
+        Ok(())
+    }
+
+    /// Open a store directory. The matrix arrays stay memory-mapped on
+    /// little-endian 64-bit targets; every invariant is re-validated,
+    /// so a corrupted store cannot reach the kernels.
+    pub fn open(dir: &Path) -> IoResult<MmapCscStore> {
+        let (nrows, ncols, nnz, has_labels) = read_header_fields(dir)?;
+        let colptr_path = dir.join("colptr.bin");
+        let rowind_path = dir.join("rowind.bin");
+        let values_path = dir.join("values.bin");
+
+        let matrix = if zero_copy_target() {
+            let colptr: MapSlice<usize> =
+                MapSlice::whole(open_region(&colptr_path, (ncols + 1) * 8)?)
+                    .map_err(|e| io_err(&colptr_path, e))?;
+            let rowind: MapSlice<usize> = MapSlice::whole(open_region(&rowind_path, nnz * 8)?)
+                .map_err(|e| io_err(&rowind_path, e))?;
+            let values: MapSlice<f64> = MapSlice::whole(open_region(&values_path, nnz * 8)?)
+                .map_err(|e| io_err(&values_path, e))?;
+            CscMatrix::try_from_mapped_parts(nrows, ncols, colptr, rowind, values)
+                .map_err(|err| IoError::Structure { path: dir.display().to_string(), err })?
+        } else {
+            // Big-endian / 32-bit: decode each array to owned memory.
+            let read = |path: &Path, expect: usize| -> IoResult<Vec<u8>> {
+                let bytes = std::fs::read(path).map_err(|e| io_err(path, e))?;
+                if bytes.len() != expect {
+                    return Err(format_err(
+                        path,
+                        format!("expected {expect} bytes, found {}", bytes.len()),
+                    ));
+                }
+                Ok(bytes)
+            };
+            let colptr = decode_usizes(&colptr_path, &read(&colptr_path, (ncols + 1) * 8)?)?;
+            let rowind = decode_usizes(&rowind_path, &read(&rowind_path, nnz * 8)?)?;
+            let values: Vec<f64> = read(&values_path, nnz * 8)?
+                .chunks_exact(8)
+                .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().expect("chunks_exact(8)"))))
+                .collect();
+            CscMatrix::try_from_parts(nrows, ncols, colptr, rowind, values)
+                .map_err(|err| IoError::Structure { path: dir.display().to_string(), err })?
+        };
+
+        let labels = if has_labels {
+            let lpath = dir.join("labels.bin");
+            let bytes = std::fs::read(&lpath).map_err(|e| io_err(&lpath, e))?;
+            if bytes.len() != nrows * 8 {
+                return Err(format_err(
+                    &lpath,
+                    format!("expected {} bytes, found {}", nrows * 8, bytes.len()),
+                ));
+            }
+            Some(
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| {
+                        f64::from_bits(u64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+
+        Ok(MmapCscStore { matrix, labels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("flexa_store_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample() -> CscMatrix {
+        CscMatrix::from_triplets(
+            4,
+            3,
+            &[(0, 0, 1.5), (3, 0, -2.0), (1, 1, 0.25), (0, 2, 1e-7), (2, 2, 9.0)],
+        )
+    }
+
+    fn assert_bitwise_eq(a: &CscMatrix, b: &CscMatrix) {
+        assert_eq!((a.nrows(), a.ncols(), a.nnz()), (b.nrows(), b.ncols(), b.nnz()));
+        for j in 0..a.ncols() {
+            let (ra, va) = a.col(j);
+            let (rb, vb) = b.col(j);
+            assert_eq!(ra, rb);
+            let va: Vec<u64> = va.iter().map(|v| v.to_bits()).collect();
+            let vb: Vec<u64> = vb.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(va, vb);
+        }
+    }
+
+    #[test]
+    fn write_open_round_trip_with_labels() {
+        let dir = tmp_store("roundtrip");
+        let a = sample();
+        let labels = vec![1.0, -1.0, 1.0, -1.0];
+        MmapCscStore::write(&dir, &a, Some(&labels)).unwrap();
+        let s = MmapCscStore::open(&dir).unwrap();
+        assert_bitwise_eq(&a, &s.matrix);
+        assert_eq!(s.labels.as_deref(), Some(&labels[..]));
+        if cfg!(all(target_endian = "little", target_pointer_width = "64")) {
+            assert!(s.matrix.is_mapped());
+            // Shard views of a mapped matrix stay mapped (zero-copy).
+            let shard = s.matrix.columns_range(1..3);
+            assert!(shard.is_mapped());
+            assert_bitwise_eq(&a.columns_range(1..3), &shard);
+        }
+    }
+
+    #[test]
+    fn open_without_labels() {
+        let dir = tmp_store("nolabels");
+        let a = sample();
+        MmapCscStore::write(&dir, &a, None).unwrap();
+        let s = MmapCscStore::open(&dir).unwrap();
+        assert!(s.labels.is_none());
+        assert_bitwise_eq(&a, &s.matrix);
+    }
+
+    #[test]
+    fn corrupted_rowind_is_rejected_with_typed_error() {
+        let dir = tmp_store("corrupt");
+        let a = sample();
+        MmapCscStore::write(&dir, &a, None).unwrap();
+        // Point one row index far out of bounds.
+        let path = dir.join("rowind.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = MmapCscStore::open(&dir).unwrap_err();
+        match err {
+            IoError::Structure { err, .. } => {
+                assert!(matches!(
+                    err,
+                    crate::linalg::CscError::RowOutOfBounds { .. }
+                        | crate::linalg::CscError::RowNotSorted { .. }
+                ));
+            }
+            // 32-bit targets reject usize overflow earlier — also typed.
+            IoError::Format { .. } => {}
+            other => panic!("expected Structure error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_values_file_is_rejected() {
+        let dir = tmp_store("truncated");
+        let a = sample();
+        MmapCscStore::write(&dir, &a, None).unwrap();
+        let path = dir.join("values.bin");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(matches!(MmapCscStore::open(&dir).unwrap_err(), IoError::Format { .. }));
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let dir = tmp_store("badmagic");
+        let a = sample();
+        MmapCscStore::write(&dir, &a, None).unwrap();
+        std::fs::write(dir.join(HEADER_FILE), "not-a-store v9\nnrows 4\n").unwrap();
+        assert!(matches!(MmapCscStore::open(&dir).unwrap_err(), IoError::Format { .. }));
+    }
+}

@@ -52,6 +52,7 @@ pub mod config;
 pub mod coordinator;
 pub mod datagen;
 pub mod engine;
+pub mod io;
 pub mod linalg;
 pub mod metrics;
 pub mod parallel;

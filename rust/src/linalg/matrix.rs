@@ -243,6 +243,29 @@ impl Matrix {
         matches!(self, Matrix::Sparse(_))
     }
 
+    /// Fraction of entries stored, in [0, 1] (dense: 1.0 unless a
+    /// dimension is 0). An empty (0×n or m×0) matrix is 0.0, not NaN.
+    pub fn density(&self) -> f64 {
+        match self {
+            Matrix::Dense(a) => {
+                if a.nrows() == 0 || a.ncols() == 0 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+            Matrix::Sparse(a) => a.density(),
+        }
+    }
+
+    /// Whether the backing storage is a memory-mapped (out-of-core) view.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            Matrix::Dense(_) => false,
+            Matrix::Sparse(a) => a.is_mapped(),
+        }
+    }
+
     /// Crude upper bound on `λ_max(2 AᵀA)` (the Lipschitz constant of
     /// `∇‖Ax−b‖²`) via a few power iterations; used by FISTA when
     /// backtracking is disabled, and in tests.

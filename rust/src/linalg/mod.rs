@@ -17,4 +17,4 @@ pub use dense::DenseMatrix;
 pub use kernels::NumericsTier;
 pub use matrix::Matrix;
 pub use partition::{BlockPartition, ProcessorAssignment};
-pub use sparse::CscMatrix;
+pub use sparse::{CscError, CscMatrix};

@@ -3,8 +3,157 @@
 //! CSC mirrors the dense column-major layout choice (see `dense.rs`): the
 //! FLEXA hot path is per-column dots and axpys, which want contiguous column
 //! access. The rcv1-like / real-sim-like logistic instances are sparse.
+//!
+//! Storage is either owned (`Vec`, the `datagen` path) or a read-only view
+//! into a shared memory-mapped region (`crate::io::mmap`), so a matrix
+//! loaded from a `flexa convert` store can exceed RAM. The two backings are
+//! indistinguishable through the public API: every kernel reads plain
+//! slices, and [`CscMatrix::columns_range`] on a mapped matrix yields
+//! zero-copy sub-range views — the sharded backend's owner-computes shards
+//! never materialize the nonzeros they own.
+
+use std::fmt;
 
 use super::kernels::{self, NumericsTier};
+use crate::io::mmap::MapSlice;
+
+/// Why a set of CSC arrays was rejected by [`CscMatrix::try_from_parts`].
+///
+/// Loaders hand these back instead of panicking, so a malformed file can
+/// never construct a matrix that would index out of bounds (or silently
+/// compute a wrong `matvec`) deep inside a solve.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CscError {
+    /// `colptr` must have exactly `ncols + 1` entries.
+    ColptrLen {
+        /// expected length (`ncols + 1`)
+        expected: usize,
+        /// actual length
+        got: usize,
+    },
+    /// `colptr[0]` must be 0.
+    ColptrStart {
+        /// actual first entry
+        got: usize,
+    },
+    /// `colptr` must be non-decreasing.
+    ColptrNotMonotone {
+        /// column whose pointer pair decreases
+        col: usize,
+        /// `colptr[col]`
+        lo: usize,
+        /// `colptr[col + 1]`
+        hi: usize,
+    },
+    /// `rowind` and `values` must have equal length, and `colptr[ncols]`
+    /// must equal that length.
+    NnzMismatch {
+        /// `colptr[ncols]`
+        colptr_last: usize,
+        /// `rowind.len()`
+        rowind: usize,
+        /// `values.len()`
+        values: usize,
+    },
+    /// A stored row index is `>= nrows`.
+    RowOutOfBounds {
+        /// column holding the bad entry
+        col: usize,
+        /// offending row index
+        row: usize,
+        /// row count of the matrix
+        nrows: usize,
+    },
+    /// Row indices within a column must be strictly increasing (sorted,
+    /// no duplicates).
+    RowNotSorted {
+        /// column holding the bad pair
+        col: usize,
+        /// previous row index in the column
+        prev: usize,
+        /// offending row index (≤ `prev`)
+        row: usize,
+    },
+}
+
+impl fmt::Display for CscError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CscError::ColptrLen { expected, got } => {
+                write!(f, "colptr must have ncols+1 = {expected} entries, got {got}")
+            }
+            CscError::ColptrStart { got } => write!(f, "colptr[0] must be 0, got {got}"),
+            CscError::ColptrNotMonotone { col, lo, hi } => write!(
+                f,
+                "colptr must be non-decreasing: colptr[{col}] = {lo} > colptr[{}] = {hi}",
+                col + 1
+            ),
+            CscError::NnzMismatch { colptr_last, rowind, values } => write!(
+                f,
+                "nnz mismatch: colptr ends at {colptr_last}, rowind has {rowind} entries, \
+                 values has {values}"
+            ),
+            CscError::RowOutOfBounds { col, row, nrows } => write!(
+                f,
+                "row index {row} in column {col} is out of bounds for {nrows} rows"
+            ),
+            CscError::RowNotSorted { col, prev, row } => write!(
+                f,
+                "row indices in column {col} must be strictly increasing: \
+                 {row} follows {prev}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CscError {}
+
+/// One CSC array: owned, or a read-only view into a shared mapped region.
+#[derive(Clone)]
+enum Arr<T: Copy + 'static> {
+    Owned(Vec<T>),
+    Mapped(MapSlice<T>),
+}
+
+impl<T: Copy> Arr<T> {
+    #[inline]
+    fn as_slice(&self) -> &[T] {
+        match self {
+            Arr::Owned(v) => v,
+            Arr::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Mutable access; copies mapped storage into an owned `Vec` first
+    /// (copy-on-write — the mapped file is never written through).
+    fn to_mut(&mut self) -> &mut Vec<T> {
+        if let Arr::Mapped(m) = self {
+            *self = Arr::Owned(m.as_slice().to_vec());
+        }
+        match self {
+            Arr::Owned(v) => v,
+            Arr::Mapped(_) => unreachable!("converted to owned above"),
+        }
+    }
+
+    /// Sub-range copy (owned) or zero-copy sub-view (mapped).
+    fn slice(&self, r: std::ops::Range<usize>) -> Arr<T> {
+        match self {
+            Arr::Owned(v) => Arr::Owned(v[r].to_vec()),
+            Arr::Mapped(m) => Arr::Mapped(m.slice(r)),
+        }
+    }
+
+    fn is_mapped(&self) -> bool {
+        matches!(self, Arr::Mapped(_))
+    }
+}
+
+impl<T: Copy + fmt::Debug> fmt::Debug for Arr<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
 
 /// Sparse matrix in CSC format.
 #[derive(Clone, Debug)]
@@ -12,9 +161,51 @@ pub struct CscMatrix {
     nrows: usize,
     ncols: usize,
     /// `colptr[j]..colptr[j+1]` indexes the entries of column `j`.
-    colptr: Vec<usize>,
-    rowind: Vec<usize>,
-    values: Vec<f64>,
+    colptr: Arr<usize>,
+    rowind: Arr<usize>,
+    values: Arr<f64>,
+}
+
+/// The full structural invariant, shared by every checked constructor.
+fn validate_parts(
+    nrows: usize,
+    ncols: usize,
+    colptr: &[usize],
+    rowind: &[usize],
+    values: &[f64],
+) -> Result<(), CscError> {
+    if colptr.len() != ncols + 1 {
+        return Err(CscError::ColptrLen { expected: ncols + 1, got: colptr.len() });
+    }
+    if colptr[0] != 0 {
+        return Err(CscError::ColptrStart { got: colptr[0] });
+    }
+    if rowind.len() != values.len() || colptr[ncols] != rowind.len() {
+        return Err(CscError::NnzMismatch {
+            colptr_last: colptr[ncols],
+            rowind: rowind.len(),
+            values: values.len(),
+        });
+    }
+    for j in 0..ncols {
+        let (lo, hi) = (colptr[j], colptr[j + 1]);
+        if lo > hi {
+            return Err(CscError::ColptrNotMonotone { col: j, lo, hi });
+        }
+        let mut prev: Option<usize> = None;
+        for &row in &rowind[lo..hi] {
+            if row >= nrows {
+                return Err(CscError::RowOutOfBounds { col: j, row, nrows });
+            }
+            if let Some(p) = prev {
+                if row <= p {
+                    return Err(CscError::RowNotSorted { col: j, prev: p, row });
+                }
+            }
+            prev = Some(row);
+        }
+    }
+    Ok(())
 }
 
 impl CscMatrix {
@@ -49,10 +240,31 @@ impl CscMatrix {
             }
             colptr.push(rowind.len());
         }
-        Self { nrows, ncols, colptr, rowind, values }
+        Self::from_parts_unchecked(nrows, ncols, colptr, rowind, values)
+    }
+
+    /// Checked build from raw CSC arrays: every structural invariant the
+    /// kernels rely on is verified — `colptr` length/monotonicity, row
+    /// indices in bounds and strictly increasing within each column —
+    /// and a violation comes back as a typed [`CscError`] instead of an
+    /// out-of-bounds panic (or a silently wrong `matvec`) later. This is
+    /// the only constructor file loaders are allowed to use.
+    pub fn try_from_parts(
+        nrows: usize,
+        ncols: usize,
+        colptr: Vec<usize>,
+        rowind: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Result<Self, CscError> {
+        validate_parts(nrows, ncols, &colptr, &rowind, &values)?;
+        Ok(Self::from_parts_unchecked(nrows, ncols, colptr, rowind, values))
     }
 
     /// Build directly from CSC arrays (must be sorted within columns).
+    ///
+    /// Panics on invalid arrays — an API backstop for programmatic
+    /// construction; anything reading external data goes through
+    /// [`CscMatrix::try_from_parts`] and reports the [`CscError`].
     pub fn from_parts(
         nrows: usize,
         ncols: usize,
@@ -60,10 +272,55 @@ impl CscMatrix {
         rowind: Vec<usize>,
         values: Vec<f64>,
     ) -> Self {
-        assert_eq!(colptr.len(), ncols + 1);
-        assert_eq!(rowind.len(), values.len());
-        assert_eq!(*colptr.last().unwrap(), rowind.len());
-        Self { nrows, ncols, colptr, rowind, values }
+        match Self::try_from_parts(nrows, ncols, colptr, rowind, values) {
+            Ok(m) => m,
+            Err(e) => panic!("CscMatrix::from_parts: {e}"),
+        }
+    }
+
+    /// Trusted-arrays constructor for paths that preserve the invariant
+    /// by construction (`from_triplets`, `columns_range`); full
+    /// validation only in debug builds so shard setup stays O(1) extra.
+    pub(crate) fn from_parts_unchecked(
+        nrows: usize,
+        ncols: usize,
+        colptr: Vec<usize>,
+        rowind: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        debug_assert!(validate_parts(nrows, ncols, &colptr, &rowind, &values).is_ok());
+        Self {
+            nrows,
+            ncols,
+            colptr: Arr::Owned(colptr),
+            rowind: Arr::Owned(rowind),
+            values: Arr::Owned(values),
+        }
+    }
+
+    /// Checked build over memory-mapped arrays (the `flexa-mmap` store's
+    /// open path, `crate::io::mmap`). Validation runs exactly once here,
+    /// so mapped data can never violate the kernel invariants either.
+    pub(crate) fn try_from_mapped_parts(
+        nrows: usize,
+        ncols: usize,
+        colptr: MapSlice<usize>,
+        rowind: MapSlice<usize>,
+        values: MapSlice<f64>,
+    ) -> Result<Self, CscError> {
+        validate_parts(nrows, ncols, colptr.as_slice(), rowind.as_slice(), values.as_slice())?;
+        Ok(Self {
+            nrows,
+            ncols,
+            colptr: Arr::Mapped(colptr),
+            rowind: Arr::Mapped(rowind),
+            values: Arr::Mapped(values),
+        })
+    }
+
+    #[inline]
+    fn cp(&self) -> &[usize] {
+        self.colptr.as_slice()
     }
 
     #[inline]
@@ -81,20 +338,29 @@ impl CscMatrix {
     /// Number of stored entries.
     #[inline]
     pub fn nnz(&self) -> usize {
-        self.values.len()
+        self.values.as_slice().len()
     }
 
-    /// Density in [0, 1].
+    /// Density in [0, 1]; an empty (0×n or m×0) matrix is 0.0, not NaN.
     pub fn density(&self) -> f64 {
+        if self.nrows == 0 || self.ncols == 0 {
+            return 0.0;
+        }
         self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// Whether any backing array is a memory-mapped view (out-of-core).
+    pub fn is_mapped(&self) -> bool {
+        self.colptr.is_mapped() || self.rowind.is_mapped() || self.values.is_mapped()
     }
 
     /// Column `j` as (row indices, values).
     #[inline]
     pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
-        let lo = self.colptr[j];
-        let hi = self.colptr[j + 1];
-        (&self.rowind[lo..hi], &self.values[lo..hi])
+        let cp = self.cp();
+        let lo = cp[j];
+        let hi = cp[j + 1];
+        (&self.rowind.as_slice()[lo..hi], &self.values.as_slice()[lo..hi])
     }
 
     /// `out = A x`.
@@ -107,7 +373,14 @@ impl CscMatrix {
     pub fn matvec_with(&self, tier: NumericsTier, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(out.len(), self.nrows);
-        kernels::csc_matvec(tier, &self.colptr, &self.rowind, &self.values, x, out);
+        kernels::csc_matvec(
+            tier,
+            self.cp(),
+            self.rowind.as_slice(),
+            self.values.as_slice(),
+            x,
+            out,
+        );
     }
 
     /// `out = Aᵀ y`.
@@ -211,36 +484,39 @@ impl CscMatrix {
     /// `trace(AᵀA)` — summed over the flat nonzero array (the canonical
     /// CSC order; deliberately distinct from the dense per-column sum).
     pub fn gram_trace(&self) -> f64 {
-        kernels::gram_trace_flat(&self.values)
+        kernels::gram_trace_flat(self.values.as_slice())
     }
 
-    /// Scale a column in place.
+    /// Scale a column in place. On a mapped matrix this copies the value
+    /// array to owned storage first (copy-on-write): the mapped file is
+    /// read-only and shared.
     pub fn scale_col(&mut self, j: usize, alpha: f64) {
-        let lo = self.colptr[j];
-        let hi = self.colptr[j + 1];
-        for v in &mut self.values[lo..hi] {
+        let lo = self.cp()[j];
+        let hi = self.cp()[j + 1];
+        for v in &mut self.values.to_mut()[lo..hi] {
             *v *= alpha;
         }
     }
 
-    /// Copy of the contiguous column block `cols` (the per-worker shard
-    /// of the column-distributed layout: same rows, `cols.len()`
-    /// columns). The CSC arrays are sliced and the column pointers
-    /// rebased; stored values are bit-exact copies, so per-column kernels
-    /// on the shard match the full matrix bitwise.
+    /// The contiguous column block `cols` (the per-worker shard of the
+    /// column-distributed layout: same rows, `cols.len()` columns). The
+    /// column pointers are rebased; on owned storage the index/value
+    /// arrays are bit-exact copies, on mapped storage they are zero-copy
+    /// sub-range views of the same mapped files — either way per-column
+    /// kernels on the shard match the full matrix bitwise.
     pub fn columns_range(&self, cols: std::ops::Range<usize>) -> CscMatrix {
         assert!(cols.end <= self.ncols, "column range out of bounds");
-        let lo = self.colptr[cols.start];
-        let hi = self.colptr[cols.end];
-        let colptr: Vec<usize> =
-            self.colptr[cols.start..=cols.end].iter().map(|&p| p - lo).collect();
-        CscMatrix::from_parts(
-            self.nrows,
-            cols.len(),
-            colptr,
-            self.rowind[lo..hi].to_vec(),
-            self.values[lo..hi].to_vec(),
-        )
+        let cp = self.cp();
+        let lo = cp[cols.start];
+        let hi = cp[cols.end];
+        let colptr: Vec<usize> = cp[cols.start..=cols.end].iter().map(|&p| p - lo).collect();
+        CscMatrix {
+            nrows: self.nrows,
+            ncols: cols.len(),
+            colptr: Arr::Owned(colptr),
+            rowind: self.rowind.slice(lo..hi),
+            values: self.values.slice(lo..hi),
+        }
     }
 
     /// Dense copy (tests / small problems only).
@@ -282,11 +558,106 @@ mod tests {
     }
 
     #[test]
+    fn density_of_empty_matrix_is_zero_not_nan() {
+        let a = CscMatrix::from_triplets(0, 4, &[]);
+        assert_eq!(a.density(), 0.0);
+        let b = CscMatrix::from_triplets(4, 0, &[]);
+        assert_eq!(b.density(), 0.0);
+        let c = CscMatrix::from_triplets(0, 0, &[]);
+        assert_eq!(c.density(), 0.0);
+    }
+
+    #[test]
     fn duplicates_are_summed() {
         let a = CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0)]);
         assert_eq!(a.nnz(), 1);
         let (_, vals) = a.col(0);
         assert_eq!(vals, &[3.0]);
+    }
+
+    #[test]
+    fn try_from_parts_accepts_valid_arrays() {
+        let a = CscMatrix::try_from_parts(
+            3,
+            3,
+            vec![0, 2, 3, 5],
+            vec![0, 2, 1, 0, 2],
+            vec![1.0, 4.0, 3.0, 2.0, 5.0],
+        )
+        .unwrap();
+        assert_eq!(a.to_dense().get(2, 2), 5.0);
+    }
+
+    #[test]
+    fn try_from_parts_rejects_bad_colptr_len() {
+        let err = CscMatrix::try_from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]).unwrap_err();
+        assert_eq!(err, CscError::ColptrLen { expected: 3, got: 2 });
+    }
+
+    #[test]
+    fn try_from_parts_rejects_bad_colptr_start() {
+        let err =
+            CscMatrix::try_from_parts(2, 2, vec![1, 1, 1], vec![], vec![]).unwrap_err();
+        assert_eq!(err, CscError::ColptrStart { got: 1 });
+    }
+
+    #[test]
+    fn try_from_parts_rejects_nonmonotone_colptr() {
+        let err = CscMatrix::try_from_parts(
+            2,
+            2,
+            vec![0, 2, 1],
+            vec![0, 1],
+            vec![1.0, 2.0],
+        )
+        .unwrap_err();
+        // colptr[2] = 1 != nnz(2) trips the nnz check first when the last
+        // entry shrinks; use a middle dip to hit the monotonicity check
+        assert!(matches!(
+            err,
+            CscError::NnzMismatch { .. } | CscError::ColptrNotMonotone { .. }
+        ));
+        let err = CscMatrix::try_from_parts(
+            3,
+            3,
+            vec![0, 2, 1, 2],
+            vec![0, 1],
+            vec![1.0, 2.0],
+        )
+        .unwrap_err();
+        assert_eq!(err, CscError::ColptrNotMonotone { col: 0, lo: 2, hi: 1 });
+    }
+
+    #[test]
+    fn try_from_parts_rejects_nnz_mismatch() {
+        let err = CscMatrix::try_from_parts(2, 1, vec![0, 2], vec![0], vec![1.0]).unwrap_err();
+        assert_eq!(err, CscError::NnzMismatch { colptr_last: 2, rowind: 1, values: 1 });
+        let err =
+            CscMatrix::try_from_parts(2, 1, vec![0, 1], vec![0], vec![1.0, 2.0]).unwrap_err();
+        assert_eq!(err, CscError::NnzMismatch { colptr_last: 1, rowind: 1, values: 2 });
+    }
+
+    #[test]
+    fn try_from_parts_rejects_row_out_of_bounds() {
+        let err =
+            CscMatrix::try_from_parts(2, 1, vec![0, 1], vec![2], vec![1.0]).unwrap_err();
+        assert_eq!(err, CscError::RowOutOfBounds { col: 0, row: 2, nrows: 2 });
+    }
+
+    #[test]
+    fn try_from_parts_rejects_unsorted_and_duplicate_rows() {
+        let err = CscMatrix::try_from_parts(3, 1, vec![0, 2], vec![2, 0], vec![1.0, 2.0])
+            .unwrap_err();
+        assert_eq!(err, CscError::RowNotSorted { col: 0, prev: 2, row: 0 });
+        let err = CscMatrix::try_from_parts(3, 1, vec![0, 2], vec![1, 1], vec![1.0, 2.0])
+            .unwrap_err();
+        assert_eq!(err, CscError::RowNotSorted { col: 0, prev: 1, row: 1 });
+    }
+
+    #[test]
+    #[should_panic(expected = "CscMatrix::from_parts")]
+    fn from_parts_panics_on_invalid_arrays() {
+        let _ = CscMatrix::from_parts(2, 1, vec![0, 1], vec![5], vec![1.0]);
     }
 
     #[test]

@@ -305,20 +305,22 @@ impl StateCache {
 
     /// The cached problem for this spec's fingerprint, building (and
     /// deriving block-`L_I` etc.) on first use. Returns `(problem,
-    /// hit)`. The build runs under the map lock on purpose: concurrent
-    /// first requests for the same instance wait and share one build
-    /// instead of racing duplicate ones.
-    pub fn problem(&self, spec: &SolveSpec) -> (Arc<CachedProblem>, bool) {
+    /// hit)`, or the build error (file-backed problems can fail to
+    /// load; failures are not cached, so a later request after the file
+    /// is fixed retries the build). The build runs under the map lock
+    /// on purpose: concurrent first requests for the same instance wait
+    /// and share one build instead of racing duplicate ones.
+    pub fn problem(&self, spec: &SolveSpec) -> Result<(Arc<CachedProblem>, bool), String> {
         let key = spec.fingerprint();
         let mut map = lock_unpoisoned(&self.problems);
         if let Some(p) = map.get(&key) {
             self.problem_hits.fetch_add(1, Ordering::Relaxed);
-            return (p.clone(), true);
+            return Ok((p.clone(), true));
         }
         self.problem_misses.fetch_add(1, Ordering::Relaxed);
-        let built = Arc::new(CachedProblem::new(build_problem(&spec.problem)));
+        let built = Arc::new(CachedProblem::new(build_problem(&spec.problem)?));
         map.insert(key, built.clone());
-        (built, false)
+        Ok((built, false))
     }
 
     /// The shared pool for a thread count, spawning workers on first
@@ -435,12 +437,12 @@ mod tests {
     #[test]
     fn problem_cache_hits_on_equal_fingerprint_only() {
         let cache = StateCache::new();
-        let (a, hit_a) = cache.problem(&lasso_spec(5));
+        let (a, hit_a) = cache.problem(&lasso_spec(5)).unwrap();
         assert!(!hit_a);
-        let (b, hit_b) = cache.problem(&lasso_spec(5));
+        let (b, hit_b) = cache.problem(&lasso_spec(5)).unwrap();
         assert!(hit_b);
         assert!(Arc::ptr_eq(&a, &b));
-        let (_, hit_c) = cache.problem(&lasso_spec(6));
+        let (_, hit_c) = cache.problem(&lasso_spec(6)).unwrap();
         assert!(!hit_c);
     }
 
@@ -494,17 +496,17 @@ mod tests {
             let mut spec = lasso_spec(9);
             spec.backend = backend;
             spec.cores = 2;
-            let fresh = build_problem(&spec.problem);
+            let fresh = build_problem(&spec.problem).unwrap();
             let direct =
                 execute_prepared(&spec, fresh.as_ref(), ExecOptions::default()).unwrap();
             let cache = StateCache::new();
             // solve twice through the cache: the second run exercises the
             // memoized shards and must still match the fresh build exactly
-            let (cached, _) = cache.problem(&spec);
+            let (cached, _) = cache.problem(&spec).unwrap();
             let first =
                 execute_prepared(&spec, cached.as_ref() as &dyn Problem, ExecOptions::default())
                     .unwrap();
-            let (cached2, hit) = cache.problem(&spec);
+            let (cached2, hit) = cache.problem(&spec).unwrap();
             assert!(hit);
             let second =
                 execute_prepared(&spec, cached2.as_ref() as &dyn Problem, ExecOptions::default())

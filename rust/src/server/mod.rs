@@ -216,7 +216,13 @@ fn solve_job(state: &ServerState, req: &Request) -> Json {
         None => return protocol::error_response(&req.id, "solve request needs a spec"),
     };
     let fingerprint = spec.fingerprint();
-    let (problem, problem_hit) = state.cache.problem(spec);
+    let (problem, problem_hit) = match state.cache.problem(spec) {
+        Ok(v) => v,
+        Err(e) => {
+            state.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            return protocol::error_response(&req.id, &e);
+        }
+    };
     let (pool, pool_hit) = state.cache.pool(spec.threads);
     let (warm, warm_label) = if req.warm_start {
         match req.tenant.as_deref().and_then(|t| state.cache.warm_get(t, &fingerprint)) {

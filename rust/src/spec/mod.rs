@@ -33,7 +33,7 @@
 //! assert_eq!(round_trip, spec);
 //! ```
 
-use crate::config::{ExperimentConfig, ProblemSpec};
+use crate::config::{ExperimentConfig, FileKind, ProblemSpec};
 use crate::coordinator::{
     Backend, CommonOptions, NumericsTier, Schedule, SelectionSpec, SolveReport, TermMetric,
 };
@@ -400,8 +400,11 @@ impl SolveSpec {
 }
 
 /// Instantiate a problem from its spec (every frontend's build path).
-pub fn build_problem(spec: &ProblemSpec) -> Box<dyn Problem> {
-    match spec {
+/// Synthetic families cannot fail; the file-backed family surfaces
+/// loader errors (missing file, malformed data, labels required) as the
+/// `Err` string every frontend already reports.
+pub fn build_problem(spec: &ProblemSpec) -> Result<Box<dyn Problem>, String> {
+    Ok(match spec {
         ProblemSpec::Lasso { m, n, sparsity, c, seed } => Box::new(LassoProblem::from_instance(
             nesterov_lasso(*m, *n, *sparsity, *c, *seed),
         )),
@@ -444,7 +447,87 @@ pub fn build_problem(spec: &ProblemSpec) -> Box<dyn Problem> {
             }
             Box::new(crate::problems::DictionaryCodesProblem::from_instance(&inst))
         }
+        ProblemSpec::FromFile { kind, path, format, c, seed } => {
+            let ds = crate::io::load_dataset(path, *format).map_err(|e| e.to_string())?;
+            build_file_problem(*kind, ds, *c, *seed, path)?
+        }
+    })
+}
+
+/// Lower a loaded dataset onto the requested loss family.
+fn build_file_problem(
+    kind: FileKind,
+    ds: crate::io::LoadedDataset,
+    c: Option<f64>,
+    seed: u64,
+    path: &str,
+) -> Result<Box<dyn Problem>, String> {
+    let m = ds.a.nrows();
+    let a: crate::linalg::Matrix = ds.a.into();
+    match kind {
+        FileKind::Lasso => {
+            // the label column is the right-hand side when present;
+            // matrix-only formats get a planted sparse x♮ from `seed`
+            let b = match ds.labels {
+                Some(b) => b,
+                None => synth_rhs(&a, seed),
+            };
+            let c = c.unwrap_or_else(|| default_lasso_c(&a, &b));
+            Ok(Box::new(LassoProblem::new(a, b, c, None)))
+        }
+        FileKind::Logistic | FileKind::Svm => {
+            let labels = ds.labels.ok_or_else(|| {
+                format!(
+                    "{path}: {} needs per-row labels; this format carries none \
+                     (use libsvm or a labelled flexa-mmap store)",
+                    kind.name()
+                )
+            })?;
+            // fold arbitrary label values onto the ±1 the losses expect
+            let labels: Vec<f64> =
+                labels.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+            let c = c.unwrap_or_else(|| 1.0 / m.max(1) as f64);
+            let name = std::path::Path::new(path)
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("dataset")
+                .to_string();
+            Ok(match kind {
+                FileKind::Logistic => Box::new(LogisticProblem::new(a, &labels, c, name)),
+                _ => Box::new(crate::problems::SvmProblem::new(a, &labels, c)),
+            })
+        }
     }
+}
+
+/// Deterministic planted right-hand side for a label-free lasso file:
+/// `b = A x♮` with `x♮` sparse ±1 (~10% support), seeded — so the same
+/// (file, seed) always yields the same instance on every surface.
+fn synth_rhs(a: &crate::linalg::Matrix, seed: u64) -> Vec<f64> {
+    let n = a.ncols();
+    let mut b = vec![0.0; a.nrows()];
+    if n == 0 {
+        return b;
+    }
+    let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed ^ 0x5EED_DA7A);
+    let mut x = vec![0.0; n];
+    let k = (n / 10).clamp(1, n);
+    for _ in 0..k {
+        let j = (rng.next_u64() % n as u64) as usize;
+        x[j] = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+    }
+    a.matvec(&x, &mut b);
+    b
+}
+
+/// Default lasso weight for file data: `max(0.1·‖Aᵀb‖∞, 1e-6)` — the
+/// standard fraction-of-critical-λ rule (at `‖Aᵀb‖∞` the zero vector is
+/// optimal), floored to stay positive on degenerate inputs.
+fn default_lasso_c(a: &crate::linalg::Matrix, b: &[f64]) -> f64 {
+    let mut atb = vec![0.0; a.ncols()];
+    a.matvec_t(b, &mut atb);
+    let inf = atb.iter().fold(0.0f64, |acc, v| acc.max(v.abs()));
+    (0.1 * inf).max(1e-6)
 }
 
 /// Execution knobs [`execute_prepared`] takes alongside the spec: an
@@ -517,7 +600,7 @@ pub fn execute_prepared(
 /// Build the problem and run the spec (one-shot convenience; the serve
 /// daemon uses [`execute_prepared`] against its cache instead).
 pub fn execute(spec: &SolveSpec) -> Result<SolveReport, String> {
-    let problem = build_problem(&spec.problem);
+    let problem = build_problem(&spec.problem)?;
     execute_prepared(spec, problem.as_ref(), ExecOptions::default())
 }
 
@@ -536,6 +619,11 @@ pub struct FrontendOverrides {
     pub schedule: Option<Schedule>,
     /// Override the block-selection strategy of every solver.
     pub selection: Option<SelectionSpec>,
+    /// Rebase the configured problem onto a dataset file (the `--data`
+    /// flag): applies [`ProblemSpec::with_data`] before lowering, so the
+    /// loss family/`c`/seed come from the config and the matrix comes
+    /// from the file.
+    pub data: Option<String>,
 }
 
 /// Lower an experiment config (one problem × many solvers) onto one
@@ -552,6 +640,10 @@ pub fn specs_from_experiment(
         ),
         None => None,
     };
+    let problem = match &ov.data {
+        Some(path) => cfg.problem.with_data(path)?,
+        None => cfg.problem.clone(),
+    };
     let mut specs = Vec::new();
     for settings in &cfg.solvers {
         let backend = match ov.backend {
@@ -567,7 +659,7 @@ pub fn specs_from_experiment(
             None => Schedule::parse(&settings.schedule)?,
         };
         let mut b = SolveSpec::builder()
-            .problem(cfg.problem.clone())
+            .problem(problem.clone())
             .solver(&settings.name)
             .sigma(settings.sigma)
             .cores(settings.cores)
@@ -735,7 +827,7 @@ mod tests {
             .build()
             .unwrap();
         let report = execute(&spec).unwrap();
-        let problem = build_problem(&spec.problem);
+        let problem = build_problem(&spec.problem).unwrap();
         let term =
             if problem.v_star().is_some() { TermMetric::RelErr } else { TermMetric::Merit };
         let sspec = spec.lower(term, CostModel::default()).unwrap();
@@ -761,6 +853,7 @@ mod tests {
             numerics: Some(NumericsTier::Fast),
             schedule: Some(Schedule::Dag { staleness: 1 }),
             selection: Some(SelectionSpec::hybrid(0.25)),
+            data: None,
         };
         // the dag override applies only where the family supports it —
         // restrict to flexa for the override pass

@@ -1,0 +1,148 @@
+//! End-to-end tests of the data-ingest path: committed fixtures →
+//! loaders → out-of-core flexa-mmap store → file-backed [`SolveSpec`]
+//! solves, pinned to the repo's bitwise backend-equivalence contract;
+//! plus the malformed-fixture corpus, which must come back as typed
+//! errors (never panics) that name the offending file and line.
+
+use flexa::config::{FileKind, ProblemSpec};
+use flexa::coordinator::Backend;
+use flexa::io::store::MmapCscStore;
+use flexa::io::{load_dataset, DataFormat};
+use flexa::spec::{self, SolveSpec};
+
+const FIXTURES: &str = "tests/fixtures/datasets";
+
+fn fixture(name: &str) -> String {
+    format!("{FIXTURES}/{name}")
+}
+
+/// Convert the committed libsvm fixture into a fresh mmap store under a
+/// temp dir and return the store path.
+fn convert_tiny_libsvm(tag: &str) -> String {
+    let ds = load_dataset(&fixture("tiny.libsvm"), DataFormat::Libsvm).expect("committed fixture");
+    let dir = std::env::temp_dir().join(format!("flexa_int_io_{tag}_{}.fxm", std::process::id()));
+    MmapCscStore::write(&dir, &ds.a, ds.labels.as_deref()).expect("write store");
+    dir.display().to_string()
+}
+
+fn file_spec(path: &str, threads: usize, backend: Backend) -> SolveSpec {
+    SolveSpec::builder()
+        .problem(ProblemSpec::FromFile {
+            kind: FileKind::Lasso,
+            path: path.to_string(),
+            format: DataFormat::FlexaMmap,
+            c: None,
+            seed: 7,
+        })
+        .solver("flexa")
+        .threads(threads)
+        .backend(backend)
+        .max_iters(500)
+        .tol(1e-6)
+        .build()
+        .expect("valid file-backed spec")
+}
+
+/// The acceptance gate of the ingest PR: a lasso solve on an mmap-backed
+/// matrix converted from the committed libsvm fixture is bitwise
+/// identical across worker-thread counts {1, 2, 4} and across the
+/// shared/sharded backends — out-of-core storage must not perturb a
+/// single bit of the iterate.
+#[test]
+fn mmap_backed_lasso_is_bitwise_identical_across_threads_and_backends() {
+    let store = convert_tiny_libsvm("bitwise");
+    let reference = spec::execute(&file_spec(&store, 1, Backend::Shared)).expect("reference run");
+    assert!(reference.iters > 0, "reference run did no work");
+    assert!(reference.final_merit.is_finite());
+    for backend in [Backend::Shared, Backend::Sharded] {
+        for threads in [1usize, 2, 4] {
+            let run = spec::execute(&file_spec(&store, threads, backend))
+                .unwrap_or_else(|e| panic!("{backend:?}/{threads}: {e}"));
+            assert_eq!(run.iters, reference.iters, "{backend:?}/{threads}: iteration count");
+            assert_eq!(run.x.len(), reference.x.len());
+            for (j, (a, b)) in run.x.iter().zip(&reference.x).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{backend:?}/{threads}: x[{j}] drifted ({a:e} vs {b:e})"
+                );
+            }
+        }
+    }
+}
+
+/// The same solve through the three on-disk representations (libsvm
+/// text, the converted store via the portable loader path, and the
+/// matrix through `load_dataset`) must agree on the matrix bit-for-bit.
+#[test]
+fn converted_store_matches_text_loader_bitwise() {
+    let text = load_dataset(&fixture("tiny.libsvm"), DataFormat::Libsvm).unwrap();
+    let store = convert_tiny_libsvm("roundtrip");
+    let mapped = load_dataset(&store, DataFormat::FlexaMmap).unwrap();
+    assert_eq!(
+        (text.a.nrows(), text.a.ncols(), text.a.nnz()),
+        (mapped.a.nrows(), mapped.a.ncols(), mapped.a.nnz())
+    );
+    for j in 0..text.a.ncols() {
+        let (ra, va) = text.a.col(j);
+        let (rb, vb) = mapped.a.col(j);
+        assert_eq!(ra, rb, "rowind of column {j}");
+        for (x, y) in va.iter().zip(vb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "value bits in column {j}");
+        }
+    }
+    let (la, lb) = (text.labels.unwrap(), mapped.labels.unwrap());
+    assert_eq!(la.len(), lb.len());
+    for (x, y) in la.iter().zip(&lb) {
+        assert_eq!(x.to_bits(), y.to_bits(), "label bits");
+    }
+}
+
+/// Every malformed fixture is rejected with a typed error whose message
+/// names the offending file — no panics, no silently-wrong matrices.
+#[test]
+fn malformed_fixtures_all_err_cleanly() {
+    let cases: &[(&str, DataFormat, &str)] = &[
+        ("bad_index.libsvm", DataFormat::Libsvm, "0-based feature index"),
+        ("unsorted.libsvm", DataFormat::Libsvm, "non-ascending feature indices"),
+        ("bad_value.libsvm", DataFormat::Libsvm, "non-numeric value"),
+        ("truncated.mtx", DataFormat::MatrixMarket, "fewer entries than declared"),
+        ("dup_entry.mtx", DataFormat::MatrixMarket, "duplicate coordinate"),
+        ("bad_header.mtx", DataFormat::MatrixMarket, "unsupported header"),
+        ("out_of_bounds.mtx", DataFormat::MatrixMarket, "row index out of bounds"),
+    ];
+    for (name, format, why) in cases {
+        let path = fixture(name);
+        let err = match load_dataset(&path, *format) {
+            Ok(_) => panic!("{name} ({why}) loaded without error"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains(name), "{name}: error {err:?} does not name the file");
+        assert!(!err.is_empty(), "{name}: empty error message");
+    }
+}
+
+/// Parse errors carry 1-based line numbers pointing at the bad token.
+#[test]
+fn parse_errors_carry_line_numbers() {
+    for (name, format, line) in [
+        ("bad_index.libsvm", DataFormat::Libsvm, ":1:"),
+        ("bad_value.libsvm", DataFormat::Libsvm, ":1:"),
+        ("out_of_bounds.mtx", DataFormat::MatrixMarket, ":3:"),
+    ] {
+        let err = load_dataset(&fixture(name), format).unwrap_err().to_string();
+        assert!(err.contains(line), "{name}: error {err:?} lacks line marker {line:?}");
+    }
+}
+
+/// Format auto-detection picks the right loader for both text formats
+/// and for a store directory.
+#[test]
+fn format_detection_covers_all_fixtures() {
+    assert_eq!(DataFormat::detect(&fixture("tiny.libsvm")), Some(DataFormat::Libsvm));
+    assert_eq!(DataFormat::detect(&fixture("tiny.mtx")), Some(DataFormat::MatrixMarket));
+    let store = convert_tiny_libsvm("detect");
+    assert_eq!(DataFormat::detect(&store), Some(DataFormat::FlexaMmap));
+    let ds = load_dataset(&store, DataFormat::FlexaMmap).unwrap();
+    assert!(ds.a.nnz() > 0);
+}

@@ -85,7 +85,7 @@ fn solve_request(s: &SolveSpec, id: usize) -> Json {
 /// What a direct in-process solve of the spec returns (the bitwise
 /// ground truth every served response must match).
 fn expected_report(s: &SolveSpec) -> Json {
-    let problem = spec::build_problem(&s.problem);
+    let problem = spec::build_problem(&s.problem).unwrap();
     let report = spec::execute_prepared(
         s,
         problem.as_ref(),

@@ -171,7 +171,7 @@ fn pool_entry_point_matches_spec_execution() {
         .tol(0.0)
         .build()
         .unwrap();
-    let problem = spec::build_problem(&spec.problem);
+    let problem = spec::build_problem(&spec.problem).unwrap();
     let model = flexa::simulator::CostModel::default();
     let via_spec = spec::execute_prepared(
         &spec,

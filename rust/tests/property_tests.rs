@@ -7,6 +7,9 @@ use flexa::datagen::{
     dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
 };
 use flexa::engine::DepGraph;
+use flexa::io::libsvm::{load_libsvm, write_libsvm};
+use flexa::io::matrix_market::{load_matrix_market, write_matrix_market};
+use flexa::io::store::MmapCscStore;
 use flexa::linalg::{vector, BlockPartition, CscMatrix, DenseMatrix, Matrix};
 use flexa::metrics::IterCost;
 use flexa::parallel::{allreduce_sum, row_chunks, ShardLayout, WorkerPool};
@@ -375,10 +378,88 @@ fn prop_shard_layout_partitions_blocks_and_columns_exactly_once() {
     });
 }
 
+/// Random sparse matrix (plus ±1 labels) with a guaranteed entry in the
+/// last column, so text formats that infer dims can reconstruct them.
+fn random_csc_with_labels(rng: &mut Xoshiro256pp) -> (CscMatrix, Vec<f64>) {
+    let m = 1 + rng.next_usize(16);
+    let n = 1 + rng.next_usize(16);
+    let mut triplets = vec![(rng.next_usize(m), n - 1, 1.0 + rng.next_f64())];
+    for _ in 0..rng.next_usize(3 * (m + n) + 1) {
+        triplets.push((rng.next_usize(m), rng.next_usize(n), rng.next_normal()));
+    }
+    let labels: Vec<f64> = (0..m).map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 }).collect();
+    (CscMatrix::from_triplets(m, n, &triplets), labels)
+}
+
+/// Structural + bitwise value equality between two CSC matrices.
+fn assert_csc_bitwise_eq(tag: &str, a: &CscMatrix, b: &CscMatrix) {
+    assert_eq!((a.nrows(), a.ncols(), a.nnz()), (b.nrows(), b.ncols(), b.nnz()), "{tag}: dims");
+    for j in 0..a.ncols() {
+        let (ra, va) = a.col(j);
+        let (rb, vb) = b.col(j);
+        assert_eq!(ra, rb, "{tag}: rowind of column {j}");
+        for (x, y) in va.iter().zip(vb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: value bits in column {j}");
+        }
+    }
+}
+
+#[test]
+fn prop_loader_round_trips_are_bitwise() {
+    // write → reload must be the identity, bit-for-bit, for every format:
+    // the writers use Rust's shortest round-trip f64 formatting (text) or
+    // raw little-endian bytes (store), so nothing may drift
+    let dir = std::env::temp_dir().join(format!("flexa_prop_io_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for_all(24, |rng| {
+        let (a, labels) = random_csc_with_labels(rng);
+        let tag = rng.next_u64();
+
+        let svm = dir.join(format!("rt_{tag:016x}.libsvm"));
+        write_libsvm(&svm, &a, &labels).unwrap();
+        let (back, lb) = load_libsvm(&svm).unwrap();
+        assert_csc_bitwise_eq("libsvm", &a, &back);
+        assert_eq!(labels.len(), lb.len(), "libsvm label count");
+        for (x, y) in labels.iter().zip(&lb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "libsvm label bits");
+        }
+
+        let mtx = dir.join(format!("rt_{tag:016x}.mtx"));
+        write_matrix_market(&mtx, &a).unwrap();
+        let back = load_matrix_market(&mtx).unwrap();
+        assert_csc_bitwise_eq("matrix-market", &a, &back);
+
+        let store = dir.join(format!("rt_{tag:016x}.fxm"));
+        MmapCscStore::write(&store, &a, Some(&labels)).unwrap();
+        let s = MmapCscStore::open(&store).unwrap();
+        assert_csc_bitwise_eq("flexa-mmap", &a, &s.matrix);
+        let lb = s.labels.expect("labels must round-trip through the store");
+        for (x, y) in labels.iter().zip(&lb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "store label bits");
+        }
+    });
+}
+
 /// One small instance of every `Problem` family, seeded.
 fn all_family_problems(seed: u64) -> Vec<(&'static str, Box<dyn Problem>)> {
     let log_inst = logistic_like(LogisticPreset::Gisette, 0.01, seed);
     let svm_inst = logistic_like(LogisticPreset::Gisette, 0.01, seed + 1);
+    // Seventh family: a lasso whose matrix round-trips through an
+    // on-disk flexa-mmap store, so the shard-view contract below runs
+    // against mapped (zero-copy) column storage too.
+    let mut mrng = Xoshiro256pp::seed_from_u64(seed ^ 0x10_CA11);
+    let (m, n) = (18, 26);
+    let mut triplets = vec![(m - 1, n - 1, mrng.next_normal())];
+    for _ in 0..3 * (m + n) {
+        triplets.push((mrng.next_usize(m), mrng.next_usize(n), mrng.next_normal()));
+    }
+    let a = CscMatrix::from_triplets(m, n, &triplets);
+    let b: Vec<f64> = (0..m).map(|_| mrng.next_normal()).collect();
+    let dir = std::env::temp_dir()
+        .join(format!("flexa_prop_family_{}_{seed:016x}.fxm", std::process::id()));
+    MmapCscStore::write(&dir, &a, Some(&b)).expect("write family mmap store");
+    let store = MmapCscStore::open(&dir).expect("open family mmap store");
+    let b = store.labels.clone().expect("family store labels");
     vec![
         (
             "lasso",
@@ -414,14 +495,15 @@ fn all_family_problems(seed: u64) -> Vec<(&'static str, Box<dyn Problem>)> {
                 seed,
             ))),
         ),
+        ("lasso-mmap", Box::new(LassoProblem::new(Matrix::Sparse(store.matrix), b, 0.3, None))),
     ]
 }
 
 #[test]
 fn prop_every_family_shards_and_shard_views_match_full_problem_bitwise() {
     // the generic owner-computes contract: for EVERY Problem impl that
-    // exposes column_shard (all six families — future families are picked
-    // up automatically through all_family_problems), a shard's
+    // exposes column_shard (all families incl. the mmap-backed lasso —
+    // future ones are picked up through all_family_problems), a shard's
     // best-response / scratch-assisted best-response / delta application
     // over a random block range must equal the full-matrix methods
     // bit-for-bit, which is the entire backend-equivalence argument
