@@ -18,6 +18,14 @@
 //!    snapshots around each solve (`SolveReport::sched.barrier_idle_s`)
 //!    and reports the aggregate idle reduction on multi-threaded runs.
 //!
+//! A third leg runs the **sharded dag-overlap path** at every thread
+//! count: the communication plane issues each color's aux wavefront
+//! eagerly as its writes retire, so the panel asserts those runs stay
+//! bitwise-equal to the shared dag, that every dag allreduce was eager
+//! (`CommStats::eager_rounds`), and lands the measured overlap win
+//! (`overlap_hidden_s`) plus the simulator's barrier-idle prediction as
+//! top-level axes.
+//!
 //! Results land in `results/BENCH_8.json` (the trajectory convention of
 //! `BENCH_5`..`BENCH_7`); `bench compare` gates the top-level numerics
 //! against the bands committed in `results/baseline.toml`.
@@ -77,6 +85,7 @@ pub fn schedule_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
     let mut table = TextTable::new(&[
         "workload",
         "schedule",
+        "backend",
         "threads",
         "epochs",
         "tasks",
@@ -87,6 +96,10 @@ pub fn schedule_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
     let mut rows = Vec::new();
     let (mut idle_barrier, mut idle_dag) = (0.0f64, 0.0f64);
     let (mut epochs_sum, mut epochs_n) = (0.0f64, 0usize);
+    // sharded dag-overlap leg aggregates
+    let (mut eager_rounds, mut overlap_hidden) = (0.0f64, 0.0f64);
+    // model-side barrier-idle prediction over the barrier threads>1 runs
+    let mut predicted_idle = 0.0f64;
 
     for (kind, problem) in &problems {
         let x0 = vec![0.0; problem.n()];
@@ -118,18 +131,10 @@ pub fn schedule_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
                     match &dag_base {
                         None => {
                             // first dag config: replay the identical spec
-                            // and cross-check the sharded backend
+                            // (the sharded cross-check is its own leg below)
                             let again = engine::solve(problem.as_ref(), &x0, &spec);
                             if again.x != r.x {
                                 bail!("dag replay diverged bitwise on {kind}");
-                            }
-                            let sharded = engine::solve(
-                                problem.as_ref(),
-                                &x0,
-                                &mk(schedule, threads, Backend::Sharded)?,
-                            );
-                            if sharded.x != r.x {
-                                bail!("sharded dag diverged from shared dag on {kind}");
                             }
                             dag_base = Some(r.x.clone());
                         }
@@ -150,10 +155,12 @@ pub fn schedule_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
                     }
                 } else if threads > 1 {
                     idle_barrier += r.sched.barrier_idle_s;
+                    predicted_idle += cfg.model.barrier_idle_s(r.predicted_rounds, threads);
                 }
                 table.row(vec![
                     (*kind).to_string(),
                     schedule.name(),
+                    "shared".to_string(),
                     threads.to_string(),
                     r.sched.epochs.to_string(),
                     r.sched.tasks.to_string(),
@@ -168,12 +175,62 @@ pub fn schedule_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
                         .to_json()
                         .with("workload", Json::str(*kind))
                         .with("schedule", Json::str(schedule.name()))
+                        .with("backend", Json::str("shared"))
                         .with("threads", Json::Num(threads as f64))
                         .with("iters", Json::Num(r.iters as f64))
                         .with("final_obj", Json::Num(r.final_obj))
                         .with("wall_s", Json::Num(r.wall_s)),
                 );
             }
+        }
+        // third leg: the sharded dag-overlap path. The communication plane
+        // fires each color's aux wavefront as its writes retire, so these
+        // runs must (a) stay bitwise-equal to the shared dag above and (b)
+        // report every dag allreduce as eagerly issued.
+        for &threads in &cfg.threads {
+            let schedule = Schedule::Dag { staleness: 1 };
+            let spec = mk(schedule, threads, Backend::Sharded)?;
+            let r = engine::solve(problem.as_ref(), &x0, &spec);
+            match &dag_base {
+                Some(base) if base == &r.x => {}
+                _ => bail!(
+                    "sharded dag diverged from shared dag on {kind} at threads={threads}"
+                ),
+            }
+            if r.comm.eager_rounds != r.comm.allreduce_rounds {
+                bail!(
+                    "sharded dag on {kind} issued {} of {} allreduces eagerly — the \
+                     overlap path must cover every dag round",
+                    r.comm.eager_rounds,
+                    r.comm.allreduce_rounds
+                );
+            }
+            eager_rounds += r.comm.eager_rounds as f64;
+            overlap_hidden += r.comm.overlap_hidden_s;
+            table.row(vec![
+                (*kind).to_string(),
+                schedule.name(),
+                "sharded".to_string(),
+                threads.to_string(),
+                r.sched.epochs.to_string(),
+                r.sched.tasks.to_string(),
+                format!("{:.4}", r.sched.barrier_idle_s),
+                format!("{:.4}", r.sched.queue_wait_s),
+                format!("{:.3}", r.wall_s),
+            ]);
+            rows.push(
+                r.sched
+                    .to_json()
+                    .with("workload", Json::str(*kind))
+                    .with("schedule", Json::str(schedule.name()))
+                    .with("backend", Json::str("sharded"))
+                    .with("threads", Json::Num(threads as f64))
+                    .with("iters", Json::Num(r.iters as f64))
+                    .with("final_obj", Json::Num(r.final_obj))
+                    .with("wall_s", Json::Num(r.wall_s))
+                    .with("eager_rounds", Json::Num(r.comm.eager_rounds as f64))
+                    .with("overlap_hidden_s", Json::Num(r.comm.overlap_hidden_s)),
+            );
         }
     }
 
@@ -193,6 +250,12 @@ pub fn schedule_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
         ("barrier_idle_s", Json::Num(idle_barrier)),
         ("dag_idle_s", Json::Num(idle_dag)),
         ("idle_reduction_frac", Json::Num(idle_reduction_frac)),
+        // sharded dag-overlap leg: every allreduce issued eagerly, and the
+        // modeled seconds the eager wavefronts hid behind compute
+        ("eager_rounds", Json::Num(eager_rounds)),
+        ("overlap_hidden_s", Json::Num(overlap_hidden)),
+        // ring-model prediction for the measured barrier_idle_s axis
+        ("predicted_barrier_idle_s", Json::Num(predicted_idle)),
         ("runs", Json::arr(rows)),
     ]);
     std::fs::create_dir_all(&cfg.out_dir)
@@ -205,7 +268,8 @@ pub fn schedule_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
         "scheduling panel ({ITERS} fixed iters, {} CSC workloads; every dag run \
          bitwise replay-deterministic across threads/backends; barrier idle \
          {idle_barrier:.4}s -> dag {idle_dag:.4}s on threads>1, reduction \
-         {:.0}%) -> {path}\n{}",
+         {:.0}%; sharded dag issued {eager_rounds:.0} eager wavefronts hiding \
+         {overlap_hidden:.4}s of modeled comm) -> {path}\n{}",
         problems.len(),
         idle_reduction_frac * 100.0,
         table.render()
@@ -238,9 +302,15 @@ mod tests {
         assert_eq!(json.get("dag_deterministic"), Some(&Json::Bool(true)));
         assert_eq!(json.get("workloads").and_then(Json::as_usize), Some(2));
         assert!(json.get("mean_epochs").and_then(Json::as_f64).unwrap() >= 1.0);
+        // sharded dag-overlap leg: rounds were issued eagerly and hid a
+        // nonzero modeled share of the wavefront cost
+        assert!(json.get("eager_rounds").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(json.get("overlap_hidden_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(json.get("predicted_barrier_idle_s").and_then(Json::as_f64).unwrap() >= 0.0);
         let runs = json.get("runs").and_then(Json::as_arr).expect("runs array");
-        // 2 workloads × 2 schedules × 2 thread counts
-        assert_eq!(runs.len(), 8);
+        // 2 workloads × (2 schedules × 2 thread counts shared
+        //               + 2 thread counts sharded dag)
+        assert_eq!(runs.len(), 12);
         for r in runs {
             let sched = r.get("schedule").and_then(Json::as_str).unwrap();
             let epochs = r.get("epochs").and_then(Json::as_usize).unwrap();

@@ -426,11 +426,16 @@ pub fn serve_panel_with(
     ]);
     let mut round_rows = Vec::new();
     let mut total_requests = 0usize;
+    // worst tail latency over the whole ramp — the baseline gate bands it
+    let mut max_p99_ms = f64::NAN;
     let mut saturation_rps = f64::NAN;
     let mut offered = ramp.initial_rps.max(0.1);
     while offered <= ramp.max_rps + 1e-9 {
         let r = run_round(addr, entries, &expected, &mix, offered, ramp.round_s, ramp.clients)?;
         total_requests += r.completed;
+        // f64::max ignores NaN on either side: the NAN seed is replaced by
+        // the first measured round, and sample-less rounds change nothing
+        max_p99_ms = max_p99_ms.max(r.p99_ms);
         table.row(vec![
             format!("{:.1}", r.offered_rps),
             format!("{:.1}", r.achieved_rps),
@@ -484,6 +489,7 @@ pub fn serve_panel_with(
         ("workload", workload_json),
         ("rounds", Json::arr(round_rows)),
         ("saturation_rps", Json::num_or_null(saturation_rps)),
+        ("max_p99_ms", Json::num_or_null(max_p99_ms)),
         ("total_requests", Json::Num(total_requests as f64)),
         ("corrupted", Json::Num(0.0)),
         ("server", stats.get("cache").cloned().unwrap_or(Json::Null)),
@@ -556,6 +562,8 @@ mod tests {
         let total = json.get("total_requests").and_then(Json::as_usize).unwrap();
         assert!(total > 0, "no requests completed");
         assert_eq!(json.get("corrupted").and_then(Json::as_f64), Some(0.0));
+        let max_p99 = json.get("max_p99_ms").and_then(Json::as_f64).unwrap();
+        assert!(max_p99 > 0.0, "worst tail latency must be measured and positive");
     }
 
     #[test]

@@ -136,6 +136,8 @@ pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
         "meas/pred",
     ]);
     let mut rows = Vec::new();
+    // panel-wide totals: the baseline gate bands these top-level axes
+    let (mut total_allreduce, mut total_broadcast) = (0usize, 0usize);
 
     for (kind, problem) in &problems {
         let x0 = vec![0.0; problem.n()];
@@ -170,6 +172,8 @@ pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
                     );
                 }
                 let comm = sharded.comm;
+                total_allreduce += comm.allreduce_rounds;
+                total_broadcast += comm.broadcast_rounds;
                 let measured = comm.data_rounds() as f64;
                 let predicted = sharded.predicted_rounds;
                 let ratio = if predicted > 0.0 { measured / predicted } else { f64::NAN };
@@ -207,6 +211,10 @@ pub fn shard_panel(cfg: &BenchConfig) -> Result<FigureOutput> {
         ("cores", Json::Num(CORES as f64)),
         ("iters", Json::Num(ITERS as f64)),
         ("families", Json::Num(problems.len() as f64)),
+        // every run above survived the bitwise shared-vs-sharded assertion
+        ("bitwise_backends", Json::Bool(true)),
+        ("allreduce_rounds", Json::Num(total_allreduce as f64)),
+        ("broadcast_rounds", Json::Num(total_broadcast as f64)),
         ("runs", Json::arr(rows)),
     ]);
     std::fs::create_dir_all(&cfg.out_dir)
@@ -248,6 +256,10 @@ mod tests {
         let text = std::fs::read_to_string(format!("{}/BENCH_5.json", cfg.out_dir))
             .expect("BENCH_5.json written");
         let json = Json::parse(&text).expect("valid json");
+        // top-level axes banded by `bench compare` against baseline.toml
+        assert_eq!(json.get("bitwise_backends"), Some(&Json::Bool(true)));
+        assert!(json.get("allreduce_rounds").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        assert!(json.get("broadcast_rounds").and_then(|v| v.as_f64()).unwrap() >= 1.0);
         let runs = json.get("runs").and_then(|r| r.as_arr()).expect("runs array");
         // 4 four-solver families + 2 three-solver families, × 2 thread counts
         assert_eq!(runs.len(), (4 * 4 + 2 * 3) * 2);

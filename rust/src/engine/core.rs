@@ -304,15 +304,14 @@ fn run(
         e_chunks,
         n_chunks,
         total_br_flops,
-        shard_layout,
-        mut partials,
+        mut plane,
         mut upd,
-        mut active_shards,
     } = Workspace::new(problem, spec);
 
-    // the distributed-memory data plane: owner-computes column shards +
-    // measured communication (None on the shared backend)
-    let mut shardws: Option<ShardedWorkspace> = match common.backend {
+    // the distributed-memory data plane: owner-computes column shards
+    // (None on the shared backend); all exchange and comm metering flows
+    // through the workspace's `plane`
+    let shardws: Option<ShardedWorkspace> = match common.backend {
         Backend::Shared => None,
         Backend::Sharded => {
             assert!(
@@ -357,6 +356,11 @@ fn run(
     let mut moved = vec![false; if dag.is_some() { nb } else { 0 }];
     let mut color_stamp =
         vec![usize::MAX; dag.as_ref().map_or(0, |(d, _)| d.n_colors.max(1))];
+    // per-color wavefront tails from the traced executor runs (sharded
+    // dag only): seconds between a color's last write retiring and the
+    // drain finishing — the compute window its eager aux wavefront hides
+    // behind
+    let mut wave_tail: Vec<f64> = Vec::new();
     // barrier-idle baseline: the scheduler report diffs pool snapshots
     // around the solve (both schedules measure it)
     let pool_stats0 = pool.stats();
@@ -631,7 +635,12 @@ fn run(
                                     }
                                 }
                             };
-                            exec.run(pool, &sel, &body);
+                            // traced drain: record each color's write
+                            // retirement so the eager per-color wavefront
+                            // issued at that point can be priced against
+                            // the remaining compute (observation only —
+                            // events and ordering are unchanged)
+                            exec.run_traced(pool, &sel, &body, Some(&mut wave_tail));
                         }
                     }
                 }
@@ -647,6 +656,12 @@ fn run(
                 let mut br_flops = 0.0;
                 let mut update_flops = 0.0;
                 let mut active_epochs = 0usize;
+                // ring-model price of one per-color aux wavefront; the
+                // hidden share of an eager wavefront is what its tail
+                // (remaining colors' compute) absorbs
+                let aux_words = problem.aux_len() as f64;
+                let wave_s = common.cost_model.allreduce_s(aux_words, p_cores);
+                let mut hidden_s = 0.0f64;
                 for &i in &sel {
                     br_flops += problem.flops_best_response_fresh(i);
                     if moved[i] {
@@ -656,16 +671,20 @@ fn run(
                         if color_stamp[c] != k + 1 {
                             color_stamp[c] = k + 1;
                             active_epochs += 1;
+                            if let Some(&tail) = wave_tail.get(c) {
+                                hidden_s += wave_s
+                                    - common
+                                        .cost_model
+                                        .wavefront_exposed_s(aux_words, p_cores, tail);
+                            }
                         }
                     }
                 }
-                if let Some(sw) = shardws.as_mut() {
-                    // per-epoch aux agreement + the M^k/S^k scalar sync
-                    sw.comm.allreduce_rounds += active_epochs;
-                    sw.comm.allreduce_words +=
-                        active_epochs as f64 * problem.aux_len() as f64;
-                    sw.comm.sync_rounds += 1;
-                }
+                // per-epoch eager aux wavefronts + the M^k/S^k scalar
+                // sync — metered by the sharded plane, no-ops on the
+                // shared one
+                plane.record_wavefronts(active_epochs, aux_words, hidden_s);
+                plane.record_sync();
 
                 let v_new = problem.v_val(&x, &aux);
 
@@ -817,29 +836,30 @@ fn run(
                                 dir_sq += dx[j] * dx[j];
                             }
                         }
-                        // canonical direction image: per-shard partials
-                        // in block order, reduced in shard order — the
-                        // same fixed-order allreduce as the merge, so
-                        // both backends produce one bit pattern
-                        match shardws.as_mut() {
-                            None => parallel::accumulate_partials(
+                        // canonical direction image through the plane:
+                        // per-shard partials in block order, reduced in
+                        // shard order — the same fixed-order allreduce
+                        // as the merge, so both backends produce one bit
+                        // pattern (the sharded plane bills the round)
+                        match shardws.as_ref() {
+                            None => plane.allreduce_into(
                                 pool,
-                                &shard_layout,
                                 &sel,
-                                &mut partials,
-                                &mut active_shards,
+                                &mut dir_aux,
+                                &aux_chunks,
+                                problem.aux_len() as f64,
                                 &|_s, i, partial| {
                                     problem.apply_block_delta(i, &dx[blocks.range(i)], partial)
                                 },
                             ),
                             Some(sw) => {
                                 let shards = &sw.shards;
-                                parallel::accumulate_partials(
+                                plane.allreduce_into(
                                     pool,
-                                    &sw.layout,
                                     &sel,
-                                    &mut partials,
-                                    &mut active_shards,
+                                    &mut dir_aux,
+                                    &aux_chunks,
+                                    problem.aux_len() as f64,
                                     &|s, i, partial| {
                                         shards[s].apply_block_delta(
                                             i,
@@ -848,19 +868,8 @@ fn run(
                                         )
                                     },
                                 );
-                                if !active_shards.is_empty() {
-                                    sw.comm.allreduce_rounds += 1;
-                                    sw.comm.allreduce_words += problem.aux_len() as f64;
-                                }
                             }
                         }
-                        parallel::reduce_partials_into(
-                            pool,
-                            &partials,
-                            &active_shards,
-                            &mut dir_aux,
-                            &aux_chunks,
-                        );
                         let mut g_try = 1.0;
                         gamma = g_try;
                         for _ in 0..=max_backtracks {
@@ -916,33 +925,34 @@ fn run(
                                 upd.push(i);
                             }
                         }
-                        // canonical owner-computes update: each shard
-                        // accumulates its moved blocks' delta columns into
-                        // a partial residual buffer (from its own columns
-                        // on the sharded backend, from the full matrix on
-                        // the shared one), then the deterministic
-                        // fixed-order allreduce folds the partials into
-                        // aux in shard order — one summation order for
-                        // both backends, so iterates are bitwise-identical
-                        match shardws.as_mut() {
-                            None => parallel::accumulate_partials(
+                        // canonical owner-computes update through the
+                        // plane: each shard accumulates its moved blocks'
+                        // delta columns into a partial residual buffer
+                        // (from its own columns on the sharded backend,
+                        // from the full matrix on the shared one), then
+                        // the deterministic fixed-order allreduce folds
+                        // the partials into aux in shard order — one
+                        // summation order for both backends, so iterates
+                        // are bitwise-identical
+                        match shardws.as_ref() {
+                            None => plane.allreduce_into(
                                 pool,
-                                &shard_layout,
                                 &upd,
-                                &mut partials,
-                                &mut active_shards,
+                                &mut aux,
+                                &aux_chunks,
+                                problem.aux_len() as f64,
                                 &|_s, i, partial| {
                                     problem.apply_block_delta(i, &dx[blocks.range(i)], partial)
                                 },
                             ),
                             Some(sw) => {
                                 let shards = &sw.shards;
-                                parallel::accumulate_partials(
+                                plane.allreduce_into(
                                     pool,
-                                    &sw.layout,
                                     &upd,
-                                    &mut partials,
-                                    &mut active_shards,
+                                    &mut aux,
+                                    &aux_chunks,
+                                    problem.aux_len() as f64,
                                     &|s, i, partial| {
                                         shards[s].apply_block_delta(
                                             i,
@@ -951,21 +961,10 @@ fn run(
                                         )
                                     },
                                 );
-                                if !active_shards.is_empty() {
-                                    sw.comm.allreduce_rounds += 1;
-                                    sw.comm.allreduce_words += problem.aux_len() as f64;
-                                }
-                                // selection agreement on M^k / S^k
-                                sw.comm.sync_rounds += 1;
                             }
                         }
-                        parallel::reduce_partials_into(
-                            pool,
-                            &partials,
-                            &active_shards,
-                            &mut aux,
-                            &aux_chunks,
-                        );
+                        // selection agreement on M^k / S^k (sharded only)
+                        plane.record_sync();
                     }
                     ScanBackend::Engine(_) => {
                         for &i in &sel {
@@ -1178,15 +1177,13 @@ fn run(
                     }
                 });
                 total_flops += (2 * p_procs * aux.len()) as f64;
-                if let Some(sw) = shardws.as_mut() {
-                    // the processor-delta merge is the per-iteration
-                    // m-word allreduce of the distributed GJ run
-                    sw.comm.allreduce_rounds += 1;
-                    sw.comm.allreduce_words += problem.aux_len() as f64;
-                    if selective {
-                        // Algorithm-3 prepass: M^k / S^k agreement
-                        sw.comm.sync_rounds += 1;
-                    }
+                // the processor-delta merge is the per-iteration m-word
+                // allreduce of the distributed GJ run (metered on the
+                // sharded plane only)
+                plane.record_allreduce(problem.aux_len() as f64);
+                if selective {
+                    // Algorithm-3 prepass: M^k / S^k agreement
+                    plane.record_sync();
                 }
 
                 let v_new = problem.v_val(&x, &aux);
@@ -1273,7 +1270,7 @@ fn run(
                         for (t, j) in r.clone().enumerate() {
                             x[j] += delta[t];
                         }
-                        match shardws.as_mut() {
+                        match shardws.as_ref() {
                             None => problem.apply_block_delta(i, &delta[..r.len()], &mut aux),
                             Some(sw) => {
                                 let s = sw.layout.owner(i);
@@ -1282,8 +1279,7 @@ fn run(
                                 // its residual effect to all other ranks —
                                 // the comm bill the Gauss-Seidel methods
                                 // pay in a distributed run
-                                sw.comm.broadcast_rounds += 1;
-                                sw.comm.broadcast_words += problem.aux_len() as f64;
+                                plane.record_broadcast(problem.aux_len() as f64);
                             }
                         }
                         sweep_flops += problem.flops_aux_update(i);
@@ -1601,9 +1597,8 @@ fn run(
         }
     }
 
-    if let Some(sw) = &shardws {
-        state.comm = sw.comm;
-    }
+    // everything the plane metered (empty on the shared backend)
+    state.comm = plane.stats();
     // scheduler report: executor counters on the dag path, measured
     // pool-barrier idle on both paths (diffed around this solve so a
     // caller-shared pool attributes only this solve's idle time)
@@ -1694,6 +1689,8 @@ mod tests {
         assert!(a.comm.is_empty(), "shared backend exchanges nothing");
         assert!(b.comm.allreduce_rounds > 0, "sharded backend measured no allreduces");
         assert!(b.comm.allreduce_words > 0.0);
+        assert_eq!(b.comm.eager_rounds, 0, "barrier schedule issues nothing eagerly");
+        assert_eq!(b.comm.overlap_hidden_s, 0.0);
         assert!(b.predicted_rounds > 0.0);
     }
 
@@ -1737,6 +1734,14 @@ mod tests {
         let sharded = solve(&p, &x0, &mk(4, Backend::Sharded));
         assert_eq!(base.x, sharded.x, "sharded dag must match shared dag bitwise");
         assert!(sharded.comm.allreduce_rounds > 0, "dag comm model measured nothing");
+        assert_eq!(
+            sharded.comm.eager_rounds, sharded.comm.allreduce_rounds,
+            "every dag allreduce is issued eagerly per retiring color"
+        );
+        assert!(
+            sharded.comm.overlap_hidden_s > 0.0,
+            "eager wavefronts must hide a nonzero modeled comm share"
+        );
         // replay: same spec, same bits
         let again = solve(&p, &x0, &mk(4, Backend::Shared));
         assert_eq!(base.x, again.x);

@@ -1,6 +1,6 @@
 //! The engine's distributed-memory workspace: per-shard column copies of
-//! the data matrix plus the measured-communication counters behind
-//! `--backend sharded`.
+//! the data matrix behind `--backend sharded` (communication itself —
+//! exchange and metering — lives in [`crate::parallel::comm`]).
 //!
 //! [`ShardedWorkspace::new`] splits the problem into
 //! [`SolverSpec::shard_count`] contiguous column shards (the Gauss-Jacobi
@@ -14,19 +14,16 @@
 //! exactly the split of the paper's column-distributed implementation.
 
 use super::{MergeRule, SolverSpec};
-use crate::metrics::CommStats;
 use crate::parallel::ShardLayout;
 use crate::problems::{Problem, ProblemShard};
 
-/// Per-solve state of the sharded backend: the layout, the owner-computes
-/// shard views, and the measured communication counters.
+/// Per-solve state of the sharded backend: the layout and the
+/// owner-computes shard views.
 pub struct ShardedWorkspace {
     /// Contiguous block → shard ownership (thread-count independent).
     pub layout: ShardLayout,
     /// `shards[s]` owns copies of exactly the columns of shard `s`.
     pub shards: Vec<Box<dyn ProblemShard>>,
-    /// What the run actually exchanged (allreduces, broadcasts, syncs).
-    pub comm: CommStats,
 }
 
 impl ShardedWorkspace {
@@ -56,7 +53,7 @@ impl ShardedWorkspace {
                 })
             })
             .collect();
-        Self { layout, shards, comm: CommStats::default() }
+        Self { layout, shards }
     }
 }
 
@@ -82,7 +79,6 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&b| b));
-        assert!(sw.comm.is_empty());
     }
 
     #[test]

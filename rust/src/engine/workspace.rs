@@ -9,7 +9,8 @@
 //! bitwise-determinism contract.
 
 use super::{DirectionRule, MergeRule, SolverSpec};
-use crate::parallel::{self, ShardLayout};
+use crate::coordinator::Backend;
+use crate::parallel::{self, CommPlane, SharedPlane, ShardedPlane};
 use crate::problems::Problem;
 use std::ops::Range;
 
@@ -84,19 +85,15 @@ pub struct Workspace {
     /// Full-scan best-response flop total, reused every `Candidates::All`
     /// iteration.
     pub total_br_flops: f64,
-    /// Contiguous block → shard ownership: the partial geometry of the
-    /// canonical fixed-order reduction (both backends) and the
-    /// owner-computes layout of `--backend sharded`.
-    pub shard_layout: ShardLayout,
-    /// Per-shard partial residual buffers (S × m) for the Jacobi merge's
-    /// canonical update — the sharded backend's communication buffers,
-    /// which the shared backend reuses so both sum in one order.
-    pub partials: Vec<Vec<f64>>,
+    /// The communication plane: owns the shard layout, the per-shard
+    /// partial buffers, the fixed-order allreduce, and every `CommStats`
+    /// counter. [`crate::parallel::SharedPlane`] for `--backend shared`
+    /// (same fold, nothing metered), [`crate::parallel::ShardedPlane`]
+    /// for `--backend sharded`.
+    pub plane: Box<dyn CommPlane>,
     /// Moved subset of `S^k` (ascending) handed to the partial
     /// accumulation.
     pub upd: Vec<usize>,
-    /// Shards owning at least one updated block this iteration.
-    pub active_shards: Vec<usize>,
 }
 
 impl Workspace {
@@ -172,18 +169,16 @@ impl Workspace {
             } else {
                 0.0
             },
-            shard_layout: parallel::ShardLayout::contiguous(problem.blocks(), spec.shard_count()),
-            partials: if jacobi {
-                (0..spec.shard_count()).map(|_| vec![0.0; m]).collect()
-            } else {
-                Vec::new()
+            plane: {
+                let layout =
+                    parallel::ShardLayout::contiguous(problem.blocks(), spec.shard_count());
+                match spec.common.backend {
+                    Backend::Shared => Box::new(SharedPlane::new(layout, m, jacobi))
+                        as Box<dyn CommPlane>,
+                    Backend::Sharded => Box::new(ShardedPlane::new(layout, m, jacobi)),
+                }
             },
             upd: if jacobi { Vec::with_capacity(nb) } else { Vec::new() },
-            active_shards: if jacobi {
-                Vec::with_capacity(spec.shard_count())
-            } else {
-                Vec::new()
-            },
         }
     }
 }
@@ -205,6 +200,8 @@ mod tests {
         assert_eq!(ws.dx.len(), p.n());
         assert!(ws.grad.is_empty() && ws.y.is_empty() && ws.s.is_empty());
         assert!(!ws.br_chunks.is_empty());
+        // a fresh shared-backend plane has metered nothing
+        assert!(ws.plane.stats().is_empty());
     }
 
     #[test]

@@ -86,6 +86,15 @@ pub struct CommStats {
     /// Cheap scalar synchronizations (the `M^k` / `S^k` selection
     /// agreement) the cost model folds into its per-round latency.
     pub sync_rounds: usize,
+    /// Allreduce rounds that were issued *eagerly* — per-color aux
+    /// wavefronts fired as each dag color's writes retired, rather than
+    /// in one lump at iteration end. Always a subset of
+    /// `allreduce_rounds`; 0 on the barrier schedule.
+    pub eager_rounds: usize,
+    /// Modeled seconds of eager-wavefront communication hidden behind
+    /// the remaining colors' compute. Wall-clock-derived: meaningful as
+    /// an aggregate axis, **not** deterministic across runs or threads.
+    pub overlap_hidden_s: f64,
 }
 
 impl CommStats {
@@ -96,6 +105,34 @@ impl CommStats {
         self.broadcast_rounds += other.broadcast_rounds;
         self.broadcast_words += other.broadcast_words;
         self.sync_rounds += other.sync_rounds;
+        self.eager_rounds += other.eager_rounds;
+        self.overlap_hidden_s += other.overlap_hidden_s;
+    }
+
+    /// Count one fixed-order allreduce of `words` f64 words. Every
+    /// exchange site goes through this (or [`Self::record_wavefronts`])
+    /// so a new site cannot forget to bill itself.
+    pub fn record_allreduce(&mut self, words: f64) {
+        self.allreduce_rounds += 1;
+        self.allreduce_words += words;
+    }
+
+    /// Count one single-block residual broadcast of `words` f64 words.
+    pub fn record_broadcast(&mut self, words: f64) {
+        self.broadcast_rounds += 1;
+        self.broadcast_words += words;
+    }
+
+    /// Count one dag iteration's eager per-color wavefronts: `rounds`
+    /// allreduces of `words` words each, of which `hidden_s` modeled
+    /// seconds were overlapped behind compute. Eager rounds fold into
+    /// the legacy `allreduce_*` totals, so barrier-oracle comparisons
+    /// keep holding.
+    pub fn record_wavefronts(&mut self, rounds: usize, words: f64, hidden_s: f64) {
+        self.allreduce_rounds += rounds;
+        self.allreduce_words += rounds as f64 * words;
+        self.eager_rounds += rounds;
+        self.overlap_hidden_s += hidden_s;
     }
 
     /// All data rounds (allreduces + broadcasts) — the measured
@@ -119,6 +156,8 @@ impl CommStats {
             ("broadcast_rounds", Json::Num(self.broadcast_rounds as f64)),
             ("broadcast_words", Json::Num(self.broadcast_words)),
             ("sync_rounds", Json::Num(self.sync_rounds as f64)),
+            ("eager_rounds", Json::Num(self.eager_rounds as f64)),
+            ("overlap_hidden_s", Json::Num(self.overlap_hidden_s)),
         ])
     }
 }
@@ -464,6 +503,8 @@ mod tests {
             broadcast_rounds: 1,
             broadcast_words: 4.0,
             sync_rounds: 2,
+            eager_rounds: 2,
+            overlap_hidden_s: 1e-5,
         };
         let j = c.to_json();
         let keys = [
@@ -472,6 +513,8 @@ mod tests {
             "broadcast_rounds",
             "broadcast_words",
             "sync_rounds",
+            "eager_rounds",
+            "overlap_hidden_s",
         ];
         for key in keys {
             assert!(j.get(key).is_some(), "missing {key}");

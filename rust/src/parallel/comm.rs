@@ -1,0 +1,292 @@
+//! The first-class communication plane behind every engine solve: one
+//! object owns the partial-buffer lifecycle, the deterministic
+//! fixed-order allreduce, and **all**
+//! [`CommStats`](crate::metrics::CommStats) bookkeeping.
+//!
+//! Before this layer existed the exchange logic was smeared inline
+//! through `engine/core.rs` — six-plus duplicated
+//! `allreduce_rounds += 1; allreduce_words += …` sites next to the
+//! [`accumulate_partials`]/[`reduce_partials_into`] calls — which made
+//! any restructuring of *when* the sharded backend communicates (eager
+//! per-color wavefronts on the dag schedule, batching, compression)
+//! impossible without touching every solver family. Now the engine holds
+//! one `Box<dyn CommPlane>` and the backend choice is a constructor:
+//!
+//! * [`SharedPlane`] — the shared-memory data plane. It still runs the
+//!   canonical fixed-order fold (both backends sum per-shard partials in
+//!   ascending shard order — that is the whole backend-equivalence
+//!   argument), but it meters nothing: a shared run reports an empty
+//!   [`CommStats`](crate::metrics::CommStats).
+//! * [`ShardedPlane`] — the in-process distributed-memory plane. Same
+//!   arithmetic, but every exchange and synchronization is counted
+//!   through the [`CommStats`](crate::metrics::CommStats) recording
+//!   helpers, including the dag schedule's eager per-color wavefronts
+//!   ([`CommPlane::record_wavefronts`]) with their overlap-hidden time.
+//!
+//! **Determinism:** the plane only *routes* the existing
+//! [`super::shard`] primitives; the summation order (ascending block
+//! order into per-shard partials, ascending shard order per element into
+//! the output) is untouched, so iterates stay bitwise-identical across
+//! thread counts, backends, and replays. Counter recording is pure
+//! bookkeeping and never influences arithmetic.
+
+use super::pool::WorkerPool;
+use super::shard::{accumulate_partials, reduce_partials_into, ShardLayout};
+use crate::metrics::CommStats;
+use std::ops::Range;
+
+/// Per-shard partial application: `apply(shard, block, partial)`
+/// accumulates block `block`'s delta column into `partial` (the residual
+/// buffer of worker `shard`), reading only state that shard may touch.
+pub type ApplyFn<'a> = &'a (dyn Fn(usize, usize, &mut [f64]) + Sync);
+
+/// One data plane's view of the distributed exchange: the canonical
+/// fixed-order allreduce plus every communication counter. The engine
+/// core calls these methods at the exchange sites; whether anything is
+/// *metered* is the implementation's business ([`SharedPlane`] records
+/// nothing, [`ShardedPlane`] records everything).
+pub trait CommPlane {
+    /// Contiguous block → shard ownership behind the partial geometry
+    /// (thread-count independent; shared by both planes).
+    fn layout(&self) -> &ShardLayout;
+
+    /// The canonical selective update: accumulate the (ascending,
+    /// distinct) blocks of `upd` into per-shard partial buffers, then
+    /// fold the active partials into `out` **in ascending shard order
+    /// per element** — the deterministic fixed-order allreduce of
+    /// [`super::shard`]. `words` is the m-word bill of one such exchange;
+    /// a metering plane counts one allreduce round iff any shard was
+    /// active (idle rounds move no data and perturb no signed zeros).
+    fn allreduce_into(
+        &mut self,
+        pool: &WorkerPool,
+        upd: &[usize],
+        out: &mut [f64],
+        chunks: &[Range<usize>],
+        words: f64,
+        apply: ApplyFn<'_>,
+    );
+
+    /// Count one `words`-word allreduce performed outside the partial
+    /// machinery (the Gauss-Jacobi private-copy merge).
+    fn record_allreduce(&mut self, words: f64);
+
+    /// Count one single-block residual broadcast of `words` words (the
+    /// sequential CDM sweep's per-accepted-block bill).
+    fn record_broadcast(&mut self, words: f64);
+
+    /// Count one cheap scalar synchronization round (the `M^k`/`S^k`
+    /// selection agreement).
+    fn record_sync(&mut self);
+
+    /// Count one dag iteration's eager per-color aux wavefronts:
+    /// `rounds` allreduces of `words` words each — issued as each
+    /// color's writes retire, so they stay inside the legacy
+    /// `allreduce_*` totals — of which `hidden_s` modeled seconds were
+    /// overlapped behind the remaining colors' compute.
+    fn record_wavefronts(&mut self, rounds: usize, words: f64, hidden_s: f64);
+
+    /// Everything this plane measured so far (empty for [`SharedPlane`]).
+    fn stats(&self) -> CommStats;
+}
+
+/// The buffers both planes share: the shard layout, the per-shard
+/// partial residual buffers, and the reusable active-shard scratch.
+struct PlaneBuffers {
+    layout: ShardLayout,
+    partials: Vec<Vec<f64>>,
+    active: Vec<usize>,
+}
+
+impl PlaneBuffers {
+    fn new(layout: ShardLayout, aux_len: usize, with_partials: bool) -> Self {
+        let partials = if with_partials {
+            (0..layout.n_shards()).map(|_| vec![0.0; aux_len]).collect()
+        } else {
+            Vec::new()
+        };
+        Self { layout, partials, active: Vec::new() }
+    }
+
+    /// Accumulate + reduce (the two halves of the canonical update);
+    /// returns whether any shard was active.
+    fn exchange(
+        &mut self,
+        pool: &WorkerPool,
+        upd: &[usize],
+        out: &mut [f64],
+        chunks: &[Range<usize>],
+        apply: ApplyFn<'_>,
+    ) -> bool {
+        accumulate_partials(pool, &self.layout, upd, &mut self.partials, &mut self.active, apply);
+        reduce_partials_into(pool, &self.partials, &self.active, out, chunks);
+        !self.active.is_empty()
+    }
+}
+
+/// The shared-memory communication plane: runs the canonical fixed-order
+/// fold (so shared iterates match sharded ones bitwise) but meters
+/// nothing — a shared run performs no inter-rank communication.
+pub struct SharedPlane {
+    buf: PlaneBuffers,
+}
+
+impl SharedPlane {
+    /// Plane over `layout` with `aux_len`-word partial buffers
+    /// (`with_partials = false` skips the allocation for configurations
+    /// whose merge never exchanges partials).
+    pub fn new(layout: ShardLayout, aux_len: usize, with_partials: bool) -> Self {
+        Self { buf: PlaneBuffers::new(layout, aux_len, with_partials) }
+    }
+}
+
+impl CommPlane for SharedPlane {
+    fn layout(&self) -> &ShardLayout {
+        &self.buf.layout
+    }
+
+    fn allreduce_into(
+        &mut self,
+        pool: &WorkerPool,
+        upd: &[usize],
+        out: &mut [f64],
+        chunks: &[Range<usize>],
+        _words: f64,
+        apply: ApplyFn<'_>,
+    ) {
+        self.buf.exchange(pool, upd, out, chunks, apply);
+    }
+
+    fn record_allreduce(&mut self, _words: f64) {}
+
+    fn record_broadcast(&mut self, _words: f64) {}
+
+    fn record_sync(&mut self) {}
+
+    fn record_wavefronts(&mut self, _rounds: usize, _words: f64, _hidden_s: f64) {}
+
+    fn stats(&self) -> CommStats {
+        CommStats::default()
+    }
+}
+
+/// The in-process distributed-memory communication plane behind
+/// `--backend sharded`: identical arithmetic to [`SharedPlane`], with
+/// every exchange metered into [`CommStats`].
+pub struct ShardedPlane {
+    buf: PlaneBuffers,
+    stats: CommStats,
+}
+
+impl ShardedPlane {
+    /// Plane over `layout` with `aux_len`-word partial buffers; see
+    /// [`SharedPlane::new`] for `with_partials`.
+    pub fn new(layout: ShardLayout, aux_len: usize, with_partials: bool) -> Self {
+        Self { buf: PlaneBuffers::new(layout, aux_len, with_partials), stats: CommStats::default() }
+    }
+}
+
+impl CommPlane for ShardedPlane {
+    fn layout(&self) -> &ShardLayout {
+        &self.buf.layout
+    }
+
+    fn allreduce_into(
+        &mut self,
+        pool: &WorkerPool,
+        upd: &[usize],
+        out: &mut [f64],
+        chunks: &[Range<usize>],
+        words: f64,
+        apply: ApplyFn<'_>,
+    ) {
+        if self.buf.exchange(pool, upd, out, chunks, apply) {
+            self.stats.record_allreduce(words);
+        }
+    }
+
+    fn record_allreduce(&mut self, words: f64) {
+        self.stats.record_allreduce(words);
+    }
+
+    fn record_broadcast(&mut self, words: f64) {
+        self.stats.record_broadcast(words);
+    }
+
+    fn record_sync(&mut self) {
+        self.stats.sync_rounds += 1;
+    }
+
+    fn record_wavefronts(&mut self, rounds: usize, words: f64, hidden_s: f64) {
+        self.stats.record_wavefronts(rounds, words, hidden_s);
+    }
+
+    fn stats(&self) -> CommStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::BlockPartition;
+    use crate::parallel::row_chunks;
+
+    fn mk_planes(nb: usize, shards: usize, m: usize) -> (SharedPlane, ShardedPlane) {
+        let blocks = BlockPartition::scalar(nb);
+        let shared = SharedPlane::new(ShardLayout::contiguous(&blocks, shards), m, true);
+        let sharded = ShardedPlane::new(ShardLayout::contiguous(&blocks, shards), m, true);
+        (shared, sharded)
+    }
+
+    #[test]
+    fn planes_fold_identically_and_only_the_sharded_one_meters() {
+        let (mut a, mut b) = mk_planes(12, 4, 9);
+        let pool = WorkerPool::new(2);
+        let chunks = row_chunks(9);
+        let upd = vec![0usize, 3, 7, 11];
+        let apply = |_s: usize, i: usize, partial: &mut [f64]| {
+            for (j, p) in partial.iter_mut().enumerate() {
+                *p += (i + 1) as f64 * 0.5 + j as f64 * 1e-3;
+            }
+        };
+        let mut out_a = vec![1.0; 9];
+        let mut out_b = vec![1.0; 9];
+        a.allreduce_into(&pool, &upd, &mut out_a, &chunks, 9.0, &apply);
+        b.allreduce_into(&pool, &upd, &mut out_b, &chunks, 9.0, &apply);
+        assert_eq!(out_a, out_b, "both planes run the one canonical fold");
+        assert!(a.stats().is_empty(), "the shared plane meters nothing");
+        let s = b.stats();
+        assert_eq!(s.allreduce_rounds, 1);
+        assert_eq!(s.allreduce_words, 9.0);
+        assert_eq!(s.eager_rounds, 0, "barrier-style exchange is not eager");
+        assert_eq!(a.layout().n_shards(), b.layout().n_shards());
+    }
+
+    #[test]
+    fn empty_update_set_exchanges_and_meters_nothing() {
+        let (_, mut b) = mk_planes(6, 2, 4);
+        let pool = WorkerPool::new(1);
+        let mut out = vec![-0.0f64; 4];
+        b.allreduce_into(&pool, &[], &mut out, &row_chunks(4), 4.0, &|_, _, _| {
+            panic!("no update")
+        });
+        assert!(b.stats().is_empty(), "idle rounds must not be billed");
+        // idle rounds must not perturb signed zeros either
+        assert!(out.iter().all(|v| v.to_bits() == (-0.0f64).to_bits()));
+    }
+
+    #[test]
+    fn wavefront_recording_stays_inside_the_legacy_totals() {
+        let (_, mut b) = mk_planes(4, 2, 3);
+        b.record_wavefronts(3, 5.0, 1e-4);
+        b.record_wavefronts(0, 5.0, 0.0);
+        b.record_sync();
+        let s = b.stats();
+        assert_eq!(s.allreduce_rounds, 3, "eager rounds fold into the legacy total");
+        assert_eq!(s.allreduce_words, 15.0);
+        assert_eq!(s.eager_rounds, 3);
+        assert!((s.overlap_hidden_s - 1e-4).abs() < 1e-18);
+        assert_eq!(s.sync_rounds, 1);
+    }
+}

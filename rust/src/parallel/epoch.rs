@@ -74,6 +74,10 @@ pub struct EventGraph {
     /// Heap priority per event: `2·c` for reads, `2·(c + s_eff) + 1` for
     /// writes — the integer image of the acyclicity key.
     prio: Vec<u64>,
+    /// Color class per block (the wavefront a block's write retires in).
+    color: Vec<u32>,
+    /// Number of color classes (wavefronts) in the dependency graph.
+    n_colors: usize,
     n_blocks: usize,
     /// Effective staleness bound (`staleness.min(n_colors)`).
     pub s_eff: usize,
@@ -135,7 +139,20 @@ impl EventGraph {
             prio[r(i) as usize] = 2 * c;
             prio[w(i) as usize] = 2 * (c + s_eff as u64) + 1;
         }
-        Self { out, indeg, prio, n_blocks: nb, s_eff }
+        Self {
+            out,
+            indeg,
+            prio,
+            color: dep.color.iter().map(|&c| c as u32).collect(),
+            n_colors: dep.n_colors.max(1),
+            n_blocks: nb,
+            s_eff,
+        }
+    }
+
+    /// Number of color classes (per-iteration aux wavefronts).
+    pub fn n_colors(&self) -> usize {
+        self.n_colors
     }
 
     /// Number of blocks.
@@ -178,6 +195,15 @@ struct ExecState {
     depth_sum: u64,
     claims: u64,
     wait_ns: u64,
+    /// Whether this run records per-color write retirement (dag overlap).
+    traced: bool,
+    /// Selected writes still outstanding per color (traced runs only).
+    w_left: Vec<u32>,
+    /// Nanosecond timestamp (since `t0`) at which each color's last
+    /// selected write retired; `u64::MAX` = color had no selected block.
+    retire_ns: Vec<u64>,
+    /// Run start, the clock retirement timestamps are measured against.
+    t0: Instant,
 }
 
 /// Work-queue executor over an [`EventGraph`]: one `run` per engine
@@ -197,6 +223,7 @@ impl EpochExecutor {
     pub fn new(graph: EventGraph) -> Self {
         let ne = graph.n_events();
         let nb = graph.n_blocks();
+        let nc = graph.n_colors();
         Self {
             graph,
             shared: Mutex::new(ExecState {
@@ -208,6 +235,10 @@ impl EpochExecutor {
                 depth_sum: 0,
                 claims: 0,
                 wait_ns: 0,
+                traced: false,
+                w_left: vec![0; nc],
+                retire_ns: vec![u64::MAX; nc],
+                t0: Instant::now(),
             }),
             cv: Condvar::new(),
             stats: ExecutorStats::default(),
@@ -225,7 +256,30 @@ impl EpochExecutor {
     /// must be safe under the graph's disjointness guarantee (events not
     /// ordered by the graph touch disjoint state).
     pub fn run(&mut self, pool: &WorkerPool, sel: &[usize], exec: &(dyn Fn(u32) + Sync)) {
+        self.run_traced(pool, sel, exec, None);
+    }
+
+    /// [`Self::run`] plus per-color wavefront tracing: when `wave_tail`
+    /// is `Some`, it is resized to one entry per dependency-graph color
+    /// and filled with each color's *tail* — the seconds between that
+    /// color's last selected write retiring and the run finishing, i.e.
+    /// the compute window an eagerly-issued aux wavefront for that color
+    /// could hide behind. Colors with no selected block get 0.0. Tracing
+    /// is pure observation (timestamps on the drain path); the executed
+    /// events and their ordering are bitwise-identical to an untraced
+    /// run.
+    pub fn run_traced(
+        &mut self,
+        pool: &WorkerPool,
+        sel: &[usize],
+        exec: &(dyn Fn(u32) + Sync),
+        wave_tail: Option<&mut Vec<f64>>,
+    ) {
         if sel.is_empty() {
+            if let Some(tail) = wave_tail {
+                tail.clear();
+                tail.resize(self.graph.n_colors, 0.0);
+            }
             return;
         }
         {
@@ -241,6 +295,15 @@ impl EpochExecutor {
             st.depth_sum = 0;
             st.claims = 0;
             st.wait_ns = 0;
+            st.traced = wave_tail.is_some();
+            if st.traced {
+                st.w_left.fill(0);
+                for &i in sel {
+                    st.w_left[self.graph.color[i] as usize] += 1;
+                }
+                st.retire_ns.fill(u64::MAX);
+                st.t0 = Instant::now();
+            }
             // Unselected blocks perform no reads or writes this
             // iteration, so every ordering constraint through their
             // events is vacuous: complete them up front in one pass.
@@ -273,6 +336,17 @@ impl EpochExecutor {
         self.stats.claims += st.claims;
         self.stats.depth_sum += st.depth_sum;
         self.stats.wait_ns += st.wait_ns;
+        if let Some(tail) = wave_tail {
+            let total_ns = st.t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            tail.clear();
+            for &r in &st.retire_ns {
+                tail.push(if r == u64::MAX {
+                    0.0
+                } else {
+                    total_ns.saturating_sub(r) as f64 * 1e-9
+                });
+            }
+        }
     }
 
     /// Per-worker drain loop: claim the min-priority ready event, run it
@@ -308,6 +382,14 @@ impl EpochExecutor {
                 std::panic::resume_unwind(result.unwrap_err());
             }
             st.pending -= 1;
+            if st.traced && is_write(ev) {
+                let c = self.graph.color[event_block(ev)] as usize;
+                st.w_left[c] -= 1;
+                if st.w_left[c] == 0 {
+                    st.retire_ns[c] =
+                        st.t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                }
+            }
             for &tgt in &self.graph.out[ev as usize] {
                 st.remaining[tgt as usize] -= 1;
                 if st.remaining[tgt as usize] == 0 && st.selected[event_block(tgt)] {
@@ -443,6 +525,44 @@ mod tests {
             });
         }));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn traced_run_reports_one_tail_per_color() {
+        let mut ex = EpochExecutor::new(EventGraph::build(&path_graph(), 1));
+        let pool = WorkerPool::new(2);
+        let mut tail = Vec::new();
+        // select only block 1 (color 1): color 0 has no selected write
+        ex.run_traced(&pool, &[1], &|_ev| {}, Some(&mut tail));
+        assert_eq!(tail.len(), 2, "one tail per dependency-graph color");
+        assert_eq!(tail[0], 0.0, "unselected color retires nothing");
+        assert!(tail[1] >= 0.0 && tail[1].is_finite());
+        // full selection: every color has a finite non-negative tail
+        ex.run_traced(&pool, &[0, 1, 2], &|_ev| {}, Some(&mut tail));
+        assert_eq!(tail.len(), 2);
+        assert!(tail.iter().all(|t| *t >= 0.0 && t.is_finite()));
+        // empty selection still yields a zeroed per-color vector
+        ex.run_traced(&pool, &[], &|_ev| panic!("no events"), Some(&mut tail));
+        assert_eq!(tail, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn traced_and_untraced_runs_execute_the_same_events() {
+        for threads in [1, 4] {
+            let mut ex = EpochExecutor::new(EventGraph::build(&path_graph(), 0));
+            let pool = WorkerPool::new(threads);
+            let order = StdMutex::new(Vec::new());
+            let mut tail = Vec::new();
+            ex.run_traced(
+                &pool,
+                &[0, 1, 2],
+                &|ev| order.lock().unwrap().push(ev),
+                Some(&mut tail),
+            );
+            let mut got = order.into_inner().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1, 2, 3, 4, 5], "threads={threads}");
+        }
     }
 
     #[test]

@@ -22,7 +22,12 @@
 //!   `--schedule dag`: per-block read/write events ordered by a
 //!   dependency DAG (`crate::engine::depgraph`), claimed eagerly by
 //!   whichever worker is free, with determinism coming from the graph
-//!   (structural), not from the claim order (cosmetic).
+//!   (structural), not from the claim order (cosmetic);
+//! * [`comm`] — the first-class communication plane: one
+//!   [`comm::CommPlane`] object per solve owns the partial-buffer
+//!   lifecycle, routes the fixed-order allreduce, and meters every
+//!   `CommStats` counter (including the dag schedule's eager per-color
+//!   wavefronts) so the engine core carries no inline accounting.
 //!
 //! **Determinism contract:** every helper here produces bitwise-identical
 //! results for any `threads ≥ 1`, because (a) each output element is
@@ -31,12 +36,14 @@
 //! order on the calling thread. The coordinator's
 //! `threaded_matches_sequential` guarantee rests on this contract.
 
+pub mod comm;
 pub mod epoch;
 pub mod partition;
 pub mod pool;
 pub mod reduce;
 pub mod shard;
 
+pub use comm::{ApplyFn, CommPlane, SharedPlane, ShardedPlane};
 pub use epoch::{EpochExecutor, EventGraph, ExecutorStats};
 pub use partition::{block_chunks, chunks_of, row_chunks, MAX_CHUNKS};
 pub use pool::{PoolStats, WorkerPool};

@@ -92,6 +92,26 @@ impl CostModel {
         latency + volume
     }
 
+    /// Exposed (non-overlapped) time of one eagerly-issued per-color aux
+    /// wavefront: a `words`-word allreduce fired as a dag color's writes
+    /// retire overlaps with the remaining colors' compute (`tail_s`
+    /// seconds of it); only the part the tail cannot absorb is exposed.
+    /// Clamps at zero — a long tail hides the wavefront entirely.
+    pub fn wavefront_exposed_s(&self, words: f64, p: usize, tail_s: f64) -> f64 {
+        (self.allreduce_s(words, p) - tail_s.max(0.0)).max(0.0)
+    }
+
+    /// Predicted worker time lost to end-of-pass barriers over `rounds`
+    /// synchronization rounds on `p` ranks — the model-side counterpart
+    /// of the measured `SchedStats::barrier_idle_s` axis (`bench
+    /// schedule` checks the two agree within a documented band).
+    pub fn barrier_idle_s(&self, rounds: f64, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        rounds.max(0.0) * self.barrier_s
+    }
+
     /// Time of one iteration described by `cost` on `p` cores.
     pub fn iter_time_s(&self, cost: &IterCost, p: usize) -> f64 {
         let compute = cost.flops_max_worker / (self.core_gflops * 1e9);
@@ -181,6 +201,31 @@ mod tests {
         let m = CostModel::default();
         let tiny = IterCost { flops_total: 10.0, flops_max_worker: 10.0, reduce_words: 1e6, reduce_rounds: 1.0 };
         assert!(m.iter_time_s(&tiny, 40) > m.iter_time_s(&tiny, 2));
+    }
+
+    #[test]
+    fn wavefront_exposed_clamps_to_zero_when_hidden() {
+        let m = CostModel::default();
+        let full = m.allreduce_s(5000.0, 8);
+        assert!(full > 0.0);
+        // no tail: fully exposed
+        assert_eq!(m.wavefront_exposed_s(5000.0, 8, 0.0), full);
+        // short tail: partially hidden
+        let part = m.wavefront_exposed_s(5000.0, 8, full / 2.0);
+        assert!(part > 0.0 && part < full);
+        // long tail (or a bogus negative one): never negative
+        assert_eq!(m.wavefront_exposed_s(5000.0, 8, 10.0 * full), 0.0);
+        assert_eq!(m.wavefront_exposed_s(5000.0, 8, -1.0), full);
+    }
+
+    #[test]
+    fn barrier_idle_prediction_scales_with_rounds() {
+        let m = CostModel::default();
+        assert_eq!(m.barrier_idle_s(100.0, 1), 0.0, "one rank never waits");
+        assert_eq!(m.barrier_idle_s(-3.0, 8), 0.0);
+        let one = m.barrier_idle_s(1.0, 8);
+        assert!(one > 0.0);
+        assert!((m.barrier_idle_s(10.0, 8) - 10.0 * one).abs() < 1e-18);
     }
 
     #[test]

@@ -2,11 +2,13 @@
 //! the paper's structural invariants checked across hundreds of random
 //! instances rather than hand-picked examples.
 
-use flexa::coordinator::SelectionRule;
+use flexa::coordinator::{
+    Backend, CommonOptions, Schedule, SelectionRule, SelectionSpec, StepRule, TermMetric,
+};
 use flexa::datagen::{
     dictionary_instance, logistic_like, nesterov_lasso, nonconvex_qp, LogisticPreset,
 };
-use flexa::engine::DepGraph;
+use flexa::engine::{self, DepGraph, DirectionRule, MergeRule, SolverSpec};
 use flexa::io::libsvm::{load_libsvm, write_libsvm};
 use flexa::io::matrix_market::{load_matrix_market, write_matrix_market};
 use flexa::io::store::MmapCscStore;
@@ -601,6 +603,97 @@ fn prop_depgraph_coloring_is_conflict_free_and_matches_overlap() {
             used[c] = true;
         }
         assert!(used.iter().all(|&u| u), "gap in the color palette");
+    });
+}
+
+/// A FLEXA spec for the random-schedule sweep: fixed γ and pinned τ so
+/// the dag arm is deterministic, with the caller's σ and staleness.
+fn random_dag_spec(
+    schedule: Schedule,
+    threads: usize,
+    backend: Backend,
+    sigma: f64,
+) -> SolverSpec {
+    SolverSpec {
+        common: CommonOptions {
+            max_iters: 10,
+            tol: 0.0,
+            term: TermMetric::Merit,
+            cores: 4,
+            threads,
+            backend,
+            schedule,
+            stepsize: StepRule::Constant { gamma: 0.5 },
+            name: "prop-dag".into(),
+            ..Default::default()
+        },
+        direction: DirectionRule::BestResponse { tau0: Some(0.3) },
+        merge: MergeRule::Jacobi { full_step: false },
+        selection: Some(SelectionSpec::sigma(sigma)),
+        inexact: None,
+    }
+}
+
+#[test]
+fn prop_random_dag_schedules_stay_bitwise_across_backends_and_threads() {
+    // the eager per-color exchange of the sharded communication plane is
+    // an accounting/overlap restructure, not a numeric one: for random
+    // sparse instances, random staleness (both endpoints and the middle),
+    // and random selection σ, every (backend, threads) cell must produce
+    // the same bits as the single-threaded shared run — and the sharded
+    // plane's deterministic counters must be thread-invariant, with every
+    // dag allreduce issued eagerly (only the wall-clock-derived
+    // overlap_hidden_s axis may differ between runs)
+    for_all(10, |rng| {
+        let m = 12 + rng.next_usize(20);
+        let n = 10 + rng.next_usize(20);
+        let mut triplets = Vec::new();
+        for j in 0..n {
+            for _ in 0..(1 + rng.next_usize(3)) {
+                triplets.push((rng.next_usize(m), j, rng.next_normal()));
+            }
+        }
+        let a = Matrix::Sparse(CscMatrix::from_triplets(m, n, &triplets));
+        let b: Vec<f64> = (0..m).map(|_| rng.next_normal()).collect();
+        let p = LassoProblem::new(a, b, 0.1, None);
+        let x0 = vec![0.0; p.n()];
+        let staleness = [0usize, 1, 2, usize::MAX][rng.next_usize(4)];
+        let sigma = rng.uniform(0.0, 0.9);
+        let schedule = Schedule::Dag { staleness };
+
+        let base = engine::solve(&p, &x0, &random_dag_spec(schedule, 1, Backend::Shared, sigma));
+        let mut counters: Option<(usize, u64, usize)> = None;
+        for threads in [1usize, 2, 4] {
+            for backend in [Backend::Shared, Backend::Sharded] {
+                let r = engine::solve(&p, &x0, &random_dag_spec(schedule, threads, backend, sigma));
+                assert_eq!(
+                    r.x, base.x,
+                    "dag:{staleness} σ={sigma:.3} diverged at threads={threads} {backend:?}"
+                );
+                assert_eq!(r.final_obj.to_bits(), base.final_obj.to_bits());
+                if backend == Backend::Sharded {
+                    assert_eq!(
+                        r.comm.eager_rounds, r.comm.allreduce_rounds,
+                        "every dag allreduce must be issued eagerly"
+                    );
+                    assert!(r.comm.overlap_hidden_s >= 0.0);
+                    let c = (
+                        r.comm.allreduce_rounds,
+                        r.comm.allreduce_words.to_bits(),
+                        r.comm.sync_rounds,
+                    );
+                    match counters {
+                        None => counters = Some(c),
+                        Some(prev) => assert_eq!(
+                            c, prev,
+                            "deterministic comm counters drifted across thread counts"
+                        ),
+                    }
+                } else {
+                    assert!(r.comm.is_empty(), "the shared plane must meter nothing");
+                }
+            }
+        }
     });
 }
 
